@@ -1,0 +1,105 @@
+//! Serving scenario: the framework as a deployed inference service —
+//! multiple models behind a router, dynamic batching, scalar/XLA
+//! routing, live metrics. (`cargo run --release --example serve`)
+//!
+//! Workload: a bursty mix of single telemetry readings (latency-bound →
+//! scalar route) and bulk re-scoring batches (throughput-bound → XLA
+//! route when artifacts are built).
+
+use intreeger::coordinator::{BatchPolicy, Router, ServerConfig};
+use intreeger::data::{esa_like, shuttle_like};
+use intreeger::trees::{ForestParams, RandomForest};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn main() {
+    println!("=== InTreeger serving demo ===\n");
+    let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let artifacts = intreeger::runtime::artifacts_available(&artifacts).then_some(artifacts);
+    if artifacts.is_none() {
+        println!("(artifacts not built — all traffic takes the scalar route)\n");
+    }
+
+    // Two tenants: a Shuttle classifier and an ESA anomaly detector.
+    let shuttle = shuttle_like(10_000, 1);
+    let esa = esa_like(5_000, 1);
+    let m_shuttle = RandomForest::train(
+        &shuttle,
+        &ForestParams { n_trees: 10, max_depth: 6, ..Default::default() },
+        2,
+    );
+    let m_esa = RandomForest::train(
+        &esa,
+        &ForestParams { n_trees: 10, max_depth: 6, ..Default::default() },
+        2,
+    );
+
+    let router = Arc::new(Router::new());
+    let config = ServerConfig {
+        policy: BatchPolicy { max_batch: 64, max_wait: Duration::from_micros(250) },
+        xla_threshold: 16,
+        queue_depth: 8192,
+        // Demo the batched XLA route even on this 1-core host; production
+        // deployments would set auto_calibrate: true (see shuttle_e2e).
+        auto_calibrate: false,
+    };
+    router.register("shuttle", &m_shuttle, artifacts.clone(), config.clone());
+    router.register("esa", &m_esa, artifacts, config);
+    println!("registered models: {:?}\n", router.names());
+
+    // Bursty mixed workload from two client threads.
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for (name, ds, n) in [("shuttle", shuttle.clone(), 3000usize), ("esa", esa.clone(), 1500)] {
+        let router = Arc::clone(&router);
+        handles.push(std::thread::spawn(move || {
+            let server = router.server(name).unwrap();
+            let mut answered = 0usize;
+            let mut i = 0usize;
+            while answered < n {
+                // burst of 1..64 requests, then a short gap
+                let burst = 1 + (i * 7919) % 64;
+                let burst = burst.min(n - answered);
+                let rows: Vec<Vec<f32>> =
+                    (0..burst).map(|k| ds.row((i + k) % ds.n_rows()).to_vec()).collect();
+                let rs = server.infer_many(rows);
+                answered += rs.len();
+                i += burst;
+                std::thread::sleep(Duration::from_micros(200));
+            }
+            answered
+        }));
+    }
+    let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("served {total} requests across 2 models in {:.2}s ({:.0} req/s aggregate)\n", wall, total as f64 / wall);
+    for name in router.names() {
+        let snap = router.server(&name).unwrap().metrics();
+        println!("model '{name}':");
+        println!("  requests {} / responses {}", snap.requests, snap.responses);
+        println!(
+            "  batches: {} scalar ({} rows), {} xla ({} rows); mean batch {:.1}",
+            snap.batches_scalar, snap.rows_scalar, snap.batches_xla, snap.rows_xla, snap.mean_batch
+        );
+        println!(
+            "  flush reasons: {} full / {} deadline / {} drain",
+            snap.flush_full, snap.flush_deadline, snap.flush_drain
+        );
+        println!(
+            "  latency: mean {:.0} us, p50 {:.0} us, p99 {:.0} us\n",
+            snap.latency_mean_us, snap.latency_p50_us, snap.latency_p99_us
+        );
+    }
+
+    // Hot-swap demo: retrain shuttle with more trees, re-register live.
+    println!("hot-swapping 'shuttle' with a 20-tree retrain...");
+    let m2 = RandomForest::train(
+        &shuttle,
+        &ForestParams { n_trees: 20, max_depth: 6, ..Default::default() },
+        3,
+    );
+    router.register("shuttle", &m2, None, ServerConfig::default());
+    let r = router.infer("shuttle", shuttle.row(0).to_vec()).unwrap();
+    println!("post-swap inference OK (class {}, {:?} route)", r.class, r.route);
+}

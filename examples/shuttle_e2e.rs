@@ -1,0 +1,184 @@
+//! END-TO-END DRIVER (E8) — exercises every layer of the stack on the
+//! paper-scale workload and proves they compose:
+//!
+//!   1. data substrate: full-size Shuttle-shaped dataset (58,000 rows);
+//!   2. training: Random Forest, paper's 75/25 protocol;
+//!   3. IR: serialize → reload → revalidate;
+//!   4. engines: float / FlInt / integer-only parity on the whole test set;
+//!   5. codegen + gcc: the generated integer-only C, compiled -O3 and
+//!      executed, bit-identical to the engines AND measured (real x86);
+//!   6. XLA/PJRT: the AOT Pallas artifact, bit-identical on a batch;
+//!   7. coordinator: batched serving with scalar/XLA routing;
+//!   8. simulators: Fig 3 headline (ARMv7 speedup), FE310, energy.
+//!
+//! Output of a full run is recorded in EXPERIMENTS.md.
+//! (`cargo run --release --example shuttle_e2e`)
+
+use intreeger::codegen::{self, CBinary, Layout};
+use intreeger::coordinator::{BatchPolicy, InferenceServer, ServerConfig};
+use intreeger::data::shuttle_like;
+use intreeger::energy::{self, PowerModel};
+use intreeger::inference::{Engine, FlIntEngine, FloatEngine, IntEngine, Variant};
+use intreeger::ir::Model;
+use intreeger::simarch::{self, fe310, Core};
+use intreeger::trees::{accuracy, ForestParams, RandomForest};
+use intreeger::util::Rng;
+use std::time::{Duration, Instant};
+
+fn main() {
+    let t_start = Instant::now();
+    println!("=== InTreeger end-to-end driver (shuttle workload) ===\n");
+
+    // -- 1+2: data + training ---------------------------------------------
+    let ds = shuttle_like(58_000, 42); // paper-scale: 58,000 rows
+    let (train, test) = ds.train_test_split(0.25, &mut Rng::new(9));
+    println!("[1] dataset: {} train / {} test rows, 7 features, 7 classes", train.n_rows(), test.n_rows());
+    let t0 = Instant::now();
+    let model = RandomForest::train(
+        &train,
+        &ForestParams { n_trees: 50, max_depth: 7, ..Default::default() },
+        7,
+    );
+    let stats = intreeger::ir::stats::stats(&model);
+    println!(
+        "[2] trained RF: 50 trees, {} nodes, depth {} in {:.1}s; holdout accuracy {:.4}",
+        stats.n_nodes,
+        stats.max_depth,
+        t0.elapsed().as_secs_f64(),
+        accuracy(&model, &test)
+    );
+
+    // -- 3: IR round-trip ---------------------------------------------------
+    let json = model.to_json();
+    let model = Model::from_json(&json).expect("IR roundtrip");
+    println!("[3] IR serialize/reload: {} bytes JSON, revalidated OK", json.len());
+
+    // -- 4: engine parity on the full test set ------------------------------
+    let fe = FloatEngine::compile(&model);
+    let fl = FlIntEngine::compile(&model);
+    let ie = IntEngine::compile(&model);
+    let mut mismatches = 0usize;
+    for i in 0..test.n_rows() {
+        let a = fe.predict(test.row(i));
+        if a != fl.predict(test.row(i)) || a != ie.predict(test.row(i)) {
+            mismatches += 1;
+        }
+    }
+    println!(
+        "[4] engine parity over {} test rows: {} mismatches (paper §IV-B: 0)",
+        test.n_rows(),
+        mismatches
+    );
+    assert_eq!(mismatches, 0);
+
+    // -- 5: generated C, compiled and executed ------------------------------
+    if codegen::compile::gcc_available() {
+        let n_c = 2_000.min(test.n_rows());
+        let rows: Vec<f32> = test.features[..n_c * 7].to_vec();
+        let src = codegen::generate(&model, Layout::IfElse, Variant::IntTreeger);
+        let bin = CBinary::compile(&src, Variant::IntTreeger, 7, 7, "e2e_int").expect("gcc");
+        let out = bin.predict_u32(&rows).expect("run generated C");
+        let mut c_mismatch = 0usize;
+        for (i, fixed) in out.iter().enumerate() {
+            if fixed != &ie.predict_fixed(test.row(i)) {
+                c_mismatch += 1;
+            }
+        }
+        let src_f = codegen::generate(&model, Layout::IfElse, Variant::Float);
+        let bin_f = CBinary::compile(&src_f, Variant::Float, 7, 7, "e2e_float").expect("gcc");
+        let ns_f = bin_f.bench_ns(&rows, 30).expect("bench float");
+        let ns_i = bin.bench_ns(&rows, 30).expect("bench int");
+        println!(
+            "[5] generated C (gcc -O3): {c_mismatch}/{n_c} mismatches vs engine (must be 0); \
+             measured x86: float {ns_f:.0} ns/inf, intreeger {ns_i:.0} ns/inf => {:.2}x",
+            ns_f / ns_i
+        );
+        assert_eq!(c_mismatch, 0);
+    } else {
+        println!("[5] gcc unavailable — generated-C step skipped");
+    }
+
+    // -- 6: XLA/PJRT artifact parity ----------------------------------------
+    let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if intreeger::runtime::artifacts_available(&artifacts) {
+        match intreeger::runtime::engine_for_model(&artifacts, &model, 1) {
+            Ok(xla) => {
+                let b = xla.max_batch().min(128);
+                let rows: Vec<f32> = test.features[..b * 7].to_vec();
+                let got = xla.execute(&rows, 7).expect("xla execute");
+                let mut x_mismatch = 0usize;
+                for (i, fixed) in got.iter().enumerate() {
+                    if fixed != &ie.predict_fixed(test.row(i)) {
+                        x_mismatch += 1;
+                    }
+                }
+                println!(
+                    "[6] XLA/PJRT (AOT Pallas artifact, tier '{}'): {x_mismatch}/{b} mismatches (must be 0)",
+                    xla.tier().name
+                );
+                assert_eq!(x_mismatch, 0);
+            }
+            Err(e) => println!("[6] no fitting artifact tier ({e}) — skipped"),
+        }
+    } else {
+        println!("[6] artifacts not built (`make artifacts`) — XLA step skipped");
+    }
+
+    // -- 7: serving ----------------------------------------------------------
+    let server = InferenceServer::start(
+        &model,
+        Some(artifacts.clone()),
+        ServerConfig {
+            policy: BatchPolicy { max_batch: 64, max_wait: Duration::from_micros(300) },
+            xla_threshold: 16,
+            queue_depth: 4096,
+            // route honestly: on this 1-core host the scalar engine wins,
+            // on an accelerator the XLA path would be kept.
+            auto_calibrate: true,
+        },
+    );
+    let n_req = 4_000usize;
+    let reqs: Vec<Vec<f32>> = (0..n_req).map(|i| test.row(i % test.n_rows()).to_vec()).collect();
+    let t0 = Instant::now();
+    let responses = server.infer_many(reqs);
+    let wall = t0.elapsed().as_secs_f64();
+    let snap = server.metrics();
+    let serve_mismatch = responses
+        .iter()
+        .enumerate()
+        .filter(|(i, r)| r.fixed != ie.predict_fixed(test.row(i % test.n_rows())))
+        .count();
+    println!(
+        "[7] served {n_req} reqs at {:.0} req/s (p50 {:.0} us, p99 {:.0} us; {} rows scalar / {} rows xla); {} mismatches",
+        n_req as f64 / wall,
+        snap.latency_p50_us,
+        snap.latency_p99_us,
+        snap.rows_scalar,
+        snap.rows_xla,
+        serve_mismatch
+    );
+    assert_eq!(serve_mismatch, 0);
+
+    // -- 8: simulated headline metrics ---------------------------------------
+    let f_arm = simarch::simulate(&model, &test, Variant::Float, Core::CortexA72, 250);
+    let i_arm = simarch::simulate(&model, &test, Variant::IntTreeger, Core::CortexA72, 250);
+    let headline = f_arm.cycles / i_arm.cycles;
+    println!(
+        "[8] Fig3 headline (Shuttle/ARMv7/50 trees): {:.2}x speedup (paper: 2.1x; runtime reduction {:.0}%)",
+        headline,
+        (1.0 - 1.0 / headline) * 100.0
+    );
+    let fp = fe310::footprint(&model);
+    println!("    FE310 footprint of this model: {} B text (30-tree paper model: 42,382 B)", fp.text_bytes);
+    let t_f = f_arm.seconds() * 14_500_000.0;
+    let t_i = i_arm.seconds() * 14_500_000.0;
+    let e = energy::evaluate(t_f, t_i, &PowerModel::default());
+    println!(
+        "    energy (14.5M inferences): float {:.1}s / int {:.1}s => E_saved {:.1}% (paper: 21.3%)",
+        t_f,
+        t_i,
+        e.e_saved * 100.0
+    );
+
+    println!("\nall layers compose; total driver time {:.1}s", t_start.elapsed().as_secs_f64());
+}

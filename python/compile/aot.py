@@ -1,0 +1,94 @@
+"""AOT lowering: JAX/Pallas forest inference -> HLO text artifacts.
+
+Run once at build time (``make artifacts``); python never appears on the
+request path. The rust runtime (rust/src/runtime) loads the HLO text via
+``HloModuleProto::from_text_file``, compiles it with the PJRT CPU client
+and executes it with concrete forest tensors.
+
+Interchange format is HLO TEXT, not a serialized proto: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids.
+(See /opt/xla-example/README.md.)
+
+Artifact tiers are fixed-shape compilations; the rust side pads a model
+into the smallest tier that fits (leaves self-loop, padding trees
+contribute zero, so extra capacity is semantically inert). A manifest
+JSON describes every emitted artifact.
+
+Usage: python -m compile.aot [--out DIR] [--quick]
+"""
+
+import argparse
+import json
+import os
+
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (name, B, F, T, N, C, depth, block_b, use_pallas)
+TIERS = [
+    # Quick tier: used by unit/integration tests everywhere.
+    dict(name="quick", B=64, F=8, T=16, N=63, C=8, depth=6, block_b=32, use_pallas=True),
+    # Same shape through the pure-jnp path: runtime cross-check artifact.
+    dict(name="quick_jnp", B=64, F=8, T=16, N=63, C=8, depth=6, block_b=32, use_pallas=False),
+    # Shuttle-shaped serving tier (7 features / 7 classes, <=64 trees).
+    dict(name="shuttle", B=256, F=8, T=64, N=255, C=8, depth=8, block_b=64, use_pallas=True),
+    # ESA-shaped serving tier (87 features / 2 classes).
+    dict(name="esa", B=256, F=88, T=64, N=255, C=2, depth=8, block_b=64, use_pallas=True),
+    # Small-batch latency tier.
+    dict(name="shuttle_b16", B=16, F=8, T=64, N=255, C=8, depth=8, block_b=16, use_pallas=True),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build(out_dir: str, quick: bool = False) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": "intreeger-artifacts-v1", "tiers": []}
+    tiers = [t for t in TIERS if t["name"].startswith("quick")] if quick else TIERS
+    for tier in tiers:
+        name = tier["name"]
+        lowered = model.lower_fn(
+            B=tier["B"],
+            F=tier["F"],
+            T=tier["T"],
+            N=tier["N"],
+            C=tier["C"],
+            depth=tier["depth"],
+            block_b=tier["block_b"],
+            use_pallas=tier["use_pallas"],
+        )
+        text = to_hlo_text(lowered)
+        fname = f"forest_{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entry = dict(tier)
+        entry["file"] = fname
+        entry["hlo_bytes"] = len(text)
+        manifest["tiers"].append(entry)
+        print(f"  wrote {fname}: {len(text)} chars "
+              f"(B={tier['B']} F={tier['F']} T={tier['T']} N={tier['N']} "
+              f"C={tier['C']} depth={tier['depth']})")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--quick", action="store_true", help="only the quick tiers (tests)")
+    args = ap.parse_args()
+    build(args.out, quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

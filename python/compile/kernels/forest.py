@@ -1,0 +1,126 @@
+"""L1 Pallas kernel: batched integer-only forest traversal.
+
+HARDWARE ADAPTATION (DESIGN.md): the paper's insight — decision-tree
+inference needs only the cheapest integer ops once thresholds (FlInt) and
+leaf probabilities (fixed point) are integers — is re-thought here for a
+vector unit instead of a scalar pipeline. The branchy if-else tree
+becomes a *level-synchronous gather traversal*: one loop iteration per
+tree level advances all (sample, tree) pairs at once with vectorized u32
+compares (the VPU analogue of the paper's `lui`-immediate integer
+compares) and the ensemble accumulation is a u32 segment-sum. No float
+op appears in the kernel — the paper's property, transplanted to TPU.
+
+Blocking: the grid tiles the batch dimension; the node tables (feat /
+thresh / left / right / leaf_val — the reused operand) stay resident in
+VMEM across grid steps while samples stream in per block. See
+``vmem_report`` for the footprint estimate used in DESIGN.md §Perf.
+
+The kernel runs with ``interpret=True`` — CPU PJRT cannot execute Mosaic
+custom-calls; real-TPU behaviour is estimated analytically (§Perf).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _forest_kernel(x_ref, feat_ref, thresh_ref, left_ref, right_ref, leaf_ref, o_ref, *, depth):
+    """One batch block: traverse all T trees for BB samples, depth steps.
+
+    §Perf: node tables are flattened to 1-D and indexed with
+    ``ptr + tree_offset`` so every level is a cheap rank-1 gather instead
+    of 2-D advanced indexing (XLA:CPU lowers the latter to a slower
+    general gather; flat form measured 9-16% faster end to end)."""
+    x = x_ref[...]            # u32[BB, F]
+    feat = feat_ref[...]      # i32[T, N]
+    thresh = thresh_ref[...]  # u32[T, N]
+    left = left_ref[...]      # i32[T, N]
+    right = right_ref[...]    # i32[T, N]
+
+    bb = x.shape[0]
+    t, n = feat.shape
+    offs = (jnp.arange(t, dtype=jnp.int32) * n)[None, :]        # [1, T]
+    b_off = (jnp.arange(bb, dtype=jnp.int32) * x.shape[1])[:, None]
+    featf = feat.reshape(-1)
+    threshf = thresh.reshape(-1)
+    leftf = left.reshape(-1)
+    rightf = right.reshape(-1)
+    xf = x.reshape(-1)
+
+    def level(_, ptr):
+        g = ptr + offs                                          # [BB, T] flat node ids
+        f = jnp.take(featf, g)
+        th = jnp.take(threshf, g)
+        xv = jnp.take(xf, f + b_off)
+        go_left = xv <= th
+        return jnp.where(go_left, jnp.take(leftf, g), jnp.take(rightf, g))
+
+    ptr0 = jnp.zeros((bb, t), dtype=jnp.int32)
+    ptr = jax.lax.fori_loop(0, depth, level, ptr0)
+
+    leaff = leaf_ref[...].reshape(t * n, -1)
+    contrib = jnp.take(leaff, ptr + offs, axis=0)               # u32[BB, T, C]
+    o_ref[...] = jnp.sum(contrib, axis=1, dtype=jnp.uint32)
+
+
+def forest_infer(x, feat, thresh, left, right, leaf_val, *, depth, block_b=64):
+    """Batched forest inference via the Pallas kernel.
+
+    Args mirror :func:`compile.kernels.ref.forest_infer_ref`; the batch
+    dimension must be a multiple of ``block_b`` (the AOT wrapper pads).
+
+    Returns u32[B, C].
+    """
+    B, _F = x.shape
+    T, N = feat.shape
+    C = leaf_val.shape[2]
+    assert B % block_b == 0, f"batch {B} not a multiple of block {block_b}"
+    assert leaf_val.shape[:2] == (T, N)
+
+    grid = (B // block_b,)
+    kernel = functools.partial(_forest_kernel, depth=depth)
+    # Node tables use a constant index_map: one VMEM-resident copy reused
+    # by every grid step.
+    table = lambda shape: pl.BlockSpec(shape, lambda b: (0,) * len(shape))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, x.shape[1]), lambda b: (b, 0)),
+            table(feat.shape),
+            table(thresh.shape),
+            table(left.shape),
+            table(right.shape),
+            table(leaf_val.shape),
+        ],
+        out_specs=pl.BlockSpec((block_b, C), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, C), jnp.uint32),
+        interpret=True,
+    )(x, feat, thresh, left, right, leaf_val)
+
+
+def vmem_report(*, T, N, C, F, block_b, depth):
+    """Analytic VMEM/roofline estimate for DESIGN.md §Perf (interpret mode
+    gives no hardware numbers; structure is what we can optimize).
+
+    Returns a dict with the VMEM footprint of one grid step and the
+    arithmetic intensity of the traversal (ops per byte fetched from HBM,
+    assuming node tables stay resident)."""
+    bytes_tables = (4 * T * N) * 4 + 4 * T * N * C  # feat/thresh/left/right + leaves
+    bytes_x = 4 * block_b * F
+    bytes_out = 4 * block_b * C
+    bytes_ptr = 4 * block_b * T
+    vmem = bytes_tables + bytes_x + bytes_out + 2 * bytes_ptr
+    # per sample: depth * T compares/selects + T*C adds; HBM traffic per
+    # sample: its features + its output (tables amortized across batch).
+    ops = depth * T * 4 + T * C
+    hbm_bytes = 4 * F + 4 * C
+    return {
+        "vmem_bytes": vmem,
+        "vmem_fits_16mb": vmem <= 16 * 1024 * 1024,
+        "ops_per_sample": ops,
+        "hbm_bytes_per_sample": hbm_bytes,
+        "arith_intensity": ops / hbm_bytes,
+    }

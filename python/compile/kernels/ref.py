@@ -1,0 +1,62 @@
+"""Pure-jnp reference oracle for the forest-inference kernel.
+
+This is the L1 correctness anchor: the Pallas kernel
+(:mod:`compile.kernels.forest`) must agree with this implementation
+exactly (integer outputs - bit equality, no tolerance).
+
+Tensor encoding of a padded forest (see DESIGN.md, Hardware-Adaptation):
+
+* ``feat``     i32[T, N]  - feature index per node (0 for leaves/padding)
+* ``thresh``   u32[T, N]  - order-preserved FlInt threshold per node
+* ``left``     i32[T, N]  - left-child index; leaves self-loop (left=i)
+* ``right``    i32[T, N]  - right-child index; leaves self-loop
+* ``leaf_val`` u32[T, N, C] - quantized leaf contribution (0 for branches)
+* ``x``        u32[B, F]  - order-preserved input features
+
+Traversal is level-synchronous: every (sample, tree) pair advances one
+level per step; leaves self-loop so running more steps than a tree's
+depth is harmless. After ``depth`` steps every pointer rests on a leaf
+and the output is the u32 sum of leaf contributions over trees - the
+paper's integer-only accumulation (paper III-A), vectorized.
+"""
+
+import jax.numpy as jnp
+
+
+def forest_infer_ref(x, feat, thresh, left, right, leaf_val, *, depth):
+    """Reference forest inference.
+
+    Args:
+      x: u32[B, F] order-preserved features.
+      feat/thresh/left/right/leaf_val: padded forest tensors (see module).
+      depth: number of traversal steps (>= max tree depth).
+
+    Returns:
+      u32[B, C] accumulated fixed-point class scores.
+    """
+    B = x.shape[0]
+    T = feat.shape[0]
+    t_idx = jnp.arange(T, dtype=jnp.int32)[None, :]  # [1, T]
+    b_idx = jnp.arange(B, dtype=jnp.int32)[:, None]  # [B, 1]
+
+    ptr = jnp.zeros((B, T), dtype=jnp.int32)
+    for _ in range(depth):
+        f = feat[t_idx, ptr]          # [B, T] feature index per (b, t)
+        th = thresh[t_idx, ptr]       # [B, T]
+        xv = x[b_idx, f]              # [B, T]
+        go_left = xv <= th            # unsigned compare
+        ptr = jnp.where(go_left, left[t_idx, ptr], right[t_idx, ptr])
+
+    contrib = leaf_val[t_idx, ptr]    # [B, T, C]
+    return jnp.sum(contrib, axis=1, dtype=jnp.uint32)
+
+
+def ordered_u32_np(x_f32):
+    """numpy version of flint::ordered_u32 (order-preserving f32->u32
+    map, -0.0 canonicalized). Used by tests and the artifact packer."""
+    import numpy as np
+
+    x = np.asarray(x_f32, dtype=np.float32).copy()
+    x[x == 0.0] = 0.0  # canonicalize -0.0
+    b = x.view(np.uint32)
+    return np.where(b & 0x8000_0000 != 0, ~b, b | 0x8000_0000).astype(np.uint32)

@@ -1,0 +1,61 @@
+"""L2 JAX model: the batched forest-inference graph the rust runtime
+executes via AOT-compiled artifacts.
+
+The graph is deliberately integer-only end to end (the paper's defining
+property): inputs are order-preserved u32 feature words, the traversal
+compares u32, and the output is the u32 fixed-point class accumulator.
+Argmax/probability conversion happens in rust (or not at all — ranking
+needs no conversion).
+
+Two interchangeable implementations:
+
+* :func:`forest_infer_pallas` — the L1 Pallas kernel (production graph);
+* :func:`forest_infer_jnp` — the pure-jnp oracle (compiled as a
+  cross-check artifact and used by pytest).
+
+Both lower to the same interface: ``f(x, feat, thresh, left, right,
+leaf_val) -> u32[B, C]`` with all shapes static per artifact tier.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import forest as forest_kernel
+from .kernels import ref as forest_ref
+
+
+def forest_infer_pallas(x, feat, thresh, left, right, leaf_val, *, depth, block_b=64):
+    """Production forest inference (Pallas kernel inside)."""
+    return forest_kernel.forest_infer(
+        x, feat, thresh, left, right, leaf_val, depth=depth, block_b=block_b
+    )
+
+
+def forest_infer_jnp(x, feat, thresh, left, right, leaf_val, *, depth):
+    """Oracle forest inference (pure jnp)."""
+    return forest_ref.forest_infer_ref(x, feat, thresh, left, right, leaf_val, depth=depth)
+
+
+def lower_fn(*, B, F, T, N, C, depth, block_b=64, use_pallas=True):
+    """Build and lower the jitted inference function for one artifact
+    tier. Returns the jax ``Lowered`` object."""
+    if use_pallas:
+        fn = functools.partial(forest_infer_pallas, depth=depth, block_b=block_b)
+    else:
+        fn = functools.partial(forest_infer_jnp, depth=depth)
+
+    def wrapped(x, feat, thresh, left, right, leaf_val):
+        # Tuple output: the rust loader unwraps with to_tuple1().
+        return (fn(x, feat, thresh, left, right, leaf_val),)
+
+    specs = (
+        jax.ShapeDtypeStruct((B, F), jnp.uint32),
+        jax.ShapeDtypeStruct((T, N), jnp.int32),
+        jax.ShapeDtypeStruct((T, N), jnp.uint32),
+        jax.ShapeDtypeStruct((T, N), jnp.int32),
+        jax.ShapeDtypeStruct((T, N), jnp.int32),
+        jax.ShapeDtypeStruct((T, N, C), jnp.uint32),
+    )
+    return jax.jit(wrapped).lower(*specs)

@@ -1,0 +1,50 @@
+"""AOT pipeline tests: artifact emission + manifest contract with the
+rust runtime."""
+
+import json
+import os
+import tempfile
+
+from compile import aot
+
+
+def test_quick_build_writes_artifacts_and_manifest():
+    with tempfile.TemporaryDirectory() as d:
+        manifest = aot.build(d, quick=True)
+        assert manifest["format"] == "intreeger-artifacts-v1"
+        names = [t["name"] for t in manifest["tiers"]]
+        assert "quick" in names and "quick_jnp" in names
+        for t in manifest["tiers"]:
+            path = os.path.join(d, t["file"])
+            assert os.path.isfile(path), t["file"]
+            text = open(path).read()
+            assert text.startswith("HloModule"), t["file"]
+            assert "mosaic" not in text.lower(), "pallas must lower via interpret mode"
+            # manifest fields the rust side requires
+            for key in ("B", "F", "T", "N", "C", "depth", "use_pallas"):
+                assert key in t, key
+        # manifest on disk round-trips
+        on_disk = json.load(open(os.path.join(d, "manifest.json")))
+        assert on_disk["tiers"] == manifest["tiers"]
+
+
+def test_hlo_parameter_order_matches_runtime_contract():
+    """The rust runtime feeds (x, feat, thresh, left, right, leaf_val) in
+    that order; the lowered HLO must have 6 parameters with the expected
+    element types (u32/i32/u32/i32/i32/u32)."""
+    with tempfile.TemporaryDirectory() as d:
+        aot.build(d, quick=True)
+        text = open(os.path.join(d, "forest_quick.hlo.txt")).read()
+        # The top-level computation declares exactly these typed
+        # parameters in this order (sub-computations have their own
+        # numbering, so check for the specific typed declarations).
+        expected = [
+            "u32[64,8]{1,0} parameter(0)",      # x
+            "s32[16,63]{1,0} parameter(1)",     # feat
+            "u32[16,63]{1,0} parameter(2)",     # thresh
+            "s32[16,63]{1,0} parameter(3)",     # left
+            "s32[16,63]{1,0} parameter(4)",     # right
+            "u32[16,63,8]{2,1,0} parameter(5)", # leaf_val
+        ]
+        for decl in expected:
+            assert decl in text, decl

@@ -1,0 +1,240 @@
+"""L1 correctness: Pallas kernel vs pure-jnp oracle vs an independent
+pure-python walker, swept over shapes/dtypes with hypothesis.
+
+Everything here is integer-exact: assertions are bit-equality, the
+strongest possible parity statement (matching the paper's 'identical
+predictions' claim at the tensor level)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import forest as forest_kernel
+from compile.kernels import ref as forest_ref
+
+
+# ---------------------------------------------------------------------------
+# forest generator + independent python oracle
+# ---------------------------------------------------------------------------
+
+def build_random_forest(rng, T, N, C, F, max_depth):
+    """Random padded forest tensors with leaf self-loops.
+
+    Leaf values are bounded by floor((2**32-1)/T) so that summation over
+    T trees cannot overflow u32 (the quant module's invariant)."""
+    feat = np.zeros((T, N), dtype=np.int32)
+    thresh = np.zeros((T, N), dtype=np.uint32)
+    left = np.zeros((T, N), dtype=np.int32)
+    right = np.zeros((T, N), dtype=np.int32)
+    leaf_val = np.zeros((T, N, C), dtype=np.uint32)
+    cap = (2**32 - 1) // max(T, 1)
+
+    for t in range(T):
+        next_free = [1]  # node 0 is the root
+
+        def grow(i, depth):
+            # Decide leaf vs branch: must leaf out at max_depth or when
+            # the node budget is exhausted.
+            can_branch = next_free[0] + 2 <= N and depth < max_depth
+            if not can_branch or rng.random() < 0.3:
+                left[t, i] = i  # self-loop
+                right[t, i] = i
+                leaf_val[t, i] = rng.integers(0, cap + 1, size=C, dtype=np.uint32)
+                return
+            feat[t, i] = rng.integers(0, F)
+            thresh[t, i] = rng.integers(0, 2**32, dtype=np.uint32)
+            l, r = next_free[0], next_free[0] + 1
+            next_free[0] += 2
+            left[t, i] = l
+            right[t, i] = r
+            grow(l, depth + 1)
+            grow(r, depth + 1)
+
+        grow(0, 0)
+        # padding nodes beyond next_free: already zero-filled; make them
+        # harmless self-loops so stray pointers can't escape.
+        for i in range(next_free[0], N):
+            left[t, i] = i
+            right[t, i] = i
+
+    return feat, thresh, left, right, leaf_val
+
+
+def walker_oracle(x, feat, thresh, left, right, leaf_val, depth):
+    """Scalar python traversal — fully independent of jax."""
+    B = x.shape[0]
+    T = feat.shape[0]
+    C = leaf_val.shape[2]
+    out = np.zeros((B, C), dtype=np.uint32)
+    for b in range(B):
+        for t in range(T):
+            i = 0
+            for _ in range(depth):
+                if left[t, i] == i and right[t, i] == i:
+                    break  # at a leaf
+                if x[b, feat[t, i]] <= thresh[t, i]:
+                    i = left[t, i]
+                else:
+                    i = right[t, i]
+            # after depth steps we must be at a leaf (self-loop)
+            out[b] = (out[b] + leaf_val[t, i]).astype(np.uint32)
+    return out
+
+
+def random_x(rng, B, F):
+    return rng.integers(0, 2**32, size=(B, F), dtype=np.uint32)
+
+
+# ---------------------------------------------------------------------------
+# tests
+# ---------------------------------------------------------------------------
+
+shapes = st.tuples(
+    st.integers(1, 6),   # T
+    st.integers(1, 8),   # C
+    st.integers(1, 8),   # F
+    st.integers(0, 5),   # max_depth
+    st.integers(1, 3),   # batch blocks
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(shapes, st.integers(0, 2**32 - 1))
+def test_ref_matches_walker(shape, seed):
+    T, C, F, max_depth, blocks = shape
+    rng = np.random.default_rng(seed)
+    N = 2 ** (max_depth + 1) - 1
+    fo = build_random_forest(rng, T, N, C, F, max_depth)
+    B = 8 * blocks
+    x = random_x(rng, B, F)
+    got = np.asarray(forest_ref.forest_infer_ref(x, *fo, depth=max_depth))
+    want = walker_oracle(x, *fo, depth=max_depth)
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shapes, st.integers(0, 2**32 - 1))
+def test_pallas_matches_ref(shape, seed):
+    T, C, F, max_depth, blocks = shape
+    rng = np.random.default_rng(seed)
+    N = 2 ** (max_depth + 1) - 1
+    fo = build_random_forest(rng, T, N, C, F, max_depth)
+    B = 8 * blocks
+    x = random_x(rng, B, F)
+    got = np.asarray(
+        forest_kernel.forest_infer(x, *fo, depth=max_depth, block_b=8)
+    )
+    want = np.asarray(forest_ref.forest_infer_ref(x, *fo, depth=max_depth))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_extra_depth_is_harmless():
+    """Leaves self-loop: running more levels than the tree depth must not
+    change the result (this is what lets one artifact serve any model of
+    depth <= tier depth)."""
+    rng = np.random.default_rng(7)
+    fo = build_random_forest(rng, 4, 31, 3, 5, 4)
+    x = random_x(rng, 16, 5)
+    a = np.asarray(forest_ref.forest_infer_ref(x, *fo, depth=4))
+    b = np.asarray(forest_ref.forest_infer_ref(x, *fo, depth=9))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_padding_trees_are_inert():
+    """All-zero padded trees contribute nothing."""
+    rng = np.random.default_rng(8)
+    T, N, C, F, d = 3, 15, 4, 6, 3
+    feat, thresh, left, right, leaf_val = build_random_forest(rng, T, N, C, F, d)
+    # embed into T+3 trees, padding = zeros with self-loop at node 0
+    T2 = T + 3
+    feat2 = np.zeros((T2, N), np.int32)
+    thresh2 = np.zeros((T2, N), np.uint32)
+    left2 = np.zeros((T2, N), np.int32)
+    right2 = np.zeros((T2, N), np.int32)
+    leaf2 = np.zeros((T2, N, C), np.uint32)
+    feat2[:T], thresh2[:T], left2[:T], right2[:T], leaf2[:T] = feat, thresh, left, right, leaf_val
+    x = random_x(rng, 8, F)
+    a = np.asarray(forest_ref.forest_infer_ref(x, feat, thresh, left, right, leaf_val, depth=d))
+    b = np.asarray(
+        forest_ref.forest_infer_ref(x, feat2, thresh2, left2, right2, leaf2, depth=d)
+    )
+    np.testing.assert_array_equal(a, b)
+
+
+def test_output_dtype_is_u32():
+    rng = np.random.default_rng(9)
+    fo = build_random_forest(rng, 2, 7, 2, 3, 2)
+    x = random_x(rng, 8, 3)
+    out = forest_ref.forest_infer_ref(x, *fo, depth=2)
+    assert str(out.dtype) == "uint32"
+    out2 = forest_kernel.forest_infer(x, *fo, depth=2, block_b=8)
+    assert str(out2.dtype) == "uint32"
+
+
+def test_near_cap_leaves_do_not_overflow():
+    """T trees each contributing the cap must sum below 2^32 (quant
+    invariant carried into the tensor path)."""
+    T, N, C, F, d = 8, 3, 2, 2, 1
+    cap = (2**32 - 1) // T
+    feat = np.zeros((T, N), np.int32)
+    thresh = np.zeros((T, N), np.uint32)  # always go left
+    left = np.zeros((T, N), np.int32)
+    right = np.zeros((T, N), np.int32)
+    leaf_val = np.zeros((T, N, C), np.uint32)
+    for t in range(T):
+        # root branches to node 1 (left) / node 2 (right); both leaves.
+        feat[t, 0] = 0
+        thresh[t, 0] = 2**31
+        left[t, 0], right[t, 0] = 1, 2
+        for i in (1, 2):
+            left[t, i] = i
+            right[t, i] = i
+            leaf_val[t, i] = cap
+    x = np.zeros((4, F), np.uint32)
+    out = np.asarray(forest_ref.forest_infer_ref(x, feat, thresh, left, right, leaf_val, depth=d))
+    assert (out == np.uint32(cap * T)).all()
+    assert cap * T <= 2**32 - 1
+
+
+def test_unsigned_compare_semantics():
+    """Thresholds above 2^31 must compare as unsigned (a signed compare
+    would flip the branch) — the FlInt ordered-u32 domain."""
+    T, N, C, F, d = 1, 3, 1, 1, 1
+    feat = np.zeros((T, N), np.int32)
+    thresh = np.full((T, N), np.uint32(0x9000_0000), dtype=np.uint32)
+    left = np.array([[1, 1, 2]], np.int32)
+    right = np.array([[2, 1, 2]], np.int32)
+    leaf_val = np.zeros((T, N, C), np.uint32)
+    leaf_val[0, 1, 0] = 111  # left leaf
+    leaf_val[0, 2, 0] = 222  # right leaf
+    x_low = np.array([[0x8FFF_FFFF]], np.uint32)   # <= threshold -> left
+    x_high = np.array([[0x9000_0001]], np.uint32)  # > threshold -> right
+    lo = np.asarray(forest_ref.forest_infer_ref(x_low, feat, thresh, left, right, leaf_val, depth=d))
+    hi = np.asarray(forest_ref.forest_infer_ref(x_high, feat, thresh, left, right, leaf_val, depth=d))
+    assert lo[0, 0] == 111 and hi[0, 0] == 222
+
+
+def test_ordered_map_matches_rust_semantics():
+    """ordered_u32_np must preserve float ordering (mirrors the rust
+    proptest; the two implementations must agree for the artifact path
+    to be sound)."""
+    rng = np.random.default_rng(10)
+    bits = rng.integers(0, 2**32, size=4000, dtype=np.uint32)
+    vals = bits.view(np.float32)
+    finite = vals[np.isfinite(vals)]
+    m = forest_ref.ordered_u32_np(finite)
+    order_f = np.argsort(finite, kind="stable")
+    # the integer image must sort identically (ties only at +/-0)
+    sf = finite[order_f]
+    sm = m[order_f]
+    assert (np.diff(sf) >= 0).all()
+    assert (np.diff(sm.astype(np.uint64)) >= np.where(np.diff(sf) == 0, -(2**33), 0)).all()
+    # strict check on distinct values
+    distinct = np.diff(sf) > 0
+    assert (np.diff(sm.astype(np.int64))[distinct] > 0).all()
+
+
+def test_vmem_report_shapes():
+    r = forest_kernel.vmem_report(T=64, N=255, C=8, F=8, block_b=64, depth=8)
+    assert r["vmem_fits_16mb"]
+    assert r["arith_intensity"] > 10

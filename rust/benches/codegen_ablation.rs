@@ -1,0 +1,92 @@
+//! Ablation of the code-generation design choices (DESIGN.md):
+//!
+//! * zero-leaf-add elision (`skip_zero_leaf_adds`) — tl2cgen emits all
+//!   classes; gcc removes integer zero-adds anyway, so this mainly
+//!   shrinks source/text;
+//! * threshold encoding: the general order-preserving transform vs the
+//!   paper's raw-bits form (`RawBitsNonNegative`, Listing 2) which saves
+//!   the per-feature transform when inputs are provably non-negative;
+//! * if-else vs native layout (also covered in `x86_measured`).
+//!
+//! All variants are verified for bit-exact parity before timing.
+
+use intreeger::codegen::ifelse::{generate_ifelse_with, GenOpts};
+use intreeger::codegen::{generate, CBinary, Layout};
+use intreeger::data::{shuttle_like, Dataset};
+use intreeger::flint::SplitEncoding;
+use intreeger::inference::{IntEngine, Variant};
+use intreeger::trees::{ForestParams, RandomForest};
+
+/// Shuttle-like data shifted to be strictly non-negative (abs transform)
+/// so the RawBitsNonNegative encoding is applicable.
+fn nonneg_dataset() -> Dataset {
+    let ds = shuttle_like(12_000, 8);
+    let features = ds.features.iter().map(|v| v.abs()).collect();
+    Dataset::new(features, ds.labels.clone(), ds.n_features, ds.n_classes)
+}
+
+fn main() {
+    if !intreeger::codegen::compile::gcc_available() {
+        println!("gcc unavailable — ablation skipped");
+        return;
+    }
+    let ds = nonneg_dataset();
+    let model = RandomForest::train(
+        &ds,
+        &ForestParams { n_trees: 50, max_depth: 7, ..Default::default() },
+        23,
+    );
+    let engine = IntEngine::compile(&model);
+    let n_rows = 2000;
+    let rows: Vec<f32> = ds.features[..n_rows * ds.n_features].to_vec();
+
+    println!("codegen ablation — integer-only variant, shuttle-like (non-negative), 50 trees\n");
+    let cases: Vec<(&str, String)> = vec![
+        (
+            "ifelse/ordered (default)",
+            generate_ifelse_with(&model, Variant::IntTreeger, GenOpts::default()),
+        ),
+        (
+            "ifelse/ordered+skip-zero",
+            generate_ifelse_with(
+                &model,
+                Variant::IntTreeger,
+                GenOpts { skip_zero_leaf_adds: true, ..Default::default() },
+            ),
+        ),
+        (
+            "ifelse/raw-bits (paper Listing 2)",
+            generate_ifelse_with(
+                &model,
+                Variant::IntTreeger,
+                GenOpts { encoding: SplitEncoding::RawBitsNonNegative, ..Default::default() },
+            ),
+        ),
+        ("native/ordered", generate(&model, Layout::Native, Variant::IntTreeger)),
+    ];
+
+    println!(
+        "{:<36} {:>10} {:>12} {:>12}",
+        "configuration", "src bytes", "text bytes", "ns/inference"
+    );
+    for (name, src) in &cases {
+        let bin = CBinary::compile(src, Variant::IntTreeger, ds.n_features, ds.n_classes, "abl")
+            .expect("gcc compile");
+        // parity first
+        let got = bin.predict_u32(&rows[..64 * ds.n_features]).expect("run");
+        for (i, fixed) in got.iter().enumerate() {
+            assert_eq!(fixed, &engine.predict_fixed(ds.row(i)), "{name} row {i}");
+        }
+        let ns = bin.bench_ns(&rows, 40).expect("bench");
+        println!(
+            "{:<36} {:>10} {:>12} {:>12.1}",
+            name,
+            src.len(),
+            bin.text_size.map(|s| s.to_string()).unwrap_or_else(|| "?".into()),
+            ns
+        );
+    }
+    println!("\nnotes: raw-bits saves the per-feature transform (valid only for non-negative");
+    println!("inputs — the generator enforces non-negative thresholds); zero-add elision");
+    println!("shrinks source with no semantic change; native trades text for data+loop.");
+}

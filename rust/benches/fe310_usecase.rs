@@ -1,0 +1,52 @@
+//! E6 — reproduces §IV-E: the SiFive FE310 (RV32IMAC @ 16 MHz, no FPU)
+//! microcontroller use case. Shuttle RF, 30 trees, max depth 5,
+//! integer-only if-else code, XIP from QSPI flash.
+//!
+//! Paper numbers: text 42 382 B, data 8 B, bss 1 152 B; IPC 0.746
+//! (QSPI-fetch bound); we also show what the float variant *would* cost
+//! (soft-float calls — the reason integer-only inference enables this
+//! class of device at all).
+
+use intreeger::data::shuttle_like;
+use intreeger::inference::Variant;
+use intreeger::simarch::{self, fe310, Core};
+use intreeger::trees::{ForestParams, RandomForest};
+
+fn main() {
+    println!("§IV-E — FE310 microcontroller use case (simulated; DESIGN.md §Substitutions)");
+
+    let ds = shuttle_like(58_000, 4); // full paper-scale dataset
+    let model = RandomForest::train(
+        &ds,
+        &ForestParams { n_trees: 30, max_depth: 5, ..Default::default() },
+        11,
+    );
+    let stats = intreeger::ir::stats::stats(&model);
+    println!(
+        "\nmodel: {} trees, {} nodes ({} branches / {} leaves), max depth {}",
+        stats.n_trees, stats.n_nodes, stats.n_branches, stats.n_leaves, stats.max_depth
+    );
+
+    let r = fe310::use_case(&model, &ds, 400);
+    println!("\nmemory footprint (integer-only if-else, rv32imac_zicsr_zifencei / ilp32):");
+    println!("  text: {:>7} B   (paper: 42,382 B)", r.footprint.text_bytes);
+    println!("  data: {:>7} B   (paper:      8 B)", r.footprint.data_bytes);
+    println!("  bss:  {:>7} B   (paper:  1,152 B)", r.footprint.bss_bytes);
+    println!("  total:{:>7} B   (paper: 43,542 B)", r.footprint.total());
+
+    println!("\nper-inference dynamics @ 16 MHz:");
+    println!("  instructions: {:>12.0}", r.instructions_per_inference);
+    println!("  cycles:       {:>12.0}", r.cycles_per_inference);
+    println!("  IPC:          {:>12.3}   (paper: 0.746, QSPI-fetch bound)", r.ipc);
+    println!("  inference/s:  {:>12.1}", r.inferences_per_second);
+    println!("  s/inference:  {:>12.6}", r.seconds_per_inference);
+
+    // What float inference would cost on this FPU-less part (soft-float).
+    let f = simarch::simulate(&model, &ds, Variant::Float, Core::Fe310, 400);
+    let i = simarch::simulate(&model, &ds, Variant::IntTreeger, Core::Fe310, 400);
+    println!("\nfloat (soft-float libgcc) vs integer-only on the FPU-less FE310:");
+    println!("  float:     {:>12.0} cycles/inference", f.cycles);
+    println!("  intreeger: {:>12.0} cycles/inference  => {:.1}x speedup", i.cycles, f.cycles / i.cycles);
+    println!("\nconclusion (paper): integer-only inference makes tree ensembles practical on");
+    println!("ultra-low-power devices without FPUs; the model fits QSPI flash with RAM to spare.");
+}

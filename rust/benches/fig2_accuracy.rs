@@ -1,0 +1,78 @@
+//! E1/E2 — reproduces Fig 2 + §IV-B: accuracy parity and probability
+//! deltas between the float and integer-only implementations.
+//!
+//! Paper protocol: 75/25 split, 10 randomized splits, RF up to 100
+//! trees; result: *identical predictions on every sample*, probability
+//! deltas ~1e-10 for 1 tree, ~1e-8 for 100 trees (proportional to
+//! n/2^32).
+
+use intreeger::data::{esa_like, shuttle_like, Dataset};
+use intreeger::inference::{Engine, FlIntEngine, FloatEngine, IntEngine};
+use intreeger::quant::error_bound;
+use intreeger::trees::{ForestParams, RandomForest};
+use intreeger::util::Rng;
+
+fn run_dataset(name: &str, ds: &Dataset, tree_counts: &[usize], n_splits: usize) {
+    println!("\n--- dataset: {name} ({} rows, {} classes) ---", ds.n_rows(), ds.n_classes);
+    println!(
+        "{:>7} {:>9} {:>13} {:>13} {:>13} {:>10}",
+        "trees", "splits", "pred_mismatch", "max|dp|", "avg|dp|", "bound n/2^32"
+    );
+    for &n_trees in tree_counts {
+        let mut mismatches = 0u64;
+        let mut checked = 0u64;
+        let mut max_dp = 0f64;
+        let mut sum_dp = 0f64;
+        let mut dp_count = 0u64;
+        for split in 0..n_splits {
+            let mut rng = Rng::new(split as u64 + 1000);
+            let (train, test) = ds.train_test_split(0.25, &mut rng);
+            let model = RandomForest::train(
+                &train,
+                &ForestParams { n_trees, max_depth: 7, ..Default::default() },
+                split as u64,
+            );
+            let fe = FloatEngine::compile(&model);
+            let fl = FlIntEngine::compile(&model);
+            let ie = IntEngine::compile(&model);
+            // cap evaluation rows per split for runtime
+            let rows = test.n_rows().min(1500);
+            for i in 0..rows {
+                let row = test.row(i);
+                let a = fe.predict(row);
+                if a != ie.predict(row) || a != fl.predict(row) {
+                    mismatches += 1;
+                }
+                checked += 1;
+                let pf = fe.predict_proba(row);
+                let pi = ie.predict_proba(row);
+                for (x, y) in pf.iter().zip(&pi) {
+                    let d = (*x as f64 - *y as f64).abs();
+                    max_dp = max_dp.max(d);
+                    sum_dp += d;
+                    dp_count += 1;
+                }
+            }
+        }
+        println!(
+            "{:>7} {:>9} {:>10}/{:<6} {:>13.3e} {:>13.3e} {:>10.3e}",
+            n_trees,
+            n_splits,
+            mismatches,
+            checked,
+            max_dp,
+            sum_dp / dp_count.max(1) as f64,
+            error_bound(n_trees)
+        );
+        assert_eq!(mismatches, 0, "paper claim violated: predictions must be identical");
+    }
+}
+
+fn main() {
+    println!("Fig 2 / §IV-B — float vs integer-only: prediction parity and probability deltas");
+    let shuttle = shuttle_like(12_000, 1);
+    let esa = esa_like(6_000, 1);
+    run_dataset("shuttle-like", &shuttle, &[1, 10, 50, 100], 10);
+    run_dataset("esa-like", &esa, &[1, 10, 50, 100], 10);
+    println!("\nresult: 0 prediction mismatches; deltas scale with n_trees (paper: 1e-10 @ 1 tree, ~1e-8 @ 100)");
+}

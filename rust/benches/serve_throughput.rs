@@ -1,0 +1,105 @@
+//! E9 — serving-stack benchmark: scalar engine vs the AOT-compiled
+//! XLA/Pallas batched engine, and the batch-size crossover the
+//! coordinator's router exploits. Also measures end-to-end server
+//! throughput with dynamic batching.
+
+use intreeger::coordinator::{BatchPolicy, InferenceServer, ServerConfig};
+use intreeger::data::shuttle_like;
+use intreeger::inference::IntEngine;
+use intreeger::runtime::{artifacts_available, engine_for_model};
+use intreeger::trees::{ForestParams, RandomForest};
+use intreeger::util::bench::{black_box, measure, report, section};
+use std::path::Path;
+use std::time::Duration;
+
+fn main() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let ds = shuttle_like(12_000, 7);
+    let model = RandomForest::train(
+        &ds,
+        &ForestParams { n_trees: 10, max_depth: 6, ..Default::default() },
+        19,
+    );
+    let scalar = IntEngine::compile(&model);
+
+    section("scalar engine (per-row)");
+    let rows: Vec<&[f32]> = (0..2000).map(|i| ds.row(i)).collect();
+    let m = measure(2, 7, rows.len() as u64, || {
+        let mut acc = 0u32;
+        for r in &rows {
+            acc ^= scalar.predict_fixed(r)[0];
+        }
+        black_box(acc);
+    });
+    report("scalar/predict_fixed", &m);
+
+    if !artifacts_available(&dir) {
+        println!("(artifacts not built — run `make artifacts` for the XLA comparisons)");
+        return;
+    }
+
+    section("XLA/PJRT batched engine (AOT Pallas artifact) vs scalar, by batch size");
+    let xla = engine_for_model(&dir, &model, 1).expect("xla engine");
+    println!(
+        "tier: {} (B={} T={} N={} C={})",
+        xla.tier().name,
+        xla.tier().batch,
+        xla.tier().trees,
+        xla.tier().nodes,
+        xla.tier().classes
+    );
+    for batch in [1usize, 4, 16, 64] {
+        let batch = batch.min(xla.max_batch());
+        let flat: Vec<f32> = ds.features[..batch * ds.n_features].to_vec();
+        let mx = measure(2, 7, batch as u64, || {
+            let out = xla.execute(&flat, ds.n_features).expect("xla exec");
+            black_box(out[0][0]);
+        });
+        let ms = measure(2, 7, batch as u64, || {
+            let mut acc = 0u32;
+            for i in 0..batch {
+                acc ^= scalar.predict_fixed(ds.row(i))[0];
+            }
+            black_box(acc);
+        });
+        println!(
+            "batch {batch:>4}: xla {:>10.1} ns/row  scalar {:>10.1} ns/row  ({})",
+            mx.per_item_ns(),
+            ms.per_item_ns(),
+            if mx.per_item_ns() < ms.per_item_ns() { "xla wins" } else { "scalar wins" }
+        );
+    }
+
+    section("end-to-end server throughput (dynamic batching)");
+    for (label, policy, threshold) in [
+        ("scalar-only small batches", BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(100) }, usize::MAX),
+        ("xla offload large batches", BatchPolicy { max_batch: 64, max_wait: Duration::from_micros(300) }, 16),
+    ] {
+        let server = InferenceServer::start(
+            &model,
+            Some(dir.clone()),
+            ServerConfig {
+                policy,
+                xla_threshold: threshold,
+                queue_depth: 4096,
+                auto_calibrate: false, // measure both routes explicitly
+            },
+        );
+        let n = 4000usize;
+        let reqs: Vec<Vec<f32>> = (0..n).map(|i| ds.row(i % ds.n_rows()).to_vec()).collect();
+        let t0 = std::time::Instant::now();
+        let responses = server.infer_many(reqs);
+        let wall = t0.elapsed().as_secs_f64();
+        let snap = server.metrics();
+        println!(
+            "{label:<28} {:>8.0} req/s  p50 {:>6.0} us  p99 {:>7.0} us  (scalar rows {}, xla rows {}, mean batch {:.1})",
+            n as f64 / wall,
+            snap.latency_p50_us,
+            snap.latency_p99_us,
+            snap.rows_scalar,
+            snap.rows_xla,
+            snap.mean_batch
+        );
+        black_box(responses.len());
+    }
+}

@@ -1,0 +1,107 @@
+//! Real x86 measurements — the anchored point of the Fig 3 reproduction
+//! plus the layout ablation.
+//!
+//! Two measurement paths on this host (an actual x86-64 machine, like
+//! the paper's EPYC column):
+//!
+//! 1. the rust inference engines (reference semantics of the generated
+//!    C; compiled by rustc -O),
+//! 2. the *actual generated C* compiled with gcc -O3 (the paper's exact
+//!    methodology, §IV: "-O3 compiler flag", 10,000 replications) — in
+//!    both if-else and native layouts.
+
+use intreeger::codegen::{self, CBinary, Layout};
+use intreeger::data::{esa_like, shuttle_like, Dataset};
+use intreeger::inference::{Engine, FlIntEngine, FloatEngine, IntEngine, Variant};
+use intreeger::ir::Model;
+use intreeger::trees::{ForestParams, RandomForest};
+use intreeger::util::bench::{black_box, measure, report, section};
+
+fn rust_engines(name: &str, ds: &Dataset, model: &Model) {
+    section(&format!("rust engines — {name}"));
+    let rows: Vec<&[f32]> = (0..ds.n_rows().min(2000)).map(|i| ds.row(i)).collect();
+    let fe = FloatEngine::compile(model);
+    let fl = FlIntEngine::compile(model);
+    let ie = IntEngine::compile(model);
+
+    let m_f = measure(2, 7, rows.len() as u64, || {
+        let mut acc = 0u32;
+        for r in &rows {
+            acc ^= fe.predict(r);
+        }
+        black_box(acc);
+    });
+    report(&format!("{name}/float"), &m_f);
+    let m_fl = measure(2, 7, rows.len() as u64, || {
+        let mut acc = 0u32;
+        for r in &rows {
+            acc ^= fl.predict(r);
+        }
+        black_box(acc);
+    });
+    report(&format!("{name}/flint"), &m_fl);
+    let m_i = measure(2, 7, rows.len() as u64, || {
+        let mut acc = 0u32;
+        for r in &rows {
+            acc ^= ie.predict(r);
+        }
+        black_box(acc);
+    });
+    report(&format!("{name}/intreeger"), &m_i);
+    println!(
+        "speedup float->intreeger: {:.2}x   float->flint: {:.2}x",
+        m_f.per_item_ns() / m_i.per_item_ns(),
+        m_f.per_item_ns() / m_fl.per_item_ns()
+    );
+}
+
+fn generated_c(name: &str, ds: &Dataset, model: &Model) {
+    if !codegen::compile::gcc_available() {
+        println!("(gcc unavailable — skipping generated-C measurements)");
+        return;
+    }
+    section(&format!("generated C via gcc -O3 — {name}"));
+    let n_rows = ds.n_rows().min(2000);
+    let rows: Vec<f32> = ds.features[..n_rows * ds.n_features].to_vec();
+    let reps = 40;
+
+    let mut results: Vec<(String, f64)> = Vec::new();
+    for layout in [Layout::IfElse, Layout::Native] {
+        for variant in Variant::all() {
+            let src = codegen::generate(model, layout, variant);
+            let bin = CBinary::compile(&src, variant, ds.n_features, ds.n_classes, "bench")
+                .expect("gcc compile");
+            let ns = bin.bench_ns(&rows, reps).expect("bench run");
+            println!(
+                "bench {name}/c/{}/{:<10} {:>12.1} ns/inference   (text {} B)",
+                layout.name(),
+                variant.name(),
+                ns,
+                bin.text_size.map(|s| s.to_string()).unwrap_or_else(|| "?".into())
+            );
+            results.push((format!("{}/{}", layout.name(), variant.name()), ns));
+        }
+    }
+    let get = |k: &str| results.iter().find(|(n, _)| n == k).map(|(_, v)| *v).unwrap();
+    println!(
+        "if-else: float->intreeger {:.2}x; flint->intreeger {:.2}x; native/ifelse (int) {:.2}x",
+        get("ifelse/float") / get("ifelse/intreeger"),
+        get("ifelse/flint") / get("ifelse/intreeger"),
+        get("native/intreeger") / get("ifelse/intreeger"),
+    );
+}
+
+fn main() {
+    println!("E5 (x86 column, measured) + layout ablation — gcc -O3, 10k-replication style");
+    let shuttle = shuttle_like(12_000, 6);
+    let esa = esa_like(4_000, 6);
+    for (name, ds, trees) in [("shuttle/50t", &shuttle, 50usize), ("esa/20t", &esa, 20)] {
+        let model = RandomForest::train(
+            ds,
+            &ForestParams { n_trees: trees, max_depth: 7, ..Default::default() },
+            17,
+        );
+        rust_engines(name, ds, &model);
+        generated_c(name, ds, &model);
+    }
+}

@@ -1,0 +1,325 @@
+//! gcc compile-and-run harness for generated C.
+//!
+//! On this x86 host the generated code is *actually compiled and
+//! executed* (with `-O3`, as in the paper's §IV methodology), providing
+//! (a) end-to-end parity checks of the generated artifact against the
+//! reference engines and (b) real x86 performance measurements for the
+//! Fig 3 x86 column.
+
+use crate::inference::Variant;
+use std::io::Write as _;
+use std::path::PathBuf;
+use std::process::{Command, Stdio};
+
+/// Compile/run failure.
+#[derive(Debug)]
+pub enum CompileError {
+    Io(std::io::Error),
+    Gcc { status: Option<i32>, stderr: String },
+    Run { status: Option<i32>, stderr: String },
+    Protocol(String),
+}
+
+impl std::fmt::Display for CompileError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CompileError::Io(e) => write!(f, "io: {e}"),
+            CompileError::Gcc { status, stderr } => write!(f, "gcc failed ({status:?}): {stderr}"),
+            CompileError::Run { status, stderr } => {
+                write!(f, "binary failed ({status:?}): {stderr}")
+            }
+            CompileError::Protocol(m) => write!(f, "protocol: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for CompileError {}
+
+impl From<std::io::Error> for CompileError {
+    fn from(e: std::io::Error) -> Self {
+        CompileError::Io(e)
+    }
+}
+
+/// A compiled generated-C binary.
+pub struct CBinary {
+    path: PathBuf,
+    n_features: usize,
+    n_classes: usize,
+    variant: Variant,
+    /// Size of the stripped binary's .text section (bytes), if computed.
+    pub text_size: Option<u64>,
+}
+
+/// True when a C compiler is available on this host.
+pub fn gcc_available() -> bool {
+    Command::new("gcc").arg("--version").stdout(Stdio::null()).stderr(Stdio::null()).status().map(|s| s.success()).unwrap_or(false)
+}
+
+impl CBinary {
+    /// Compile `source` with gcc -O3 into a unique temp binary.
+    pub fn compile(
+        source: &str,
+        variant: Variant,
+        n_features: usize,
+        n_classes: usize,
+        tag: &str,
+    ) -> Result<CBinary, CompileError> {
+        let dir = std::env::temp_dir().join("intreeger_cc");
+        std::fs::create_dir_all(&dir)?;
+        let id = format!(
+            "{tag}_{}_{}",
+            std::process::id(),
+            std::time::SystemTime::now().duration_since(std::time::UNIX_EPOCH).unwrap().as_nanos()
+        );
+        let c_path = dir.join(format!("{id}.c"));
+        let bin_path = dir.join(id);
+        std::fs::write(&c_path, source)?;
+        let out = Command::new("gcc")
+            .args(["-O3", "-std=gnu11", "-o"])
+            .arg(&bin_path)
+            .arg(&c_path)
+            .output()?;
+        if !out.status.success() {
+            return Err(CompileError::Gcc {
+                status: out.status.code(),
+                stderr: String::from_utf8_lossy(&out.stderr).into_owned(),
+            });
+        }
+        let text_size = text_section_size(&bin_path);
+        Ok(CBinary { path: bin_path, n_features, n_classes, variant, text_size })
+    }
+
+    fn run_mode(&self, mode: &str, rows: &[f32], extra: &[String]) -> Result<Vec<u8>, CompileError> {
+        let n = rows.len() / self.n_features;
+        let mut cmd = Command::new(&self.path);
+        cmd.arg(mode).arg(n.to_string()).args(extra);
+        cmd.stdin(Stdio::piped()).stdout(Stdio::piped()).stderr(Stdio::piped());
+        let mut child = cmd.spawn()?;
+        {
+            let stdin = child.stdin.as_mut().unwrap();
+            let bytes: Vec<u8> = rows.iter().flat_map(|v| v.to_le_bytes()).collect();
+            stdin.write_all(&bytes)?;
+        }
+        let out = child.wait_with_output()?;
+        if !out.status.success() {
+            return Err(CompileError::Run {
+                status: out.status.code(),
+                stderr: String::from_utf8_lossy(&out.stderr).into_owned(),
+            });
+        }
+        Ok(out.stdout)
+    }
+
+    /// Run `predict` over rows (`rows.len()` must be a multiple of
+    /// `n_features`), returning per-row f32 outputs. For the integer
+    /// variant the raw u32 outputs are widened via their probability
+    /// interpretation is NOT applied — use [`Self::predict_u32`].
+    pub fn predict_f32(&self, rows: &[f32]) -> Result<Vec<Vec<f32>>, CompileError> {
+        assert_ne!(self.variant, Variant::IntTreeger, "use predict_u32 for the int variant");
+        let raw = self.run_mode("predict", rows, &[])?;
+        let n = rows.len() / self.n_features;
+        let want = n * self.n_classes * 4;
+        if raw.len() != want {
+            return Err(CompileError::Protocol(format!("expected {want} bytes, got {}", raw.len())));
+        }
+        Ok((0..n)
+            .map(|i| {
+                (0..self.n_classes)
+                    .map(|c| {
+                        let o = (i * self.n_classes + c) * 4;
+                        f32::from_le_bytes(raw[o..o + 4].try_into().unwrap())
+                    })
+                    .collect()
+            })
+            .collect())
+    }
+
+    /// Run `predict` for the integer variant, returning u32 fixed-point
+    /// accumulator vectors.
+    pub fn predict_u32(&self, rows: &[f32]) -> Result<Vec<Vec<u32>>, CompileError> {
+        assert_eq!(self.variant, Variant::IntTreeger);
+        let raw = self.run_mode("predict", rows, &[])?;
+        let n = rows.len() / self.n_features;
+        let want = n * self.n_classes * 4;
+        if raw.len() != want {
+            return Err(CompileError::Protocol(format!("expected {want} bytes, got {}", raw.len())));
+        }
+        Ok((0..n)
+            .map(|i| {
+                (0..self.n_classes)
+                    .map(|c| {
+                        let o = (i * self.n_classes + c) * 4;
+                        u32::from_le_bytes(raw[o..o + 4].try_into().unwrap())
+                    })
+                    .collect()
+            })
+            .collect())
+    }
+
+    /// Run the `bench` mode: time `reps` passes over the rows inside the
+    /// C process and return nanoseconds per inference.
+    pub fn bench_ns(&self, rows: &[f32], reps: usize) -> Result<f64, CompileError> {
+        let raw = self.run_mode("bench", rows, &[reps.to_string()])?;
+        let text = String::from_utf8_lossy(&raw);
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("ns_per_inference ") {
+                return rest
+                    .trim()
+                    .parse::<f64>()
+                    .map_err(|e| CompileError::Protocol(format!("bad ns value: {e}")));
+            }
+        }
+        Err(CompileError::Protocol(format!("no ns_per_inference in output: {text}")))
+    }
+
+    pub fn variant(&self) -> Variant {
+        self.variant
+    }
+
+    pub fn path(&self) -> &std::path::Path {
+        &self.path
+    }
+}
+
+impl Drop for CBinary {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+        let _ = std::fs::remove_file(self.path.with_extension("c"));
+    }
+}
+
+/// Parse `size`-style .text section size of a binary (returns None if the
+/// `size` tool is unavailable).
+fn text_section_size(path: &std::path::Path) -> Option<u64> {
+    let out = Command::new("size").arg(path).output().ok()?;
+    if !out.status.success() {
+        return None;
+    }
+    let text = String::from_utf8_lossy(&out.stdout);
+    // format:   text    data     bss     dec     hex filename
+    let line = text.lines().nth(1)?;
+    line.split_whitespace().next()?.parse().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codegen::{generate, Layout};
+    use crate::data::shuttle_like;
+    use crate::inference::{Engine, FloatEngine, IntEngine};
+    use crate::trees::{ForestParams, RandomForest};
+
+    fn setup() -> (crate::data::Dataset, crate::ir::Model) {
+        let ds = shuttle_like(1200, 41);
+        let m = RandomForest::train(
+            &ds,
+            &ForestParams { n_trees: 8, max_depth: 5, ..Default::default() },
+            4,
+        );
+        (ds, m)
+    }
+
+    fn rows_of(ds: &crate::data::Dataset, n: usize) -> Vec<f32> {
+        ds.features[..n * ds.n_features].to_vec()
+    }
+
+    #[test]
+    fn generated_float_c_matches_float_engine() {
+        if !gcc_available() {
+            eprintln!("gcc unavailable; skipping");
+            return;
+        }
+        let (ds, m) = setup();
+        let src = generate(&m, Layout::IfElse, Variant::Float);
+        let bin = CBinary::compile(&src, Variant::Float, ds.n_features, ds.n_classes, "t_float")
+            .expect("compile");
+        let rows = rows_of(&ds, 64);
+        let got = bin.predict_f32(&rows).expect("run");
+        let engine = FloatEngine::compile(&m);
+        for (i, probs) in got.iter().enumerate() {
+            let want = engine.predict_proba(&rows[i * ds.n_features..(i + 1) * ds.n_features]);
+            for (a, b) in probs.iter().zip(&want) {
+                // The C code accumulates in the same order; results should
+                // agree to the last ulp or two (gcc may fuse differently).
+                assert!((a - b).abs() <= 2.0 * f32::EPSILON * 8.0, "row {i}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn generated_int_c_matches_int_engine_exactly() {
+        if !gcc_available() {
+            eprintln!("gcc unavailable; skipping");
+            return;
+        }
+        let (ds, m) = setup();
+        let src = generate(&m, Layout::IfElse, Variant::IntTreeger);
+        let bin = CBinary::compile(&src, Variant::IntTreeger, ds.n_features, ds.n_classes, "t_int")
+            .expect("compile");
+        let rows = rows_of(&ds, 64);
+        let got = bin.predict_u32(&rows).expect("run");
+        let engine = IntEngine::compile(&m);
+        for (i, fixed) in got.iter().enumerate() {
+            let want = engine.predict_fixed(&rows[i * ds.n_features..(i + 1) * ds.n_features]);
+            assert_eq!(fixed, &want, "row {i}: integer outputs must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn native_layout_matches_ifelse_exactly() {
+        if !gcc_available() {
+            eprintln!("gcc unavailable; skipping");
+            return;
+        }
+        let (ds, m) = setup();
+        let a = CBinary::compile(
+            &generate(&m, Layout::IfElse, Variant::IntTreeger),
+            Variant::IntTreeger,
+            ds.n_features,
+            ds.n_classes,
+            "t_ie",
+        )
+        .unwrap();
+        let b = CBinary::compile(
+            &generate(&m, Layout::Native, Variant::IntTreeger),
+            Variant::IntTreeger,
+            ds.n_features,
+            ds.n_classes,
+            "t_nat",
+        )
+        .unwrap();
+        let rows = rows_of(&ds, 32);
+        assert_eq!(a.predict_u32(&rows).unwrap(), b.predict_u32(&rows).unwrap());
+    }
+
+    #[test]
+    fn bench_mode_returns_positive_ns() {
+        if !gcc_available() {
+            eprintln!("gcc unavailable; skipping");
+            return;
+        }
+        let (ds, m) = setup();
+        let src = generate(&m, Layout::IfElse, Variant::IntTreeger);
+        let bin = CBinary::compile(&src, Variant::IntTreeger, ds.n_features, ds.n_classes, "t_b")
+            .unwrap();
+        let rows = rows_of(&ds, 128);
+        let ns = bin.bench_ns(&rows, 50).expect("bench");
+        assert!(ns > 0.0 && ns < 1e7, "ns = {ns}");
+    }
+
+    #[test]
+    fn text_size_reported() {
+        if !gcc_available() {
+            eprintln!("gcc unavailable; skipping");
+            return;
+        }
+        let (ds, m) = setup();
+        let src = generate(&m, Layout::IfElse, Variant::IntTreeger);
+        let bin =
+            CBinary::compile(&src, Variant::IntTreeger, ds.n_features, ds.n_classes, "t_sz").unwrap();
+        if let Some(sz) = bin.text_size {
+            assert!(sz > 1000, "text {sz}");
+        }
+    }
+}

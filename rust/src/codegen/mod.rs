@@ -1,0 +1,136 @@
+//! C code generation — the paper's end product: an "architecture-agnostic
+//! integer-only C implementation" of the trained model (§I), in the style
+//! of tl2cgen's if-else trees.
+//!
+//! Three numeric variants are generated, matching the paper's comparison
+//! (§IV, Listings 2–4):
+//!
+//! * [`Variant::Float`] — float compares + float accumulation,
+//! * [`Variant::FlInt`] — integer compares + float accumulation,
+//! * [`Variant::IntTreeger`] — integer compares + `u32` accumulation
+//!   (no float arithmetic appears anywhere in the generated inference path).
+//!
+//! Two layouts are generated for the layout ablation (Asadi et al.'s
+//! distinction the paper builds on, §II-B):
+//!
+//! * [`ifelse`] — nested `if/else` blocks, one function per tree (what
+//!   the paper evaluates; code-heavy, data-light),
+//! * [`native`] — node arrays walked by a loop (smaller code, more data).
+//!
+//! [`compile`] drives gcc over the generated source and runs the binary
+//! for parity and measurement — on this x86 host that is a *real*
+//! measurement of the paper's x86 column, not a simulation.
+
+pub mod compile;
+pub mod ifelse;
+pub mod native;
+
+pub use compile::{CBinary, CompileError};
+pub use ifelse::generate_ifelse;
+pub use native::generate_native;
+
+use crate::inference::Variant;
+use crate::ir::Model;
+
+/// Code layout style.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Layout {
+    IfElse,
+    Native,
+}
+
+impl Layout {
+    pub fn name(self) -> &'static str {
+        match self {
+            Layout::IfElse => "ifelse",
+            Layout::Native => "native",
+        }
+    }
+}
+
+/// Generate C source for a model in the given layout and numeric variant.
+pub fn generate(model: &Model, layout: Layout, variant: Variant) -> String {
+    match layout {
+        Layout::IfElse => generate_ifelse(model, variant),
+        Layout::Native => generate_native(model, variant),
+    }
+}
+
+/// Format an f32 as a C literal that round-trips bit-exactly
+/// (C99 hexadecimal float literal).
+pub(crate) fn f32_lit(x: f32) -> String {
+    if x == 0.0 {
+        return "0.0f".to_string();
+    }
+    if x.is_infinite() || x.is_nan() {
+        panic!("non-finite constant in generated code");
+    }
+    let bits = x.to_bits();
+    let sign = if bits >> 31 == 1 { "-" } else { "" };
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let mant = bits & 0x7F_FFFF;
+    if exp == 0 {
+        // subnormal: value = 0.mant * 2^-126
+        format!("{sign}0x0.{:06x}p-126f", mant << 1)
+    } else {
+        format!("{sign}0x1.{:06x}p{}f", mant << 1, exp - 127)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_lit_roundtrips() {
+        for &x in &[1.0f32, 87.5, 0.1, 1.5e-40, -3.25, f32::MAX, f32::MIN_POSITIVE] {
+            let lit = f32_lit(x);
+            let parsed = parse_hexfloat(&lit);
+            assert_eq!(parsed.to_bits(), x.to_bits(), "{x} -> {lit}");
+        }
+        let mut rng = crate::util::Rng::new(5);
+        for _ in 0..2000 {
+            let x = crate::util::check::finite_f32(&mut rng);
+            let lit = f32_lit(x);
+            let parsed = parse_hexfloat(&lit);
+            assert_eq!(
+                parsed.to_bits(),
+                crate::flint::canon_zero(x).to_bits(),
+                "{x} -> {lit}"
+            );
+        }
+    }
+
+    /// Reference hexfloat parser for the test
+    /// (format: [-]0xH.HHHHHHp±Ef).
+    fn parse_hexfloat(s: &str) -> f32 {
+        let s = s.strip_suffix('f').unwrap();
+        let (sign, s) = match s.strip_prefix('-') {
+            Some(rest) => (-1.0f64, rest),
+            None => (1.0f64, s),
+        };
+        if s == "0.0" {
+            return if sign < 0.0 { -0.0 } else { 0.0 };
+        }
+        let s = s.strip_prefix("0x").unwrap();
+        let (mant_str, exp_str) = s.split_once('p').unwrap();
+        let (int_part, frac_part) = mant_str.split_once('.').unwrap();
+        let int_v = u64::from_str_radix(int_part, 16).unwrap() as f64;
+        let frac_v = u64::from_str_radix(frac_part, 16).unwrap() as f64
+            / 16f64.powi(frac_part.len() as i32);
+        let exp: i32 = exp_str.parse().unwrap();
+        (sign * (int_v + frac_v) * 2f64.powi(exp)) as f32
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite")]
+    fn f32_lit_rejects_nan() {
+        f32_lit(f32::NAN);
+    }
+
+    #[test]
+    fn zero_literal() {
+        assert_eq!(f32_lit(0.0), "0.0f");
+        assert_eq!(f32_lit(-0.0), "0.0f");
+    }
+}

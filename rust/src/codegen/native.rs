@@ -1,0 +1,175 @@
+//! Native-tree code generation: the forest as constant node arrays walked
+//! by a loop (Asadi et al.'s "native" layout, §II-B) — the layout-ablation
+//! counterpart to [`super::ifelse`]. Much smaller `.text`, larger
+//! `.rodata`; the paper argues if-else trees suit RAM-limited
+//! microcontrollers better, which bench `layout_ablation` quantifies.
+
+use super::ifelse::{acc_type, harness, GenOpts};
+use crate::flint::{ordered_u32, SplitEncoding};
+use crate::inference::Variant;
+use crate::ir::{Model, ModelKind, Node};
+use crate::quant::prob_to_fixed;
+use std::fmt::Write;
+
+/// Generate native-layout C for a model (default options).
+pub fn generate_native(model: &Model, variant: Variant) -> String {
+    generate_native_with(model, variant, GenOpts::default())
+}
+
+/// Generate native-layout C with explicit options.
+pub fn generate_native_with(model: &Model, variant: Variant, opts: GenOpts) -> String {
+    assert_eq!(model.kind, ModelKind::RandomForest, "C generation targets RF models");
+    model.validate().expect("model must be valid");
+
+    let mut out = String::new();
+    super::ifelse::header(&mut out, model, variant, "native", opts);
+
+    // Flatten all trees into one node table. Leaf marker: feature == -1,
+    // with `left` indexing the leaf-value table.
+    let mut feat: Vec<i32> = Vec::new();
+    let mut thresh: Vec<String> = Vec::new();
+    let mut left: Vec<u32> = Vec::new();
+    let mut right: Vec<u32> = Vec::new();
+    let mut roots: Vec<u32> = Vec::new();
+    let mut leaf_vals: Vec<String> = Vec::new();
+    let mut n_leaves = 0u32;
+
+    for tree in &model.trees {
+        let base = feat.len() as u32;
+        roots.push(base);
+        for node in &tree.nodes {
+            match node {
+                Node::Branch { feature, threshold, left: l, right: r } => {
+                    feat.push(*feature as i32);
+                    thresh.push(match (variant, opts.encoding) {
+                        (Variant::Float, _) => super::f32_lit(*threshold),
+                        (_, SplitEncoding::RawBitsNonNegative) => {
+                            format!("0x{:08x}u", threshold.to_bits())
+                        }
+                        (_, SplitEncoding::OrderedUnsigned) => {
+                            format!("0x{:08x}u", ordered_u32(*threshold))
+                        }
+                    });
+                    left.push(base + *l);
+                    right.push(base + *r);
+                }
+                Node::Leaf { values } => {
+                    feat.push(-1);
+                    thresh.push(if variant == Variant::Float { "0.0f".into() } else { "0u".into() });
+                    left.push(n_leaves);
+                    right.push(0);
+                    n_leaves += 1;
+                    for &p in values {
+                        leaf_vals.push(match variant {
+                            Variant::Float | Variant::FlInt => super::f32_lit(p),
+                            Variant::IntTreeger => {
+                                format!("{}u", prob_to_fixed(p, model.trees.len()))
+                            }
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    let thresh_ty = if variant == Variant::Float { "float" } else { "uint32_t" };
+    let acc = acc_type(variant);
+
+    let _ = writeln!(out, "#define N_NODES {}", feat.len());
+    let _ = writeln!(out, "static const int32_t it_feat[N_NODES] = {{{}}};", join(&feat));
+    let _ = writeln!(out, "static const {thresh_ty} it_thresh[N_NODES] = {{{}}};", thresh.join(","));
+    let _ = writeln!(out, "static const uint32_t it_left[N_NODES] = {{{}}};", join(&left));
+    let _ = writeln!(out, "static const uint32_t it_right[N_NODES] = {{{}}};", join(&right));
+    let _ = writeln!(out, "static const uint32_t it_root[N_TREES] = {{{}}};", join(&roots));
+    let _ = writeln!(
+        out,
+        "static const {acc} it_leaf[{}] = {{{}}};",
+        leaf_vals.len(),
+        leaf_vals.join(",")
+    );
+    let _ = writeln!(out);
+
+    let _ = writeln!(out, "void predict(const float *data, {acc} *result) {{");
+    if variant != Variant::Float {
+        let _ = writeln!(out, "  uint32_t d[N_FEATURES];");
+        let loader = match opts.encoding {
+            SplitEncoding::OrderedUnsigned => "it_map(it_load_bits(data + i))",
+            SplitEncoding::RawBitsNonNegative => "it_load_bits(data + i)",
+        };
+        let _ = writeln!(out, "  for (int i = 0; i < N_FEATURES; ++i) d[i] = {loader};");
+    }
+    let zero = if variant == Variant::IntTreeger { "0u" } else { "0.0f" };
+    let _ = writeln!(out, "  for (int c = 0; c < N_CLASSES; ++c) result[c] = {zero};");
+    let _ = writeln!(out, "  for (int t = 0; t < N_TREES; ++t) {{");
+    let _ = writeln!(out, "    uint32_t i = it_root[t];");
+    let _ = writeln!(out, "    while (it_feat[i] >= 0) {{");
+    let cmp = match (variant, opts.encoding) {
+        (Variant::Float, _) => "data[it_feat[i]] <= it_thresh[i]",
+        (_, SplitEncoding::RawBitsNonNegative) => {
+            "(int32_t)d[it_feat[i]] <= (int32_t)it_thresh[i]"
+        }
+        (_, SplitEncoding::OrderedUnsigned) => "d[it_feat[i]] <= it_thresh[i]",
+    };
+    let _ = writeln!(out, "      i = ({cmp}) ? it_left[i] : it_right[i];");
+    let _ = writeln!(out, "    }}");
+    let _ = writeln!(
+        out,
+        "    const {acc} *leaf = it_leaf + (size_t)it_left[i] * N_CLASSES;"
+    );
+    let _ = writeln!(out, "    for (int c = 0; c < N_CLASSES; ++c) result[c] += leaf[c];");
+    let _ = writeln!(out, "  }}");
+    if variant != Variant::IntTreeger {
+        let _ = writeln!(out, "  for (int c = 0; c < N_CLASSES; ++c) result[c] /= (float)N_TREES;");
+    }
+    let _ = writeln!(out, "}}");
+    let _ = writeln!(out);
+
+    harness(&mut out, model, variant);
+    out
+}
+
+fn join<T: std::fmt::Display>(xs: &[T]) -> String {
+    xs.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::shuttle_like;
+    use crate::trees::{ForestParams, RandomForest};
+
+    fn model() -> Model {
+        let ds = shuttle_like(600, 33);
+        RandomForest::train(&ds, &ForestParams { n_trees: 3, max_depth: 4, ..Default::default() }, 2)
+    }
+
+    #[test]
+    fn native_emits_tables() {
+        let src = generate_native(&model(), Variant::IntTreeger);
+        for t in ["it_feat", "it_thresh", "it_left", "it_right", "it_root", "it_leaf"] {
+            assert!(src.contains(t), "missing table {t}");
+        }
+        assert!(src.contains("while (it_feat[i] >= 0)"));
+    }
+
+    #[test]
+    fn native_int_is_integer_only() {
+        let src = generate_native(&model(), Variant::IntTreeger);
+        let inference = src.split("#ifndef INTREEGER_NO_MAIN").next().unwrap();
+        assert!(!inference.contains("0x1."), "float literal leaked");
+        assert!(!inference.contains("float *result"));
+    }
+
+    #[test]
+    fn native_much_smaller_than_ifelse_for_big_models() {
+        let ds = shuttle_like(4000, 34);
+        let m = RandomForest::train(
+            &ds,
+            &ForestParams { n_trees: 20, max_depth: 8, ..Default::default() },
+            3,
+        );
+        let ifelse = crate::codegen::generate_ifelse(&m, Variant::IntTreeger);
+        let native = generate_native(&m, Variant::IntTreeger);
+        assert!(native.len() < ifelse.len());
+    }
+}

@@ -1,0 +1,225 @@
+//! Dynamic batching policy — pure logic, unit-testable without threads.
+//!
+//! Requests arrive at arbitrary times; the batcher accumulates them and
+//! decides when to flush: when the batch is full (`max_batch`), or when
+//! the oldest request has waited `max_wait`, or on explicit drain. This
+//! is the standard continuous-batching trade-off (throughput vs tail
+//! latency) scaled down to tabular inference.
+
+use std::time::{Duration, Instant};
+
+/// Batching policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Flush as soon as this many requests are pending.
+    pub max_batch: usize,
+    /// Flush when the oldest pending request has waited this long.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 64, max_wait: Duration::from_micros(200) }
+    }
+}
+
+/// Why a flush happened (exported in metrics).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FlushReason {
+    Full,
+    Deadline,
+    Drain,
+}
+
+/// Accumulates items with arrival timestamps and applies the policy.
+pub struct Batcher<T> {
+    policy: BatchPolicy,
+    pending: Vec<T>,
+    oldest: Option<Instant>,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(policy: BatchPolicy) -> Self {
+        assert!(policy.max_batch > 0);
+        Batcher { policy, pending: Vec::with_capacity(policy.max_batch), oldest: None }
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Add an item (arrival time injectable for tests). Returns a full
+    /// batch if the policy says flush-on-full.
+    pub fn push_at(&mut self, item: T, now: Instant) -> Option<(Vec<T>, FlushReason)> {
+        if self.pending.is_empty() {
+            self.oldest = Some(now);
+        }
+        self.pending.push(item);
+        if self.pending.len() >= self.policy.max_batch {
+            return Some((self.take(), FlushReason::Full));
+        }
+        None
+    }
+
+    pub fn push(&mut self, item: T) -> Option<(Vec<T>, FlushReason)> {
+        self.push_at(item, Instant::now())
+    }
+
+    /// Check the deadline; flush if the oldest item has waited too long.
+    pub fn poll_at(&mut self, now: Instant) -> Option<(Vec<T>, FlushReason)> {
+        match self.oldest {
+            Some(t0) if !self.pending.is_empty() && now.duration_since(t0) >= self.policy.max_wait => {
+                Some((self.take(), FlushReason::Deadline))
+            }
+            _ => None,
+        }
+    }
+
+    pub fn poll(&mut self) -> Option<(Vec<T>, FlushReason)> {
+        self.poll_at(Instant::now())
+    }
+
+    /// Time until the current deadline fires (None when empty).
+    pub fn time_to_deadline(&self, now: Instant) -> Option<Duration> {
+        self.oldest.filter(|_| !self.pending.is_empty()).map(|t0| {
+            (t0 + self.policy.max_wait).saturating_duration_since(now)
+        })
+    }
+
+    /// Unconditionally flush whatever is pending.
+    pub fn drain(&mut self) -> Option<(Vec<T>, FlushReason)> {
+        if self.pending.is_empty() {
+            None
+        } else {
+            Some((self.take(), FlushReason::Drain))
+        }
+    }
+
+    fn take(&mut self) -> Vec<T> {
+        self.oldest = None;
+        std::mem::replace(&mut self.pending, Vec::with_capacity(self.policy.max_batch))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_ensure;
+    use crate::util::check::check;
+
+    fn policy(max_batch: usize, wait_us: u64) -> BatchPolicy {
+        BatchPolicy { max_batch, max_wait: Duration::from_micros(wait_us) }
+    }
+
+    #[test]
+    fn flushes_on_full() {
+        let mut b = Batcher::new(policy(3, 1_000_000));
+        let t = Instant::now();
+        assert!(b.push_at(1, t).is_none());
+        assert!(b.push_at(2, t).is_none());
+        let (batch, why) = b.push_at(3, t).unwrap();
+        assert_eq!(batch, vec![1, 2, 3]);
+        assert_eq!(why, FlushReason::Full);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn flushes_on_deadline() {
+        let mut b = Batcher::new(policy(100, 500));
+        let t0 = Instant::now();
+        b.push_at(1, t0);
+        b.push_at(2, t0 + Duration::from_micros(100));
+        assert!(b.poll_at(t0 + Duration::from_micros(499)).is_none());
+        let (batch, why) = b.poll_at(t0 + Duration::from_micros(500)).unwrap();
+        assert_eq!(batch.len(), 2);
+        assert_eq!(why, FlushReason::Deadline);
+    }
+
+    #[test]
+    fn deadline_resets_after_flush() {
+        let mut b = Batcher::new(policy(10, 500));
+        let t0 = Instant::now();
+        b.push_at(1, t0);
+        b.poll_at(t0 + Duration::from_micros(600)).unwrap();
+        // New item: deadline measured from its own arrival.
+        b.push_at(2, t0 + Duration::from_micros(700));
+        assert!(b.poll_at(t0 + Duration::from_micros(1100)).is_none());
+        assert!(b.poll_at(t0 + Duration::from_micros(1200)).is_some());
+    }
+
+    #[test]
+    fn drain_returns_partial() {
+        let mut b = Batcher::new(policy(10, 1_000_000));
+        assert!(b.drain().is_none());
+        b.push(7);
+        let (batch, why) = b.drain().unwrap();
+        assert_eq!(batch, vec![7]);
+        assert_eq!(why, FlushReason::Drain);
+    }
+
+    #[test]
+    fn time_to_deadline_counts_down() {
+        let mut b = Batcher::new(policy(10, 1000));
+        let t0 = Instant::now();
+        assert!(b.time_to_deadline(t0).is_none());
+        b.push_at(1, t0);
+        let d = b.time_to_deadline(t0 + Duration::from_micros(400)).unwrap();
+        assert_eq!(d, Duration::from_micros(600));
+        let d2 = b.time_to_deadline(t0 + Duration::from_micros(2000)).unwrap();
+        assert_eq!(d2, Duration::ZERO);
+    }
+
+    /// Property: no item is ever lost or duplicated across an arbitrary
+    /// push/poll/drain sequence (the coordinator-invariant check).
+    #[test]
+    fn prop_no_loss_no_duplication() {
+        check(
+            "batcher_no_loss",
+            |r| {
+                let n_ops = 1 + r.below(60);
+                (0..n_ops)
+                    .map(|_| (r.below(3) as u8, r.below(1000) as u64))
+                    .collect::<Vec<_>>()
+            },
+            |ops| {
+                let mut b = Batcher::new(policy(4, 100));
+                let t0 = Instant::now();
+                let mut pushed: Vec<u64> = Vec::new();
+                let mut flushed: Vec<u64> = Vec::new();
+                let mut next_id = 0u64;
+                let mut now = t0;
+                for &(op, dt) in ops {
+                    now += Duration::from_micros(dt);
+                    match op {
+                        0 => {
+                            pushed.push(next_id);
+                            if let Some((batch, _)) = b.push_at(next_id, now) {
+                                flushed.extend(batch);
+                            }
+                            next_id += 1;
+                        }
+                        1 => {
+                            if let Some((batch, _)) = b.poll_at(now) {
+                                flushed.extend(batch);
+                            }
+                        }
+                        _ => {
+                            if let Some((batch, _)) = b.drain() {
+                                flushed.extend(batch);
+                            }
+                        }
+                    }
+                }
+                if let Some((batch, _)) = b.drain() {
+                    flushed.extend(batch);
+                }
+                prop_ensure!(flushed == pushed, "items lost/reordered: {flushed:?} vs {pushed:?}");
+                Ok(())
+            },
+        );
+    }
+}

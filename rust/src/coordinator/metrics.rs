@@ -1,0 +1,112 @@
+//! Serving metrics: request counters and latency histograms per route.
+
+use crate::util::stats::Histogram;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Shared metrics sink (cheap atomic counters; histograms behind a
+/// mutex touched once per request completion).
+#[derive(Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub responses: AtomicU64,
+    pub batches_scalar: AtomicU64,
+    pub batches_xla: AtomicU64,
+    pub rows_scalar: AtomicU64,
+    pub rows_xla: AtomicU64,
+    pub flush_full: AtomicU64,
+    pub flush_deadline: AtomicU64,
+    pub flush_drain: AtomicU64,
+    latency_us: Mutex<Histogram>,
+    batch_sizes: Mutex<Histogram>,
+}
+
+/// Point-in-time copy for reporting.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub responses: u64,
+    pub batches_scalar: u64,
+    pub batches_xla: u64,
+    pub rows_scalar: u64,
+    pub rows_xla: u64,
+    pub flush_full: u64,
+    pub flush_deadline: u64,
+    pub flush_drain: u64,
+    pub latency_mean_us: f64,
+    pub latency_p50_us: f64,
+    pub latency_p99_us: f64,
+    pub mean_batch: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_latency_us(&self, us: f64) {
+        self.latency_us.lock().unwrap().record(us);
+    }
+
+    pub fn record_batch(&self, size: usize, xla: bool, reason: super::FlushReason) {
+        if xla {
+            self.batches_xla.fetch_add(1, Ordering::Relaxed);
+            self.rows_xla.fetch_add(size as u64, Ordering::Relaxed);
+        } else {
+            self.batches_scalar.fetch_add(1, Ordering::Relaxed);
+            self.rows_scalar.fetch_add(size as u64, Ordering::Relaxed);
+        }
+        match reason {
+            super::FlushReason::Full => self.flush_full.fetch_add(1, Ordering::Relaxed),
+            super::FlushReason::Deadline => self.flush_deadline.fetch_add(1, Ordering::Relaxed),
+            super::FlushReason::Drain => self.flush_drain.fetch_add(1, Ordering::Relaxed),
+        };
+        self.batch_sizes.lock().unwrap().record(size as f64);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let lat = self.latency_us.lock().unwrap();
+        let sizes = self.batch_sizes.lock().unwrap();
+        MetricsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            responses: self.responses.load(Ordering::Relaxed),
+            batches_scalar: self.batches_scalar.load(Ordering::Relaxed),
+            batches_xla: self.batches_xla.load(Ordering::Relaxed),
+            rows_scalar: self.rows_scalar.load(Ordering::Relaxed),
+            rows_xla: self.rows_xla.load(Ordering::Relaxed),
+            flush_full: self.flush_full.load(Ordering::Relaxed),
+            flush_deadline: self.flush_deadline.load(Ordering::Relaxed),
+            flush_drain: self.flush_drain.load(Ordering::Relaxed),
+            latency_mean_us: lat.mean(),
+            latency_p50_us: lat.quantile(0.5),
+            latency_p99_us: lat.quantile(0.99),
+            mean_batch: sizes.mean(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::FlushReason;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.requests.fetch_add(5, Ordering::Relaxed);
+        m.record_batch(3, false, FlushReason::Full);
+        m.record_batch(64, true, FlushReason::Deadline);
+        m.record_latency_us(100.0);
+        m.record_latency_us(300.0);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 5);
+        assert_eq!(s.batches_scalar, 1);
+        assert_eq!(s.batches_xla, 1);
+        assert_eq!(s.rows_scalar, 3);
+        assert_eq!(s.rows_xla, 64);
+        assert_eq!(s.flush_full, 1);
+        assert_eq!(s.flush_deadline, 1);
+        assert!((s.latency_mean_us - 200.0).abs() < 1e-9);
+        assert!((s.mean_batch - 33.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,31 @@
+//! L3 coordinator: the deployment layer of the InTreeger framework.
+//!
+//! The paper ships inference as a generated C file; a production
+//! deployment wraps that artifact in a serving runtime. This module is
+//! that runtime, shaped like a miniature model server (vllm-router
+//! style, scaled to tabular models):
+//!
+//! * [`router`] — a model registry mapping names to served models; each
+//!   model can be hot-swapped (retrain → re-register).
+//! * [`batcher`] — dynamic batching policy: requests accumulate until
+//!   `max_batch` or `max_wait` and are flushed as one batch.
+//! * [`server`] — the execution loop: single requests and small batches
+//!   go to the scalar integer engine (lowest latency — the paper's
+//!   generated-C equivalent); large batches go to the XLA/PJRT batched
+//!   engine (the AOT-compiled Pallas path; highest throughput). Both
+//!   produce bit-identical u32 accumulators, so routing is invisible to
+//!   clients.
+//! * [`metrics`] — counters + latency histograms per route.
+//!
+//! Everything is std-threads + channels (the build environment has no
+//! async runtime), which also keeps the hot path allocation-light.
+
+pub mod batcher;
+pub mod metrics;
+pub mod router;
+pub mod server;
+
+pub use batcher::{BatchPolicy, Batcher, FlushReason};
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use router::Router;
+pub use server::{InferenceServer, Request, Response, Route, ServerConfig};

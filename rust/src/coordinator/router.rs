@@ -1,0 +1,153 @@
+//! Model registry / request router: multiple named models served side by
+//! side, hot-swappable (the "end-to-end framework" face of the system —
+//! retrain on new data, re-register, clients never stop).
+
+use super::server::{InferenceServer, Response, ServerConfig};
+use crate::ir::Model;
+use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
+
+/// Thread-safe name → server mapping.
+#[derive(Default)]
+pub struct Router {
+    servers: RwLock<HashMap<String, Arc<InferenceServer>>>,
+}
+
+/// Routing error.
+#[derive(Debug, PartialEq)]
+pub enum RouteError {
+    UnknownModel(String),
+}
+
+impl std::fmt::Display for RouteError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RouteError::UnknownModel(name) => write!(f, "unknown model '{name}'"),
+        }
+    }
+}
+impl std::error::Error for RouteError {}
+
+impl Router {
+    pub fn new() -> Router {
+        Router::default()
+    }
+
+    /// Register (or replace) a model under a name. Replacement is atomic:
+    /// in-flight requests finish on the old server (it drains on drop of
+    /// the last Arc), new requests see the new one.
+    pub fn register(
+        &self,
+        name: &str,
+        model: &Model,
+        artifacts_dir: Option<std::path::PathBuf>,
+        config: ServerConfig,
+    ) {
+        let server = Arc::new(InferenceServer::start(model, artifacts_dir, config));
+        self.servers.write().unwrap().insert(name.to_string(), server);
+    }
+
+    /// Remove a model. Returns true if it existed.
+    pub fn unregister(&self, name: &str) -> bool {
+        self.servers.write().unwrap().remove(name).is_some()
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.servers.read().unwrap().keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Get a handle to a model's server.
+    pub fn server(&self, name: &str) -> Result<Arc<InferenceServer>, RouteError> {
+        self.servers
+            .read()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| RouteError::UnknownModel(name.to_string()))
+    }
+
+    /// Blocking inference against a named model.
+    pub fn infer(&self, name: &str, features: Vec<f32>) -> Result<Response, RouteError> {
+        Ok(self.server(name)?.infer(features))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::shuttle_like;
+    use crate::trees::{ForestParams, RandomForest};
+
+    fn model(seed: u64) -> (crate::data::Dataset, Model) {
+        let ds = shuttle_like(600, seed);
+        let m = RandomForest::train(
+            &ds,
+            &ForestParams { n_trees: 4, max_depth: 4, ..Default::default() },
+            seed,
+        );
+        (ds, m)
+    }
+
+    #[test]
+    fn register_route_unregister() {
+        let router = Router::new();
+        let (ds, m) = model(110);
+        router.register("shuttle", &m, None, ServerConfig::default());
+        assert_eq!(router.names(), vec!["shuttle".to_string()]);
+
+        let r = router.infer("shuttle", ds.row(0).to_vec()).unwrap();
+        assert_eq!(r.fixed.len(), ds.n_classes);
+
+        assert_eq!(
+            router.infer("nope", ds.row(0).to_vec()).unwrap_err(),
+            RouteError::UnknownModel("nope".into())
+        );
+
+        assert!(router.unregister("shuttle"));
+        assert!(!router.unregister("shuttle"));
+        assert!(router.infer("shuttle", ds.row(0).to_vec()).is_err());
+    }
+
+    #[test]
+    fn hot_swap_changes_serving_model() {
+        let router = Router::new();
+        let (ds, m1) = model(111);
+        let (_, m2) = model(112);
+        router.register("m", &m1, None, ServerConfig::default());
+        let before = router.infer("m", ds.row(0).to_vec()).unwrap();
+        router.register("m", &m2, None, ServerConfig::default());
+        let after = router.infer("m", ds.row(0).to_vec()).unwrap();
+        // Different forests: fixed-point vectors will differ for at least
+        // some rows; check over a few to avoid a coincidental collision.
+        let mut differs = before.fixed != after.fixed;
+        for i in 1..20 {
+            let a = router.infer("m", ds.row(i).to_vec()).unwrap();
+            let b = crate::inference::IntEngine::compile(&m2).predict_fixed(ds.row(i));
+            assert_eq!(a.fixed, b);
+            if !differs {
+                let old = crate::inference::IntEngine::compile(&m1).predict_fixed(ds.row(i));
+                differs = old != b;
+            }
+        }
+        assert!(differs, "models m1/m2 unexpectedly identical");
+    }
+
+    #[test]
+    fn multiple_models_servable() {
+        let router = Router::new();
+        let (ds1, m1) = model(113);
+        let esa = crate::data::esa_like(400, 114);
+        let m_esa = RandomForest::train(
+            &esa,
+            &ForestParams { n_trees: 3, max_depth: 4, ..Default::default() },
+            5,
+        );
+        router.register("shuttle", &m1, None, ServerConfig::default());
+        router.register("esa", &m_esa, None, ServerConfig::default());
+        assert_eq!(router.names().len(), 2);
+        assert_eq!(router.infer("shuttle", ds1.row(0).to_vec()).unwrap().fixed.len(), 7);
+        assert_eq!(router.infer("esa", esa.row(0).to_vec()).unwrap().fixed.len(), 2);
+    }
+}

@@ -1,0 +1,412 @@
+//! The inference server: dynamic batching over two execution backends.
+//!
+//! A worker thread owns both engines and drains a channel of requests
+//! through the [`Batcher`]. Flushed batches are routed by size:
+//! below `xla_threshold` → the scalar integer engine (per-row, lowest
+//! latency); at/above it → the AOT-compiled XLA/PJRT Pallas engine
+//! (amortized per-batch cost, highest throughput). Both backends emit
+//! bit-identical u32 fixed-point accumulators, so the route is an
+//! implementation detail (asserted by integration tests).
+
+use super::batcher::{BatchPolicy, Batcher, FlushReason};
+use super::metrics::Metrics;
+use crate::inference::IntEngine;
+use crate::ir::{argmax, Model};
+use crate::runtime::PjrtEngine;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// An inference request: one feature row.
+pub struct Request {
+    pub features: Vec<f32>,
+    tx: SyncSender<Response>,
+    t_arrival: Instant,
+}
+
+/// Which backend served a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Route {
+    Scalar,
+    Xla,
+}
+
+/// An inference response: the integer-only result.
+#[derive(Clone, Debug)]
+pub struct Response {
+    /// Fixed-point class accumulators (scale 2^32/n_trees).
+    pub fixed: Vec<u32>,
+    /// argmax class.
+    pub class: u32,
+    pub route: Route,
+    pub latency: Duration,
+}
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub policy: BatchPolicy,
+    /// Batches of at least this many rows go to the XLA engine.
+    pub xla_threshold: usize,
+    /// Channel capacity (backpressure bound).
+    pub queue_depth: usize,
+    /// Measure both backends at startup and disable the XLA route when
+    /// the scalar engine is faster at the full policy batch size. On a
+    /// single CPU core the padded batched artifact usually loses to the
+    /// scalar integer engine (see `cargo bench --bench serve_throughput`);
+    /// on a real accelerator it wins — this flag makes the router honest
+    /// either way.
+    pub auto_calibrate: bool,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            policy: BatchPolicy::default(),
+            xla_threshold: 16,
+            queue_depth: 1024,
+            auto_calibrate: false,
+        }
+    }
+}
+
+enum Msg {
+    Infer(Request),
+    Shutdown,
+}
+
+/// Handle to a running inference server (clone freely).
+pub struct InferenceServer {
+    tx: SyncSender<Msg>,
+    metrics: Arc<Metrics>,
+    n_features: usize,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl InferenceServer {
+    /// Start a server for `model`. `artifacts_dir` is optional: without
+    /// it (or when no tier fits) every batch takes the scalar route.
+    ///
+    /// The PJRT engine is constructed *inside* the worker thread: the
+    /// xla crate's handles are not `Send`, so the whole XLA object graph
+    /// must live and die on the thread that uses it.
+    pub fn start(
+        model: &Model,
+        artifacts_dir: Option<std::path::PathBuf>,
+        config: ServerConfig,
+    ) -> InferenceServer {
+        let scalar = IntEngine::compile(model);
+        let metrics = Arc::new(Metrics::new());
+        let (tx, rx) = sync_channel::<Msg>(config.queue_depth);
+        let m2 = Arc::clone(&metrics);
+        let n_features = model.n_features;
+        let model = model.clone();
+        let worker = std::thread::Builder::new()
+            .name("intreeger-server".into())
+            .spawn(move || {
+                let xla: Option<PjrtEngine> = artifacts_dir.and_then(|dir| {
+                    if !crate::runtime::artifacts_available(&dir) {
+                        return None;
+                    }
+                    // Ask for a tier that can hold a full policy batch, so
+                    // the XLA route is actually usable at max batch size.
+                    match crate::runtime::engine_for_model(&dir, &model, config.policy.max_batch) {
+                        Ok(e) => Some(e),
+                        Err(err) => {
+                            eprintln!("intreeger-server: XLA engine unavailable ({err}); scalar only");
+                            None
+                        }
+                    }
+                });
+                let xla = if config.auto_calibrate {
+                    calibrate(xla, &scalar, &model, config.policy.max_batch)
+                } else {
+                    xla
+                };
+                worker_loop(rx, scalar, xla, config, m2, n_features)
+            })
+            .expect("spawn server worker");
+        InferenceServer { tx, metrics, n_features, worker: Some(worker) }
+    }
+
+    /// Asynchronous submit: returns a receiver for the response.
+    pub fn submit(&self, features: Vec<f32>) -> Receiver<Response> {
+        assert_eq!(features.len(), self.n_features, "wrong feature count");
+        let (tx, rx) = sync_channel(1);
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        let req = Request { features, tx, t_arrival: Instant::now() };
+        self.tx.send(Msg::Infer(req)).expect("server thread gone");
+        rx
+    }
+
+    /// Blocking inference.
+    pub fn infer(&self, features: Vec<f32>) -> Response {
+        self.submit(features).recv().expect("server dropped response")
+    }
+
+    /// Blocking batch inference (submits all, then waits).
+    pub fn infer_many(&self, rows: Vec<Vec<f32>>) -> Vec<Response> {
+        let rxs: Vec<_> = rows.into_iter().map(|r| self.submit(r)).collect();
+        rxs.into_iter().map(|rx| rx.recv().expect("response")).collect()
+    }
+
+    pub fn metrics(&self) -> super::MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+}
+
+impl Drop for InferenceServer {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Startup micro-benchmark: keep the XLA engine only if it beats the
+/// scalar engine per row at the policy's full batch size.
+fn calibrate(
+    xla: Option<PjrtEngine>,
+    scalar: &IntEngine,
+    model: &Model,
+    batch: usize,
+) -> Option<PjrtEngine> {
+    let engine = xla?;
+    let b = batch.clamp(1, engine.max_batch());
+    // Synthetic probe rows: values spread across the training range are
+    // unnecessary — timing is dominated by batch mechanics, not path
+    // shape — but vary them a little to avoid one-leaf degenerate walks.
+    let rows: Vec<f32> = (0..b * model.n_features).map(|i| (i % 97) as f32 - 48.0).collect();
+    let time_of = |f: &mut dyn FnMut()| {
+        f(); // warmup
+        let t0 = Instant::now();
+        for _ in 0..3 {
+            f();
+        }
+        t0.elapsed().as_secs_f64() / 3.0
+    };
+    let t_xla = time_of(&mut || {
+        let _ = engine.execute(&rows, model.n_features);
+    });
+    let t_scalar = time_of(&mut || {
+        for r in rows.chunks(model.n_features) {
+            std::hint::black_box(scalar.predict_fixed(r));
+        }
+    });
+    if t_xla <= t_scalar {
+        Some(engine)
+    } else {
+        eprintln!(
+            "intreeger-server: auto-calibration disabled the XLA route \
+             ({:.0} us vs scalar {:.0} us per {b}-batch on this host)",
+            t_xla * 1e6,
+            t_scalar * 1e6
+        );
+        None
+    }
+}
+
+fn worker_loop(
+    rx: Receiver<Msg>,
+    scalar: IntEngine,
+    xla: Option<PjrtEngine>,
+    config: ServerConfig,
+    metrics: Arc<Metrics>,
+    n_features: usize,
+) {
+    let mut batcher: Batcher<Request> = Batcher::new(config.policy);
+    loop {
+        // Wait bounded by the batch deadline (if any).
+        let timeout = batcher
+            .time_to_deadline(Instant::now())
+            .unwrap_or(Duration::from_millis(50));
+        match rx.recv_timeout(timeout) {
+            Ok(Msg::Infer(req)) => {
+                if let Some((batch, why)) = batcher.push(req) {
+                    serve_batch(batch, why, &scalar, &xla, &config, &metrics, n_features);
+                }
+            }
+            Ok(Msg::Shutdown) => {
+                if let Some((batch, why)) = batcher.drain() {
+                    serve_batch(batch, why, &scalar, &xla, &config, &metrics, n_features);
+                }
+                return;
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                if let Some((batch, why)) = batcher.poll() {
+                    serve_batch(batch, why, &scalar, &xla, &config, &metrics, n_features);
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                if let Some((batch, why)) = batcher.drain() {
+                    serve_batch(batch, why, &scalar, &xla, &config, &metrics, n_features);
+                }
+                return;
+            }
+        }
+    }
+}
+
+fn serve_batch(
+    batch: Vec<Request>,
+    why: FlushReason,
+    scalar: &IntEngine,
+    xla: &Option<PjrtEngine>,
+    config: &ServerConfig,
+    metrics: &Arc<Metrics>,
+    n_features: usize,
+) {
+    let use_xla = match xla {
+        Some(engine) => batch.len() >= config.xla_threshold && batch.len() <= engine.max_batch(),
+        None => false,
+    };
+    metrics.record_batch(batch.len(), use_xla, why);
+
+    let results: Vec<Vec<u32>> = if use_xla {
+        let engine = xla.as_ref().unwrap();
+        let mut rows = Vec::with_capacity(batch.len() * n_features);
+        for r in &batch {
+            rows.extend_from_slice(&r.features);
+        }
+        match engine.execute(&rows, n_features) {
+            Ok(out) => out,
+            // Fall back to the scalar engine on runtime errors — requests
+            // must never be dropped.
+            Err(_) => batch.iter().map(|r| scalar.predict_fixed(&r.features)).collect(),
+        }
+    } else {
+        batch.iter().map(|r| scalar.predict_fixed(&r.features)).collect()
+    };
+
+    let route = if use_xla { Route::Xla } else { Route::Scalar };
+    for (req, fixed) in batch.into_iter().zip(results) {
+        let latency = req.t_arrival.elapsed();
+        metrics.record_latency_us(latency.as_secs_f64() * 1e6);
+        metrics.responses.fetch_add(1, Ordering::Relaxed);
+        let class = argmax(&fixed);
+        // Receiver may have gone away; that's fine.
+        let _ = req.tx.send(Response { fixed, class, route, latency });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::shuttle_like;
+    use crate::inference::Engine;
+    use crate::trees::{ForestParams, RandomForest};
+
+    fn model() -> (crate::data::Dataset, Model) {
+        let ds = shuttle_like(1200, 100);
+        let m = RandomForest::train(
+            &ds,
+            &ForestParams { n_trees: 8, max_depth: 5, ..Default::default() },
+            9,
+        );
+        (ds, m)
+    }
+
+    #[test]
+    fn scalar_only_server_answers_correctly() {
+        let (ds, m) = model();
+        let server = InferenceServer::start(&m, None, ServerConfig::default());
+        let oracle = crate::inference::IntEngine::compile(&m);
+        for i in 0..50 {
+            let r = server.infer(ds.row(i).to_vec());
+            assert_eq!(r.fixed, oracle.predict_fixed(ds.row(i)));
+            assert_eq!(r.class, oracle.predict(ds.row(i)));
+            assert_eq!(r.route, Route::Scalar);
+        }
+        let snap = server.metrics();
+        assert_eq!(snap.requests, 50);
+        assert_eq!(snap.responses, 50);
+        assert_eq!(snap.rows_scalar, 50);
+        assert_eq!(snap.rows_xla, 0);
+    }
+
+    #[test]
+    fn concurrent_submissions_all_answered() {
+        let (ds, m) = model();
+        let server = std::sync::Arc::new(InferenceServer::start(
+            &m,
+            None,
+            ServerConfig {
+                policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(100) },
+                ..Default::default()
+            },
+        ));
+        let mut rxs = Vec::new();
+        for i in 0..200 {
+            rxs.push(server.submit(ds.row(i % ds.n_rows()).to_vec()));
+        }
+        for rx in rxs {
+            let r = rx.recv_timeout(Duration::from_secs(5)).expect("response");
+            assert_eq!(r.fixed.len(), ds.n_classes);
+        }
+        assert_eq!(server.metrics().responses, 200);
+    }
+
+    #[test]
+    fn xla_route_used_for_large_batches_and_matches_scalar() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !crate::runtime::artifacts_available(&dir) {
+            eprintln!("artifacts not built; skipping");
+            return;
+        }
+        let (ds, m) = model();
+        let oracle = crate::inference::IntEngine::compile(&m);
+        let server = InferenceServer::start(
+            &m,
+            Some(dir),
+            ServerConfig {
+                policy: BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(5) },
+                xla_threshold: 8,
+                ..Default::default()
+            },
+        );
+        let rows: Vec<Vec<f32>> = (0..64).map(|i| ds.row(i).to_vec()).collect();
+        let responses = server.infer_many(rows);
+        let mut xla_routed = 0;
+        for (i, r) in responses.iter().enumerate() {
+            assert_eq!(r.fixed, oracle.predict_fixed(ds.row(i)), "row {i} parity");
+            if r.route == Route::Xla {
+                xla_routed += 1;
+            }
+        }
+        assert!(xla_routed > 0, "no request took the XLA route");
+        assert!(server.metrics().rows_xla > 0);
+    }
+
+    #[test]
+    fn auto_calibrate_prefers_faster_backend() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !crate::runtime::artifacts_available(&dir) {
+            eprintln!("artifacts not built; skipping");
+            return;
+        }
+        let (ds, m) = model();
+        let server = InferenceServer::start(
+            &m,
+            Some(dir),
+            ServerConfig { auto_calibrate: true, ..Default::default() },
+        );
+        // Whatever the calibration decided, requests must be answered
+        // correctly (on this 1-core host the scalar route wins).
+        let oracle = crate::inference::IntEngine::compile(&m);
+        let rows: Vec<Vec<f32>> = (0..64).map(|i| ds.row(i).to_vec()).collect();
+        for (i, r) in server.infer_many(rows).iter().enumerate() {
+            assert_eq!(r.fixed, oracle.predict_fixed(ds.row(i)));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "wrong feature count")]
+    fn rejects_wrong_arity() {
+        let (_, m) = model();
+        let server = InferenceServer::start(&m, None, ServerConfig::default());
+        server.infer(vec![1.0, 2.0]);
+    }
+}

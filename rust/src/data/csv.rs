@@ -1,0 +1,202 @@
+//! Minimal CSV I/O for datasets — the entry point of the end-to-end
+//! pipeline ("takes a training dataset as input", paper §I). The last
+//! column is the class label; all other columns are numeric features.
+//! No external dependencies: the generated models must stay freestanding
+//! and so does the framework.
+
+use super::Dataset;
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+/// Errors from CSV parsing.
+#[derive(Debug)]
+pub enum CsvError {
+    Io(std::io::Error),
+    Parse { line: usize, msg: String },
+    Shape(String),
+}
+
+impl std::fmt::Display for CsvError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CsvError::Io(e) => write!(f, "io error: {e}"),
+            CsvError::Parse { line, msg } => write!(f, "parse error at line {line}: {msg}"),
+            CsvError::Shape(msg) => write!(f, "shape error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for CsvError {}
+
+impl From<std::io::Error> for CsvError {
+    fn from(e: std::io::Error) -> Self {
+        CsvError::Io(e)
+    }
+}
+
+/// Parse a dataset from CSV text. `has_header` skips the first line.
+/// Labels must be non-negative integers in the last column; `n_classes`
+/// is inferred as `max(label) + 1`.
+pub fn parse(text: &str, has_header: bool) -> Result<Dataset, CsvError> {
+    let mut features = Vec::new();
+    let mut labels: Vec<u32> = Vec::new();
+    let mut n_features: Option<usize> = None;
+
+    for (lineno, line) in text.lines().enumerate() {
+        if lineno == 0 && has_header {
+            continue;
+        }
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let cols: Vec<&str> = line.split(',').map(str::trim).collect();
+        if cols.len() < 2 {
+            return Err(CsvError::Parse {
+                line: lineno + 1,
+                msg: "need at least one feature and a label".into(),
+            });
+        }
+        let nf = cols.len() - 1;
+        match n_features {
+            None => n_features = Some(nf),
+            Some(expect) if expect != nf => {
+                return Err(CsvError::Shape(format!(
+                    "row {} has {} features, expected {}",
+                    lineno + 1,
+                    nf,
+                    expect
+                )))
+            }
+            _ => {}
+        }
+        for c in &cols[..nf] {
+            let v = c.parse::<f32>().map_err(|e| CsvError::Parse {
+                line: lineno + 1,
+                msg: format!("bad feature '{c}': {e}"),
+            })?;
+            if !v.is_finite() {
+                return Err(CsvError::Parse {
+                    line: lineno + 1,
+                    msg: format!("non-finite feature '{c}' (NaN/inf rejected; see Dataset::new)"),
+                });
+            }
+            features.push(v);
+        }
+        let raw_label = cols[nf].parse::<f64>().map_err(|e| CsvError::Parse {
+            line: lineno + 1,
+            msg: format!("bad label '{}': {e}", cols[nf]),
+        })?;
+        if raw_label < 0.0 || raw_label.fract() != 0.0 {
+            return Err(CsvError::Parse {
+                line: lineno + 1,
+                msg: format!("label must be a non-negative integer, got {raw_label}"),
+            });
+        }
+        labels.push(raw_label as u32);
+    }
+
+    let n_features = n_features.ok_or_else(|| CsvError::Shape("empty csv".into()))?;
+    let n_classes = labels.iter().copied().max().unwrap_or(0) as usize + 1;
+    Ok(Dataset::new(features, labels, n_features, n_classes))
+}
+
+/// Read a dataset from a CSV file.
+pub fn read_file(path: &Path, has_header: bool) -> Result<Dataset, CsvError> {
+    let file = std::fs::File::open(path)?;
+    let mut text = String::new();
+    for line in std::io::BufReader::new(file).lines() {
+        text.push_str(&line?);
+        text.push('\n');
+    }
+    parse(&text, has_header)
+}
+
+/// Write a dataset to a CSV file (features..., label).
+pub fn write_file(path: &Path, ds: &Dataset) -> Result<(), CsvError> {
+    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    for i in 0..ds.n_rows() {
+        for v in ds.row(i) {
+            write!(w, "{v},")?;
+        }
+        writeln!(w, "{}", ds.labels[i])?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basic() {
+        let d = parse("1.0,2.0,0\n3.5,-4.0,1\n", false).unwrap();
+        assert_eq!(d.n_rows(), 2);
+        assert_eq!(d.n_features, 2);
+        assert_eq!(d.n_classes, 2);
+        assert_eq!(d.row(1), &[3.5, -4.0]);
+    }
+
+    #[test]
+    fn parse_header_and_blank_lines() {
+        let d = parse("a,b,label\n1,2,0\n\n3,4,1\n", true).unwrap();
+        assert_eq!(d.n_rows(), 2);
+    }
+
+    #[test]
+    fn parse_rejects_ragged_rows() {
+        assert!(matches!(parse("1,2,0\n1,0\n", false), Err(CsvError::Shape(_))));
+    }
+
+    #[test]
+    fn parse_rejects_bad_label() {
+        assert!(parse("1,2,0.5\n", false).is_err());
+        assert!(parse("1,2,-1\n", false).is_err());
+        assert!(parse("1,2,x\n", false).is_err());
+    }
+
+    #[test]
+    fn parse_rejects_non_finite() {
+        assert!(parse("nan,2,0\n", false).is_err());
+        assert!(parse("1,inf,0\n", false).is_err());
+        assert!(parse("1,-inf,0\n", false).is_err());
+    }
+
+    /// Fuzz: arbitrary byte soup must never panic — only parse or Err.
+    #[test]
+    fn prop_parser_never_panics() {
+        crate::util::check::check(
+            "csv_fuzz",
+            |r| {
+                let n = r.below(120);
+                (0..n)
+                    .map(|_| b" ,.\n0123456789eE+-naif\t"[r.below(22)] as char)
+                    .collect::<String>()
+            },
+            |text| {
+                let _ = parse(text, false);
+                let _ = parse(text, true);
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn parse_rejects_empty() {
+        assert!(parse("", false).is_err());
+    }
+
+    #[test]
+    fn roundtrip_file() {
+        let d = crate::data::shuttle_like(50, 4);
+        let dir = std::env::temp_dir().join("intreeger_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("ds.csv");
+        write_file(&p, &d).unwrap();
+        let d2 = read_file(&p, false).unwrap();
+        assert_eq!(d.labels, d2.labels);
+        assert_eq!(d.n_features, d2.n_features);
+        // floats survive the default Display roundtrip exactly
+        assert_eq!(d.features, d2.features);
+    }
+}

@@ -1,0 +1,159 @@
+//! Dataset substrate: in-memory tabular datasets, train/test splitting,
+//! CSV I/O and deterministic synthetic generators shaped like the paper's
+//! two evaluation datasets (UCI Statlog *Shuttle* and the *ESA Anomaly*
+//! dataset). The real datasets are not redistributable / not available in
+//! this environment, so [`synth`] builds statistical stand-ins with the
+//! same shape, class cardinality and imbalance — see DESIGN.md
+//! §Substitutions.
+
+pub mod csv;
+pub mod synth;
+
+pub use synth::{esa_like, shuttle_like, SynthSpec};
+
+use crate::util::Rng;
+
+/// A dense, row-major tabular classification dataset.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Dataset {
+    /// Row-major feature matrix, `n_rows * n_features` values.
+    pub features: Vec<f32>,
+    /// Class label per row, in `[0, n_classes)`.
+    pub labels: Vec<u32>,
+    pub n_features: usize,
+    pub n_classes: usize,
+}
+
+impl Dataset {
+    /// Build a dataset, validating shape invariants.
+    ///
+    /// Features must be finite: NaN has no place in the FlInt ordered
+    /// domain (a negative-NaN bit pattern would order *below* -inf while
+    /// IEEE comparison semantics route NaN to the right/else branch —
+    /// the float and integer variants would diverge). Rejecting NaN/inf
+    /// at the boundary keeps the hot loops guard-free.
+    pub fn new(features: Vec<f32>, labels: Vec<u32>, n_features: usize, n_classes: usize) -> Self {
+        assert!(n_features > 0, "n_features must be positive");
+        assert_eq!(
+            features.len(),
+            labels.len() * n_features,
+            "features length must equal n_rows * n_features"
+        );
+        assert!(
+            labels.iter().all(|&l| (l as usize) < n_classes),
+            "labels must be < n_classes"
+        );
+        assert!(features.iter().all(|v| v.is_finite()), "features must be finite (no NaN/inf)");
+        Dataset { features, labels, n_features, n_classes }
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.labels.len()
+    }
+
+    /// Borrow row `i` as a feature slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.features[i * self.n_features..(i + 1) * self.n_features]
+    }
+
+    /// Class frequency histogram.
+    pub fn class_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.n_classes];
+        for &l in &self.labels {
+            counts[l as usize] += 1;
+        }
+        counts
+    }
+
+    /// Select a subset of rows by index (indices may repeat — used for
+    /// bootstrap sampling).
+    pub fn select(&self, idx: &[usize]) -> Dataset {
+        let mut features = Vec::with_capacity(idx.len() * self.n_features);
+        let mut labels = Vec::with_capacity(idx.len());
+        for &i in idx {
+            features.extend_from_slice(self.row(i));
+            labels.push(self.labels[i]);
+        }
+        Dataset { features, labels, n_features: self.n_features, n_classes: self.n_classes }
+    }
+
+    /// Randomized train/test split; `test_frac` of rows go to the test set.
+    /// The paper uses a 75/25 split (§IV-B).
+    pub fn train_test_split(&self, test_frac: f64, rng: &mut Rng) -> (Dataset, Dataset) {
+        let n = self.n_rows();
+        let mut idx: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut idx);
+        let n_test = ((n as f64) * test_frac).round() as usize;
+        let (test_idx, train_idx) = idx.split_at(n_test.min(n));
+        (self.select(train_idx), self.select(test_idx))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        Dataset::new(
+            vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0],
+            vec![0, 1, 0, 1],
+            2,
+            2,
+        )
+    }
+
+    #[test]
+    fn shape_accessors() {
+        let d = toy();
+        assert_eq!(d.n_rows(), 4);
+        assert_eq!(d.row(1), &[2.0, 3.0]);
+        assert_eq!(d.class_counts(), vec![2, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "features length")]
+    fn bad_shape_panics() {
+        Dataset::new(vec![0.0; 7], vec![0, 1, 0, 1], 2, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "features must be finite")]
+    fn nan_features_panic() {
+        Dataset::new(vec![0.0, f32::NAN, 2.0, 3.0], vec![0, 1], 2, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "labels must be")]
+    fn bad_label_panics() {
+        Dataset::new(vec![0.0; 8], vec![0, 1, 0, 5], 2, 2);
+    }
+
+    #[test]
+    fn select_with_repeats() {
+        let d = toy();
+        let s = d.select(&[0, 0, 3]);
+        assert_eq!(s.n_rows(), 3);
+        assert_eq!(s.row(0), s.row(1));
+        assert_eq!(s.labels, vec![0, 0, 1]);
+    }
+
+    #[test]
+    fn split_partitions_rows() {
+        let d = shuttle_like(1000, 42);
+        let mut rng = Rng::new(7);
+        let (train, test) = d.train_test_split(0.25, &mut rng);
+        assert_eq!(train.n_rows() + test.n_rows(), 1000);
+        assert_eq!(test.n_rows(), 250);
+        assert_eq!(train.n_features, d.n_features);
+    }
+
+    #[test]
+    fn split_deterministic() {
+        let d = shuttle_like(200, 1);
+        let (a1, b1) = d.train_test_split(0.25, &mut Rng::new(3));
+        let (a2, b2) = d.train_test_split(0.25, &mut Rng::new(3));
+        assert_eq!(a1, a2);
+        assert_eq!(b1, b2);
+    }
+}

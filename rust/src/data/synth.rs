@@ -1,0 +1,246 @@
+//! Deterministic synthetic stand-ins for the paper's evaluation datasets.
+//!
+//! The paper evaluates on two datasets we cannot redistribute here:
+//!
+//! * **Statlog (Shuttle)** — 58 000 instances, 7 numeric features,
+//!    7 classes, heavily imbalanced (~80 % of rows are class 1).
+//! * **ESA Anomaly Dataset** (first 3 months) — 262 081 instances,
+//!   87 telemetry channels, binarized to 2 classes (anomaly ≈ rare).
+//!
+//! [`shuttle_like`] and [`esa_like`] generate datasets with the same shape,
+//! class cardinality and imbalance. Labels are produced by a random
+//! axis-aligned *latent decision tree* (a "teacher") plus label noise, so
+//! that tree learners fit the data well but not perfectly — this yields
+//! realistic leaf-probability distributions, which is what the paper's
+//! probability-to-integer conversion (§III-A) must preserve.
+
+use super::Dataset;
+use crate::util::Rng;
+
+/// Parameters for the synthetic generator.
+#[derive(Clone, Debug)]
+pub struct SynthSpec {
+    pub n_rows: usize,
+    pub n_features: usize,
+    pub n_classes: usize,
+    /// Depth of the latent teacher tree that assigns class structure.
+    pub teacher_depth: usize,
+    /// Probability that a row's label is resampled from the class prior
+    /// (label noise — keeps leaf probabilities away from {0,1}).
+    pub label_noise: f64,
+    /// Per-class prior used for imbalance and for noisy labels.
+    pub class_prior: Vec<f64>,
+    /// Feature value range (uniform base distribution).
+    pub range: (f32, f32),
+}
+
+impl SynthSpec {
+    /// Spec matching the Shuttle dataset's shape: 7 features, 7 classes,
+    /// ~80 % mass on one class.
+    pub fn shuttle(n_rows: usize) -> Self {
+        // Approximate Statlog (Shuttle) class distribution: class 0 ("Rad
+        // Flow") dominates.
+        let prior = vec![0.786, 0.0008, 0.003, 0.154, 0.0556, 0.0003, 0.0003];
+        SynthSpec {
+            n_rows,
+            n_features: 7,
+            n_classes: 7,
+            // Low label noise: the real Shuttle data is largely separable
+            // (classifiers reach >99.9 %), which makes depth-limited trees
+            // prune early — important for the §IV-E footprint numbers.
+            teacher_depth: 6,
+            label_noise: 0.02,
+            class_prior: prior,
+            range: (-120.0, 160.0),
+        }
+    }
+
+    /// Spec matching the binarized ESA anomaly dataset: 87 channels,
+    /// 2 classes with a rare positive (~5 %).
+    pub fn esa(n_rows: usize) -> Self {
+        SynthSpec {
+            n_rows,
+            n_features: 87,
+            n_classes: 2,
+            teacher_depth: 8,
+            label_noise: 0.05,
+            class_prior: vec![0.95, 0.05],
+            range: (-4.0, 4.0),
+        }
+    }
+}
+
+/// A node of the latent teacher tree.
+enum TeacherNode {
+    Branch { feature: usize, threshold: f32, left: usize, right: usize },
+    /// `noisy` marks an ambiguous region: only rows landing here get
+    /// label noise. Keeping most regions exactly separable matches real
+    /// tabular data (Shuttle is >99.9 % learnable) and lets depth-limited
+    /// trees reach pure nodes and prune — which drives the §IV-E
+    /// footprint numbers.
+    Leaf { class: u32, noisy: bool },
+}
+
+struct Teacher {
+    nodes: Vec<TeacherNode>,
+}
+
+impl Teacher {
+    /// Grow a random full tree of the given depth. Leaf classes are drawn
+    /// from the prior so the marginal class distribution approximates it.
+    fn grow(spec: &SynthSpec, rng: &mut Rng) -> Teacher {
+        let mut nodes = Vec::new();
+        Self::grow_rec(spec, rng, &mut nodes, spec.teacher_depth);
+        Teacher { nodes }
+    }
+
+    fn grow_rec(spec: &SynthSpec, rng: &mut Rng, nodes: &mut Vec<TeacherNode>, depth: usize) -> usize {
+        let id = nodes.len();
+        if depth == 0 {
+            let class = sample_prior(&spec.class_prior, rng);
+            // ~30 % of regions are ambiguous; the rest are separable.
+            let noisy = rng.chance(0.3);
+            nodes.push(TeacherNode::Leaf { class, noisy });
+            return id;
+        }
+        nodes.push(TeacherNode::Leaf { class: 0, noisy: false }); // placeholder
+        let feature = rng.below(spec.n_features);
+        // Thresholds away from the extremes so both sides get mass.
+        let t = rng.uniform_in(
+            spec.range.0 + 0.2 * (spec.range.1 - spec.range.0),
+            spec.range.1 - 0.2 * (spec.range.1 - spec.range.0),
+        );
+        let left = Self::grow_rec(spec, rng, nodes, depth - 1);
+        let right = Self::grow_rec(spec, rng, nodes, depth - 1);
+        nodes[id] = TeacherNode::Branch { feature, threshold: t, left, right };
+        id
+    }
+
+    fn classify(&self, row: &[f32]) -> (u32, bool) {
+        let mut i = 0usize;
+        loop {
+            match &self.nodes[i] {
+                TeacherNode::Branch { feature, threshold, left, right } => {
+                    i = if row[*feature] <= *threshold { *left } else { *right };
+                }
+                TeacherNode::Leaf { class, noisy } => return (*class, *noisy),
+            }
+        }
+    }
+}
+
+fn sample_prior(prior: &[f64], rng: &mut Rng) -> u32 {
+    let u = rng.uniform();
+    let mut acc = 0.0;
+    for (c, &p) in prior.iter().enumerate() {
+        acc += p;
+        if u < acc {
+            return c as u32;
+        }
+    }
+    (prior.len() - 1) as u32
+}
+
+/// Generate a dataset from a spec. Deterministic in `seed`.
+pub fn generate(spec: &SynthSpec, seed: u64) -> Dataset {
+    assert!((spec.class_prior.iter().sum::<f64>() - 1.0).abs() < 1e-6, "prior must sum to 1");
+    assert_eq!(spec.class_prior.len(), spec.n_classes);
+    let mut rng = Rng::new(seed);
+    let teacher = Teacher::grow(spec, &mut rng);
+
+    let mut features = Vec::with_capacity(spec.n_rows * spec.n_features);
+    let mut labels = Vec::with_capacity(spec.n_rows);
+    for _ in 0..spec.n_rows {
+        let base = features.len();
+        for _ in 0..spec.n_features {
+            // Mixture of uniform base + a gaussian cluster component so
+            // features have non-trivial marginals (like real telemetry).
+            let v = if rng.chance(0.7) {
+                rng.uniform_in(spec.range.0, spec.range.1)
+            } else {
+                let mid = 0.5 * (spec.range.0 + spec.range.1);
+                let std = 0.15 * (spec.range.1 - spec.range.0);
+                rng.gauss_f32(mid, std)
+            };
+            features.push(v);
+        }
+        let row = &features[base..];
+        let (mut label, noisy_region) = teacher.classify(row);
+        // Noise is concentrated in ambiguous regions (scaled up 3x there
+        // so the dataset-wide noise rate stays ~label_noise).
+        if noisy_region && rng.chance(spec.label_noise * 3.0) {
+            label = sample_prior(&spec.class_prior, &mut rng);
+        }
+        labels.push(label);
+    }
+    Dataset::new(features, labels, spec.n_features, spec.n_classes)
+}
+
+/// Shuttle-shaped dataset (7 features, 7 classes, imbalanced). The paper's
+/// full size is 58 000 rows; pass that for the faithful shape or something
+/// smaller for quick tests.
+pub fn shuttle_like(n_rows: usize, seed: u64) -> Dataset {
+    generate(&SynthSpec::shuttle(n_rows), seed)
+}
+
+/// ESA-anomaly-shaped dataset (87 features, 2 classes, rare positive).
+/// The paper uses 262 081 rows; benchmarks default to a scaled subset.
+pub fn esa_like(n_rows: usize, seed: u64) -> Dataset {
+    generate(&SynthSpec::esa(n_rows), seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shuttle_shape() {
+        let d = shuttle_like(2000, 0);
+        assert_eq!(d.n_rows(), 2000);
+        assert_eq!(d.n_features, 7);
+        assert_eq!(d.n_classes, 7);
+    }
+
+    #[test]
+    fn esa_shape() {
+        let d = esa_like(1000, 0);
+        assert_eq!(d.n_features, 87);
+        assert_eq!(d.n_classes, 2);
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        assert_eq!(shuttle_like(500, 9), shuttle_like(500, 9));
+        assert_ne!(shuttle_like(500, 9), shuttle_like(500, 10));
+    }
+
+    #[test]
+    fn esa_positive_class_is_rare() {
+        let d = esa_like(20_000, 3);
+        let counts = d.class_counts();
+        let pos_frac = counts[1] as f64 / d.n_rows() as f64;
+        assert!(pos_frac > 0.01 && pos_frac < 0.25, "pos_frac = {pos_frac}");
+    }
+
+    #[test]
+    fn shuttle_majority_class_dominates() {
+        let d = shuttle_like(20_000, 3);
+        let counts = d.class_counts();
+        let max_frac = *counts.iter().max().unwrap() as f64 / d.n_rows() as f64;
+        assert!(max_frac > 0.4, "max class frac = {max_frac}");
+        // More than one class must actually occur.
+        assert!(counts.iter().filter(|&&c| c > 0).count() >= 3);
+    }
+
+    #[test]
+    fn labels_are_learnable() {
+        // A depth-limited latent tree + noise means labels correlate with
+        // features: the same feature vector classified by the teacher equals
+        // the label for most rows. Implicitly verified by the trees module's
+        // accuracy tests; here we just sanity-check noise isn't total.
+        let d = shuttle_like(5000, 8);
+        // With 8% label noise the majority class should not be 100%.
+        let counts = d.class_counts();
+        assert!(*counts.iter().max().unwrap() < d.n_rows());
+    }
+}

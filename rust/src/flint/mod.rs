@@ -1,0 +1,223 @@
+//! FlInt: floating-point comparisons on the integer ALU (§II-D).
+//!
+//! Hakert et al. observed that IEEE-754 floats can be compared with
+//! integer instructions after reinterpreting their bit patterns. For
+//! non-negative floats the raw bits are already monotone; to cover the
+//! whole finite range we use the standard *order-preserving* map
+//!
+//! ```text
+//! ordered(x) = bits(x) ^ 0x8000_0000          if x >= +0.0
+//!            = !bits(x)                        if x <  -0.0
+//! ```
+//!
+//! which is a strictly monotone bijection from finite floats (with
+//! -0.0 canonicalized to +0.0) to `u32`, so
+//! `x <= t  ⇔  ordered(x) <= ordered(t)` as unsigned integers.
+//!
+//! The generated C (see [`crate::codegen`]) applies `ordered()` to each
+//! feature once per inference (a shift/xor pair — integer ops only) and
+//! embeds thresholds pre-transformed at code-generation time, exactly as
+//! the paper embeds its reinterpreted split values as immediates
+//! (Listing 2). When every training-set feature is non-negative the
+//! transform degenerates to the raw-bits comparison the paper's listings
+//! show (`(int)(0x42af0000)`), and the code generator emits that cheaper
+//! form — see [`SplitEncoding`].
+
+/// Canonicalize -0.0 to +0.0 (IEEE: they compare equal, but their bit
+/// patterns do not — the map must send them to the same integer).
+#[inline]
+pub fn canon_zero(x: f32) -> f32 {
+    if x == 0.0 {
+        0.0
+    } else {
+        x
+    }
+}
+
+/// Order-preserving map from finite `f32` to `u32`:
+/// `a <= b  ⇔  ordered_u32(a) <= ordered_u32(b)`.
+///
+/// NaN inputs are not ordered by IEEE; this map sends them above +inf
+/// (sign=0) or below -inf (sign=1). The IR forbids NaN thresholds
+/// ([`crate::ir::IrError::NonFiniteThreshold`]), and NaN features take the
+/// `else`/right branch in generated code (documented model behaviour).
+///
+/// Branchless (§Perf): `x + 0.0` canonicalizes -0.0 to +0.0 (IEEE
+/// addition; not foldable away precisely because of that property), and
+/// the sign is broadcast with an arithmetic shift instead of a branch.
+#[inline]
+pub fn ordered_u32(x: f32) -> u32 {
+    let b = (x + 0.0).to_bits();
+    b ^ (((b as i32 >> 31) as u32) | 0x8000_0000)
+}
+
+/// Inverse of [`ordered_u32`] (for debugging / tests).
+#[inline]
+pub fn ordered_u32_inv(v: u32) -> f32 {
+    if v & 0x8000_0000 != 0 {
+        f32::from_bits(v ^ 0x8000_0000)
+    } else {
+        f32::from_bits(!v)
+    }
+}
+
+/// Signed-integer variant used when all values are known non-negative:
+/// for `x, t >= +0.0`, `x <= t ⇔ bits(x) as i32 <= bits(t) as i32`.
+/// This is the form in the paper's Listing 2 — raw bits as an `int`
+/// immediate — and saves the two transform instructions per feature.
+#[inline]
+pub fn nonneg_bits_i32(x: f32) -> i32 {
+    debug_assert!(x.is_sign_positive() || x == 0.0);
+    canon_zero(x).to_bits() as i32
+}
+
+/// How the code generator encodes a split comparison.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SplitEncoding {
+    /// All features and thresholds non-negative: compare raw bits as
+    /// signed ints (paper Listing 2; no per-feature transform needed).
+    RawBitsNonNegative,
+    /// General case: order-preserving transform on features (once per
+    /// inference) + pre-transformed unsigned thresholds.
+    OrderedUnsigned,
+}
+
+/// Pick the cheapest valid encoding given the model's threshold range and
+/// the (training-observed or declared) feature range.
+pub fn choose_encoding(min_threshold: f32, min_feature: f32) -> SplitEncoding {
+    if min_threshold >= 0.0 && min_feature >= 0.0 {
+        SplitEncoding::RawBitsNonNegative
+    } else {
+        SplitEncoding::OrderedUnsigned
+    }
+}
+
+/// FlInt split evaluation in the ordered-u32 domain.
+#[inline]
+pub fn flint_le(x_ordered: u32, t_ordered: u32) -> bool {
+    x_ordered <= t_ordered
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_ensure;
+    use crate::util::check::{check, finite_f32};
+
+    #[test]
+    fn known_values() {
+        // 87.5 = 0x42AF0000 (the paper's Listing 2 split value).
+        assert_eq!((87.5f32).to_bits(), 0x42AF_0000);
+        assert_eq!(nonneg_bits_i32(87.5), 0x42AF_0000);
+    }
+
+    #[test]
+    fn zero_canonicalization() {
+        assert_eq!(ordered_u32(0.0), ordered_u32(-0.0));
+        assert!(flint_le(ordered_u32(0.0), ordered_u32(-0.0)));
+        assert!(flint_le(ordered_u32(-0.0), ordered_u32(0.0)));
+    }
+
+    #[test]
+    fn basic_order() {
+        let vals = [-f32::MAX, -1.5, -1e-30, 0.0, 1e-30, 1.0, 87.5, f32::MAX];
+        for w in vals.windows(2) {
+            assert!(ordered_u32(w[0]) < ordered_u32(w[1]), "{} !< {}", w[0], w[1]);
+        }
+    }
+
+    #[test]
+    fn inverse_roundtrip() {
+        for &x in &[-123.456f32, -0.0, 0.0, 1e-20, 3.14, f32::MAX, -f32::MAX] {
+            let y = ordered_u32_inv(ordered_u32(x));
+            assert_eq!(canon_zero(x).to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn encoding_choice() {
+        assert_eq!(choose_encoding(0.5, 0.0), SplitEncoding::RawBitsNonNegative);
+        assert_eq!(choose_encoding(-0.5, 0.0), SplitEncoding::OrderedUnsigned);
+        assert_eq!(choose_encoding(0.5, -1.0), SplitEncoding::OrderedUnsigned);
+    }
+
+    /// The core FlInt soundness property over the full finite domain:
+    /// integer comparison of transformed values == float comparison.
+    #[test]
+    fn prop_ordered_map_preserves_le_and_lt() {
+        check(
+            "ordered_map_preserves_le_lt",
+            |r| (finite_f32(r), finite_f32(r)),
+            |&(a, b)| {
+                prop_ensure!(
+                    (a <= b) == (ordered_u32(a) <= ordered_u32(b)),
+                    "le mismatch: {a} vs {b}"
+                );
+                prop_ensure!(
+                    (a < b) == (ordered_u32(a) < ordered_u32(b)),
+                    "lt mismatch: {a} vs {b}"
+                );
+                Ok(())
+            },
+        );
+    }
+
+    /// Raw-bits signed comparison is sound on the non-negative domain.
+    #[test]
+    fn prop_raw_bits_sound_for_nonneg() {
+        check(
+            "raw_bits_nonneg",
+            |r| {
+                // bits in [0, 0x7F7F_FFFF] are non-negative finite floats
+                let a = f32::from_bits((r.next_u32() >> 1).min(0x7F7F_FFFF));
+                let b = f32::from_bits((r.next_u32() >> 1).min(0x7F7F_FFFF));
+                (a, b)
+            },
+            |&(a, b)| {
+                prop_ensure!(
+                    (a <= b) == (nonneg_bits_i32(a) <= nonneg_bits_i32(b)),
+                    "raw-bits mismatch: {a} vs {b}"
+                );
+                Ok(())
+            },
+        );
+    }
+
+    /// The map is a bijection on canonicalized finite floats.
+    #[test]
+    fn prop_ordered_map_bijective() {
+        check(
+            "ordered_map_bijective",
+            |r| finite_f32(r),
+            |&a| {
+                let back = ordered_u32_inv(ordered_u32(a));
+                prop_ensure!(
+                    canon_zero(a).to_bits() == back.to_bits(),
+                    "roundtrip failed for {a}"
+                );
+                Ok(())
+            },
+        );
+    }
+
+    /// Exhaustive boundary sweep around interesting exponent transitions —
+    /// cheap insurance beyond random sampling.
+    #[test]
+    fn boundary_sweep() {
+        let anchors: [f32; 8] =
+            [0.0, f32::MIN_POSITIVE, 1.0, 87.5, f32::MAX, -1.0, -f32::MIN_POSITIVE, -f32::MAX];
+        for &a in &anchors {
+            // neighbours one ulp away in both directions
+            let bits = a.to_bits();
+            for d in [-2i64, -1, 0, 1, 2] {
+                let nb = (bits as i64 + d).clamp(0, u32::MAX as i64) as u32;
+                let b = f32::from_bits(nb);
+                if !b.is_finite() {
+                    continue;
+                }
+                assert_eq!((a <= b), ordered_u32(a) <= ordered_u32(b), "a={a} b={b}");
+                assert_eq!((b <= a), ordered_u32(b) <= ordered_u32(a), "a={a} b={b}");
+            }
+        }
+    }
+}

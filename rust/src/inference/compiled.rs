@@ -1,0 +1,239 @@
+//! Compiled forest layout shared by the three engines.
+//!
+//! Two layouts coexist:
+//! * **SoA columns** (`feature`/`thresh_*`/`left`/`right`) — the
+//!   analysis-friendly form used by the simulator tracer and the XLA
+//!   packer ([`crate::runtime`]).
+//! * **AoS hot nodes** ([`NodeF32`]/[`NodeOrd`], 16 bytes each) — the
+//!   traversal hot path. A branchy tree walk touches nodes in a random
+//!   pattern; packing `(feature, threshold, left, right)` into one
+//!   16-byte struct means each visited node costs a single cache line
+//!   instead of four (§Perf: this alone bought ~2.4x on the 50-tree
+//!   shuttle model).
+
+use crate::flint::ordered_u32;
+use crate::ir::{Model, ModelKind, Node};
+use crate::quant::prob_to_fixed;
+
+/// Sentinel feature index marking a leaf node.
+pub const LEAF: u32 = u32::MAX;
+
+/// Hot-path node, float-threshold form (one cache-line-quarter).
+#[derive(Clone, Copy, Debug)]
+#[repr(C)]
+pub struct NodeF32 {
+    pub feature: u32,
+    pub threshold: f32,
+    /// Branch: tree-local child index. Leaf: payload row index.
+    pub left: u32,
+    pub right: u32,
+}
+
+/// Hot-path node, ordered-u32-threshold form (FlInt/InTreeger walks).
+#[derive(Clone, Copy, Debug)]
+#[repr(C)]
+pub struct NodeOrd {
+    pub feature: u32,
+    pub threshold: u32,
+    pub left: u32,
+    pub right: u32,
+}
+
+/// One forest compiled to flat arrays.
+///
+/// For node `i` of tree `t` (indices into the per-tree range
+/// `tree_offsets[t] .. tree_offsets[t+1]`):
+/// * `feature[i] == LEAF` → leaf; `left[i]` is the index of its payload
+///   row (length `n_classes`) in `leaf_f32` / `leaf_u32`.
+/// * otherwise → branch on `feature[i]` with children `left[i]`/`right[i]`
+///   (tree-local indices), threshold available in all three encodings.
+#[derive(Clone, Debug)]
+pub struct CompiledForest {
+    pub n_features: usize,
+    pub n_classes: usize,
+    pub n_trees: usize,
+    /// Start index of each tree's nodes; length `n_trees + 1`.
+    pub tree_offsets: Vec<u32>,
+    pub feature: Vec<u32>,
+    /// Threshold as f32 (float engine).
+    pub thresh_f32: Vec<f32>,
+    /// Threshold order-preserving-mapped to u32 (FlInt / InTreeger engines).
+    pub thresh_ord: Vec<u32>,
+    pub left: Vec<u32>,
+    pub right: Vec<u32>,
+    /// Leaf probabilities, row-major `n_leaves * n_classes` (float engines).
+    pub leaf_f32: Vec<f32>,
+    /// Leaf fixed-point values with scale `2^32/n_trees` (integer engine).
+    pub leaf_u32: Vec<u32>,
+    /// AoS hot nodes (same indexing as the SoA columns).
+    pub nodes_f32: Vec<NodeF32>,
+    /// AoS hot nodes with order-preserved thresholds.
+    pub nodes_ord: Vec<NodeOrd>,
+}
+
+impl CompiledForest {
+    /// Compile a random-forest IR model into the flat layout.
+    /// Panics on GBT models (use [`crate::inference::GbtIntEngine`]).
+    pub fn compile(model: &Model) -> CompiledForest {
+        assert_eq!(model.kind, ModelKind::RandomForest, "CompiledForest requires an RF model");
+        model.validate().expect("model must be valid");
+        let n_trees = model.trees.len();
+
+        let mut out = CompiledForest {
+            n_features: model.n_features,
+            n_classes: model.n_classes,
+            n_trees,
+            tree_offsets: Vec::with_capacity(n_trees + 1),
+            feature: Vec::new(),
+            thresh_f32: Vec::new(),
+            thresh_ord: Vec::new(),
+            left: Vec::new(),
+            right: Vec::new(),
+            leaf_f32: Vec::new(),
+            leaf_u32: Vec::new(),
+            nodes_f32: Vec::new(),
+            nodes_ord: Vec::new(),
+        };
+
+        for tree in &model.trees {
+            out.tree_offsets.push(out.feature.len() as u32);
+            for node in &tree.nodes {
+                match node {
+                    Node::Branch { feature, threshold, left, right } => {
+                        out.feature.push(*feature);
+                        out.thresh_f32.push(*threshold);
+                        out.thresh_ord.push(ordered_u32(*threshold));
+                        out.left.push(*left);
+                        out.right.push(*right);
+                    }
+                    Node::Leaf { values } => {
+                        let payload = (out.leaf_f32.len() / model.n_classes) as u32;
+                        out.feature.push(LEAF);
+                        out.thresh_f32.push(0.0);
+                        out.thresh_ord.push(0);
+                        out.left.push(payload);
+                        out.right.push(0);
+                        out.leaf_f32.extend_from_slice(values);
+                        out.leaf_u32.extend(values.iter().map(|&p| prob_to_fixed(p, n_trees)));
+                    }
+                }
+            }
+        }
+        out.tree_offsets.push(out.feature.len() as u32);
+        // Build the AoS hot nodes from the SoA columns.
+        out.nodes_f32 = (0..out.feature.len())
+            .map(|i| NodeF32 {
+                feature: out.feature[i],
+                threshold: out.thresh_f32[i],
+                left: out.left[i],
+                right: out.right[i],
+            })
+            .collect();
+        out.nodes_ord = (0..out.feature.len())
+            .map(|i| NodeOrd {
+                feature: out.feature[i],
+                threshold: out.thresh_ord[i],
+                left: out.left[i],
+                right: out.right[i],
+            })
+            .collect();
+        out
+    }
+
+    /// Total node count.
+    pub fn n_nodes(&self) -> usize {
+        self.feature.len()
+    }
+
+    /// Walk tree `t` on a raw float row, returning the leaf payload index.
+    ///
+    /// SAFETY of the unchecked indexing: `Model::validate()` (enforced at
+    /// compile time) guarantees child indices stay inside the tree and
+    /// feature indices stay below `n_features`; callers pass rows of at
+    /// least `n_features` values (asserted here once, not per node).
+    #[inline]
+    pub fn walk_f32(&self, t: usize, row: &[f32]) -> u32 {
+        assert!(row.len() >= self.n_features);
+        let base = self.tree_offsets[t] as usize;
+        let nodes = &self.nodes_f32;
+        let mut i = base;
+        loop {
+            let n = unsafe { nodes.get_unchecked(i) };
+            if n.feature == LEAF {
+                return n.left;
+            }
+            let go_left = unsafe { *row.get_unchecked(n.feature as usize) } <= n.threshold;
+            i = base + if go_left { n.left } else { n.right } as usize;
+        }
+    }
+
+    /// Walk tree `t` on an ordered-u32 transformed row (same safety
+    /// argument as [`Self::walk_f32`]).
+    #[inline]
+    pub fn walk_ord(&self, t: usize, row_ord: &[u32]) -> u32 {
+        assert!(row_ord.len() >= self.n_features);
+        let base = self.tree_offsets[t] as usize;
+        let nodes = &self.nodes_ord;
+        let mut i = base;
+        loop {
+            let n = unsafe { nodes.get_unchecked(i) };
+            if n.feature == LEAF {
+                return n.left;
+            }
+            let go_left = unsafe { *row_ord.get_unchecked(n.feature as usize) } <= n.threshold;
+            i = base + if go_left { n.left } else { n.right } as usize;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::shuttle_like;
+    use crate::trees::{ForestParams, RandomForest};
+
+    fn model() -> Model {
+        let ds = shuttle_like(1500, 1);
+        RandomForest::train(&ds, &ForestParams { n_trees: 6, max_depth: 5, ..Default::default() }, 3)
+    }
+
+    #[test]
+    fn compile_shapes() {
+        let m = model();
+        let c = CompiledForest::compile(&m);
+        assert_eq!(c.n_trees, 6);
+        assert_eq!(c.tree_offsets.len(), 7);
+        assert_eq!(c.n_nodes(), m.n_nodes());
+        assert_eq!(c.leaf_f32.len(), m.n_leaves() * m.n_classes);
+        assert_eq!(c.leaf_u32.len(), c.leaf_f32.len());
+        assert_eq!(c.feature.len(), c.thresh_f32.len());
+        assert_eq!(c.feature.len(), c.left.len());
+    }
+
+    #[test]
+    fn walks_agree_with_ir_eval() {
+        let m = model();
+        let c = CompiledForest::compile(&m);
+        let ds = shuttle_like(200, 2);
+        for i in 0..ds.n_rows() {
+            let row = ds.row(i);
+            let row_ord: Vec<u32> = row.iter().map(|&x| ordered_u32(x)).collect();
+            for t in 0..c.n_trees {
+                let leaf_ir = m.trees[t].evaluate(row);
+                let pf = c.walk_f32(t, row) as usize;
+                let po = c.walk_ord(t, &row_ord) as usize;
+                assert_eq!(pf, po, "float and flint walks disagree");
+                let got = &c.leaf_f32[pf * c.n_classes..(pf + 1) * c.n_classes];
+                assert_eq!(got, leaf_ir);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "RF model")]
+    fn rejects_gbt() {
+        let mut m = model();
+        m.kind = ModelKind::Gbt;
+        CompiledForest::compile(&m);
+    }
+}

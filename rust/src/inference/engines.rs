@@ -1,0 +1,378 @@
+//! The three inference engines the paper compares (float / FlInt /
+//! InTreeger), sharing the [`CompiledForest`] layout.
+
+use super::compiled::CompiledForest;
+use crate::flint::ordered_u32;
+use crate::ir::{argmax, Model};
+use crate::quant::fixed_to_prob;
+
+/// Which of the paper's three implementations an engine realizes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Variant {
+    /// Float compares + float accumulation (paper "naive", Listing 4).
+    Float,
+    /// Integer compares + float accumulation (paper "FlInt").
+    FlInt,
+    /// Integer compares + u32 fixed-point accumulation (paper "InTreeger").
+    IntTreeger,
+}
+
+impl Variant {
+    pub fn name(self) -> &'static str {
+        match self {
+            Variant::Float => "float",
+            Variant::FlInt => "flint",
+            Variant::IntTreeger => "intreeger",
+        }
+    }
+
+    pub fn all() -> [Variant; 3] {
+        [Variant::Float, Variant::FlInt, Variant::IntTreeger]
+    }
+}
+
+/// Common engine interface.
+///
+/// Precondition: feature rows contain only **finite** values. NaN is
+/// rejected at the data boundary ([`crate::data::Dataset::new`]) because
+/// the float and integer variants would route negative-NaN bit patterns
+/// differently (IEEE sends NaN right, the ordered-u32 domain would send
+/// sign-bit NaN left) — guarding here instead would tax the hot loop.
+pub trait Engine: Send + Sync {
+    /// Predicted per-class probabilities (the integer engine converts its
+    /// fixed-point sums only for this reporting API; `predict` stays
+    /// integer end-to-end).
+    fn predict_proba(&self, row: &[f32]) -> Vec<f32>;
+    /// Predicted class (argmax, lowest index wins ties).
+    fn predict(&self, row: &[f32]) -> u32;
+    fn variant(&self) -> Variant;
+    fn n_classes(&self) -> usize;
+}
+
+// ---------------------------------------------------------------------------
+
+/// Baseline engine: float compares, float accumulation.
+pub struct FloatEngine {
+    forest: CompiledForest,
+}
+
+impl FloatEngine {
+    pub fn compile(model: &Model) -> FloatEngine {
+        FloatEngine { forest: CompiledForest::compile(model) }
+    }
+
+    pub fn forest(&self) -> &CompiledForest {
+        &self.forest
+    }
+
+    /// Accumulated (averaged) float probabilities — reference semantics of
+    /// the paper's float C code.
+    pub fn accumulate(&self, row: &[f32]) -> Vec<f32> {
+        let f = &self.forest;
+        let mut acc = vec![0.0f32; f.n_classes];
+        for t in 0..f.n_trees {
+            let p = f.walk_f32(t, row) as usize;
+            let leaf = &f.leaf_f32[p * f.n_classes..(p + 1) * f.n_classes];
+            for (a, &v) in acc.iter_mut().zip(leaf) {
+                *a += v;
+            }
+        }
+        let inv = 1.0 / f.n_trees as f32;
+        for a in &mut acc {
+            *a *= inv;
+        }
+        acc
+    }
+}
+
+impl Engine for FloatEngine {
+    fn predict_proba(&self, row: &[f32]) -> Vec<f32> {
+        self.accumulate(row)
+    }
+    fn predict(&self, row: &[f32]) -> u32 {
+        argmax(&self.accumulate(row))
+    }
+    fn variant(&self) -> Variant {
+        Variant::Float
+    }
+    fn n_classes(&self) -> usize {
+        self.forest.n_classes
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// FlInt engine: integer threshold compares, float accumulation.
+pub struct FlIntEngine {
+    forest: CompiledForest,
+}
+
+impl FlIntEngine {
+    pub fn compile(model: &Model) -> FlIntEngine {
+        FlIntEngine { forest: CompiledForest::compile(model) }
+    }
+
+    fn accumulate(&self, row: &[f32]) -> Vec<f32> {
+        let f = &self.forest;
+        // One order-preserving transform per feature per inference —
+        // integer ops only (shift/xor), matching the generated C.
+        let mut buf = [std::mem::MaybeUninit::uninit(); 128];
+        let row_ord = transform_row(row, &mut buf);
+        let mut acc = vec![0.0f32; f.n_classes];
+        for t in 0..f.n_trees {
+            let p = f.walk_ord(t, row_ord) as usize;
+            let leaf = &f.leaf_f32[p * f.n_classes..(p + 1) * f.n_classes];
+            for (a, &v) in acc.iter_mut().zip(leaf) {
+                *a += v;
+            }
+        }
+        let inv = 1.0 / f.n_trees as f32;
+        for a in &mut acc {
+            *a *= inv;
+        }
+        acc
+    }
+}
+
+impl Engine for FlIntEngine {
+    fn predict_proba(&self, row: &[f32]) -> Vec<f32> {
+        self.accumulate(row)
+    }
+    fn predict(&self, row: &[f32]) -> u32 {
+        argmax(&self.accumulate(row))
+    }
+    fn variant(&self) -> Variant {
+        Variant::FlInt
+    }
+    fn n_classes(&self) -> usize {
+        self.forest.n_classes
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// InTreeger engine: fully integer inference — FlInt compares plus `u32`
+/// fixed-point probability accumulation. After compilation, `predict` and
+/// `predict_fixed` perform no floating-point arithmetic at all.
+pub struct IntEngine {
+    forest: CompiledForest,
+}
+
+impl IntEngine {
+    pub fn compile(model: &Model) -> IntEngine {
+        IntEngine { forest: CompiledForest::compile(model) }
+    }
+
+    pub fn forest(&self) -> &CompiledForest {
+        &self.forest
+    }
+
+    /// Fixed-point accumulated class scores (scale `2^32/n_trees`,
+    /// averaged by construction). This is the integer-only hot path.
+    pub fn predict_fixed(&self, row: &[f32]) -> Vec<u32> {
+        let f = &self.forest;
+        let mut buf = [std::mem::MaybeUninit::uninit(); 128];
+        let row_ord = transform_row(row, &mut buf);
+        let mut acc = vec![0u32; f.n_classes];
+        for t in 0..f.n_trees {
+            let p = f.walk_ord(t, row_ord) as usize;
+            let leaf = &f.leaf_u32[p * f.n_classes..(p + 1) * f.n_classes];
+            for (a, &v) in acc.iter_mut().zip(leaf) {
+                // Plain wrapping-free u32 addition: quant::max_accumulated
+                // proves the sum cannot exceed u32::MAX.
+                *a += v;
+            }
+        }
+        acc
+    }
+}
+
+impl Engine for IntEngine {
+    fn predict_proba(&self, row: &[f32]) -> Vec<f32> {
+        self.predict_fixed(row).iter().map(|&q| fixed_to_prob(q)).collect()
+    }
+    fn predict(&self, row: &[f32]) -> u32 {
+        argmax(&self.predict_fixed(row))
+    }
+    fn variant(&self) -> Variant {
+        Variant::IntTreeger
+    }
+    fn n_classes(&self) -> usize {
+        self.forest.n_classes
+    }
+}
+
+/// Transform a feature row into ordered-u32 space using an uninitialized
+/// stack buffer (rows up to 128 features — covers both paper datasets).
+/// §Perf: avoids a 512-byte memset per inference that showed up on the
+/// 87-feature ESA profile.
+#[inline]
+fn transform_row<'a>(row: &[f32], buf: &'a mut [std::mem::MaybeUninit<u32>; 128]) -> &'a [u32] {
+    assert!(row.len() <= 128, "feature count > 128 unsupported in scalar engines");
+    for (b, &x) in buf[..row.len()].iter_mut().zip(row) {
+        b.write(ordered_u32(x));
+    }
+    // SAFETY: exactly the first `row.len()` elements were initialized above.
+    unsafe { std::slice::from_raw_parts(buf.as_ptr() as *const u32, row.len()) }
+}
+
+/// Compile the requested variant behind the common trait.
+pub fn compile_variant(model: &Model, v: Variant) -> Box<dyn Engine> {
+    match v {
+        Variant::Float => Box::new(FloatEngine::compile(model)),
+        Variant::FlInt => Box::new(FlIntEngine::compile(model)),
+        Variant::IntTreeger => Box::new(IntEngine::compile(model)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{esa_like, shuttle_like};
+    use crate::prop_ensure;
+    use crate::quant::error_bound;
+    use crate::trees::{ForestParams, RandomForest};
+    use crate::util::check::for_all;
+
+    fn setup(n_trees: usize, seed: u64) -> (crate::data::Dataset, Model) {
+        let ds = shuttle_like(2000, seed);
+        let m = RandomForest::train(
+            &ds,
+            &ForestParams { n_trees, max_depth: 6, ..Default::default() },
+            seed,
+        );
+        (ds, m)
+    }
+
+    /// Paper §IV-B: predictions of float and integer models are identical
+    /// on every sample. This is experiment E2's unit-scale version.
+    #[test]
+    fn float_flint_int_predictions_identical() {
+        for seed in [1u64, 2, 3] {
+            let (ds, m) = setup(10, seed);
+            let fe = FloatEngine::compile(&m);
+            let fl = FlIntEngine::compile(&m);
+            let ie = IntEngine::compile(&m);
+            for i in 0..ds.n_rows() {
+                let row = ds.row(i);
+                let a = fe.predict(row);
+                let b = fl.predict(row);
+                let c = ie.predict(row);
+                assert_eq!(a, b, "flint mismatch row {i}");
+                assert_eq!(a, c, "int mismatch row {i}");
+            }
+        }
+    }
+
+    /// Fig 2: probability deltas bounded by n/2^32 (plus float-sum noise).
+    #[test]
+    fn probability_deltas_within_bound() {
+        let (ds, m) = setup(50, 4);
+        let fe = FloatEngine::compile(&m);
+        let ie = IntEngine::compile(&m);
+        let mut max_diff = 0.0f64;
+        for i in 0..500 {
+            let row = ds.row(i);
+            let pf = fe.predict_proba(row);
+            let pi = ie.predict_proba(row);
+            for (a, b) in pf.iter().zip(&pi) {
+                max_diff = max_diff.max((*a as f64 - *b as f64).abs());
+            }
+        }
+        // Bound: fixed-point error n/2^32 + float accumulation error of the
+        // float engine itself (~n_trees * eps). Order 1e-8 for 50 trees.
+        let bound = error_bound(50) + 50.0 * f32::EPSILON as f64;
+        assert!(max_diff <= bound, "max_diff {max_diff} > bound {bound}");
+        assert!(max_diff > 0.0, "suspicious: zero probability delta");
+    }
+
+    #[test]
+    fn flint_equals_float_probas_exactly() {
+        // FlInt changes only the comparison mechanism — same leaves, same
+        // float accumulation ⇒ bit-identical probabilities.
+        let (ds, m) = setup(10, 5);
+        let fe = FloatEngine::compile(&m);
+        let fl = FlIntEngine::compile(&m);
+        for i in 0..300 {
+            assert_eq!(fe.predict_proba(ds.row(i)), fl.predict_proba(ds.row(i)));
+        }
+    }
+
+    #[test]
+    fn int_engine_is_integer_only() {
+        // predict_fixed output must reconstruct the float average within
+        // the fixed-point bound, starting from pure-u32 accumulation.
+        let (ds, m) = setup(20, 6);
+        let fe = FloatEngine::compile(&m);
+        let ie = IntEngine::compile(&m);
+        for i in 0..200 {
+            let fixed = ie.predict_fixed(ds.row(i));
+            let float = fe.predict_proba(ds.row(i));
+            for (q, p) in fixed.iter().zip(&float) {
+                let back = *q as f64 / crate::quant::TWO_32;
+                assert!((back - *p as f64).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn esa_wide_rows_supported() {
+        let ds = esa_like(500, 7);
+        let m = RandomForest::train(&ds, &ForestParams { n_trees: 5, max_depth: 5, ..Default::default() }, 7);
+        let ie = IntEngine::compile(&m);
+        let fe = FloatEngine::compile(&m);
+        for i in 0..ds.n_rows() {
+            assert_eq!(ie.predict(ds.row(i)), fe.predict(ds.row(i)));
+        }
+    }
+
+    #[test]
+    fn variant_helpers() {
+        assert_eq!(Variant::all().len(), 3);
+        assert_eq!(Variant::Float.name(), "float");
+        let (_, m) = setup(2, 8);
+        for v in Variant::all() {
+            let e = compile_variant(&m, v);
+            assert_eq!(e.variant(), v);
+            assert_eq!(e.n_classes(), 7);
+        }
+    }
+
+    /// Parity between all three engines on random forests and random
+    /// feature vectors (including out-of-distribution and negative
+    /// values) — the paper's "no loss of accuracy" claim as a property.
+    #[test]
+    fn prop_engines_agree_on_random_inputs() {
+        for_all(
+            "engines_agree_on_random_inputs",
+            16,
+            0xEA5E,
+            |r| {
+                let seed = r.next_u64() % 50;
+                let n_trees = 1 + r.below(23);
+                let n_rows = 1 + r.below(11);
+                let rows: Vec<Vec<f32>> = (0..n_rows)
+                    .map(|_| (0..7).map(|_| r.uniform_in(-150.0, 200.0)).collect())
+                    .collect();
+                (seed, n_trees, rows)
+            },
+            |&(seed, n_trees, ref rows)| {
+                let ds = shuttle_like(400, seed);
+                let m = RandomForest::train(
+                    &ds,
+                    &ForestParams { n_trees, max_depth: 5, ..Default::default() },
+                    seed,
+                );
+                let fe = FloatEngine::compile(&m);
+                let fl = FlIntEngine::compile(&m);
+                let ie = IntEngine::compile(&m);
+                for row in rows {
+                    let a = fe.predict(row);
+                    prop_ensure!(a == fl.predict(row), "flint disagrees (seed {seed})");
+                    prop_ensure!(a == ie.predict(row), "int disagrees (seed {seed})");
+                }
+                Ok(())
+            },
+        );
+    }
+}

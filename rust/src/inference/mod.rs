@@ -1,0 +1,62 @@
+//! Executable inference engines with semantics identical to the generated
+//! C code — the crate's reference implementations of the paper's three
+//! compared variants (§IV):
+//!
+//! * [`FloatEngine`] — the "naive" baseline: float threshold compares,
+//!   float probability accumulation (paper Listing 4).
+//! * [`FlIntEngine`] — FlInt thresholds (integer compares) but float
+//!   probability accumulation (paper Listing 1 / §II-D).
+//! * [`IntEngine`] — InTreeger: integer compares **and** `u32` fixed-point
+//!   probability accumulation (paper Listing 2/3) — no float operation
+//!   anywhere on the inference path.
+//!
+//! These engines are used for (a) accuracy/parity experiments (Fig 2,
+//! §IV-B), (b) *measured* x86 performance (the paper's Fig 3 x86 column is
+//! reproduced both by these engines under criterion and by gcc-compiled
+//! generated C), and (c) as oracles for the codegen, simulator and XLA
+//! paths.
+
+pub mod compiled;
+pub mod engines;
+pub mod gbt_int;
+
+pub use compiled::{CompiledForest, LEAF};
+pub use engines::{Engine, FlIntEngine, FloatEngine, IntEngine, Variant};
+pub use gbt_int::GbtIntEngine;
+
+use crate::data::Dataset;
+
+/// Predict classes for every row of a dataset.
+pub fn predict_all<E: Engine + ?Sized>(engine: &E, ds: &Dataset) -> Vec<u32> {
+    (0..ds.n_rows()).map(|i| engine.predict(ds.row(i))).collect()
+}
+
+/// Classification accuracy of an engine over a dataset.
+pub fn engine_accuracy<E: Engine + ?Sized>(engine: &E, ds: &Dataset) -> f64 {
+    if ds.n_rows() == 0 {
+        return 0.0;
+    }
+    let hits = (0..ds.n_rows()).filter(|&i| engine.predict(ds.row(i)) == ds.labels[i]).count();
+    hits as f64 / ds.n_rows() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::shuttle_like;
+    use crate::trees::{ForestParams, RandomForest};
+
+    #[test]
+    fn predict_all_matches_model() {
+        let ds = shuttle_like(300, 1);
+        let model =
+            RandomForest::train(&ds, &ForestParams { n_trees: 5, max_depth: 4, ..Default::default() }, 1);
+        let engine = FloatEngine::compile(&model);
+        let preds = predict_all(&engine, &ds);
+        for i in 0..ds.n_rows() {
+            assert_eq!(preds[i], model.predict(ds.row(i)));
+        }
+        let acc = engine_accuracy(&engine, &ds);
+        assert!((0.0..=1.0).contains(&acc));
+    }
+}

@@ -1,0 +1,87 @@
+//! Front-end importers: external training frameworks → the common IR.
+//!
+//! The paper's pipeline (Fig 1) accepts models from "a Python RF training
+//! library of choice, such as XGBoost, LightGBM, and scikit-learn" via
+//! Treelite. This module is that ingestion layer: each importer parses
+//! the framework's native dump format into [`crate::ir::Model`], after
+//! which every backend (codegen, engines, simulators, XLA packer) works
+//! unchanged.
+//!
+//! * [`xgboost`] — XGBoost's JSON dump (`Booster.get_dump(dump_format=
+//!   "json")`), `<`-style splits converted to our `<=` convention by
+//!   taking the f32 predecessor of each threshold.
+//! * [`lightgbm`] — LightGBM's text model format (`Booster.save_model`),
+//!   columnar per-tree arrays with `~leaf`-encoded children.
+//!
+//! scikit-learn needs no importer here: the in-crate trainer
+//! ([`crate::trees`]) implements the same CART/RF semantics natively.
+
+pub mod lightgbm;
+pub mod xgboost;
+
+use crate::flint::{ordered_u32, ordered_u32_inv};
+
+/// Largest f32 strictly below `t` under total order — converts a
+/// `x < t` split into our `x <= pred(t)` convention exactly (both sides
+/// classify every finite f32 identically).
+pub fn f32_pred(t: f32) -> f32 {
+    assert!(t.is_finite(), "threshold must be finite");
+    let mut o = ordered_u32(t);
+    // Stepping once suffices except at t == ±0.0, where the ordered
+    // domain's inverse lands on -0.0 (numerically equal to t); step again.
+    loop {
+        assert!(o > 0, "no predecessor below -f32::MAX");
+        o -= 1;
+        let p = ordered_u32_inv(o);
+        if p < t {
+            return p;
+        }
+    }
+}
+
+/// Import error type shared by the front-ends.
+#[derive(Debug)]
+pub struct ImportError(pub String);
+
+impl std::fmt::Display for ImportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "model import error: {}", self.0)
+    }
+}
+impl std::error::Error for ImportError {}
+
+pub(crate) fn err<T>(msg: impl Into<String>) -> Result<T, ImportError> {
+    Err(ImportError(msg.into()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{check, finite_f32};
+    use crate::prop_ensure;
+
+    #[test]
+    fn pred_is_strictly_below_and_adjacent() {
+        for &t in &[1.5f32, 87.5, -3.0, 1e-30, f32::MAX, -0.0] {
+            let p = f32_pred(t);
+            assert!(p < t || (t == 0.0 && p < 0.0), "{p} !< {t}");
+        }
+    }
+
+    /// The defining property: for all finite x, `x < t ⇔ x <= pred(t)`.
+    #[test]
+    fn prop_pred_converts_lt_to_le() {
+        check(
+            "pred_converts_lt_to_le",
+            |r| (finite_f32(r), finite_f32(r)),
+            |&(x, t)| {
+                if ordered_u32(t) == 0 {
+                    return Ok(()); // -MAX has no predecessor; importers reject
+                }
+                let p = f32_pred(t);
+                prop_ensure!((x < t) == (x <= p), "x={x} t={t} pred={p}");
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,218 @@
+//! XGBoost front-end: parse `Booster.get_dump(dump_format="json")`
+//! output (a JSON array of per-tree nested objects) into the IR.
+//!
+//! Dump node shapes:
+//! * branch: `{"nodeid":0,"split":"f3","split_condition":1.5,"yes":1,
+//!   "no":2,"missing":1,"children":[...]}` — semantics `x < cond → yes`.
+//! * leaf: `{"nodeid":5,"leaf":0.1703}` — an additive margin.
+//!
+//! Conversions applied:
+//! * `<` splits become our `<=` convention via [`super::f32_pred`]
+//!   (exact: classifies every finite f32 identically);
+//! * multiclass boosters emit `n_rounds * n_classes` trees round-robin
+//!   over classes; each imported tree's leaf vector holds its margin in
+//!   its class column (the `ModelKind::Gbt` convention).
+//!
+//! `missing` direction is recorded but NaN features are rejected by the
+//! engines (the IR has no NaN semantics; documented limitation).
+
+use super::{err, ImportError};
+use crate::ir::{Model, ModelKind, Node, Tree};
+use crate::util::Json;
+
+/// Import an XGBoost JSON dump.
+///
+/// `n_features`/`n_classes` come from the caller (the dump does not
+/// carry them); `base_score` is XGBoost's global bias (default 0.5 for
+/// logistic objectives — pass the booster's configured value, in margin
+/// space).
+pub fn import(
+    dump_json: &str,
+    n_features: usize,
+    n_classes: usize,
+    base_score: f32,
+) -> Result<Model, ImportError> {
+    let v = Json::parse(dump_json).map_err(|e| ImportError(format!("bad json: {e}")))?;
+    let trees_json = match v.as_arr() {
+        Some(a) => a,
+        None => return err("expected a JSON array of trees"),
+    };
+    if trees_json.is_empty() {
+        return err("empty tree list");
+    }
+    if n_classes < 2 {
+        return err("n_classes must be >= 2");
+    }
+    // Binary boosters emit one tree per round (class column 1... by
+    // convention we place binary margins in column 1, base in column 1).
+    let round_robin = if n_classes > 2 { n_classes } else { 1 };
+    if trees_json.len() % round_robin != 0 {
+        return err(format!(
+            "tree count {} not a multiple of n_classes {}",
+            trees_json.len(),
+            n_classes
+        ));
+    }
+
+    let mut trees = Vec::with_capacity(trees_json.len());
+    for (ti, tv) in trees_json.iter().enumerate() {
+        let class = if round_robin == 1 { 1 } else { ti % n_classes };
+        let mut nodes: Vec<Node> = Vec::new();
+        build_node(tv, &mut nodes, n_features, n_classes, class, ti)?;
+        trees.push(Tree { nodes });
+    }
+
+    let mut base = vec![0.0f32; n_classes];
+    for (c, b) in base.iter_mut().enumerate() {
+        // For binary models only the positive class carries the bias.
+        if round_robin > 1 || c == 1 {
+            *b = base_score;
+        }
+    }
+    let model = Model { kind: ModelKind::Gbt, n_features, n_classes, trees, base_score: base };
+    model.validate().map_err(|e| ImportError(format!("imported model invalid: {e}")))?;
+    Ok(model)
+}
+
+fn build_node(
+    v: &Json,
+    nodes: &mut Vec<Node>,
+    n_features: usize,
+    n_classes: usize,
+    class: usize,
+    ti: usize,
+) -> Result<u32, ImportError> {
+    let id = nodes.len() as u32;
+    if let Some(leaf) = v.get("leaf") {
+        let margin = leaf
+            .as_f64()
+            .ok_or_else(|| ImportError(format!("tree {ti}: bad leaf value")))?;
+        let mut values = vec![0.0f32; n_classes];
+        values[class] = margin as f32;
+        nodes.push(Node::Leaf { values });
+        return Ok(id);
+    }
+
+    // Branch node.
+    let split = v
+        .get("split")
+        .and_then(Json::as_str)
+        .ok_or_else(|| ImportError(format!("tree {ti}: missing 'split'")))?;
+    let feature: u32 = split
+        .strip_prefix('f')
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| ImportError(format!("tree {ti}: bad split name '{split}'")))?;
+    if feature as usize >= n_features {
+        return err(format!("tree {ti}: feature {feature} out of range"));
+    }
+    let cond = v
+        .get("split_condition")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| ImportError(format!("tree {ti}: missing split_condition")))?;
+    let cond = cond as f32;
+    if !cond.is_finite() {
+        return err(format!("tree {ti}: non-finite split_condition"));
+    }
+    let yes = v
+        .get("yes")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| ImportError(format!("tree {ti}: missing 'yes'")))?;
+    let no = v
+        .get("no")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| ImportError(format!("tree {ti}: missing 'no'")))?;
+    let children = v
+        .get("children")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| ImportError(format!("tree {ti}: missing children")))?;
+    if children.len() != 2 {
+        return err(format!("tree {ti}: expected 2 children"));
+    }
+    let child_id = |want: f64| -> Result<&Json, ImportError> {
+        children
+            .iter()
+            .find(|c| c.get("nodeid").and_then(Json::as_f64) == Some(want))
+            .ok_or_else(|| ImportError(format!("tree {ti}: child nodeid {want} not found")))
+    };
+
+    nodes.push(Node::Leaf { values: vec![] }); // placeholder
+    // xgboost: x < cond → 'yes' branch; ours: x <= pred(cond) → left.
+    let left = build_node(child_id(yes)?, nodes, n_features, n_classes, class, ti)?;
+    let right = build_node(child_id(no)?, nodes, n_features, n_classes, class, ti)?;
+    nodes[id as usize] =
+        Node::Branch { feature, threshold: super::f32_pred(cond), left, right };
+    Ok(id)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A binary booster with 2 rounds: margins move class 1.
+    const BINARY_DUMP: &str = r#"[
+      {"nodeid":0,"split":"f0","split_condition":0.5,"yes":1,"no":2,"missing":1,
+       "children":[{"nodeid":1,"leaf":-0.4},{"nodeid":2,"leaf":0.6}]},
+      {"nodeid":0,"split":"f1","split_condition":-1.25,"yes":1,"no":2,"missing":1,
+       "children":[{"nodeid":2,"leaf":0.3},{"nodeid":1,"leaf":-0.2}]}
+    ]"#;
+
+    #[test]
+    fn binary_import_and_semantics() {
+        let m = import(BINARY_DUMP, 2, 2, 0.0).unwrap();
+        assert_eq!(m.kind, ModelKind::Gbt);
+        assert_eq!(m.trees.len(), 2);
+        // x0 < 0.5 -> -0.4; x1 < -1.25 -> -0.2 (note shuffled child order).
+        // margins: class1 = t0 + t1.
+        let margin = |row: &[f32]| {
+            m.trees.iter().map(|t| t.evaluate(row)[1]).sum::<f32>()
+        };
+        assert_eq!(margin(&[0.0, 0.0]), -0.4 + 0.3);
+        assert_eq!(margin(&[1.0, -2.0]), 0.6 + -0.2);
+        // boundary: xgboost '<' means x = 0.5 goes 'no'.
+        assert_eq!(margin(&[0.5, 0.0]), 0.6 + 0.3);
+        // just below goes 'yes'
+        assert_eq!(margin(&[0.49999, 0.0]), -0.4 + 0.3);
+    }
+
+    #[test]
+    fn multiclass_round_robin() {
+        // 3 classes, one round = 3 trees (single-leaf stumps).
+        let dump = r#"[
+          {"nodeid":0,"leaf":0.1},
+          {"nodeid":0,"leaf":0.2},
+          {"nodeid":0,"leaf":0.3}
+        ]"#;
+        let m = import(dump, 4, 3, 0.5).unwrap();
+        assert_eq!(m.trees.len(), 3);
+        let p = m.predict_proba(&[0.0; 4]);
+        // softmax(0.6, 0.7, 0.8) — monotone in class index
+        assert!(p[2] > p[1] && p[1] > p[0]);
+        assert_eq!(m.base_score, vec![0.5, 0.5, 0.5]);
+    }
+
+    #[test]
+    fn integer_only_engine_accepts_imported_model() {
+        let m = import(BINARY_DUMP, 2, 2, 0.0).unwrap();
+        let e = crate::inference::GbtIntEngine::compile(&m);
+        for row in [[0.0f32, 0.0], [0.5, -3.0], [2.0, 5.0], [-1.0, -1.25]] {
+            assert_eq!(e.predict(&row), m.predict(&row));
+        }
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(import("{}", 2, 2, 0.0).is_err()); // not an array
+        assert!(import("[]", 2, 2, 0.0).is_err()); // empty
+        assert!(import("[{\"nodeid\":0}]", 2, 2, 0.0).is_err()); // neither leaf nor split
+        // bad feature name
+        let bad = r#"[{"nodeid":0,"split":"x0","split_condition":1,"yes":1,"no":2,
+          "children":[{"nodeid":1,"leaf":0},{"nodeid":2,"leaf":0}]}]"#;
+        assert!(import(bad, 2, 2, 0.0).is_err());
+        // feature out of range
+        let oob = r#"[{"nodeid":0,"split":"f9","split_condition":1,"yes":1,"no":2,
+          "children":[{"nodeid":1,"leaf":0},{"nodeid":2,"leaf":0}]}]"#;
+        assert!(import(oob, 2, 2, 0.0).is_err());
+        // wrong multiple for multiclass
+        assert!(import("[{\"nodeid\":0,\"leaf\":0.1}]", 2, 3, 0.0).is_err());
+    }
+}

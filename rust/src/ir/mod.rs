@@ -1,0 +1,381 @@
+//! Treelite-like model intermediate representation.
+//!
+//! Every trainer ([`crate::trees`]) lowers into this IR and every backend
+//! (the inference engines, the C code generator, the architecture
+//! simulator, the XLA artifact packer) consumes it — mirroring the role
+//! Treelite plays in the paper's pipeline (Fig 1): a "standardized
+//! intermediary that simplifies subsequent processing and optimization".
+//!
+//! Trees are stored as flat node arrays with explicit child indices.
+//! Branch semantics: `if row[feature] <= threshold { left } else { right }`
+//! — the comparison operator used by scikit-learn, XGBoost and LightGBM
+//! alike, and the one the paper's Listings show.
+
+pub mod import;
+pub mod serial;
+pub mod stats;
+
+/// One node of a tree: either an internal split or a leaf.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Node {
+    /// `if row[feature] <= threshold` go to `left`, else `right`.
+    Branch { feature: u32, threshold: f32, left: u32, right: u32 },
+    /// Leaf payload. For classification forests (`ModelKind::RandomForest`)
+    /// this is a per-class probability vector (sums to 1). For boosted
+    /// trees (`ModelKind::Gbt`) it is a per-class margin contribution.
+    Leaf { values: Vec<f32> },
+}
+
+/// A single decision tree: `nodes[0]` is the root.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tree {
+    pub nodes: Vec<Node>,
+}
+
+/// What the leaf values mean and how trees are combined.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelKind {
+    /// Leaves hold class probabilities; ensemble output is the average
+    /// over trees (scikit-learn `RandomForestClassifier` semantics).
+    RandomForest,
+    /// Leaves hold additive margins; ensemble output is
+    /// `base_score + sum(tree outputs)` followed by softmax/sigmoid.
+    Gbt,
+}
+
+/// A trained tree-ensemble model in the common IR.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Model {
+    pub kind: ModelKind,
+    pub n_features: usize,
+    pub n_classes: usize,
+    pub trees: Vec<Tree>,
+    /// GBT initial margin per class (zeros for random forests).
+    pub base_score: Vec<f32>,
+}
+
+/// IR validation failure.
+#[derive(Debug, PartialEq)]
+pub enum IrError {
+    EmptyTree(usize),
+    BadChild { tree: usize, node: usize },
+    BadFeature { tree: usize, node: usize, feature: u32 },
+    BadLeafArity { tree: usize, node: usize, got: usize },
+    NonFiniteThreshold { tree: usize, node: usize },
+    LeafNotDistribution { tree: usize, node: usize, sum: f32 },
+    Unreachable { tree: usize, node: usize },
+    Cycle { tree: usize },
+}
+
+impl std::fmt::Display for IrError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{self:?}")
+    }
+}
+impl std::error::Error for IrError {}
+
+impl Tree {
+    /// Evaluate the tree on a row, returning the leaf values.
+    pub fn evaluate<'a>(&'a self, row: &[f32]) -> &'a [f32] {
+        let mut i = 0usize;
+        loop {
+            match &self.nodes[i] {
+                Node::Branch { feature, threshold, left, right } => {
+                    i = if row[*feature as usize] <= *threshold { *left as usize } else { *right as usize };
+                }
+                Node::Leaf { values } => return values,
+            }
+        }
+    }
+
+    /// Number of leaf nodes.
+    pub fn n_leaves(&self) -> usize {
+        self.nodes.iter().filter(|n| matches!(n, Node::Leaf { .. })).count()
+    }
+
+    /// Maximum root-to-leaf depth (root = depth 0).
+    pub fn depth(&self) -> usize {
+        fn rec(nodes: &[Node], i: usize) -> usize {
+            match &nodes[i] {
+                Node::Leaf { .. } => 0,
+                Node::Branch { left, right, .. } => {
+                    1 + rec(nodes, *left as usize).max(rec(nodes, *right as usize))
+                }
+            }
+        }
+        if self.nodes.is_empty() {
+            0
+        } else {
+            rec(&self.nodes, 0)
+        }
+    }
+}
+
+impl Model {
+    /// Predict class probabilities for one row (float reference semantics,
+    /// exactly what the paper's baseline generated C computes).
+    pub fn predict_proba(&self, row: &[f32]) -> Vec<f32> {
+        match self.kind {
+            ModelKind::RandomForest => {
+                let mut acc = vec![0.0f32; self.n_classes];
+                for t in &self.trees {
+                    let leaf = t.evaluate(row);
+                    for (a, &v) in acc.iter_mut().zip(leaf) {
+                        *a += v;
+                    }
+                }
+                let inv = 1.0 / self.trees.len() as f32;
+                for a in &mut acc {
+                    *a *= inv;
+                }
+                acc
+            }
+            ModelKind::Gbt => {
+                let mut margins = self.base_score.clone();
+                for t in &self.trees {
+                    let leaf = t.evaluate(row);
+                    for (m, &v) in margins.iter_mut().zip(leaf) {
+                        *m += v;
+                    }
+                }
+                softmax(&margins)
+            }
+        }
+    }
+
+    /// Predicted class (argmax of probabilities; ties resolve to the
+    /// lowest class index, matching the generated C).
+    pub fn predict(&self, row: &[f32]) -> u32 {
+        argmax(&self.predict_proba(row))
+    }
+
+    /// Validate structural invariants. Called after training and after
+    /// deserialization; the codegen and simulators assume a valid model.
+    pub fn validate(&self) -> Result<(), IrError> {
+        for (ti, tree) in self.trees.iter().enumerate() {
+            if tree.nodes.is_empty() {
+                return Err(IrError::EmptyTree(ti));
+            }
+            let n = tree.nodes.len();
+            let mut seen = vec![false; n];
+            // Iterative DFS from the root; also detects cycles via a bound
+            // on visited edges.
+            let mut stack = vec![0usize];
+            let mut visited_edges = 0usize;
+            while let Some(i) = stack.pop() {
+                if seen[i] {
+                    continue;
+                }
+                seen[i] = true;
+                match &tree.nodes[i] {
+                    Node::Branch { feature, threshold, left, right } => {
+                        if *feature as usize >= self.n_features {
+                            return Err(IrError::BadFeature { tree: ti, node: i, feature: *feature });
+                        }
+                        if !threshold.is_finite() {
+                            return Err(IrError::NonFiniteThreshold { tree: ti, node: i });
+                        }
+                        for &c in [left, right].iter() {
+                            if *c as usize >= n {
+                                return Err(IrError::BadChild { tree: ti, node: i });
+                            }
+                            stack.push(*c as usize);
+                        }
+                        visited_edges += 2;
+                        if visited_edges > 2 * n {
+                            return Err(IrError::Cycle { tree: ti });
+                        }
+                    }
+                    Node::Leaf { values } => {
+                        if values.len() != self.n_classes {
+                            return Err(IrError::BadLeafArity { tree: ti, node: i, got: values.len() });
+                        }
+                        if self.kind == ModelKind::RandomForest {
+                            let sum: f32 = values.iter().sum();
+                            if !(0.999..=1.001).contains(&sum) || values.iter().any(|v| *v < 0.0) {
+                                return Err(IrError::LeafNotDistribution { tree: ti, node: i, sum });
+                            }
+                        }
+                    }
+                }
+            }
+            if let Some(node) = seen.iter().position(|&s| !s) {
+                return Err(IrError::Unreachable { tree: ti, node });
+            }
+        }
+        Ok(())
+    }
+
+    /// Serialize to the JSON interchange format (see [`serial`]).
+    pub fn to_json(&self) -> String {
+        serial::to_json(self).to_string()
+    }
+
+    /// Deserialize from JSON and validate.
+    pub fn from_json(s: &str) -> Result<Model, Box<dyn std::error::Error>> {
+        let v = crate::util::Json::parse(s)?;
+        let m = serial::from_json(&v)?;
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Total number of nodes across all trees.
+    pub fn n_nodes(&self) -> usize {
+        self.trees.iter().map(|t| t.nodes.len()).sum()
+    }
+
+    /// Total number of leaves across all trees.
+    pub fn n_leaves(&self) -> usize {
+        self.trees.iter().map(|t| t.n_leaves()).sum()
+    }
+
+    /// Maximum tree depth in the ensemble.
+    pub fn max_depth(&self) -> usize {
+        self.trees.iter().map(|t| t.depth()).max().unwrap_or(0)
+    }
+}
+
+/// Numerically-stable softmax.
+pub fn softmax(xs: &[f32]) -> Vec<f32> {
+    let m = xs.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let exps: Vec<f32> = xs.iter().map(|&x| (x - m).exp()).collect();
+    let s: f32 = exps.iter().sum();
+    exps.iter().map(|&e| e / s).collect()
+}
+
+/// Argmax with lowest-index tie-breaking.
+pub fn argmax<T: PartialOrd + Copy>(xs: &[T]) -> u32 {
+    let mut best = 0usize;
+    for i in 1..xs.len() {
+        if xs[i] > xs[best] {
+            best = i;
+        }
+    }
+    best as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A tiny hand-built 2-class stump: x0 <= 0.5 ? [0.9,0.1] : [0.2,0.8]
+    pub(crate) fn stump() -> Model {
+        Model {
+            kind: ModelKind::RandomForest,
+            n_features: 1,
+            n_classes: 2,
+            trees: vec![Tree {
+                nodes: vec![
+                    Node::Branch { feature: 0, threshold: 0.5, left: 1, right: 2 },
+                    Node::Leaf { values: vec![0.9, 0.1] },
+                    Node::Leaf { values: vec![0.2, 0.8] },
+                ],
+            }],
+            base_score: vec![0.0, 0.0],
+        }
+    }
+
+    #[test]
+    fn stump_eval() {
+        let m = stump();
+        assert_eq!(m.predict(&[0.0]), 0);
+        assert_eq!(m.predict(&[1.0]), 1);
+        // boundary: <= goes left
+        assert_eq!(m.predict(&[0.5]), 0);
+        assert!(m.validate().is_ok());
+    }
+
+    #[test]
+    fn ensemble_averages() {
+        let mut m = stump();
+        m.trees.push(Tree { nodes: vec![Node::Leaf { values: vec![0.5, 0.5] }] });
+        let p = m.predict_proba(&[0.0]);
+        assert!((p[0] - 0.7).abs() < 1e-6);
+        assert!((p[1] - 0.3).abs() < 1e-6);
+    }
+
+    #[test]
+    fn validate_catches_bad_child() {
+        let mut m = stump();
+        if let Node::Branch { left, .. } = &mut m.trees[0].nodes[0] {
+            *left = 99;
+        }
+        assert!(matches!(m.validate(), Err(IrError::BadChild { .. })));
+    }
+
+    #[test]
+    fn validate_catches_bad_feature() {
+        let mut m = stump();
+        if let Node::Branch { feature, .. } = &mut m.trees[0].nodes[0] {
+            *feature = 5;
+        }
+        assert!(matches!(m.validate(), Err(IrError::BadFeature { .. })));
+    }
+
+    #[test]
+    fn validate_catches_bad_leaf() {
+        let mut m = stump();
+        m.trees[0].nodes[1] = Node::Leaf { values: vec![0.9, 0.9] };
+        assert!(matches!(m.validate(), Err(IrError::LeafNotDistribution { .. })));
+    }
+
+    #[test]
+    fn validate_catches_nonfinite_threshold() {
+        let mut m = stump();
+        if let Node::Branch { threshold, .. } = &mut m.trees[0].nodes[0] {
+            *threshold = f32::NAN;
+        }
+        assert!(matches!(m.validate(), Err(IrError::NonFiniteThreshold { .. })));
+    }
+
+    #[test]
+    fn validate_catches_unreachable() {
+        let mut m = stump();
+        m.trees[0].nodes.push(Node::Leaf { values: vec![1.0, 0.0] });
+        assert!(matches!(m.validate(), Err(IrError::Unreachable { .. })));
+    }
+
+    #[test]
+    fn validate_catches_arity() {
+        let mut m = stump();
+        m.trees[0].nodes[1] = Node::Leaf { values: vec![1.0] };
+        assert!(matches!(m.validate(), Err(IrError::BadLeafArity { .. })));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let m = stump();
+        let j = m.to_json();
+        let m2 = Model::from_json(&j).unwrap();
+        assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn json_rejects_invalid() {
+        let mut m = stump();
+        m.trees[0].nodes[1] = Node::Leaf { values: vec![0.9, 0.9] };
+        let j = m.to_json();
+        assert!(Model::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn depth_and_counts() {
+        let m = stump();
+        assert_eq!(m.trees[0].depth(), 1);
+        assert_eq!(m.n_nodes(), 3);
+        assert_eq!(m.n_leaves(), 2);
+        assert_eq!(m.max_depth(), 1);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let p = softmax(&[1.0, 2.0, 3.0]);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn argmax_tie_breaks_low() {
+        assert_eq!(argmax(&[0.5f32, 0.5, 0.1]), 0);
+    }
+}

@@ -1,0 +1,258 @@
+//! JSON (de)serialization of the model IR — the interchange format the
+//! framework's stages pass between each other (the analogue of Treelite's
+//! model files in the paper's pipeline, Fig 1).
+//!
+//! Format (compact, columnar per tree to keep files small):
+//!
+//! ```json
+//! {
+//!   "format": "intreeger-ir-v1",
+//!   "kind": "rf" | "gbt",
+//!   "n_features": 7,
+//!   "n_classes": 7,
+//!   "base_score": [0, ...],
+//!   "trees": [
+//!     {
+//!       "feature":  [0, -1, -1],        // -1 marks a leaf
+//!       "threshold":[87.5, 0, 0],
+//!       "left":     [1, 0, 0],
+//!       "right":    [2, 0, 0],
+//!       "leaf":     [[...], [0.9, 0.1], [0.2, 0.8]]  // per-node values
+//!     }, ...
+//!   ]
+//! }
+//! ```
+
+use super::{Model, ModelKind, Node, Tree};
+use crate::util::json::{arr, f32_arr, num, obj, s, Json};
+
+/// Current format tag.
+pub const FORMAT: &str = "intreeger-ir-v1";
+
+/// Serialize a model to a JSON value.
+pub fn to_json(model: &Model) -> Json {
+    let trees: Vec<Json> = model
+        .trees
+        .iter()
+        .map(|t| {
+            let mut feature = Vec::with_capacity(t.nodes.len());
+            let mut threshold = Vec::with_capacity(t.nodes.len());
+            let mut left = Vec::with_capacity(t.nodes.len());
+            let mut right = Vec::with_capacity(t.nodes.len());
+            let mut leaf = Vec::with_capacity(t.nodes.len());
+            for n in &t.nodes {
+                match n {
+                    Node::Branch { feature: f, threshold: th, left: l, right: r } => {
+                        feature.push(num(*f as f64));
+                        threshold.push(num(*th as f64));
+                        left.push(num(*l as f64));
+                        right.push(num(*r as f64));
+                        leaf.push(Json::Arr(vec![]));
+                    }
+                    Node::Leaf { values } => {
+                        feature.push(num(-1.0));
+                        threshold.push(num(0.0));
+                        left.push(num(0.0));
+                        right.push(num(0.0));
+                        leaf.push(f32_arr(values));
+                    }
+                }
+            }
+            obj(vec![
+                ("feature", Json::Arr(feature)),
+                ("threshold", Json::Arr(threshold)),
+                ("left", Json::Arr(left)),
+                ("right", Json::Arr(right)),
+                ("leaf", Json::Arr(leaf)),
+            ])
+        })
+        .collect();
+
+    obj(vec![
+        ("format", s(FORMAT)),
+        ("kind", s(match model.kind {
+            ModelKind::RandomForest => "rf",
+            ModelKind::Gbt => "gbt",
+        })),
+        ("n_features", num(model.n_features as f64)),
+        ("n_classes", num(model.n_classes as f64)),
+        ("base_score", f32_arr(&model.base_score)),
+        ("trees", arr(trees)),
+    ])
+}
+
+/// Deserialization error.
+#[derive(Debug)]
+pub struct SerialError(pub String);
+
+impl std::fmt::Display for SerialError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "model deserialization error: {}", self.0)
+    }
+}
+impl std::error::Error for SerialError {}
+
+fn err<T>(msg: impl Into<String>) -> Result<T, SerialError> {
+    Err(SerialError(msg.into()))
+}
+
+fn get_f64s(v: &Json, key: &str) -> Result<Vec<f64>, SerialError> {
+    let a = match v.get(key).and_then(Json::as_arr) {
+        Some(a) => a,
+        None => return err(format!("missing array '{key}'")),
+    };
+    a.iter()
+        .map(|x| x.as_f64().ok_or_else(|| SerialError(format!("non-number in '{key}'"))))
+        .collect()
+}
+
+/// Deserialize a model from a parsed JSON value. Structural validation
+/// (child indices, leaf arity, ...) is the caller's job via
+/// [`Model::validate`]; this only checks the format.
+pub fn from_json(v: &Json) -> Result<Model, SerialError> {
+    match v.get("format").and_then(Json::as_str) {
+        Some(f) if f == FORMAT => {}
+        Some(f) => return err(format!("unsupported format '{f}'")),
+        None => return err("missing 'format'"),
+    }
+    let kind = match v.get("kind").and_then(Json::as_str) {
+        Some("rf") => ModelKind::RandomForest,
+        Some("gbt") => ModelKind::Gbt,
+        other => return err(format!("bad kind {other:?}")),
+    };
+    let n_features = v
+        .get("n_features")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| SerialError("bad n_features".into()))?;
+    let n_classes = v
+        .get("n_classes")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| SerialError("bad n_classes".into()))?;
+    let base_score: Vec<f32> =
+        get_f64s(v, "base_score")?.into_iter().map(|x| x as f32).collect();
+
+    let trees_json = match v.get("trees").and_then(Json::as_arr) {
+        Some(a) => a,
+        None => return err("missing 'trees'"),
+    };
+    let mut trees = Vec::with_capacity(trees_json.len());
+    for (ti, tv) in trees_json.iter().enumerate() {
+        let feature = get_f64s(tv, "feature")?;
+        let threshold = get_f64s(tv, "threshold")?;
+        let left = get_f64s(tv, "left")?;
+        let right = get_f64s(tv, "right")?;
+        let leaf = match tv.get("leaf").and_then(Json::as_arr) {
+            Some(a) => a,
+            None => return err(format!("tree {ti}: missing 'leaf'")),
+        };
+        let n = feature.len();
+        if threshold.len() != n || left.len() != n || right.len() != n || leaf.len() != n {
+            return err(format!("tree {ti}: column length mismatch"));
+        }
+        let mut nodes = Vec::with_capacity(n);
+        for i in 0..n {
+            if feature[i] < 0.0 {
+                let values = leaf[i]
+                    .as_arr()
+                    .ok_or_else(|| SerialError(format!("tree {ti} node {i}: bad leaf")))?
+                    .iter()
+                    .map(|x| {
+                        x.as_f64()
+                            .map(|f| f as f32)
+                            .ok_or_else(|| SerialError(format!("tree {ti} node {i}: bad leaf value")))
+                    })
+                    .collect::<Result<Vec<f32>, _>>()?;
+                nodes.push(Node::Leaf { values });
+            } else {
+                nodes.push(Node::Branch {
+                    feature: feature[i] as u32,
+                    threshold: threshold[i] as f32,
+                    left: left[i] as u32,
+                    right: right[i] as u32,
+                });
+            }
+        }
+        trees.push(Tree { nodes });
+    }
+
+    Ok(Model { kind, n_features, n_classes, trees, base_score })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::shuttle_like;
+    use crate::trees::{ForestParams, RandomForest};
+
+    #[test]
+    fn roundtrip_trained_forest() {
+        let ds = shuttle_like(800, 21);
+        let m = RandomForest::train(
+            &ds,
+            &ForestParams { n_trees: 4, max_depth: 5, ..Default::default() },
+            9,
+        );
+        let text = m.to_json();
+        let m2 = Model::from_json(&text).unwrap();
+        assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn roundtrip_gbt() {
+        let ds = shuttle_like(300, 22);
+        let m = crate::trees::train_gbt(
+            &ds,
+            &crate::trees::GbtParams { n_rounds: 2, max_depth: 3, ..Default::default() },
+            1,
+        );
+        let m2 = Model::from_json(&m.to_json()).unwrap();
+        assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn thresholds_bit_exact() {
+        // FlInt correctness depends on thresholds surviving serialization
+        // bit-for-bit.
+        let ds = shuttle_like(500, 23);
+        let m = RandomForest::train(
+            &ds,
+            &ForestParams { n_trees: 3, max_depth: 6, ..Default::default() },
+            2,
+        );
+        let m2 = Model::from_json(&m.to_json()).unwrap();
+        for (t1, t2) in m.trees.iter().zip(&m2.trees) {
+            for (n1, n2) in t1.nodes.iter().zip(&t2.nodes) {
+                if let (Node::Branch { threshold: a, .. }, Node::Branch { threshold: b, .. }) =
+                    (n1, n2)
+                {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        assert!(Model::from_json("{\"format\":\"other\"}").is_err());
+        assert!(Model::from_json("{}").is_err());
+        assert!(Model::from_json("[1,2]").is_err());
+        assert!(Model::from_json("not json").is_err());
+    }
+
+    #[test]
+    fn rejects_column_mismatch() {
+        let bad = r#"{"format":"intreeger-ir-v1","kind":"rf","n_features":1,
+            "n_classes":2,"base_score":[0,0],
+            "trees":[{"feature":[-1],"threshold":[0,0],"left":[0],"right":[0],"leaf":[[1,0]]}]}"#;
+        assert!(Model::from_json(bad).is_err());
+    }
+
+    #[test]
+    fn rejects_invalid_structure_via_validate() {
+        // Well-formed JSON, structurally invalid model (bad child index).
+        let bad = r#"{"format":"intreeger-ir-v1","kind":"rf","n_features":1,
+            "n_classes":2,"base_score":[0,0],
+            "trees":[{"feature":[0],"threshold":[0.5],"left":[7],"right":[7],"leaf":[[]]}]}"#;
+        assert!(Model::from_json(bad).is_err());
+    }
+}

@@ -1,0 +1,129 @@
+//! Model-level statistics used by the evaluation harnesses: node/leaf
+//! counts, depth histograms, and the leaf-probability distribution the
+//! probability-to-integer conversion (paper §III-A) operates on.
+
+use super::{Model, Node};
+
+/// Summary statistics of a trained model.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelStats {
+    pub n_trees: usize,
+    pub n_nodes: usize,
+    pub n_branches: usize,
+    pub n_leaves: usize,
+    pub max_depth: usize,
+    pub mean_depth: f64,
+    /// Smallest non-zero leaf probability in the model — drives the
+    /// paper's first edge case (probabilities < ~0.001 lose relative
+    /// precision vs f32; see §III-A).
+    pub min_nonzero_leaf_prob: f32,
+    /// Expected number of branch nodes evaluated per inference assuming
+    /// uniform leaf reachability (upper-bounded by max depth).
+    pub mean_leaf_depth: f64,
+}
+
+/// Compute summary statistics for a model.
+pub fn stats(model: &Model) -> ModelStats {
+    let mut n_branches = 0usize;
+    let mut n_leaves = 0usize;
+    let mut min_p = f32::INFINITY;
+    let mut depth_sum = 0usize;
+    let mut leaf_depth_sum = 0usize;
+    let mut leaf_count = 0usize;
+
+    for tree in &model.trees {
+        // depth of each node via BFS from root
+        let mut depth = vec![0usize; tree.nodes.len()];
+        let mut stack = vec![0usize];
+        let mut seen = vec![false; tree.nodes.len()];
+        while let Some(i) = stack.pop() {
+            if seen[i] {
+                continue;
+            }
+            seen[i] = true;
+            match &tree.nodes[i] {
+                Node::Branch { left, right, .. } => {
+                    n_branches += 1;
+                    for &c in [left, right].iter() {
+                        depth[*c as usize] = depth[i] + 1;
+                        stack.push(*c as usize);
+                    }
+                }
+                Node::Leaf { values } => {
+                    n_leaves += 1;
+                    leaf_depth_sum += depth[i];
+                    leaf_count += 1;
+                    for &v in values {
+                        if v > 0.0 && v < min_p {
+                            min_p = v;
+                        }
+                    }
+                }
+            }
+            depth_sum += depth[i];
+        }
+    }
+
+    let n_nodes = n_branches + n_leaves;
+    ModelStats {
+        n_trees: model.trees.len(),
+        n_nodes,
+        n_branches,
+        n_leaves,
+        max_depth: model.max_depth(),
+        mean_depth: if n_nodes == 0 { 0.0 } else { depth_sum as f64 / n_nodes as f64 },
+        min_nonzero_leaf_prob: if min_p.is_finite() { min_p } else { 0.0 },
+        mean_leaf_depth: if leaf_count == 0 { 0.0 } else { leaf_depth_sum as f64 / leaf_count as f64 },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{ModelKind, Tree};
+
+    fn stump() -> Model {
+        Model {
+            kind: ModelKind::RandomForest,
+            n_features: 1,
+            n_classes: 2,
+            trees: vec![Tree {
+                nodes: vec![
+                    Node::Branch { feature: 0, threshold: 0.5, left: 1, right: 2 },
+                    Node::Leaf { values: vec![0.9, 0.1] },
+                    Node::Leaf { values: vec![0.25, 0.75] },
+                ],
+            }],
+            base_score: vec![0.0, 0.0],
+        }
+    }
+
+    #[test]
+    fn stump_stats() {
+        let s = stats(&stump());
+        assert_eq!(s.n_trees, 1);
+        assert_eq!(s.n_nodes, 3);
+        assert_eq!(s.n_branches, 1);
+        assert_eq!(s.n_leaves, 2);
+        assert_eq!(s.max_depth, 1);
+        assert_eq!(s.min_nonzero_leaf_prob, 0.1);
+        assert!((s.mean_leaf_depth - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trained_model_stats_consistent() {
+        let ds = crate::data::shuttle_like(2000, 5);
+        let model = crate::trees::RandomForest::train(
+            &ds,
+            &crate::trees::ForestParams { n_trees: 5, max_depth: 6, ..Default::default() },
+            42,
+        );
+        let s = stats(&model);
+        assert_eq!(s.n_trees, 5);
+        assert_eq!(s.n_nodes, s.n_branches + s.n_leaves);
+        // a binary tree has exactly one more leaf than branches
+        assert_eq!(s.n_leaves, s.n_branches + s.n_trees);
+        assert!(s.max_depth <= 6);
+        assert!(s.min_nonzero_leaf_prob > 0.0 && s.min_nonzero_leaf_prob <= 1.0);
+    }
+}

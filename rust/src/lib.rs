@@ -1,0 +1,46 @@
+//! # InTreeger — end-to-end integer-only decision tree inference
+//!
+//! Reproduction of *InTreeger: An End-to-End Framework for Integer-Only
+//! Decision Tree Inference* (Bart et al., 2025).
+//!
+//! The crate implements the full pipeline the paper describes:
+//!
+//! 1. **Training substrate** ([`trees`]) — CART decision trees, Random
+//!    Forests and gradient-boosted trees trained from scratch on a
+//!    [`data::Dataset`] (the paper uses scikit-learn; we build the
+//!    equivalent so the framework is self-contained).
+//! 2. **Model IR** ([`ir`]) — a Treelite-like intermediate representation
+//!    every trainer lowers into and every backend consumes.
+//! 3. **Integer transforms** — [`flint`] (order-preserving reinterpretation
+//!    of IEEE-754 floats so threshold comparisons run on the integer ALU)
+//!    and [`quant`] (leaf-probability → `u32` fixed point with scaling
+//!    factor `2^32 / n_trees`, the paper's §III-A contribution).
+//! 4. **Inference engines** ([`inference`]) — executable float / FlInt /
+//!    integer-only engines with semantics identical to the generated C.
+//! 5. **Code generation** ([`codegen`]) — architecture-agnostic C output
+//!    (if-else and native-tree layouts, three numeric variants) plus a
+//!    gcc compile-and-run harness.
+//! 6. **Architecture simulation** ([`simarch`]) — trace-driven cost models
+//!    for the paper's four cores (EPYC-7282/x86, Cortex-A72/ARMv7,
+//!    U74/RV64, FE310/RV32) standing in for the hardware testbed.
+//! 7. **Energy model** ([`energy`]) — the paper's §IV-F Joulescope
+//!    methodology (power-trace synthesis + the `E_saved` formula).
+//! 8. **Deployment runtime** ([`runtime`], [`coordinator`]) — a PJRT/XLA
+//!    batched inference engine (AOT-lowered JAX+Pallas forest traversal)
+//!    behind a dynamic-batching request router.
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod codegen;
+pub mod coordinator;
+pub mod data;
+pub mod energy;
+pub mod flint;
+pub mod inference;
+pub mod ir;
+pub mod quant;
+pub mod runtime;
+pub mod simarch;
+pub mod trees;
+pub mod util;

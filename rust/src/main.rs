@@ -1,0 +1,295 @@
+//! InTreeger CLI — the end-to-end framework entrypoint (paper Fig 1):
+//! dataset in → trained model → integer-only C out, plus serving,
+//! simulation and evaluation utilities.
+//!
+//! Subcommands:
+//!   train     train an RF/GBT on a dataset (synthetic or CSV) → model.json
+//!   codegen   generate integer-only (or float/flint) C from a model
+//!   predict   run a model over a CSV and print predictions
+//!   simulate  per-core cycle estimates for all three variants (Fig 3)
+//!   serve     start the batching server and run a demo workload
+//!   tablei    print the evaluation-core table (Table I)
+//!
+//! Argument parsing is hand-rolled (`--key value` pairs) — the offline
+//! build has no clap; see `Args`.
+
+use intreeger::codegen::{self, Layout};
+use intreeger::coordinator::{InferenceServer, ServerConfig};
+use intreeger::data::{self, Dataset};
+use intreeger::inference::{self, Variant};
+use intreeger::ir::Model;
+use intreeger::simarch::{self, Core};
+use intreeger::trees::{self, ForestParams, GbtParams, RandomForest};
+use intreeger::util::Rng;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Minimal `--key value` argument map with typed accessors.
+struct Args {
+    values: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Args, String> {
+        let mut values = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let k = argv[i]
+                .strip_prefix("--")
+                .ok_or_else(|| format!("expected --flag, got '{}'", argv[i]))?;
+            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                values.insert(k.to_string(), argv[i + 1].clone());
+                i += 2;
+            } else {
+                values.insert(k.to_string(), "true".to_string());
+                i += 1;
+            }
+        }
+        Ok(Args { values })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).map(|v| v.parse().expect("bad integer flag")).unwrap_or(default)
+    }
+
+    fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).map(|v| v.parse().expect("bad integer flag")).unwrap_or(default)
+    }
+
+    fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+fn load_dataset(args: &Args) -> Dataset {
+    let rows = args.usize_or("rows", 8000);
+    let seed = args.u64_or("seed", 42);
+    match args.get("dataset").unwrap_or("shuttle") {
+        "shuttle" => data::shuttle_like(rows, seed),
+        "esa" => data::esa_like(rows, seed),
+        spec if spec.starts_with("csv:") => {
+            data::csv::read_file(Path::new(&spec[4..]), args.flag("header"))
+                .expect("failed to read csv dataset")
+        }
+        other => panic!("unknown dataset '{other}' (use shuttle | esa | csv:PATH)"),
+    }
+}
+
+fn load_model(args: &Args) -> Model {
+    let path = args.get("model").expect("--model PATH required");
+    let text = std::fs::read_to_string(path).expect("cannot read model file");
+    Model::from_json(&text).expect("invalid model file")
+}
+
+fn cmd_train(args: &Args) {
+    let ds = load_dataset(args);
+    let seed = args.u64_or("seed", 42);
+    let mut rng = Rng::new(seed ^ 0x5117);
+    let (train, test) = ds.train_test_split(0.25, &mut rng);
+    let model = if args.flag("gbt") {
+        trees::train_gbt(
+            &train,
+            &GbtParams {
+                n_rounds: args.usize_or("trees", 10),
+                max_depth: args.usize_or("depth", 4),
+                ..Default::default()
+            },
+            seed,
+        )
+    } else {
+        RandomForest::train(
+            &train,
+            &ForestParams {
+                n_trees: args.usize_or("trees", 10),
+                max_depth: args.usize_or("depth", 8),
+                ..Default::default()
+            },
+            seed,
+        )
+    };
+    let acc = trees::accuracy(&model, &test);
+    let stats = intreeger::ir::stats::stats(&model);
+    eprintln!(
+        "trained {} trees, {} nodes, depth {}; holdout accuracy {:.4}",
+        stats.n_trees, stats.n_nodes, stats.max_depth, acc
+    );
+    let out = args.get("out").unwrap_or("model.json");
+    std::fs::write(out, model.to_json()).expect("write model");
+    eprintln!("wrote {out}");
+}
+
+fn parse_variant(s: &str) -> Variant {
+    match s {
+        "float" => Variant::Float,
+        "flint" => Variant::FlInt,
+        "intreeger" | "int" => Variant::IntTreeger,
+        other => panic!("unknown variant '{other}'"),
+    }
+}
+
+fn cmd_import(args: &Args) {
+    let path = args.get("file").expect("--file PATH required");
+    let text = std::fs::read_to_string(path).expect("cannot read dump file");
+    let model = match args.get("format").unwrap_or("lightgbm") {
+        "lightgbm" => intreeger::ir::import::lightgbm::import(&text).expect("lightgbm import"),
+        "xgboost" => {
+            let nf = args.usize_or("features", 0);
+            let nc = args.usize_or("classes", 2);
+            assert!(nf > 0, "--features N required for xgboost dumps");
+            let base = args
+                .get("base-score")
+                .map(|v| v.parse::<f32>().expect("bad base-score"))
+                .unwrap_or(0.0);
+            intreeger::ir::import::xgboost::import(&text, nf, nc, base).expect("xgboost import")
+        }
+        other => panic!("unknown format '{other}' (use lightgbm | xgboost)"),
+    };
+    let stats = intreeger::ir::stats::stats(&model);
+    eprintln!(
+        "imported {} trees, {} nodes, {} classes, {} features",
+        stats.n_trees, stats.n_nodes, model.n_classes, model.n_features
+    );
+    let out = args.get("out").unwrap_or("model.json");
+    std::fs::write(out, model.to_json()).expect("write model");
+    eprintln!("wrote {out}");
+}
+
+fn cmd_codegen(args: &Args) {
+    let model = load_model(args);
+    let variant = parse_variant(args.get("variant").unwrap_or("intreeger"));
+    let layout = match args.get("layout").unwrap_or("ifelse") {
+        "ifelse" => Layout::IfElse,
+        "native" => Layout::Native,
+        other => panic!("unknown layout '{other}'"),
+    };
+    let src = codegen::generate(&model, layout, variant);
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, &src).expect("write C file");
+            eprintln!(
+                "wrote {path} ({} bytes, variant {}, layout {})",
+                src.len(),
+                variant.name(),
+                layout.name()
+            );
+        }
+        None => print!("{src}"),
+    }
+}
+
+fn cmd_predict(args: &Args) {
+    let model = load_model(args);
+    let csv_path = args.get("csv").expect("--csv PATH required");
+    let ds = data::csv::read_file(Path::new(csv_path), args.flag("header")).expect("read csv");
+    let engine = inference::engines::compile_variant(
+        &model,
+        parse_variant(args.get("engine").unwrap_or("intreeger")),
+    );
+    let mut correct = 0usize;
+    for i in 0..ds.n_rows() {
+        let pred = engine.predict(ds.row(i));
+        println!("{pred}");
+        if pred == ds.labels[i] {
+            correct += 1;
+        }
+    }
+    eprintln!(
+        "accuracy vs labels in file: {:.4}",
+        correct as f64 / ds.n_rows().max(1) as f64
+    );
+}
+
+fn cmd_simulate(args: &Args) {
+    let model = load_model(args);
+    let ds = load_dataset(args);
+    println!("core,variant,instructions,cycles,ipc,us_per_inference");
+    for core in Core::all() {
+        for v in Variant::all() {
+            let r = simarch::simulate(&model, &ds, v, core, 300);
+            println!(
+                "{},{},{:.1},{:.1},{:.3},{:.3}",
+                core.name(),
+                v.name(),
+                r.instructions,
+                r.cycles,
+                r.ipc(),
+                r.seconds() * 1e6
+            );
+        }
+    }
+}
+
+fn cmd_serve(args: &Args) {
+    let model = load_model(args);
+    let ds = load_dataset(args);
+    let artifacts = args
+        .get("artifacts")
+        .map(PathBuf::from)
+        .or_else(|| Some(PathBuf::from("artifacts")))
+        .filter(|p| intreeger::runtime::artifacts_available(p));
+    if artifacts.is_none() {
+        eprintln!("(artifacts not found — scalar route only)");
+    }
+    let server = InferenceServer::start(&model, artifacts, ServerConfig::default());
+    let n = args.usize_or("requests", 1000);
+    let rows: Vec<Vec<f32>> = (0..n).map(|i| ds.row(i % ds.n_rows()).to_vec()).collect();
+    let t0 = std::time::Instant::now();
+    let responses = server.infer_many(rows);
+    let wall = t0.elapsed();
+    let snap = server.metrics();
+    println!(
+        "served {n} requests in {:.1} ms ({:.0} req/s)",
+        wall.as_secs_f64() * 1e3,
+        n as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "routes: scalar {} rows / xla {} rows; mean batch {:.1}; latency p50 {:.0} us p99 {:.0} us",
+        snap.rows_scalar, snap.rows_xla, snap.mean_batch, snap.latency_p50_us, snap.latency_p99_us
+    );
+    let _ = responses;
+}
+
+fn cmd_tablei() {
+    print!("{}", simarch::cores::table_i());
+}
+
+const USAGE: &str = "usage: intreeger <train|import|codegen|predict|simulate|serve|tablei> [--flags]\n\
+  train    --dataset shuttle|esa|csv:PATH [--rows N] [--trees N] [--depth D] [--gbt] [--seed S] [--out model.json]\n\
+  import   --file dump.txt [--format lightgbm|xgboost] [--features N --classes N] [--out model.json]\n\
+  codegen  --model model.json [--variant float|flint|intreeger] [--layout ifelse|native] [--out model.c]\n\
+  predict  --model model.json --csv data.csv [--engine float|flint|int]\n\
+  simulate --model model.json [--dataset ...]\n\
+  serve    --model model.json [--artifacts DIR] [--requests N]\n\
+  tablei\n";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        eprint!("{USAGE}");
+        std::process::exit(2);
+    };
+    let args = match Args::parse(&argv[1..]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    match cmd.as_str() {
+        "train" => cmd_train(&args),
+        "import" => cmd_import(&args),
+        "codegen" => cmd_codegen(&args),
+        "predict" => cmd_predict(&args),
+        "simulate" => cmd_simulate(&args),
+        "serve" => cmd_serve(&args),
+        "tablei" => cmd_tablei(),
+        other => {
+            eprintln!("unknown command '{other}'\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,342 @@
+//! Probability-to-integer conversion (§III-A) — the paper's contribution.
+//!
+//! Leaf class probabilities `p ∈ [0, 1]` are converted **at code
+//! generation time** to `u32` fixed point with scaling factor
+//! `S = 2^32 / n_trees`:
+//!
+//! ```text
+//! q = floor(p * 2^32 / n)
+//! ```
+//!
+//! Each tree contributes `q < 2^32/n + 1`, so the sum over `n` trees fits
+//! a `u32` without overflow, and ensemble accumulation becomes plain
+//! integer addition — no FPU anywhere in the inference path. The absolute
+//! representation error per accumulated probability is below `n / 2^32`
+//! (the paper's §III-A precision analysis), which beats single-precision
+//! float (`2^-24`) whenever `n <= 256`.
+//!
+//! One corner the paper glosses over: when `n` divides `2^32` exactly
+//! (n = 1, 2, 4, ...) and a leaf has `p = 1.0`, the per-tree value is
+//! exactly `2^32/n` and `n` such trees sum to `2^32` — which wraps a
+//! `u32` to 0 and would catastrophically mis-rank that class. We
+//! therefore clamp each quantized value to `floor((2^32-1)/n)`, which
+//! guarantees `sum <= 2^32-1` unconditionally while changing the paper's
+//! arithmetic by at most one ULP of the fixed-point grid (error still
+//! within the `n/2^32` bound) — see [`prob_to_fixed`] and the
+//! `prop_no_overflow_for_distributions` property test.
+//!
+//! GBT leaf *margins* are not probabilities; [`margin_scale`] derives a
+//! power-of-two fixed-point scale from the model's margin range instead.
+
+use crate::ir::{Model, ModelKind, Node};
+
+/// 2^32 as f64 (exact).
+pub const TWO_32: f64 = 4_294_967_296.0;
+
+/// Fixed-point scaling factor for an `n`-tree ensemble: `2^32 / n`.
+#[inline]
+pub fn scale_factor(n_trees: usize) -> f64 {
+    assert!(n_trees > 0);
+    TWO_32 / n_trees as f64
+}
+
+/// Convert one leaf probability to `u32` fixed point with scale `2^32/n`
+/// (floor rounding, as in the paper's worked example: 0.75 with n=10 →
+/// 322122547). Values are clamped to `floor((2^32-1)/n)` so that the sum
+/// over `n` trees provably fits a `u32` (see module docs).
+#[inline]
+pub fn prob_to_fixed(p: f32, n_trees: usize) -> u32 {
+    debug_assert!((0.0..=1.0).contains(&p), "probability out of range: {p}");
+    let cap = (u32::MAX as u64 / n_trees as u64) as u32;
+    let q = (p as f64 * scale_factor(n_trees)).floor();
+    if q >= cap as f64 {
+        cap
+    } else {
+        q as u32
+    }
+}
+
+/// Convert an accumulated `u32` fixed-point sum back to an f32 probability
+/// (only used for reporting/verification — inference itself never needs
+/// this conversion; argmax happens on the integer sums).
+#[inline]
+pub fn fixed_to_prob(acc: u32) -> f32 {
+    (acc as f64 / TWO_32) as f32
+}
+
+/// Worst-case absolute error of the accumulated ensemble probability:
+/// each of the `n` terms loses < 1/S = n/2^32 in the floor... divided by
+/// the implicit ensemble average. Net bound: `n / 2^32` on the final
+/// averaged probability (paper §III-A).
+#[inline]
+pub fn error_bound(n_trees: usize) -> f64 {
+    n_trees as f64 / TWO_32
+}
+
+/// Largest ensemble size for which the fixed-point representation is at
+/// least as accurate as an IEEE-754 single float (paper: `n/2^32 >
+/// 1/2^24 ⇔ n > 256`).
+pub const MAX_TREES_BEATING_F32: usize = 256;
+
+/// True when the fixed-point error bound is no worse than f32's 2^-24.
+#[inline]
+pub fn beats_f32(n_trees: usize) -> bool {
+    n_trees <= MAX_TREES_BEATING_F32
+}
+
+/// Maximum possible accumulated value across `n` trees: each leaf
+/// contributes at most `floor((2^32-1)/n)` (the clamp in
+/// [`prob_to_fixed`]), so `n` trees sum to at most `2^32 - 1` — the
+/// no-overflow guarantee the integer engine's unchecked `u32` additions
+/// rely on.
+pub fn max_accumulated(n_trees: usize) -> u64 {
+    n_trees as u64 * (u32::MAX as u64 / n_trees as u64)
+}
+
+/// A quantized leaf: per-class `u32` fixed-point contributions.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct QuantLeaf {
+    pub values: Vec<u32>,
+}
+
+/// Quantize every leaf of a random-forest model. Returns, per tree, per
+/// leaf-node-index, the `u32` contribution vector. Branch nodes get `None`.
+///
+/// Panics if the model is not a `RandomForest` (GBT margins use
+/// [`margin_scale`] + [`margin_to_fixed`] instead).
+pub fn quantize_forest(model: &Model) -> Vec<Vec<Option<QuantLeaf>>> {
+    assert_eq!(model.kind, ModelKind::RandomForest, "quantize_forest needs probability leaves");
+    let n = model.trees.len();
+    model
+        .trees
+        .iter()
+        .map(|t| {
+            t.nodes
+                .iter()
+                .map(|node| match node {
+                    Node::Leaf { values } => Some(QuantLeaf {
+                        values: values.iter().map(|&p| prob_to_fixed(p, n)).collect(),
+                    }),
+                    Node::Branch { .. } => None,
+                })
+                .collect()
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// GBT margin fixed point
+// ---------------------------------------------------------------------------
+
+/// Fixed-point parameters for GBT margins: `q = round(m * 2^shift)`,
+/// accumulated in `i64`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MarginScale {
+    pub shift: u32,
+}
+
+/// Derive a margin scale: choose the largest `shift` such that the
+/// worst-case accumulated |margin| (sum of per-tree maxima + base score)
+/// stays below `2^62` — leaving headroom so i64 accumulation cannot
+/// overflow.
+pub fn margin_scale(model: &Model) -> MarginScale {
+    assert_eq!(model.kind, ModelKind::Gbt);
+    let mut max_abs_sum = model.base_score.iter().fold(0.0f64, |a, &b| a.max(b.abs() as f64));
+    for t in &model.trees {
+        let tree_max = t
+            .nodes
+            .iter()
+            .filter_map(|n| match n {
+                Node::Leaf { values } => {
+                    Some(values.iter().fold(0.0f64, |a, &v| a.max(v.abs() as f64)))
+                }
+                _ => None,
+            })
+            .fold(0.0f64, f64::max);
+        max_abs_sum += tree_max;
+    }
+    let max_abs_sum = max_abs_sum.max(1e-30);
+    // 2^shift * max_abs_sum < 2^62  =>  shift < 62 - log2(max_abs_sum)
+    let shift = (61.0 - max_abs_sum.log2()).floor().clamp(0.0, 40.0) as u32;
+    MarginScale { shift }
+}
+
+/// Quantize one margin value under a scale.
+#[inline]
+pub fn margin_to_fixed(m: f32, scale: MarginScale) -> i64 {
+    (m as f64 * (1u64 << scale.shift) as f64).round() as i64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Model, ModelKind, Tree};
+    use crate::prop_ensure;
+    use crate::util::check::check;
+
+    #[test]
+    fn paper_worked_example() {
+        // RF with 10 trees; leaf (0.75, 0.25) → (322122547, 107374182).
+        assert_eq!(prob_to_fixed(0.75, 10), 322_122_547);
+        assert_eq!(prob_to_fixed(0.25, 10), 107_374_182);
+    }
+
+    #[test]
+    fn clamp_corner_case() {
+        // n=1, p=1.0: floor(2^32) would overflow u32; clamp to u32::MAX.
+        assert_eq!(prob_to_fixed(1.0, 1), u32::MAX);
+        assert_eq!(prob_to_fixed(0.0, 1), 0);
+    }
+
+    #[test]
+    fn error_bound_matches_paper() {
+        assert!(beats_f32(256));
+        assert!(!beats_f32(257));
+        assert!(error_bound(1) <= 1.0 / (1u64 << 32) as f64 + 1e-30);
+        // n=100 trees: error ~ 1e-8 (the paper's Fig 2 magnitude).
+        let e = error_bound(100);
+        assert!(e > 1e-8 && e < 1e-7, "e = {e}");
+    }
+
+    #[test]
+    fn max_accumulated_fits_u32() {
+        for n in [1usize, 2, 3, 4, 7, 8, 10, 50, 64, 100, 128, 256, 257, 1000] {
+            assert!(max_accumulated(n) <= u32::MAX as u64, "n = {n}");
+        }
+    }
+
+    #[test]
+    fn power_of_two_saturated_leaves_do_not_wrap() {
+        // The edge case the paper misses: n | 2^32 and p = 1.0.
+        for n in [1usize, 2, 4, 8, 16, 64, 256] {
+            let q = prob_to_fixed(1.0, n) as u64;
+            assert!(q * n as u64 <= u32::MAX as u64, "n = {n} wraps");
+            // and the error stays within the paper's bound
+            let err = (1.0 - (q * n as u64) as f64 / TWO_32).abs();
+            assert!(err <= error_bound(n) + 1.0 / TWO_32, "n = {n} err {err}");
+        }
+    }
+
+    fn tiny_forest(n_trees: usize) -> Model {
+        let tree = Tree {
+            nodes: vec![
+                crate::ir::Node::Branch { feature: 0, threshold: 0.0, left: 1, right: 2 },
+                crate::ir::Node::Leaf { values: vec![0.75, 0.25] },
+                crate::ir::Node::Leaf { values: vec![0.0, 1.0] },
+            ],
+        };
+        Model {
+            kind: ModelKind::RandomForest,
+            n_features: 1,
+            n_classes: 2,
+            trees: vec![tree; n_trees],
+            base_score: vec![0.0, 0.0],
+        }
+    }
+
+    #[test]
+    fn quantize_forest_shapes() {
+        let m = tiny_forest(10);
+        let q = quantize_forest(&m);
+        assert_eq!(q.len(), 10);
+        assert!(q[0][0].is_none());
+        assert_eq!(q[0][1].as_ref().unwrap().values, vec![322_122_547, 107_374_182]);
+    }
+
+    #[test]
+    #[should_panic(expected = "probability leaves")]
+    fn quantize_rejects_gbt() {
+        let mut m = tiny_forest(1);
+        m.kind = ModelKind::Gbt;
+        quantize_forest(&m);
+    }
+
+    #[test]
+    fn margin_scale_headroom() {
+        let ds = crate::data::shuttle_like(500, 1);
+        let m = crate::trees::train_gbt(
+            &ds,
+            &crate::trees::GbtParams { n_rounds: 3, max_depth: 3, ..Default::default() },
+            2,
+        );
+        let s = margin_scale(&m);
+        assert!(s.shift > 10, "shift {}", s.shift);
+        // Worst-case accumulated magnitude must stay under 2^62.
+        let mut max_abs_sum = m.base_score.iter().fold(0.0f64, |a, &b| a.max(b.abs() as f64));
+        for t in &m.trees {
+            let tm = t
+                .nodes
+                .iter()
+                .filter_map(|n| match n {
+                    crate::ir::Node::Leaf { values } => {
+                        Some(values.iter().fold(0.0f64, |a, &v| a.max(v.abs() as f64)))
+                    }
+                    _ => None,
+                })
+                .fold(0.0f64, f64::max);
+            max_abs_sum += tm;
+        }
+        assert!(max_abs_sum * ((1u64 << s.shift) as f64) < (1u64 << 62) as f64);
+    }
+
+    /// Quantization error of a single probability is < 1/S (floor).
+    #[test]
+    fn prop_single_prob_error_bound() {
+        check(
+            "single_prob_error_bound",
+            |r| (r.uniform() as f32, 1 + r.below(299)),
+            |&(p, n)| {
+                let q = prob_to_fixed(p, n);
+                let s = scale_factor(n);
+                let err = (p as f64 - q as f64 / s).abs();
+                prop_ensure!(err <= 1.0 / s + 1e-12, "err {} bound {}", err, 1.0 / s);
+                Ok(())
+            },
+        );
+    }
+
+    /// Summing n quantized probabilities from distributions never
+    /// overflows u32 (the paper's overflow-prevention claim).
+    #[test]
+    fn prop_no_overflow_for_distributions() {
+        check(
+            "no_overflow_for_distributions",
+            |r| {
+                let n = 1 + r.below(299);
+                let k = 1 + r.below(7);
+                let raw: Vec<f64> = (0..k).map(|_| r.uniform()).collect();
+                let total: f64 = raw.iter().sum::<f64>().max(1e-9);
+                let probs: Vec<f32> = raw.iter().map(|&x| (x / total) as f32).collect();
+                (n, probs)
+            },
+            |&(n, ref probs)| {
+                for &p in probs {
+                    // Worst case: all n trees land on this same leaf value.
+                    let q = prob_to_fixed(p.min(1.0), n) as u64;
+                    let sum = q * n as u64;
+                    prop_ensure!(sum <= u32::MAX as u64, "class sum {} overflows (n={})", sum, n);
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Argmax of fixed-point sums equals argmax of float sums when class
+    /// probabilities are separated by more than the error bound.
+    #[test]
+    fn prop_argmax_parity_when_separated() {
+        check(
+            "argmax_parity_when_separated",
+            |r| (1 + r.below(255), r.uniform()),
+            |&(n, a)| {
+                let gap = 2.0 * error_bound(n) + 1e-6;
+                let p0 = (a * (1.0 - gap)) as f32;
+                let p1 = (p0 as f64 + gap) as f32;
+                let q0 = (prob_to_fixed(p0, n) as u64) * n as u64;
+                let q1 = (prob_to_fixed(p1, n) as u64) * n as u64;
+                prop_ensure!((p0 < p1) == (q0 < q1), "ordering flip: n={n} p0={p0} p1={p1}");
+                Ok(())
+            },
+        );
+    }
+}

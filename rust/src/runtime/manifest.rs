@@ -1,0 +1,167 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the rust runtime. Describes every compiled HLO tier (shapes, depth,
+//! file name) so the runtime can pick the smallest tier a model fits.
+
+use crate::ir::Model;
+use crate::util::Json;
+use std::path::Path;
+
+/// One compiled artifact tier (fixed shapes baked at AOT time).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tier {
+    pub name: String,
+    pub file: String,
+    pub batch: usize,
+    pub features: usize,
+    pub trees: usize,
+    pub nodes: usize,
+    pub classes: usize,
+    pub depth: usize,
+    pub use_pallas: bool,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub tiers: Vec<Tier>,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from the artifact directory.
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        Self::parse(&text)
+    }
+
+    /// Parse manifest JSON.
+    pub fn parse(text: &str) -> anyhow::Result<Manifest> {
+        let v = Json::parse(text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        match v.get("format").and_then(Json::as_str) {
+            Some("intreeger-artifacts-v1") => {}
+            other => anyhow::bail!("unsupported artifact format {other:?}"),
+        }
+        let tiers_json = v
+            .get("tiers")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("manifest: missing tiers"))?;
+        let mut tiers = Vec::new();
+        for t in tiers_json {
+            let field = |k: &str| -> anyhow::Result<usize> {
+                t.get(k)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow::anyhow!("manifest tier: bad field '{k}'"))
+            };
+            tiers.push(Tier {
+                name: t
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow::anyhow!("tier: missing name"))?
+                    .to_string(),
+                file: t
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow::anyhow!("tier: missing file"))?
+                    .to_string(),
+                batch: field("B")?,
+                features: field("F")?,
+                trees: field("T")?,
+                nodes: field("N")?,
+                classes: field("C")?,
+                depth: field("depth")?,
+                use_pallas: matches!(t.get("use_pallas"), Some(Json::Bool(true))),
+            });
+        }
+        Ok(Manifest { tiers })
+    }
+
+    /// Does `model` fit in `tier`?
+    pub fn fits(model: &Model, tier: &Tier) -> bool {
+        let max_nodes = model.trees.iter().map(|t| t.nodes.len()).max().unwrap_or(0);
+        model.n_features <= tier.features
+            && model.n_classes <= tier.classes
+            && model.trees.len() <= tier.trees
+            && max_nodes <= tier.nodes
+            && model.max_depth() <= tier.depth
+    }
+
+    /// Pick the smallest pallas tier fitting `model` with batch >=
+    /// `min_batch` (cost metric: padded tensor volume).
+    pub fn pick(&self, model: &Model, min_batch: usize) -> Option<&Tier> {
+        self.tiers
+            .iter()
+            .filter(|t| t.use_pallas && t.batch >= min_batch && Self::fits(model, t))
+            .min_by_key(|t| t.trees * t.nodes * (t.classes + 4) + t.batch * t.features)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::shuttle_like;
+    use crate::trees::{ForestParams, RandomForest};
+
+    const SAMPLE: &str = r#"{
+        "format": "intreeger-artifacts-v1",
+        "tiers": [
+            {"name":"quick","file":"forest_quick.hlo.txt","B":64,"F":8,"T":16,"N":63,"C":8,"depth":6,"block_b":32,"use_pallas":true},
+            {"name":"big","file":"forest_big.hlo.txt","B":256,"F":8,"T":64,"N":255,"C":8,"depth":8,"block_b":64,"use_pallas":true},
+            {"name":"oracle","file":"forest_o.hlo.txt","B":64,"F":8,"T":16,"N":63,"C":8,"depth":6,"block_b":32,"use_pallas":false}
+        ]}"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.tiers.len(), 3);
+        assert_eq!(m.tiers[0].nodes, 63);
+        assert!(m.tiers[0].use_pallas);
+        assert!(!m.tiers[2].use_pallas);
+    }
+
+    #[test]
+    fn parse_rejects_bad_format() {
+        assert!(Manifest::parse("{\"format\":\"x\",\"tiers\":[]}").is_err());
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse("nope").is_err());
+    }
+
+    #[test]
+    fn pick_prefers_smallest_fitting() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let ds = shuttle_like(500, 80);
+        let small = RandomForest::train(
+            &ds,
+            &ForestParams { n_trees: 8, max_depth: 5, ..Default::default() },
+            1,
+        );
+        assert_eq!(m.pick(&small, 1).unwrap().name, "quick");
+        let big = RandomForest::train(
+            &ds,
+            &ForestParams { n_trees: 40, max_depth: 5, ..Default::default() },
+            1,
+        );
+        assert_eq!(m.pick(&big, 1).unwrap().name, "big");
+        // min_batch forces the bigger tier
+        assert_eq!(m.pick(&small, 256).unwrap().name, "big");
+        // nothing fits a 200-tree model
+        let huge = RandomForest::train(
+            &ds,
+            &ForestParams { n_trees: 80, max_depth: 5, ..Default::default() },
+            1,
+        );
+        assert!(m.pick(&huge, 1).is_none());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !super::super::artifacts_available(&dir) {
+            eprintln!("artifacts not built; skipping");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.tiers.iter().any(|t| t.name == "quick"));
+        for t in &m.tiers {
+            assert!(dir.join(&t.file).is_file(), "missing {}", t.file);
+        }
+    }
+}

@@ -1,0 +1,42 @@
+//! PJRT/XLA runtime: loads the AOT-compiled JAX/Pallas forest-inference
+//! artifacts (HLO text, produced once by `python/compile/aot.py`) and
+//! executes them from rust. Python is never on this path.
+//!
+//! Flow: [`Manifest::load`] reads `artifacts/manifest.json` →
+//! [`pack::ForestPack`] pads an IR model into the smallest fitting tier →
+//! [`PjrtEngine::load`] compiles the tier's HLO once on the PJRT CPU
+//! client → [`PjrtEngine::execute`] runs batches of order-preserved u32
+//! feature words and returns u32 fixed-point class accumulators —
+//! bit-identical to the scalar [`crate::inference::IntEngine`] (verified
+//! by `rust/tests/xla_parity.rs`).
+
+pub mod manifest;
+pub mod pack;
+pub mod pjrt;
+
+pub use manifest::{Manifest, Tier};
+pub use pack::ForestPack;
+pub use pjrt::PjrtEngine;
+
+use crate::ir::Model;
+use std::path::Path;
+
+/// Load the best engine for a model from an artifact directory: picks
+/// the smallest tier that fits, packs the model, compiles the HLO.
+pub fn engine_for_model(
+    artifacts_dir: &Path,
+    model: &Model,
+    min_batch: usize,
+) -> anyhow::Result<PjrtEngine> {
+    let manifest = Manifest::load(artifacts_dir)?;
+    let tier = manifest
+        .pick(model, min_batch)
+        .ok_or_else(|| anyhow::anyhow!("no artifact tier fits the model"))?;
+    let pack = ForestPack::pack(model, tier)?;
+    PjrtEngine::load(artifacts_dir, tier.clone(), pack)
+}
+
+/// True when an artifact directory looks usable (manifest present).
+pub fn artifacts_available(dir: &Path) -> bool {
+    dir.join("manifest.json").is_file()
+}

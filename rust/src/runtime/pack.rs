@@ -1,0 +1,199 @@
+//! Model packing: IR model → padded forest tensors matching an artifact
+//! tier's static shapes (the rust half of the contract whose python half
+//! is `compile/kernels/ref.py`'s tensor encoding).
+//!
+//! * thresholds are order-preserved (FlInt) u32;
+//! * leaves carry `2^32/n_trees`-scaled fixed-point probabilities
+//!   ([`crate::quant::prob_to_fixed`]) and self-loop their child indices;
+//! * padding nodes/trees are zero-filled self-loops (semantically inert —
+//!   property-tested on the python side and re-checked here).
+
+use super::manifest::{Manifest, Tier};
+use crate::flint::ordered_u32;
+use crate::ir::{Model, ModelKind, Node};
+use crate::quant::prob_to_fixed;
+
+/// Padded tensors for one model in one tier (row-major).
+#[derive(Clone, Debug)]
+pub struct ForestPack {
+    pub tier_name: String,
+    /// i32[T, N]
+    pub feat: Vec<i32>,
+    /// u32[T, N]
+    pub thresh: Vec<u32>,
+    /// i32[T, N]
+    pub left: Vec<i32>,
+    /// i32[T, N]
+    pub right: Vec<i32>,
+    /// u32[T, N, C]
+    pub leaf_val: Vec<u32>,
+    pub trees: usize,
+    pub nodes: usize,
+    pub classes: usize,
+    pub features: usize,
+    pub batch: usize,
+    /// The model's true class count (≤ tier classes).
+    pub model_classes: usize,
+}
+
+impl ForestPack {
+    /// Pack `model` into `tier`'s shapes.
+    pub fn pack(model: &Model, tier: &Tier) -> anyhow::Result<ForestPack> {
+        anyhow::ensure!(model.kind == ModelKind::RandomForest, "XLA path serves RF models");
+        anyhow::ensure!(Manifest::fits(model, tier), "model does not fit tier {}", tier.name);
+        let (t, n, c) = (tier.trees, tier.nodes, tier.classes);
+        let mut pack = ForestPack {
+            tier_name: tier.name.clone(),
+            feat: vec![0; t * n],
+            thresh: vec![0; t * n],
+            // Default: every node self-loops (inert padding).
+            left: (0..t * n).map(|i| (i % n) as i32).collect(),
+            right: (0..t * n).map(|i| (i % n) as i32).collect(),
+            leaf_val: vec![0; t * n * c],
+            trees: t,
+            nodes: n,
+            classes: c,
+            features: tier.features,
+            batch: tier.batch,
+            model_classes: model.n_classes,
+        };
+        let n_trees = model.trees.len();
+        for (ti, tree) in model.trees.iter().enumerate() {
+            for (ni, node) in tree.nodes.iter().enumerate() {
+                let idx = ti * n + ni;
+                match node {
+                    Node::Branch { feature, threshold, left, right } => {
+                        pack.feat[idx] = *feature as i32;
+                        pack.thresh[idx] = ordered_u32(*threshold);
+                        pack.left[idx] = *left as i32;
+                        pack.right[idx] = *right as i32;
+                    }
+                    Node::Leaf { values } => {
+                        // self-loop already set
+                        for (ci, &p) in values.iter().enumerate() {
+                            pack.leaf_val[idx * c + ci] = prob_to_fixed(p, n_trees);
+                        }
+                    }
+                }
+            }
+        }
+        Ok(pack)
+    }
+
+    /// Transform and pad a batch of float rows into the tier's
+    /// `u32[B, F]` input layout. `rows` is row-major with the *model's*
+    /// feature count; the result is padded to the tier's batch/features.
+    /// Returns (tensor, rows_used).
+    pub fn pack_input(&self, rows: &[f32], model_features: usize) -> (Vec<u32>, usize) {
+        assert_eq!(rows.len() % model_features, 0);
+        let n_rows = rows.len() / model_features;
+        assert!(n_rows <= self.batch, "batch overflow: {n_rows} > {}", self.batch);
+        let mut x = vec![0u32; self.batch * self.features];
+        for r in 0..n_rows {
+            for f in 0..model_features {
+                x[r * self.features + f] = ordered_u32(rows[r * model_features + f]);
+            }
+        }
+        (x, n_rows)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::shuttle_like;
+    use crate::trees::{ForestParams, RandomForest};
+
+    fn tier() -> Tier {
+        Tier {
+            name: "quick".into(),
+            file: "forest_quick.hlo.txt".into(),
+            batch: 64,
+            features: 8,
+            trees: 16,
+            nodes: 63,
+            classes: 8,
+            depth: 6,
+            use_pallas: true,
+        }
+    }
+
+    fn model() -> Model {
+        let ds = shuttle_like(800, 90);
+        RandomForest::train(&ds, &ForestParams { n_trees: 5, max_depth: 5, ..Default::default() }, 3)
+    }
+
+    #[test]
+    fn pack_shapes() {
+        let m = model();
+        let p = ForestPack::pack(&m, &tier()).unwrap();
+        assert_eq!(p.feat.len(), 16 * 63);
+        assert_eq!(p.leaf_val.len(), 16 * 63 * 8);
+        // padding trees: all nodes self-loop with zero leaves
+        let t_pad = 10; // beyond the 5 model trees
+        for ni in 0..63 {
+            let idx = t_pad * 63 + ni;
+            assert_eq!(p.left[idx], ni as i32);
+            assert_eq!(p.right[idx], ni as i32);
+        }
+    }
+
+    /// CPU-side emulation of the tensor traversal must equal the scalar
+    /// IntEngine — validates the packing before the XLA round-trip.
+    #[test]
+    fn packed_walk_matches_int_engine() {
+        let m = model();
+        let t = tier();
+        let p = ForestPack::pack(&m, &t).unwrap();
+        let engine = crate::inference::IntEngine::compile(&m);
+        let ds = shuttle_like(64, 91);
+        let (x, n_rows) = p.pack_input(&ds.features[..64 * 7], 7);
+        assert_eq!(n_rows, 64);
+        for b in 0..n_rows {
+            let mut acc = vec![0u32; p.classes];
+            for ti in 0..p.trees {
+                let mut i = 0usize;
+                for _ in 0..t.depth {
+                    let idx = ti * p.nodes + i;
+                    if p.left[idx] as usize == i && p.right[idx] as usize == i {
+                        break;
+                    }
+                    let f = p.feat[idx] as usize;
+                    let go_left = x[b * p.features + f] <= p.thresh[idx];
+                    i = if go_left { p.left[idx] } else { p.right[idx] } as usize;
+                }
+                let idx = ti * p.nodes + i;
+                for c in 0..p.classes {
+                    acc[c] = acc[c].wrapping_add(p.leaf_val[idx * p.classes + c]);
+                }
+            }
+            let want = engine.predict_fixed(ds.row(b));
+            assert_eq!(&acc[..want.len()], &want[..], "row {b}");
+            assert!(acc[want.len()..].iter().all(|&v| v == 0));
+        }
+    }
+
+    #[test]
+    fn pack_rejects_oversize() {
+        let ds = shuttle_like(500, 92);
+        let m = RandomForest::train(
+            &ds,
+            &ForestParams { n_trees: 30, max_depth: 5, ..Default::default() },
+            1,
+        );
+        assert!(ForestPack::pack(&m, &tier()).is_err());
+    }
+
+    #[test]
+    fn input_padding() {
+        let m = model();
+        let p = ForestPack::pack(&m, &tier()).unwrap();
+        let rows = vec![1.0f32; 3 * 7];
+        let (x, n) = p.pack_input(&rows, 7);
+        assert_eq!(n, 3);
+        assert_eq!(x.len(), 64 * 8);
+        assert_eq!(x[0], crate::flint::ordered_u32(1.0));
+        assert_eq!(x[7], 0); // padded feature column
+        assert_eq!(x[3 * 8], 0); // padded row
+    }
+}

@@ -1,0 +1,160 @@
+//! Dynamic work tracing: walk the compiled forest on real rows and count
+//! the abstract operations one inference performs. These counts are the
+//! variant-independent "shape" of the computation; [`super::cores`] maps
+//! them to instructions/cycles per variant and core.
+
+use crate::data::Dataset;
+use crate::inference::compiled::{CompiledForest, LEAF};
+use crate::ir::Model;
+
+/// Average dynamic operation counts for one inference.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct InferenceTrace {
+    /// Branch nodes visited per inference (sum of leaf depths over trees).
+    pub branches: f64,
+    /// Leaves reached per inference (= number of trees).
+    pub leaves: f64,
+    /// Class-probability accumulations per inference (= leaves × classes).
+    pub class_adds: f64,
+    /// Input features (transform work for integer variants; loaded on
+    /// demand by the float variant).
+    pub features: f64,
+    /// Output classes (final averaging divide for float variants).
+    pub classes: f64,
+    /// Static branch-node count of the model (code-size driver).
+    pub static_branches: f64,
+    /// Static leaf count.
+    pub static_leaves: f64,
+    /// Fraction of threshold immediates whose low 12 bits are zero (fit a
+    /// single RISC-V `lui`, §IV-C Listing 2).
+    pub imm20_fraction_thresholds: f64,
+    /// Same for quantized leaf probabilities.
+    pub imm20_fraction_probs: f64,
+}
+
+/// Trace the average dynamic work of `model` over up to `max_rows` rows
+/// of `ds` (row sampling is deterministic: evenly strided).
+pub fn trace_average(model: &Model, ds: &Dataset, max_rows: usize) -> InferenceTrace {
+    let forest = CompiledForest::compile(model);
+    let n_rows = ds.n_rows().min(max_rows.max(1));
+    let stride = (ds.n_rows() / n_rows).max(1);
+
+    let mut total_branches = 0u64;
+    let mut rows_used = 0u64;
+    let mut i = 0usize;
+    while i < ds.n_rows() && rows_used < n_rows as u64 {
+        let row = ds.row(i);
+        for t in 0..forest.n_trees {
+            total_branches += walk_depth(&forest, t, row);
+        }
+        rows_used += 1;
+        i += stride;
+    }
+    let branches = total_branches as f64 / rows_used as f64;
+
+    // Static immediate statistics (which immediates fit a 20-bit lui).
+    let mut thr_total = 0usize;
+    let mut thr_lui = 0usize;
+    for (i, &f) in forest.feature.iter().enumerate() {
+        if f != LEAF {
+            thr_total += 1;
+            if forest.thresh_ord[i] & 0xFFF == 0 {
+                thr_lui += 1;
+            }
+        }
+    }
+    let mut prob_total = 0usize;
+    let mut prob_lui = 0usize;
+    for &q in &forest.leaf_u32 {
+        prob_total += 1;
+        if q & 0xFFF == 0 {
+            prob_lui += 1;
+        }
+    }
+
+    InferenceTrace {
+        branches,
+        leaves: forest.n_trees as f64,
+        class_adds: (forest.n_trees * forest.n_classes) as f64,
+        features: forest.n_features as f64,
+        classes: forest.n_classes as f64,
+        static_branches: thr_total as f64,
+        static_leaves: (forest.leaf_u32.len() / forest.n_classes.max(1)) as f64,
+        imm20_fraction_thresholds: if thr_total == 0 { 0.0 } else { thr_lui as f64 / thr_total as f64 },
+        imm20_fraction_probs: if prob_total == 0 { 0.0 } else { prob_lui as f64 / prob_total as f64 },
+    }
+}
+
+fn walk_depth(f: &CompiledForest, t: usize, row: &[f32]) -> u64 {
+    let base = f.tree_offsets[t] as usize;
+    let mut i = base;
+    let mut depth = 0u64;
+    loop {
+        let feat = f.feature[i];
+        if feat == LEAF {
+            return depth;
+        }
+        depth += 1;
+        let go_left = row[feat as usize] <= f.thresh_f32[i];
+        i = base + if go_left { f.left[i] } else { f.right[i] } as usize;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::shuttle_like;
+    use crate::trees::{ForestParams, RandomForest};
+
+    #[test]
+    fn trace_counts_consistent() {
+        let ds = shuttle_like(2000, 60);
+        let m = RandomForest::train(
+            &ds,
+            &ForestParams { n_trees: 8, max_depth: 6, ..Default::default() },
+            6,
+        );
+        let tr = trace_average(&m, &ds, 300);
+        assert_eq!(tr.leaves, 8.0);
+        assert_eq!(tr.class_adds, 56.0);
+        assert_eq!(tr.features, 7.0);
+        assert_eq!(tr.classes, 7.0);
+        // Every tree walks at least 1 branch (depth >= 1), at most depth 6.
+        assert!(tr.branches >= 8.0 && tr.branches <= 48.0, "branches {}", tr.branches);
+        assert!((0.0..=1.0).contains(&tr.imm20_fraction_thresholds));
+        assert!((0.0..=1.0).contains(&tr.imm20_fraction_probs));
+    }
+
+    #[test]
+    fn stump_trace_exact() {
+        // A single stump: exactly 1 branch per inference.
+        let ds = shuttle_like(500, 61);
+        let m = RandomForest::train(
+            &ds,
+            &ForestParams { n_trees: 1, max_depth: 1, ..Default::default() },
+            7,
+        );
+        let tr = trace_average(&m, &ds, 100);
+        assert_eq!(tr.branches, 1.0);
+        assert_eq!(tr.static_branches, 1.0);
+        assert_eq!(tr.static_leaves, 2.0);
+    }
+
+    #[test]
+    fn deeper_models_visit_more_branches() {
+        let ds = shuttle_like(3000, 62);
+        let shallow = RandomForest::train(
+            &ds,
+            &ForestParams { n_trees: 5, max_depth: 2, ..Default::default() },
+            8,
+        );
+        let deep = RandomForest::train(
+            &ds,
+            &ForestParams { n_trees: 5, max_depth: 8, ..Default::default() },
+            8,
+        );
+        let ts = trace_average(&shallow, &ds, 200);
+        let td = trace_average(&deep, &ds, 200);
+        assert!(td.branches > ts.branches);
+    }
+}

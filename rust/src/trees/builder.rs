@@ -1,0 +1,304 @@
+//! CART classification-tree builder (Gini impurity, exact sorted-scan
+//! split finding), producing [`crate::ir::Tree`] directly.
+//!
+//! Split semantics match scikit-learn: candidate thresholds are midpoints
+//! between consecutive distinct feature values; a split sends
+//! `value <= threshold` left. Leaf values are the class distribution of
+//! the training rows that reach the leaf — exactly the probabilities the
+//! paper's §III-A conversion later turns into `u32` fixed point.
+
+use crate::data::Dataset;
+use crate::ir::{Node, Tree};
+use crate::util::Rng;
+
+/// Parameters for a single CART tree.
+#[derive(Clone, Debug)]
+pub struct TreeParams {
+    /// Maximum depth (root = 0). The paper's use cases use depths 5–7.
+    pub max_depth: usize,
+    /// Minimum rows required to attempt a split.
+    pub min_samples_split: usize,
+    /// Minimum rows in each child.
+    pub min_samples_leaf: usize,
+    /// Number of features to consider per split; `0` means all
+    /// (Random Forests pass sqrt(n_features)).
+    pub max_features: usize,
+}
+
+impl Default for TreeParams {
+    fn default() -> Self {
+        TreeParams { max_depth: 8, min_samples_split: 2, min_samples_leaf: 1, max_features: 0 }
+    }
+}
+
+/// Gini impurity of a class-count vector with `total` samples.
+#[inline]
+fn gini(counts: &[usize], total: usize) -> f64 {
+    if total == 0 {
+        return 0.0;
+    }
+    let t = total as f64;
+    1.0 - counts.iter().map(|&c| (c as f64 / t) * (c as f64 / t)).sum::<f64>()
+}
+
+struct BestSplit {
+    feature: usize,
+    /// Threshold as the midpoint of adjacent distinct values, snapped to
+    /// f32 (the IR stores f32 thresholds, like Treelite).
+    threshold: f32,
+    /// Weighted-Gini improvement over the parent node.
+    gain: f64,
+}
+
+/// Find the best (feature, threshold) for rows `idx`, or None if no split
+/// improves impurity / satisfies the constraints.
+fn best_split(
+    ds: &Dataset,
+    idx: &[usize],
+    params: &TreeParams,
+    rng: &mut Rng,
+    scratch: &mut Scratch,
+) -> Option<BestSplit> {
+    let n = idx.len();
+    if n < params.min_samples_split {
+        return None;
+    }
+    let mut parent_counts = vec![0usize; ds.n_classes];
+    for &i in idx {
+        parent_counts[ds.labels[i] as usize] += 1;
+    }
+    let parent_gini = gini(&parent_counts, n);
+    if parent_gini == 0.0 {
+        return None; // pure node
+    }
+
+    let k = if params.max_features == 0 { ds.n_features } else { params.max_features.min(ds.n_features) };
+    let features = rng.sample_indices(ds.n_features, k);
+
+    let mut best: Option<BestSplit> = None;
+    for f in features {
+        // Sort row indices by this feature's value.
+        scratch.order.clear();
+        scratch.order.extend(idx.iter().map(|&i| (ds.row(i)[f], ds.labels[i])));
+        scratch
+            .order
+            .sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
+
+        let mut left_counts = vec![0usize; ds.n_classes];
+        let mut right_counts = parent_counts.clone();
+        for s in 0..n - 1 {
+            let (v, label) = scratch.order[s];
+            left_counts[label as usize] += 1;
+            right_counts[label as usize] -= 1;
+            let next_v = scratch.order[s + 1].0;
+            if v == next_v {
+                continue; // can't split between equal values
+            }
+            let n_left = s + 1;
+            let n_right = n - n_left;
+            if n_left < params.min_samples_leaf || n_right < params.min_samples_leaf {
+                continue;
+            }
+            let w_gini = (n_left as f64 * gini(&left_counts, n_left)
+                + n_right as f64 * gini(&right_counts, n_right))
+                / n as f64;
+            let gain = parent_gini - w_gini;
+            if gain > best.as_ref().map_or(1e-12, |b| b.gain) {
+                // Midpoint in f64, snapped to f32. Snap may round up to
+                // next_v; clamp so `v <= threshold < next_v` stays true
+                // (f32 threshold must separate the two f32 values).
+                let mut t = ((v as f64 + next_v as f64) * 0.5) as f32;
+                if t >= next_v {
+                    t = v;
+                }
+                best = Some(BestSplit { feature: f, threshold: t, gain });
+            }
+        }
+    }
+    best
+}
+
+/// Reusable sort buffer across nodes.
+struct Scratch {
+    order: Vec<(f32, u32)>,
+}
+
+/// Train a single CART classification tree on rows `idx` of `ds`.
+/// Leaf values are class frequencies (a probability distribution).
+pub fn train_tree(ds: &Dataset, idx: &[usize], params: &TreeParams, rng: &mut Rng) -> Tree {
+    assert!(!idx.is_empty(), "cannot train a tree on zero rows");
+    let mut nodes: Vec<Node> = Vec::new();
+    let mut scratch = Scratch { order: Vec::with_capacity(idx.len()) };
+    build_node(ds, idx, params, rng, &mut nodes, 0, &mut scratch);
+    Tree { nodes }
+}
+
+fn leaf_from(ds: &Dataset, idx: &[usize]) -> Node {
+    let mut counts = vec![0usize; ds.n_classes];
+    for &i in idx {
+        counts[ds.labels[i] as usize] += 1;
+    }
+    let total = idx.len() as f32;
+    Node::Leaf { values: counts.iter().map(|&c| c as f32 / total).collect() }
+}
+
+fn build_node(
+    ds: &Dataset,
+    idx: &[usize],
+    params: &TreeParams,
+    rng: &mut Rng,
+    nodes: &mut Vec<Node>,
+    depth: usize,
+    scratch: &mut Scratch,
+) -> u32 {
+    let id = nodes.len() as u32;
+    if depth >= params.max_depth {
+        nodes.push(leaf_from(ds, idx));
+        return id;
+    }
+    match best_split(ds, idx, params, rng, scratch) {
+        None => {
+            nodes.push(leaf_from(ds, idx));
+            id
+        }
+        Some(split) => {
+            nodes.push(Node::Leaf { values: vec![] }); // placeholder
+            let (mut left_idx, mut right_idx) = (Vec::new(), Vec::new());
+            for &i in idx {
+                if ds.row(i)[split.feature] <= split.threshold {
+                    left_idx.push(i);
+                } else {
+                    right_idx.push(i);
+                }
+            }
+            debug_assert!(!left_idx.is_empty() && !right_idx.is_empty());
+            let left = build_node(ds, &left_idx, params, rng, nodes, depth + 1, scratch);
+            let right = build_node(ds, &right_idx, params, rng, nodes, depth + 1, scratch);
+            nodes[id as usize] = Node::Branch {
+                feature: split.feature as u32,
+                threshold: split.threshold,
+                left,
+                right,
+            };
+            id
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{shuttle_like, Dataset};
+    use crate::ir::{Model, ModelKind};
+
+    fn as_model(tree: Tree, ds: &Dataset) -> Model {
+        Model {
+            kind: ModelKind::RandomForest,
+            n_features: ds.n_features,
+            n_classes: ds.n_classes,
+            trees: vec![tree],
+            base_score: vec![0.0; ds.n_classes],
+        }
+    }
+
+    /// Perfectly separable 1-D data must be fit exactly.
+    #[test]
+    fn separable_data_fit_exactly() {
+        let features: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        let labels: Vec<u32> = (0..100).map(|i| if i < 50 { 0 } else { 1 }).collect();
+        let ds = Dataset::new(features, labels, 1, 2);
+        let idx: Vec<usize> = (0..ds.n_rows()).collect();
+        let tree = train_tree(&ds, &idx, &TreeParams::default(), &mut Rng::new(1));
+        let model = as_model(tree, &ds);
+        assert!(model.validate().is_ok());
+        assert_eq!(crate::trees::accuracy(&model, &ds), 1.0);
+        // One split suffices.
+        assert_eq!(model.trees[0].nodes.len(), 3);
+    }
+
+    #[test]
+    fn respects_max_depth() {
+        let ds = shuttle_like(2000, 2);
+        let idx: Vec<usize> = (0..ds.n_rows()).collect();
+        for depth in [0usize, 1, 3, 5] {
+            let tree = train_tree(
+                &ds,
+                &idx,
+                &TreeParams { max_depth: depth, ..Default::default() },
+                &mut Rng::new(1),
+            );
+            assert!(tree.depth() <= depth, "depth {} > {}", tree.depth(), depth);
+        }
+    }
+
+    #[test]
+    fn depth_zero_is_single_leaf_with_prior() {
+        let ds = shuttle_like(1000, 3);
+        let idx: Vec<usize> = (0..ds.n_rows()).collect();
+        let tree = train_tree(&ds, &idx, &TreeParams { max_depth: 0, ..Default::default() }, &mut Rng::new(1));
+        assert_eq!(tree.nodes.len(), 1);
+        if let Node::Leaf { values } = &tree.nodes[0] {
+            let s: f32 = values.iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        } else {
+            panic!("expected leaf");
+        }
+    }
+
+    #[test]
+    fn min_samples_leaf_respected() {
+        let ds = shuttle_like(500, 4);
+        let idx: Vec<usize> = (0..ds.n_rows()).collect();
+        let tree = train_tree(
+            &ds,
+            &idx,
+            &TreeParams { max_depth: 12, min_samples_leaf: 50, ..Default::default() },
+            &mut Rng::new(1),
+        );
+        // With >=50 rows per leaf, at most 500/50 = 10 leaves.
+        assert!(tree.n_leaves() <= 10);
+    }
+
+    #[test]
+    fn better_than_majority_baseline() {
+        let ds = shuttle_like(5000, 5);
+        let idx: Vec<usize> = (0..ds.n_rows()).collect();
+        let tree = train_tree(&ds, &idx, &TreeParams { max_depth: 8, ..Default::default() }, &mut Rng::new(1));
+        let model = as_model(tree, &ds);
+        let majority =
+            *ds.class_counts().iter().max().unwrap() as f64 / ds.n_rows() as f64;
+        let acc = crate::trees::accuracy(&model, &ds);
+        assert!(acc > majority + 0.02, "acc {acc} vs majority {majority}");
+    }
+
+    #[test]
+    fn gini_helper() {
+        assert_eq!(gini(&[10, 0], 10), 0.0);
+        assert!((gini(&[5, 5], 10) - 0.5).abs() < 1e-12);
+        assert_eq!(gini(&[], 0), 0.0);
+    }
+
+    #[test]
+    fn thresholds_separate_values_as_f32() {
+        // Construct values where the f64 midpoint rounds to the upper f32;
+        // the builder must clamp so the split still separates them.
+        let a = 1.0f32;
+        let b = f32::from_bits(a.to_bits() + 1); // next representable
+        let features = vec![a, a, b, b];
+        let labels = vec![0, 0, 1, 1];
+        let ds = Dataset::new(features, labels, 1, 2);
+        let idx: Vec<usize> = (0..4).collect();
+        let tree = train_tree(&ds, &idx, &TreeParams::default(), &mut Rng::new(1));
+        let model = as_model(tree, &ds);
+        assert_eq!(crate::trees::accuracy(&model, &ds), 1.0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let ds = shuttle_like(1000, 6);
+        let idx: Vec<usize> = (0..ds.n_rows()).collect();
+        let t1 = train_tree(&ds, &idx, &TreeParams::default(), &mut Rng::new(77));
+        let t2 = train_tree(&ds, &idx, &TreeParams::default(), &mut Rng::new(77));
+        assert_eq!(t1, t2);
+    }
+}

@@ -1,0 +1,149 @@
+//! Random Forest training (bagging + feature subsampling), with
+//! scikit-learn `RandomForestClassifier` prediction semantics: each tree
+//! votes with a class-probability leaf and the ensemble averages them —
+//! the exact structure the paper's probability-to-integer conversion
+//! targets (§III-A: "the probabilities from each DT in the ensemble are
+//! summed up and divided by the total number of trees").
+
+use super::builder::{train_tree, TreeParams};
+use crate::data::Dataset;
+use crate::ir::{Model, ModelKind};
+use crate::util::Rng;
+
+/// Random-forest training parameters.
+#[derive(Clone, Debug)]
+pub struct ForestParams {
+    /// Number of trees. The paper evaluates up to 100 (and notes that
+    /// >256 would break the fixed-point precision argument).
+    pub n_trees: usize,
+    pub max_depth: usize,
+    pub min_samples_split: usize,
+    pub min_samples_leaf: usize,
+    /// Features per split; `0` = floor(sqrt(n_features)) (sklearn default).
+    pub max_features: usize,
+    /// Bootstrap sample size as a fraction of the training set.
+    pub bootstrap_frac: f64,
+}
+
+impl Default for ForestParams {
+    fn default() -> Self {
+        ForestParams {
+            n_trees: 10,
+            max_depth: 8,
+            min_samples_split: 2,
+            min_samples_leaf: 1,
+            max_features: 0,
+            bootstrap_frac: 1.0,
+        }
+    }
+}
+
+/// Random-forest trainer. (Namespaced struct so callers write
+/// `RandomForest::train(...)`; the result is a plain IR [`Model`].)
+pub struct RandomForest;
+
+impl RandomForest {
+    /// Train a random forest; deterministic in `seed`.
+    pub fn train(ds: &Dataset, params: &ForestParams, seed: u64) -> Model {
+        assert!(params.n_trees > 0, "n_trees must be positive");
+        assert!(ds.n_rows() > 0, "cannot train on an empty dataset");
+        let mut rng = Rng::new(seed);
+        let max_features = if params.max_features == 0 {
+            (ds.n_features as f64).sqrt().floor().max(1.0) as usize
+        } else {
+            params.max_features
+        };
+        let tree_params = TreeParams {
+            max_depth: params.max_depth,
+            min_samples_split: params.min_samples_split,
+            min_samples_leaf: params.min_samples_leaf,
+            max_features,
+        };
+        let n_boot = ((ds.n_rows() as f64) * params.bootstrap_frac).round().max(1.0) as usize;
+
+        let mut trees = Vec::with_capacity(params.n_trees);
+        for t in 0..params.n_trees {
+            let mut tree_rng = rng.fork(t as u64);
+            // Bootstrap sample (with replacement).
+            let idx: Vec<usize> = (0..n_boot).map(|_| tree_rng.below(ds.n_rows())).collect();
+            trees.push(train_tree(ds, &idx, &tree_params, &mut tree_rng));
+        }
+
+        let model = Model {
+            kind: ModelKind::RandomForest,
+            n_features: ds.n_features,
+            n_classes: ds.n_classes,
+            trees,
+            base_score: vec![0.0; ds.n_classes],
+        };
+        debug_assert!(model.validate().is_ok());
+        model
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{esa_like, shuttle_like};
+    use crate::trees::accuracy;
+
+    #[test]
+    fn forest_valid_and_sized() {
+        let ds = shuttle_like(2000, 1);
+        let m = RandomForest::train(&ds, &ForestParams { n_trees: 7, max_depth: 5, ..Default::default() }, 3);
+        assert!(m.validate().is_ok());
+        assert_eq!(m.trees.len(), 7);
+        assert_eq!(m.kind, ModelKind::RandomForest);
+        assert!(m.max_depth() <= 5);
+    }
+
+    #[test]
+    fn forest_beats_single_tree_on_holdout() {
+        let ds = shuttle_like(8000, 2);
+        let (train, test) = ds.train_test_split(0.25, &mut Rng::new(9));
+        let single = RandomForest::train(&train, &ForestParams { n_trees: 1, max_depth: 6, ..Default::default() }, 5);
+        let forest = RandomForest::train(&train, &ForestParams { n_trees: 25, max_depth: 6, ..Default::default() }, 5);
+        let acc1 = accuracy(&single, &test);
+        let acc25 = accuracy(&forest, &test);
+        // Bagging shouldn't be (much) worse; usually better.
+        assert!(acc25 + 0.02 >= acc1, "forest {acc25} vs single {acc1}");
+        assert!(acc25 > 0.6, "forest accuracy too low: {acc25}");
+    }
+
+    #[test]
+    fn esa_forest_trains() {
+        let ds = esa_like(3000, 3);
+        let (train, test) = ds.train_test_split(0.25, &mut Rng::new(1));
+        let m = RandomForest::train(&train, &ForestParams { n_trees: 10, max_depth: 6, ..Default::default() }, 1);
+        let majority = *test.class_counts().iter().max().unwrap() as f64 / test.n_rows() as f64;
+        let acc = accuracy(&m, &test);
+        assert!(acc >= majority - 0.05, "acc {acc} majority {majority}");
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let ds = shuttle_like(1000, 4);
+        let p = ForestParams { n_trees: 4, max_depth: 4, ..Default::default() };
+        assert_eq!(RandomForest::train(&ds, &p, 11), RandomForest::train(&ds, &p, 11));
+        assert_ne!(RandomForest::train(&ds, &p, 11), RandomForest::train(&ds, &p, 12));
+    }
+
+    #[test]
+    #[should_panic(expected = "n_trees")]
+    fn zero_trees_panics() {
+        let ds = shuttle_like(100, 1);
+        RandomForest::train(&ds, &ForestParams { n_trees: 0, ..Default::default() }, 1);
+    }
+
+    #[test]
+    fn probabilities_average_to_distribution() {
+        let ds = shuttle_like(1500, 5);
+        let m = RandomForest::train(&ds, &ForestParams { n_trees: 9, max_depth: 5, ..Default::default() }, 2);
+        for i in (0..ds.n_rows()).step_by(97) {
+            let p = m.predict_proba(ds.row(i));
+            let s: f32 = p.iter().sum();
+            assert!((s - 1.0).abs() < 1e-4, "sum {s}");
+            assert!(p.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        }
+    }
+}

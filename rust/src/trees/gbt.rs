@@ -1,0 +1,260 @@
+//! Gradient-boosted trees (softmax log-loss, Newton leaf weights —
+//! XGBoost-style second-order boosting).
+//!
+//! The paper's framework "supports all existing tree-based classification
+//! models" via the common IR; GBTs are the second major family (XGBoost /
+//! LightGBM front-ends in Fig 1). A GBT leaf holds an additive *margin*
+//! rather than a probability, so the integer conversion for GBT models
+//! uses a range-derived fixed-point scale (see [`crate::quant`]) instead
+//! of the probability scale `2^32/n`.
+
+use crate::data::Dataset;
+use crate::ir::{Model, ModelKind, Node, Tree};
+use crate::util::Rng;
+
+/// GBT training parameters.
+#[derive(Clone, Debug)]
+pub struct GbtParams {
+    /// Boosting rounds; each round trains `n_classes` trees (one-vs-all).
+    pub n_rounds: usize,
+    pub max_depth: usize,
+    pub learning_rate: f32,
+    /// L2 regularization on leaf weights (XGBoost lambda).
+    pub lambda: f64,
+    pub min_samples_leaf: usize,
+    /// Row subsample fraction per round (stochastic gradient boosting).
+    pub subsample: f64,
+}
+
+impl Default for GbtParams {
+    fn default() -> Self {
+        GbtParams {
+            n_rounds: 10,
+            max_depth: 4,
+            learning_rate: 0.3,
+            lambda: 1.0,
+            min_samples_leaf: 1,
+            subsample: 1.0,
+        }
+    }
+}
+
+/// Per-row gradient statistics for one class column.
+struct GradHess {
+    g: Vec<f64>,
+    h: Vec<f64>,
+}
+
+/// Newton gain for a candidate split (XGBoost eq. 7, no complexity term).
+#[inline]
+fn newton_score(g: f64, h: f64, lambda: f64) -> f64 {
+    g * g / (h + lambda)
+}
+
+/// Regression-tree node builder on (g, h) statistics. Leaf values are
+/// `-lr * G / (H + lambda)` stored in the class column `class`.
+fn build_reg_node(
+    ds: &Dataset,
+    idx: &[usize],
+    gh: &GradHess,
+    params: &GbtParams,
+    depth: usize,
+    class: usize,
+    nodes: &mut Vec<Node>,
+) -> u32 {
+    let id = nodes.len() as u32;
+    let (gsum, hsum) = idx.iter().fold((0.0, 0.0), |(g, h), &i| (g + gh.g[i], h + gh.h[i]));
+
+    let make_leaf = |nodes: &mut Vec<Node>| {
+        let mut values = vec![0.0f32; ds.n_classes];
+        values[class] = (-params.learning_rate as f64 * gsum / (hsum + params.lambda)) as f32;
+        nodes.push(Node::Leaf { values });
+    };
+
+    if depth >= params.max_depth || idx.len() < 2 * params.min_samples_leaf.max(1) {
+        make_leaf(nodes);
+        return id;
+    }
+
+    // Exact split search over all features.
+    let parent_score = newton_score(gsum, hsum, params.lambda);
+    let mut best: Option<(usize, f32, f64)> = None; // (feature, threshold, gain)
+    let mut order: Vec<(f32, f64, f64)> = Vec::with_capacity(idx.len());
+    for f in 0..ds.n_features {
+        order.clear();
+        order.extend(idx.iter().map(|&i| (ds.row(i)[f], gh.g[i], gh.h[i])));
+        order.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
+        let (mut gl, mut hl) = (0.0f64, 0.0f64);
+        for s in 0..order.len() - 1 {
+            gl += order[s].1;
+            hl += order[s].2;
+            let (v, next_v) = (order[s].0, order[s + 1].0);
+            if v == next_v {
+                continue;
+            }
+            let n_left = s + 1;
+            let n_right = order.len() - n_left;
+            if n_left < params.min_samples_leaf || n_right < params.min_samples_leaf {
+                continue;
+            }
+            let gain = newton_score(gl, hl, params.lambda)
+                + newton_score(gsum - gl, hsum - hl, params.lambda)
+                - parent_score;
+            if gain > best.map_or(1e-9, |b| b.2) {
+                let mut t = ((v as f64 + next_v as f64) * 0.5) as f32;
+                if t >= next_v {
+                    t = v;
+                }
+                best = Some((f, t, gain));
+            }
+        }
+    }
+
+    match best {
+        None => {
+            make_leaf(nodes);
+            id
+        }
+        Some((feature, threshold, _)) => {
+            nodes.push(Node::Leaf { values: vec![] }); // placeholder
+            let (mut li, mut ri) = (Vec::new(), Vec::new());
+            for &i in idx {
+                if ds.row(i)[feature] <= threshold {
+                    li.push(i);
+                } else {
+                    ri.push(i);
+                }
+            }
+            let left = build_reg_node(ds, &li, gh, params, depth + 1, class, nodes);
+            let right = build_reg_node(ds, &ri, gh, params, depth + 1, class, nodes);
+            nodes[id as usize] =
+                Node::Branch { feature: feature as u32, threshold, left, right };
+            id
+        }
+    }
+}
+
+/// Train a gradient-boosted-trees classifier; deterministic in `seed`.
+pub fn train_gbt(ds: &Dataset, params: &GbtParams, seed: u64) -> Model {
+    assert!(params.n_rounds > 0);
+    assert!(ds.n_rows() > 0);
+    let n = ds.n_rows();
+    let k = ds.n_classes;
+    let mut rng = Rng::new(seed);
+
+    // Base score: log of class priors (standard multiclass init).
+    let counts = ds.class_counts();
+    let base_score: Vec<f32> = counts
+        .iter()
+        .map(|&c| (((c.max(1)) as f64) / n as f64).ln() as f32)
+        .collect();
+
+    // Current margins per row per class.
+    let mut margins: Vec<f64> = Vec::with_capacity(n * k);
+    for _ in 0..n {
+        margins.extend(base_score.iter().map(|&b| b as f64));
+    }
+
+    let mut trees: Vec<Tree> = Vec::with_capacity(params.n_rounds * k);
+    for round in 0..params.n_rounds {
+        // Row subsample for this round.
+        let idx: Vec<usize> = if params.subsample < 1.0 {
+            let m = ((n as f64) * params.subsample).round().max(1.0) as usize;
+            rng.sample_indices(n, m)
+        } else {
+            (0..n).collect()
+        };
+
+        // Softmax probabilities for all rows (needed for grads).
+        let mut probs = vec![0.0f64; n * k];
+        for i in 0..n {
+            let row = &margins[i * k..(i + 1) * k];
+            let m = row.iter().fold(f64::NEG_INFINITY, |a, &b| a.max(b));
+            let mut s = 0.0;
+            for c in 0..k {
+                let e = (row[c] - m).exp();
+                probs[i * k + c] = e;
+                s += e;
+            }
+            for c in 0..k {
+                probs[i * k + c] /= s;
+            }
+        }
+
+        for class in 0..k {
+            // Softmax log-loss gradients: g = p - y, h = p(1-p).
+            let mut gh = GradHess { g: vec![0.0; n], h: vec![0.0; n] };
+            for i in 0..n {
+                let p = probs[i * k + class];
+                let y = if ds.labels[i] as usize == class { 1.0 } else { 0.0 };
+                gh.g[i] = p - y;
+                gh.h[i] = (p * (1.0 - p)).max(1e-9);
+            }
+            let mut nodes = Vec::new();
+            build_reg_node(ds, &idx, &gh, params, 0, class, &mut nodes);
+            let tree = Tree { nodes };
+            // Update margins with the new tree's predictions.
+            for i in 0..n {
+                let leaf = tree.evaluate(ds.row(i));
+                margins[i * k + class] += leaf[class] as f64;
+            }
+            trees.push(tree);
+        }
+        let _ = round;
+    }
+
+    let model = Model { kind: ModelKind::Gbt, n_features: ds.n_features, n_classes: k, trees, base_score };
+    debug_assert!(model.validate().is_ok());
+    model
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::shuttle_like;
+    use crate::trees::accuracy;
+    use crate::util::Rng;
+
+    #[test]
+    fn gbt_trains_and_validates() {
+        let ds = shuttle_like(2000, 7);
+        let m = train_gbt(&ds, &GbtParams { n_rounds: 3, max_depth: 3, ..Default::default() }, 1);
+        assert!(m.validate().is_ok());
+        assert_eq!(m.kind, ModelKind::Gbt);
+        assert_eq!(m.trees.len(), 3 * ds.n_classes);
+    }
+
+    #[test]
+    fn gbt_beats_majority() {
+        let ds = shuttle_like(4000, 8);
+        let (train, test) = ds.train_test_split(0.25, &mut Rng::new(2));
+        let m = train_gbt(&train, &GbtParams { n_rounds: 8, max_depth: 4, ..Default::default() }, 3);
+        let majority = *test.class_counts().iter().max().unwrap() as f64 / test.n_rows() as f64;
+        let acc = accuracy(&m, &test);
+        assert!(acc > majority, "acc {acc} vs majority {majority}");
+    }
+
+    #[test]
+    fn gbt_probabilities_are_distribution() {
+        let ds = shuttle_like(800, 9);
+        let m = train_gbt(&ds, &GbtParams { n_rounds: 2, max_depth: 3, ..Default::default() }, 4);
+        let p = m.predict_proba(ds.row(0));
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        assert!(p.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn gbt_more_rounds_reduce_train_error() {
+        let ds = shuttle_like(2000, 10);
+        let short = train_gbt(&ds, &GbtParams { n_rounds: 1, max_depth: 3, ..Default::default() }, 5);
+        let long = train_gbt(&ds, &GbtParams { n_rounds: 10, max_depth: 3, ..Default::default() }, 5);
+        assert!(accuracy(&long, &ds) >= accuracy(&short, &ds));
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let ds = shuttle_like(600, 11);
+        let p = GbtParams { n_rounds: 2, max_depth: 3, subsample: 0.7, ..Default::default() };
+        assert_eq!(train_gbt(&ds, &p, 9), train_gbt(&ds, &p, 9));
+    }
+}

@@ -1,0 +1,63 @@
+//! Training substrate: CART decision trees, Random Forests and gradient
+//! boosted trees, implemented from scratch.
+//!
+//! The paper treats training as a pluggable black box (scikit-learn,
+//! XGBoost, LightGBM) that produces float split thresholds and float leaf
+//! probabilities; InTreeger's transforms apply downstream of training.
+//! This module is the self-contained equivalent so the end-to-end pipeline
+//! (dataset in → integer-only C out) has no external dependencies.
+//!
+//! * [`builder`] — single CART classification tree (Gini impurity).
+//! * [`forest`] — bootstrap-aggregated Random Forest
+//!   (scikit-learn `RandomForestClassifier` semantics: per-tree class
+//!   probability leaves, ensemble = average of tree probabilities).
+//! * [`gbt`] — gradient boosted trees (softmax log-loss, Newton leaf
+//!   weights — XGBoost-style, exercising the `ModelKind::Gbt` IR path).
+//! * [`extra`] — Extremely Randomized Trees (random-threshold splits).
+//!
+//! Models from external frameworks (XGBoost / LightGBM dumps) enter the
+//! same IR through [`crate::ir::import`].
+
+pub mod builder;
+pub mod extra;
+pub mod forest;
+pub mod gbt;
+
+pub use builder::{train_tree, TreeParams};
+pub use extra::{train_extra_trees, ExtraParams};
+pub use forest::{ForestParams, RandomForest};
+pub use gbt::{train_gbt, GbtParams};
+
+use crate::data::Dataset;
+use crate::ir::Model;
+
+/// Fraction of rows a model classifies correctly on a dataset.
+pub fn accuracy(model: &Model, ds: &Dataset) -> f64 {
+    if ds.n_rows() == 0 {
+        return 0.0;
+    }
+    let correct = (0..ds.n_rows())
+        .filter(|&i| model.predict(ds.row(i)) == ds.labels[i])
+        .count();
+    correct as f64 / ds.n_rows() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::shuttle_like;
+
+    #[test]
+    fn accuracy_of_perfect_and_empty() {
+        let ds = shuttle_like(200, 1);
+        let model = RandomForest::train(
+            &ds,
+            &ForestParams { n_trees: 3, max_depth: 4, ..Default::default() },
+            7,
+        );
+        let acc = accuracy(&model, &ds);
+        assert!((0.0..=1.0).contains(&acc));
+        let empty = crate::data::Dataset::new(vec![], vec![], ds.n_features, ds.n_classes);
+        assert_eq!(accuracy(&model, &empty), 0.0);
+    }
+}

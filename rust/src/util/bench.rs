@@ -1,0 +1,96 @@
+//! Minimal benchmark harness (criterion is unavailable in the offline
+//! build). Used by every `cargo bench` target (declared with
+//! `harness = false` in Cargo.toml).
+//!
+//! Methodology: warmup runs, then `reps` timed runs; reports min / median
+//! / mean. A `black_box` guard prevents the optimizer from deleting the
+//! measured work.
+
+use std::time::Instant;
+
+/// Optimizer barrier (std::hint::black_box re-export for benches).
+pub use std::hint::black_box;
+
+/// Result of one measurement.
+#[derive(Clone, Copy, Debug)]
+pub struct Measurement {
+    pub min_ns: f64,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    /// Work items per run (ns are divided by this for per-item figures).
+    pub items: u64,
+}
+
+impl Measurement {
+    pub fn per_item_ns(&self) -> f64 {
+        self.median_ns / self.items.max(1) as f64
+    }
+
+    pub fn throughput_per_s(&self) -> f64 {
+        if self.median_ns == 0.0 {
+            0.0
+        } else {
+            self.items as f64 / (self.median_ns * 1e-9)
+        }
+    }
+}
+
+/// Time `f` (which processes `items` work units per call): `warmup`
+/// untimed runs, then `reps` timed runs.
+pub fn measure<F: FnMut()>(warmup: usize, reps: usize, items: u64, mut f: F) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<f64> = Vec::with_capacity(reps);
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let min = samples[0];
+    let median = samples[samples.len() / 2];
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    Measurement { min_ns: min, median_ns: median, mean_ns: mean, items }
+}
+
+/// Print one bench row in a stable, greppable format.
+pub fn report(name: &str, m: &Measurement) {
+    println!(
+        "bench {name:<44} {:>12.1} ns/item {:>14.0} items/s (median over runs)",
+        m.per_item_ns(),
+        m.throughput_per_s()
+    );
+}
+
+/// Section header for bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut acc = 0u64;
+        let m = measure(1, 5, 1000, || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+        });
+        assert!(m.min_ns > 0.0);
+        assert!(m.median_ns >= m.min_ns);
+        assert!(m.items == 1000);
+        assert!(m.per_item_ns() >= 0.0);
+        black_box(acc);
+    }
+
+    #[test]
+    fn throughput_inverse_of_latency() {
+        let m = Measurement { min_ns: 10.0, median_ns: 100.0, mean_ns: 100.0, items: 10 };
+        assert!((m.per_item_ns() - 10.0).abs() < 1e-9);
+        assert!((m.throughput_per_s() - 1e8).abs() < 1.0);
+    }
+}

@@ -1,0 +1,130 @@
+//! Miniature property-based testing harness (proptest is unavailable in
+//! the offline build environment, so the crate carries its own).
+//!
+//! [`for_all`] runs a property over `n` deterministic pseudo-random cases
+//! drawn from a generator; on failure it reports the seed and case index
+//! so the exact failing input can be reproduced by re-running the test.
+//! Generators are plain closures over [`Rng`], composed with ordinary
+//! Rust code — no macro DSL.
+
+use super::rng::Rng;
+
+/// Default number of cases per property.
+pub const DEFAULT_CASES: usize = 256;
+
+/// Run `prop` on `cases` inputs drawn from `gen`. Panics (test failure)
+/// with a reproducible diagnostic on the first counterexample.
+pub fn for_all<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    seed: u64,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed}):\n  input: {input:?}\n  {msg}"
+            );
+        }
+    }
+}
+
+/// Like [`for_all`] with the default case count and a fixed per-test seed
+/// derived from the property name (stable across runs).
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    gen: impl FnMut(&mut Rng) -> T,
+    prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let seed = name.bytes().fold(0xcbf2_9ce4_8422_2325u64, |h, b| {
+        (h ^ b as u64).wrapping_mul(0x100_0000_01b3)
+    });
+    for_all(name, DEFAULT_CASES, seed, gen, prop);
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_ensure {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+/// Generate an arbitrary finite f32 by bit pattern (covers denormals,
+/// both zeros, full exponent range) — the generator FlInt's soundness
+/// property must sweep.
+pub fn finite_f32(rng: &mut Rng) -> f32 {
+    loop {
+        let x = f32::from_bits(rng.next_u32());
+        if x.is_finite() {
+            return x;
+        }
+    }
+}
+
+/// Uniform f32 in a range (for feature-like values).
+pub fn f32_in(rng: &mut Rng, lo: f32, hi: f32) -> f32 {
+    rng.uniform_in(lo, hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        for_all("count", 50, 1, |r| r.next_u32(), |_| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_diagnostics() {
+        for_all("fails", 50, 1, |r| r.below(10), |&x| {
+            if x < 9 {
+                Ok(())
+            } else {
+                Err("x too big".into())
+            }
+        });
+    }
+
+    #[test]
+    fn finite_f32_is_finite_and_diverse() {
+        let mut rng = Rng::new(3);
+        let mut neg = 0;
+        for _ in 0..1000 {
+            let x = finite_f32(&mut rng);
+            assert!(x.is_finite());
+            if x < 0.0 {
+                neg += 1;
+            }
+        }
+        assert!(neg > 300 && neg < 700, "sign balance off: {neg}");
+    }
+
+    #[test]
+    fn check_is_deterministic() {
+        // Two runs of the same named property see the same inputs.
+        let mut first = Vec::new();
+        check("det", |r| r.next_u64(), |&x| {
+            first.push(x);
+            Ok(())
+        });
+        let mut second = Vec::new();
+        check("det", |r| r.next_u64(), |&x| {
+            second.push(x);
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

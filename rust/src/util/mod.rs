@@ -1,0 +1,10 @@
+//! Small shared utilities: deterministic PRNG, statistics helpers.
+
+pub mod bench;
+pub mod check;
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+pub use json::Json;
+pub use rng::Rng;

@@ -1,0 +1,130 @@
+//! Statistics helpers used by benchmarks and the evaluation harnesses.
+
+/// Mean of a slice (0.0 for empty input).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Maximum absolute value.
+pub fn max_abs(xs: &[f64]) -> f64 {
+    xs.iter().fold(0.0f64, |a, &x| a.max(x.abs()))
+}
+
+/// `p`-quantile (nearest-rank) of an unsorted slice; p in [0,1].
+pub fn quantile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut s: Vec<f64> = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((s.len() as f64 - 1.0) * p.clamp(0.0, 1.0)).round() as usize;
+    s[idx]
+}
+
+/// Simple online latency histogram with fixed power-of-two microsecond
+/// buckets; used by the coordinator's metrics.
+#[derive(Clone, Debug, Default)]
+pub struct Histogram {
+    /// bucket i counts values in [2^i, 2^(i+1)) microseconds; bucket 0 is [0,2).
+    buckets: [u64; 32],
+    count: u64,
+    sum: f64,
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, value_us: f64) {
+        let v = value_us.max(0.0);
+        let b = if v < 1.0 { 0 } else { (v.log2().floor() as usize).min(31) };
+        self.buckets[b] += 1;
+        self.count += 1;
+        self.sum += v;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Approximate quantile from bucket boundaries (upper bound of bucket).
+    pub fn quantile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (self.count as f64 * p.clamp(0.0, 1.0)).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return (1u64 << (i + 1)) as f64;
+            }
+        }
+        (1u64 << 32) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((std_dev(&xs) - (1.25f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_empty() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(std_dev(&[]), 0.0);
+    }
+
+    #[test]
+    fn max_abs_works() {
+        assert_eq!(max_abs(&[-3.0, 2.0]), 3.0);
+        assert_eq!(max_abs(&[]), 0.0);
+    }
+
+    #[test]
+    fn quantile_nearest_rank() {
+        let xs = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 0.5), 3.0);
+        assert_eq!(quantile(&xs, 1.0), 5.0);
+    }
+
+    #[test]
+    fn histogram_records() {
+        let mut h = Histogram::new();
+        for v in [1.0, 10.0, 100.0, 1000.0] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 4);
+        assert!((h.mean() - 277.75).abs() < 1e-9);
+        assert!(h.quantile(0.5) >= 10.0);
+        assert!(h.quantile(1.0) >= 1000.0);
+    }
+}

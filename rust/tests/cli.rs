@@ -1,0 +1,99 @@
+//! Integration: the `intreeger` CLI binary — the user-facing face of the
+//! end-to-end framework (train → codegen → predict from the shell).
+
+use std::process::Command;
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_intreeger")
+}
+
+fn tmpdir() -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("intreeger_cli_{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn no_args_prints_usage() {
+    let out = Command::new(bin()).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("usage:"));
+}
+
+#[test]
+fn train_codegen_predict_roundtrip() {
+    let dir = tmpdir();
+    let model = dir.join("model.json");
+    let code = dir.join("model.c");
+    let csv = dir.join("data.csv");
+
+    // train on the synthetic shuttle dataset
+    let out = Command::new(bin())
+        .args(["train", "--dataset", "shuttle", "--rows", "1500", "--trees", "4",
+               "--depth", "4", "--seed", "5", "--out"])
+        .arg(&model)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "train failed: {}", String::from_utf8_lossy(&out.stderr));
+    assert!(model.is_file());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("holdout accuracy"));
+
+    // codegen (integer-only if-else)
+    let out = Command::new(bin())
+        .args(["codegen", "--model"])
+        .arg(&model)
+        .args(["--variant", "intreeger", "--out"])
+        .arg(&code)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "codegen failed: {}", String::from_utf8_lossy(&out.stderr));
+    let src = std::fs::read_to_string(&code).unwrap();
+    assert!(src.contains("void predict(const float *data, uint32_t *result)"));
+
+    // predict over a CSV
+    let ds = intreeger::data::shuttle_like(50, 6);
+    intreeger::data::csv::write_file(&csv, &ds).unwrap();
+    let out = Command::new(bin())
+        .args(["predict", "--model"])
+        .arg(&model)
+        .arg("--csv")
+        .arg(&csv)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "predict failed: {}", String::from_utf8_lossy(&out.stderr));
+    let lines: Vec<&str> = std::str::from_utf8(&out.stdout).unwrap().lines().collect();
+    assert_eq!(lines.len(), 50);
+    assert!(lines.iter().all(|l| l.parse::<u32>().map(|c| c < 7).unwrap_or(false)));
+}
+
+#[test]
+fn simulate_outputs_all_cores_and_variants() {
+    let dir = tmpdir();
+    let model = dir.join("sim_model.json");
+    Command::new(bin())
+        .args(["train", "--dataset", "esa", "--rows", "800", "--trees", "3", "--depth", "4", "--out"])
+        .arg(&model)
+        .status()
+        .unwrap();
+    let out = Command::new(bin())
+        .args(["simulate", "--model"])
+        .arg(&model)
+        .args(["--dataset", "esa", "--rows", "500"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for needle in ["EPYC 7282", "Cortex-A72", "U74-MC", "FE310", "float", "flint", "intreeger"] {
+        assert!(text.contains(needle), "missing {needle} in:\n{text}");
+    }
+    // 4 cores x 3 variants + header
+    assert_eq!(text.lines().count(), 13);
+}
+
+#[test]
+fn tablei_prints_table() {
+    let out = Command::new(bin()).arg("tablei").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("EPYC 7282") && text.contains("RV32IMAC"));
+}

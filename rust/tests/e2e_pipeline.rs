@@ -1,0 +1,101 @@
+//! Integration: the full Fig 1 pipeline — dataset → train → IR
+//! serialize/reload → codegen → gcc → execute — with cross-layer parity
+//! assertions at every seam.
+
+use intreeger::codegen::{self, CBinary, Layout};
+use intreeger::data::{esa_like, shuttle_like};
+use intreeger::inference::{Engine, FlIntEngine, FloatEngine, IntEngine, Variant};
+use intreeger::ir::Model;
+use intreeger::trees::{accuracy, train_gbt, ForestParams, GbtParams, RandomForest};
+use intreeger::util::Rng;
+
+#[test]
+fn full_pipeline_shuttle() {
+    let ds = shuttle_like(6_000, 201);
+    let (train, test) = ds.train_test_split(0.25, &mut Rng::new(5));
+    let model = RandomForest::train(
+        &train,
+        &ForestParams { n_trees: 12, max_depth: 6, ..Default::default() },
+        5,
+    );
+    // must actually learn something
+    let majority = *test.class_counts().iter().max().unwrap() as f64 / test.n_rows() as f64;
+    assert!(accuracy(&model, &test) > majority, "model did not learn");
+
+    // IR round trip
+    let model = Model::from_json(&model.to_json()).expect("roundtrip");
+
+    // engine parity across the whole test set
+    let fe = FloatEngine::compile(&model);
+    let fl = FlIntEngine::compile(&model);
+    let ie = IntEngine::compile(&model);
+    for i in 0..test.n_rows() {
+        let a = fe.predict(test.row(i));
+        assert_eq!(a, fl.predict(test.row(i)), "flint row {i}");
+        assert_eq!(a, ie.predict(test.row(i)), "int row {i}");
+    }
+
+    // generated C (both layouts) matches the integer engine bit-exactly
+    if codegen::compile::gcc_available() {
+        let rows: Vec<f32> = test.features[..200 * 7].to_vec();
+        for layout in [Layout::IfElse, Layout::Native] {
+            let src = codegen::generate(&model, layout, Variant::IntTreeger);
+            let bin = CBinary::compile(&src, Variant::IntTreeger, 7, 7, "e2e_test").unwrap();
+            let out = bin.predict_u32(&rows).unwrap();
+            for (i, fixed) in out.iter().enumerate() {
+                assert_eq!(fixed, &ie.predict_fixed(test.row(i)), "{} row {i}", layout.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn full_pipeline_esa() {
+    let ds = esa_like(3_000, 202);
+    let (train, test) = ds.train_test_split(0.25, &mut Rng::new(6));
+    let model = RandomForest::train(
+        &train,
+        &ForestParams { n_trees: 8, max_depth: 6, ..Default::default() },
+        8,
+    );
+    let model = Model::from_json(&model.to_json()).expect("roundtrip");
+    let fe = FloatEngine::compile(&model);
+    let ie = IntEngine::compile(&model);
+    for i in 0..test.n_rows() {
+        assert_eq!(fe.predict(test.row(i)), ie.predict(test.row(i)), "row {i}");
+    }
+}
+
+#[test]
+fn gbt_pipeline_integer_only() {
+    let ds = shuttle_like(2_500, 203);
+    let (train, test) = ds.train_test_split(0.25, &mut Rng::new(7));
+    let model = train_gbt(
+        &train,
+        &GbtParams { n_rounds: 4, max_depth: 3, ..Default::default() },
+        3,
+    );
+    let model = Model::from_json(&model.to_json()).expect("roundtrip");
+    let gie = intreeger::inference::GbtIntEngine::compile(&model);
+    for i in 0..test.n_rows() {
+        assert_eq!(model.predict(test.row(i)), gie.predict(test.row(i)), "row {i}");
+    }
+}
+
+#[test]
+fn csv_roundtrip_through_training() {
+    // CSV in → train → predict: the "application domain expert" path.
+    let ds = shuttle_like(800, 204);
+    let dir = std::env::temp_dir().join("intreeger_e2e_csv");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join("train.csv");
+    intreeger::data::csv::write_file(&p, &ds).unwrap();
+    let loaded = intreeger::data::csv::read_file(&p, false).unwrap();
+    assert_eq!(loaded.n_rows(), ds.n_rows());
+    let model = RandomForest::train(
+        &loaded,
+        &ForestParams { n_trees: 3, max_depth: 4, ..Default::default() },
+        1,
+    );
+    assert!(model.validate().is_ok());
+}

@@ -1,0 +1,106 @@
+//! Integration: the AOT-compiled XLA/Pallas path vs the scalar engines —
+//! across datasets, model sizes and batch shapes, everything must be
+//! bit-identical (E9).
+//!
+//! Requires `make artifacts`; tests skip (with a note) when absent.
+
+use intreeger::data::{esa_like, shuttle_like, Dataset};
+use intreeger::inference::IntEngine;
+use intreeger::runtime::{artifacts_available, engine_for_model, Manifest};
+use intreeger::trees::{ForestParams, RandomForest};
+use std::path::PathBuf;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if artifacts_available(&dir) {
+        Some(dir)
+    } else {
+        eprintln!("artifacts not built (make artifacts) — skipping");
+        None
+    }
+}
+
+fn check_parity(dir: &std::path::Path, ds: &Dataset, n_trees: usize, depth: usize, seed: u64) {
+    let model = RandomForest::train(
+        ds,
+        &ForestParams { n_trees, max_depth: depth, ..Default::default() },
+        seed,
+    );
+    let xla = engine_for_model(dir, &model, 1).expect("engine");
+    let scalar = IntEngine::compile(&model);
+    let b = xla.max_batch().min(ds.n_rows());
+    let rows = &ds.features[..b * ds.n_features];
+    let got = xla.execute(rows, ds.n_features).expect("execute");
+    for (i, fixed) in got.iter().enumerate() {
+        assert_eq!(fixed, &scalar.predict_fixed(ds.row(i)), "row {i} (trees={n_trees})");
+    }
+}
+
+#[test]
+fn parity_shuttle_sizes() {
+    let Some(dir) = artifacts() else { return };
+    let ds = shuttle_like(1_500, 301);
+    for (n_trees, depth) in [(1usize, 3usize), (10, 6), (50, 7)] {
+        check_parity(&dir, &ds, n_trees, depth, 301 + n_trees as u64);
+    }
+}
+
+#[test]
+fn parity_esa() {
+    let Some(dir) = artifacts() else { return };
+    let ds = esa_like(1_200, 302);
+    check_parity(&dir, &ds, 10, 6, 99);
+}
+
+#[test]
+fn parity_many_random_batches() {
+    let Some(dir) = artifacts() else { return };
+    let ds = shuttle_like(4_000, 303);
+    let model = RandomForest::train(
+        &ds,
+        &ForestParams { n_trees: 12, max_depth: 6, ..Default::default() },
+        11,
+    );
+    let xla = engine_for_model(&dir, &model, 1).expect("engine");
+    let scalar = IntEngine::compile(&model);
+    // sweep partial batch sizes incl. 1 and max
+    for b in [1usize, 2, 7, 33, xla.max_batch()] {
+        let b = b.min(xla.max_batch());
+        let offset = b * 13 % (ds.n_rows() - xla.max_batch());
+        let rows = &ds.features[offset * 7..(offset + b) * 7];
+        let got = xla.execute(rows, 7).expect("execute");
+        assert_eq!(got.len(), b);
+        for (i, fixed) in got.iter().enumerate() {
+            assert_eq!(fixed, &scalar.predict_fixed(ds.row(offset + i)), "b={b} row {i}");
+        }
+    }
+}
+
+#[test]
+fn pallas_and_jnp_artifacts_agree() {
+    // The quick tier exists in both pallas and pure-jnp lowering; both
+    // must produce identical results for the same packed model.
+    let Some(dir) = artifacts() else { return };
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let Some(jnp_tier) = manifest.tiers.iter().find(|t| t.name == "quick_jnp") else {
+        eprintln!("quick_jnp tier missing — skipping");
+        return;
+    };
+    let ds = shuttle_like(800, 304);
+    let model = RandomForest::train(
+        &ds,
+        &ForestParams { n_trees: 8, max_depth: 5, ..Default::default() },
+        21,
+    );
+    let pack = intreeger::runtime::ForestPack::pack(&model, jnp_tier).expect("pack");
+    let jnp = intreeger::runtime::PjrtEngine::load(&dir, jnp_tier.clone(), pack).expect("jnp");
+    let pallas = engine_for_model(&dir, &model, 1).expect("pallas");
+    assert!(pallas.tier().use_pallas);
+    let b = jnp.max_batch().min(pallas.max_batch());
+    let rows = &ds.features[..b * 7];
+    assert_eq!(
+        jnp.execute(rows, 7).expect("jnp exec"),
+        pallas.execute(rows, 7).expect("pallas exec"),
+        "pallas vs jnp artifact disagreement"
+    );
+}
