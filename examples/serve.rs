@@ -42,7 +42,16 @@ fn main() {
         // Demo the batched XLA route even on this 1-core host; production
         // deployments would set auto_calibrate: true (see shuttle_e2e).
         auto_calibrate: false,
+        // XLA offload rides shard 0 only, so when artifacts exist keep a
+        // single worker (sharding would starve the XLA route of batch
+        // volume); without artifacts, demo the scalar pool instead.
+        n_workers: if artifacts.is_some() {
+            1
+        } else {
+            std::thread::available_parallelism().map_or(1, |n| n.get().min(4))
+        },
     };
+    let swap_config = config.clone();
     router.register("shuttle", &m_shuttle, artifacts.clone(), config.clone());
     router.register("esa", &m_esa, artifacts, config);
     println!("registered models: {:?}\n", router.names());
@@ -87,8 +96,12 @@ fn main() {
             snap.flush_full, snap.flush_deadline, snap.flush_drain
         );
         println!(
-            "  latency: mean {:.0} us, p50 {:.0} us, p99 {:.0} us\n",
+            "  latency: mean {:.0} us, p50 {:.0} us, p99 {:.0} us",
             snap.latency_mean_us, snap.latency_p50_us, snap.latency_p99_us
+        );
+        println!(
+            "  per-batch: size p50 {:.0} / p99 {:.0}, service p50 {:.0} us / p99 {:.0} us\n",
+            snap.batch_p50, snap.batch_p99, snap.batch_latency_p50_us, snap.batch_latency_p99_us
         );
     }
 
@@ -99,7 +112,10 @@ fn main() {
         &ForestParams { n_trees: 20, max_depth: 6, ..Default::default() },
         3,
     );
-    router.register("shuttle", &m2, None, ServerConfig::default());
+    // Re-register under the same serving config so post-swap behaviour is
+    // comparable to the pre-swap run (no artifacts: the retrain serves
+    // scalar-only either way).
+    router.register("shuttle", &m2, None, swap_config);
     let r = router.infer("shuttle", shuttle.row(0).to_vec()).unwrap();
     println!("post-swap inference OK (class {}, {:?} route)", r.class, r.route);
 }

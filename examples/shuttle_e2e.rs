@@ -135,6 +135,7 @@ fn main() {
             // route honestly: on this 1-core host the scalar engine wins,
             // on an accelerator the XLA path would be kept.
             auto_calibrate: true,
+            n_workers: 2,
         },
     );
     let n_req = 4_000usize;

@@ -1,0 +1,90 @@
+//! E10 — batch-first execution core: tiled traversal kernel vs the
+//! per-row scalar engines, swept over batch size × variant × node
+//! layout.
+//!
+//! Acceptance target (ISSUE 1): at batch ≥ 64 on the shuttle-like
+//! model, the tiled kernel delivers ≥ 2x rows/sec over the per-row
+//! baseline of the same variant. The sweep prints the speedup per cell
+//! so regressions are visible at a glance.
+
+use intreeger::data::{esa_like, shuttle_like};
+use intreeger::inference::{compile_variant_with, Engine, NodeOrder, Variant};
+use intreeger::trees::{ForestParams, RandomForest};
+use intreeger::util::bench::{black_box, measure, report, section};
+
+fn main() {
+    let ds = shuttle_like(12_000, 7);
+    let model = RandomForest::train(
+        &ds,
+        &ForestParams { n_trees: 10, max_depth: 6, ..Default::default() },
+        19,
+    );
+
+    section("tiled batch kernel vs per-row, by batch size x variant x layout (shuttle-like)");
+    println!(
+        "{:<10} {:<8} {:>6} {:>14} {:>14} {:>9}",
+        "variant", "layout", "batch", "per-row ns", "batched ns", "speedup"
+    );
+    for variant in Variant::all() {
+        for order in NodeOrder::all() {
+            let engine = compile_variant_with(&model, variant, order);
+            for batch in [1usize, 8, 64, 256, 1024] {
+                let flat: Vec<f32> = ds.features[..batch * ds.n_features].to_vec();
+                let scalar_ns = {
+                    let m = measure(2, 7, batch as u64, || {
+                        let mut acc = 0u32;
+                        for r in flat.chunks_exact(ds.n_features) {
+                            acc ^= engine.predict(r);
+                        }
+                        black_box(acc);
+                    });
+                    m.per_item_ns()
+                };
+                let batched_ns = {
+                    let m = measure(2, 7, batch as u64, || {
+                        let out = engine.predict_batch(&flat);
+                        black_box(out[0]);
+                    });
+                    m.per_item_ns()
+                };
+                println!(
+                    "{:<10} {:<8} {:>6} {:>14.1} {:>14.1} {:>8.2}x",
+                    variant.name(),
+                    order.name(),
+                    batch,
+                    scalar_ns,
+                    batched_ns,
+                    scalar_ns / batched_ns
+                );
+            }
+        }
+    }
+
+    section("wide rows (esa-like, 87 features): integer variant");
+    let esa = esa_like(4_000, 11);
+    let esa_model = RandomForest::train(
+        &esa,
+        &ForestParams { n_trees: 10, max_depth: 6, ..Default::default() },
+        23,
+    );
+    let engine = compile_variant_with(&esa_model, Variant::IntTreeger, NodeOrder::Breadth);
+    for batch in [64usize, 1024] {
+        let flat: Vec<f32> = esa.features[..batch * esa.n_features].to_vec();
+        let m = measure(2, 5, batch as u64, || {
+            let out = engine.predict_batch(&flat);
+            black_box(out[0]);
+        });
+        report(&format!("esa/int/breadth/batch{batch}"), &m);
+    }
+
+    section("fixed-point serving path (predict_fixed_batch, the coordinator hot path)");
+    let int_engine = intreeger::inference::IntEngine::compile(&model);
+    for batch in [64usize, 256] {
+        let flat: Vec<f32> = ds.features[..batch * ds.n_features].to_vec();
+        let m = measure(2, 7, batch as u64, || {
+            let out = int_engine.predict_fixed_batch(&flat);
+            black_box(out[0][0]);
+        });
+        report(&format!("int/predict_fixed_batch/batch{batch}"), &m);
+    }
+}

@@ -1,7 +1,8 @@
-//! E9 — serving-stack benchmark: scalar engine vs the AOT-compiled
-//! XLA/Pallas batched engine, and the batch-size crossover the
-//! coordinator's router exploits. Also measures end-to-end server
-//! throughput with dynamic batching.
+//! E9 — serving-stack benchmark: scalar engine (per-row and tiled
+//! batch kernel) vs the AOT-compiled XLA/Pallas batched engine, the
+//! batch-size crossover the coordinator's router exploits, and
+//! end-to-end server throughput with dynamic batching across a sharded
+//! worker pool.
 
 use intreeger::coordinator::{BatchPolicy, InferenceServer, ServerConfig};
 use intreeger::data::shuttle_like;
@@ -22,7 +23,7 @@ fn main() {
     );
     let scalar = IntEngine::compile(&model);
 
-    section("scalar engine (per-row)");
+    section("scalar engine: per-row loop vs tiled batch kernel");
     let rows: Vec<&[f32]> = (0..2000).map(|i| ds.row(i)).collect();
     let m = measure(2, 7, rows.len() as u64, || {
         let mut acc = 0u32;
@@ -31,10 +32,48 @@ fn main() {
         }
         black_box(acc);
     });
-    report("scalar/predict_fixed", &m);
+    report("scalar/predict_fixed (per-row)", &m);
+    let flat: Vec<f32> = ds.features[..2000 * ds.n_features].to_vec();
+    let mb = measure(2, 7, 2000, || {
+        let out = scalar.predict_fixed_batch(&flat);
+        black_box(out[0][0]);
+    });
+    report("scalar/predict_fixed_batch (tiled)", &mb);
+    println!(
+        "batch kernel speedup over per-row: {:.2}x",
+        m.per_item_ns() / mb.per_item_ns()
+    );
+
+    section("end-to-end server: worker pool scaling (scalar route)");
+    for n_workers in [1usize, 2, 4] {
+        let server = InferenceServer::start(
+            &model,
+            None,
+            ServerConfig {
+                policy: BatchPolicy { max_batch: 64, max_wait: Duration::from_micros(200) },
+                n_workers,
+                ..Default::default()
+            },
+        );
+        let n = 6000usize;
+        let reqs: Vec<Vec<f32>> = (0..n).map(|i| ds.row(i % ds.n_rows()).to_vec()).collect();
+        let t0 = std::time::Instant::now();
+        let responses = server.infer_many(reqs);
+        let wall = t0.elapsed().as_secs_f64();
+        let snap = server.metrics();
+        println!(
+            "workers {n_workers}: {:>8.0} req/s  p50 {:>6.0} us  p99 {:>7.0} us  (mean batch {:.1}, batch service p99 {:.0} us)",
+            n as f64 / wall,
+            snap.latency_p50_us,
+            snap.latency_p99_us,
+            snap.mean_batch,
+            snap.batch_latency_p99_us
+        );
+        black_box(responses.len());
+    }
 
     if !artifacts_available(&dir) {
-        println!("(artifacts not built — run `make artifacts` for the XLA comparisons)");
+        println!("\n(artifacts not built — run `make artifacts` for the XLA comparisons)");
         return;
     }
 
@@ -55,15 +94,14 @@ fn main() {
             let out = xla.execute(&flat, ds.n_features).expect("xla exec");
             black_box(out[0][0]);
         });
+        // Honest baseline: the scalar route is batch-first now, so the
+        // XLA crossover must beat the tiled kernel, not a per-row loop.
         let ms = measure(2, 7, batch as u64, || {
-            let mut acc = 0u32;
-            for i in 0..batch {
-                acc ^= scalar.predict_fixed(ds.row(i))[0];
-            }
-            black_box(acc);
+            let out = scalar.predict_fixed_batch(&flat);
+            black_box(out[0][0]);
         });
         println!(
-            "batch {batch:>4}: xla {:>10.1} ns/row  scalar {:>10.1} ns/row  ({})",
+            "batch {batch:>4}: xla {:>10.1} ns/row  scalar-batched {:>10.1} ns/row  ({})",
             mx.per_item_ns(),
             ms.per_item_ns(),
             if mx.per_item_ns() < ms.per_item_ns() { "xla wins" } else { "scalar wins" }
@@ -83,6 +121,7 @@ fn main() {
                 xla_threshold: threshold,
                 queue_depth: 4096,
                 auto_calibrate: false, // measure both routes explicitly
+                n_workers: 1,          // isolate routing from pool scaling
             },
         );
         let n = 4000usize;

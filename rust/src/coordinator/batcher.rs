@@ -5,6 +5,10 @@
 //! the oldest request has waited `max_wait`, or on explicit drain. This
 //! is the standard continuous-batching trade-off (throughput vs tail
 //! latency) scaled down to tabular inference.
+//!
+//! Each worker shard of the [`super::server`] pool owns one `Batcher`;
+//! the policy is therefore per shard (a pool of N workers at
+//! `max_batch = B` can have up to `N * B` rows in flight).
 
 use std::time::{Duration, Instant};
 

@@ -18,7 +18,60 @@ pub struct Metrics {
     pub flush_deadline: AtomicU64,
     pub flush_drain: AtomicU64,
     latency_us: Mutex<Histogram>,
-    batch_sizes: Mutex<Histogram>,
+    batch_sizes: Mutex<SizeHistogram>,
+    /// Time to *execute* one flushed batch (flatten + forest walks; the
+    /// per-request response fan-out is excluded) regardless of route —
+    /// the quantity the batch-first refactor optimizes, reported per
+    /// batch rather than per request.
+    batch_latency_us: Mutex<Histogram>,
+}
+
+/// Exact histogram for small integer values (batch sizes). Unlike the
+/// power-of-two latency [`Histogram`], quantiles here must be *exact* —
+/// batch sizes are bounded by the policy's `max_batch`, and reporting a
+/// bucket upper bound (e.g. p50 = 128 for a server capped at 64) would
+/// be nonsense.
+#[derive(Clone, Debug, Default)]
+struct SizeHistogram {
+    /// counts[v] = occurrences of value v (grown on demand).
+    counts: Vec<u64>,
+    count: u64,
+    sum: f64,
+}
+
+impl SizeHistogram {
+    fn record(&mut self, value: usize) {
+        if value >= self.counts.len() {
+            self.counts.resize(value + 1, 0);
+        }
+        self.counts[value] += 1;
+        self.count += 1;
+        self.sum += value as f64;
+    }
+
+    fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Exact nearest-rank quantile.
+    fn quantile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((self.count as f64) * p.clamp(0.0, 1.0)).ceil().max(1.0) as u64;
+        let mut acc = 0u64;
+        for (v, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return v as f64;
+            }
+        }
+        (self.counts.len().saturating_sub(1)) as f64
+    }
 }
 
 /// Point-in-time copy for reporting.
@@ -37,6 +90,13 @@ pub struct MetricsSnapshot {
     pub latency_p50_us: f64,
     pub latency_p99_us: f64,
     pub mean_batch: f64,
+    /// Batch-size distribution (exact p50/p99 of rows per flushed batch).
+    pub batch_p50: f64,
+    pub batch_p99: f64,
+    /// Per-batch service-time distribution.
+    pub batch_latency_mean_us: f64,
+    pub batch_latency_p50_us: f64,
+    pub batch_latency_p99_us: f64,
 }
 
 impl Metrics {
@@ -46,6 +106,11 @@ impl Metrics {
 
     pub fn record_latency_us(&self, us: f64) {
         self.latency_us.lock().unwrap().record(us);
+    }
+
+    /// Record how long serving one flushed batch took.
+    pub fn record_batch_latency_us(&self, us: f64) {
+        self.batch_latency_us.lock().unwrap().record(us);
     }
 
     pub fn record_batch(&self, size: usize, xla: bool, reason: super::FlushReason) {
@@ -61,12 +126,13 @@ impl Metrics {
             super::FlushReason::Deadline => self.flush_deadline.fetch_add(1, Ordering::Relaxed),
             super::FlushReason::Drain => self.flush_drain.fetch_add(1, Ordering::Relaxed),
         };
-        self.batch_sizes.lock().unwrap().record(size as f64);
+        self.batch_sizes.lock().unwrap().record(size);
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
         let lat = self.latency_us.lock().unwrap();
         let sizes = self.batch_sizes.lock().unwrap();
+        let blat = self.batch_latency_us.lock().unwrap();
         MetricsSnapshot {
             requests: self.requests.load(Ordering::Relaxed),
             responses: self.responses.load(Ordering::Relaxed),
@@ -81,6 +147,11 @@ impl Metrics {
             latency_p50_us: lat.quantile(0.5),
             latency_p99_us: lat.quantile(0.99),
             mean_batch: sizes.mean(),
+            batch_p50: sizes.quantile(0.5),
+            batch_p99: sizes.quantile(0.99),
+            batch_latency_mean_us: blat.mean(),
+            batch_latency_p50_us: blat.quantile(0.5),
+            batch_latency_p99_us: blat.quantile(0.99),
         }
     }
 }
@@ -98,6 +169,8 @@ mod tests {
         m.record_batch(64, true, FlushReason::Deadline);
         m.record_latency_us(100.0);
         m.record_latency_us(300.0);
+        m.record_batch_latency_us(50.0);
+        m.record_batch_latency_us(150.0);
         let s = m.snapshot();
         assert_eq!(s.requests, 5);
         assert_eq!(s.batches_scalar, 1);
@@ -108,5 +181,27 @@ mod tests {
         assert_eq!(s.flush_deadline, 1);
         assert!((s.latency_mean_us - 200.0).abs() < 1e-9);
         assert!((s.mean_batch - 33.5).abs() < 1e-9);
+        // Batch-size quantiles are exact (SizeHistogram, not the
+        // power-of-two latency buckets).
+        assert_eq!(s.batch_p50, 3.0);
+        assert_eq!(s.batch_p99, 64.0);
+        assert!((s.batch_latency_mean_us - 100.0).abs() < 1e-9);
+        // Latency quantiles remain bucket upper bounds.
+        assert!(s.batch_latency_p50_us >= 50.0);
+        assert!(s.batch_latency_p99_us >= s.batch_latency_p50_us);
+    }
+
+    #[test]
+    fn batch_size_quantiles_exact_at_cap() {
+        // A server that always flushes full 64-row batches must report
+        // p50 = p99 = 64, not a bucket bound like 128.
+        let m = Metrics::new();
+        for _ in 0..100 {
+            m.record_batch(64, false, FlushReason::Full);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.batch_p50, 64.0);
+        assert_eq!(s.batch_p99, 64.0);
+        assert_eq!(s.mean_batch, 64.0);
     }
 }

@@ -9,13 +9,16 @@
 //!   model can be hot-swapped (retrain → re-register).
 //! * [`batcher`] — dynamic batching policy: requests accumulate until
 //!   `max_batch` or `max_wait` and are flushed as one batch.
-//! * [`server`] — the execution loop: single requests and small batches
-//!   go to the scalar integer engine (lowest latency — the paper's
-//!   generated-C equivalent); large batches go to the XLA/PJRT batched
-//!   engine (the AOT-compiled Pallas path; highest throughput). Both
-//!   produce bit-identical u32 accumulators, so routing is invisible to
-//!   clients.
-//! * [`metrics`] — counters + latency histograms per route.
+//! * [`server`] — the execution layer: a **sharded pool of worker
+//!   threads** (`ServerConfig::n_workers`) drains the request queue
+//!   round-robin, so scalar throughput scales with cores. Each flushed
+//!   batch runs through the tiled batch kernel
+//!   ([`crate::inference::batch`]) — not a per-row loop; large batches
+//!   on shard 0 can offload to the XLA/PJRT engine (the AOT-compiled
+//!   Pallas path). All routes produce bit-identical u32 accumulators,
+//!   so routing is invisible to clients.
+//! * [`metrics`] — counters, per-request latency histograms, and
+//!   per-batch size/service-time histograms.
 //!
 //! Everything is std-threads + channels (the build environment has no
 //! async runtime), which also keeps the hot path allocation-light.

@@ -1,0 +1,368 @@
+//! Batch-first tiled traversal kernel — the crate's high-throughput
+//! execution core.
+//!
+//! The scalar engines walk one row through the whole forest at a time;
+//! each branch node is a dependent load, so the walk stalls on every
+//! cache miss. Following Koschel et al. (*Fast Inference of Tree
+//! Ensembles on ARM Devices*), this module instead walks **tiles of
+//! [`TILE_ROWS`] independent rows in lockstep through each tree**: the
+//! per-lane node loads have no data dependence on each other, so the
+//! out-of-order core overlaps their miss latency instead of serializing
+//! it. On top of that, the whole batch is pre-transformed into
+//! ordered-u32 space **once** (FlInt's trick, amortized batch-wide), so
+//! the integer variants stay integer-only end to end.
+//!
+//! ## Parity invariant (load-bearing — the parity suite enforces it)
+//!
+//! For every engine variant, the batched kernels are **bit-identical** to
+//! the scalar engines: for each row, leaf payloads are accumulated in
+//! ascending tree order — exactly the scalar iteration order — so float
+//! sums see the same rounding sequence and u32/i64 sums are exact either
+//! way. Tiling changes only *when* each tree walk happens, never the
+//! per-row accumulation sequence.
+//!
+//! ## Scratch buffers
+//!
+//! The seed engines transformed rows through a fixed 128-slot stack
+//! buffer and rejected wider rows. Both the scalar path
+//! ([`with_ordered_row`]) and the batch path now use thread-local
+//! growable scratch: no per-call allocation in steady state, no feature
+//! count limit (the ≥200-feature regression tests cover this), and no
+//! interior-mutability hazard on the `Sync` engines.
+
+use super::compiled::{CompiledForest, LEAF};
+use crate::flint::ordered_u32;
+use crate::ir::argmax;
+use std::cell::RefCell;
+
+/// Rows walked in lockstep per tile. Eight lanes is enough to cover
+/// L2-miss latency with independent work on current cores while the
+/// lane state (cursor + leaf + done flag per lane) stays in registers /
+/// L1.
+pub const TILE_ROWS: usize = 8;
+
+thread_local! {
+    /// Scalar-path scratch: one ordered row.
+    static ROW_ORD: RefCell<Vec<u32>> = RefCell::new(Vec::new());
+    /// Batch-path scratch: a whole ordered batch.
+    static BATCH_ORD: RefCell<Vec<u32>> = RefCell::new(Vec::new());
+}
+
+/// Run `f` on `row` transformed into ordered-u32 space using reusable
+/// thread-local scratch (replaces the seed's 128-feature stack buffer;
+/// any width is supported).
+///
+/// The buffer is moved out of the slot for the duration of `f`, so a
+/// re-entrant call simply allocates a fresh buffer instead of aliasing.
+#[inline]
+pub fn with_ordered_row<R>(row: &[f32], f: impl FnOnce(&[u32]) -> R) -> R {
+    ROW_ORD.with(|cell| {
+        let mut buf = cell.take();
+        buf.clear();
+        buf.extend(row.iter().map(|&x| ordered_u32(x)));
+        let out = f(&buf);
+        cell.replace(buf);
+        out
+    })
+}
+
+/// Run `f` on a whole row-major batch transformed into ordered-u32 space
+/// (one pass, amortized across every tree walk of the batch). Shared
+/// with the GBT batch path (`crate::inference::gbt_int`).
+#[inline]
+pub(crate) fn with_ordered_batch<R>(rows: &[f32], f: impl FnOnce(&[u32]) -> R) -> R {
+    BATCH_ORD.with(|cell| {
+        let mut buf = cell.take();
+        buf.clear();
+        buf.extend(rows.iter().map(|&x| ordered_u32(x)));
+        let out = f(&buf);
+        cell.replace(buf);
+        out
+    })
+}
+
+/// Walk one tree over a tile of rows in the ordered-u32 domain,
+/// interleaved: every loop iteration advances all unfinished lanes by one
+/// node, so the per-lane loads overlap.
+///
+/// SAFETY of the unchecked indexing: identical argument to
+/// [`CompiledForest::walk_ord`] — `Model::validate()` bounds child and
+/// feature indices at compile time, and the public batch entry points
+/// assert the row buffer shape once per call.
+#[inline]
+fn walk_tile_ord(
+    f: &CompiledForest,
+    t: usize,
+    rows_ord: &[u32],
+    tile_start: usize,
+    tile_rows: usize,
+    leaves: &mut [u32; TILE_ROWS],
+) {
+    debug_assert!(tile_rows <= TILE_ROWS);
+    debug_assert!((tile_start + tile_rows) * f.n_features <= rows_ord.len());
+    let base = f.tree_offsets[t] as usize;
+    let nodes = &f.nodes_ord;
+    let stride = f.n_features;
+    let mut idx = [base; TILE_ROWS];
+    let mut done = [false; TILE_ROWS];
+    let mut remaining = tile_rows;
+    while remaining > 0 {
+        for r in 0..tile_rows {
+            if done[r] {
+                continue;
+            }
+            let n = unsafe { nodes.get_unchecked(idx[r]) };
+            if n.feature == LEAF {
+                leaves[r] = n.left;
+                done[r] = true;
+                remaining -= 1;
+            } else {
+                let x = unsafe {
+                    *rows_ord.get_unchecked((tile_start + r) * stride + n.feature as usize)
+                };
+                idx[r] = base + if x <= n.threshold { n.left } else { n.right } as usize;
+            }
+        }
+    }
+}
+
+/// Float-domain twin of [`walk_tile_ord`] (raw f32 compares on
+/// [`CompiledForest::nodes_f32`]) for the float baseline engine.
+#[inline]
+fn walk_tile_f32(
+    f: &CompiledForest,
+    t: usize,
+    rows: &[f32],
+    tile_start: usize,
+    tile_rows: usize,
+    leaves: &mut [u32; TILE_ROWS],
+) {
+    debug_assert!(tile_rows <= TILE_ROWS);
+    debug_assert!((tile_start + tile_rows) * f.n_features <= rows.len());
+    let base = f.tree_offsets[t] as usize;
+    let nodes = &f.nodes_f32;
+    let stride = f.n_features;
+    let mut idx = [base; TILE_ROWS];
+    let mut done = [false; TILE_ROWS];
+    let mut remaining = tile_rows;
+    while remaining > 0 {
+        for r in 0..tile_rows {
+            if done[r] {
+                continue;
+            }
+            let n = unsafe { nodes.get_unchecked(idx[r]) };
+            if n.feature == LEAF {
+                leaves[r] = n.left;
+                done[r] = true;
+                remaining -= 1;
+            } else {
+                let x =
+                    unsafe { *rows.get_unchecked((tile_start + r) * stride + n.feature as usize) };
+                idx[r] = base + if x <= n.threshold { n.left } else { n.right } as usize;
+            }
+        }
+    }
+}
+
+/// Shape-check a flat row-major batch; returns the row count.
+fn batch_rows(f: &CompiledForest, rows: &[f32]) -> usize {
+    assert!(f.n_features > 0);
+    assert!(
+        rows.len() % f.n_features == 0,
+        "batch length {} is not a multiple of n_features {}",
+        rows.len(),
+        f.n_features
+    );
+    rows.len() / f.n_features
+}
+
+/// Batched float engine accumulation: averaged per-class probabilities,
+/// flat `n_rows * n_classes`, bit-identical to
+/// `FloatEngine::accumulate` per row.
+pub fn float_proba_batch(f: &CompiledForest, rows: &[f32]) -> Vec<f32> {
+    let n_rows = batch_rows(f, rows);
+    let c = f.n_classes;
+    let mut acc = vec![0.0f32; n_rows * c];
+    let mut leaves = [0u32; TILE_ROWS];
+    let mut tile_start = 0;
+    while tile_start < n_rows {
+        let tile_rows = TILE_ROWS.min(n_rows - tile_start);
+        for t in 0..f.n_trees {
+            walk_tile_f32(f, t, rows, tile_start, tile_rows, &mut leaves);
+            for (r, &p) in leaves[..tile_rows].iter().enumerate() {
+                let leaf = &f.leaf_f32[p as usize * c..(p as usize + 1) * c];
+                let row_acc = &mut acc[(tile_start + r) * c..(tile_start + r + 1) * c];
+                for (a, &v) in row_acc.iter_mut().zip(leaf) {
+                    *a += v;
+                }
+            }
+        }
+        tile_start += tile_rows;
+    }
+    let inv = 1.0 / f.n_trees as f32;
+    for a in &mut acc {
+        *a *= inv;
+    }
+    acc
+}
+
+/// Batched FlInt accumulation: ordered-u32 compares (whole batch
+/// transformed once), float accumulation — flat `n_rows * n_classes`,
+/// bit-identical to `FlIntEngine`'s per-row path.
+pub fn flint_proba_batch(f: &CompiledForest, rows: &[f32]) -> Vec<f32> {
+    let n_rows = batch_rows(f, rows);
+    let c = f.n_classes;
+    with_ordered_batch(rows, |rows_ord| {
+        let mut acc = vec![0.0f32; n_rows * c];
+        let mut leaves = [0u32; TILE_ROWS];
+        let mut tile_start = 0;
+        while tile_start < n_rows {
+            let tile_rows = TILE_ROWS.min(n_rows - tile_start);
+            for t in 0..f.n_trees {
+                walk_tile_ord(f, t, rows_ord, tile_start, tile_rows, &mut leaves);
+                for (r, &p) in leaves[..tile_rows].iter().enumerate() {
+                    let leaf = &f.leaf_f32[p as usize * c..(p as usize + 1) * c];
+                    let row_acc = &mut acc[(tile_start + r) * c..(tile_start + r + 1) * c];
+                    for (a, &v) in row_acc.iter_mut().zip(leaf) {
+                        *a += v;
+                    }
+                }
+            }
+            tile_start += tile_rows;
+        }
+        let inv = 1.0 / f.n_trees as f32;
+        for a in &mut acc {
+            *a *= inv;
+        }
+        acc
+    })
+}
+
+/// Batched InTreeger accumulation: ordered-u32 compares, `u32`
+/// fixed-point sums — flat `n_rows * n_classes`, bit-identical to
+/// `IntEngine::predict_fixed` per row. Integer-only after the one
+/// batch-wide transform.
+pub fn int_fixed_batch(f: &CompiledForest, rows: &[f32]) -> Vec<u32> {
+    let n_rows = batch_rows(f, rows);
+    let c = f.n_classes;
+    with_ordered_batch(rows, |rows_ord| {
+        let mut acc = vec![0u32; n_rows * c];
+        let mut leaves = [0u32; TILE_ROWS];
+        let mut tile_start = 0;
+        while tile_start < n_rows {
+            let tile_rows = TILE_ROWS.min(n_rows - tile_start);
+            for t in 0..f.n_trees {
+                walk_tile_ord(f, t, rows_ord, tile_start, tile_rows, &mut leaves);
+                for (r, &p) in leaves[..tile_rows].iter().enumerate() {
+                    let leaf = &f.leaf_u32[p as usize * c..(p as usize + 1) * c];
+                    let row_acc = &mut acc[(tile_start + r) * c..(tile_start + r + 1) * c];
+                    for (a, &v) in row_acc.iter_mut().zip(leaf) {
+                        // Exact: quant::max_accumulated bounds the sum below
+                        // u32::MAX (same argument as the scalar engine).
+                        *a += v;
+                    }
+                }
+            }
+            tile_start += tile_rows;
+        }
+        acc
+    })
+}
+
+/// Per-row argmax over a flat `n_rows * n_classes` score matrix.
+pub fn argmax_rows<T: PartialOrd + Copy>(flat: &[T], n_classes: usize) -> Vec<u32> {
+    assert!(n_classes > 0);
+    assert!(flat.len() % n_classes == 0);
+    flat.chunks_exact(n_classes).map(argmax).collect()
+}
+
+/// Split a flat `n_rows * n_classes` matrix into per-row vectors (the
+/// shape the serving layer hands back to clients).
+pub fn split_rows<T: Clone>(flat: Vec<T>, n_classes: usize) -> Vec<Vec<T>> {
+    assert!(n_classes > 0);
+    assert!(flat.len() % n_classes == 0);
+    flat.chunks_exact(n_classes).map(|c| c.to_vec()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::shuttle_like;
+    use crate::trees::{ForestParams, RandomForest};
+
+    fn forest() -> CompiledForest {
+        let ds = shuttle_like(1200, 21);
+        let m = RandomForest::train(
+            &ds,
+            &ForestParams { n_trees: 9, max_depth: 6, ..Default::default() },
+            21,
+        );
+        CompiledForest::compile(&m)
+    }
+
+    #[test]
+    fn tiled_walks_match_scalar_walks() {
+        let f = forest();
+        let ds = shuttle_like(300, 22);
+        let n = 100usize;
+        let rows = &ds.features[..n * ds.n_features];
+        let rows_ord: Vec<u32> = rows.iter().map(|&x| ordered_u32(x)).collect();
+        let mut leaves = [0u32; TILE_ROWS];
+        let mut tile_start = 0;
+        while tile_start < n {
+            let tile_rows = TILE_ROWS.min(n - tile_start);
+            for t in 0..f.n_trees {
+                walk_tile_ord(&f, t, &rows_ord, tile_start, tile_rows, &mut leaves);
+                for r in 0..tile_rows {
+                    let row_ord: Vec<u32> =
+                        ds.row(tile_start + r).iter().map(|&x| ordered_u32(x)).collect();
+                    let want = f.walk_ord(t, &row_ord);
+                    assert_eq!(leaves[r], want, "tree {t} row {}", tile_start + r);
+                    assert_eq!(leaves[r], f.walk_f32(t, ds.row(tile_start + r)));
+                }
+            }
+            tile_start += tile_rows;
+        }
+    }
+
+    #[test]
+    fn batch_shapes() {
+        let f = forest();
+        let ds = shuttle_like(50, 23);
+        let rows = &ds.features[..10 * ds.n_features];
+        assert_eq!(float_proba_batch(&f, rows).len(), 10 * f.n_classes);
+        assert_eq!(flint_proba_batch(&f, rows).len(), 10 * f.n_classes);
+        assert_eq!(int_fixed_batch(&f, rows).len(), 10 * f.n_classes);
+        assert!(float_proba_batch(&f, &[]).is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple of n_features")]
+    fn ragged_batch_rejected() {
+        let f = forest();
+        int_fixed_batch(&f, &[1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn argmax_and_split_helpers() {
+        let flat = vec![1u32, 5, 2, 9, 0, 0];
+        assert_eq!(argmax_rows(&flat, 3), vec![1, 0]);
+        assert_eq!(split_rows(flat, 3), vec![vec![1, 5, 2], vec![9, 0, 0]]);
+    }
+
+    #[test]
+    fn ordered_row_scratch_reusable_and_reentrant() {
+        let row = [1.0f32, -2.0, 3.0];
+        let out = with_ordered_row(&row, |a| {
+            // Re-entrant use must not alias the outer buffer.
+            let inner = with_ordered_row(&[4.0f32], |b| b.to_vec());
+            assert_eq!(inner, vec![ordered_u32(4.0)]);
+            a.to_vec()
+        });
+        let want: Vec<u32> = row.iter().map(|&x| ordered_u32(x)).collect();
+        assert_eq!(out, want);
+        // Second call reuses the (restored) scratch.
+        let out2 = with_ordered_row(&row, |a| a.to_vec());
+        assert_eq!(out2, want);
+    }
+}

@@ -14,9 +14,44 @@
 use crate::flint::ordered_u32;
 use crate::ir::{Model, ModelKind, Node};
 use crate::quant::prob_to_fixed;
+use std::collections::VecDeque;
 
 /// Sentinel feature index marking a leaf node.
 pub const LEAF: u32 = u32::MAX;
+
+/// In-memory node ordering of a compiled tree, selected at compile time.
+///
+/// Both orders produce *identical predictions* (the permutation remaps
+/// child indices consistently and leaf payloads are untouched); they only
+/// change which cache lines a traversal touches:
+///
+/// * [`NodeOrder::Depth`] — the IR emission order (pre-order DFS). Left
+///   spines are contiguous, so strongly left-leaning paths stream well.
+/// * [`NodeOrder::Breadth`] — BFS level order. The first few levels of
+///   every tree — the nodes *every* row visits — pack into the first
+///   cache lines of the tree's range, which is the better layout for the
+///   tiled batch kernel where R rows walk the same tree in lockstep.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum NodeOrder {
+    /// Pre-order DFS (the seed layout).
+    #[default]
+    Depth,
+    /// BFS level order (hot upper levels first).
+    Breadth,
+}
+
+impl NodeOrder {
+    pub fn name(self) -> &'static str {
+        match self {
+            NodeOrder::Depth => "depth",
+            NodeOrder::Breadth => "breadth",
+        }
+    }
+
+    pub fn all() -> [NodeOrder; 2] {
+        [NodeOrder::Depth, NodeOrder::Breadth]
+    }
+}
 
 /// Hot-path node, float-threshold form (one cache-line-quarter).
 #[derive(Clone, Copy, Debug)]
@@ -69,12 +104,20 @@ pub struct CompiledForest {
     pub nodes_f32: Vec<NodeF32>,
     /// AoS hot nodes with order-preserved thresholds.
     pub nodes_ord: Vec<NodeOrd>,
+    /// Node layout this forest was compiled with.
+    pub order: NodeOrder,
 }
 
 impl CompiledForest {
-    /// Compile a random-forest IR model into the flat layout.
+    /// Compile with the default (depth-first) node order.
     /// Panics on GBT models (use [`crate::inference::GbtIntEngine`]).
     pub fn compile(model: &Model) -> CompiledForest {
+        Self::compile_with(model, NodeOrder::Depth)
+    }
+
+    /// Compile a random-forest IR model into the flat layout with an
+    /// explicit node order.
+    pub fn compile_with(model: &Model, order: NodeOrder) -> CompiledForest {
         assert_eq!(model.kind, ModelKind::RandomForest, "CompiledForest requires an RF model");
         model.validate().expect("model must be valid");
         let n_trees = model.trees.len();
@@ -93,6 +136,7 @@ impl CompiledForest {
             leaf_u32: Vec::new(),
             nodes_f32: Vec::new(),
             nodes_ord: Vec::new(),
+            order,
         };
 
         for tree in &model.trees {
@@ -120,6 +164,9 @@ impl CompiledForest {
             }
         }
         out.tree_offsets.push(out.feature.len() as u32);
+        if order == NodeOrder::Breadth {
+            out.reorder_breadth_first();
+        }
         // Build the AoS hot nodes from the SoA columns.
         out.nodes_f32 = (0..out.feature.len())
             .map(|i| NodeF32 {
@@ -143,6 +190,77 @@ impl CompiledForest {
     /// Total node count.
     pub fn n_nodes(&self) -> usize {
         self.feature.len()
+    }
+
+    /// Permute every tree's SoA columns into BFS level order.
+    ///
+    /// Branch child indices are remapped through the permutation; leaf
+    /// payload indices (`left` of a LEAF node) address the leaf arrays,
+    /// not nodes, and are carried over untouched — so traversal reaches
+    /// bit-identical leaf payloads in either order. The root keeps local
+    /// index 0 (BFS starts there), which `walk_*` relies on.
+    fn reorder_breadth_first(&mut self) {
+        for t in 0..self.n_trees {
+            let lo = self.tree_offsets[t] as usize;
+            let hi = self.tree_offsets[t + 1] as usize;
+            let n = hi - lo;
+            if n <= 1 {
+                continue;
+            }
+            // order[new] = old (tree-local indices).
+            let mut order: Vec<u32> = Vec::with_capacity(n);
+            let mut seen = vec![false; n];
+            let mut queue: VecDeque<u32> = VecDeque::with_capacity(n);
+            queue.push_back(0);
+            seen[0] = true;
+            while let Some(old) = queue.pop_front() {
+                order.push(old);
+                let i = lo + old as usize;
+                if self.feature[i] != LEAF {
+                    for child in [self.left[i], self.right[i]] {
+                        if !seen[child as usize] {
+                            seen[child as usize] = true;
+                            queue.push_back(child);
+                        }
+                    }
+                }
+            }
+            // Defensive: a validated model has no unreachable nodes, but
+            // keep any that exist (in original relative order) so the
+            // permutation stays total.
+            for (old, s) in seen.iter().enumerate() {
+                if !s {
+                    order.push(old as u32);
+                }
+            }
+            let mut new_of = vec![0u32; n];
+            for (new, &old) in order.iter().enumerate() {
+                new_of[old as usize] = new as u32;
+            }
+            let mut feature = Vec::with_capacity(n);
+            let mut thresh_f32 = Vec::with_capacity(n);
+            let mut thresh_ord = Vec::with_capacity(n);
+            let mut left = Vec::with_capacity(n);
+            let mut right = Vec::with_capacity(n);
+            for &old in &order {
+                let i = lo + old as usize;
+                feature.push(self.feature[i]);
+                thresh_f32.push(self.thresh_f32[i]);
+                thresh_ord.push(self.thresh_ord[i]);
+                if self.feature[i] == LEAF {
+                    left.push(self.left[i]);
+                    right.push(self.right[i]);
+                } else {
+                    left.push(new_of[self.left[i] as usize]);
+                    right.push(new_of[self.right[i] as usize]);
+                }
+            }
+            self.feature[lo..hi].copy_from_slice(&feature);
+            self.thresh_f32[lo..hi].copy_from_slice(&thresh_f32);
+            self.thresh_ord[lo..hi].copy_from_slice(&thresh_ord);
+            self.left[lo..hi].copy_from_slice(&left);
+            self.right[lo..hi].copy_from_slice(&right);
+        }
     }
 
     /// Walk tree `t` on a raw float row, returning the leaf payload index.
@@ -226,6 +344,52 @@ mod tests {
                 let got = &c.leaf_f32[pf * c.n_classes..(pf + 1) * c.n_classes];
                 assert_eq!(got, leaf_ir);
             }
+        }
+    }
+
+    #[test]
+    fn breadth_order_reaches_identical_leaves() {
+        let m = model();
+        let depth = CompiledForest::compile_with(&m, NodeOrder::Depth);
+        let breadth = CompiledForest::compile_with(&m, NodeOrder::Breadth);
+        assert_eq!(depth.order, NodeOrder::Depth);
+        assert_eq!(breadth.order, NodeOrder::Breadth);
+        assert_eq!(depth.n_nodes(), breadth.n_nodes());
+        // Same leaf arrays (payloads are not permuted)...
+        assert_eq!(depth.leaf_f32, breadth.leaf_f32);
+        assert_eq!(depth.leaf_u32, breadth.leaf_u32);
+        // ...but a genuinely different node ordering somewhere.
+        assert_ne!(
+            (&depth.feature, &depth.left),
+            (&breadth.feature, &breadth.left),
+            "reorder was a no-op on a depth-6 forest"
+        );
+        let ds = shuttle_like(300, 5);
+        for i in 0..ds.n_rows() {
+            let row = ds.row(i);
+            let row_ord: Vec<u32> = row.iter().map(|&x| ordered_u32(x)).collect();
+            for t in 0..depth.n_trees {
+                assert_eq!(depth.walk_f32(t, row), breadth.walk_f32(t, row));
+                assert_eq!(depth.walk_ord(t, &row_ord), breadth.walk_ord(t, &row_ord));
+            }
+        }
+    }
+
+    #[test]
+    fn breadth_order_packs_roots_first() {
+        // In BFS order, node 1 of any multi-node tree is a child of the
+        // root (depth order would put the root's left subtree there, so
+        // node 1 is the same — but node 2 differs for depth>1 trees:
+        // BFS puts the root's *right* child at 2).
+        let m = model();
+        let b = CompiledForest::compile_with(&m, NodeOrder::Breadth);
+        for t in 0..b.n_trees {
+            let lo = b.tree_offsets[t] as usize;
+            if b.feature[lo] == LEAF {
+                continue; // single-node tree
+            }
+            assert_eq!(b.left[lo], 1, "tree {t}: root's left child is BFS slot 1");
+            assert_eq!(b.right[lo], 2, "tree {t}: root's right child is BFS slot 2");
         }
     }
 

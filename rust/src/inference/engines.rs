@@ -1,8 +1,21 @@
 //! The three inference engines the paper compares (float / FlInt /
 //! InTreeger), sharing the [`CompiledForest`] layout.
+//!
+//! Every engine exposes two execution styles:
+//!
+//! * **per-row** (`predict` / `predict_proba` / `predict_fixed`) — the
+//!   lowest-latency path, semantically identical to the generated C;
+//! * **batched** (`predict_batch` / `predict_proba_batch` /
+//!   `predict_fixed_batch`) — the [`super::batch`] tiled kernel: the
+//!   whole batch is transformed into ordered-u32 space once and tiles of
+//!   [`super::batch::TILE_ROWS`] rows walk each tree in lockstep.
+//!
+//! The batched results are **bit-identical** to the per-row results for
+//! every variant (see the parity invariant in [`super::batch`] and the
+//! `tests/batch_parity.rs` suite).
 
-use super::compiled::CompiledForest;
-use crate::flint::ordered_u32;
+use super::batch;
+use super::compiled::{CompiledForest, NodeOrder};
 use crate::ir::{argmax, Model};
 use crate::quant::fixed_to_prob;
 
@@ -38,6 +51,10 @@ impl Variant {
 /// the float and integer variants would route negative-NaN bit patterns
 /// differently (IEEE sends NaN right, the ordered-u32 domain would send
 /// sign-bit NaN left) — guarding here instead would tax the hot loop.
+///
+/// Batched methods take a flat row-major buffer whose length must be a
+/// multiple of [`Engine::n_features`]; they are element-wise identical
+/// to calling the per-row methods on each row.
 pub trait Engine: Send + Sync {
     /// Predicted per-class probabilities (the integer engine converts its
     /// fixed-point sums only for this reporting API; `predict` stays
@@ -45,8 +62,37 @@ pub trait Engine: Send + Sync {
     fn predict_proba(&self, row: &[f32]) -> Vec<f32>;
     /// Predicted class (argmax, lowest index wins ties).
     fn predict(&self, row: &[f32]) -> u32;
+    /// Predicted class per row of a flat row-major batch. Default: the
+    /// per-row path; engines override with the tiled batch kernel.
+    fn predict_batch(&self, rows: &[f32]) -> Vec<u32> {
+        assert!(
+            rows.len() % self.n_features() == 0,
+            "batch length {} is not a multiple of n_features {}",
+            rows.len(),
+            self.n_features()
+        );
+        rows.chunks_exact(self.n_features()).map(|r| self.predict(r)).collect()
+    }
+    /// Per-class probabilities per row of a flat row-major batch.
+    fn predict_proba_batch(&self, rows: &[f32]) -> Vec<Vec<f32>> {
+        assert!(
+            rows.len() % self.n_features() == 0,
+            "batch length {} is not a multiple of n_features {}",
+            rows.len(),
+            self.n_features()
+        );
+        rows.chunks_exact(self.n_features()).map(|r| self.predict_proba(r)).collect()
+    }
+    /// Fixed-point accumulators per row, when the variant has an
+    /// integer-only representation (`None` for the float-accumulating
+    /// variants).
+    fn predict_fixed_batch(&self, rows: &[f32]) -> Option<Vec<Vec<u32>>> {
+        let _ = rows;
+        None
+    }
     fn variant(&self) -> Variant;
     fn n_classes(&self) -> usize;
+    fn n_features(&self) -> usize;
 }
 
 // ---------------------------------------------------------------------------
@@ -58,7 +104,12 @@ pub struct FloatEngine {
 
 impl FloatEngine {
     pub fn compile(model: &Model) -> FloatEngine {
-        FloatEngine { forest: CompiledForest::compile(model) }
+        Self::compile_with(model, NodeOrder::Depth)
+    }
+
+    /// Compile with an explicit node layout (see [`NodeOrder`]).
+    pub fn compile_with(model: &Model, order: NodeOrder) -> FloatEngine {
+        FloatEngine { forest: CompiledForest::compile_with(model, order) }
     }
 
     pub fn forest(&self) -> &CompiledForest {
@@ -92,11 +143,20 @@ impl Engine for FloatEngine {
     fn predict(&self, row: &[f32]) -> u32 {
         argmax(&self.accumulate(row))
     }
+    fn predict_batch(&self, rows: &[f32]) -> Vec<u32> {
+        batch::argmax_rows(&batch::float_proba_batch(&self.forest, rows), self.forest.n_classes)
+    }
+    fn predict_proba_batch(&self, rows: &[f32]) -> Vec<Vec<f32>> {
+        batch::split_rows(batch::float_proba_batch(&self.forest, rows), self.forest.n_classes)
+    }
     fn variant(&self) -> Variant {
         Variant::Float
     }
     fn n_classes(&self) -> usize {
         self.forest.n_classes
+    }
+    fn n_features(&self) -> usize {
+        self.forest.n_features
     }
 }
 
@@ -109,28 +169,39 @@ pub struct FlIntEngine {
 
 impl FlIntEngine {
     pub fn compile(model: &Model) -> FlIntEngine {
-        FlIntEngine { forest: CompiledForest::compile(model) }
+        Self::compile_with(model, NodeOrder::Depth)
+    }
+
+    /// Compile with an explicit node layout (see [`NodeOrder`]).
+    pub fn compile_with(model: &Model, order: NodeOrder) -> FlIntEngine {
+        FlIntEngine { forest: CompiledForest::compile_with(model, order) }
+    }
+
+    pub fn forest(&self) -> &CompiledForest {
+        &self.forest
     }
 
     fn accumulate(&self, row: &[f32]) -> Vec<f32> {
         let f = &self.forest;
         // One order-preserving transform per feature per inference —
-        // integer ops only (shift/xor), matching the generated C.
-        let mut buf = [std::mem::MaybeUninit::uninit(); 128];
-        let row_ord = transform_row(row, &mut buf);
-        let mut acc = vec![0.0f32; f.n_classes];
-        for t in 0..f.n_trees {
-            let p = f.walk_ord(t, row_ord) as usize;
-            let leaf = &f.leaf_f32[p * f.n_classes..(p + 1) * f.n_classes];
-            for (a, &v) in acc.iter_mut().zip(leaf) {
-                *a += v;
+        // integer ops only (shift/xor), matching the generated C. The
+        // transform writes into reusable thread-local scratch, so rows of
+        // any width are supported without per-call allocation.
+        batch::with_ordered_row(row, |row_ord| {
+            let mut acc = vec![0.0f32; f.n_classes];
+            for t in 0..f.n_trees {
+                let p = f.walk_ord(t, row_ord) as usize;
+                let leaf = &f.leaf_f32[p * f.n_classes..(p + 1) * f.n_classes];
+                for (a, &v) in acc.iter_mut().zip(leaf) {
+                    *a += v;
+                }
             }
-        }
-        let inv = 1.0 / f.n_trees as f32;
-        for a in &mut acc {
-            *a *= inv;
-        }
-        acc
+            let inv = 1.0 / f.n_trees as f32;
+            for a in &mut acc {
+                *a *= inv;
+            }
+            acc
+        })
     }
 }
 
@@ -141,11 +212,20 @@ impl Engine for FlIntEngine {
     fn predict(&self, row: &[f32]) -> u32 {
         argmax(&self.accumulate(row))
     }
+    fn predict_batch(&self, rows: &[f32]) -> Vec<u32> {
+        batch::argmax_rows(&batch::flint_proba_batch(&self.forest, rows), self.forest.n_classes)
+    }
+    fn predict_proba_batch(&self, rows: &[f32]) -> Vec<Vec<f32>> {
+        batch::split_rows(batch::flint_proba_batch(&self.forest, rows), self.forest.n_classes)
+    }
     fn variant(&self) -> Variant {
         Variant::FlInt
     }
     fn n_classes(&self) -> usize {
         self.forest.n_classes
+    }
+    fn n_features(&self) -> usize {
+        self.forest.n_features
     }
 }
 
@@ -160,7 +240,12 @@ pub struct IntEngine {
 
 impl IntEngine {
     pub fn compile(model: &Model) -> IntEngine {
-        IntEngine { forest: CompiledForest::compile(model) }
+        Self::compile_with(model, NodeOrder::Depth)
+    }
+
+    /// Compile with an explicit node layout (see [`NodeOrder`]).
+    pub fn compile_with(model: &Model, order: NodeOrder) -> IntEngine {
+        IntEngine { forest: CompiledForest::compile_with(model, order) }
     }
 
     pub fn forest(&self) -> &CompiledForest {
@@ -171,19 +256,26 @@ impl IntEngine {
     /// averaged by construction). This is the integer-only hot path.
     pub fn predict_fixed(&self, row: &[f32]) -> Vec<u32> {
         let f = &self.forest;
-        let mut buf = [std::mem::MaybeUninit::uninit(); 128];
-        let row_ord = transform_row(row, &mut buf);
-        let mut acc = vec![0u32; f.n_classes];
-        for t in 0..f.n_trees {
-            let p = f.walk_ord(t, row_ord) as usize;
-            let leaf = &f.leaf_u32[p * f.n_classes..(p + 1) * f.n_classes];
-            for (a, &v) in acc.iter_mut().zip(leaf) {
-                // Plain wrapping-free u32 addition: quant::max_accumulated
-                // proves the sum cannot exceed u32::MAX.
-                *a += v;
+        batch::with_ordered_row(row, |row_ord| {
+            let mut acc = vec![0u32; f.n_classes];
+            for t in 0..f.n_trees {
+                let p = f.walk_ord(t, row_ord) as usize;
+                let leaf = &f.leaf_u32[p * f.n_classes..(p + 1) * f.n_classes];
+                for (a, &v) in acc.iter_mut().zip(leaf) {
+                    // Plain wrapping-free u32 addition: quant::max_accumulated
+                    // proves the sum cannot exceed u32::MAX.
+                    *a += v;
+                }
             }
-        }
-        acc
+            acc
+        })
+    }
+
+    /// Batched fixed-point accumulators, one vector per row — the
+    /// serving hot path (bit-identical to [`Self::predict_fixed`] per
+    /// row; the coordinator's scalar route is built on this).
+    pub fn predict_fixed_batch(&self, rows: &[f32]) -> Vec<Vec<u32>> {
+        batch::split_rows(batch::int_fixed_batch(&self.forest, rows), self.forest.n_classes)
     }
 }
 
@@ -194,41 +286,49 @@ impl Engine for IntEngine {
     fn predict(&self, row: &[f32]) -> u32 {
         argmax(&self.predict_fixed(row))
     }
+    fn predict_batch(&self, rows: &[f32]) -> Vec<u32> {
+        batch::argmax_rows(&batch::int_fixed_batch(&self.forest, rows), self.forest.n_classes)
+    }
+    fn predict_proba_batch(&self, rows: &[f32]) -> Vec<Vec<f32>> {
+        batch::int_fixed_batch(&self.forest, rows)
+            .chunks_exact(self.forest.n_classes)
+            .map(|fixed| fixed.iter().map(|&q| fixed_to_prob(q)).collect())
+            .collect()
+    }
+    fn predict_fixed_batch(&self, rows: &[f32]) -> Option<Vec<Vec<u32>>> {
+        // Delegates to the inherent batched path (same name, inherent
+        // method wins resolution on the concrete type).
+        Some(IntEngine::predict_fixed_batch(self, rows))
+    }
     fn variant(&self) -> Variant {
         Variant::IntTreeger
     }
     fn n_classes(&self) -> usize {
         self.forest.n_classes
     }
-}
-
-/// Transform a feature row into ordered-u32 space using an uninitialized
-/// stack buffer (rows up to 128 features — covers both paper datasets).
-/// §Perf: avoids a 512-byte memset per inference that showed up on the
-/// 87-feature ESA profile.
-#[inline]
-fn transform_row<'a>(row: &[f32], buf: &'a mut [std::mem::MaybeUninit<u32>; 128]) -> &'a [u32] {
-    assert!(row.len() <= 128, "feature count > 128 unsupported in scalar engines");
-    for (b, &x) in buf[..row.len()].iter_mut().zip(row) {
-        b.write(ordered_u32(x));
+    fn n_features(&self) -> usize {
+        self.forest.n_features
     }
-    // SAFETY: exactly the first `row.len()` elements were initialized above.
-    unsafe { std::slice::from_raw_parts(buf.as_ptr() as *const u32, row.len()) }
 }
 
 /// Compile the requested variant behind the common trait.
 pub fn compile_variant(model: &Model, v: Variant) -> Box<dyn Engine> {
+    compile_variant_with(model, v, NodeOrder::Depth)
+}
+
+/// Compile the requested variant with an explicit node layout.
+pub fn compile_variant_with(model: &Model, v: Variant, order: NodeOrder) -> Box<dyn Engine> {
     match v {
-        Variant::Float => Box::new(FloatEngine::compile(model)),
-        Variant::FlInt => Box::new(FlIntEngine::compile(model)),
-        Variant::IntTreeger => Box::new(IntEngine::compile(model)),
+        Variant::Float => Box::new(FloatEngine::compile_with(model, order)),
+        Variant::FlInt => Box::new(FlIntEngine::compile_with(model, order)),
+        Variant::IntTreeger => Box::new(IntEngine::compile_with(model, order)),
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::data::{esa_like, shuttle_like};
+    use crate::data::{esa_like, shuttle_like, SynthSpec};
     use crate::prop_ensure;
     use crate::quant::error_bound;
     use crate::trees::{ForestParams, RandomForest};
@@ -326,6 +426,41 @@ mod tests {
         }
     }
 
+    /// Regression: the seed's scalar engines panicked above 128 features
+    /// (fixed-size stack buffer). The thread-local scratch removes the
+    /// limit — a 200-feature model must work across all three variants,
+    /// per-row and batched.
+    #[test]
+    fn very_wide_rows_supported_all_variants() {
+        let spec = SynthSpec {
+            n_rows: 300,
+            n_features: 200,
+            n_classes: 3,
+            teacher_depth: 6,
+            label_noise: 0.05,
+            class_prior: vec![0.5, 0.3, 0.2],
+            range: (-10.0, 10.0),
+        };
+        let ds = crate::data::synth::generate(&spec, 41);
+        let m = RandomForest::train(
+            &ds,
+            &ForestParams { n_trees: 6, max_depth: 5, ..Default::default() },
+            41,
+        );
+        let engines = Variant::all().map(|v| compile_variant(&m, v));
+        let reference = &engines[0];
+        let flat = &ds.features[..64 * ds.n_features];
+        for e in &engines {
+            assert_eq!(e.n_features(), 200);
+            let batched = e.predict_batch(flat);
+            for i in 0..64 {
+                let scalar = e.predict(ds.row(i));
+                assert_eq!(batched[i], scalar, "{} batch/scalar row {i}", e.variant().name());
+                assert_eq!(scalar, reference.predict(ds.row(i)), "{} vs float", e.variant().name());
+            }
+        }
+    }
+
     #[test]
     fn variant_helpers() {
         assert_eq!(Variant::all().len(), 3);
@@ -335,6 +470,7 @@ mod tests {
             let e = compile_variant(&m, v);
             assert_eq!(e.variant(), v);
             assert_eq!(e.n_classes(), 7);
+            assert_eq!(e.n_features(), 7);
         }
     }
 

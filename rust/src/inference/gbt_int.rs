@@ -8,6 +8,7 @@
 //! accumulated margins equals `argmax` over probabilities — classification
 //! needs no float ops (probability *reporting* still computes a softmax).
 
+use super::batch::TILE_ROWS;
 use super::compiled::LEAF;
 use crate::flint::ordered_u32;
 use crate::ir::{argmax, softmax, Model, ModelKind, Node};
@@ -16,6 +17,7 @@ use crate::quant::{margin_scale, margin_to_fixed, MarginScale};
 /// GBT forest compiled to flat arrays with integer margin leaves.
 pub struct GbtIntEngine {
     n_classes: usize,
+    n_features: usize,
     scale: MarginScale,
     tree_offsets: Vec<u32>,
     feature: Vec<u32>,
@@ -35,6 +37,7 @@ impl GbtIntEngine {
         let scale = margin_scale(model);
         let mut e = GbtIntEngine {
             n_classes: model.n_classes,
+            n_features: model.n_features,
             scale,
             tree_offsets: Vec::with_capacity(model.trees.len() + 1),
             feature: Vec::new(),
@@ -73,6 +76,14 @@ impl GbtIntEngine {
         self.scale
     }
 
+    pub fn n_features(&self) -> usize {
+        self.n_features
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.n_classes
+    }
+
     /// Integer-only accumulated margins.
     pub fn predict_fixed(&self, row: &[f32]) -> Vec<i64> {
         let mut row_ord = vec![0u32; row.len()];
@@ -102,6 +113,82 @@ impl GbtIntEngine {
     /// Integer-only classification.
     pub fn predict(&self, row: &[f32]) -> u32 {
         argmax(&self.predict_fixed(row))
+    }
+
+    /// Batched integer-only accumulated margins, one vector per row of a
+    /// flat row-major batch.
+    ///
+    /// Same tiled execution style as [`crate::inference::batch`]: the
+    /// whole batch is order-transformed once (into that module's shared
+    /// thread-local scratch), then [`TILE_ROWS`] rows walk each tree in
+    /// lockstep. The walk itself is re-implemented here rather than
+    /// reusing `batch::walk_tile_ord` because GBT traversal stays on the
+    /// SoA columns (no AoS node array) and accumulates at the leaf
+    /// in-loop. Accumulation per row stays in ascending tree order
+    /// starting from the base score, so results are bit-identical to
+    /// [`Self::predict_fixed`] (i64 adds are exact).
+    pub fn predict_fixed_batch(&self, rows: &[f32]) -> Vec<Vec<i64>> {
+        let nf = self.n_features;
+        assert!(
+            rows.len() % nf == 0,
+            "batch length {} is not a multiple of n_features {}",
+            rows.len(),
+            nf
+        );
+        let n_rows = rows.len() / nf;
+        let c = self.n_classes;
+        crate::inference::batch::with_ordered_batch(rows, |rows_ord| {
+            let mut acc: Vec<i64> = Vec::with_capacity(n_rows * c);
+            for _ in 0..n_rows {
+                acc.extend_from_slice(&self.base_q);
+            }
+            let n_trees = self.tree_offsets.len() - 1;
+            let mut tile_start = 0;
+            while tile_start < n_rows {
+                let tile_rows = TILE_ROWS.min(n_rows - tile_start);
+                for t in 0..n_trees {
+                    let base = self.tree_offsets[t] as usize;
+                    let mut idx = [base; TILE_ROWS];
+                    let mut done = [false; TILE_ROWS];
+                    let mut remaining = tile_rows;
+                    while remaining > 0 {
+                        for r in 0..tile_rows {
+                            if done[r] {
+                                continue;
+                            }
+                            let i = idx[r];
+                            let f = self.feature[i];
+                            if f == LEAF {
+                                let p = self.left[i] as usize * c;
+                                let row_acc =
+                                    &mut acc[(tile_start + r) * c..(tile_start + r + 1) * c];
+                                for (a, &v) in row_acc.iter_mut().zip(&self.leaf_q[p..p + c]) {
+                                    *a += v;
+                                }
+                                done[r] = true;
+                                remaining -= 1;
+                            } else {
+                                let x = rows_ord[(tile_start + r) * nf + f as usize];
+                                idx[r] = base
+                                    + if x <= self.thresh_ord[i] {
+                                        self.left[i]
+                                    } else {
+                                        self.right[i]
+                                    } as usize;
+                            }
+                        }
+                    }
+                }
+                tile_start += tile_rows;
+            }
+            acc.chunks_exact(c).map(|row| row.to_vec()).collect()
+        })
+    }
+
+    /// Batched integer-only classification (argmax of
+    /// [`Self::predict_fixed_batch`]).
+    pub fn predict_batch(&self, rows: &[f32]) -> Vec<u32> {
+        self.predict_fixed_batch(rows).iter().map(|m| argmax(m)).collect()
     }
 
     /// Probability reporting (float softmax — not on the integer hot path).
@@ -145,6 +232,22 @@ mod tests {
             let b = e.predict_proba(ds.row(i));
             for (x, y) in a.iter().zip(&b) {
                 assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn batched_margins_bit_identical_to_scalar() {
+        let ds = shuttle_like(800, 15);
+        let m = train_gbt(&ds, &GbtParams { n_rounds: 4, max_depth: 4, ..Default::default() }, 5);
+        let e = GbtIntEngine::compile(&m);
+        for n in [1usize, 7, 8, 9, 100] {
+            let flat = &ds.features[..n * ds.n_features];
+            let batched = e.predict_fixed_batch(flat);
+            let classes = e.predict_batch(flat);
+            for i in 0..n {
+                assert_eq!(batched[i], e.predict_fixed(ds.row(i)), "margins row {i} (n={n})");
+                assert_eq!(classes[i], e.predict(ds.row(i)), "class row {i} (n={n})");
             }
         }
     }

@@ -16,7 +16,9 @@
 //!    and [`quant`] (leaf-probability → `u32` fixed point with scaling
 //!    factor `2^32 / n_trees`, the paper's §III-A contribution).
 //! 4. **Inference engines** ([`inference`]) — executable float / FlInt /
-//!    integer-only engines with semantics identical to the generated C.
+//!    integer-only engines with semantics identical to the generated C,
+//!    plus the batch-first tiled traversal kernel ([`inference::batch`])
+//!    that serves whole batches bit-identically to the per-row path.
 //! 5. **Code generation** ([`codegen`]) — architecture-agnostic C output
 //!    (if-else and native-tree layouts, three numeric variants) plus a
 //!    gcc compile-and-run harness.
@@ -27,10 +29,12 @@
 //!    methodology (power-trace synthesis + the `E_saved` formula).
 //! 8. **Deployment runtime** ([`runtime`], [`coordinator`]) — a PJRT/XLA
 //!    batched inference engine (AOT-lowered JAX+Pallas forest traversal)
-//!    behind a dynamic-batching request router.
+//!    behind a dynamic-batching request router drained by a sharded
+//!    worker pool.
 //!
-//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
-//! paper-vs-measured results.
+//! See `DESIGN.md` (repo root) for the module map, the batch execution
+//! core and its batched-vs-scalar parity invariant, and `EXPERIMENTS.md`
+//! for the experiment index with paper-vs-measured notes.
 
 pub mod codegen;
 pub mod coordinator;

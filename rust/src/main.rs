@@ -234,7 +234,11 @@ fn cmd_serve(args: &Args) {
     if artifacts.is_none() {
         eprintln!("(artifacts not found — scalar route only)");
     }
-    let server = InferenceServer::start(&model, artifacts, ServerConfig::default());
+    let config = ServerConfig {
+        n_workers: args.usize_or("workers", 1),
+        ..ServerConfig::default()
+    };
+    let server = InferenceServer::start(&model, artifacts, config);
     let n = args.usize_or("requests", 1000);
     let rows: Vec<Vec<f32>> = (0..n).map(|i| ds.row(i % ds.n_rows()).to_vec()).collect();
     let t0 = std::time::Instant::now();
@@ -263,7 +267,7 @@ const USAGE: &str = "usage: intreeger <train|import|codegen|predict|simulate|ser
   codegen  --model model.json [--variant float|flint|intreeger] [--layout ifelse|native] [--out model.c]\n\
   predict  --model model.json --csv data.csv [--engine float|flint|int]\n\
   simulate --model model.json [--dataset ...]\n\
-  serve    --model model.json [--artifacts DIR] [--requests N]\n\
+  serve    --model model.json [--artifacts DIR] [--requests N] [--workers W]\n\
   tablei\n";
 
 fn main() {

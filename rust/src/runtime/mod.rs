@@ -2,6 +2,13 @@
 //! artifacts (HLO text, produced once by `python/compile/aot.py`) and
 //! executes them from rust. Python is never on this path.
 //!
+//! Offline builds link the vendored `xla` **stub** (`rust/vendor/xla`),
+//! whose client constructor fails fast — [`PjrtEngine::load`] then
+//! returns an error and callers fall back to the scalar batched route
+//! ([`crate::inference::IntEngine::predict_fixed_batch`]). Swapping the
+//! path dependency for the real bindings re-enables this path without
+//! source changes.
+//!
 //! Flow: [`Manifest::load`] reads `artifacts/manifest.json` →
 //! [`pack::ForestPack`] pads an IR model into the smallest fitting tier →
 //! [`PjrtEngine::load`] compiles the tier's HLO once on the PJRT CPU

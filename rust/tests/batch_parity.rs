@@ -1,0 +1,164 @@
+//! Batch-vs-scalar parity suite (ISSUE 1 acceptance): for every engine
+//! variant and both node layouts, the tiled batch kernel must be
+//! **element-wise identical** to the per-row path — including ragged
+//! final tiles (batch sizes 1, R−1, R, R+1) and a batch large enough to
+//! cross many tiles (1000). Probabilities are compared with `assert_eq`
+//! on the raw f32s: the invariant is bit-identity, not closeness.
+
+use intreeger::data::{esa_like, shuttle_like, synth, SynthSpec};
+use intreeger::inference::{
+    compile_variant_with, Engine, GbtIntEngine, IntEngine, NodeOrder, Variant, TILE_ROWS,
+};
+use intreeger::trees::{train_gbt, ForestParams, GbtParams, RandomForest};
+
+/// The sweep of batch sizes exercising empty, sub-tile, exact-tile,
+/// tile+1 and many-tile shapes.
+fn batch_sizes() -> [usize; 5] {
+    [1, TILE_ROWS - 1, TILE_ROWS, TILE_ROWS + 1, 1000]
+}
+
+fn rf_parity_on(ds: &intreeger::data::Dataset, n_trees: usize, seed: u64) {
+    let model = RandomForest::train(
+        ds,
+        &ForestParams { n_trees, max_depth: 6, ..Default::default() },
+        seed,
+    );
+    for variant in Variant::all() {
+        for order in NodeOrder::all() {
+            let engine = compile_variant_with(&model, variant, order);
+            let tag = format!("{}/{}", variant.name(), order.name());
+            for n in batch_sizes() {
+                let n = n.min(ds.n_rows());
+                let flat = &ds.features[..n * ds.n_features];
+                let classes = engine.predict_batch(flat);
+                let probas = engine.predict_proba_batch(flat);
+                assert_eq!(classes.len(), n, "{tag}: class count");
+                assert_eq!(probas.len(), n, "{tag}: proba count");
+                for i in 0..n {
+                    let row = ds.row(i);
+                    assert_eq!(classes[i], engine.predict(row), "{tag}: class row {i} (n={n})");
+                    assert_eq!(
+                        probas[i],
+                        engine.predict_proba(row),
+                        "{tag}: proba row {i} (n={n}) not bit-identical"
+                    );
+                }
+                if variant == Variant::IntTreeger {
+                    let fixed =
+                        engine.predict_fixed_batch(flat).expect("integer variant has fixed path");
+                    let oracle = IntEngine::compile_with(&model, order);
+                    for i in 0..n {
+                        assert_eq!(
+                            fixed[i],
+                            oracle.predict_fixed(ds.row(i)),
+                            "{tag}: fixed row {i} (n={n})"
+                        );
+                    }
+                } else {
+                    assert!(
+                        engine.predict_fixed_batch(flat).is_none(),
+                        "{tag}: float-accumulating variant must not claim a fixed path"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn rf_batch_parity_shuttle() {
+    let ds = shuttle_like(1500, 31);
+    rf_parity_on(&ds, 10, 31);
+}
+
+#[test]
+fn rf_batch_parity_esa_wide() {
+    let ds = esa_like(1200, 32);
+    rf_parity_on(&ds, 6, 32);
+}
+
+/// ≥200-feature regression (the seed's 128-feature stack buffer is
+/// gone): parity must hold on very wide rows for all variants.
+#[test]
+fn rf_batch_parity_200_features() {
+    let spec = SynthSpec {
+        n_rows: 1100,
+        n_features: 230,
+        n_classes: 4,
+        teacher_depth: 6,
+        label_noise: 0.04,
+        class_prior: vec![0.4, 0.3, 0.2, 0.1],
+        range: (-50.0, 50.0),
+    };
+    let ds = synth::generate(&spec, 33);
+    rf_parity_on(&ds, 5, 33);
+}
+
+#[test]
+fn rf_batch_parity_across_model_seeds() {
+    // Several random models on the same data: the invariant is about the
+    // kernel, not one lucky forest.
+    let ds = shuttle_like(1024, 34);
+    for seed in [1u64, 2, 3] {
+        rf_parity_on(&ds, 4 + seed as usize * 3, seed);
+    }
+}
+
+#[test]
+fn gbt_batch_parity() {
+    let ds = shuttle_like(1500, 35);
+    let model =
+        train_gbt(&ds, &GbtParams { n_rounds: 5, max_depth: 4, ..Default::default() }, 35);
+    let engine = GbtIntEngine::compile(&model);
+    for n in batch_sizes() {
+        let n = n.min(ds.n_rows());
+        let flat = &ds.features[..n * ds.n_features];
+        let margins = engine.predict_fixed_batch(flat);
+        let classes = engine.predict_batch(flat);
+        for i in 0..n {
+            assert_eq!(margins[i], engine.predict_fixed(ds.row(i)), "gbt margins row {i} (n={n})");
+            assert_eq!(classes[i], engine.predict(ds.row(i)), "gbt class row {i} (n={n})");
+        }
+    }
+}
+
+#[test]
+fn layouts_agree_batched_and_scalar() {
+    // Depth- and breadth-ordered forests must agree with each other in
+    // both execution styles (layout is a pure performance knob).
+    let ds = shuttle_like(800, 36);
+    let model = RandomForest::train(
+        &ds,
+        &ForestParams { n_trees: 8, max_depth: 6, ..Default::default() },
+        36,
+    );
+    for variant in Variant::all() {
+        let depth = compile_variant_with(&model, variant, NodeOrder::Depth);
+        let breadth = compile_variant_with(&model, variant, NodeOrder::Breadth);
+        let flat = &ds.features[..200 * ds.n_features];
+        assert_eq!(depth.predict_batch(flat), breadth.predict_batch(flat), "{}", variant.name());
+        for i in 0..50 {
+            assert_eq!(
+                depth.predict_proba(ds.row(i)),
+                breadth.predict_proba(ds.row(i)),
+                "{} row {i}",
+                variant.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn empty_batch_is_empty() {
+    let ds = shuttle_like(300, 37);
+    let model = RandomForest::train(
+        &ds,
+        &ForestParams { n_trees: 3, max_depth: 4, ..Default::default() },
+        37,
+    );
+    for variant in Variant::all() {
+        let engine = compile_variant_with(&model, variant, NodeOrder::Depth);
+        assert!(engine.predict_batch(&[]).is_empty());
+        assert!(engine.predict_proba_batch(&[]).is_empty());
+    }
+}

@@ -1,0 +1,107 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no crates.io access, so this vendored shim
+//! provides exactly the API subset the intreeger crate uses:
+//! [`Error`], [`Result`], and the `anyhow!` / `bail!` / `ensure!` macros.
+//! Like the real crate, `Error` deliberately does **not** implement
+//! `std::error::Error`, which is what makes the blanket `From` conversion
+//! (powering `?` on any std error) coherent.
+
+use std::fmt;
+
+/// Type-erased error: a message, optionally captured from a source error.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from a preformatted message (used by the `anyhow!` macro).
+    pub fn from_msg(msg: String) -> Error {
+        Error { msg }
+    }
+
+    /// Construct from any displayable value.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// `anyhow::Result<T>` — `std::result::Result` defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Build an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::from_msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] when the condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read_to_string("/definitely/not/a/real/path/xyz")?;
+        Ok(())
+    }
+
+    fn guarded(x: i32) -> Result<i32> {
+        ensure!(x >= 0, "negative input {x}");
+        if x > 100 {
+            bail!("too big: {x}");
+        }
+        Ok(x)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("code {}", 7);
+        assert_eq!(e.to_string(), "code 7");
+        assert_eq!(guarded(5).unwrap(), 5);
+        assert_eq!(guarded(-1).unwrap_err().to_string(), "negative input -1");
+        assert_eq!(guarded(101).unwrap_err().to_string(), "too big: 101");
+    }
+}

@@ -1,0 +1,136 @@
+//! Offline stub of the XLA/PJRT bindings used by [`intreeger`]'s runtime
+//! layer (`rust/src/runtime/pjrt.rs`).
+//!
+//! The build container has neither crates.io access nor a PJRT plugin, so
+//! this crate mirrors the type surface of the real bindings just enough
+//! for the runtime layer to typecheck. Every entry point fails fast:
+//! [`PjRtClient::cpu`] returns [`Error::Unavailable`], which
+//! `PjrtEngine::load` surfaces as "XLA engine unavailable" and the
+//! coordinator answers with the scalar batched route instead. Swapping
+//! this path dependency for the real `xla` crate re-enables the PJRT
+//! route with no source changes in `intreeger`.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error: the runtime is not present in this build.
+#[derive(Debug)]
+pub enum Error {
+    Unavailable,
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable => {
+                write!(f, "XLA/PJRT runtime not available (offline stub build)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Result alias matching the real bindings.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types transferable to device buffers.
+pub trait ArrayElement: Copy {}
+impl ArrayElement for f32 {}
+impl ArrayElement for f64 {}
+impl ArrayElement for i32 {}
+impl ArrayElement for i64 {}
+impl ArrayElement for u32 {}
+impl ArrayElement for u64 {}
+
+/// A PJRT device handle (never constructed by the stub).
+pub struct PjRtDevice;
+
+/// A device buffer handle (never constructed by the stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Unavailable)
+    }
+}
+
+/// A host-side literal value.
+pub struct Literal;
+
+impl Literal {
+    /// Unwrap a 1-tuple result (lowered with `return_tuple=True`).
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        Err(Error::Unavailable)
+    }
+
+    pub fn to_vec<T: ArrayElement>(&self) -> Result<Vec<T>> {
+        Err(Error::Unavailable)
+    }
+}
+
+/// Parsed HLO module text.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto> {
+        Err(Error::Unavailable)
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// A compiled executable bound to a client.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unavailable)
+    }
+}
+
+/// The PJRT client. The stub's constructor always fails, so no other stub
+/// method is reachable in practice (they still typecheck call sites).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::Unavailable)
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::Unavailable)
+    }
+
+    pub fn buffer_from_host_buffer<T: ArrayElement>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<&PjRtDevice>,
+    ) -> Result<PjRtBuffer> {
+        Err(Error::Unavailable)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("not available"));
+    }
+
+    #[test]
+    fn hlo_load_reports_unavailable() {
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+    }
+}
