@@ -1,18 +1,60 @@
-//! E10 — batch-first execution core: tiled traversal kernel vs the
-//! per-row scalar engines, swept over batch size × variant × node
-//! layout.
+//! E10 — batch-first execution core: branchy vs predicated-branchless
+//! tiled kernels vs the per-row scalar engines, swept over batch size ×
+//! variant × node layout.
 //!
-//! Acceptance target (ISSUE 1): at batch ≥ 64 on the shuttle-like
-//! model, the tiled kernel delivers ≥ 2x rows/sec over the per-row
-//! baseline of the same variant. The sweep prints the speedup per cell
-//! so regressions are visible at a glance.
+//! Acceptance targets:
+//! * ISSUE 1: at batch ≥ 64 on the shuttle-like model, the tiled kernel
+//!   delivers ≥ 2x rows/sec over the per-row baseline of the same
+//!   variant.
+//! * ISSUE 2: at batch ≥ 256 on the shuttle-like model (integer
+//!   variants), the branchless fixed-trip kernel delivers ≥ 1.5x
+//!   rows/sec over the PR-1 branchy tiled kernel.
+//!
+//! Besides the human-readable table, every cell is appended to a
+//! machine-readable **`BENCH_batch.json`** at the repository root (path
+//! overridable via `INTREEGER_BENCH_JSON`) so the perf trajectory is
+//! tracked across PRs. Counts come from `BenchOpts::from_env()`
+//! (`INTREEGER_BENCH_WARMUP` / `INTREEGER_BENCH_REPS`); headline numbers
+//! are min-of-k.
 
 use intreeger::data::{esa_like, shuttle_like};
-use intreeger::inference::{compile_variant_with, Engine, NodeOrder, Variant};
+use intreeger::inference::{
+    compile_variant_with, Engine, IntEngine, NodeOrder, TraversalKernel, Variant,
+};
 use intreeger::trees::{ForestParams, RandomForest};
-use intreeger::util::bench::{black_box, measure, report, section};
+use intreeger::util::bench::{black_box, measure_opts, report, section, BenchOpts, Measurement};
+use intreeger::util::json::{arr, num, obj, s, Json};
+
+/// One row of the machine-readable output (serialized via the crate's
+/// own `util::json` writer — same machinery as the model files).
+struct Cell {
+    section: &'static str,
+    variant: String,
+    layout: String,
+    kernel: String,
+    batch: usize,
+    m: Measurement,
+}
+
+impl Cell {
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("section", s(self.section)),
+            ("variant", s(&self.variant)),
+            ("layout", s(&self.layout)),
+            ("kernel", s(&self.kernel)),
+            ("batch", num(self.batch as f64)),
+            ("per_item_ns_min", num(self.m.per_item_ns())),
+            ("per_item_ns_median", num(self.m.per_item_ns_median())),
+            ("rows_per_s", num(self.m.throughput_per_s())),
+        ])
+    }
+}
 
 fn main() {
+    let opts = BenchOpts::from_env();
+    let mut cells: Vec<Cell> = Vec::new();
+
     let ds = shuttle_like(12_000, 7);
     let model = RandomForest::train(
         &ds,
@@ -20,71 +62,168 @@ fn main() {
         19,
     );
 
-    section("tiled batch kernel vs per-row, by batch size x variant x layout (shuttle-like)");
+    section("tiled kernels vs per-row, by batch size x variant x layout (shuttle-like)");
     println!(
-        "{:<10} {:<8} {:>6} {:>14} {:>14} {:>9}",
-        "variant", "layout", "batch", "per-row ns", "batched ns", "speedup"
+        "{:<10} {:<8} {:>6} {:>12} {:>12} {:>12} {:>8} {:>8}",
+        "variant", "layout", "batch", "per-row ns", "branchy ns", "brless ns", "b/row", "bl/by"
     );
+    // Acceptance cells: ISSUE 1 (tiled >= 2x per-row at batch >= 64) and
+    // ISSUE 2 (branchless >= 1.5x branchy at batch >= 256, int variants).
+    let mut accept_tiled: Vec<(String, f64)> = Vec::new();
+    let mut acceptance: Vec<(String, f64)> = Vec::new();
     for variant in Variant::all() {
         for order in NodeOrder::all() {
-            let engine = compile_variant_with(&model, variant, order);
+            let mut engine = compile_variant_with(&model, variant, order);
             for batch in [1usize, 8, 64, 256, 1024] {
                 let flat: Vec<f32> = ds.features[..batch * ds.n_features].to_vec();
-                let scalar_ns = {
-                    let m = measure(2, 7, batch as u64, || {
-                        let mut acc = 0u32;
-                        for r in flat.chunks_exact(ds.n_features) {
-                            acc ^= engine.predict(r);
-                        }
-                        black_box(acc);
-                    });
-                    m.per_item_ns()
-                };
-                let batched_ns = {
-                    let m = measure(2, 7, batch as u64, || {
+                let per_row = measure_opts(opts, batch as u64, || {
+                    let mut acc = 0u32;
+                    for r in flat.chunks_exact(ds.n_features) {
+                        acc ^= engine.predict(r);
+                    }
+                    black_box(acc);
+                });
+                let mut kernel_ns = [0.0f64; 2];
+                for (ki, kernel) in TraversalKernel::all().into_iter().enumerate() {
+                    engine.set_kernel(kernel);
+                    let m = measure_opts(opts, batch as u64, || {
                         let out = engine.predict_batch(&flat);
                         black_box(out[0]);
                     });
-                    m.per_item_ns()
-                };
+                    kernel_ns[ki] = m.per_item_ns();
+                    cells.push(Cell {
+                        section: "rf_predict_batch",
+                        variant: variant.name().into(),
+                        layout: order.name().into(),
+                        kernel: kernel.name().into(),
+                        batch,
+                        m,
+                    });
+                }
+                cells.push(Cell {
+                    section: "rf_per_row",
+                    variant: variant.name().into(),
+                    layout: order.name().into(),
+                    kernel: "per-row".into(),
+                    batch,
+                    m: per_row,
+                });
+                let [branchy_ns, branchless_ns] = kernel_ns;
                 println!(
-                    "{:<10} {:<8} {:>6} {:>14.1} {:>14.1} {:>8.2}x",
+                    "{:<10} {:<8} {:>6} {:>12.1} {:>12.1} {:>12.1} {:>7.2}x {:>7.2}x",
                     variant.name(),
                     order.name(),
                     batch,
-                    scalar_ns,
-                    batched_ns,
-                    scalar_ns / batched_ns
+                    per_row.per_item_ns(),
+                    branchy_ns,
+                    branchless_ns,
+                    per_row.per_item_ns() / branchless_ns,
+                    branchy_ns / branchless_ns
                 );
+                if batch >= 64 {
+                    accept_tiled.push((
+                        format!("{}/{}/batch{}", variant.name(), order.name(), batch),
+                        per_row.per_item_ns() / branchy_ns.min(branchless_ns),
+                    ));
+                }
+                if batch >= 256 && variant != Variant::Float {
+                    acceptance.push((
+                        format!("{}/{}/batch{}", variant.name(), order.name(), batch),
+                        branchy_ns / branchless_ns,
+                    ));
+                }
             }
         }
     }
 
-    section("wide rows (esa-like, 87 features): integer variant");
+    section("wide rows (esa-like, 87 features): integer variant, both kernels");
     let esa = esa_like(4_000, 11);
     let esa_model = RandomForest::train(
         &esa,
         &ForestParams { n_trees: 10, max_depth: 6, ..Default::default() },
         23,
     );
-    let engine = compile_variant_with(&esa_model, Variant::IntTreeger, NodeOrder::Breadth);
+    let mut engine = compile_variant_with(&esa_model, Variant::IntTreeger, NodeOrder::Breadth);
     for batch in [64usize, 1024] {
         let flat: Vec<f32> = esa.features[..batch * esa.n_features].to_vec();
-        let m = measure(2, 5, batch as u64, || {
-            let out = engine.predict_batch(&flat);
-            black_box(out[0]);
-        });
-        report(&format!("esa/int/breadth/batch{batch}"), &m);
+        for kernel in TraversalKernel::all() {
+            engine.set_kernel(kernel);
+            let m = measure_opts(opts, batch as u64, || {
+                let out = engine.predict_batch(&flat);
+                black_box(out[0]);
+            });
+            report(&format!("esa/int/breadth/{}/batch{batch}", kernel.name()), &m);
+            cells.push(Cell {
+                section: "esa_wide",
+                variant: "intreeger".into(),
+                layout: "breadth".into(),
+                kernel: kernel.name().into(),
+                batch,
+                m,
+            });
+        }
     }
 
     section("fixed-point serving path (predict_fixed_batch, the coordinator hot path)");
-    let int_engine = intreeger::inference::IntEngine::compile(&model);
+    let mut int_engine = IntEngine::compile(&model);
     for batch in [64usize, 256] {
         let flat: Vec<f32> = ds.features[..batch * ds.n_features].to_vec();
-        let m = measure(2, 7, batch as u64, || {
-            let out = int_engine.predict_fixed_batch(&flat);
-            black_box(out[0][0]);
-        });
-        report(&format!("int/predict_fixed_batch/batch{batch}"), &m);
+        for kernel in TraversalKernel::all() {
+            int_engine.set_kernel(kernel);
+            let m = measure_opts(opts, batch as u64, || {
+                let out = int_engine.predict_fixed_batch(&flat);
+                black_box(out[0][0]);
+            });
+            report(&format!("int/predict_fixed_batch/{}/batch{batch}", kernel.name()), &m);
+            cells.push(Cell {
+                section: "serving_fixed",
+                variant: "intreeger".into(),
+                layout: "depth".into(),
+                kernel: kernel.name().into(),
+                batch,
+                m,
+            });
+        }
+    }
+
+    section("acceptance: tiled kernel vs per-row (batch >= 64, target >= 2x)");
+    for (name, speedup) in &accept_tiled {
+        println!(
+            "{name:<40} {speedup:>6.2}x {}",
+            if *speedup >= 2.0 { "PASS (>= 2x)" } else { "below 2x target" }
+        );
+    }
+
+    section("acceptance: branchless vs branchy (integer variants, batch >= 256, target >= 1.5x)");
+    for (name, speedup) in &acceptance {
+        println!(
+            "{name:<40} {speedup:>6.2}x {}",
+            if *speedup >= 1.5 { "PASS (>= 1.5x)" } else { "below 1.5x target" }
+        );
+    }
+
+    write_json(&cells, opts);
+}
+
+fn write_json(cells: &[Cell], opts: BenchOpts) {
+    let path = std::env::var("INTREEGER_BENCH_JSON").unwrap_or_else(|_| {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_batch.json").to_string()
+    });
+    let doc = obj(vec![
+        ("bench", s("batch_throughput")),
+        ("schema", num(1.0)),
+        ("note", s("min-of-k timings; regenerate with: cargo bench --bench batch_throughput")),
+        (
+            "opts",
+            obj(vec![
+                ("warmup", num(opts.warmup as f64)),
+                ("reps", num(opts.reps as f64)),
+            ]),
+        ),
+        ("rows", arr(cells.iter().map(Cell::to_json))),
+    ]);
+    match std::fs::write(&path, doc.to_string() + "\n") {
+        Ok(()) => println!("\nwrote {} ({} cells)", path, cells.len()),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
     }
 }

@@ -27,7 +27,7 @@ pub mod native;
 
 pub use compile::{CBinary, CompileError};
 pub use ifelse::generate_ifelse;
-pub use native::generate_native;
+pub use native::{generate_native, generate_native_predicated};
 
 use crate::inference::Variant;
 use crate::ir::Model;
@@ -37,6 +37,9 @@ use crate::ir::Model;
 pub enum Layout {
     IfElse,
     Native,
+    /// Child-adjacent node tables walked by a predicated fixed-trip loop
+    /// — the generated-C mirror of the Rust branchless batch kernel.
+    NativePredicated,
 }
 
 impl Layout {
@@ -44,6 +47,7 @@ impl Layout {
         match self {
             Layout::IfElse => "ifelse",
             Layout::Native => "native",
+            Layout::NativePredicated => "native-predicated",
         }
     }
 }
@@ -53,6 +57,7 @@ pub fn generate(model: &Model, layout: Layout, variant: Variant) -> String {
     match layout {
         Layout::IfElse => generate_ifelse(model, variant),
         Layout::Native => generate_native(model, variant),
+        Layout::NativePredicated => generate_native_predicated(model, variant),
     }
 }
 

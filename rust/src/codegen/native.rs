@@ -3,10 +3,19 @@
 //! counterpart to [`super::ifelse`]. Much smaller `.text`, larger
 //! `.rodata`; the paper argues if-else trees suit RAM-limited
 //! microcontrollers better, which bench `layout_ablation` quantifies.
+//!
+//! [`generate_native_predicated`] additionally emits the **predicated
+//! child-adjacent** form mirroring the Rust batch core's branchless
+//! kernel (`inference::batch`): nodes are laid out BFS child-adjacent so
+//! there is no `it_right` table at all, leaves self-loop behind a flag
+//! bit in the feature word, and each tree's walk is a fixed-trip loop
+//! with an arithmetic descent step — the paper's generated-C deliverable
+//! inherits the branchless optimization.
 
-use super::ifelse::{acc_type, harness, GenOpts};
+use super::ifelse::{acc_type, assert_rawbits_thresholds, harness, GenOpts};
 use crate::flint::{ordered_u32, SplitEncoding};
-use crate::inference::Variant;
+use crate::inference::compiled::{child_adjacent_order, FEATURE_MASK, LEAF, LEAF_BIT, MAX_FEATURES};
+use crate::inference::{NodeOrder, Variant};
 use crate::ir::{Model, ModelKind, Node};
 use crate::quant::prob_to_fixed;
 use std::fmt::Write;
@@ -20,6 +29,7 @@ pub fn generate_native(model: &Model, variant: Variant) -> String {
 pub fn generate_native_with(model: &Model, variant: Variant, opts: GenOpts) -> String {
     assert_eq!(model.kind, ModelKind::RandomForest, "C generation targets RF models");
     model.validate().expect("model must be valid");
+    assert_rawbits_thresholds(model, opts);
 
     let mut out = String::new();
     super::ifelse::header(&mut out, model, variant, "native", opts);
@@ -128,6 +138,186 @@ pub fn generate_native_with(model: &Model, variant: Variant, opts: GenOpts) -> S
     out
 }
 
+/// Generate predicated child-adjacent native C (default options).
+pub fn generate_native_predicated(model: &Model, variant: Variant) -> String {
+    generate_native_predicated_with(model, variant, GenOpts::default())
+}
+
+/// Generate predicated child-adjacent native C with explicit options.
+///
+/// The emitted tables mirror the Rust 8-byte node encoding:
+/// * `it_ff` — feature index | `0x8000` leaf flag (leaves read feature 0,
+///   harmlessly — the descent step is masked by the flag);
+/// * `it_tw` — threshold word (float or integer encoding per variant);
+/// * `it_left` — **global** left-child index; `right = left + 1` by the
+///   child-adjacent layout, so no right table exists; leaves self-loop;
+/// * `it_payload` — leaf-value row index (C keeps it in a side table so
+///   the float variant's `it_tw` can stay a `float` array);
+/// * `it_root` / `it_depth` — per-tree start index and fixed trip count.
+///
+/// Each tree's walk is `it_depth[t]` iterations of the branch-free step
+/// `i = it_left[i] + ((x > it_tw[i]) & is_branch)` — no data-dependent
+/// branch anywhere in the loop body.
+pub fn generate_native_predicated_with(model: &Model, variant: Variant, opts: GenOpts) -> String {
+    assert_eq!(model.kind, ModelKind::RandomForest, "C generation targets RF models");
+    model.validate().expect("model must be valid");
+    assert_rawbits_thresholds(model, opts);
+    assert!(
+        model.n_features <= MAX_FEATURES,
+        "predicated encoding supports at most {MAX_FEATURES} features"
+    );
+    // The emitted C mirrors the Rust Node8 bit layout — derive the
+    // literals from the shared constants so the two cannot drift.
+    let flag_shift = LEAF_BIT.trailing_zeros();
+
+    let mut out = String::new();
+    super::ifelse::header(&mut out, model, variant, "native-predicated", opts);
+
+    let mut ff: Vec<u32> = Vec::new();
+    let mut tw: Vec<String> = Vec::new();
+    let mut left_glob: Vec<u32> = Vec::new();
+    let mut payload: Vec<u32> = Vec::new();
+    let mut roots: Vec<u32> = Vec::new();
+    let mut depths: Vec<u32> = Vec::new();
+    let mut leaf_vals: Vec<String> = Vec::new();
+    let mut n_leaves = 0u32;
+
+    let leaf_tw = if variant == Variant::Float { "0.0f".to_string() } else { "0u".to_string() };
+    // Per-tree scratch SoA in IR order, permuted to BFS child-adjacent.
+    let mut feature: Vec<u32> = Vec::new();
+    let mut thresh: Vec<String> = Vec::new();
+    let mut left: Vec<u32> = Vec::new();
+    let mut right: Vec<u32> = Vec::new();
+    let mut pay: Vec<u32> = Vec::new();
+    for tree in &model.trees {
+        let base = ff.len() as u32;
+        roots.push(base);
+        depths.push(tree.depth() as u32);
+        feature.clear();
+        thresh.clear();
+        left.clear();
+        right.clear();
+        pay.clear();
+        for node in &tree.nodes {
+            match node {
+                Node::Branch { feature: f, threshold, left: l, right: r } => {
+                    feature.push(*f);
+                    thresh.push(match (variant, opts.encoding) {
+                        (Variant::Float, _) => super::f32_lit(*threshold),
+                        (_, SplitEncoding::RawBitsNonNegative) => {
+                            format!("0x{:08x}u", threshold.to_bits())
+                        }
+                        (_, SplitEncoding::OrderedUnsigned) => {
+                            format!("0x{:08x}u", ordered_u32(*threshold))
+                        }
+                    });
+                    left.push(*l);
+                    right.push(*r);
+                    pay.push(0);
+                }
+                Node::Leaf { values } => {
+                    feature.push(LEAF);
+                    thresh.push(leaf_tw.clone());
+                    left.push(0);
+                    right.push(0);
+                    pay.push(n_leaves);
+                    n_leaves += 1;
+                    for &p in values {
+                        leaf_vals.push(match variant {
+                            Variant::Float | Variant::FlInt => super::f32_lit(p),
+                            Variant::IntTreeger => {
+                                format!("{}u", prob_to_fixed(p, model.trees.len()))
+                            }
+                        });
+                    }
+                }
+            }
+        }
+        let order = child_adjacent_order(&feature, &left, &right, NodeOrder::Breadth);
+        let mut new_of = vec![0u32; order.len()];
+        for (new, &old) in order.iter().enumerate() {
+            new_of[old as usize] = new as u32;
+        }
+        for (new, &old) in order.iter().enumerate() {
+            let i = old as usize;
+            if feature[i] == LEAF {
+                ff.push(LEAF_BIT as u32);
+                tw.push(thresh[i].clone());
+                left_glob.push(base + new as u32); // self-loop
+                payload.push(pay[i]);
+            } else {
+                ff.push(feature[i]);
+                tw.push(thresh[i].clone());
+                left_glob.push(base + new_of[left[i] as usize]);
+                payload.push(0);
+            }
+        }
+    }
+
+    let thresh_ty = if variant == Variant::Float { "float" } else { "uint32_t" };
+    let acc = acc_type(variant);
+
+    let _ = writeln!(out, "#define N_NODES {}", ff.len());
+    let _ = writeln!(out, "static const uint16_t it_ff[N_NODES] = {{{}}};", join(&ff));
+    let _ = writeln!(out, "static const {thresh_ty} it_tw[N_NODES] = {{{}}};", tw.join(","));
+    let _ = writeln!(out, "static const uint32_t it_left[N_NODES] = {{{}}};", join(&left_glob));
+    let _ = writeln!(out, "static const uint32_t it_payload[N_NODES] = {{{}}};", join(&payload));
+    let _ = writeln!(out, "static const uint32_t it_root[N_TREES] = {{{}}};", join(&roots));
+    let _ = writeln!(out, "static const uint32_t it_depth[N_TREES] = {{{}}};", join(&depths));
+    let _ = writeln!(
+        out,
+        "static const {acc} it_leaf[{}] = {{{}}};",
+        leaf_vals.len(),
+        leaf_vals.join(",")
+    );
+    let _ = writeln!(out);
+
+    let _ = writeln!(out, "void predict(const float *data, {acc} *result) {{");
+    if variant != Variant::Float {
+        let _ = writeln!(out, "  uint32_t d[N_FEATURES];");
+        let loader = match opts.encoding {
+            SplitEncoding::OrderedUnsigned => "it_map(it_load_bits(data + i))",
+            SplitEncoding::RawBitsNonNegative => "it_load_bits(data + i)",
+        };
+        let _ = writeln!(out, "  for (int i = 0; i < N_FEATURES; ++i) d[i] = {loader};");
+    }
+    let zero = if variant == Variant::IntTreeger { "0u" } else { "0.0f" };
+    let _ = writeln!(out, "  for (int c = 0; c < N_CLASSES; ++c) result[c] = {zero};");
+    let _ = writeln!(out, "  for (int t = 0; t < N_TREES; ++t) {{");
+    let _ = writeln!(out, "    uint32_t i = it_root[t];");
+    let _ = writeln!(out, "    const uint32_t depth = it_depth[t];");
+    let x = format!("f & 0x{FEATURE_MASK:04x}u");
+    let cmp = match (variant, opts.encoding) {
+        // Literal negation of `<=`-goes-left so even NaN inputs route
+        // exactly like the ifelse/native layouts (NaN fails both
+        // compares; `>` would flip it). Integer domains are total orders.
+        (Variant::Float, _) => format!("!(data[{x}] <= it_tw[i])"),
+        (_, SplitEncoding::RawBitsNonNegative) => {
+            format!("(int32_t)d[{x}] > (int32_t)it_tw[i]")
+        }
+        (_, SplitEncoding::OrderedUnsigned) => format!("d[{x}] > it_tw[i]"),
+    };
+    let _ = writeln!(out, "    for (uint32_t s = 0; s < depth; ++s) {{");
+    let _ = writeln!(out, "      const uint32_t f = it_ff[i];");
+    let _ = writeln!(out, "      /* predicated descent: leaves self-loop (flag masks the step) */");
+    let _ = writeln!(out, "      i = it_left[i] + ((({cmp}) ? 1u : 0u) & (1u ^ (f >> {flag_shift})));");
+    let _ = writeln!(out, "    }}");
+    let _ = writeln!(
+        out,
+        "    const {acc} *leaf = it_leaf + (size_t)it_payload[i] * N_CLASSES;"
+    );
+    let _ = writeln!(out, "    for (int c = 0; c < N_CLASSES; ++c) result[c] += leaf[c];");
+    let _ = writeln!(out, "  }}");
+    if variant != Variant::IntTreeger {
+        let _ = writeln!(out, "  for (int c = 0; c < N_CLASSES; ++c) result[c] /= (float)N_TREES;");
+    }
+    let _ = writeln!(out, "}}");
+    let _ = writeln!(out);
+
+    harness(&mut out, model, variant);
+    out
+}
+
 fn join<T: std::fmt::Display>(xs: &[T]) -> String {
     xs.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",")
 }
@@ -158,6 +348,119 @@ mod tests {
         let inference = src.split("#ifndef INTREEGER_NO_MAIN").next().unwrap();
         assert!(!inference.contains("0x1."), "float literal leaked");
         assert!(!inference.contains("float *result"));
+    }
+
+    /// Golden test of the predicated child-adjacent form: a hand-built
+    /// deterministic stump pins every emitted table and the fixed-trip
+    /// predict loop byte-for-byte (table values via the same pure,
+    /// separately-tested transforms).
+    #[test]
+    fn predicated_golden_stump() {
+        use crate::ir::{ModelKind, Tree};
+        let m = Model {
+            kind: ModelKind::RandomForest,
+            n_features: 1,
+            n_classes: 2,
+            trees: vec![Tree {
+                nodes: vec![
+                    Node::Branch { feature: 0, threshold: 0.5, left: 1, right: 2 },
+                    Node::Leaf { values: vec![0.9, 0.1] },
+                    Node::Leaf { values: vec![0.2, 0.8] },
+                ],
+            }],
+            base_score: vec![0.0, 0.0],
+        };
+        let src = generate_native_predicated(&m, Variant::IntTreeger);
+        let t = ordered_u32(0.5);
+        let q = |p: f32| prob_to_fixed(p, 1);
+        for line in [
+            "#define N_NODES 3".to_string(),
+            "static const uint16_t it_ff[N_NODES] = {0,32768,32768};".to_string(),
+            format!(
+                "static const uint32_t it_tw[N_NODES] = {{0x{t:08x}u,0u,0u}};"
+            ),
+            "static const uint32_t it_left[N_NODES] = {1,1,2};".to_string(),
+            "static const uint32_t it_payload[N_NODES] = {0,0,1};".to_string(),
+            "static const uint32_t it_root[N_TREES] = {0};".to_string(),
+            "static const uint32_t it_depth[N_TREES] = {1};".to_string(),
+            format!(
+                "static const uint32_t it_leaf[4] = {{{}u,{}u,{}u,{}u}};",
+                q(0.9),
+                q(0.1),
+                q(0.2),
+                q(0.8)
+            ),
+            "    for (uint32_t s = 0; s < depth; ++s) {".to_string(),
+            "      const uint32_t f = it_ff[i];".to_string(),
+            "      i = it_left[i] + (((d[f & 0x7fffu] > it_tw[i]) ? 1u : 0u) & (1u ^ (f >> 15)));"
+                .to_string(),
+            "    const uint32_t *leaf = it_leaf + (size_t)it_payload[i] * N_CLASSES;".to_string(),
+        ] {
+            assert!(src.contains(&line), "missing golden line:\n{line}\nin:\n{src}");
+        }
+        // The compact claim: no explicit right-child table anywhere.
+        assert!(!src.contains("it_right"), "predicated form must not emit a right table");
+    }
+
+    #[test]
+    fn predicated_emits_all_variants_and_stays_integer_only_for_int() {
+        let m = model();
+        for v in [Variant::Float, Variant::FlInt, Variant::IntTreeger] {
+            let src = generate_native_predicated(&m, v);
+            for t in ["it_ff", "it_tw", "it_left", "it_payload", "it_root", "it_depth", "it_leaf"] {
+                assert!(src.contains(t), "{}: missing table {t}", v.name());
+            }
+            assert!(!src.contains("it_right"), "{}: right table leaked", v.name());
+            assert!(src.contains("layout: native-predicated"), "{}", v.name());
+        }
+        let src = generate_native_predicated(&m, Variant::IntTreeger);
+        let inference = src.split("#ifndef INTREEGER_NO_MAIN").next().unwrap();
+        assert!(!inference.contains("0x1."), "float literal leaked");
+        assert!(!inference.contains("float *result"));
+    }
+
+    #[test]
+    fn predicated_rawbits_requires_nonneg_thresholds() {
+        let mut m = model();
+        for node in &mut m.trees[0].nodes {
+            if let Node::Branch { threshold, .. } = node {
+                *threshold = -1.0;
+                break;
+            }
+        }
+        let opts = GenOpts { encoding: SplitEncoding::RawBitsNonNegative, ..Default::default() };
+        let r = std::panic::catch_unwind(|| {
+            generate_native_predicated_with(&m, Variant::IntTreeger, opts)
+        });
+        assert!(r.is_err(), "negative threshold must be rejected under raw-bits");
+    }
+
+    /// End-to-end: the predicated C binary is bit-identical to the
+    /// branchy native form and to the Rust engines (gcc-gated).
+    #[test]
+    fn predicated_c_matches_engines() {
+        use crate::codegen::compile::{gcc_available, CBinary};
+        use crate::inference::IntEngine;
+        if !gcc_available() {
+            eprintln!("gcc unavailable; skipping");
+            return;
+        }
+        let ds = shuttle_like(1000, 35);
+        let m = RandomForest::train(
+            &ds,
+            &ForestParams { n_trees: 6, max_depth: 5, ..Default::default() },
+            7,
+        );
+        let engine = IntEngine::compile(&m);
+        let src = generate_native_predicated(&m, Variant::IntTreeger);
+        let bin = CBinary::compile(&src, Variant::IntTreeger, m.n_features, m.n_classes, "natpred")
+            .expect("compile predicated C");
+        let n = 200usize;
+        let rows = &ds.features[..n * ds.n_features];
+        let got = bin.predict_u32(rows).expect("run predicated C");
+        for i in 0..n {
+            assert_eq!(got[i], engine.predict_fixed(ds.row(i)), "row {i}");
+        }
     }
 
     #[test]

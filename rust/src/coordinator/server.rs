@@ -14,7 +14,7 @@
 
 use super::batcher::{BatchPolicy, Batcher, FlushReason};
 use super::metrics::Metrics;
-use crate::inference::IntEngine;
+use crate::inference::{IntEngine, TraversalKernel};
 use crate::ir::{argmax, Model};
 use crate::runtime::PjrtEngine;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -56,12 +56,21 @@ pub struct ServerConfig {
     pub xla_threshold: usize,
     /// Total channel capacity (backpressure bound), split across workers.
     pub queue_depth: usize,
-    /// Measure both backends at startup and disable the XLA route when
-    /// the batched scalar kernel is faster at the full policy batch
-    /// size. On a single CPU core the padded batched artifact usually
-    /// loses to the tiled scalar kernel (see `cargo bench --bench
-    /// serve_throughput`); on a real accelerator it wins — this flag
-    /// makes the router honest either way.
+    /// Measure alternative execution strategies at startup and keep the
+    /// fastest:
+    /// 1. the scalar route's tile-walk kernel — branchy vs the
+    ///    predicated branchless descent — is timed on the loaded model
+    ///    (deep, early-exiting trees can favor branchy; shallow balanced
+    ///    trees favor branchless), and
+    /// 2. the XLA route is disabled when the batched scalar kernel beats
+    ///    it at the full policy batch size. On a single CPU core the
+    ///    padded batched artifact usually loses to the tiled scalar
+    ///    kernel (see `cargo bench --bench serve_throughput`); on a real
+    ///    accelerator it wins — this flag makes the router honest either
+    ///    way.
+    ///
+    /// Every candidate produces bit-identical results (the batch module's
+    /// parity invariant), so calibration is invisible to clients.
     pub auto_calibrate: bool,
     /// Worker threads draining the (sharded) request queue. The scalar
     /// batched route scales near-linearly with workers; the XLA offload
@@ -109,7 +118,13 @@ impl InferenceServer {
     ) -> InferenceServer {
         let n_workers = config.n_workers.max(1);
         // One compiled forest shared by every worker (read-only walks).
-        let scalar = Arc::new(IntEngine::compile(model));
+        // The tile-walk kernel is calibrated once, before sharing: the
+        // choice is per *model* (tree shape), not per worker.
+        let mut scalar_engine = IntEngine::compile(model);
+        if config.auto_calibrate {
+            calibrate_kernel(&mut scalar_engine, model.n_features, config.policy.max_batch);
+        }
+        let scalar = Arc::new(scalar_engine);
         let metrics = Arc::new(Metrics::new());
         let n_features = model.n_features;
         let per_worker_depth = (config.queue_depth / n_workers).max(1);
@@ -200,6 +215,74 @@ impl Drop for InferenceServer {
             let _ = h.join();
         }
     }
+}
+
+/// Probe rows for kernel calibration, sampled around the compiled
+/// forest's *own* per-feature thresholds (jittered both below and above)
+/// so the timed walks exercise realistic split decisions. A fixed
+/// synthetic pattern can fall entirely on one side of every split, and
+/// the branchy kernel's cost is data-dependent through its early exit —
+/// timing it on a degenerate all-left workload would crown the wrong
+/// kernel for production traffic.
+fn calibration_rows(engine: &IntEngine, n_features: usize, b: usize) -> Vec<f32> {
+    let f = engine.forest();
+    let mut pools: Vec<Vec<f32>> = vec![Vec::new(); n_features];
+    for i in 0..f.n_nodes() {
+        if f.feature[i] != crate::inference::LEAF {
+            pools[f.feature[i] as usize].push(f.thresh_f32[i]);
+        }
+    }
+    // Deterministic: same model -> same probe batch -> stable choice.
+    let mut rng = crate::util::Rng::new(0xCA11_B8A7);
+    let mut rows = Vec::with_capacity(b * n_features);
+    for _ in 0..b {
+        for pool in pools.iter().take(n_features) {
+            let v = if pool.is_empty() {
+                rng.uniform_in(-1.0, 1.0)
+            } else {
+                let t = pool[rng.below(pool.len())];
+                // Jitter in ±5% of the threshold's magnitude: both branch
+                // outcomes occur across the batch.
+                t + rng.uniform_in(-0.5, 0.5) * (t.abs().max(1.0) * 0.1)
+            };
+            rows.push(v);
+        }
+    }
+    rows
+}
+
+/// Startup micro-benchmark: pick the faster tile-walk kernel (branchy
+/// early-exit vs predicated branchless fixed-trip) for this model's tree
+/// shapes. Leaves the winner set on `engine`. Uses min-of-k timing on a
+/// full-policy batch of threshold-representative probe rows.
+fn calibrate_kernel(engine: &mut IntEngine, n_features: usize, batch: usize) {
+    use crate::inference::Engine as _;
+    let b = batch.max(crate::inference::TILE_ROWS);
+    let rows = calibration_rows(engine, n_features, b);
+    let mut best = (f64::INFINITY, TraversalKernel::default());
+    let mut timings = Vec::new();
+    for kernel in TraversalKernel::all() {
+        engine.set_kernel(kernel);
+        std::hint::black_box(engine.predict_fixed_batch(&rows)); // warmup
+        let mut t_min = f64::INFINITY;
+        for _ in 0..3 {
+            let t0 = Instant::now();
+            std::hint::black_box(engine.predict_fixed_batch(&rows));
+            t_min = t_min.min(t0.elapsed().as_secs_f64());
+        }
+        timings.push((kernel, t_min));
+        if t_min < best.0 {
+            best = (t_min, kernel);
+        }
+    }
+    engine.set_kernel(best.1);
+    let report: Vec<String> =
+        timings.iter().map(|(k, t)| format!("{} {:.0} us", k.name(), t * 1e6)).collect();
+    eprintln!(
+        "intreeger-server: auto-calibration picked the {} tile kernel per {b}-batch ({})",
+        best.1.name(),
+        report.join(", ")
+    );
 }
 
 /// Startup micro-benchmark: keep the XLA engine only if it beats the
@@ -487,6 +570,25 @@ mod tests {
         let rows: Vec<Vec<f32>> = (0..64).map(|i| ds.row(i).to_vec()).collect();
         for (i, r) in server.infer_many(rows).iter().enumerate() {
             assert_eq!(r.fixed, oracle.predict_fixed(ds.row(i)));
+        }
+    }
+
+    #[test]
+    fn auto_calibrate_without_artifacts_picks_a_kernel_and_answers() {
+        // No artifacts dir: only the tile-kernel calibration runs. The
+        // choice must be invisible — every answer still matches the
+        // scalar oracle bit-for-bit.
+        let (ds, m) = model();
+        let server = InferenceServer::start(
+            &m,
+            None,
+            ServerConfig { auto_calibrate: true, n_workers: 2, ..Default::default() },
+        );
+        let oracle = crate::inference::IntEngine::compile(&m);
+        let rows: Vec<Vec<f32>> = (0..64).map(|i| ds.row(i).to_vec()).collect();
+        for (i, r) in server.infer_many(rows).iter().enumerate() {
+            assert_eq!(r.fixed, oracle.predict_fixed(ds.row(i)), "row {i}");
+            assert_eq!(r.route, Route::Scalar);
         }
     }
 

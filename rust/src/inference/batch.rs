@@ -12,14 +12,40 @@
 //! ordered-u32 space **once** (FlInt's trick, amortized batch-wide), so
 //! the integer variants stay integer-only end to end.
 //!
+//! ## Two kernels, one walker ([`TraversalKernel`])
+//!
+//! * [`TraversalKernel::Branchy`] — the PR-1 tile walk: each lane tests
+//!   for its leaf every step and drops out early. Fewest node visits,
+//!   but every step costs two unpredictable branches (`done[r]`, the
+//!   leaf test) plus the data-dependent select.
+//! * [`TraversalKernel::Branchless`] — the predicated fixed-trip kernel
+//!   (FLInt-style). All lanes advance every step via pure arithmetic,
+//!   `idx = left + ((x > threshold) & branch_mask)`, leaves absorb via
+//!   their self-loops ([`Node8`] encoding), and the loop trip count is
+//!   the compiled `tree_depths[t]` — **no data-dependent branches at
+//!   all**, a shape LLVM can unroll and autovectorize over the eight
+//!   lanes. Lanes that reach a leaf early keep re-loading their parked
+//!   node (and row feature 0), which is cheap L1 traffic; what they
+//!   never do is mispredict.
+//!
+//! Both kernels are exposed behind one generic monomorphized walker
+//! (ordered-u32 and f32 domains differ only in the threshold-word
+//! compare), shared by all three RF variants *and* the GBT engine.
+//!
 //! ## Parity invariant (load-bearing — the parity suite enforces it)
 //!
-//! For every engine variant, the batched kernels are **bit-identical** to
-//! the scalar engines: for each row, leaf payloads are accumulated in
-//! ascending tree order — exactly the scalar iteration order — so float
-//! sums see the same rounding sequence and u32/i64 sums are exact either
-//! way. Tiling changes only *when* each tree walk happens, never the
-//! per-row accumulation sequence.
+//! For every engine variant and **either kernel**, the batched results
+//! are **bit-identical** to the scalar engines: both kernels route every
+//! lane through exactly the same comparisons (the descent predicate is
+//! the literal negation `!(x <= t)` of the scalar select — not `x > t`,
+//! which would differ under NaN; the predicated step merely masks the
+//! compare of a parked lane), so each row reaches the same leaf, and
+//! leaf payloads are accumulated in ascending tree order — exactly the
+//! scalar iteration order — so float sums see the same rounding sequence
+//! and u32/i64 sums are exact either way. Kernel choice changes only
+//! *when* each tree walk happens, never the per-row accumulation
+//! sequence. The final ragged tile (batch % TILE_ROWS rows) always runs
+//! the branchy walker — identical results by the same argument.
 //!
 //! ## Scratch buffers
 //!
@@ -30,16 +56,47 @@
 //! count limit (the ≥200-feature regression tests cover this), and no
 //! interior-mutability hazard on the `Sync` engines.
 
-use super::compiled::{CompiledForest, LEAF};
+use super::compiled::{CompiledForest, Node8};
 use crate::flint::ordered_u32;
 use crate::ir::argmax;
 use std::cell::RefCell;
 
 /// Rows walked in lockstep per tile. Eight lanes is enough to cover
 /// L2-miss latency with independent work on current cores while the
-/// lane state (cursor + leaf + done flag per lane) stays in registers /
-/// L1.
+/// lane state stays in registers / L1 — and eight u32 cursors are one
+/// SIMD register wide on AVX2, which is what lets the predicated kernel
+/// vectorize.
 pub const TILE_ROWS: usize = 8;
+
+/// Which tile-walk strategy the batch entry points use.
+///
+/// Both produce bit-identical results (module docs); this is purely a
+/// performance knob. `Branchless` is the default; the serving
+/// coordinator's auto-calibration measures both on the loaded model at
+/// startup and keeps the faster one (deep, early-exiting trees can
+/// favor `Branchy`, whose visit count tracks the *average* leaf depth
+/// rather than the maximum).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum TraversalKernel {
+    /// Per-lane early exit (the PR-1 tiled kernel).
+    Branchy,
+    /// Predicated fixed-trip descent over self-looping leaves.
+    #[default]
+    Branchless,
+}
+
+impl TraversalKernel {
+    pub fn name(self) -> &'static str {
+        match self {
+            TraversalKernel::Branchy => "branchy",
+            TraversalKernel::Branchless => "branchless",
+        }
+    }
+
+    pub fn all() -> [TraversalKernel; 2] {
+        [TraversalKernel::Branchy, TraversalKernel::Branchless]
+    }
+}
 
 thread_local! {
     /// Scalar-path scratch: one ordered row.
@@ -81,29 +138,82 @@ pub(crate) fn with_ordered_batch<R>(rows: &[f32], f: impl FnOnce(&[u32]) -> R) -
     })
 }
 
-/// Walk one tree over a tile of rows in the ordered-u32 domain,
-/// interleaved: every loop iteration advances all unfinished lanes by one
-/// node, so the per-lane loads overlap.
+// ---------------------------------------------------------------------------
+// The generic walker: one body, two threshold domains, two kernels.
+
+/// Threshold domain of a walk: how a row element compares against the
+/// packed node's 32-bit threshold word. The single generic walker
+/// monomorphizes over this, replacing the near-identical
+/// `walk_tile_ord`/`walk_tile_f32` pair PR 1 carried.
+pub(crate) trait Domain {
+    type Elem: Copy;
+    /// The negation of the IR's `<=`-goes-left split, i.e. exactly
+    /// "take the right child".
+    fn go_right(x: Self::Elem, tw: u32) -> bool;
+}
+
+/// Ordered-u32 domain (FlInt / InTreeger / GBT walks).
+pub(crate) enum OrdDomain {}
+impl Domain for OrdDomain {
+    type Elem = u32;
+    #[inline(always)]
+    fn go_right(x: u32, tw: u32) -> bool {
+        x > tw
+    }
+}
+
+/// Raw-f32 domain (float baseline walks; `tw` carries the f32 bits).
+pub(crate) enum F32Domain {}
+impl Domain for F32Domain {
+    type Elem = f32;
+    #[inline(always)]
+    fn go_right(x: f32, tw: u32) -> bool {
+        // Written as the literal negation of the IR's `<=`-goes-left
+        // split rather than `x > t`: for finite values they are the same
+        // predicate (and the same single compare instruction), but under
+        // IEEE NaN `x > t` would flip the routing (NaN fails both
+        // compares). NaN is rejected at the data boundary, yet keeping
+        // the exact negation means even out-of-contract inputs route
+        // identically to the seed walkers and the if-else generated C.
+        !(x <= f32::from_bits(tw))
+    }
+}
+
+/// A packed forest as the walkers see it — lets the GBT engine reuse the
+/// exact same kernels over its own node/offset arrays.
+pub(crate) struct PackedTrees<'a> {
+    pub nodes: &'a [Node8],
+    /// Start index of each tree's nodes; length `n_trees + 1`.
+    pub tree_offsets: &'a [u32],
+    /// Fixed trip count of the branchless kernel; length `n_trees`.
+    pub tree_depths: &'a [u32],
+    /// Row stride (= feature count) of the row-major batch.
+    pub stride: usize,
+}
+
+/// Branchy tile walk of one tree: every loop iteration advances all
+/// unfinished lanes by one node; lanes drop out at their leaf.
 ///
-/// SAFETY of the unchecked indexing: identical argument to
-/// [`CompiledForest::walk_ord`] — `Model::validate()` bounds child and
-/// feature indices at compile time, and the public batch entry points
-/// assert the row buffer shape once per call.
+/// SAFETY of the unchecked indexing: `Model::validate()` bounds child
+/// and feature indices at compile time (packed leaves read feature 0),
+/// leaf self-loops stay inside the tree, and the batch drivers assert
+/// the row-buffer shape once per call (`(tile_start + tile_rows) *
+/// stride <= rows.len()`).
 #[inline]
-fn walk_tile_ord(
-    f: &CompiledForest,
+pub(crate) fn walk_tile_branchy<D: Domain>(
+    trees: &PackedTrees,
     t: usize,
-    rows_ord: &[u32],
+    rows: &[D::Elem],
     tile_start: usize,
     tile_rows: usize,
     leaves: &mut [u32; TILE_ROWS],
 ) {
     debug_assert!(tile_rows <= TILE_ROWS);
-    debug_assert!((tile_start + tile_rows) * f.n_features <= rows_ord.len());
-    let base = f.tree_offsets[t] as usize;
-    let nodes = &f.nodes_ord;
-    let stride = f.n_features;
-    let mut idx = [base; TILE_ROWS];
+    debug_assert!((tile_start + tile_rows) * trees.stride <= rows.len());
+    let base = trees.tree_offsets[t] as usize;
+    let nodes = trees.nodes;
+    let stride = trees.stride;
+    let mut idx = [0u32; TILE_ROWS]; // tree-local cursors
     let mut done = [false; TILE_ROWS];
     let mut remaining = tile_rows;
     while remaining > 0 {
@@ -111,87 +221,96 @@ fn walk_tile_ord(
             if done[r] {
                 continue;
             }
-            let n = unsafe { nodes.get_unchecked(idx[r]) };
-            if n.feature == LEAF {
-                leaves[r] = n.left;
+            let n = unsafe { *nodes.get_unchecked(base + idx[r] as usize) };
+            if n.is_leaf() {
+                leaves[r] = n.tw;
                 done[r] = true;
                 remaining -= 1;
             } else {
                 let x = unsafe {
-                    *rows_ord.get_unchecked((tile_start + r) * stride + n.feature as usize)
+                    *rows.get_unchecked((tile_start + r) * stride + n.feature_index())
                 };
-                idx[r] = base + if x <= n.threshold { n.left } else { n.right } as usize;
+                idx[r] = n.left as u32 + D::go_right(x, n.tw) as u32;
             }
         }
     }
 }
 
-/// Float-domain twin of [`walk_tile_ord`] (raw f32 compares on
-/// [`CompiledForest::nodes_f32`]) for the float baseline engine.
+/// Predicated fixed-trip tile walk of one tree over a **full** tile
+/// (exactly [`TILE_ROWS`] lanes — the drivers route ragged tails to
+/// [`walk_tile_branchy`]).
+///
+/// Every lane advances every step with no data-dependent branch: the
+/// descent is `idx = left + ((x > tw) & branch_mask)`, leaves self-loop
+/// (their mask is 0), and the loop runs the compiled tree depth. The
+/// inner loop has a constant trip count over fixed-size arrays, which is
+/// the autovectorization-friendly shape the ISSUE's bench sweep checks.
+///
+/// SAFETY: same argument as [`walk_tile_branchy`]; additionally the
+/// drivers guarantee `tile_start + TILE_ROWS <= n_rows`.
 #[inline]
-fn walk_tile_f32(
-    f: &CompiledForest,
+pub(crate) fn walk_tile_lockstep<D: Domain>(
+    trees: &PackedTrees,
     t: usize,
-    rows: &[f32],
+    rows: &[D::Elem],
     tile_start: usize,
-    tile_rows: usize,
     leaves: &mut [u32; TILE_ROWS],
 ) {
-    debug_assert!(tile_rows <= TILE_ROWS);
-    debug_assert!((tile_start + tile_rows) * f.n_features <= rows.len());
-    let base = f.tree_offsets[t] as usize;
-    let nodes = &f.nodes_f32;
-    let stride = f.n_features;
-    let mut idx = [base; TILE_ROWS];
-    let mut done = [false; TILE_ROWS];
-    let mut remaining = tile_rows;
-    while remaining > 0 {
-        for r in 0..tile_rows {
-            if done[r] {
-                continue;
-            }
-            let n = unsafe { nodes.get_unchecked(idx[r]) };
-            if n.feature == LEAF {
-                leaves[r] = n.left;
-                done[r] = true;
-                remaining -= 1;
-            } else {
-                let x =
-                    unsafe { *rows.get_unchecked((tile_start + r) * stride + n.feature as usize) };
-                idx[r] = base + if x <= n.threshold { n.left } else { n.right } as usize;
-            }
+    debug_assert!((tile_start + TILE_ROWS) * trees.stride <= rows.len());
+    let base = trees.tree_offsets[t] as usize;
+    let depth = trees.tree_depths[t];
+    let nodes = trees.nodes;
+    let stride = trees.stride;
+    let mut idx = [0u32; TILE_ROWS]; // tree-local cursors
+    for _ in 0..depth {
+        for r in 0..TILE_ROWS {
+            let n = unsafe { *nodes.get_unchecked(base + idx[r] as usize) };
+            let x =
+                unsafe { *rows.get_unchecked((tile_start + r) * stride + n.feature_index()) };
+            idx[r] = n.left as u32 + (D::go_right(x, n.tw) as u32 & n.branch_mask());
         }
+    }
+    // After `depth` predicated steps every lane is parked on its leaf
+    // (a lane reaching depth d <= depth self-loops for the remainder).
+    for r in 0..TILE_ROWS {
+        let n = unsafe { *nodes.get_unchecked(base + idx[r] as usize) };
+        debug_assert!(n.is_leaf(), "lane not at a leaf after the fixed trip");
+        leaves[r] = n.tw;
     }
 }
 
-/// Shape-check a flat row-major batch; returns the row count.
-fn batch_rows(f: &CompiledForest, rows: &[f32]) -> usize {
-    assert!(f.n_features > 0);
-    assert!(
-        rows.len() % f.n_features == 0,
-        "batch length {} is not a multiple of n_features {}",
-        rows.len(),
-        f.n_features
-    );
-    rows.len() / f.n_features
-}
-
-/// Batched float engine accumulation: averaged per-class probabilities,
-/// flat `n_rows * n_classes`, bit-identical to
-/// `FloatEngine::accumulate` per row.
-pub fn float_proba_batch(f: &CompiledForest, rows: &[f32]) -> Vec<f32> {
-    let n_rows = batch_rows(f, rows);
-    let c = f.n_classes;
-    let mut acc = vec![0.0f32; n_rows * c];
+/// Shared batch driver: walk every (tile, tree) pair with the selected
+/// kernel and accumulate leaf payload rows into `acc` (row-major
+/// `n_rows * n_classes`, pre-initialized by the caller). Per row,
+/// accumulation happens in ascending tree order — the scalar order.
+pub(crate) fn accumulate_batch<D: Domain, T>(
+    trees: &PackedTrees,
+    rows: &[D::Elem],
+    n_rows: usize,
+    n_classes: usize,
+    leaf_table: &[T],
+    kernel: TraversalKernel,
+    acc: &mut [T],
+) where
+    T: Copy + std::ops::AddAssign<T>,
+{
+    assert_eq!(acc.len(), n_rows * n_classes);
+    assert!(n_rows * trees.stride <= rows.len());
+    let n_trees = trees.tree_offsets.len() - 1;
     let mut leaves = [0u32; TILE_ROWS];
     let mut tile_start = 0;
     while tile_start < n_rows {
         let tile_rows = TILE_ROWS.min(n_rows - tile_start);
-        for t in 0..f.n_trees {
-            walk_tile_f32(f, t, rows, tile_start, tile_rows, &mut leaves);
+        for t in 0..n_trees {
+            if kernel == TraversalKernel::Branchless && tile_rows == TILE_ROWS {
+                walk_tile_lockstep::<D>(trees, t, rows, tile_start, &mut leaves);
+            } else {
+                walk_tile_branchy::<D>(trees, t, rows, tile_start, tile_rows, &mut leaves);
+            }
             for (r, &p) in leaves[..tile_rows].iter().enumerate() {
-                let leaf = &f.leaf_f32[p as usize * c..(p as usize + 1) * c];
-                let row_acc = &mut acc[(tile_start + r) * c..(tile_start + r + 1) * c];
+                let leaf = &leaf_table[p as usize * n_classes..(p as usize + 1) * n_classes];
+                let row_acc =
+                    &mut acc[(tile_start + r) * n_classes..(tile_start + r + 1) * n_classes];
                 for (a, &v) in row_acc.iter_mut().zip(leaf) {
                     *a += v;
                 }
@@ -199,6 +318,70 @@ pub fn float_proba_batch(f: &CompiledForest, rows: &[f32]) -> Vec<f32> {
         }
         tile_start += tile_rows;
     }
+}
+
+// ---------------------------------------------------------------------------
+// Public batch entry points (per variant, with and without kernel choice).
+
+/// Shape-check a flat row-major batch; returns the row count.
+fn batch_rows(f: &CompiledForest, rows_len: usize) -> usize {
+    assert!(f.n_features > 0);
+    assert!(
+        rows_len % f.n_features == 0,
+        "batch length {} is not a multiple of n_features {}",
+        rows_len,
+        f.n_features
+    );
+    rows_len / f.n_features
+}
+
+impl CompiledForest {
+    /// The packed forest view over the ordered-u32 node array.
+    pub(crate) fn packed_ord(&self) -> PackedTrees<'_> {
+        PackedTrees {
+            nodes: &self.nodes_ord,
+            tree_offsets: &self.tree_offsets,
+            tree_depths: &self.tree_depths,
+            stride: self.n_features,
+        }
+    }
+
+    /// The packed forest view over the f32-bits node array.
+    pub(crate) fn packed_f32(&self) -> PackedTrees<'_> {
+        PackedTrees {
+            nodes: &self.nodes_f32,
+            tree_offsets: &self.tree_offsets,
+            tree_depths: &self.tree_depths,
+            stride: self.n_features,
+        }
+    }
+}
+
+/// Batched float engine accumulation: averaged per-class probabilities,
+/// flat `n_rows * n_classes`, bit-identical to
+/// `FloatEngine::accumulate` per row (default kernel).
+pub fn float_proba_batch(f: &CompiledForest, rows: &[f32]) -> Vec<f32> {
+    float_proba_batch_with(f, rows, TraversalKernel::default())
+}
+
+/// [`float_proba_batch`] with an explicit kernel.
+pub fn float_proba_batch_with(
+    f: &CompiledForest,
+    rows: &[f32],
+    kernel: TraversalKernel,
+) -> Vec<f32> {
+    let n_rows = batch_rows(f, rows.len());
+    let c = f.n_classes;
+    let mut acc = vec![0.0f32; n_rows * c];
+    accumulate_batch::<F32Domain, f32>(
+        &f.packed_f32(),
+        rows,
+        n_rows,
+        c,
+        &f.leaf_f32,
+        kernel,
+        &mut acc,
+    );
     let inv = 1.0 / f.n_trees as f32;
     for a in &mut acc {
         *a *= inv;
@@ -208,28 +391,30 @@ pub fn float_proba_batch(f: &CompiledForest, rows: &[f32]) -> Vec<f32> {
 
 /// Batched FlInt accumulation: ordered-u32 compares (whole batch
 /// transformed once), float accumulation — flat `n_rows * n_classes`,
-/// bit-identical to `FlIntEngine`'s per-row path.
+/// bit-identical to `FlIntEngine`'s per-row path (default kernel).
 pub fn flint_proba_batch(f: &CompiledForest, rows: &[f32]) -> Vec<f32> {
-    let n_rows = batch_rows(f, rows);
+    flint_proba_batch_with(f, rows, TraversalKernel::default())
+}
+
+/// [`flint_proba_batch`] with an explicit kernel.
+pub fn flint_proba_batch_with(
+    f: &CompiledForest,
+    rows: &[f32],
+    kernel: TraversalKernel,
+) -> Vec<f32> {
+    let n_rows = batch_rows(f, rows.len());
     let c = f.n_classes;
     with_ordered_batch(rows, |rows_ord| {
         let mut acc = vec![0.0f32; n_rows * c];
-        let mut leaves = [0u32; TILE_ROWS];
-        let mut tile_start = 0;
-        while tile_start < n_rows {
-            let tile_rows = TILE_ROWS.min(n_rows - tile_start);
-            for t in 0..f.n_trees {
-                walk_tile_ord(f, t, rows_ord, tile_start, tile_rows, &mut leaves);
-                for (r, &p) in leaves[..tile_rows].iter().enumerate() {
-                    let leaf = &f.leaf_f32[p as usize * c..(p as usize + 1) * c];
-                    let row_acc = &mut acc[(tile_start + r) * c..(tile_start + r + 1) * c];
-                    for (a, &v) in row_acc.iter_mut().zip(leaf) {
-                        *a += v;
-                    }
-                }
-            }
-            tile_start += tile_rows;
-        }
+        accumulate_batch::<OrdDomain, f32>(
+            &f.packed_ord(),
+            rows_ord,
+            n_rows,
+            c,
+            &f.leaf_f32,
+            kernel,
+            &mut acc,
+        );
         let inv = 1.0 / f.n_trees as f32;
         for a in &mut acc {
             *a *= inv;
@@ -240,31 +425,29 @@ pub fn flint_proba_batch(f: &CompiledForest, rows: &[f32]) -> Vec<f32> {
 
 /// Batched InTreeger accumulation: ordered-u32 compares, `u32`
 /// fixed-point sums — flat `n_rows * n_classes`, bit-identical to
-/// `IntEngine::predict_fixed` per row. Integer-only after the one
-/// batch-wide transform.
+/// `IntEngine::predict_fixed` per row (default kernel). Integer-only
+/// after the one batch-wide transform. The u32 adds cannot wrap:
+/// `quant::max_accumulated` bounds the sum below `u32::MAX` (same
+/// argument as the scalar engine).
 pub fn int_fixed_batch(f: &CompiledForest, rows: &[f32]) -> Vec<u32> {
-    let n_rows = batch_rows(f, rows);
+    int_fixed_batch_with(f, rows, TraversalKernel::default())
+}
+
+/// [`int_fixed_batch`] with an explicit kernel.
+pub fn int_fixed_batch_with(f: &CompiledForest, rows: &[f32], kernel: TraversalKernel) -> Vec<u32> {
+    let n_rows = batch_rows(f, rows.len());
     let c = f.n_classes;
     with_ordered_batch(rows, |rows_ord| {
         let mut acc = vec![0u32; n_rows * c];
-        let mut leaves = [0u32; TILE_ROWS];
-        let mut tile_start = 0;
-        while tile_start < n_rows {
-            let tile_rows = TILE_ROWS.min(n_rows - tile_start);
-            for t in 0..f.n_trees {
-                walk_tile_ord(f, t, rows_ord, tile_start, tile_rows, &mut leaves);
-                for (r, &p) in leaves[..tile_rows].iter().enumerate() {
-                    let leaf = &f.leaf_u32[p as usize * c..(p as usize + 1) * c];
-                    let row_acc = &mut acc[(tile_start + r) * c..(tile_start + r + 1) * c];
-                    for (a, &v) in row_acc.iter_mut().zip(leaf) {
-                        // Exact: quant::max_accumulated bounds the sum below
-                        // u32::MAX (same argument as the scalar engine).
-                        *a += v;
-                    }
-                }
-            }
-            tile_start += tile_rows;
-        }
+        accumulate_batch::<OrdDomain, u32>(
+            &f.packed_ord(),
+            rows_ord,
+            n_rows,
+            c,
+            &f.leaf_u32,
+            kernel,
+            &mut acc,
+        );
         acc
     })
 }
@@ -301,32 +484,44 @@ mod tests {
     }
 
     #[test]
-    fn tiled_walks_match_scalar_walks() {
+    fn both_kernels_match_scalar_walks() {
         let f = forest();
         let ds = shuttle_like(300, 22);
-        let n = 100usize;
+        let n = 104usize; // 13 full tiles
         let rows = &ds.features[..n * ds.n_features];
         let rows_ord: Vec<u32> = rows.iter().map(|&x| ordered_u32(x)).collect();
-        let mut leaves = [0u32; TILE_ROWS];
+        let trees_ord = f.packed_ord();
+        let trees_f32 = f.packed_f32();
+        let mut leaves_branchy = [0u32; TILE_ROWS];
+        let mut leaves_lockstep = [0u32; TILE_ROWS];
+        let mut leaves_f32 = [0u32; TILE_ROWS];
         let mut tile_start = 0;
         while tile_start < n {
-            let tile_rows = TILE_ROWS.min(n - tile_start);
             for t in 0..f.n_trees {
-                walk_tile_ord(&f, t, &rows_ord, tile_start, tile_rows, &mut leaves);
-                for r in 0..tile_rows {
+                walk_tile_branchy::<OrdDomain>(
+                    &trees_ord, t, &rows_ord, tile_start, TILE_ROWS, &mut leaves_branchy,
+                );
+                walk_tile_lockstep::<OrdDomain>(
+                    &trees_ord, t, &rows_ord, tile_start, &mut leaves_lockstep,
+                );
+                walk_tile_lockstep::<F32Domain>(
+                    &trees_f32, t, rows, tile_start, &mut leaves_f32,
+                );
+                for r in 0..TILE_ROWS {
                     let row_ord: Vec<u32> =
                         ds.row(tile_start + r).iter().map(|&x| ordered_u32(x)).collect();
                     let want = f.walk_ord(t, &row_ord);
-                    assert_eq!(leaves[r], want, "tree {t} row {}", tile_start + r);
-                    assert_eq!(leaves[r], f.walk_f32(t, ds.row(tile_start + r)));
+                    assert_eq!(leaves_branchy[r], want, "branchy t{t} row {}", tile_start + r);
+                    assert_eq!(leaves_lockstep[r], want, "lockstep t{t} row {}", tile_start + r);
+                    assert_eq!(leaves_f32[r], want, "lockstep-f32 t{t} row {}", tile_start + r);
                 }
             }
-            tile_start += tile_rows;
+            tile_start += TILE_ROWS;
         }
     }
 
     #[test]
-    fn batch_shapes() {
+    fn batch_shapes_and_kernel_parity() {
         let f = forest();
         let ds = shuttle_like(50, 23);
         let rows = &ds.features[..10 * ds.n_features];
@@ -334,6 +529,11 @@ mod tests {
         assert_eq!(flint_proba_batch(&f, rows).len(), 10 * f.n_classes);
         assert_eq!(int_fixed_batch(&f, rows).len(), 10 * f.n_classes);
         assert!(float_proba_batch(&f, &[]).is_empty());
+        for kernel in TraversalKernel::all() {
+            assert_eq!(float_proba_batch(&f, rows), float_proba_batch_with(&f, rows, kernel));
+            assert_eq!(flint_proba_batch(&f, rows), flint_proba_batch_with(&f, rows, kernel));
+            assert_eq!(int_fixed_batch(&f, rows), int_fixed_batch_with(&f, rows, kernel));
+        }
     }
 
     #[test]
@@ -341,6 +541,14 @@ mod tests {
     fn ragged_batch_rejected() {
         let f = forest();
         int_fixed_batch(&f, &[1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn kernel_names() {
+        assert_eq!(TraversalKernel::all().len(), 2);
+        assert_eq!(TraversalKernel::Branchy.name(), "branchy");
+        assert_eq!(TraversalKernel::Branchless.name(), "branchless");
+        assert_eq!(TraversalKernel::default(), TraversalKernel::Branchless);
     }
 
     #[test]

@@ -3,37 +3,77 @@
 //! Two layouts coexist:
 //! * **SoA columns** (`feature`/`thresh_*`/`left`/`right`) — the
 //!   analysis-friendly form used by the simulator tracer and the XLA
-//!   packer ([`crate::runtime`]).
-//! * **AoS hot nodes** ([`NodeF32`]/[`NodeOrd`], 16 bytes each) — the
-//!   traversal hot path. A branchy tree walk touches nodes in a random
-//!   pattern; packing `(feature, threshold, left, right)` into one
-//!   16-byte struct means each visited node costs a single cache line
-//!   instead of four (§Perf: this alone bought ~2.4x on the 50-tree
-//!   shuttle model).
+//!   packer ([`crate::runtime`]). Leaves keep the [`LEAF`] sentinel and
+//!   an explicit `right` column here.
+//! * **AoS hot nodes** ([`Node8`], 8 bytes each) — the traversal hot
+//!   path. A tree walk touches nodes in a random pattern; packing
+//!   `(threshold, feature, left-child)` into one 8-byte struct doubles
+//!   the nodes per cache line over the seed's 16-byte form (§Perf in
+//!   `DESIGN.md`). The `right` pointer is gone entirely: every compiled
+//!   tree is canonicalized to the **child-adjacent** encoding
+//!   (`right = left + 1` always), so one index plus the comparison bit
+//!   addresses both children — `next = left + (x > threshold)` — which
+//!   is the arithmetic, predicated descent the branchless batch kernel
+//!   ([`super::batch`]) is built on.
+//!
+//! ## The 8-byte node encoding
+//!
+//! | field | branch                         | leaf                        |
+//! |-------|--------------------------------|-----------------------------|
+//! | `tw`  | threshold word (see below)     | payload row index           |
+//! | `ff`  | feature index (bit 15 clear)   | [`LEAF_BIT`] (feature bits 0)|
+//! | `left`| tree-local left-child index    | tree-local **own** index    |
+//!
+//! `tw` holds the ordered-u32 threshold in `nodes_ord` and the raw f32
+//! bits in `nodes_f32`. Leaves **self-loop**: `left` points at the leaf
+//! itself and the descent step is masked to zero by the leaf bit, so a
+//! lane that reaches its leaf early simply parks there while the other
+//! lanes keep walking — the trick that lets the batch kernel run a
+//! fixed, data-independent trip count (`tree_depths[t]`) with no
+//! leaf-sentinel branch. The payload rides in the threshold slot, which
+//! a parked lane never meaningfully compares against (the compare still
+//! executes, but its result is masked by the leaf bit).
 
 use crate::flint::ordered_u32;
 use crate::ir::{Model, ModelKind, Node};
 use crate::quant::prob_to_fixed;
 use std::collections::VecDeque;
 
-/// Sentinel feature index marking a leaf node.
+/// Sentinel feature index marking a leaf node (SoA columns only; the
+/// packed [`Node8`] form uses [`LEAF_BIT`]).
 pub const LEAF: u32 = u32::MAX;
+
+/// Leaf flag bit of [`Node8::ff`].
+pub const LEAF_BIT: u16 = 0x8000;
+
+/// Mask selecting the feature-index bits of [`Node8::ff`].
+pub const FEATURE_MASK: u16 = 0x7FFF;
+
+/// Maximum feature count the packed encoding supports (15 index bits).
+pub const MAX_FEATURES: usize = FEATURE_MASK as usize + 1;
+
+/// Maximum nodes per tree the packed encoding supports (`left` is u16).
+pub const MAX_TREE_NODES: usize = u16::MAX as usize + 1;
 
 /// In-memory node ordering of a compiled tree, selected at compile time.
 ///
 /// Both orders produce *identical predictions* (the permutation remaps
 /// child indices consistently and leaf payloads are untouched); they only
-/// change which cache lines a traversal touches:
+/// change which cache lines a traversal touches. Both are canonicalized
+/// to the child-adjacent form (`right = left + 1` for every branch):
 ///
-/// * [`NodeOrder::Depth`] — the IR emission order (pre-order DFS). Left
-///   spines are contiguous, so strongly left-leaning paths stream well.
-/// * [`NodeOrder::Breadth`] — BFS level order. The first few levels of
-///   every tree — the nodes *every* row visits — pack into the first
-///   cache lines of the tree's range, which is the better layout for the
-///   tiled batch kernel where R rows walk the same tree in lockstep.
+/// * [`NodeOrder::Depth`] — pair-packed pre-order DFS: both children of
+///   a branch are allocated together, then the left subtree is laid out
+///   before the right one. Left spines land at stride 2, so strongly
+///   left-leaning paths stream well.
+/// * [`NodeOrder::Breadth`] — BFS level order (naturally child-adjacent).
+///   The first few levels of every tree — the nodes *every* row visits —
+///   pack into the first cache lines of the tree's range, which is the
+///   better layout for the tiled batch kernel where R rows walk the same
+///   tree in lockstep.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
 pub enum NodeOrder {
-    /// Pre-order DFS (the seed layout).
+    /// Pair-packed pre-order DFS.
     #[default]
     Depth,
     /// BFS level order (hot upper levels first).
@@ -53,35 +93,64 @@ impl NodeOrder {
     }
 }
 
-/// Hot-path node, float-threshold form (one cache-line-quarter).
-#[derive(Clone, Copy, Debug)]
+/// Packed 8-byte hot-path node (see the module docs for the encoding).
+/// One cache line holds eight of them.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 #[repr(C)]
-pub struct NodeF32 {
-    pub feature: u32,
-    pub threshold: f32,
-    /// Branch: tree-local child index. Leaf: payload row index.
-    pub left: u32,
-    pub right: u32,
+pub struct Node8 {
+    /// Branch: threshold word (ordered-u32 or f32 bits, by array).
+    /// Leaf: payload row index into `leaf_f32` / `leaf_u32`.
+    pub tw: u32,
+    /// Feature index ([`FEATURE_MASK`] bits) | [`LEAF_BIT`].
+    pub ff: u16,
+    /// Branch: tree-local left-child index (`right = left + 1`).
+    /// Leaf: tree-local own index (self-loop).
+    pub left: u16,
 }
 
-/// Hot-path node, ordered-u32-threshold form (FlInt/InTreeger walks).
-#[derive(Clone, Copy, Debug)]
-#[repr(C)]
-pub struct NodeOrd {
-    pub feature: u32,
-    pub threshold: u32,
-    pub left: u32,
-    pub right: u32,
+// The whole point of the encoding — a regression here silently halves
+// cache density, so it is a compile error, not a bench note.
+const _: () = assert!(std::mem::size_of::<Node8>() == 8, "Node8 must stay 8 bytes");
+const _: () = assert!(std::mem::align_of::<Node8>() == 4, "Node8 must stay 4-byte aligned");
+
+/// Ordered-u32-threshold node array element (FlInt / InTreeger walks).
+pub type NodeOrd = Node8;
+/// f32-bits-threshold node array element (float baseline walks).
+pub type NodeF32 = Node8;
+
+impl Node8 {
+    #[inline(always)]
+    pub fn is_leaf(self) -> bool {
+        self.ff & LEAF_BIT != 0
+    }
+
+    /// Feature index to load (leaves read feature 0, harmlessly — the
+    /// descent step is masked by [`Self::branch_mask`]).
+    #[inline(always)]
+    pub fn feature_index(self) -> usize {
+        (self.ff & FEATURE_MASK) as usize
+    }
+
+    /// 1 for a branch, 0 for a leaf — the predication mask of the
+    /// branchless descent step `left + ((x > tw) & branch_mask)`.
+    #[inline(always)]
+    pub fn branch_mask(self) -> u32 {
+        (self.ff >> 15) as u32 ^ 1
+    }
 }
 
 /// One forest compiled to flat arrays.
 ///
 /// For node `i` of tree `t` (indices into the per-tree range
-/// `tree_offsets[t] .. tree_offsets[t+1]`):
+/// `tree_offsets[t] .. tree_offsets[t+1]`), in the SoA columns:
 /// * `feature[i] == LEAF` → leaf; `left[i]` is the index of its payload
 ///   row (length `n_classes`) in `leaf_f32` / `leaf_u32`.
 /// * otherwise → branch on `feature[i]` with children `left[i]`/`right[i]`
-///   (tree-local indices), threshold available in all three encodings.
+///   (tree-local indices), threshold available in all encodings — and
+///   `right[i] == left[i] + 1` always (the child-adjacent canonical form).
+///
+/// The AoS arrays `nodes_f32`/`nodes_ord` use the same node indexing with
+/// the packed 8-byte encoding.
 #[derive(Clone, Debug)]
 pub struct CompiledForest {
     pub n_features: usize,
@@ -89,6 +158,9 @@ pub struct CompiledForest {
     pub n_trees: usize,
     /// Start index of each tree's nodes; length `n_trees + 1`.
     pub tree_offsets: Vec<u32>,
+    /// Maximum root-to-leaf depth of each tree — the fixed trip count of
+    /// the branchless batch kernel; length `n_trees`.
+    pub tree_depths: Vec<u32>,
     pub feature: Vec<u32>,
     /// Threshold as f32 (float engine).
     pub thresh_f32: Vec<f32>,
@@ -100,12 +172,105 @@ pub struct CompiledForest {
     pub leaf_f32: Vec<f32>,
     /// Leaf fixed-point values with scale `2^32/n_trees` (integer engine).
     pub leaf_u32: Vec<u32>,
-    /// AoS hot nodes (same indexing as the SoA columns).
+    /// Packed AoS hot nodes, f32-bits thresholds (same indexing as SoA).
     pub nodes_f32: Vec<NodeF32>,
-    /// AoS hot nodes with order-preserved thresholds.
+    /// Packed AoS hot nodes, ordered-u32 thresholds.
     pub nodes_ord: Vec<NodeOrd>,
     /// Node layout this forest was compiled with.
     pub order: NodeOrder,
+}
+
+/// Child-adjacent permutation of one tree (tree-local SoA slices):
+/// returns `order` with `order[new] = old` such that for every branch the
+/// two children land on consecutive new indices (left first).
+///
+/// Relies on the proper-tree shape `Model::validate()` guarantees (every
+/// node reachable from the root through exactly one parent): each node is
+/// then assigned exactly one slot.
+pub(crate) fn child_adjacent_order(
+    feature: &[u32],
+    left: &[u32],
+    right: &[u32],
+    order: NodeOrder,
+) -> Vec<u32> {
+    let n = feature.len();
+    match order {
+        // BFS: children are enqueued back-to-back, so they pop (and get
+        // numbered) consecutively.
+        NodeOrder::Breadth => {
+            let mut out: Vec<u32> = Vec::with_capacity(n);
+            let mut queue: VecDeque<u32> = VecDeque::with_capacity(n);
+            queue.push_back(0);
+            while let Some(old) = queue.pop_front() {
+                out.push(old);
+                if feature[old as usize] != LEAF {
+                    queue.push_back(left[old as usize]);
+                    queue.push_back(right[old as usize]);
+                }
+            }
+            assert_eq!(out.len(), n, "child_adjacent_order: tree is not a proper tree");
+            out
+        }
+        // Pair-packed DFS: both child slots are allocated when their
+        // parent is visited; the left subtree is then visited (and keeps
+        // allocating) before the right one.
+        NodeOrder::Depth => {
+            let mut out = vec![u32::MAX; n];
+            out[0] = 0;
+            let mut next = 1usize;
+            let mut stack: Vec<u32> = vec![0];
+            while let Some(old) = stack.pop() {
+                if feature[old as usize] != LEAF {
+                    let (l, r) = (left[old as usize], right[old as usize]);
+                    assert!(next + 2 <= n, "child_adjacent_order: tree is not a proper tree");
+                    out[next] = l;
+                    out[next + 1] = r;
+                    next += 2;
+                    stack.push(r);
+                    stack.push(l);
+                }
+            }
+            assert_eq!(next, n, "child_adjacent_order: tree is not a proper tree");
+            out
+        }
+    }
+}
+
+/// Pack one tree's tree-local SoA columns straight into child-adjacent
+/// [`Node8`]s — the canonical encoding, shared by the RF and GBT
+/// compilers so the leaf-self-loop / payload-in-`tw` invariants live in
+/// exactly one place. `thresh_words` carries the 32-bit threshold
+/// encoding of the caller's domain (ordered-u32 or f32 bits); `left[i]`
+/// of a [`LEAF`] row must already hold the payload index.
+pub(crate) fn pack_tree(
+    feature: &[u32],
+    thresh_words: &[u32],
+    left: &[u32],
+    right: &[u32],
+    order: NodeOrder,
+) -> Vec<Node8> {
+    let order_vec = child_adjacent_order(feature, left, right, order);
+    let n = order_vec.len();
+    let mut new_of = vec![0u32; n];
+    for (new, &old) in order_vec.iter().enumerate() {
+        new_of[old as usize] = new as u32;
+    }
+    let mut out = Vec::with_capacity(n);
+    for (new, &old) in order_vec.iter().enumerate() {
+        let i = old as usize;
+        if feature[i] == LEAF {
+            out.push(Node8 { tw: left[i], ff: LEAF_BIT, left: new as u16 });
+        } else {
+            let l = new_of[left[i] as usize];
+            debug_assert_eq!(
+                new_of[right[i] as usize],
+                l + 1,
+                "layout pass lost child adjacency"
+            );
+            out.push(Node8 { tw: thresh_words[i], ff: feature[i] as u16, left: l as u16 });
+        }
+    }
+    out
 }
 
 impl CompiledForest {
@@ -116,10 +281,16 @@ impl CompiledForest {
     }
 
     /// Compile a random-forest IR model into the flat layout with an
-    /// explicit node order.
+    /// explicit node order. Either order is canonicalized to the
+    /// child-adjacent form (see [`NodeOrder`]).
     pub fn compile_with(model: &Model, order: NodeOrder) -> CompiledForest {
         assert_eq!(model.kind, ModelKind::RandomForest, "CompiledForest requires an RF model");
         model.validate().expect("model must be valid");
+        assert!(
+            model.n_features <= MAX_FEATURES,
+            "packed node encoding supports at most {MAX_FEATURES} features, model has {}",
+            model.n_features
+        );
         let n_trees = model.trees.len();
 
         let mut out = CompiledForest {
@@ -127,6 +298,7 @@ impl CompiledForest {
             n_classes: model.n_classes,
             n_trees,
             tree_offsets: Vec::with_capacity(n_trees + 1),
+            tree_depths: model.trees.iter().map(|t| t.depth() as u32).collect(),
             feature: Vec::new(),
             thresh_f32: Vec::new(),
             thresh_ord: Vec::new(),
@@ -140,6 +312,11 @@ impl CompiledForest {
         };
 
         for tree in &model.trees {
+            assert!(
+                tree.nodes.len() <= MAX_TREE_NODES,
+                "packed node encoding supports at most {MAX_TREE_NODES} nodes per tree, tree has {}",
+                tree.nodes.len()
+            );
             out.tree_offsets.push(out.feature.len() as u32);
             for node in &tree.nodes {
                 match node {
@@ -164,26 +341,8 @@ impl CompiledForest {
             }
         }
         out.tree_offsets.push(out.feature.len() as u32);
-        if order == NodeOrder::Breadth {
-            out.reorder_breadth_first();
-        }
-        // Build the AoS hot nodes from the SoA columns.
-        out.nodes_f32 = (0..out.feature.len())
-            .map(|i| NodeF32 {
-                feature: out.feature[i],
-                threshold: out.thresh_f32[i],
-                left: out.left[i],
-                right: out.right[i],
-            })
-            .collect();
-        out.nodes_ord = (0..out.feature.len())
-            .map(|i| NodeOrd {
-                feature: out.feature[i],
-                threshold: out.thresh_ord[i],
-                left: out.left[i],
-                right: out.right[i],
-            })
-            .collect();
+        out.canonicalize_child_adjacent();
+        out.build_packed();
         out
     }
 
@@ -192,14 +351,15 @@ impl CompiledForest {
         self.feature.len()
     }
 
-    /// Permute every tree's SoA columns into BFS level order.
+    /// Permute every tree's SoA columns into the child-adjacent form of
+    /// [`Self::order`].
     ///
     /// Branch child indices are remapped through the permutation; leaf
     /// payload indices (`left` of a LEAF node) address the leaf arrays,
     /// not nodes, and are carried over untouched — so traversal reaches
     /// bit-identical leaf payloads in either order. The root keeps local
-    /// index 0 (BFS starts there), which `walk_*` relies on.
-    fn reorder_breadth_first(&mut self) {
+    /// index 0, which `walk_*` relies on.
+    fn canonicalize_child_adjacent(&mut self) {
         for t in 0..self.n_trees {
             let lo = self.tree_offsets[t] as usize;
             let hi = self.tree_offsets[t + 1] as usize;
@@ -207,32 +367,13 @@ impl CompiledForest {
             if n <= 1 {
                 continue;
             }
-            // order[new] = old (tree-local indices).
-            let mut order: Vec<u32> = Vec::with_capacity(n);
-            let mut seen = vec![false; n];
-            let mut queue: VecDeque<u32> = VecDeque::with_capacity(n);
-            queue.push_back(0);
-            seen[0] = true;
-            while let Some(old) = queue.pop_front() {
-                order.push(old);
-                let i = lo + old as usize;
-                if self.feature[i] != LEAF {
-                    for child in [self.left[i], self.right[i]] {
-                        if !seen[child as usize] {
-                            seen[child as usize] = true;
-                            queue.push_back(child);
-                        }
-                    }
-                }
-            }
-            // Defensive: a validated model has no unreachable nodes, but
-            // keep any that exist (in original relative order) so the
-            // permutation stays total.
-            for (old, s) in seen.iter().enumerate() {
-                if !s {
-                    order.push(old as u32);
-                }
-            }
+            let order = child_adjacent_order(
+                &self.feature[lo..hi],
+                &self.left[lo..hi],
+                &self.right[lo..hi],
+                self.order,
+            );
+            // new_of[old] = new (tree-local indices).
             let mut new_of = vec![0u32; n];
             for (new, &old) in order.iter().enumerate() {
                 new_of[old as usize] = new as u32;
@@ -251,8 +392,11 @@ impl CompiledForest {
                     left.push(self.left[i]);
                     right.push(self.right[i]);
                 } else {
-                    left.push(new_of[self.left[i] as usize]);
-                    right.push(new_of[self.right[i] as usize]);
+                    let l = new_of[self.left[i] as usize];
+                    let r = new_of[self.right[i] as usize];
+                    debug_assert_eq!(r, l + 1, "layout pass lost child adjacency");
+                    left.push(l);
+                    right.push(r);
                 }
             }
             self.feature[lo..hi].copy_from_slice(&feature);
@@ -260,6 +404,39 @@ impl CompiledForest {
             self.thresh_ord[lo..hi].copy_from_slice(&thresh_ord);
             self.left[lo..hi].copy_from_slice(&left);
             self.right[lo..hi].copy_from_slice(&right);
+        }
+    }
+
+    /// Build the packed 8-byte AoS arrays from the (canonicalized) SoA
+    /// columns, through the one shared [`pack_tree`] encoder. The SoA is
+    /// already child-adjacent, so the permutation `pack_tree` derives is
+    /// the identity (the layout pass is a deterministic fixed point) and
+    /// AoS/SoA indexing stays aligned.
+    fn build_packed(&mut self) {
+        let n = self.feature.len();
+        self.nodes_f32 = Vec::with_capacity(n);
+        self.nodes_ord = Vec::with_capacity(n);
+        for t in 0..self.n_trees {
+            let lo = self.tree_offsets[t] as usize;
+            let hi = self.tree_offsets[t + 1] as usize;
+            let f32_words: Vec<u32> =
+                self.thresh_f32[lo..hi].iter().map(|x| x.to_bits()).collect();
+            let ord = pack_tree(
+                &self.feature[lo..hi],
+                &self.thresh_ord[lo..hi],
+                &self.left[lo..hi],
+                &self.right[lo..hi],
+                self.order,
+            );
+            let f32n = pack_tree(
+                &self.feature[lo..hi],
+                &f32_words,
+                &self.left[lo..hi],
+                &self.right[lo..hi],
+                self.order,
+            );
+            self.nodes_ord.extend(ord);
+            self.nodes_f32.extend(f32n);
         }
     }
 
@@ -276,12 +453,16 @@ impl CompiledForest {
         let nodes = &self.nodes_f32;
         let mut i = base;
         loop {
-            let n = unsafe { nodes.get_unchecked(i) };
-            if n.feature == LEAF {
-                return n.left;
+            let n = unsafe { *nodes.get_unchecked(i) };
+            if n.is_leaf() {
+                return n.tw;
             }
-            let go_left = unsafe { *row.get_unchecked(n.feature as usize) } <= n.threshold;
-            i = base + if go_left { n.left } else { n.right } as usize;
+            // Literal negation of `<=`-goes-left (not `>`): identical for
+            // finite values, and preserves the seed's NaN routing for
+            // out-of-contract inputs (NaN fails both compares).
+            let go_right =
+                !(unsafe { *row.get_unchecked(n.feature_index()) } <= f32::from_bits(n.tw));
+            i = base + n.left as usize + go_right as usize;
         }
     }
 
@@ -294,12 +475,12 @@ impl CompiledForest {
         let nodes = &self.nodes_ord;
         let mut i = base;
         loop {
-            let n = unsafe { nodes.get_unchecked(i) };
-            if n.feature == LEAF {
-                return n.left;
+            let n = unsafe { *nodes.get_unchecked(i) };
+            if n.is_leaf() {
+                return n.tw;
             }
-            let go_left = unsafe { *row_ord.get_unchecked(n.feature as usize) } <= n.threshold;
-            i = base + if go_left { n.left } else { n.right } as usize;
+            let go_right = unsafe { *row_ord.get_unchecked(n.feature_index()) } > n.tw;
+            i = base + n.left as usize + go_right as usize;
         }
     }
 }
@@ -321,11 +502,66 @@ mod tests {
         let c = CompiledForest::compile(&m);
         assert_eq!(c.n_trees, 6);
         assert_eq!(c.tree_offsets.len(), 7);
+        assert_eq!(c.tree_depths.len(), 6);
         assert_eq!(c.n_nodes(), m.n_nodes());
         assert_eq!(c.leaf_f32.len(), m.n_leaves() * m.n_classes);
         assert_eq!(c.leaf_u32.len(), c.leaf_f32.len());
         assert_eq!(c.feature.len(), c.thresh_f32.len());
         assert_eq!(c.feature.len(), c.left.len());
+        assert_eq!(c.nodes_f32.len(), c.n_nodes());
+        assert_eq!(c.nodes_ord.len(), c.n_nodes());
+        for (t, tree) in m.trees.iter().enumerate() {
+            assert_eq!(c.tree_depths[t] as usize, tree.depth());
+        }
+    }
+
+    #[test]
+    fn node8_is_8_bytes() {
+        assert_eq!(std::mem::size_of::<Node8>(), 8);
+        assert_eq!(std::mem::size_of::<NodeOrd>(), 8);
+        assert_eq!(std::mem::size_of::<NodeF32>(), 8);
+    }
+
+    /// The canonical invariant of the compiled form: every branch's
+    /// children are adjacent (`right == left + 1`) in both orders, every
+    /// packed leaf self-loops carrying its payload in `tw`, and SoA/AoS
+    /// agree node-for-node.
+    #[test]
+    fn child_adjacent_invariant_both_orders() {
+        let m = model();
+        for order in NodeOrder::all() {
+            let c = CompiledForest::compile_with(&m, order);
+            for t in 0..c.n_trees {
+                let lo = c.tree_offsets[t] as usize;
+                let hi = c.tree_offsets[t + 1] as usize;
+                for i in lo..hi {
+                    let local = (i - lo) as u32;
+                    if c.feature[i] == LEAF {
+                        for nodes in [&c.nodes_f32, &c.nodes_ord] {
+                            assert!(nodes[i].is_leaf());
+                            assert_eq!(nodes[i].tw, c.left[i], "payload in tw");
+                            assert_eq!(nodes[i].left as u32, local, "leaf self-loop");
+                            assert_eq!(nodes[i].branch_mask(), 0);
+                            assert_eq!(nodes[i].feature_index(), 0, "leaf reads feature 0");
+                        }
+                    } else {
+                        assert_eq!(c.right[i], c.left[i] + 1, "{order:?} tree {t} node {local}");
+                        // Both children inside the tree — the implied
+                        // right child (left + 1) is the bound the
+                        // unchecked walker indexing relies on.
+                        assert!((c.left[i] as usize) + 1 < hi - lo, "children inside tree");
+                        for nodes in [&c.nodes_f32, &c.nodes_ord] {
+                            assert!(!nodes[i].is_leaf());
+                            assert_eq!(nodes[i].branch_mask(), 1);
+                            assert_eq!(nodes[i].feature_index() as u32, c.feature[i]);
+                            assert_eq!(nodes[i].left as u32, c.left[i]);
+                        }
+                        assert_eq!(c.nodes_ord[i].tw, c.thresh_ord[i]);
+                        assert_eq!(f32::from_bits(c.nodes_f32[i].tw), c.thresh_f32[i]);
+                    }
+                }
+            }
+        }
     }
 
     #[test]
@@ -358,7 +594,8 @@ mod tests {
         // Same leaf arrays (payloads are not permuted)...
         assert_eq!(depth.leaf_f32, breadth.leaf_f32);
         assert_eq!(depth.leaf_u32, breadth.leaf_u32);
-        // ...but a genuinely different node ordering somewhere.
+        // ...but a genuinely different node ordering somewhere (pair-packed
+        // DFS and BFS diverge once some depth-2 node has grandchildren).
         assert_ne!(
             (&depth.feature, &depth.left),
             (&breadth.feature, &breadth.left),
@@ -376,20 +613,20 @@ mod tests {
     }
 
     #[test]
-    fn breadth_order_packs_roots_first() {
-        // In BFS order, node 1 of any multi-node tree is a child of the
-        // root (depth order would put the root's left subtree there, so
-        // node 1 is the same — but node 2 differs for depth>1 trees:
-        // BFS puts the root's *right* child at 2).
+    fn both_orders_pack_roots_children_first() {
+        // Child-adjacent canonical form: the root's children occupy local
+        // slots 1 and 2 in *both* orders (pairs are allocated root-first).
         let m = model();
-        let b = CompiledForest::compile_with(&m, NodeOrder::Breadth);
-        for t in 0..b.n_trees {
-            let lo = b.tree_offsets[t] as usize;
-            if b.feature[lo] == LEAF {
-                continue; // single-node tree
+        for order in NodeOrder::all() {
+            let c = CompiledForest::compile_with(&m, order);
+            for t in 0..c.n_trees {
+                let lo = c.tree_offsets[t] as usize;
+                if c.feature[lo] == LEAF {
+                    continue; // single-node tree
+                }
+                assert_eq!(c.left[lo], 1, "tree {t}: root's left child at slot 1");
+                assert_eq!(c.right[lo], 2, "tree {t}: root's right child at slot 2");
             }
-            assert_eq!(b.left[lo], 1, "tree {t}: root's left child is BFS slot 1");
-            assert_eq!(b.right[lo], 2, "tree {t}: root's right child is BFS slot 2");
         }
     }
 

@@ -12,9 +12,12 @@
 //!
 //! The batched results are **bit-identical** to the per-row results for
 //! every variant (see the parity invariant in [`super::batch`] and the
-//! `tests/batch_parity.rs` suite).
+//! `tests/batch_parity.rs` suite). Each engine additionally carries a
+//! [`TraversalKernel`] selecting the branchy or the predicated
+//! branchless tile walk — also a pure performance knob (the serving
+//! coordinator auto-calibrates it per model at startup).
 
-use super::batch;
+use super::batch::{self, TraversalKernel};
 use super::compiled::{CompiledForest, NodeOrder};
 use crate::ir::{argmax, Model};
 use crate::quant::fixed_to_prob;
@@ -93,6 +96,11 @@ pub trait Engine: Send + Sync {
     fn variant(&self) -> Variant;
     fn n_classes(&self) -> usize;
     fn n_features(&self) -> usize;
+    /// Tile-walk kernel the batched methods use (bit-identical results
+    /// either way; a pure performance knob).
+    fn kernel(&self) -> TraversalKernel;
+    /// Select the tile-walk kernel for subsequent batched calls.
+    fn set_kernel(&mut self, kernel: TraversalKernel);
 }
 
 // ---------------------------------------------------------------------------
@@ -100,6 +108,7 @@ pub trait Engine: Send + Sync {
 /// Baseline engine: float compares, float accumulation.
 pub struct FloatEngine {
     forest: CompiledForest,
+    kernel: TraversalKernel,
 }
 
 impl FloatEngine {
@@ -109,7 +118,10 @@ impl FloatEngine {
 
     /// Compile with an explicit node layout (see [`NodeOrder`]).
     pub fn compile_with(model: &Model, order: NodeOrder) -> FloatEngine {
-        FloatEngine { forest: CompiledForest::compile_with(model, order) }
+        FloatEngine {
+            forest: CompiledForest::compile_with(model, order),
+            kernel: TraversalKernel::default(),
+        }
     }
 
     pub fn forest(&self) -> &CompiledForest {
@@ -144,10 +156,16 @@ impl Engine for FloatEngine {
         argmax(&self.accumulate(row))
     }
     fn predict_batch(&self, rows: &[f32]) -> Vec<u32> {
-        batch::argmax_rows(&batch::float_proba_batch(&self.forest, rows), self.forest.n_classes)
+        batch::argmax_rows(
+            &batch::float_proba_batch_with(&self.forest, rows, self.kernel),
+            self.forest.n_classes,
+        )
     }
     fn predict_proba_batch(&self, rows: &[f32]) -> Vec<Vec<f32>> {
-        batch::split_rows(batch::float_proba_batch(&self.forest, rows), self.forest.n_classes)
+        batch::split_rows(
+            batch::float_proba_batch_with(&self.forest, rows, self.kernel),
+            self.forest.n_classes,
+        )
     }
     fn variant(&self) -> Variant {
         Variant::Float
@@ -158,6 +176,12 @@ impl Engine for FloatEngine {
     fn n_features(&self) -> usize {
         self.forest.n_features
     }
+    fn kernel(&self) -> TraversalKernel {
+        self.kernel
+    }
+    fn set_kernel(&mut self, kernel: TraversalKernel) {
+        self.kernel = kernel;
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -165,6 +189,7 @@ impl Engine for FloatEngine {
 /// FlInt engine: integer threshold compares, float accumulation.
 pub struct FlIntEngine {
     forest: CompiledForest,
+    kernel: TraversalKernel,
 }
 
 impl FlIntEngine {
@@ -174,7 +199,10 @@ impl FlIntEngine {
 
     /// Compile with an explicit node layout (see [`NodeOrder`]).
     pub fn compile_with(model: &Model, order: NodeOrder) -> FlIntEngine {
-        FlIntEngine { forest: CompiledForest::compile_with(model, order) }
+        FlIntEngine {
+            forest: CompiledForest::compile_with(model, order),
+            kernel: TraversalKernel::default(),
+        }
     }
 
     pub fn forest(&self) -> &CompiledForest {
@@ -213,10 +241,16 @@ impl Engine for FlIntEngine {
         argmax(&self.accumulate(row))
     }
     fn predict_batch(&self, rows: &[f32]) -> Vec<u32> {
-        batch::argmax_rows(&batch::flint_proba_batch(&self.forest, rows), self.forest.n_classes)
+        batch::argmax_rows(
+            &batch::flint_proba_batch_with(&self.forest, rows, self.kernel),
+            self.forest.n_classes,
+        )
     }
     fn predict_proba_batch(&self, rows: &[f32]) -> Vec<Vec<f32>> {
-        batch::split_rows(batch::flint_proba_batch(&self.forest, rows), self.forest.n_classes)
+        batch::split_rows(
+            batch::flint_proba_batch_with(&self.forest, rows, self.kernel),
+            self.forest.n_classes,
+        )
     }
     fn variant(&self) -> Variant {
         Variant::FlInt
@@ -227,6 +261,12 @@ impl Engine for FlIntEngine {
     fn n_features(&self) -> usize {
         self.forest.n_features
     }
+    fn kernel(&self) -> TraversalKernel {
+        self.kernel
+    }
+    fn set_kernel(&mut self, kernel: TraversalKernel) {
+        self.kernel = kernel;
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -236,6 +276,7 @@ impl Engine for FlIntEngine {
 /// `predict_fixed` perform no floating-point arithmetic at all.
 pub struct IntEngine {
     forest: CompiledForest,
+    kernel: TraversalKernel,
 }
 
 impl IntEngine {
@@ -245,7 +286,10 @@ impl IntEngine {
 
     /// Compile with an explicit node layout (see [`NodeOrder`]).
     pub fn compile_with(model: &Model, order: NodeOrder) -> IntEngine {
-        IntEngine { forest: CompiledForest::compile_with(model, order) }
+        IntEngine {
+            forest: CompiledForest::compile_with(model, order),
+            kernel: TraversalKernel::default(),
+        }
     }
 
     pub fn forest(&self) -> &CompiledForest {
@@ -275,7 +319,10 @@ impl IntEngine {
     /// serving hot path (bit-identical to [`Self::predict_fixed`] per
     /// row; the coordinator's scalar route is built on this).
     pub fn predict_fixed_batch(&self, rows: &[f32]) -> Vec<Vec<u32>> {
-        batch::split_rows(batch::int_fixed_batch(&self.forest, rows), self.forest.n_classes)
+        batch::split_rows(
+            batch::int_fixed_batch_with(&self.forest, rows, self.kernel),
+            self.forest.n_classes,
+        )
     }
 }
 
@@ -287,10 +334,13 @@ impl Engine for IntEngine {
         argmax(&self.predict_fixed(row))
     }
     fn predict_batch(&self, rows: &[f32]) -> Vec<u32> {
-        batch::argmax_rows(&batch::int_fixed_batch(&self.forest, rows), self.forest.n_classes)
+        batch::argmax_rows(
+            &batch::int_fixed_batch_with(&self.forest, rows, self.kernel),
+            self.forest.n_classes,
+        )
     }
     fn predict_proba_batch(&self, rows: &[f32]) -> Vec<Vec<f32>> {
-        batch::int_fixed_batch(&self.forest, rows)
+        batch::int_fixed_batch_with(&self.forest, rows, self.kernel)
             .chunks_exact(self.forest.n_classes)
             .map(|fixed| fixed.iter().map(|&q| fixed_to_prob(q)).collect())
             .collect()
@@ -309,6 +359,12 @@ impl Engine for IntEngine {
     fn n_features(&self) -> usize {
         self.forest.n_features
     }
+    fn kernel(&self) -> TraversalKernel {
+        self.kernel
+    }
+    fn set_kernel(&mut self, kernel: TraversalKernel) {
+        self.kernel = kernel;
+    }
 }
 
 /// Compile the requested variant behind the common trait.
@@ -323,6 +379,19 @@ pub fn compile_variant_with(model: &Model, v: Variant, order: NodeOrder) -> Box<
         Variant::FlInt => Box::new(FlIntEngine::compile_with(model, order)),
         Variant::IntTreeger => Box::new(IntEngine::compile_with(model, order)),
     }
+}
+
+/// Compile the requested variant with an explicit node layout and
+/// tile-walk kernel.
+pub fn compile_variant_full(
+    model: &Model,
+    v: Variant,
+    order: NodeOrder,
+    kernel: TraversalKernel,
+) -> Box<dyn Engine> {
+    let mut e = compile_variant_with(model, v, order);
+    e.set_kernel(kernel);
+    e
 }
 
 #[cfg(test)]
@@ -458,6 +527,27 @@ mod tests {
                 assert_eq!(batched[i], scalar, "{} batch/scalar row {i}", e.variant().name());
                 assert_eq!(scalar, reference.predict(ds.row(i)), "{} vs float", e.variant().name());
             }
+        }
+    }
+
+    /// The kernel is a pure performance knob: switching it changes no
+    /// output bit, on any variant.
+    #[test]
+    fn kernel_is_a_pure_performance_knob() {
+        let (ds, m) = setup(8, 9);
+        let flat = &ds.features[..100 * ds.n_features];
+        for v in Variant::all() {
+            let mut e = compile_variant(&m, v);
+            assert_eq!(e.kernel(), TraversalKernel::Branchless, "default kernel");
+            let branchless_probas = e.predict_proba_batch(flat);
+            let branchless_classes = e.predict_batch(flat);
+            e.set_kernel(TraversalKernel::Branchy);
+            assert_eq!(e.kernel(), TraversalKernel::Branchy);
+            assert_eq!(e.predict_proba_batch(flat), branchless_probas, "{}", v.name());
+            assert_eq!(e.predict_batch(flat), branchless_classes, "{}", v.name());
+            let via_full = compile_variant_full(&m, v, NodeOrder::Breadth, TraversalKernel::Branchy);
+            assert_eq!(via_full.kernel(), TraversalKernel::Branchy);
+            assert_eq!(via_full.predict_batch(flat), branchless_classes, "{}", v.name());
         }
     }
 

@@ -7,68 +7,102 @@
 //! `i64`. Because softmax is monotone per-class rank, `argmax` over
 //! accumulated margins equals `argmax` over probabilities — classification
 //! needs no float ops (probability *reporting* still computes a softmax).
+//!
+//! The traversal machinery is the same packed 8-byte child-adjacent
+//! encoding and generic tile walkers as the RF engines
+//! ([`super::compiled::Node8`] / [`super::batch`]): the GBT forest is
+//! canonicalized to BFS child-adjacent order at compile time, leaves
+//! self-loop with their payload index in the threshold word, and the
+//! batch path picks the branchy or the predicated branchless kernel via
+//! [`TraversalKernel`].
 
-use super::batch::TILE_ROWS;
-use super::compiled::LEAF;
+use super::batch::{
+    accumulate_batch, with_ordered_batch, with_ordered_row, OrdDomain, PackedTrees,
+    TraversalKernel,
+};
+use super::compiled::{pack_tree, Node8, NodeOrder, LEAF, MAX_FEATURES, MAX_TREE_NODES};
 use crate::flint::ordered_u32;
 use crate::ir::{argmax, softmax, Model, ModelKind, Node};
 use crate::quant::{margin_scale, margin_to_fixed, MarginScale};
 
-/// GBT forest compiled to flat arrays with integer margin leaves.
+/// GBT forest compiled to the packed child-adjacent layout with integer
+/// margin leaves.
 pub struct GbtIntEngine {
     n_classes: usize,
     n_features: usize,
     scale: MarginScale,
     tree_offsets: Vec<u32>,
-    feature: Vec<u32>,
-    thresh_ord: Vec<u32>,
-    left: Vec<u32>,
-    right: Vec<u32>,
+    /// Fixed trip count of the branchless kernel, per tree.
+    tree_depths: Vec<u32>,
+    /// Packed 8-byte nodes, ordered-u32 thresholds (leaf payload in `tw`).
+    nodes: Vec<Node8>,
     /// Quantized margins, `n_leaves * n_classes`.
     leaf_q: Vec<i64>,
     /// Quantized base score per class.
     base_q: Vec<i64>,
+    kernel: TraversalKernel,
 }
 
 impl GbtIntEngine {
     pub fn compile(model: &Model) -> GbtIntEngine {
         assert_eq!(model.kind, ModelKind::Gbt, "GbtIntEngine requires a GBT model");
         model.validate().expect("model must be valid");
+        assert!(
+            model.n_features <= MAX_FEATURES,
+            "packed node encoding supports at most {MAX_FEATURES} features, model has {}",
+            model.n_features
+        );
         let scale = margin_scale(model);
         let mut e = GbtIntEngine {
             n_classes: model.n_classes,
             n_features: model.n_features,
             scale,
             tree_offsets: Vec::with_capacity(model.trees.len() + 1),
-            feature: Vec::new(),
-            thresh_ord: Vec::new(),
-            left: Vec::new(),
-            right: Vec::new(),
+            tree_depths: model.trees.iter().map(|t| t.depth() as u32).collect(),
+            nodes: Vec::new(),
             leaf_q: Vec::new(),
             base_q: model.base_score.iter().map(|&b| margin_to_fixed(b, scale)).collect(),
+            kernel: TraversalKernel::default(),
         };
+        // Per-tree scratch SoA in IR order, packed to the BFS
+        // child-adjacent form (same canonical encoding as
+        // `CompiledForest`, shared via `pack_tree`).
+        let mut feature: Vec<u32> = Vec::new();
+        let mut thresh: Vec<u32> = Vec::new();
+        let mut left: Vec<u32> = Vec::new();
+        let mut right: Vec<u32> = Vec::new();
         for tree in &model.trees {
-            e.tree_offsets.push(e.feature.len() as u32);
+            assert!(
+                tree.nodes.len() <= MAX_TREE_NODES,
+                "packed node encoding supports at most {MAX_TREE_NODES} nodes per tree, tree has {}",
+                tree.nodes.len()
+            );
+            e.tree_offsets.push(e.nodes.len() as u32);
+            feature.clear();
+            thresh.clear();
+            left.clear();
+            right.clear();
             for node in &tree.nodes {
                 match node {
-                    Node::Branch { feature, threshold, left, right } => {
-                        e.feature.push(*feature);
-                        e.thresh_ord.push(ordered_u32(*threshold));
-                        e.left.push(*left);
-                        e.right.push(*right);
+                    Node::Branch { feature: f, threshold, left: l, right: r } => {
+                        feature.push(*f);
+                        thresh.push(ordered_u32(*threshold));
+                        left.push(*l);
+                        right.push(*r);
                     }
                     Node::Leaf { values } => {
                         let payload = (e.leaf_q.len() / model.n_classes) as u32;
-                        e.feature.push(LEAF);
-                        e.thresh_ord.push(0);
-                        e.left.push(payload);
-                        e.right.push(0);
+                        feature.push(LEAF);
+                        thresh.push(0);
+                        left.push(payload);
+                        right.push(0);
                         e.leaf_q.extend(values.iter().map(|&v| margin_to_fixed(v, scale)));
                     }
                 }
             }
+            e.nodes.extend(pack_tree(&feature, &thresh, &left, &right, NodeOrder::Breadth));
         }
-        e.tree_offsets.push(e.feature.len() as u32);
+        e.tree_offsets.push(e.nodes.len() as u32);
         e
     }
 
@@ -84,30 +118,48 @@ impl GbtIntEngine {
         self.n_classes
     }
 
+    /// Tile-walk kernel the batched methods use (pure performance knob).
+    pub fn kernel(&self) -> TraversalKernel {
+        self.kernel
+    }
+
+    /// Select the tile-walk kernel for subsequent batched calls.
+    pub fn set_kernel(&mut self, kernel: TraversalKernel) {
+        self.kernel = kernel;
+    }
+
+    fn packed(&self) -> PackedTrees<'_> {
+        PackedTrees {
+            nodes: &self.nodes,
+            tree_offsets: &self.tree_offsets,
+            tree_depths: &self.tree_depths,
+            stride: self.n_features,
+        }
+    }
+
     /// Integer-only accumulated margins.
     pub fn predict_fixed(&self, row: &[f32]) -> Vec<i64> {
-        let mut row_ord = vec![0u32; row.len()];
-        for (b, &x) in row_ord.iter_mut().zip(row) {
-            *b = ordered_u32(x);
-        }
-        let mut acc = self.base_q.clone();
-        for t in 0..self.tree_offsets.len() - 1 {
-            let base = self.tree_offsets[t] as usize;
-            let mut i = base;
-            loop {
-                let f = self.feature[i];
-                if f == LEAF {
-                    let p = self.left[i] as usize * self.n_classes;
-                    for (a, &v) in acc.iter_mut().zip(&self.leaf_q[p..p + self.n_classes]) {
-                        *a += v;
+        assert!(row.len() >= self.n_features);
+        with_ordered_row(row, |row_ord| {
+            let mut acc = self.base_q.clone();
+            for t in 0..self.tree_offsets.len() - 1 {
+                let base = self.tree_offsets[t] as usize;
+                let mut i = base;
+                let payload = loop {
+                    let n = self.nodes[i];
+                    if n.is_leaf() {
+                        break n.tw as usize;
                     }
-                    break;
+                    let go_right = row_ord[n.feature_index()] > n.tw;
+                    i = base + n.left as usize + go_right as usize;
+                };
+                let p = payload * self.n_classes;
+                for (a, &v) in acc.iter_mut().zip(&self.leaf_q[p..p + self.n_classes]) {
+                    *a += v;
                 }
-                let go_left = row_ord[f as usize] <= self.thresh_ord[i];
-                i = base + if go_left { self.left[i] } else { self.right[i] } as usize;
             }
-        }
-        acc
+            acc
+        })
     }
 
     /// Integer-only classification.
@@ -118,17 +170,15 @@ impl GbtIntEngine {
     /// Batched integer-only accumulated margins, one vector per row of a
     /// flat row-major batch.
     ///
-    /// Same tiled execution style as [`crate::inference::batch`]: the
-    /// whole batch is order-transformed once (into that module's shared
-    /// thread-local scratch), then [`TILE_ROWS`] rows walk each tree in
-    /// lockstep. The walk itself is re-implemented here rather than
-    /// reusing `batch::walk_tile_ord` because GBT traversal stays on the
-    /// SoA columns (no AoS node array) and accumulates at the leaf
-    /// in-loop. Accumulation per row stays in ascending tree order
-    /// starting from the base score, so results are bit-identical to
-    /// [`Self::predict_fixed`] (i64 adds are exact).
+    /// Same execution style as the RF engines: the whole batch is
+    /// order-transformed once, then tiles of [`super::batch::TILE_ROWS`]
+    /// rows walk each tree through the shared generic kernel (branchy or predicated
+    /// branchless per [`Self::kernel`]). Accumulation per row stays in
+    /// ascending tree order starting from the base score, so results are
+    /// bit-identical to [`Self::predict_fixed`] (i64 adds are exact).
     pub fn predict_fixed_batch(&self, rows: &[f32]) -> Vec<Vec<i64>> {
         let nf = self.n_features;
+        assert!(nf > 0);
         assert!(
             rows.len() % nf == 0,
             "batch length {} is not a multiple of n_features {}",
@@ -137,50 +187,20 @@ impl GbtIntEngine {
         );
         let n_rows = rows.len() / nf;
         let c = self.n_classes;
-        crate::inference::batch::with_ordered_batch(rows, |rows_ord| {
+        with_ordered_batch(rows, |rows_ord| {
             let mut acc: Vec<i64> = Vec::with_capacity(n_rows * c);
             for _ in 0..n_rows {
                 acc.extend_from_slice(&self.base_q);
             }
-            let n_trees = self.tree_offsets.len() - 1;
-            let mut tile_start = 0;
-            while tile_start < n_rows {
-                let tile_rows = TILE_ROWS.min(n_rows - tile_start);
-                for t in 0..n_trees {
-                    let base = self.tree_offsets[t] as usize;
-                    let mut idx = [base; TILE_ROWS];
-                    let mut done = [false; TILE_ROWS];
-                    let mut remaining = tile_rows;
-                    while remaining > 0 {
-                        for r in 0..tile_rows {
-                            if done[r] {
-                                continue;
-                            }
-                            let i = idx[r];
-                            let f = self.feature[i];
-                            if f == LEAF {
-                                let p = self.left[i] as usize * c;
-                                let row_acc =
-                                    &mut acc[(tile_start + r) * c..(tile_start + r + 1) * c];
-                                for (a, &v) in row_acc.iter_mut().zip(&self.leaf_q[p..p + c]) {
-                                    *a += v;
-                                }
-                                done[r] = true;
-                                remaining -= 1;
-                            } else {
-                                let x = rows_ord[(tile_start + r) * nf + f as usize];
-                                idx[r] = base
-                                    + if x <= self.thresh_ord[i] {
-                                        self.left[i]
-                                    } else {
-                                        self.right[i]
-                                    } as usize;
-                            }
-                        }
-                    }
-                }
-                tile_start += tile_rows;
-            }
+            accumulate_batch::<OrdDomain, i64>(
+                &self.packed(),
+                rows_ord,
+                n_rows,
+                c,
+                &self.leaf_q,
+                self.kernel,
+                &mut acc,
+            );
             acc.chunks_exact(c).map(|row| row.to_vec()).collect()
         })
     }
@@ -237,17 +257,49 @@ mod tests {
     }
 
     #[test]
-    fn batched_margins_bit_identical_to_scalar() {
+    fn batched_margins_bit_identical_to_scalar_both_kernels() {
         let ds = shuttle_like(800, 15);
         let m = train_gbt(&ds, &GbtParams { n_rounds: 4, max_depth: 4, ..Default::default() }, 5);
+        let mut e = GbtIntEngine::compile(&m);
+        for kernel in TraversalKernel::all() {
+            e.set_kernel(kernel);
+            for n in [1usize, 7, 8, 9, 100] {
+                let flat = &ds.features[..n * ds.n_features];
+                let batched = e.predict_fixed_batch(flat);
+                let classes = e.predict_batch(flat);
+                for i in 0..n {
+                    assert_eq!(
+                        batched[i],
+                        e.predict_fixed(ds.row(i)),
+                        "{} margins row {i} (n={n})",
+                        kernel.name()
+                    );
+                    assert_eq!(
+                        classes[i],
+                        e.predict(ds.row(i)),
+                        "{} class row {i} (n={n})",
+                        kernel.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_nodes_are_child_adjacent() {
+        let ds = shuttle_like(400, 16);
+        let m = train_gbt(&ds, &GbtParams { n_rounds: 3, max_depth: 4, ..Default::default() }, 6);
         let e = GbtIntEngine::compile(&m);
-        for n in [1usize, 7, 8, 9, 100] {
-            let flat = &ds.features[..n * ds.n_features];
-            let batched = e.predict_fixed_batch(flat);
-            let classes = e.predict_batch(flat);
-            for i in 0..n {
-                assert_eq!(batched[i], e.predict_fixed(ds.row(i)), "margins row {i} (n={n})");
-                assert_eq!(classes[i], e.predict(ds.row(i)), "class row {i} (n={n})");
+        for t in 0..e.tree_offsets.len() - 1 {
+            let lo = e.tree_offsets[t] as usize;
+            let hi = e.tree_offsets[t + 1] as usize;
+            for i in lo..hi {
+                let n = e.nodes[i];
+                if n.is_leaf() {
+                    assert_eq!(n.left as usize, i - lo, "leaf self-loop");
+                } else {
+                    assert!((n.left as usize) + 1 < hi - lo, "children inside tree");
+                }
             }
         }
     }

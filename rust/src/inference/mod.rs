@@ -21,17 +21,22 @@
 //! batch pre-transformed to ordered-u32 space once — bit-identical to
 //! the per-row engines and ≥2x faster at serving batch sizes (see
 //! `cargo bench --bench batch_throughput`). [`NodeOrder`] selects the
-//! compiled node layout (depth-first or cache-friendlier breadth-first).
+//! compiled node layout (both canonicalized to the child-adjacent
+//! 8-byte [`compiled::Node8`] encoding), and [`TraversalKernel`] selects
+//! the branchy early-exit walk or the predicated branchless fixed-trip
+//! walk — every combination is bit-identical; they are pure performance
+//! knobs.
 
 pub mod batch;
 pub mod compiled;
 pub mod engines;
 pub mod gbt_int;
 
-pub use batch::TILE_ROWS;
-pub use compiled::{CompiledForest, NodeOrder, LEAF};
+pub use batch::{TraversalKernel, TILE_ROWS};
+pub use compiled::{CompiledForest, Node8, NodeOrder, LEAF};
 pub use engines::{
-    compile_variant, compile_variant_with, Engine, FlIntEngine, FloatEngine, IntEngine, Variant,
+    compile_variant, compile_variant_full, compile_variant_with, Engine, FlIntEngine, FloatEngine,
+    IntEngine, Variant,
 };
 pub use gbt_int::GbtIntEngine;
 

@@ -65,6 +65,8 @@ pub enum IrError {
     LeafNotDistribution { tree: usize, node: usize, sum: f32 },
     Unreachable { tree: usize, node: usize },
     Cycle { tree: usize },
+    /// A node is the child of more than one branch (a DAG, not a tree).
+    SharedChild { tree: usize, node: usize },
 }
 
 impl std::fmt::Display for IrError {
@@ -94,20 +96,33 @@ impl Tree {
     }
 
     /// Maximum root-to-leaf depth (root = depth 0).
+    ///
+    /// Iterative (explicit-stack post-order): this is called at engine
+    /// compile time on trees that may legally be chains of tens of
+    /// thousands of nodes, where call-stack recursion would overflow a
+    /// worker thread's stack.
     pub fn depth(&self) -> usize {
-        fn rec(nodes: &[Node], i: usize) -> usize {
-            match &nodes[i] {
-                Node::Leaf { .. } => 0,
+        if self.nodes.is_empty() {
+            return 0;
+        }
+        let mut depth = vec![0usize; self.nodes.len()];
+        // (node, children_done)
+        let mut stack: Vec<(usize, bool)> = vec![(0, false)];
+        while let Some((i, children_done)) = stack.pop() {
+            match &self.nodes[i] {
+                Node::Leaf { .. } => depth[i] = 0,
                 Node::Branch { left, right, .. } => {
-                    1 + rec(nodes, *left as usize).max(rec(nodes, *right as usize))
+                    if children_done {
+                        depth[i] = 1 + depth[*left as usize].max(depth[*right as usize]);
+                    } else {
+                        stack.push((i, true));
+                        stack.push((*left as usize, false));
+                        stack.push((*right as usize, false));
+                    }
                 }
             }
         }
-        if self.nodes.is_empty() {
-            0
-        } else {
-            rec(&self.nodes, 0)
-        }
+        depth[0]
     }
 }
 
@@ -158,6 +173,12 @@ impl Model {
             }
             let n = tree.nodes.len();
             let mut seen = vec![false; n];
+            // Incoming child-edge count per node: a *tree* (what every
+            // compiled layout, and the child-adjacent canonicalization in
+            // particular, relies on) has exactly one parent per non-root
+            // node and none for the root — shared children (DAGs) and
+            // back-edges are rejected below.
+            let mut refs = vec![0usize; n];
             // Iterative DFS from the root; also detects cycles via a bound
             // on visited edges.
             let mut stack = vec![0usize];
@@ -179,6 +200,7 @@ impl Model {
                             if *c as usize >= n {
                                 return Err(IrError::BadChild { tree: ti, node: i });
                             }
+                            refs[*c as usize] += 1;
                             stack.push(*c as usize);
                         }
                         visited_edges += 2;
@@ -201,6 +223,15 @@ impl Model {
             }
             if let Some(node) = seen.iter().position(|&s| !s) {
                 return Err(IrError::Unreachable { tree: ti, node });
+            }
+            // Proper-tree shape: nothing may point back at the root (a
+            // small cycle the edge bound can miss), and no node may have
+            // two parents.
+            if refs[0] > 0 {
+                return Err(IrError::Cycle { tree: ti });
+            }
+            if let Some(node) = refs.iter().position(|&r| r > 1) {
+                return Err(IrError::SharedChild { tree: ti, node });
             }
         }
         Ok(())
@@ -333,6 +364,50 @@ mod tests {
         let mut m = stump();
         m.trees[0].nodes.push(Node::Leaf { values: vec![1.0, 0.0] });
         assert!(matches!(m.validate(), Err(IrError::Unreachable { .. })));
+    }
+
+    #[test]
+    fn validate_catches_shared_child() {
+        // A DAG, not a tree: both branch arms point at the same leaf.
+        // Every node is reachable and acyclic, so only the single-parent
+        // check can reject it — the compiled child-adjacent layout
+        // depends on this being an error.
+        let m = Model {
+            kind: ModelKind::RandomForest,
+            n_features: 1,
+            n_classes: 2,
+            trees: vec![Tree {
+                nodes: vec![
+                    Node::Branch { feature: 0, threshold: 0.5, left: 1, right: 1 },
+                    Node::Leaf { values: vec![0.5, 0.5] },
+                ],
+            }],
+            base_score: vec![0.0, 0.0],
+        };
+        assert_eq!(
+            m.validate(),
+            Err(IrError::SharedChild { tree: 0, node: 1 })
+        );
+    }
+
+    #[test]
+    fn validate_catches_root_backedge() {
+        // left points back at the root: a 2-cycle small enough to slip
+        // past the visited-edge bound; the root-has-no-parent check
+        // rejects it.
+        let m = Model {
+            kind: ModelKind::RandomForest,
+            n_features: 1,
+            n_classes: 2,
+            trees: vec![Tree {
+                nodes: vec![
+                    Node::Branch { feature: 0, threshold: 0.5, left: 0, right: 1 },
+                    Node::Leaf { values: vec![0.5, 0.5] },
+                ],
+            }],
+            base_score: vec![0.0, 0.0],
+        };
+        assert_eq!(m.validate(), Err(IrError::Cycle { tree: 0 }));
     }
 
     #[test]

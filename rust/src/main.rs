@@ -164,6 +164,7 @@ fn cmd_codegen(args: &Args) {
     let layout = match args.get("layout").unwrap_or("ifelse") {
         "ifelse" => Layout::IfElse,
         "native" => Layout::Native,
+        "native-predicated" => Layout::NativePredicated,
         other => panic!("unknown layout '{other}'"),
     };
     let src = codegen::generate(&model, layout, variant);
@@ -236,6 +237,7 @@ fn cmd_serve(args: &Args) {
     }
     let config = ServerConfig {
         n_workers: args.usize_or("workers", 1),
+        auto_calibrate: args.flag("calibrate"),
         ..ServerConfig::default()
     };
     let server = InferenceServer::start(&model, artifacts, config);
@@ -264,10 +266,10 @@ fn cmd_tablei() {
 const USAGE: &str = "usage: intreeger <train|import|codegen|predict|simulate|serve|tablei> [--flags]\n\
   train    --dataset shuttle|esa|csv:PATH [--rows N] [--trees N] [--depth D] [--gbt] [--seed S] [--out model.json]\n\
   import   --file dump.txt [--format lightgbm|xgboost] [--features N --classes N] [--out model.json]\n\
-  codegen  --model model.json [--variant float|flint|intreeger] [--layout ifelse|native] [--out model.c]\n\
+  codegen  --model model.json [--variant float|flint|intreeger] [--layout ifelse|native|native-predicated] [--out model.c]\n\
   predict  --model model.json --csv data.csv [--engine float|flint|int]\n\
   simulate --model model.json [--dataset ...]\n\
-  serve    --model model.json [--artifacts DIR] [--requests N] [--workers W]\n\
+  serve    --model model.json [--artifacts DIR] [--requests N] [--workers W] [--calibrate]\n\
   tablei\n";
 
 fn main() {

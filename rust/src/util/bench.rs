@@ -2,14 +2,54 @@
 //! build). Used by every `cargo bench` target (declared with
 //! `harness = false` in Cargo.toml).
 //!
-//! Methodology: warmup runs, then `reps` timed runs; reports min / median
-//! / mean. A `black_box` guard prevents the optimizer from deleting the
-//! measured work.
+//! Methodology: warmup runs, then `reps` timed runs; reports
+//! **min-of-k** as the headline (the least-noise estimator of the true
+//! cost on a time-shared machine — every run's noise is additive), with
+//! median and mean alongside. Counts are configurable per invocation
+//! ([`BenchOpts`]) and overridable from the environment
+//! (`INTREEGER_BENCH_WARMUP` / `INTREEGER_BENCH_REPS`), so CI smoke runs
+//! and serious sweeps share one binary. A `black_box` guard prevents the
+//! optimizer from deleting the measured work.
 
 use std::time::Instant;
 
 /// Optimizer barrier (std::hint::black_box re-export for benches).
 pub use std::hint::black_box;
+
+/// Warmup / repetition counts for one measurement.
+///
+/// The defaults (5 warmup, 15 timed reps) replace the seed's `(2, 7)`
+/// ad-hoc counts, which were too small for trustworthy speedup cells:
+/// with 7 samples the median still carries scheduler noise, and two
+/// warmups don't reliably fault in the node arrays and scratch buffers.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchOpts {
+    /// Untimed runs before measurement (page/cache/branch warmup).
+    pub warmup: usize,
+    /// Timed runs; min/median/mean are computed over these.
+    pub reps: usize,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts { warmup: 5, reps: 15 }
+    }
+}
+
+impl BenchOpts {
+    /// Defaults, overridden by `INTREEGER_BENCH_WARMUP` /
+    /// `INTREEGER_BENCH_REPS` when set (clamped to at least 1 rep).
+    pub fn from_env() -> BenchOpts {
+        fn var(key: &str, default: usize) -> usize {
+            std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+        }
+        let d = BenchOpts::default();
+        BenchOpts {
+            warmup: var("INTREEGER_BENCH_WARMUP", d.warmup),
+            reps: var("INTREEGER_BENCH_REPS", d.reps).max(1),
+        }
+    }
+}
 
 /// Result of one measurement.
 #[derive(Clone, Copy, Debug)]
@@ -22,27 +62,35 @@ pub struct Measurement {
 }
 
 impl Measurement {
+    /// Headline per-item cost: min-of-k.
     pub fn per_item_ns(&self) -> f64 {
+        self.min_ns / self.items.max(1) as f64
+    }
+
+    /// Median-based per-item cost (noise-inclusive; kept for context).
+    pub fn per_item_ns_median(&self) -> f64 {
         self.median_ns / self.items.max(1) as f64
     }
 
+    /// Headline throughput: items/s at the min-of-k run time.
     pub fn throughput_per_s(&self) -> f64 {
-        if self.median_ns == 0.0 {
+        if self.min_ns == 0.0 {
             0.0
         } else {
-            self.items as f64 / (self.median_ns * 1e-9)
+            self.items as f64 / (self.min_ns * 1e-9)
         }
     }
 }
 
-/// Time `f` (which processes `items` work units per call): `warmup`
-/// untimed runs, then `reps` timed runs.
-pub fn measure<F: FnMut()>(warmup: usize, reps: usize, items: u64, mut f: F) -> Measurement {
-    for _ in 0..warmup {
+/// Time `f` (which processes `items` work units per call) with explicit
+/// warmup/rep counts.
+pub fn measure_opts<F: FnMut()>(opts: BenchOpts, items: u64, mut f: F) -> Measurement {
+    for _ in 0..opts.warmup {
         f();
     }
+    let reps = opts.reps.max(1);
     let mut samples: Vec<f64> = Vec::with_capacity(reps);
-    for _ in 0..reps.max(1) {
+    for _ in 0..reps {
         let t0 = Instant::now();
         f();
         samples.push(t0.elapsed().as_nanos() as f64);
@@ -54,12 +102,21 @@ pub fn measure<F: FnMut()>(warmup: usize, reps: usize, items: u64, mut f: F) -> 
     Measurement { min_ns: min, median_ns: median, mean_ns: mean, items }
 }
 
-/// Print one bench row in a stable, greppable format.
+/// Time `f`: `warmup` untimed runs, then `reps` timed runs (explicit
+/// counts; prefer [`measure_opts`] + [`BenchOpts::from_env`] in benches
+/// so counts are tunable without a rebuild).
+pub fn measure<F: FnMut()>(warmup: usize, reps: usize, items: u64, f: F) -> Measurement {
+    measure_opts(BenchOpts { warmup, reps }, items, f)
+}
+
+/// Print one bench row in a stable, greppable format (min-of-k headline,
+/// median alongside).
 pub fn report(name: &str, m: &Measurement) {
     println!(
-        "bench {name:<44} {:>12.1} ns/item {:>14.0} items/s (median over runs)",
+        "bench {name:<44} {:>12.1} ns/item {:>14.0} items/s (min-of-k; median {:.1} ns/item)",
         m.per_item_ns(),
-        m.throughput_per_s()
+        m.throughput_per_s(),
+        m.per_item_ns_median()
     );
 }
 
@@ -88,9 +145,18 @@ mod tests {
     }
 
     #[test]
-    fn throughput_inverse_of_latency() {
-        let m = Measurement { min_ns: 10.0, median_ns: 100.0, mean_ns: 100.0, items: 10 };
+    fn throughput_inverse_of_min_latency() {
+        let m = Measurement { min_ns: 100.0, median_ns: 200.0, mean_ns: 200.0, items: 10 };
         assert!((m.per_item_ns() - 10.0).abs() < 1e-9);
+        assert!((m.per_item_ns_median() - 20.0).abs() < 1e-9);
         assert!((m.throughput_per_s() - 1e8).abs() < 1.0);
+    }
+
+    #[test]
+    fn opts_defaults_and_env_clamp() {
+        let d = BenchOpts::default();
+        assert!(d.warmup >= 5 && d.reps >= 15, "counts must not regress below the fix");
+        let m = measure_opts(BenchOpts { warmup: 0, reps: 0 }, 1, || {});
+        assert!(m.min_ns >= 0.0); // reps clamped to 1 internally
     }
 }

@@ -1,20 +1,86 @@
-//! Batch-vs-scalar parity suite (ISSUE 1 acceptance): for every engine
-//! variant and both node layouts, the tiled batch kernel must be
-//! **element-wise identical** to the per-row path — including ragged
-//! final tiles (batch sizes 1, R−1, R, R+1) and a batch large enough to
-//! cross many tiles (1000). Probabilities are compared with `assert_eq`
-//! on the raw f32s: the invariant is bit-identity, not closeness.
+//! Batch-vs-scalar parity suite (ISSUE 1 + ISSUE 2 acceptance): for
+//! every engine variant, both node layouts and **both tile-walk kernels**
+//! (branchy early-exit and predicated branchless fixed-trip), the batch
+//! kernel must be **element-wise identical** to the per-row path —
+//! including ragged final tiles (batch sizes 1, R−1, R, R+1) and a batch
+//! large enough to cross many tiles (1000). Probabilities are compared
+//! with `assert_eq` on the raw f32s: the invariant is bit-identity, not
+//! closeness.
+//!
+//! The randomized topology suite additionally sweeps hand-built models
+//! with trees of depth 0..=16 — single-leaf trees, stumps, a
+//! full-depth-16 chain, and random ragged mixtures — plus rows that land
+//! *exactly on* split thresholds, the boundary the `<=`-goes-left /
+//! `>`-goes-right negation must preserve.
 
 use intreeger::data::{esa_like, shuttle_like, synth, SynthSpec};
 use intreeger::inference::{
-    compile_variant_with, Engine, GbtIntEngine, IntEngine, NodeOrder, Variant, TILE_ROWS,
+    compile_variant_with, Engine, GbtIntEngine, IntEngine, NodeOrder, TraversalKernel, Variant,
+    TILE_ROWS,
 };
+use intreeger::ir::{Model, ModelKind, Node, Tree};
 use intreeger::trees::{train_gbt, ForestParams, GbtParams, RandomForest};
+use intreeger::util::Rng;
 
 /// The sweep of batch sizes exercising empty, sub-tile, exact-tile,
 /// tile+1 and many-tile shapes.
 fn batch_sizes() -> [usize; 5] {
     [1, TILE_ROWS - 1, TILE_ROWS, TILE_ROWS + 1, 1000]
+}
+
+/// Assert batch == scalar bit-identically for a set of flat batches,
+/// across variants × layouts × kernels, with the integer variant's fixed
+/// accumulators included. Engines (and the fixed-point oracle, only
+/// needed for the integer variant) compile once per variant × layout,
+/// outside the batch/kernel loops.
+fn assert_parity(model: &Model, batches: &[&[f32]], tag0: &str) {
+    let nf = model.n_features;
+    for variant in Variant::all() {
+        for order in NodeOrder::all() {
+            let mut engine = compile_variant_with(model, variant, order);
+            let fixed_oracle = (variant == Variant::IntTreeger)
+                .then(|| IntEngine::compile_with(model, order));
+            for kernel in TraversalKernel::all() {
+                engine.set_kernel(kernel);
+                let tag = format!("{tag0}/{}/{}/{}", variant.name(), order.name(), kernel.name());
+                for &flat in batches {
+                    assert_eq!(flat.len() % nf, 0);
+                    let n = flat.len() / nf;
+                    let classes = engine.predict_batch(flat);
+                    let probas = engine.predict_proba_batch(flat);
+                    assert_eq!(classes.len(), n, "{tag}: class count");
+                    assert_eq!(probas.len(), n, "{tag}: proba count");
+                    for i in 0..n {
+                        let row = &flat[i * nf..(i + 1) * nf];
+                        assert_eq!(classes[i], engine.predict(row), "{tag}: class row {i} (n={n})");
+                        assert_eq!(
+                            probas[i],
+                            engine.predict_proba(row),
+                            "{tag}: proba row {i} (n={n}) not bit-identical"
+                        );
+                    }
+                    if let Some(oracle) = &fixed_oracle {
+                        let fixed = engine
+                            .predict_fixed_batch(flat)
+                            .expect("integer variant has fixed path");
+                        for i in 0..n {
+                            let row = &flat[i * nf..(i + 1) * nf];
+                            assert_eq!(
+                                fixed[i],
+                                oracle.predict_fixed(row),
+                                "{tag}: fixed row {i} (n={n})"
+                            );
+                        }
+                    } else {
+                        assert!(
+                            engine.predict_fixed_batch(flat).is_none(),
+                            "{tag}: float-accumulating variant must not claim a fixed path"
+                        );
+                    }
+                }
+            }
+        }
+    }
 }
 
 fn rf_parity_on(ds: &intreeger::data::Dataset, n_trees: usize, seed: u64) {
@@ -23,46 +89,11 @@ fn rf_parity_on(ds: &intreeger::data::Dataset, n_trees: usize, seed: u64) {
         &ForestParams { n_trees, max_depth: 6, ..Default::default() },
         seed,
     );
-    for variant in Variant::all() {
-        for order in NodeOrder::all() {
-            let engine = compile_variant_with(&model, variant, order);
-            let tag = format!("{}/{}", variant.name(), order.name());
-            for n in batch_sizes() {
-                let n = n.min(ds.n_rows());
-                let flat = &ds.features[..n * ds.n_features];
-                let classes = engine.predict_batch(flat);
-                let probas = engine.predict_proba_batch(flat);
-                assert_eq!(classes.len(), n, "{tag}: class count");
-                assert_eq!(probas.len(), n, "{tag}: proba count");
-                for i in 0..n {
-                    let row = ds.row(i);
-                    assert_eq!(classes[i], engine.predict(row), "{tag}: class row {i} (n={n})");
-                    assert_eq!(
-                        probas[i],
-                        engine.predict_proba(row),
-                        "{tag}: proba row {i} (n={n}) not bit-identical"
-                    );
-                }
-                if variant == Variant::IntTreeger {
-                    let fixed =
-                        engine.predict_fixed_batch(flat).expect("integer variant has fixed path");
-                    let oracle = IntEngine::compile_with(&model, order);
-                    for i in 0..n {
-                        assert_eq!(
-                            fixed[i],
-                            oracle.predict_fixed(ds.row(i)),
-                            "{tag}: fixed row {i} (n={n})"
-                        );
-                    }
-                } else {
-                    assert!(
-                        engine.predict_fixed_batch(flat).is_none(),
-                        "{tag}: float-accumulating variant must not claim a fixed path"
-                    );
-                }
-            }
-        }
-    }
+    let batches: Vec<&[f32]> = batch_sizes()
+        .iter()
+        .map(|&n| &ds.features[..n.min(ds.n_rows()) * ds.n_features])
+        .collect();
+    assert_parity(&model, &batches, "trained");
 }
 
 #[test]
@@ -104,20 +135,209 @@ fn rf_batch_parity_across_model_seeds() {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Randomized tree-topology suite (hand-built IR models).
+
+/// A probability vector of length `nc` that passes IR validation.
+fn random_dist(rng: &mut Rng, nc: usize) -> Vec<f32> {
+    let raw: Vec<f32> = (0..nc).map(|_| rng.uniform_in(0.05, 1.0)).collect();
+    let sum: f32 = raw.iter().sum();
+    raw.iter().map(|&x| x / sum).collect()
+}
+
+/// Random tree with maximum depth `max_depth` (pre-order IR layout;
+/// interior nodes become leaves early with probability ~0.3, so trees
+/// are ragged).
+fn random_tree(rng: &mut Rng, max_depth: usize, nf: usize, nc: usize) -> Tree {
+    fn build(nodes: &mut Vec<Node>, rng: &mut Rng, depth_left: usize, nf: usize, nc: usize) -> u32 {
+        let idx = nodes.len() as u32;
+        if depth_left == 0 || rng.chance(0.3) {
+            nodes.push(Node::Leaf { values: random_dist(rng, nc) });
+        } else {
+            nodes.push(Node::Branch {
+                feature: rng.below(nf) as u32,
+                threshold: rng.uniform_in(-50.0, 50.0),
+                left: 0,
+                right: 0,
+            });
+            let l = build(nodes, rng, depth_left - 1, nf, nc);
+            let r = build(nodes, rng, depth_left - 1, nf, nc);
+            if let Node::Branch { left, right, .. } = &mut nodes[idx as usize] {
+                *left = l;
+                *right = r;
+            }
+        }
+        idx
+    }
+    let mut nodes = Vec::new();
+    build(&mut nodes, rng, max_depth, nf, nc);
+    Tree { nodes }
+}
+
+/// A maximally-ragged chain of exactly `depth` branches: each branch has
+/// one leaf child and one deeper child, alternating sides — one lane
+/// exits at depth 1 while another runs the full trip, the worst case for
+/// the branchless kernel's self-loop parking.
+fn chain_tree(rng: &mut Rng, depth: usize, nf: usize, nc: usize) -> Tree {
+    fn build(nodes: &mut Vec<Node>, rng: &mut Rng, depth_left: usize, nf: usize, nc: usize) -> u32 {
+        let idx = nodes.len() as u32;
+        if depth_left == 0 {
+            nodes.push(Node::Leaf { values: random_dist(rng, nc) });
+            return idx;
+        }
+        nodes.push(Node::Branch {
+            feature: rng.below(nf) as u32,
+            threshold: rng.uniform_in(-20.0, 20.0),
+            left: 0,
+            right: 0,
+        });
+        // Alternate which side continues the chain.
+        let deep_left = depth_left % 2 == 0;
+        let (l, r) = if deep_left {
+            let l = build(nodes, rng, depth_left - 1, nf, nc);
+            let leaf = nodes.len() as u32;
+            nodes.push(Node::Leaf { values: random_dist(rng, nc) });
+            (l, leaf)
+        } else {
+            let leaf = nodes.len() as u32;
+            nodes.push(Node::Leaf { values: random_dist(rng, nc) });
+            let r = build(nodes, rng, depth_left - 1, nf, nc);
+            (leaf, r)
+        };
+        if let Node::Branch { left, right, .. } = &mut nodes[idx as usize] {
+            *left = l;
+            *right = r;
+        }
+        idx
+    }
+    let mut nodes = Vec::new();
+    build(&mut nodes, rng, depth, nf, nc);
+    Tree { nodes }
+}
+
+/// Rows for a hand-built model: random values plus rows that hit split
+/// thresholds exactly (the `<=` boundary).
+fn probe_rows(rng: &mut Rng, model: &Model, n_rows: usize) -> Vec<f32> {
+    let nf = model.n_features;
+    let thresholds: Vec<(u32, f32)> = model
+        .trees
+        .iter()
+        .flat_map(|t| &t.nodes)
+        .filter_map(|n| match n {
+            Node::Branch { feature, threshold, .. } => Some((*feature, *threshold)),
+            _ => None,
+        })
+        .collect();
+    let mut rows = Vec::with_capacity(n_rows * nf);
+    for i in 0..n_rows {
+        let mut row: Vec<f32> = (0..nf).map(|_| rng.uniform_in(-80.0, 80.0)).collect();
+        // Every third row lands exactly on some threshold.
+        if i % 3 == 0 && !thresholds.is_empty() {
+            let (f, t) = thresholds[rng.below(thresholds.len())];
+            row[f as usize] = t;
+        }
+        rows.extend_from_slice(&row);
+    }
+    rows
+}
+
+/// Depth 0..=16 topology sweep: single-leaf trees, stumps, a depth-16
+/// chain, and random ragged trees, mixed into one forest so tree depths
+/// inside a single model are maximally uneven. Branchless must equal
+/// branchy must equal per-row scalar, bit for bit.
 #[test]
-fn gbt_batch_parity() {
+fn randomized_topology_parity_depth_0_to_16() {
+    let nf = 5usize;
+    let nc = 3usize;
+    for seed in [7u64, 8, 9] {
+        let mut rng = Rng::new(seed);
+        let mut trees = vec![
+            // depth 0: a single-leaf tree (the fixed trip count is 0).
+            Tree { nodes: vec![Node::Leaf { values: random_dist(&mut rng, nc) }] },
+            // depth 1: a stump.
+            random_tree(&mut rng, 1, nf, nc),
+            // depth 16: the full ragged chain.
+            chain_tree(&mut rng, 16, nf, nc),
+        ];
+        for max_depth in [2usize, 3, 5, 8, 12, 16] {
+            trees.push(random_tree(&mut rng, max_depth, nf, nc));
+        }
+        let model = Model {
+            kind: ModelKind::RandomForest,
+            n_features: nf,
+            n_classes: nc,
+            trees,
+            base_score: vec![0.0; nc],
+        };
+        model.validate().expect("hand-built model must validate");
+        assert!(model.max_depth() == 16, "chain tree must set the depth");
+        let row_sets: Vec<Vec<f32>> = [1usize, TILE_ROWS, TILE_ROWS + 3, 61]
+            .iter()
+            .map(|&n| probe_rows(&mut rng, &model, n))
+            .collect();
+        let batches: Vec<&[f32]> = row_sets.iter().map(|r| r.as_slice()).collect();
+        assert_parity(&model, &batches, &format!("topo{seed}"));
+    }
+}
+
+/// A forest of only single-leaf trees (every fixed trip count is 0) and
+/// only stumps — the degenerate extremes.
+#[test]
+fn degenerate_forests_parity() {
+    let nc = 2usize;
+    let mut rng = Rng::new(99);
+    let leaf_only = Model {
+        kind: ModelKind::RandomForest,
+        n_features: 1,
+        n_classes: nc,
+        trees: (0..5)
+            .map(|_| Tree { nodes: vec![Node::Leaf { values: random_dist(&mut rng, nc) }] })
+            .collect(),
+        base_score: vec![0.0; nc],
+    };
+    leaf_only.validate().unwrap();
+    let rows = probe_rows(&mut rng, &leaf_only, 17);
+    assert_parity(&leaf_only, &[rows.as_slice()], "leaf-only");
+
+    let stumps = Model {
+        kind: ModelKind::RandomForest,
+        n_features: 2,
+        n_classes: nc,
+        trees: (0..6).map(|_| random_tree(&mut rng, 1, 2, nc)).collect(),
+        base_score: vec![0.0; nc],
+    };
+    stumps.validate().unwrap();
+    let rows = probe_rows(&mut rng, &stumps, 33);
+    assert_parity(&stumps, &[rows.as_slice()], "stumps");
+}
+
+#[test]
+fn gbt_batch_parity_both_kernels() {
     let ds = shuttle_like(1500, 35);
     let model =
         train_gbt(&ds, &GbtParams { n_rounds: 5, max_depth: 4, ..Default::default() }, 35);
-    let engine = GbtIntEngine::compile(&model);
-    for n in batch_sizes() {
-        let n = n.min(ds.n_rows());
-        let flat = &ds.features[..n * ds.n_features];
-        let margins = engine.predict_fixed_batch(flat);
-        let classes = engine.predict_batch(flat);
-        for i in 0..n {
-            assert_eq!(margins[i], engine.predict_fixed(ds.row(i)), "gbt margins row {i} (n={n})");
-            assert_eq!(classes[i], engine.predict(ds.row(i)), "gbt class row {i} (n={n})");
+    let mut engine = GbtIntEngine::compile(&model);
+    for kernel in TraversalKernel::all() {
+        engine.set_kernel(kernel);
+        for n in batch_sizes() {
+            let n = n.min(ds.n_rows());
+            let flat = &ds.features[..n * ds.n_features];
+            let margins = engine.predict_fixed_batch(flat);
+            let classes = engine.predict_batch(flat);
+            for i in 0..n {
+                assert_eq!(
+                    margins[i],
+                    engine.predict_fixed(ds.row(i)),
+                    "{} gbt margins row {i} (n={n})",
+                    kernel.name()
+                );
+                assert_eq!(
+                    classes[i],
+                    engine.predict(ds.row(i)),
+                    "{} gbt class row {i} (n={n})",
+                    kernel.name()
+                );
+            }
         }
     }
 }
