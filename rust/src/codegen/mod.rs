@@ -24,10 +24,12 @@
 pub mod compile;
 pub mod ifelse;
 pub mod native;
+pub mod quickscorer;
 
 pub use compile::{CBinary, CompileError};
 pub use ifelse::generate_ifelse;
 pub use native::{generate_native, generate_native_predicated};
+pub use quickscorer::generate_quickscorer;
 
 use crate::inference::Variant;
 use crate::ir::Model;
@@ -40,6 +42,10 @@ pub enum Layout {
     /// Child-adjacent node tables walked by a predicated fixed-trip loop
     /// — the generated-C mirror of the Rust branchless batch kernel.
     NativePredicated,
+    /// Feature-sorted condition streams + `u64` false-leaf bitmasks —
+    /// the generated-C mirror of the Rust QuickScorer kernel
+    /// ([`quickscorer`]; requires every tree to have ≤ 64 leaves).
+    QuickScorer,
 }
 
 impl Layout {
@@ -48,6 +54,7 @@ impl Layout {
             Layout::IfElse => "ifelse",
             Layout::Native => "native",
             Layout::NativePredicated => "native-predicated",
+            Layout::QuickScorer => "quickscorer",
         }
     }
 }
@@ -58,6 +65,7 @@ pub fn generate(model: &Model, layout: Layout, variant: Variant) -> String {
         Layout::IfElse => generate_ifelse(model, variant),
         Layout::Native => generate_native(model, variant),
         Layout::NativePredicated => generate_native_predicated(model, variant),
+        Layout::QuickScorer => generate_quickscorer(model, variant),
     }
 }
 

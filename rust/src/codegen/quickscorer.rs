@@ -1,0 +1,373 @@
+//! QuickScorer-layout C code generation: the bitvector forest kernel
+//! ([`crate::inference::quickscorer`]) as architecture-agnostic,
+//! integer-only C — static per-feature condition arrays sorted by
+//! threshold, `u64` false-leaf masks, no recursion, no node structs, no
+//! tree walks.
+//!
+//! The emitted `predict()` is the exact algorithm the Rust kernel runs:
+//! per feature, scan the sorted condition stream and AND each false
+//! condition's mask into its tree's bitvector until the first true
+//! condition; the exit leaf of every tree is then the lowest set bit.
+//! For the integer variants every operation in the inference path is
+//! u32/u64 integer arithmetic (the trailing-zero count is a portable
+//! shift loop — no compiler builtins), so the generated C inherits the
+//! paper's integer-only guarantee on any architecture.
+//!
+//! The layout requires every tree to fit a `u64` mask
+//! ([`QS_MAX_LEAVES`] leaves); models with wider trees are rejected with
+//! a pointer at `--layout native-predicated` (the Rust runtime kernel
+//! falls back per tree instead — C stays single-strategy on purpose).
+
+use super::ifelse::{acc_type, assert_rawbits_thresholds, harness, GenOpts};
+use crate::flint::SplitEncoding;
+use crate::inference::quickscorer::{QsPlan, QS_MAX_LEAVES};
+use crate::inference::Variant;
+use crate::ir::{Model, ModelKind, Node};
+use crate::quant::prob_to_fixed;
+use std::fmt::Write;
+
+/// Generate QuickScorer-layout C for a model (default options).
+pub fn generate_quickscorer(model: &Model, variant: Variant) -> String {
+    generate_quickscorer_with(model, variant, GenOpts::default())
+}
+
+/// Generate QuickScorer-layout C with explicit options.
+pub fn generate_quickscorer_with(model: &Model, variant: Variant, opts: GenOpts) -> String {
+    assert_eq!(model.kind, ModelKind::RandomForest, "C generation targets RF models");
+    model.validate().expect("model must be valid");
+    assert_rawbits_thresholds(model, opts);
+    assert!(!model.trees.is_empty(), "quickscorer layout needs at least one tree");
+    // One block spanning the whole forest: the C output is a per-row
+    // kernel, so cache-blocking over trees buys nothing there.
+    let plan = QsPlan::build_with(model, model.trees.len());
+    assert!(
+        plan.fallback.is_empty(),
+        "quickscorer layout requires every tree to have <= {QS_MAX_LEAVES} leaves \
+         (trees {:?} exceed it); generate --layout native-predicated instead",
+        plan.fallback
+    );
+    let block = &plan.blocks[0];
+
+    let mut out = String::new();
+    super::ifelse::header(&mut out, model, variant, "quickscorer", opts);
+
+    let n_cond = block.masks.len();
+    // C forbids zero-length arrays; a forest of single-leaf trees has no
+    // conditions, so pad with one dead entry the loops never read.
+    let pad = n_cond == 0;
+    let thresh: Vec<String> = if pad {
+        vec![if variant == Variant::Float { "0.0f".into() } else { "0u".into() }]
+    } else {
+        (0..n_cond)
+            .map(|i| match (variant, opts.encoding) {
+                (Variant::Float, _) => super::f32_lit(f32::from_bits(block.thresh_f32[i])),
+                (_, SplitEncoding::RawBitsNonNegative) => {
+                    format!("0x{:08x}u", block.thresh_f32[i])
+                }
+                (_, SplitEncoding::OrderedUnsigned) => format!("0x{:08x}u", block.thresh_ord[i]),
+            })
+            .collect()
+    };
+    let tree_of: Vec<String> = if pad {
+        vec!["0".into()]
+    } else {
+        block.tree_of.iter().map(|t| t.to_string()).collect()
+    };
+    let masks: Vec<String> = if pad {
+        vec!["0ull".into()]
+    } else {
+        block.masks.iter().map(|m| format!("0x{m:016x}ull")).collect()
+    };
+
+    // Leaf values in payload-row order (IR node order — the same
+    // assignment every other layout and the Rust engines use).
+    let mut leaf_vals: Vec<String> = Vec::new();
+    for tree in &model.trees {
+        for node in &tree.nodes {
+            if let Node::Leaf { values } = node {
+                for &p in values {
+                    leaf_vals.push(match variant {
+                        Variant::Float | Variant::FlInt => super::f32_lit(p),
+                        Variant::IntTreeger => {
+                            format!("{}u", prob_to_fixed(p, model.trees.len()))
+                        }
+                    });
+                }
+            }
+        }
+    }
+
+    let thresh_ty = if variant == Variant::Float { "float" } else { "uint32_t" };
+    let acc = acc_type(variant);
+
+    let _ = writeln!(out, "#define N_COND {n_cond}");
+    let _ = writeln!(
+        out,
+        "static const uint32_t qs_off[N_FEATURES + 1] = {{{}}};",
+        join(&block.feature_offsets)
+    );
+    let _ = writeln!(
+        out,
+        "static const {thresh_ty} qs_thresh[{}] = {{{}}};",
+        thresh.len(),
+        thresh.join(",")
+    );
+    let _ = writeln!(
+        out,
+        "static const uint16_t qs_tree[{}] = {{{}}};",
+        tree_of.len(),
+        tree_of.join(",")
+    );
+    let _ = writeln!(
+        out,
+        "static const uint64_t qs_mask[{}] = {{{}}};",
+        masks.len(),
+        masks.join(",")
+    );
+    let _ = writeln!(
+        out,
+        "static const uint64_t qs_init[N_TREES] = {{{}}};",
+        block.init.iter().map(|v| format!("0x{v:016x}ull")).collect::<Vec<_>>().join(",")
+    );
+    let _ = writeln!(
+        out,
+        "static const uint32_t qs_leafofs[N_TREES] = {{{}}};",
+        join(&block.leaf_offsets[..block.n_trees])
+    );
+    let _ = writeln!(
+        out,
+        "static const uint32_t qs_leafidx[{}] = {{{}}};",
+        block.leaf_payloads.len(),
+        join(&block.leaf_payloads)
+    );
+    let _ = writeln!(
+        out,
+        "static const {acc} it_leaf[{}] = {{{}}};",
+        leaf_vals.len(),
+        leaf_vals.join(",")
+    );
+    let _ = writeln!(out);
+
+    // Portable trailing-zero count: integer shifts only, no builtins.
+    // The bitvector is never zero (the exit leaf always survives).
+    let _ = writeln!(
+        out,
+        "static inline uint32_t it_ctz64(uint64_t v) {{\n\
+         \x20 uint32_t c = 0u;\n\
+         \x20 while (!(v & 1ull)) {{ v >>= 1; ++c; }}\n\
+         \x20 return c;\n}}"
+    );
+    let _ = writeln!(out);
+
+    let _ = writeln!(out, "void predict(const float *data, {acc} *result) {{");
+    if variant != Variant::Float {
+        let _ = writeln!(out, "  uint32_t d[N_FEATURES];");
+        let loader = match opts.encoding {
+            SplitEncoding::OrderedUnsigned => "it_map(it_load_bits(data + i))",
+            SplitEncoding::RawBitsNonNegative => "it_load_bits(data + i)",
+        };
+        let _ = writeln!(out, "  for (int i = 0; i < N_FEATURES; ++i) d[i] = {loader};");
+    }
+    let _ = writeln!(out, "  uint64_t v[N_TREES];");
+    let _ = writeln!(out, "  for (int t = 0; t < N_TREES; ++t) v[t] = qs_init[t];");
+    // The false conditions of a feature are a prefix of its
+    // threshold-sorted stream: AND masks until the first true condition.
+    // The compare is the literal negation of `<=`-goes-left so even NaN
+    // inputs route exactly like the other layouts (NaN never breaks).
+    let cmp = match (variant, opts.encoding) {
+        (Variant::Float, _) => "!(data[f] <= qs_thresh[i])".to_string(),
+        (_, SplitEncoding::RawBitsNonNegative) => {
+            "(int32_t)d[f] > (int32_t)qs_thresh[i]".to_string()
+        }
+        (_, SplitEncoding::OrderedUnsigned) => "d[f] > qs_thresh[i]".to_string(),
+    };
+    let _ = writeln!(out, "  for (int f = 0; f < N_FEATURES; ++f) {{");
+    let _ = writeln!(out, "    for (uint32_t i = qs_off[f]; i < qs_off[f + 1]; ++i) {{");
+    let _ = writeln!(out, "      if (!({cmp})) break;");
+    let _ = writeln!(out, "      v[qs_tree[i]] &= qs_mask[i];");
+    let _ = writeln!(out, "    }}");
+    let _ = writeln!(out, "  }}");
+    let zero = if variant == Variant::IntTreeger { "0u" } else { "0.0f" };
+    let _ = writeln!(out, "  for (int c = 0; c < N_CLASSES; ++c) result[c] = {zero};");
+    let _ = writeln!(out, "  for (int t = 0; t < N_TREES; ++t) {{");
+    let _ = writeln!(
+        out,
+        "    const {acc} *leaf = it_leaf + \
+         (size_t)qs_leafidx[qs_leafofs[t] + it_ctz64(v[t])] * N_CLASSES;"
+    );
+    let _ = writeln!(out, "    for (int c = 0; c < N_CLASSES; ++c) result[c] += leaf[c];");
+    let _ = writeln!(out, "  }}");
+    if variant != Variant::IntTreeger {
+        let _ = writeln!(out, "  for (int c = 0; c < N_CLASSES; ++c) result[c] /= (float)N_TREES;");
+    }
+    let _ = writeln!(out, "}}");
+    let _ = writeln!(out);
+
+    harness(&mut out, model, variant);
+    out
+}
+
+fn join<T: std::fmt::Display>(xs: &[T]) -> String {
+    xs.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::shuttle_like;
+    use crate::flint::ordered_u32;
+    use crate::ir::{ModelKind, Tree};
+    use crate::trees::{ForestParams, RandomForest};
+
+    fn model() -> Model {
+        let ds = shuttle_like(700, 51);
+        RandomForest::train(&ds, &ForestParams { n_trees: 4, max_depth: 4, ..Default::default() }, 5)
+    }
+
+    /// Golden test: a hand-built deterministic stump pins every emitted
+    /// table and the scan/extract loops byte-for-byte.
+    #[test]
+    fn quickscorer_golden_stump() {
+        let m = Model {
+            kind: ModelKind::RandomForest,
+            n_features: 1,
+            n_classes: 2,
+            trees: vec![Tree {
+                nodes: vec![
+                    Node::Branch { feature: 0, threshold: 0.5, left: 1, right: 2 },
+                    Node::Leaf { values: vec![0.9, 0.1] },
+                    Node::Leaf { values: vec![0.2, 0.8] },
+                ],
+            }],
+            base_score: vec![0.0, 0.0],
+        };
+        let src = generate_quickscorer(&m, Variant::IntTreeger);
+        let t = ordered_u32(0.5);
+        let q = |p: f32| prob_to_fixed(p, 1);
+        for line in [
+            "#define N_COND 1".to_string(),
+            "static const uint32_t qs_off[N_FEATURES + 1] = {0,1};".to_string(),
+            format!("static const uint32_t qs_thresh[1] = {{0x{t:08x}u}};"),
+            "static const uint16_t qs_tree[1] = {0};".to_string(),
+            "static const uint64_t qs_mask[1] = {0xfffffffffffffffeull};".to_string(),
+            "static const uint64_t qs_init[N_TREES] = {0x0000000000000003ull};".to_string(),
+            "static const uint32_t qs_leafofs[N_TREES] = {0};".to_string(),
+            "static const uint32_t qs_leafidx[2] = {0,1};".to_string(),
+            format!(
+                "static const uint32_t it_leaf[4] = {{{}u,{}u,{}u,{}u}};",
+                q(0.9),
+                q(0.1),
+                q(0.2),
+                q(0.8)
+            ),
+            "      if (!(d[f] > qs_thresh[i])) break;".to_string(),
+            "      v[qs_tree[i]] &= qs_mask[i];".to_string(),
+            "    const uint32_t *leaf = it_leaf + \
+             (size_t)qs_leafidx[qs_leafofs[t] + it_ctz64(v[t])] * N_CLASSES;"
+                .to_string(),
+        ] {
+            assert!(src.contains(&line), "missing golden line:\n{line}\nin:\n{src}");
+        }
+        // No node machinery anywhere: the whole point of the layout.
+        for absent in ["it_left", "it_right", "it_feat", "it_depth", "it_root"] {
+            assert!(!src.contains(absent), "node-walk table {absent} leaked");
+        }
+    }
+
+    #[test]
+    fn emits_all_variants_and_stays_integer_only_for_int() {
+        let m = model();
+        for v in [Variant::Float, Variant::FlInt, Variant::IntTreeger] {
+            let src = generate_quickscorer(&m, v);
+            for t in ["qs_off", "qs_thresh", "qs_tree", "qs_mask", "qs_init", "qs_leafidx", "it_leaf"]
+            {
+                assert!(src.contains(t), "{}: missing table {t}", v.name());
+            }
+            assert!(src.contains("layout: quickscorer"), "{}", v.name());
+        }
+        let src = generate_quickscorer(&m, Variant::IntTreeger);
+        let inference = src.split("#ifndef INTREEGER_NO_MAIN").next().unwrap();
+        assert!(!inference.contains("0x1."), "float literal leaked");
+        assert!(!inference.contains("float *result"));
+    }
+
+    #[test]
+    #[should_panic(expected = "<= 64 leaves")]
+    fn rejects_trees_wider_than_a_u64_mask() {
+        // A right-leaning chain with 65 leaves: branch i sits at node
+        // 2i with a leaf left child at 2i+1 and the next branch (or the
+        // final leaf) at 2i+2.
+        let n_branches = 64usize;
+        let mut fixed = Vec::with_capacity(2 * n_branches + 1);
+        for i in 0..n_branches {
+            fixed.push(Node::Branch {
+                feature: 0,
+                threshold: i as f32,
+                left: (2 * i + 1) as u32,
+                right: (2 * i + 2) as u32,
+            });
+            fixed.push(Node::Leaf { values: vec![0.5, 0.5] });
+        }
+        fixed.push(Node::Leaf { values: vec![0.5, 0.5] });
+        let m = Model {
+            kind: ModelKind::RandomForest,
+            n_features: 1,
+            n_classes: 2,
+            trees: vec![Tree { nodes: fixed }],
+            base_score: vec![0.0, 0.0],
+        };
+        m.validate().expect("chain must validate");
+        generate_quickscorer(&m, Variant::IntTreeger);
+    }
+
+    #[test]
+    fn rawbits_requires_nonneg_thresholds() {
+        let mut m = model();
+        for node in &mut m.trees[0].nodes {
+            if let Node::Branch { threshold, .. } = node {
+                *threshold = -1.0;
+                break;
+            }
+        }
+        let opts = GenOpts { encoding: SplitEncoding::RawBitsNonNegative, ..Default::default() };
+        let r = std::panic::catch_unwind(|| {
+            generate_quickscorer_with(&m, Variant::IntTreeger, opts)
+        });
+        assert!(r.is_err(), "negative threshold must be rejected under raw-bits");
+    }
+
+    /// End-to-end: the QuickScorer C binary is bit-identical to the Rust
+    /// integer engine (gcc-gated), including threshold-exact rows.
+    #[test]
+    fn quickscorer_c_matches_engines() {
+        use crate::codegen::compile::{gcc_available, CBinary};
+        use crate::inference::IntEngine;
+        if !gcc_available() {
+            eprintln!("gcc unavailable; skipping");
+            return;
+        }
+        let ds = shuttle_like(1000, 52);
+        let m = RandomForest::train(
+            &ds,
+            &ForestParams { n_trees: 6, max_depth: 5, ..Default::default() },
+            8,
+        );
+        let engine = IntEngine::compile(&m);
+        let src = generate_quickscorer(&m, Variant::IntTreeger);
+        let bin = CBinary::compile(&src, Variant::IntTreeger, m.n_features, m.n_classes, "qs")
+            .expect("compile quickscorer C");
+        let n = 200usize;
+        let mut rows = ds.features[..n * ds.n_features].to_vec();
+        // Pin a few values exactly onto thresholds (the <= boundary).
+        if let Node::Branch { feature, threshold, .. } = &m.trees[0].nodes[0] {
+            for r in (0..n).step_by(7) {
+                rows[r * ds.n_features + *feature as usize] = *threshold;
+            }
+        }
+        let got = bin.predict_u32(&rows).expect("run quickscorer C");
+        for i in 0..n {
+            let row = &rows[i * ds.n_features..(i + 1) * ds.n_features];
+            assert_eq!(got[i], engine.predict_fixed(row), "row {i}");
+        }
+    }
+}

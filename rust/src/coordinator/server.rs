@@ -58,10 +58,12 @@ pub struct ServerConfig {
     pub queue_depth: usize,
     /// Measure alternative execution strategies at startup and keep the
     /// fastest:
-    /// 1. the scalar route's tile-walk kernel — branchy vs the
-    ///    predicated branchless descent — is timed on the loaded model
-    ///    (deep, early-exiting trees can favor branchy; shallow balanced
-    ///    trees favor branchless), and
+    /// 1. the scalar route's traversal kernel — branchy early-exit vs the
+    ///    predicated branchless descent vs the QuickScorer bitvector
+    ///    evaluation (all three are probed) — is timed on the loaded
+    ///    model (deep, early-exiting trees can favor branchy; shallow
+    ///    balanced trees favor branchless; wide QS-eligible forests at
+    ///    big batches favor quickscorer), and
     /// 2. the XLA route is disabled when the batched scalar kernel beats
     ///    it at the full policy batch size. On a single CPU core the
     ///    padded batched artifact usually loses to the tiled scalar
@@ -251,10 +253,11 @@ fn calibration_rows(engine: &IntEngine, n_features: usize, b: usize) -> Vec<f32>
     rows
 }
 
-/// Startup micro-benchmark: pick the faster tile-walk kernel (branchy
-/// early-exit vs predicated branchless fixed-trip) for this model's tree
-/// shapes. Leaves the winner set on `engine`. Uses min-of-k timing on a
-/// full-policy batch of threshold-representative probe rows.
+/// Startup micro-benchmark: pick the fastest traversal kernel (branchy
+/// early-exit vs predicated branchless fixed-trip vs QuickScorer
+/// bitvector) for this model's tree shapes. Leaves the winner set on
+/// `engine`. Uses min-of-k timing on a full-policy batch of
+/// threshold-representative probe rows.
 fn calibrate_kernel(engine: &mut IntEngine, n_features: usize, batch: usize) {
     use crate::inference::Engine as _;
     let b = batch.max(crate::inference::TILE_ROWS);

@@ -12,7 +12,7 @@
 //! ordered-u32 space **once** (FlInt's trick, amortized batch-wide), so
 //! the integer variants stay integer-only end to end.
 //!
-//! ## Two kernels, one walker ([`TraversalKernel`])
+//! ## Three kernels, one dispatch ([`TraversalKernel`])
 //!
 //! * [`TraversalKernel::Branchy`] — the PR-1 tile walk: each lane tests
 //!   for its leaf every step and drops out early. Fewest node visits,
@@ -27,25 +27,37 @@
 //!   lanes. Lanes that reach a leaf early keep re-loading their parked
 //!   node (and row feature 0), which is cheap L1 traffic; what they
 //!   never do is mispredict.
+//! * [`TraversalKernel::QuickScorer`] — no traversal at all: the forest
+//!   is compiled into per-feature threshold-sorted condition streams and
+//!   per-tree `u64` false-leaf bitmasks ([`super::quickscorer`]), and a
+//!   batch is evaluated by linear scans over those dense arrays with a
+//!   cache-blocked trees × row-tiles driver. Trees with more than
+//!   [`super::quickscorer::QS_MAX_LEAVES`] leaves fall back per-tree to
+//!   the branchless walker (loudly, at plan-build time).
 //!
-//! Both kernels are exposed behind one generic monomorphized walker
+//! The walker kernels are exposed behind one generic monomorphized body
 //! (ordered-u32 and f32 domains differ only in the threshold-word
-//! compare), shared by all three RF variants *and* the GBT engine.
+//! compare), shared by all three RF variants *and* the GBT engine; the
+//! QuickScorer scan reuses the same [`Domain`] abstraction.
 //!
 //! ## Parity invariant (load-bearing — the parity suite enforces it)
 //!
-//! For every engine variant and **either kernel**, the batched results
-//! are **bit-identical** to the scalar engines: both kernels route every
+//! For every engine variant and **every kernel**, the batched results
+//! are **bit-identical** to the scalar engines: all kernels route every
 //! lane through exactly the same comparisons (the descent predicate is
 //! the literal negation `!(x <= t)` of the scalar select — not `x > t`,
 //! which would differ under NaN; the predicated step merely masks the
-//! compare of a parked lane), so each row reaches the same leaf, and
-//! leaf payloads are accumulated in ascending tree order — exactly the
-//! scalar iteration order — so float sums see the same rounding sequence
-//! and u32/i64 sums are exact either way. Kernel choice changes only
-//! *when* each tree walk happens, never the per-row accumulation
-//! sequence. The final ragged tile (batch % TILE_ROWS rows) always runs
-//! the branchy walker — identical results by the same argument.
+//! compare of a parked lane, and the QuickScorer scan performs the same
+//! `x > t` compares against the same threshold words), so each row
+//! reaches the same leaf, and leaf payloads are accumulated in ascending
+//! tree order — exactly the scalar iteration order — so float sums see
+//! the same rounding sequence and u32/i64 sums are exact either way.
+//! Kernel choice changes only *when* each tree walk happens, never the
+//! per-row accumulation sequence. A ragged final tile (batch %
+//! TILE_ROWS rows) runs the *selected* kernel: the branchless walker
+//! duplicates the last real lane to fill the tile
+//! ([`walk_tile_lockstep_tail`]) and the QuickScorer scan is per-row
+//! anyway, so no kernel silently swaps on the tail.
 //!
 //! ## Scratch buffers
 //!
@@ -57,6 +69,7 @@
 //! interior-mutability hazard on the `Sync` engines.
 
 use super::compiled::{CompiledForest, Node8};
+use super::quickscorer::{accumulate_qs, QsBlock, QsPlan};
 use crate::flint::ordered_u32;
 use crate::ir::argmax;
 use std::cell::RefCell;
@@ -83,6 +96,11 @@ pub enum TraversalKernel {
     /// Predicated fixed-trip descent over self-looping leaves.
     #[default]
     Branchless,
+    /// Bitvector condition-stream evaluation ([`super::quickscorer`]):
+    /// no node walks; trees with more than
+    /// [`super::quickscorer::QS_MAX_LEAVES`] leaves take the branchless
+    /// walker per tree.
+    QuickScorer,
 }
 
 impl TraversalKernel {
@@ -90,11 +108,12 @@ impl TraversalKernel {
         match self {
             TraversalKernel::Branchy => "branchy",
             TraversalKernel::Branchless => "branchless",
+            TraversalKernel::QuickScorer => "quickscorer",
         }
     }
 
-    pub fn all() -> [TraversalKernel; 2] {
-        [TraversalKernel::Branchy, TraversalKernel::Branchless]
+    pub fn all() -> [TraversalKernel; 3] {
+        [TraversalKernel::Branchy, TraversalKernel::Branchless, TraversalKernel::QuickScorer]
     }
 }
 
@@ -150,6 +169,9 @@ pub(crate) trait Domain {
     /// The negation of the IR's `<=`-goes-left split, i.e. exactly
     /// "take the right child".
     fn go_right(x: Self::Elem, tw: u32) -> bool;
+    /// The QuickScorer condition-stream threshold words of this domain
+    /// (the plan stores both 32-bit encodings side by side).
+    fn qs_words(block: &QsBlock) -> &[u32];
 }
 
 /// Ordered-u32 domain (FlInt / InTreeger / GBT walks).
@@ -159,6 +181,9 @@ impl Domain for OrdDomain {
     #[inline(always)]
     fn go_right(x: u32, tw: u32) -> bool {
         x > tw
+    }
+    fn qs_words(block: &QsBlock) -> &[u32] {
+        &block.thresh_ord
     }
 }
 
@@ -176,6 +201,9 @@ impl Domain for F32Domain {
         // the exact negation means even out-of-contract inputs route
         // identically to the seed walkers and the if-else generated C.
         !(x <= f32::from_bits(tw))
+    }
+    fn qs_words(block: &QsBlock) -> &[u32] {
+        &block.thresh_f32
     }
 }
 
@@ -237,8 +265,8 @@ pub(crate) fn walk_tile_branchy<D: Domain>(
 }
 
 /// Predicated fixed-trip tile walk of one tree over a **full** tile
-/// (exactly [`TILE_ROWS`] lanes — the drivers route ragged tails to
-/// [`walk_tile_branchy`]).
+/// (exactly [`TILE_ROWS`] lanes — ragged tails go to
+/// [`walk_tile_lockstep_tail`], which duplicates the last real lane).
 ///
 /// Every lane advances every step with no data-dependent branch: the
 /// descent is `idx = left + ((x > tw) & branch_mask)`, leaves self-loop
@@ -279,12 +307,62 @@ pub(crate) fn walk_tile_lockstep<D: Domain>(
     }
 }
 
+/// Ragged-tail variant of [`walk_tile_lockstep`]: a tile with fewer than
+/// [`TILE_ROWS`] rows fills the missing lanes by **duplicating the last
+/// real row**, so the whole batch runs the selected predicated kernel
+/// (the duplicate lanes' results are discarded). Each real lane performs
+/// exactly the comparisons of the full-tile walk, so results stay
+/// bit-identical; the duplicates are pure redundant arithmetic.
+///
+/// SAFETY: same argument as [`walk_tile_lockstep`] — every lane's row
+/// index is clamped into `tile_start..tile_start + tile_rows`, which the
+/// drivers keep inside the row buffer.
+#[inline]
+pub(crate) fn walk_tile_lockstep_tail<D: Domain>(
+    trees: &PackedTrees,
+    t: usize,
+    rows: &[D::Elem],
+    tile_start: usize,
+    tile_rows: usize,
+    leaves: &mut [u32; TILE_ROWS],
+) {
+    debug_assert!(tile_rows >= 1 && tile_rows <= TILE_ROWS);
+    debug_assert!((tile_start + tile_rows) * trees.stride <= rows.len());
+    let base = trees.tree_offsets[t] as usize;
+    let depth = trees.tree_depths[t];
+    let nodes = trees.nodes;
+    let stride = trees.stride;
+    let mut row_base = [0usize; TILE_ROWS];
+    for (r, slot) in row_base.iter_mut().enumerate() {
+        *slot = (tile_start + r.min(tile_rows - 1)) * stride;
+    }
+    let mut idx = [0u32; TILE_ROWS]; // tree-local cursors
+    for _ in 0..depth {
+        for r in 0..TILE_ROWS {
+            let n = unsafe { *nodes.get_unchecked(base + idx[r] as usize) };
+            let x = unsafe { *rows.get_unchecked(row_base[r] + n.feature_index()) };
+            idx[r] = n.left as u32 + (D::go_right(x, n.tw) as u32 & n.branch_mask());
+        }
+    }
+    for r in 0..tile_rows {
+        let n = unsafe { *nodes.get_unchecked(base + idx[r] as usize) };
+        debug_assert!(n.is_leaf(), "lane not at a leaf after the fixed trip");
+        leaves[r] = n.tw;
+    }
+}
+
 /// Shared batch driver: walk every (tile, tree) pair with the selected
 /// kernel and accumulate leaf payload rows into `acc` (row-major
 /// `n_rows * n_classes`, pre-initialized by the caller). Per row,
 /// accumulation happens in ascending tree order — the scalar order.
+///
+/// `qs` carries the compiled QuickScorer plan; it is only consulted when
+/// `kernel` is [`TraversalKernel::QuickScorer`] (every engine compiles
+/// one, so internal callers always pass `Some`).
+#[allow(clippy::too_many_arguments)] // internal monomorphized driver; a param struct would obscure the hot path
 pub(crate) fn accumulate_batch<D: Domain, T>(
     trees: &PackedTrees,
+    qs: Option<&QsPlan>,
     rows: &[D::Elem],
     n_rows: usize,
     n_classes: usize,
@@ -296,16 +374,25 @@ pub(crate) fn accumulate_batch<D: Domain, T>(
 {
     assert_eq!(acc.len(), n_rows * n_classes);
     assert!(n_rows * trees.stride <= rows.len());
+    if kernel == TraversalKernel::QuickScorer {
+        let plan = qs.expect("QuickScorer kernel requires a compiled QsPlan");
+        accumulate_qs::<D, T>(plan, trees, rows, n_rows, n_classes, leaf_table, acc);
+        return;
+    }
     let n_trees = trees.tree_offsets.len() - 1;
     let mut leaves = [0u32; TILE_ROWS];
     let mut tile_start = 0;
     while tile_start < n_rows {
         let tile_rows = TILE_ROWS.min(n_rows - tile_start);
         for t in 0..n_trees {
-            if kernel == TraversalKernel::Branchless && tile_rows == TILE_ROWS {
+            if kernel == TraversalKernel::Branchy {
+                walk_tile_branchy::<D>(trees, t, rows, tile_start, tile_rows, &mut leaves);
+            } else if tile_rows == TILE_ROWS {
                 walk_tile_lockstep::<D>(trees, t, rows, tile_start, &mut leaves);
             } else {
-                walk_tile_branchy::<D>(trees, t, rows, tile_start, tile_rows, &mut leaves);
+                // Ragged tail: stay on the selected branchless kernel
+                // with duplicated lanes (bit-identical; see the walker).
+                walk_tile_lockstep_tail::<D>(trees, t, rows, tile_start, tile_rows, &mut leaves);
             }
             for (r, &p) in leaves[..tile_rows].iter().enumerate() {
                 let leaf = &leaf_table[p as usize * n_classes..(p as usize + 1) * n_classes];
@@ -375,6 +462,7 @@ pub fn float_proba_batch_with(
     let mut acc = vec![0.0f32; n_rows * c];
     accumulate_batch::<F32Domain, f32>(
         &f.packed_f32(),
+        Some(&f.qs),
         rows,
         n_rows,
         c,
@@ -408,6 +496,7 @@ pub fn flint_proba_batch_with(
         let mut acc = vec![0.0f32; n_rows * c];
         accumulate_batch::<OrdDomain, f32>(
             &f.packed_ord(),
+            Some(&f.qs),
             rows_ord,
             n_rows,
             c,
@@ -441,6 +530,7 @@ pub fn int_fixed_batch_with(f: &CompiledForest, rows: &[f32], kernel: TraversalK
         let mut acc = vec![0u32; n_rows * c];
         accumulate_batch::<OrdDomain, u32>(
             &f.packed_ord(),
+            Some(&f.qs),
             rows_ord,
             n_rows,
             c,
@@ -545,10 +635,39 @@ mod tests {
 
     #[test]
     fn kernel_names() {
-        assert_eq!(TraversalKernel::all().len(), 2);
+        assert_eq!(TraversalKernel::all().len(), 3);
         assert_eq!(TraversalKernel::Branchy.name(), "branchy");
         assert_eq!(TraversalKernel::Branchless.name(), "branchless");
+        assert_eq!(TraversalKernel::QuickScorer.name(), "quickscorer");
         assert_eq!(TraversalKernel::default(), TraversalKernel::Branchless);
+    }
+
+    /// The ragged-tail fix (satellite): the duplicated-lane lockstep tail
+    /// must agree with the branchy walker lane for lane at every tail
+    /// width 1..TILE_ROWS.
+    #[test]
+    fn lockstep_tail_matches_branchy_at_every_width() {
+        let f = forest();
+        let ds = shuttle_like(64, 24);
+        let rows_ord: Vec<u32> = ds.features.iter().map(|&x| ordered_u32(x)).collect();
+        let trees_ord = f.packed_ord();
+        let mut leaves_branchy = [0u32; TILE_ROWS];
+        let mut leaves_tail = [0u32; TILE_ROWS];
+        for tile_rows in 1..=TILE_ROWS {
+            for t in 0..f.n_trees {
+                walk_tile_branchy::<OrdDomain>(
+                    &trees_ord, t, &rows_ord, 0, tile_rows, &mut leaves_branchy,
+                );
+                walk_tile_lockstep_tail::<OrdDomain>(
+                    &trees_ord, t, &rows_ord, 0, tile_rows, &mut leaves_tail,
+                );
+                assert_eq!(
+                    leaves_tail[..tile_rows],
+                    leaves_branchy[..tile_rows],
+                    "t{t} width {tile_rows}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -34,6 +34,7 @@
 //! a parked lane never meaningfully compares against (the compare still
 //! executes, but its result is masked by the leaf bit).
 
+use super::quickscorer::QsPlan;
 use crate::flint::ordered_u32;
 use crate::ir::{Model, ModelKind, Node};
 use crate::quant::prob_to_fixed;
@@ -178,6 +179,10 @@ pub struct CompiledForest {
     pub nodes_ord: Vec<NodeOrd>,
     /// Node layout this forest was compiled with.
     pub order: NodeOrder,
+    /// QuickScorer condition-stream plan (the bitvector kernel; built for
+    /// every forest — selecting it is a runtime [`super::TraversalKernel`]
+    /// choice, and ineligible trees carry their walker fallback here).
+    pub qs: QsPlan,
 }
 
 /// Child-adjacent permutation of one tree (tree-local SoA slices):
@@ -309,6 +314,7 @@ impl CompiledForest {
             nodes_f32: Vec::new(),
             nodes_ord: Vec::new(),
             order,
+            qs: QsPlan::build(model),
         };
 
         for tree in &model.trees {

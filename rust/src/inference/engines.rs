@@ -13,8 +13,9 @@
 //! The batched results are **bit-identical** to the per-row results for
 //! every variant (see the parity invariant in [`super::batch`] and the
 //! `tests/batch_parity.rs` suite). Each engine additionally carries a
-//! [`TraversalKernel`] selecting the branchy or the predicated
-//! branchless tile walk — also a pure performance knob (the serving
+//! [`TraversalKernel`] selecting the branchy tile walk, the predicated
+//! branchless tile walk, or the QuickScorer bitvector evaluation
+//! ([`super::quickscorer`]) — also a pure performance knob (the serving
 //! coordinator auto-calibrates it per model at startup).
 
 use super::batch::{self, TraversalKernel};
@@ -531,7 +532,8 @@ mod tests {
     }
 
     /// The kernel is a pure performance knob: switching it changes no
-    /// output bit, on any variant.
+    /// output bit, on any variant — including the QuickScorer bitvector
+    /// kernel.
     #[test]
     fn kernel_is_a_pure_performance_knob() {
         let (ds, m) = setup(8, 9);
@@ -541,13 +543,15 @@ mod tests {
             assert_eq!(e.kernel(), TraversalKernel::Branchless, "default kernel");
             let branchless_probas = e.predict_proba_batch(flat);
             let branchless_classes = e.predict_batch(flat);
-            e.set_kernel(TraversalKernel::Branchy);
-            assert_eq!(e.kernel(), TraversalKernel::Branchy);
-            assert_eq!(e.predict_proba_batch(flat), branchless_probas, "{}", v.name());
-            assert_eq!(e.predict_batch(flat), branchless_classes, "{}", v.name());
-            let via_full = compile_variant_full(&m, v, NodeOrder::Breadth, TraversalKernel::Branchy);
-            assert_eq!(via_full.kernel(), TraversalKernel::Branchy);
-            assert_eq!(via_full.predict_batch(flat), branchless_classes, "{}", v.name());
+            for kernel in TraversalKernel::all() {
+                e.set_kernel(kernel);
+                assert_eq!(e.kernel(), kernel);
+                assert_eq!(e.predict_proba_batch(flat), branchless_probas, "{}", v.name());
+                assert_eq!(e.predict_batch(flat), branchless_classes, "{}", v.name());
+                let via_full = compile_variant_full(&m, v, NodeOrder::Breadth, kernel);
+                assert_eq!(via_full.kernel(), kernel);
+                assert_eq!(via_full.predict_batch(flat), branchless_classes, "{}", v.name());
+            }
         }
     }
 

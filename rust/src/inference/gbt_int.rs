@@ -21,6 +21,7 @@ use super::batch::{
     TraversalKernel,
 };
 use super::compiled::{pack_tree, Node8, NodeOrder, LEAF, MAX_FEATURES, MAX_TREE_NODES};
+use super::quickscorer::QsPlan;
 use crate::flint::ordered_u32;
 use crate::ir::{argmax, softmax, Model, ModelKind, Node};
 use crate::quant::{margin_scale, margin_to_fixed, MarginScale};
@@ -40,6 +41,9 @@ pub struct GbtIntEngine {
     leaf_q: Vec<i64>,
     /// Quantized base score per class.
     base_q: Vec<i64>,
+    /// QuickScorer condition-stream plan (shared builder with the RF
+    /// engines — GBT leaf payload indices follow the same IR order).
+    qs: QsPlan,
     kernel: TraversalKernel,
 }
 
@@ -62,6 +66,7 @@ impl GbtIntEngine {
             nodes: Vec::new(),
             leaf_q: Vec::new(),
             base_q: model.base_score.iter().map(|&b| margin_to_fixed(b, scale)).collect(),
+            qs: QsPlan::build(model),
             kernel: TraversalKernel::default(),
         };
         // Per-tree scratch SoA in IR order, packed to the BFS
@@ -194,6 +199,7 @@ impl GbtIntEngine {
             }
             accumulate_batch::<OrdDomain, i64>(
                 &self.packed(),
+                Some(&self.qs),
                 rows_ord,
                 n_rows,
                 c,
@@ -257,7 +263,7 @@ mod tests {
     }
 
     #[test]
-    fn batched_margins_bit_identical_to_scalar_both_kernels() {
+    fn batched_margins_bit_identical_to_scalar_all_kernels() {
         let ds = shuttle_like(800, 15);
         let m = train_gbt(&ds, &GbtParams { n_rounds: 4, max_depth: 4, ..Default::default() }, 5);
         let mut e = GbtIntEngine::compile(&m);

@@ -23,17 +23,20 @@
 //! `cargo bench --bench batch_throughput`). [`NodeOrder`] selects the
 //! compiled node layout (both canonicalized to the child-adjacent
 //! 8-byte [`compiled::Node8`] encoding), and [`TraversalKernel`] selects
-//! the branchy early-exit walk or the predicated branchless fixed-trip
-//! walk — every combination is bit-identical; they are pure performance
-//! knobs.
+//! the branchy early-exit walk, the predicated branchless fixed-trip
+//! walk, or the [`quickscorer`] bitvector evaluation (feature-sorted
+//! condition streams + `u64` false-leaf masks, no node walks at all) —
+//! every combination is bit-identical; they are pure performance knobs.
 
 pub mod batch;
 pub mod compiled;
 pub mod engines;
 pub mod gbt_int;
+pub mod quickscorer;
 
 pub use batch::{TraversalKernel, TILE_ROWS};
 pub use compiled::{CompiledForest, Node8, NodeOrder, LEAF};
+pub use quickscorer::{QsPlan, QS_MAX_LEAVES};
 pub use engines::{
     compile_variant, compile_variant_full, compile_variant_with, Engine, FlIntEngine, FloatEngine,
     IntEngine, Variant,

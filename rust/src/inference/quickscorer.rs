@@ -1,0 +1,566 @@
+//! QuickScorer-style bitvector forest evaluation — the third traversal
+//! strategy next to the branchy and branchless tile walkers.
+//!
+//! Following the QuickScorer family (Lucchese et al.; evaluated on ARM in
+//! Koschel et al., *Fast Inference of Tree Ensembles on ARM Devices*),
+//! this pass removes node traversal entirely. At compile time every
+//! eligible tree (≤ [`QS_MAX_LEAVES`] leaves, so one `u64` bitvector
+//! covers it) is lowered to:
+//!
+//! * an **in-order leaf numbering** — leaf `b` of a tree is bit `b` of the
+//!   tree's bitvector, and `leaf_payloads` maps bits back to rows of the
+//!   engines' leaf tables;
+//! * one **condition** per branch node: `(threshold word, local tree,
+//!   u64 false-leaf mask)`. The mask clears exactly the bits of the
+//!   branch's *left* subtree — the leaves that become unreachable when
+//!   the `<=`-goes-left split is **false** (the row goes right).
+//!
+//! Conditions are then bucketed **per feature and sorted ascending by
+//! threshold**. Evaluating a row is two linear scans per feature: because
+//! the IR split is `x <= t` goes left, the false conditions (`x > t`) are
+//! exactly a *prefix* of the sorted stream, so the scan ANDs masks until
+//! the first true condition and stops. After all features, each tree's
+//! exit leaf is the **lowest set bit** of its bitvector:
+//!
+//! * the true exit leaf is never cleared (a false branch with the exit
+//!   leaf in its left subtree would have to be an ancestor the walk went
+//!   *left* at — contradiction), and
+//! * every leaf left of it is cleared by the lowest common ancestor with
+//!   the exit leaf, which the walk took rightward (condition false).
+//!
+//! Everything is u32/u64 integer arithmetic: with ordered-u32 thresholds
+//! (the source paper's FlInt domain) the whole forest evaluation is
+//! integer-only end to end, with **zero** precision loss — the scan
+//! performs the exact same `x > t` comparisons as the walkers, so the
+//! exit leaves are identical bit for bit, and the driver accumulates
+//! leaf payloads per row in ascending tree order (the scalar sequence),
+//! preserving the crate's batch-parity invariant for float sums too.
+//!
+//! ## Cache blocking (BlockQS)
+//!
+//! Trees are partitioned into blocks of [`QS_BLOCK_TREES`]; the driver
+//! iterates row tiles × blocks so a block's condition streams and the
+//! tile's bitvectors stay cache-resident while every row of the tile
+//! scans them.
+//!
+//! ## Eligibility and fallback
+//!
+//! Trees with more than [`QS_MAX_LEAVES`] leaves do not fit a `u64` mask
+//! and **fall back per-tree to the branchless lockstep walker** inside
+//! the same driver (accumulation order is unchanged). The fallback is
+//! logged at plan-build time — never silent — and surfaced by
+//! `ir::stats` and the CLI `inspect` command.
+
+use super::batch::{
+    walk_tile_lockstep, walk_tile_lockstep_tail, Domain, PackedTrees, TILE_ROWS,
+};
+use crate::flint::ordered_u32;
+use crate::ir::{Model, Node, Tree};
+
+/// Widest tree a `u64` leaf bitvector can cover.
+pub const QS_MAX_LEAVES: usize = 64;
+
+/// Trees per cache block of the blocked driver: 64 bitvectors per row are
+/// 512 bytes, so a full [`TILE_ROWS`] tile's live state stays within L1
+/// while the block's condition streams stream through it.
+pub const QS_BLOCK_TREES: usize = 64;
+
+/// One cache block of the compiled plan: up to [`QS_BLOCK_TREES`] trees'
+/// conditions, bucketed per feature (`feature_offsets`) and sorted
+/// ascending by threshold within each bucket. The threshold is stored in
+/// both 32-bit encodings (ordered-u32 and raw f32 bits) so one plan
+/// serves both comparison domains; the sort order is shared because
+/// [`ordered_u32`] is monotone in the float value.
+#[derive(Clone, Debug)]
+pub struct QsBlock {
+    /// Trees in this block.
+    pub n_trees: usize,
+    /// Global tree id per local tree index.
+    pub tree_ids: Vec<u32>,
+    /// Initial bitvector per local tree: one bit per leaf, all set.
+    pub init: Vec<u64>,
+    /// Condition-stream bucket boundaries; length `n_features + 1`.
+    pub feature_offsets: Vec<u32>,
+    /// Ordered-u32 threshold words (FlInt / InTreeger / GBT domain).
+    pub thresh_ord: Vec<u32>,
+    /// Raw f32-bit threshold words (float-baseline domain).
+    pub thresh_f32: Vec<u32>,
+    /// Local tree index of each condition.
+    pub tree_of: Vec<u16>,
+    /// False-leaf mask of each condition (clears the left subtree).
+    pub masks: Vec<u64>,
+    /// Per local tree, start of its bit→payload row in `leaf_payloads`;
+    /// length `n_trees + 1`.
+    pub leaf_offsets: Vec<u32>,
+    /// Leaf-table payload row per (local tree, in-order leaf bit).
+    pub leaf_payloads: Vec<u32>,
+}
+
+/// A forest compiled for QuickScorer evaluation: cache blocks of eligible
+/// trees plus the (loudly logged) walker-fallback tree set.
+#[derive(Clone, Debug)]
+pub struct QsPlan {
+    pub n_trees: usize,
+    pub n_features: usize,
+    pub blocks: Vec<QsBlock>,
+    /// Global ids of trees with more than [`QS_MAX_LEAVES`] leaves; the
+    /// driver walks these with the branchless lockstep kernel.
+    pub fallback: Vec<u32>,
+}
+
+impl QsPlan {
+    /// Number of trees evaluated by bitvector (not the walker fallback).
+    pub fn n_eligible(&self) -> usize {
+        self.n_trees - self.fallback.len()
+    }
+
+    /// Compile a plan with the default cache-block width.
+    pub fn build(model: &Model) -> QsPlan {
+        Self::build_with(model, QS_BLOCK_TREES)
+    }
+
+    /// Compile a plan with an explicit trees-per-block width (the C
+    /// emitter uses one block; tests shrink it to force block seams).
+    ///
+    /// Leaf payload indices count leaves in IR node order across the
+    /// whole model — exactly the assignment `CompiledForest::compile`
+    /// and `GbtIntEngine::compile` use for their leaf tables, so the
+    /// plan indexes either engine's tables directly.
+    pub fn build_with(model: &Model, block_trees: usize) -> QsPlan {
+        assert!(block_trees >= 1);
+        let n_trees = model.trees.len();
+        let mut fallback: Vec<u32> = Vec::new();
+        let mut eligible: Vec<u32> = Vec::new();
+        for (t, tree) in model.trees.iter().enumerate() {
+            if tree.n_leaves() <= QS_MAX_LEAVES {
+                eligible.push(t as u32);
+            } else {
+                fallback.push(t as u32);
+            }
+        }
+        if !fallback.is_empty() {
+            // Loud by design: a model silently missing the fast path is a
+            // deployment surprise; `inspect` shows the same information.
+            eprintln!(
+                "quickscorer: {}/{} trees ineligible (> {QS_MAX_LEAVES} leaves), \
+                 falling back to the branchless walker (tree ids {:?})",
+                fallback.len(),
+                n_trees,
+                fallback
+            );
+        }
+        // Leaf payload row per tree, in IR node order (global counter).
+        let mut payload_base = vec![0u32; n_trees];
+        let mut counter = 0u32;
+        for (t, tree) in model.trees.iter().enumerate() {
+            payload_base[t] = counter;
+            counter += tree.n_leaves() as u32;
+        }
+
+        let mut blocks = Vec::new();
+        for chunk in eligible.chunks(block_trees) {
+            blocks.push(build_block(model, chunk, &payload_base));
+        }
+        QsPlan { n_trees, n_features: model.n_features, blocks, fallback }
+    }
+}
+
+/// One condition during block construction (pre-sort).
+struct Cond {
+    feature: u32,
+    word: u32,
+    bits: u32,
+    local: u16,
+    mask: u64,
+}
+
+fn build_block(model: &Model, tree_ids: &[u32], payload_base: &[u32]) -> QsBlock {
+    // `Cond::local` is u16; the default block width is 64, but the C
+    // emitter builds one whole-forest block, so keep the bound explicit.
+    assert!(tree_ids.len() <= u16::MAX as usize + 1, "quickscorer block too wide");
+    let mut conds: Vec<Cond> = Vec::new();
+    let mut init = Vec::with_capacity(tree_ids.len());
+    let mut leaf_offsets = Vec::with_capacity(tree_ids.len() + 1);
+    let mut leaf_payloads: Vec<u32> = Vec::new();
+    for (local, &tid) in tree_ids.iter().enumerate() {
+        let tree = &model.trees[tid as usize];
+        let (ranges, inorder) = leaf_ranges(tree);
+        let n_leaves = inorder.len();
+        debug_assert!((1..=QS_MAX_LEAVES).contains(&n_leaves));
+        init.push(if n_leaves == QS_MAX_LEAVES { u64::MAX } else { (1u64 << n_leaves) - 1 });
+        leaf_offsets.push(leaf_payloads.len() as u32);
+        // bit b → payload row: payload indices count leaves in IR node
+        // order within the tree, offset by the model-wide base.
+        let mut payload_of_node = vec![0u32; tree.nodes.len()];
+        let mut k = 0u32;
+        for (i, node) in tree.nodes.iter().enumerate() {
+            if matches!(node, Node::Leaf { .. }) {
+                payload_of_node[i] = payload_base[tid as usize] + k;
+                k += 1;
+            }
+        }
+        leaf_payloads.extend(inorder.iter().map(|&i| payload_of_node[i]));
+        for node in &tree.nodes {
+            if let Node::Branch { feature, threshold, left, right: _ } = node {
+                let (lo, hi) = ranges[*left as usize];
+                let width = (hi - lo) as u64;
+                // A branch's left subtree holds at most n_leaves - 1 <= 63
+                // leaves (the right subtree has at least one), so the
+                // shift cannot overflow.
+                debug_assert!(width < 64);
+                let mask = !(((1u64 << width) - 1) << lo);
+                conds.push(Cond {
+                    feature: *feature,
+                    word: ordered_u32(*threshold),
+                    bits: threshold.to_bits(),
+                    local: local as u16,
+                    mask,
+                });
+            }
+        }
+    }
+    leaf_offsets.push(leaf_payloads.len() as u32);
+    // Bucket per feature, ascending threshold inside each bucket. The
+    // ordered-u32 word is monotone in the float value, so one sort key
+    // serves both comparison domains (ties need no ordering: equal words
+    // are all-false or all-true together for any row).
+    conds.sort_by_key(|c| (c.feature, c.word));
+    let mut feature_offsets = vec![0u32; model.n_features + 1];
+    for c in &conds {
+        feature_offsets[c.feature as usize + 1] += 1;
+    }
+    for f in 0..model.n_features {
+        feature_offsets[f + 1] += feature_offsets[f];
+    }
+    QsBlock {
+        n_trees: tree_ids.len(),
+        tree_ids: tree_ids.to_vec(),
+        init,
+        feature_offsets,
+        thresh_ord: conds.iter().map(|c| c.word).collect(),
+        thresh_f32: conds.iter().map(|c| c.bits).collect(),
+        tree_of: conds.iter().map(|c| c.local).collect(),
+        masks: conds.iter().map(|c| c.mask).collect(),
+        leaf_offsets,
+        leaf_payloads,
+    }
+}
+
+/// In-order (left-to-right) leaf numbering of one tree: returns per-node
+/// leaf-index ranges `[lo, hi)` plus the leaf node ids in bit order.
+/// Iterative, like every other tree pass in the crate.
+fn leaf_ranges(tree: &Tree) -> (Vec<(u32, u32)>, Vec<usize>) {
+    let n = tree.nodes.len();
+    let mut ranges = vec![(0u32, 0u32); n];
+    let mut inorder: Vec<usize> = Vec::new();
+    // (node, children_done) post-order with left pushed last (visited
+    // first), so leaves are numbered left to right.
+    let mut stack: Vec<(usize, bool)> = vec![(0, false)];
+    while let Some((i, children_done)) = stack.pop() {
+        match &tree.nodes[i] {
+            Node::Leaf { .. } => {
+                let b = inorder.len() as u32;
+                ranges[i] = (b, b + 1);
+                inorder.push(i);
+            }
+            Node::Branch { left, right, .. } => {
+                if children_done {
+                    ranges[i] = (ranges[*left as usize].0, ranges[*right as usize].1);
+                } else {
+                    stack.push((i, true));
+                    stack.push((*right as usize, false));
+                    stack.push((*left as usize, false));
+                }
+            }
+        }
+    }
+    (ranges, inorder)
+}
+
+/// Scan one row against one block's condition streams, ANDing false-leaf
+/// masks into `bv` (pre-initialized from `block.init`). `words` selects
+/// the threshold encoding of the caller's domain.
+#[inline]
+fn eval_block<D: Domain>(block: &QsBlock, words: &[u32], row: &[D::Elem], bv: &mut [u64]) {
+    let offs = &block.feature_offsets;
+    for (f, &x) in row.iter().enumerate() {
+        let (s, e) = (offs[f] as usize, offs[f + 1] as usize);
+        // Ascending thresholds make the false conditions (`go right`) a
+        // prefix: AND masks until the first true condition, then stop.
+        for i in s..e {
+            if !D::go_right(x, words[i]) {
+                break;
+            }
+            bv[block.tree_of[i] as usize] &= block.masks[i];
+        }
+    }
+}
+
+/// QuickScorer batch driver: row tiles × tree blocks, walker fallback for
+/// ineligible trees, then per-row accumulation in **ascending tree
+/// order** — the scalar engines' exact sequence, so float sums see the
+/// same rounding order and results stay bit-identical to the walkers.
+pub(crate) fn accumulate_qs<D: Domain, T>(
+    plan: &QsPlan,
+    trees: &PackedTrees,
+    rows: &[D::Elem],
+    n_rows: usize,
+    n_classes: usize,
+    leaf_table: &[T],
+    acc: &mut [T],
+) where
+    T: Copy + std::ops::AddAssign<T>,
+{
+    assert_eq!(acc.len(), n_rows * n_classes);
+    assert!(n_rows * trees.stride <= rows.len());
+    debug_assert_eq!(plan.n_trees, trees.tree_offsets.len() - 1);
+    debug_assert_eq!(plan.n_features, trees.stride);
+    let n_trees = plan.n_trees;
+    let stride = trees.stride;
+    let max_block = plan.blocks.iter().map(|b| b.n_trees).max().unwrap_or(0);
+    let mut bv = vec![0u64; max_block];
+    // Exit payload per (row-in-tile, tree): filled out of order (blocks,
+    // then fallback trees), consumed in tree order.
+    let mut payloads = vec![0u32; TILE_ROWS * n_trees];
+    let mut leaves = [0u32; TILE_ROWS];
+    let mut tile_start = 0;
+    while tile_start < n_rows {
+        let tile_rows = TILE_ROWS.min(n_rows - tile_start);
+        for block in &plan.blocks {
+            let words = D::qs_words(block);
+            for r in 0..tile_rows {
+                let base = (tile_start + r) * stride;
+                let row = &rows[base..base + stride];
+                let bv = &mut bv[..block.n_trees];
+                bv.copy_from_slice(&block.init);
+                eval_block::<D>(block, words, row, bv);
+                for (lt, &tid) in block.tree_ids.iter().enumerate() {
+                    let leaf = bv[lt].trailing_zeros() as usize;
+                    let lo = block.leaf_offsets[lt] as usize;
+                    payloads[r * n_trees + tid as usize] = block.leaf_payloads[lo + leaf];
+                }
+            }
+        }
+        for &t in &plan.fallback {
+            let t = t as usize;
+            if tile_rows == TILE_ROWS {
+                walk_tile_lockstep::<D>(trees, t, rows, tile_start, &mut leaves);
+            } else {
+                walk_tile_lockstep_tail::<D>(trees, t, rows, tile_start, tile_rows, &mut leaves);
+            }
+            for (r, &p) in leaves[..tile_rows].iter().enumerate() {
+                payloads[r * n_trees + t] = p;
+            }
+        }
+        for r in 0..tile_rows {
+            let row_acc =
+                &mut acc[(tile_start + r) * n_classes..(tile_start + r + 1) * n_classes];
+            for &p in &payloads[r * n_trees..r * n_trees + n_trees] {
+                let leaf = &leaf_table[p as usize * n_classes..(p as usize + 1) * n_classes];
+                for (a, &v) in row_acc.iter_mut().zip(leaf) {
+                    *a += v;
+                }
+            }
+        }
+        tile_start += tile_rows;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::shuttle_like;
+    use crate::inference::batch::{int_fixed_batch_with, OrdDomain, TraversalKernel};
+    use crate::inference::CompiledForest;
+    use crate::ir::ModelKind;
+    use crate::trees::{ForestParams, RandomForest};
+    use crate::util::check::balanced_tree;
+    use crate::util::Rng;
+
+    fn stump_model() -> Model {
+        Model {
+            kind: ModelKind::RandomForest,
+            n_features: 1,
+            n_classes: 2,
+            trees: vec![Tree {
+                nodes: vec![
+                    Node::Branch { feature: 0, threshold: 0.5, left: 1, right: 2 },
+                    Node::Leaf { values: vec![0.9, 0.1] },
+                    Node::Leaf { values: vec![0.2, 0.8] },
+                ],
+            }],
+            base_score: vec![0.0, 0.0],
+        }
+    }
+
+    #[test]
+    fn stump_plan_golden() {
+        let plan = QsPlan::build(&stump_model());
+        assert_eq!(plan.n_trees, 1);
+        assert!(plan.fallback.is_empty());
+        assert_eq!(plan.n_eligible(), 1);
+        assert_eq!(plan.blocks.len(), 1);
+        let b = &plan.blocks[0];
+        assert_eq!(b.n_trees, 1);
+        assert_eq!(b.tree_ids, vec![0]);
+        assert_eq!(b.init, vec![0b11]);
+        assert_eq!(b.feature_offsets, vec![0, 1]);
+        assert_eq!(b.thresh_ord, vec![ordered_u32(0.5)]);
+        assert_eq!(b.thresh_f32, vec![0.5f32.to_bits()]);
+        assert_eq!(b.tree_of, vec![0]);
+        // The root's left subtree is bit 0: mask clears exactly that bit.
+        assert_eq!(b.masks, vec![!1u64]);
+        assert_eq!(b.leaf_offsets, vec![0, 2]);
+        assert_eq!(b.leaf_payloads, vec![0, 1]);
+    }
+
+    #[test]
+    fn streams_sorted_and_masks_cover_leaves() {
+        let ds = shuttle_like(1500, 41);
+        let m = RandomForest::train(
+            &ds,
+            &ForestParams { n_trees: 9, max_depth: 6, ..Default::default() },
+            41,
+        );
+        let plan = QsPlan::build(&m);
+        assert!(plan.fallback.is_empty(), "depth-6 trees are always eligible");
+        let n_conds: usize = plan.blocks.iter().map(|b| b.masks.len()).sum();
+        let n_branches: usize = m.trees.iter().map(|t| t.nodes.len() - t.n_leaves()).sum();
+        assert_eq!(n_conds, n_branches, "one condition per branch");
+        for b in &plan.blocks {
+            assert_eq!(*b.feature_offsets.last().unwrap() as usize, b.thresh_ord.len());
+            for f in 0..m.n_features {
+                let (s, e) = (b.feature_offsets[f] as usize, b.feature_offsets[f + 1] as usize);
+                for i in s..e.saturating_sub(1) {
+                    assert!(b.thresh_ord[i] <= b.thresh_ord[i + 1], "stream not sorted");
+                }
+            }
+            for (lt, &tid) in b.tree_ids.iter().enumerate() {
+                let n_leaves = m.trees[tid as usize].n_leaves();
+                let lo = b.leaf_offsets[lt] as usize;
+                let hi = b.leaf_offsets[lt + 1] as usize;
+                assert_eq!(hi - lo, n_leaves, "one payload per leaf");
+                assert_eq!(b.init[lt].count_ones() as usize, n_leaves);
+            }
+        }
+    }
+
+    #[test]
+    fn qs_matches_walkers_bit_for_bit() {
+        let ds = shuttle_like(1500, 42);
+        let m = RandomForest::train(
+            &ds,
+            &ForestParams { n_trees: 9, max_depth: 6, ..Default::default() },
+            42,
+        );
+        let f = CompiledForest::compile(&m);
+        for n in [1usize, 7, 8, 9, 200] {
+            let flat = &ds.features[..n * ds.n_features];
+            let qs = int_fixed_batch_with(&f, flat, TraversalKernel::QuickScorer);
+            let walker = int_fixed_batch_with(&f, flat, TraversalKernel::Branchless);
+            assert_eq!(qs, walker, "n={n}");
+        }
+    }
+
+    #[test]
+    fn small_blocks_seam_parity() {
+        // Force multiple cache blocks and check the driver stitches them
+        // (and their tree-id mapping) correctly against the branchy path.
+        let ds = shuttle_like(1200, 43);
+        let m = RandomForest::train(
+            &ds,
+            &ForestParams { n_trees: 11, max_depth: 5, ..Default::default() },
+            43,
+        );
+        let f = CompiledForest::compile(&m);
+        let plan = QsPlan::build_with(&m, 3);
+        assert_eq!(plan.blocks.len(), 4, "11 trees at 3 per block");
+        let n = 37usize;
+        let flat = &ds.features[..n * ds.n_features];
+        let rows_ord: Vec<u32> = flat.iter().map(|&x| ordered_u32(x)).collect();
+        let mut got = vec![0u32; n * f.n_classes];
+        accumulate_qs::<OrdDomain, u32>(
+            &plan,
+            &f.packed_ord(),
+            &rows_ord,
+            n,
+            f.n_classes,
+            &f.leaf_u32,
+            &mut got,
+        );
+        let want = int_fixed_batch_with(&f, flat, TraversalKernel::Branchy);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn eligibility_boundary_63_64_65() {
+        let mut rng = Rng::new(0x95);
+        let nf = 4usize;
+        let nc = 3usize;
+        let m = Model {
+            kind: ModelKind::RandomForest,
+            n_features: nf,
+            n_classes: nc,
+            trees: vec![
+                balanced_tree(&mut rng, 63, nf, nc),
+                balanced_tree(&mut rng, 64, nf, nc),
+                balanced_tree(&mut rng, 65, nf, nc),
+            ],
+            base_score: vec![0.0; nc],
+        };
+        m.validate().expect("hand-built model must validate");
+        let plan = QsPlan::build(&m);
+        assert_eq!(plan.fallback, vec![2], "only the 65-leaf tree falls back");
+        assert_eq!(plan.n_eligible(), 2);
+        let b = &plan.blocks[0];
+        assert_eq!(b.tree_ids, vec![0, 1]);
+        assert_eq!(b.init[0], (1u64 << 63) - 1);
+        assert_eq!(b.init[1], u64::MAX, "64-leaf tree uses the full mask");
+        // Hybrid evaluation (bitvectors + walker fallback) still matches
+        // the pure walker path bit for bit, including a ragged tail.
+        let f = CompiledForest::compile(&m);
+        let mut rows = Vec::new();
+        for i in 0..21 {
+            for j in 0..nf {
+                rows.push(rng.uniform_in(-60.0, 60.0) + (i + j) as f32 * 0.01);
+            }
+        }
+        let qs = int_fixed_batch_with(&f, &rows, TraversalKernel::QuickScorer);
+        let walker = int_fixed_batch_with(&f, &rows, TraversalKernel::Branchless);
+        assert_eq!(qs, walker);
+    }
+
+    #[test]
+    fn single_leaf_trees_have_no_conditions() {
+        let mut rng = Rng::new(5);
+        let nc = 2usize;
+        let m = Model {
+            kind: ModelKind::RandomForest,
+            n_features: 2,
+            n_classes: nc,
+            trees: (0..3)
+                .map(|_| {
+                    let raw: Vec<f32> = (0..nc).map(|_| rng.uniform_in(0.1, 1.0)).collect();
+                    let sum: f32 = raw.iter().sum();
+                    Tree {
+                        nodes: vec![Node::Leaf {
+                            values: raw.iter().map(|&x| x / sum).collect(),
+                        }],
+                    }
+                })
+                .collect(),
+            base_score: vec![0.0; nc],
+        };
+        m.validate().unwrap();
+        let plan = QsPlan::build(&m);
+        let b = &plan.blocks[0];
+        assert!(b.masks.is_empty());
+        assert_eq!(b.init, vec![1, 1, 1]);
+        let f = CompiledForest::compile(&m);
+        let rows = [0.3f32, -1.0, 2.0, 7.5];
+        assert_eq!(
+            int_fixed_batch_with(&f, &rows, TraversalKernel::QuickScorer),
+            int_fixed_batch_with(&f, &rows, TraversalKernel::Branchy),
+        );
+    }
+}

@@ -1,8 +1,12 @@
 //! Model-level statistics used by the evaluation harnesses: node/leaf
-//! counts, depth histograms, and the leaf-probability distribution the
-//! probability-to-integer conversion (paper §III-A) operates on.
+//! counts, depth histograms, the leaf-probability distribution the
+//! probability-to-integer conversion (paper §III-A) operates on, and
+//! per-tree QuickScorer eligibility (which trees fit a `u64` false-leaf
+//! mask and take the bitvector fast path — surfaced by the CLI
+//! `inspect` command so the walker fallback is never a mystery).
 
 use super::{Model, Node};
+use crate::inference::quickscorer::QS_MAX_LEAVES;
 
 /// Summary statistics of a trained model.
 #[derive(Clone, Debug, PartialEq)]
@@ -20,6 +24,14 @@ pub struct ModelStats {
     /// Expected number of branch nodes evaluated per inference assuming
     /// uniform leaf reachability (upper-bounded by max depth).
     pub mean_leaf_depth: f64,
+    /// Leaf count per tree (QuickScorer eligibility is
+    /// `<=` [`QS_MAX_LEAVES`]).
+    pub leaf_counts: Vec<usize>,
+    /// Trees whose leaves fit one `u64` QuickScorer bitvector.
+    pub qs_eligible_trees: usize,
+    /// Tree ids that exceed the mask width and take the branchless
+    /// walker fallback under the QuickScorer kernel.
+    pub qs_ineligible: Vec<usize>,
 }
 
 /// Compute summary statistics for a model.
@@ -30,9 +42,11 @@ pub fn stats(model: &Model) -> ModelStats {
     let mut depth_sum = 0usize;
     let mut leaf_depth_sum = 0usize;
     let mut leaf_count = 0usize;
+    let mut leaf_counts = Vec::with_capacity(model.trees.len());
 
     for tree in &model.trees {
-        // depth of each node via BFS from root
+        let mut tree_leaves = 0usize;
+        // depth of each node via DFS from root
         let mut depth = vec![0usize; tree.nodes.len()];
         let mut stack = vec![0usize];
         let mut seen = vec![false; tree.nodes.len()];
@@ -51,6 +65,7 @@ pub fn stats(model: &Model) -> ModelStats {
                 }
                 Node::Leaf { values } => {
                     n_leaves += 1;
+                    tree_leaves += 1;
                     leaf_depth_sum += depth[i];
                     leaf_count += 1;
                     for &v in values {
@@ -62,8 +77,15 @@ pub fn stats(model: &Model) -> ModelStats {
             }
             depth_sum += depth[i];
         }
+        leaf_counts.push(tree_leaves);
     }
 
+    let qs_ineligible: Vec<usize> = leaf_counts
+        .iter()
+        .enumerate()
+        .filter(|&(_, &c)| c > QS_MAX_LEAVES)
+        .map(|(t, _)| t)
+        .collect();
     let n_nodes = n_branches + n_leaves;
     ModelStats {
         n_trees: model.trees.len(),
@@ -74,6 +96,9 @@ pub fn stats(model: &Model) -> ModelStats {
         mean_depth: if n_nodes == 0 { 0.0 } else { depth_sum as f64 / n_nodes as f64 },
         min_nonzero_leaf_prob: if min_p.is_finite() { min_p } else { 0.0 },
         mean_leaf_depth: if leaf_count == 0 { 0.0 } else { leaf_depth_sum as f64 / leaf_count as f64 },
+        qs_eligible_trees: leaf_counts.len() - qs_ineligible.len(),
+        qs_ineligible,
+        leaf_counts,
     }
 }
 
@@ -108,6 +133,34 @@ mod tests {
         assert_eq!(s.max_depth, 1);
         assert_eq!(s.min_nonzero_leaf_prob, 0.1);
         assert!((s.mean_leaf_depth - 1.0).abs() < 1e-12);
+        assert_eq!(s.leaf_counts, vec![2]);
+        assert_eq!(s.qs_eligible_trees, 1);
+        assert!(s.qs_ineligible.is_empty());
+    }
+
+    #[test]
+    fn qs_eligibility_flags_wide_trees() {
+        // A right-leaning chain with QS_MAX_LEAVES + 1 leaves (one more
+        // than a u64 mask covers) next to the eligible stump.
+        let n_branches = QS_MAX_LEAVES;
+        let mut nodes = Vec::with_capacity(2 * n_branches + 1);
+        for i in 0..n_branches {
+            nodes.push(Node::Branch {
+                feature: 0,
+                threshold: i as f32,
+                left: (2 * i + 1) as u32,
+                right: (2 * i + 2) as u32,
+            });
+            nodes.push(Node::Leaf { values: vec![0.5, 0.5] });
+        }
+        nodes.push(Node::Leaf { values: vec![0.5, 0.5] });
+        let mut m = stump();
+        m.trees.push(crate::ir::Tree { nodes });
+        m.validate().unwrap();
+        let s = stats(&m);
+        assert_eq!(s.leaf_counts, vec![2, QS_MAX_LEAVES + 1]);
+        assert_eq!(s.qs_eligible_trees, 1);
+        assert_eq!(s.qs_ineligible, vec![1]);
     }
 
     #[test]
@@ -125,5 +178,10 @@ mod tests {
         assert_eq!(s.n_leaves, s.n_branches + s.n_trees);
         assert!(s.max_depth <= 6);
         assert!(s.min_nonzero_leaf_prob > 0.0 && s.min_nonzero_leaf_prob <= 1.0);
+        assert_eq!(s.leaf_counts.len(), 5);
+        assert_eq!(s.leaf_counts.iter().sum::<usize>(), s.n_leaves);
+        // Depth-6 trees have at most 64 leaves: all eligible.
+        assert_eq!(s.qs_eligible_trees, 5);
+        assert!(s.qs_ineligible.is_empty());
     }
 }

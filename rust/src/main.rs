@@ -165,6 +165,7 @@ fn cmd_codegen(args: &Args) {
         "ifelse" => Layout::IfElse,
         "native" => Layout::Native,
         "native-predicated" => Layout::NativePredicated,
+        "quickscorer" => Layout::QuickScorer,
         other => panic!("unknown layout '{other}'"),
     };
     let src = codegen::generate(&model, layout, variant);
@@ -263,11 +264,60 @@ fn cmd_tablei() {
     print!("{}", simarch::cores::table_i());
 }
 
-const USAGE: &str = "usage: intreeger <train|import|codegen|predict|simulate|serve|tablei> [--flags]\n\
+/// Model statistics with QuickScorer eligibility: shows *why* a model
+/// did or did not take the bitvector fast path.
+fn cmd_inspect(args: &Args) {
+    use intreeger::inference::QS_MAX_LEAVES;
+    let model = load_model(args);
+    let s = intreeger::ir::stats::stats(&model);
+    println!("kind:            {:?}", model.kind);
+    println!("features:        {}", model.n_features);
+    println!("classes:         {}", model.n_classes);
+    println!(
+        "trees:           {} ({} nodes: {} branches + {} leaves)",
+        s.n_trees, s.n_nodes, s.n_branches, s.n_leaves
+    );
+    println!(
+        "depth:           max {}, mean leaf depth {:.2}",
+        s.max_depth, s.mean_leaf_depth
+    );
+    println!("min leaf prob:   {:e} (nonzero)", s.min_nonzero_leaf_prob);
+    println!(
+        "quickscorer:     {}/{} trees eligible (<= {QS_MAX_LEAVES} leaves per u64 mask)",
+        s.qs_eligible_trees, s.n_trees
+    );
+    if s.qs_ineligible.is_empty() {
+        println!("                 whole forest takes the bitvector fast path");
+    } else {
+        println!(
+            "                 fallback to the branchless walker: trees {:?}",
+            s.qs_ineligible
+        );
+    }
+    if args.flag("trees") {
+        println!("per-tree:");
+        for (i, (tree, &leaves)) in model.trees.iter().zip(&s.leaf_counts).enumerate() {
+            println!(
+                "  tree {i:>3}: {:>5} nodes, {:>4} leaves, depth {:>2}  {}",
+                tree.nodes.len(),
+                leaves,
+                tree.depth(),
+                if leaves <= QS_MAX_LEAVES {
+                    "qs-eligible".to_string()
+                } else {
+                    format!("walker fallback (> {QS_MAX_LEAVES} leaves)")
+                }
+            );
+        }
+    }
+}
+
+const USAGE: &str = "usage: intreeger <train|import|codegen|predict|inspect|simulate|serve|tablei> [--flags]\n\
   train    --dataset shuttle|esa|csv:PATH [--rows N] [--trees N] [--depth D] [--gbt] [--seed S] [--out model.json]\n\
   import   --file dump.txt [--format lightgbm|xgboost] [--features N --classes N] [--out model.json]\n\
-  codegen  --model model.json [--variant float|flint|intreeger] [--layout ifelse|native|native-predicated] [--out model.c]\n\
+  codegen  --model model.json [--variant float|flint|intreeger] [--layout ifelse|native|native-predicated|quickscorer] [--out model.c]\n\
   predict  --model model.json --csv data.csv [--engine float|flint|int]\n\
+  inspect  --model model.json [--trees]   (stats + per-tree QuickScorer eligibility)\n\
   simulate --model model.json [--dataset ...]\n\
   serve    --model model.json [--artifacts DIR] [--requests N] [--workers W] [--calibrate]\n\
   tablei\n";
@@ -290,6 +340,7 @@ fn main() {
         "import" => cmd_import(&args),
         "codegen" => cmd_codegen(&args),
         "predict" => cmd_predict(&args),
+        "inspect" => cmd_inspect(&args),
         "simulate" => cmd_simulate(&args),
         "serve" => cmd_serve(&args),
         "tablei" => cmd_tablei(),

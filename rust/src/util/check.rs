@@ -72,6 +72,52 @@ pub fn f32_in(rng: &mut Rng, lo: f32, hi: f32) -> f32 {
     rng.uniform_in(lo, hi)
 }
 
+/// Random probability vector of length `nc` that passes IR validation
+/// (every entry positive, sums to 1) — for hand-built test forests.
+pub fn random_dist(rng: &mut Rng, nc: usize) -> Vec<f32> {
+    let raw: Vec<f32> = (0..nc).map(|_| rng.uniform_in(0.05, 1.0)).collect();
+    let sum: f32 = raw.iter().sum();
+    raw.iter().map(|&x| x / sum).collect()
+}
+
+/// Hand-built balanced tree over exactly `n_leaves` leaves (split
+/// `n/2` / `n - n/2` recursively) — the only way to pin leaf counts at
+/// the QuickScorer 63/64/65-leaf u64-mask eligibility boundary, shared
+/// by the unit and integration parity suites.
+pub fn balanced_tree(
+    rng: &mut Rng,
+    n_leaves: usize,
+    nf: usize,
+    nc: usize,
+) -> crate::ir::Tree {
+    use crate::ir::Node;
+    fn build(nodes: &mut Vec<Node>, rng: &mut Rng, n: usize, nf: usize, nc: usize) -> u32 {
+        let idx = nodes.len() as u32;
+        if n == 1 {
+            let values = random_dist(rng, nc);
+            nodes.push(Node::Leaf { values });
+        } else {
+            nodes.push(Node::Branch {
+                feature: rng.below(nf) as u32,
+                threshold: rng.uniform_in(-50.0, 50.0),
+                left: 0,
+                right: 0,
+            });
+            let l = build(nodes, rng, n / 2, nf, nc);
+            let r = build(nodes, rng, n - n / 2, nf, nc);
+            if let Node::Branch { left, right, .. } = &mut nodes[idx as usize] {
+                *left = l;
+                *right = r;
+            }
+        }
+        idx
+    }
+    assert!(n_leaves >= 1);
+    let mut nodes = Vec::new();
+    build(&mut nodes, rng, n_leaves, nf, nc);
+    crate::ir::Tree { nodes }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -110,6 +156,15 @@ mod tests {
             }
         }
         assert!(neg > 300 && neg < 700, "sign balance off: {neg}");
+    }
+
+    #[test]
+    fn balanced_tree_pins_leaf_count_and_validates() {
+        let mut rng = Rng::new(7);
+        for n in [1usize, 2, 63, 64, 65] {
+            let t = balanced_tree(&mut rng, n, 3, 2);
+            assert_eq!(t.n_leaves(), n);
+        }
     }
 
     #[test]

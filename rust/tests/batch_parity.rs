@@ -1,17 +1,19 @@
-//! Batch-vs-scalar parity suite (ISSUE 1 + ISSUE 2 acceptance): for
-//! every engine variant, both node layouts and **both tile-walk kernels**
-//! (branchy early-exit and predicated branchless fixed-trip), the batch
-//! kernel must be **element-wise identical** to the per-row path —
-//! including ragged final tiles (batch sizes 1, R−1, R, R+1) and a batch
-//! large enough to cross many tiles (1000). Probabilities are compared
-//! with `assert_eq` on the raw f32s: the invariant is bit-identity, not
-//! closeness.
+//! Batch-vs-scalar parity suite (ISSUE 1 + 2 + 3 acceptance): for every
+//! engine variant, both node layouts and **all three kernels** (branchy
+//! early-exit, predicated branchless fixed-trip, and the QuickScorer
+//! bitvector evaluation), the batch kernel must be **element-wise
+//! identical** to the per-row path — including ragged final tiles
+//! (batch sizes 1, R−1, R, R+1, and the exhaustive 1..=17 sweep) and a
+//! batch large enough to cross many tiles (1000). Probabilities are
+//! compared with `assert_eq` on the raw f32s: the invariant is
+//! bit-identity, not closeness.
 //!
 //! The randomized topology suite additionally sweeps hand-built models
 //! with trees of depth 0..=16 — single-leaf trees, stumps, a
 //! full-depth-16 chain, and random ragged mixtures — plus rows that land
 //! *exactly on* split thresholds, the boundary the `<=`-goes-left /
-//! `>`-goes-right negation must preserve.
+//! `>`-goes-right negation must preserve, and boundary trees at
+//! 63/64/65 leaves (the u64-mask QuickScorer eligibility edge).
 
 use intreeger::data::{esa_like, shuttle_like, synth, SynthSpec};
 use intreeger::inference::{
@@ -20,6 +22,7 @@ use intreeger::inference::{
 };
 use intreeger::ir::{Model, ModelKind, Node, Tree};
 use intreeger::trees::{train_gbt, ForestParams, GbtParams, RandomForest};
+use intreeger::util::check::{balanced_tree, random_dist};
 use intreeger::util::Rng;
 
 /// The sweep of batch sizes exercising empty, sub-tile, exact-tile,
@@ -137,13 +140,6 @@ fn rf_batch_parity_across_model_seeds() {
 
 // ---------------------------------------------------------------------------
 // Randomized tree-topology suite (hand-built IR models).
-
-/// A probability vector of length `nc` that passes IR validation.
-fn random_dist(rng: &mut Rng, nc: usize) -> Vec<f32> {
-    let raw: Vec<f32> = (0..nc).map(|_| rng.uniform_in(0.05, 1.0)).collect();
-    let sum: f32 = raw.iter().sum();
-    raw.iter().map(|&x| x / sum).collect()
-}
 
 /// Random tree with maximum depth `max_depth` (pre-order IR layout;
 /// interior nodes become leaves early with probability ~0.3, so trees
@@ -311,8 +307,59 @@ fn degenerate_forests_parity() {
     assert_parity(&stumps, &[rows.as_slice()], "stumps");
 }
 
+/// The u64-mask eligibility edge: one forest mixing trees of exactly 63,
+/// 64 and 65 leaves (the last falls back to the walker inside the
+/// QuickScorer driver) — classes, raw f32 probas and fixed accumulators
+/// must stay bit-identical to the scalar walkers for every variant ×
+/// layout × kernel, at ragged and tile-aligned batch sizes.
 #[test]
-fn gbt_batch_parity_both_kernels() {
+fn qs_eligibility_boundary_63_64_65_leaves() {
+    let nf = 6usize;
+    let nc = 3usize;
+    for seed in [21u64, 22] {
+        let mut rng = Rng::new(seed);
+        let model = Model {
+            kind: ModelKind::RandomForest,
+            n_features: nf,
+            n_classes: nc,
+            trees: vec![
+                balanced_tree(&mut rng, 63, nf, nc),
+                balanced_tree(&mut rng, 64, nf, nc),
+                balanced_tree(&mut rng, 65, nf, nc),
+                balanced_tree(&mut rng, 1, nf, nc),
+            ],
+            base_score: vec![0.0; nc],
+        };
+        model.validate().expect("hand-built boundary model must validate");
+        let row_sets: Vec<Vec<f32>> = [1usize, TILE_ROWS, TILE_ROWS + 5, 41]
+            .iter()
+            .map(|&n| probe_rows(&mut rng, &model, n))
+            .collect();
+        let batches: Vec<&[f32]> = row_sets.iter().map(|r| r.as_slice()).collect();
+        assert_parity(&model, &batches, &format!("qs-boundary{seed}"));
+    }
+}
+
+/// Ragged-tail acceptance (satellite): every batch size 1..=17 — all
+/// tail widths around one and two full tiles — must be element-wise
+/// identical to the scalar path for every variant × layout × kernel.
+/// Before the duplicated-lane tail fix, tails silently took the branchy
+/// walker; this pins the whole batch to the selected kernel.
+#[test]
+fn ragged_tail_parity_sizes_1_to_17() {
+    let ds = shuttle_like(600, 38);
+    let model = RandomForest::train(
+        &ds,
+        &ForestParams { n_trees: 7, max_depth: 6, ..Default::default() },
+        38,
+    );
+    let batches: Vec<&[f32]> =
+        (1..=17).map(|n| &ds.features[..n * ds.n_features]).collect();
+    assert_parity(&model, &batches, "tail");
+}
+
+#[test]
+fn gbt_batch_parity_all_kernels() {
     let ds = shuttle_like(1500, 35);
     let model =
         train_gbt(&ds, &GbtParams { n_rounds: 5, max_depth: 4, ..Default::default() }, 35);

@@ -91,6 +91,31 @@ fn simulate_outputs_all_cores_and_variants() {
 }
 
 #[test]
+fn inspect_reports_quickscorer_eligibility() {
+    let dir = tmpdir();
+    let model = dir.join("inspect_model.json");
+    let st = Command::new(bin())
+        .args(["train", "--dataset", "shuttle", "--rows", "1000", "--trees", "3", "--depth", "5",
+               "--seed", "9", "--out"])
+        .arg(&model)
+        .status()
+        .unwrap();
+    assert!(st.success());
+    let out = Command::new(bin())
+        .args(["inspect", "--model"])
+        .arg(&model)
+        .arg("--trees")
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "inspect failed: {}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("quickscorer:"), "missing eligibility summary in:\n{text}");
+    assert!(text.contains("3/3 trees eligible"), "depth-5 trees must all be eligible:\n{text}");
+    assert!(text.contains("tree   0:"), "missing per-tree table:\n{text}");
+    assert!(text.contains("qs-eligible"), "missing per-tree verdict:\n{text}");
+}
+
+#[test]
 fn tablei_prints_table() {
     let out = Command::new(bin()).arg("tablei").output().unwrap();
     assert!(out.status.success());

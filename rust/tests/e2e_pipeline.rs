@@ -35,11 +35,14 @@ fn full_pipeline_shuttle() {
         assert_eq!(a, ie.predict(test.row(i)), "int row {i}");
     }
 
-    // generated C (all three layouts, including the predicated
-    // child-adjacent form) matches the integer engine bit-exactly
+    // generated C (all four layouts, including the predicated
+    // child-adjacent form and the QuickScorer bitvector form) matches
+    // the integer engine bit-exactly
     if codegen::compile::gcc_available() {
         let rows: Vec<f32> = test.features[..200 * 7].to_vec();
-        for layout in [Layout::IfElse, Layout::Native, Layout::NativePredicated] {
+        for layout in
+            [Layout::IfElse, Layout::Native, Layout::NativePredicated, Layout::QuickScorer]
+        {
             let src = codegen::generate(&model, layout, Variant::IntTreeger);
             let bin = CBinary::compile(&src, Variant::IntTreeger, 7, 7, "e2e_test").unwrap();
             let out = bin.predict_u32(&rows).unwrap();
