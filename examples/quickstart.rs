@@ -1,46 +1,70 @@
-//! Quickstart: dataset → trained Random Forest → integer-only C, in
-//! under a minute. (`cargo run --release --example quickstart`)
+//! Quickstart: the paper's Fig 1 loop in one call — dataset → trained
+//! Random Forest → quantized IR → **verified** integer-only C + report.
+//! (`cargo run --release --example quickstart`)
 //!
-//! This is the paper's Fig 1 pipeline at its smallest: train on a
-//! Shuttle-shaped dataset, verify that the integer-only model predicts
-//! *identically* to the float model, and emit the architecture-agnostic
-//! C file a user would drop into their firmware.
+//! This drives the same `pipeline` module the `intreeger pipeline` CLI
+//! command uses: train on a Shuttle-shaped dataset, machine-check that
+//! the integer-only model predicts *identically* to the float model on
+//! a stratified holdout (every engine × traversal kernel), and emit the
+//! architecture-agnostic C file plus `report.json` / `REPORT.md`.
 
-use intreeger::codegen::{generate, Layout};
 use intreeger::data::shuttle_like;
-use intreeger::inference::{Engine, FloatEngine, IntEngine, Variant};
-use intreeger::trees::{accuracy, ForestParams, RandomForest};
-use intreeger::util::Rng;
+use intreeger::pipeline::{run, PipelineConfig};
 
 fn main() {
-    // 1. Dataset in (here: the synthetic Shuttle stand-in; use
-    //    `data::csv::read_file` for your own CSV).
+    // 1. Dataset in (synthetic Shuttle stand-in; point the CLI at any
+    //    CSV with `intreeger pipeline --csv data.csv --target label`).
     let ds = shuttle_like(8_000, 42);
-    let (train, test) = ds.train_test_split(0.25, &mut Rng::new(1));
-    println!("dataset: {} rows train / {} test, {} features, {} classes",
-        train.n_rows(), test.n_rows(), ds.n_features, ds.n_classes);
 
-    // 2. Train.
-    let model = RandomForest::train(
-        &train,
-        &ForestParams { n_trees: 10, max_depth: 6, ..Default::default() },
-        7,
+    // 2..6. Split, train, quantize, verify, emit, report — one call.
+    let out = std::env::temp_dir().join("intreeger_quickstart");
+    let cfg = PipelineConfig {
+        n_trees: 10,
+        max_depth: 6,
+        source: "synthetic:shuttle".to_string(),
+        ..Default::default()
+    };
+    let outcome = run(&ds, &out, &cfg).expect("pipeline (an Err here means parity FAILED)");
+
+    // `run` returning Ok IS the machine-checked "no loss of precision"
+    // verdict; unpack the numbers for show.
+    let r = &outcome.report;
+    let rf = &r.models[0];
+    println!(
+        "dataset: {} rows ({} train / {} holdout), {} features, {} classes",
+        r.dataset.rows, r.dataset.train_rows, r.dataset.holdout_rows,
+        r.dataset.features, r.dataset.classes
     );
-    println!("holdout accuracy: {:.4}", accuracy(&model, &test));
-
-    // 3. No-loss check: float vs integer-only predictions are identical.
-    let fe = FloatEngine::compile(&model);
-    let ie = IntEngine::compile(&model);
-    let mismatches = (0..test.n_rows())
-        .filter(|&i| fe.predict(test.row(i)) != ie.predict(test.row(i)))
-        .count();
-    println!("prediction mismatches float vs integer-only: {mismatches} (paper: always 0)");
-    assert_eq!(mismatches, 0);
-
-    // 4. Integer-only architecture-agnostic C out.
-    let c = generate(&model, Layout::IfElse, Variant::IntTreeger);
-    let path = std::env::temp_dir().join("intreeger_quickstart.c");
-    std::fs::write(&path, &c).expect("write C");
-    println!("wrote {} ({} bytes of freestanding C, zero float ops)", path.display(), c.len());
-    println!("compile it anywhere: gcc -O3 {} -o model && ./model bench 100 1000", path.display());
+    println!(
+        "verified: float vs integer-only argmax-identical on all {} holdout rows \
+         ({} engines x {} kernels, 0 mismatches)",
+        rf.parity.rows,
+        rf.parity.engines.len(),
+        rf.parity.kernels.len()
+    );
+    assert!(r.all_verified());
+    assert_eq!(rf.parity.mismatches, 0);
+    println!(
+        "accuracy: float {:.4} / integer-only {:.4}; max fixed-point error {:.2e} \
+         (paper bound n/2^32 = {:.2e})",
+        rf.parity.accuracy_float, rf.parity.accuracy_int,
+        rf.parity.max_abs_error, rf.parity.error_bound
+    );
+    let c = rf.codegen.as_ref().expect("RF emits C");
+    println!(
+        "artifacts in {}: {} ({} bytes of freestanding C, zero float ops{}), \
+         report.json, REPORT.md, manifest.json",
+        outcome.out_dir.display(),
+        c.file,
+        c.bytes,
+        if c.gcc_checked { ", gcc parity checked" } else { "" }
+    );
+    println!(
+        "compile it anywhere: gcc -O3 {} -o model && ./model bench 100 1000",
+        outcome.out_dir.join(&c.file).display()
+    );
+    println!(
+        "serve it: intreeger serve --pipeline {} --requests 1000",
+        outcome.out_dir.display()
+    );
 }

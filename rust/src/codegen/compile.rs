@@ -14,9 +14,23 @@ use std::process::{Command, Stdio};
 /// Compile/run failure.
 #[derive(Debug)]
 pub enum CompileError {
+    /// Filesystem/process I/O failure.
     Io(std::io::Error),
-    Gcc { status: Option<i32>, stderr: String },
-    Run { status: Option<i32>, stderr: String },
+    /// gcc exited non-zero.
+    Gcc {
+        /// gcc's exit code, if any.
+        status: Option<i32>,
+        /// gcc's stderr.
+        stderr: String,
+    },
+    /// The compiled binary exited non-zero.
+    Run {
+        /// The binary's exit code, if any.
+        status: Option<i32>,
+        /// The binary's stderr.
+        stderr: String,
+    },
+    /// The binary's output did not match the expected wire format.
     Protocol(String),
 }
 
@@ -173,10 +187,12 @@ impl CBinary {
         Err(CompileError::Protocol(format!("no ns_per_inference in output: {text}")))
     }
 
+    /// The numeric variant this binary was generated for.
     pub fn variant(&self) -> Variant {
         self.variant
     }
 
+    /// Path of the compiled binary on disk.
     pub fn path(&self) -> &std::path::Path {
         &self.path
     }

@@ -37,7 +37,10 @@ use crate::ir::Model;
 /// Code layout style.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Layout {
+    /// Nested `if/else` blocks, one function per tree (what the paper
+    /// evaluates; code-heavy, data-light).
     IfElse,
+    /// Node arrays walked by a loop (smaller code, more data).
     Native,
     /// Child-adjacent node tables walked by a predicated fixed-trip loop
     /// — the generated-C mirror of the Rust branchless batch kernel.
@@ -49,6 +52,7 @@ pub enum Layout {
 }
 
 impl Layout {
+    /// CLI / report name of the layout.
     pub fn name(self) -> &'static str {
         match self {
             Layout::IfElse => "ifelse",
@@ -56,6 +60,17 @@ impl Layout {
             Layout::NativePredicated => "native-predicated",
             Layout::QuickScorer => "quickscorer",
         }
+    }
+
+    /// Every layout, in CLI listing order — the single source of truth
+    /// the argument parser and the generated usage text both iterate.
+    pub fn all() -> [Layout; 4] {
+        [Layout::IfElse, Layout::Native, Layout::NativePredicated, Layout::QuickScorer]
+    }
+
+    /// Parse a CLI layout name (inverse of [`Self::name`]).
+    pub fn from_name(name: &str) -> Option<Layout> {
+        Layout::all().into_iter().find(|l| l.name() == name)
     }
 }
 
@@ -93,6 +108,15 @@ pub(crate) fn f32_lit(x: f32) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn layout_names_roundtrip() {
+        assert_eq!(Layout::all().len(), 4);
+        for l in Layout::all() {
+            assert_eq!(Layout::from_name(l.name()), Some(l));
+        }
+        assert_eq!(Layout::from_name("nope"), None);
+    }
 
     #[test]
     fn f32_lit_roundtrips() {

@@ -30,8 +30,11 @@ impl Default for BatchPolicy {
 /// Why a flush happened (exported in metrics).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum FlushReason {
+    /// The batch reached `max_batch` rows.
     Full,
+    /// The oldest request hit the `max_wait` deadline.
     Deadline,
+    /// An explicit drain (shutdown or channel close).
     Drain,
 }
 
@@ -43,15 +46,18 @@ pub struct Batcher<T> {
 }
 
 impl<T> Batcher<T> {
+    /// Empty batcher under a policy (`max_batch` must be positive).
     pub fn new(policy: BatchPolicy) -> Self {
         assert!(policy.max_batch > 0);
         Batcher { policy, pending: Vec::with_capacity(policy.max_batch), oldest: None }
     }
 
+    /// Items currently pending.
     pub fn len(&self) -> usize {
         self.pending.len()
     }
 
+    /// True when nothing is pending.
     pub fn is_empty(&self) -> bool {
         self.pending.is_empty()
     }
@@ -69,6 +75,7 @@ impl<T> Batcher<T> {
         None
     }
 
+    /// Add an item at the current time (see [`Self::push_at`]).
     pub fn push(&mut self, item: T) -> Option<(Vec<T>, FlushReason)> {
         self.push_at(item, Instant::now())
     }
@@ -83,6 +90,7 @@ impl<T> Batcher<T> {
         }
     }
 
+    /// Check the deadline at the current time (see [`Self::poll_at`]).
     pub fn poll(&mut self) -> Option<(Vec<T>, FlushReason)> {
         self.poll_at(Instant::now())
     }

@@ -8,14 +8,23 @@ use std::sync::Mutex;
 /// mutex touched once per request completion).
 #[derive(Default)]
 pub struct Metrics {
+    /// Requests submitted.
     pub requests: AtomicU64,
+    /// Responses delivered.
     pub responses: AtomicU64,
+    /// Batches served on the scalar route.
     pub batches_scalar: AtomicU64,
+    /// Batches served on the XLA route.
     pub batches_xla: AtomicU64,
+    /// Rows served on the scalar route.
     pub rows_scalar: AtomicU64,
+    /// Rows served on the XLA route.
     pub rows_xla: AtomicU64,
+    /// Flushes triggered by a full batch.
     pub flush_full: AtomicU64,
+    /// Flushes triggered by the wait deadline.
     pub flush_deadline: AtomicU64,
+    /// Flushes triggered by drain/shutdown.
     pub flush_drain: AtomicU64,
     latency_us: Mutex<Histogram>,
     batch_sizes: Mutex<SizeHistogram>,
@@ -77,33 +86,51 @@ impl SizeHistogram {
 /// Point-in-time copy for reporting.
 #[derive(Clone, Debug)]
 pub struct MetricsSnapshot {
+    /// Requests submitted.
     pub requests: u64,
+    /// Responses delivered.
     pub responses: u64,
+    /// Batches served on the scalar route.
     pub batches_scalar: u64,
+    /// Batches served on the XLA route.
     pub batches_xla: u64,
+    /// Rows served on the scalar route.
     pub rows_scalar: u64,
+    /// Rows served on the XLA route.
     pub rows_xla: u64,
+    /// Flushes triggered by a full batch.
     pub flush_full: u64,
+    /// Flushes triggered by the wait deadline.
     pub flush_deadline: u64,
+    /// Flushes triggered by drain/shutdown.
     pub flush_drain: u64,
+    /// Mean per-request latency (us).
     pub latency_mean_us: f64,
+    /// Median per-request latency (us, bucket upper bound).
     pub latency_p50_us: f64,
+    /// p99 per-request latency (us, bucket upper bound).
     pub latency_p99_us: f64,
+    /// Mean rows per flushed batch.
     pub mean_batch: f64,
-    /// Batch-size distribution (exact p50/p99 of rows per flushed batch).
+    /// Batch-size distribution (exact p50 of rows per flushed batch).
     pub batch_p50: f64,
+    /// Exact p99 of rows per flushed batch.
     pub batch_p99: f64,
-    /// Per-batch service-time distribution.
+    /// Mean per-batch service time (us).
     pub batch_latency_mean_us: f64,
+    /// Median per-batch service time (us, bucket upper bound).
     pub batch_latency_p50_us: f64,
+    /// p99 per-batch service time (us, bucket upper bound).
     pub batch_latency_p99_us: f64,
 }
 
 impl Metrics {
+    /// Fresh zeroed metrics sink.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Record one request's end-to-end latency.
     pub fn record_latency_us(&self, us: f64) {
         self.latency_us.lock().unwrap().record(us);
     }
@@ -113,6 +140,7 @@ impl Metrics {
         self.batch_latency_us.lock().unwrap().record(us);
     }
 
+    /// Record one flushed batch (size, route, and why it flushed).
     pub fn record_batch(&self, size: usize, xla: bool, reason: super::FlushReason) {
         if xla {
             self.batches_xla.fetch_add(1, Ordering::Relaxed);
@@ -129,6 +157,7 @@ impl Metrics {
         self.batch_sizes.lock().unwrap().record(size);
     }
 
+    /// Point-in-time copy of every counter and histogram summary.
     pub fn snapshot(&self) -> MetricsSnapshot {
         let lat = self.latency_us.lock().unwrap();
         let sizes = self.batch_sizes.lock().unwrap();

@@ -32,3 +32,62 @@ pub use batcher::{BatchPolicy, Batcher, FlushReason};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use router::Router;
 pub use server::{InferenceServer, Request, Response, Route, ServerConfig};
+
+use crate::ir::Model;
+use crate::runtime::PipelineManifest;
+use std::path::Path;
+
+/// Boot an inference server directly from an `intreeger pipeline`
+/// artifact bundle: the RF model recorded in the bundle's
+/// `manifest.json` is loaded and served (the coordinator's integer
+/// engines need probability leaves, so a bundle holding only a GBT
+/// model is rejected). Returns the model alongside the server so the
+/// caller can shape demo traffic or validate responses.
+///
+/// Serves on the scalar batched route: a pipeline bundle's
+/// `manifest.json` is the *pipeline* format, not an XLA tier manifest,
+/// so the bundle directory can never double as an XLA artifact source —
+/// to serve with XLA artifacts use `InferenceServer::start` (CLI:
+/// `serve --model … --artifacts DIR`) instead.
+pub fn server_from_pipeline(
+    dir: &Path,
+    config: ServerConfig,
+) -> anyhow::Result<(InferenceServer, Model)> {
+    let manifest = PipelineManifest::load(dir)?;
+    let model = manifest.load_model(dir, "rf").map_err(|e| {
+        anyhow::anyhow!("{e} (serving needs an RF model: probability leaves feed the u32 engine)")
+    })?;
+    let server = InferenceServer::start(&model, None, config);
+    Ok((server, model))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::{self, PipelineConfig};
+
+    #[test]
+    fn serve_boots_from_pipeline_bundle() {
+        let ds = crate::data::shuttle_like(500, 77);
+        let out = std::env::temp_dir()
+            .join(format!("intreeger_serve_bundle_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&out);
+        let cfg = PipelineConfig { n_trees: 3, max_depth: 4, bench: false, ..Default::default() };
+        pipeline::run(&ds, &out, &cfg).expect("pipeline");
+
+        let (server, model) = server_from_pipeline(&out, ServerConfig::default()).expect("boot");
+        let oracle = crate::inference::IntEngine::compile(&model);
+        for i in 0..20 {
+            let r = server.infer(ds.row(i).to_vec());
+            assert_eq!(r.fixed, oracle.predict_fixed(ds.row(i)), "row {i}");
+        }
+    }
+
+    #[test]
+    fn serve_rejects_non_bundle_dir() {
+        let dir = std::env::temp_dir()
+            .join(format!("intreeger_serve_nobundle_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(server_from_pipeline(&dir, ServerConfig::default()).is_err());
+    }
+}

@@ -16,6 +16,7 @@ pub struct Router {
 /// Routing error.
 #[derive(Debug, PartialEq)]
 pub enum RouteError {
+    /// No model is registered under the given name.
     UnknownModel(String),
 }
 
@@ -29,6 +30,7 @@ impl std::fmt::Display for RouteError {
 impl std::error::Error for RouteError {}
 
 impl Router {
+    /// Empty registry.
     pub fn new() -> Router {
         Router::default()
     }
@@ -52,6 +54,7 @@ impl Router {
         self.servers.write().unwrap().remove(name).is_some()
     }
 
+    /// Registered model names, sorted.
     pub fn names(&self) -> Vec<String> {
         let mut v: Vec<String> = self.servers.read().unwrap().keys().cloned().collect();
         v.sort();

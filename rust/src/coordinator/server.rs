@@ -25,6 +25,7 @@ use std::time::{Duration, Instant};
 
 /// An inference request: one feature row.
 pub struct Request {
+    /// The feature row to classify.
     pub features: Vec<f32>,
     tx: SyncSender<Response>,
     t_arrival: Instant,
@@ -33,7 +34,9 @@ pub struct Request {
 /// Which backend served a request.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Route {
+    /// The batched scalar (tiled-kernel) route.
     Scalar,
+    /// The AOT-compiled XLA/PJRT route.
     Xla,
 }
 
@@ -44,13 +47,16 @@ pub struct Response {
     pub fixed: Vec<u32>,
     /// argmax class.
     pub class: u32,
+    /// Backend that served the request.
     pub route: Route,
+    /// End-to-end latency (arrival to response).
     pub latency: Duration,
 }
 
 /// Server configuration.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
+    /// Dynamic-batching policy applied per worker shard.
     pub policy: BatchPolicy,
     /// Batches of at least this many rows go to the XLA engine.
     pub xla_threshold: usize,
@@ -203,6 +209,7 @@ impl InferenceServer {
         self.workers.len()
     }
 
+    /// Point-in-time metrics snapshot.
     pub fn metrics(&self) -> super::MetricsSnapshot {
         self.metrics.snapshot()
     }

@@ -11,8 +11,17 @@ use std::path::Path;
 /// Errors from CSV parsing.
 #[derive(Debug)]
 pub enum CsvError {
+    /// Underlying file I/O failure.
     Io(std::io::Error),
-    Parse { line: usize, msg: String },
+    /// A cell failed to parse (1-based line number + cause).
+    Parse {
+        /// 1-based line number of the offending row.
+        line: usize,
+        /// Human-readable cause.
+        msg: String,
+    },
+    /// Structurally inconsistent input (ragged rows, bad target column,
+    /// empty file).
     Shape(String),
 }
 
@@ -38,6 +47,44 @@ impl From<std::io::Error> for CsvError {
 /// Labels must be non-negative integers in the last column; `n_classes`
 /// is inferred as `max(label) + 1`.
 pub fn parse(text: &str, has_header: bool) -> Result<Dataset, CsvError> {
+    parse_core(text, has_header, None)
+}
+
+/// Parse a dataset with an explicit label column. `target` is a header
+/// name (requires `has_header`) or a zero-based column index; `None`
+/// falls back to the last column. The remaining columns become features
+/// in their original order — the pipeline's "any CSV, any label column"
+/// entry point.
+pub fn parse_with_target(
+    text: &str,
+    has_header: bool,
+    target: Option<&str>,
+) -> Result<Dataset, CsvError> {
+    let Some(target) = target else { return parse(text, has_header) };
+    let col = if has_header {
+        let header = text
+            .lines()
+            .next()
+            .ok_or_else(|| CsvError::Shape("empty csv".into()))?;
+        let names: Vec<&str> = header.split(',').map(str::trim).collect();
+        match names.iter().position(|n| *n == target) {
+            Some(i) => i,
+            None => target.parse::<usize>().map_err(|_| {
+                CsvError::Shape(format!("target '{target}' is neither a header column ({names:?}) nor an index"))
+            })?,
+        }
+    } else {
+        target.parse::<usize>().map_err(|_| {
+            CsvError::Shape(format!(
+                "--target must be a zero-based column index when the csv has no header, got '{target}'"
+            ))
+        })?
+    };
+    parse_core(text, has_header, Some(col))
+}
+
+/// Shared row parser; `label_col = None` means the last column.
+fn parse_core(text: &str, has_header: bool, label_col: Option<usize>) -> Result<Dataset, CsvError> {
     let mut features = Vec::new();
     let mut labels: Vec<u32> = Vec::new();
     let mut n_features: Option<usize> = None;
@@ -57,6 +104,17 @@ pub fn parse(text: &str, has_header: bool) -> Result<Dataset, CsvError> {
                 msg: "need at least one feature and a label".into(),
             });
         }
+        let lc = match label_col {
+            None => cols.len() - 1,
+            Some(c) if c < cols.len() => c,
+            Some(c) => {
+                return Err(CsvError::Shape(format!(
+                    "label column {c} out of range: row {} has {} columns",
+                    lineno + 1,
+                    cols.len()
+                )))
+            }
+        };
         let nf = cols.len() - 1;
         match n_features {
             None => n_features = Some(nf),
@@ -70,7 +128,10 @@ pub fn parse(text: &str, has_header: bool) -> Result<Dataset, CsvError> {
             }
             _ => {}
         }
-        for c in &cols[..nf] {
+        for (ci, c) in cols.iter().enumerate() {
+            if ci == lc {
+                continue;
+            }
             let v = c.parse::<f32>().map_err(|e| CsvError::Parse {
                 line: lineno + 1,
                 msg: format!("bad feature '{c}': {e}"),
@@ -83,9 +144,9 @@ pub fn parse(text: &str, has_header: bool) -> Result<Dataset, CsvError> {
             }
             features.push(v);
         }
-        let raw_label = cols[nf].parse::<f64>().map_err(|e| CsvError::Parse {
+        let raw_label = cols[lc].parse::<f64>().map_err(|e| CsvError::Parse {
             line: lineno + 1,
-            msg: format!("bad label '{}': {e}", cols[nf]),
+            msg: format!("bad label '{}': {e}", cols[lc]),
         })?;
         if raw_label < 0.0 || raw_label.fract() != 0.0 {
             return Err(CsvError::Parse {
@@ -103,13 +164,23 @@ pub fn parse(text: &str, has_header: bool) -> Result<Dataset, CsvError> {
 
 /// Read a dataset from a CSV file.
 pub fn read_file(path: &Path, has_header: bool) -> Result<Dataset, CsvError> {
+    read_file_with_target(path, has_header, None)
+}
+
+/// Read a dataset from a CSV file with an explicit label column (see
+/// [`parse_with_target`]).
+pub fn read_file_with_target(
+    path: &Path,
+    has_header: bool,
+    target: Option<&str>,
+) -> Result<Dataset, CsvError> {
     let file = std::fs::File::open(path)?;
     let mut text = String::new();
     for line in std::io::BufReader::new(file).lines() {
         text.push_str(&line?);
         text.push('\n');
     }
-    parse(&text, has_header)
+    parse_with_target(&text, has_header, target)
 }
 
 /// Write a dataset to a CSV file (features..., label).
@@ -153,6 +224,53 @@ mod tests {
         assert!(parse("1,2,0.5\n", false).is_err());
         assert!(parse("1,2,-1\n", false).is_err());
         assert!(parse("1,2,x\n", false).is_err());
+    }
+
+    #[test]
+    fn target_by_header_name() {
+        let text = "label,a,b\n0,1.0,2.0\n1,3.5,-4.0\n";
+        let d = parse_with_target(text, true, Some("label")).unwrap();
+        assert_eq!(d.n_rows(), 2);
+        assert_eq!(d.n_features, 2);
+        assert_eq!(d.labels, vec![0, 1]);
+        assert_eq!(d.row(1), &[3.5, -4.0]);
+    }
+
+    #[test]
+    fn target_by_index_middle_column() {
+        let text = "1.0,0,2.0\n3.5,1,-4.0\n";
+        let d = parse_with_target(text, false, Some("1")).unwrap();
+        assert_eq!(d.labels, vec![0, 1]);
+        // Features keep their original order with the label removed.
+        assert_eq!(d.row(0), &[1.0, 2.0]);
+        assert_eq!(d.row(1), &[3.5, -4.0]);
+    }
+
+    #[test]
+    fn target_none_is_last_column() {
+        let text = "1.0,2.0,1\n";
+        let a = parse_with_target(text, false, None).unwrap();
+        let b = parse(text, false).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn target_errors_are_clean() {
+        // unknown header name
+        assert!(matches!(
+            parse_with_target("a,b,c\n1,2,0\n", true, Some("nope")),
+            Err(CsvError::Shape(_))
+        ));
+        // name without a header
+        assert!(matches!(
+            parse_with_target("1,2,0\n", false, Some("label")),
+            Err(CsvError::Shape(_))
+        ));
+        // index out of range
+        assert!(matches!(
+            parse_with_target("1,2,0\n", false, Some("7")),
+            Err(CsvError::Shape(_))
+        ));
     }
 
     #[test]

@@ -20,7 +20,9 @@ pub struct Dataset {
     pub features: Vec<f32>,
     /// Class label per row, in `[0, n_classes)`.
     pub labels: Vec<u32>,
+    /// Feature columns per row.
     pub n_features: usize,
+    /// Number of distinct classes.
     pub n_classes: usize,
 }
 
@@ -47,6 +49,7 @@ impl Dataset {
         Dataset { features, labels, n_features, n_classes }
     }
 
+    /// Number of rows.
     pub fn n_rows(&self) -> usize {
         self.labels.len()
     }
@@ -87,6 +90,32 @@ impl Dataset {
         let n_test = ((n as f64) * test_frac).round() as usize;
         let (test_idx, train_idx) = idx.split_at(n_test.min(n));
         (self.select(train_idx), self.select(test_idx))
+    }
+
+    /// Stratified train/test split: each class is shuffled and split
+    /// independently, so the test side preserves class proportions even
+    /// for rare classes (which a plain random split can drop entirely —
+    /// fatal for a holdout that must *verify* per-class behaviour, as
+    /// the pipeline's parity stage does). Deterministic in `rng`.
+    pub fn stratified_split(&self, test_frac: f64, rng: &mut Rng) -> (Dataset, Dataset) {
+        assert!((0.0..=1.0).contains(&test_frac), "test_frac must be in [0, 1]");
+        let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); self.n_classes];
+        for (i, &l) in self.labels.iter().enumerate() {
+            by_class[l as usize].push(i);
+        }
+        let mut train_idx = Vec::new();
+        let mut test_idx = Vec::new();
+        for idx in &mut by_class {
+            rng.shuffle(idx);
+            let n_test = ((idx.len() as f64) * test_frac).round() as usize;
+            let n_test = n_test.min(idx.len());
+            test_idx.extend_from_slice(&idx[..n_test]);
+            train_idx.extend_from_slice(&idx[n_test..]);
+        }
+        // De-sort by class so downstream row order carries no signal.
+        rng.shuffle(&mut train_idx);
+        rng.shuffle(&mut test_idx);
+        (self.select(&train_idx), self.select(&test_idx))
     }
 }
 
@@ -146,6 +175,43 @@ mod tests {
         assert_eq!(train.n_rows() + test.n_rows(), 1000);
         assert_eq!(test.n_rows(), 250);
         assert_eq!(train.n_features, d.n_features);
+    }
+
+    #[test]
+    fn stratified_split_preserves_class_proportions() {
+        let d = shuttle_like(4000, 11);
+        let mut rng = Rng::new(5);
+        let (train, test) = d.stratified_split(0.25, &mut rng);
+        assert_eq!(train.n_rows() + test.n_rows(), d.n_rows());
+        let total = d.class_counts();
+        let tr = train.class_counts();
+        let te = test.class_counts();
+        for c in 0..d.n_classes {
+            assert_eq!(tr[c] + te[c], total[c], "class {c} rows lost");
+            // Per-class split ratio within one row of round(0.25 * n_c).
+            let want = ((total[c] as f64) * 0.25).round() as usize;
+            assert!(
+                (te[c] as i64 - want as i64).unsigned_abs() <= 1,
+                "class {c}: test has {} of {}, want ~{want}",
+                te[c],
+                total[c]
+            );
+            // Any class with >= 2 rows appears on both sides... only when
+            // rounding keeps one on each side; classes with >= 4 rows and
+            // frac 0.25 always keep a training row.
+            if total[c] >= 4 {
+                assert!(tr[c] > 0, "class {c} vanished from training");
+            }
+        }
+    }
+
+    #[test]
+    fn stratified_split_deterministic() {
+        let d = shuttle_like(500, 2);
+        let (a1, b1) = d.stratified_split(0.3, &mut Rng::new(9));
+        let (a2, b2) = d.stratified_split(0.3, &mut Rng::new(9));
+        assert_eq!(a1, a2);
+        assert_eq!(b1, b2);
     }
 
     #[test]

@@ -20,8 +20,11 @@ use crate::util::Rng;
 /// Parameters for the synthetic generator.
 #[derive(Clone, Debug)]
 pub struct SynthSpec {
+    /// Rows to generate.
     pub n_rows: usize,
+    /// Feature columns.
     pub n_features: usize,
+    /// Distinct classes.
     pub n_classes: usize,
     /// Depth of the latent teacher tree that assigns class structure.
     pub teacher_depth: usize,

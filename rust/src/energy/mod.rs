@@ -31,6 +31,7 @@ pub struct PowerModel {
     /// Period of the background-process bump (s). Fig 5a shows a ~2 s
     /// periodic riser to just under 2 W.
     pub background_period_s: f64,
+    /// Peak power of the periodic background bump (W).
     pub background_peak_w: f64,
 }
 
@@ -64,7 +65,9 @@ pub fn energy_equal_time(t_run: f64, t_total: f64, m: &PowerModel) -> f64 {
 /// One sample of a synthetic power trace.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Sample {
+    /// Time since trace start (s).
     pub t_s: f64,
+    /// Instantaneous power (W).
     pub power_w: f64,
 }
 
@@ -112,13 +115,19 @@ pub fn trace_energy(trace: &[Sample], hz: f64) -> f64 {
 /// Full §IV-F experiment result.
 #[derive(Clone, Copy, Debug)]
 pub struct EnergyResult {
+    /// Float-implementation runtime (s).
     pub t_float_s: f64,
+    /// Integer-implementation runtime (s).
     pub t_int_s: f64,
+    /// Load power while running (W).
     pub p_high_w: f64,
+    /// Baseline power while idle (W).
     pub p_low_w: f64,
+    /// Fractional energy saving (the paper's E_saved formula).
     pub e_saved: f64,
-    /// Energy of each run alone (J).
+    /// Energy of the float run alone (J).
     pub e_float_j: f64,
+    /// Energy of the integer run over the same wall-clock window (J).
     pub e_int_j: f64,
 }
 

@@ -38,7 +38,7 @@
 //! The walker kernels are exposed behind one generic monomorphized body
 //! (ordered-u32 and f32 domains differ only in the threshold-word
 //! compare), shared by all three RF variants *and* the GBT engine; the
-//! QuickScorer scan reuses the same [`Domain`] abstraction.
+//! QuickScorer scan reuses the same crate-internal `Domain` abstraction.
 //!
 //! ## Parity invariant (load-bearing — the parity suite enforces it)
 //!
@@ -56,8 +56,8 @@
 //! per-row accumulation sequence. A ragged final tile (batch %
 //! TILE_ROWS rows) runs the *selected* kernel: the branchless walker
 //! duplicates the last real lane to fill the tile
-//! ([`walk_tile_lockstep_tail`]) and the QuickScorer scan is per-row
-//! anyway, so no kernel silently swaps on the tail.
+//! (`walk_tile_lockstep_tail`, crate-internal) and the QuickScorer scan
+//! is per-row anyway, so no kernel silently swaps on the tail.
 //!
 //! ## Scratch buffers
 //!
@@ -104,6 +104,7 @@ pub enum TraversalKernel {
 }
 
 impl TraversalKernel {
+    /// Display / calibration-log name of the kernel.
     pub fn name(self) -> &'static str {
         match self {
             TraversalKernel::Branchy => "branchy",
@@ -112,6 +113,7 @@ impl TraversalKernel {
         }
     }
 
+    /// Every kernel (parity suites and the calibrator sweep this).
     pub fn all() -> [TraversalKernel; 3] {
         [TraversalKernel::Branchy, TraversalKernel::Branchless, TraversalKernel::QuickScorer]
     }
@@ -210,6 +212,7 @@ impl Domain for F32Domain {
 /// A packed forest as the walkers see it — lets the GBT engine reuse the
 /// exact same kernels over its own node/offset arrays.
 pub(crate) struct PackedTrees<'a> {
+    /// All trees' packed nodes, concatenated.
     pub nodes: &'a [Node8],
     /// Start index of each tree's nodes; length `n_trees + 1`.
     pub tree_offsets: &'a [u32],

@@ -82,6 +82,7 @@ pub enum NodeOrder {
 }
 
 impl NodeOrder {
+    /// Display name of the ordering.
     pub fn name(self) -> &'static str {
         match self {
             NodeOrder::Depth => "depth",
@@ -89,6 +90,7 @@ impl NodeOrder {
         }
     }
 
+    /// Both orderings (layout sweeps iterate this).
     pub fn all() -> [NodeOrder; 2] {
         [NodeOrder::Depth, NodeOrder::Breadth]
     }
@@ -120,6 +122,7 @@ pub type NodeOrd = Node8;
 pub type NodeF32 = Node8;
 
 impl Node8 {
+    /// Whether this node is a leaf (tests [`LEAF_BIT`]).
     #[inline(always)]
     pub fn is_leaf(self) -> bool {
         self.ff & LEAF_BIT != 0
@@ -154,20 +157,26 @@ impl Node8 {
 /// the packed 8-byte encoding.
 #[derive(Clone, Debug)]
 pub struct CompiledForest {
+    /// Feature columns the model consumes.
     pub n_features: usize,
+    /// Classes the model predicts.
     pub n_classes: usize,
+    /// Trees in the forest.
     pub n_trees: usize,
     /// Start index of each tree's nodes; length `n_trees + 1`.
     pub tree_offsets: Vec<u32>,
     /// Maximum root-to-leaf depth of each tree — the fixed trip count of
     /// the branchless batch kernel; length `n_trees`.
     pub tree_depths: Vec<u32>,
+    /// SoA column: split feature per node ([`LEAF`] marks leaves).
     pub feature: Vec<u32>,
     /// Threshold as f32 (float engine).
     pub thresh_f32: Vec<f32>,
     /// Threshold order-preserving-mapped to u32 (FlInt / InTreeger engines).
     pub thresh_ord: Vec<u32>,
+    /// SoA column: left child (branches) / payload row (leaves).
     pub left: Vec<u32>,
+    /// SoA column: right child (always `left + 1` for branches).
     pub right: Vec<u32>,
     /// Leaf probabilities, row-major `n_leaves * n_classes` (float engines).
     pub leaf_f32: Vec<f32>,

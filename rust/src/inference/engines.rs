@@ -35,6 +35,7 @@ pub enum Variant {
 }
 
 impl Variant {
+    /// CLI / report name of the variant.
     pub fn name(self) -> &'static str {
         match self {
             Variant::Float => "float",
@@ -43,8 +44,15 @@ impl Variant {
         }
     }
 
+    /// All three variants, in the paper's comparison order.
     pub fn all() -> [Variant; 3] {
         [Variant::Float, Variant::FlInt, Variant::IntTreeger]
+    }
+
+    /// Parse a CLI variant name (inverse of [`Self::name`]; the CLI
+    /// additionally accepts `int` as an alias for `intreeger`).
+    pub fn from_name(name: &str) -> Option<Variant> {
+        Variant::all().into_iter().find(|v| v.name() == name)
     }
 }
 
@@ -94,8 +102,11 @@ pub trait Engine: Send + Sync {
         let _ = rows;
         None
     }
+    /// Which of the paper's variants this engine realizes.
     fn variant(&self) -> Variant;
+    /// Classes the engine predicts.
     fn n_classes(&self) -> usize;
+    /// Feature columns a row must have.
     fn n_features(&self) -> usize;
     /// Tile-walk kernel the batched methods use (bit-identical results
     /// either way; a pure performance knob).
@@ -113,6 +124,7 @@ pub struct FloatEngine {
 }
 
 impl FloatEngine {
+    /// Compile a model with the default (depth-first) node layout.
     pub fn compile(model: &Model) -> FloatEngine {
         Self::compile_with(model, NodeOrder::Depth)
     }
@@ -125,6 +137,7 @@ impl FloatEngine {
         }
     }
 
+    /// The compiled forest backing this engine.
     pub fn forest(&self) -> &CompiledForest {
         &self.forest
     }
@@ -194,6 +207,7 @@ pub struct FlIntEngine {
 }
 
 impl FlIntEngine {
+    /// Compile a model with the default (depth-first) node layout.
     pub fn compile(model: &Model) -> FlIntEngine {
         Self::compile_with(model, NodeOrder::Depth)
     }
@@ -206,6 +220,7 @@ impl FlIntEngine {
         }
     }
 
+    /// The compiled forest backing this engine.
     pub fn forest(&self) -> &CompiledForest {
         &self.forest
     }
@@ -281,6 +296,7 @@ pub struct IntEngine {
 }
 
 impl IntEngine {
+    /// Compile a model with the default (depth-first) node layout.
     pub fn compile(model: &Model) -> IntEngine {
         Self::compile_with(model, NodeOrder::Depth)
     }
@@ -293,6 +309,7 @@ impl IntEngine {
         }
     }
 
+    /// The compiled forest backing this engine.
     pub fn forest(&self) -> &CompiledForest {
         &self.forest
     }

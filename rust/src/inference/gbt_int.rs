@@ -48,6 +48,7 @@ pub struct GbtIntEngine {
 }
 
 impl GbtIntEngine {
+    /// Compile a GBT model into the packed integer-margin layout.
     pub fn compile(model: &Model) -> GbtIntEngine {
         assert_eq!(model.kind, ModelKind::Gbt, "GbtIntEngine requires a GBT model");
         model.validate().expect("model must be valid");
@@ -111,14 +112,17 @@ impl GbtIntEngine {
         e
     }
 
+    /// The margin fixed-point scale derived at compile time.
     pub fn scale(&self) -> MarginScale {
         self.scale
     }
 
+    /// Feature columns a row must have.
     pub fn n_features(&self) -> usize {
         self.n_features
     }
 
+    /// Classes the model predicts.
     pub fn n_classes(&self) -> usize {
         self.n_classes
     }

@@ -100,8 +100,11 @@ pub struct QsBlock {
 /// trees plus the (loudly logged) walker-fallback tree set.
 #[derive(Clone, Debug)]
 pub struct QsPlan {
+    /// Total trees in the model (eligible + fallback).
     pub n_trees: usize,
+    /// Feature columns of the model.
     pub n_features: usize,
+    /// Cache blocks of eligible trees (see [`QS_BLOCK_TREES`]).
     pub blocks: Vec<QsBlock>,
     /// Global ids of trees with more than [`QS_MAX_LEAVES`] leaves; the
     /// driver walks these with the branchless lockstep kernel.

@@ -41,7 +41,10 @@ pub fn f32_pred(t: f32) -> f32 {
 
 /// Import error type shared by the front-ends.
 #[derive(Debug)]
-pub struct ImportError(pub String);
+pub struct ImportError(
+    /// Human-readable cause.
+    pub String,
+);
 
 impl std::fmt::Display for ImportError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {

@@ -19,16 +19,29 @@ pub mod stats;
 #[derive(Clone, Debug, PartialEq)]
 pub enum Node {
     /// `if row[feature] <= threshold` go to `left`, else `right`.
-    Branch { feature: u32, threshold: f32, left: u32, right: u32 },
+    Branch {
+        /// Feature column the split reads.
+        feature: u32,
+        /// Split threshold (finite; `<=` goes left).
+        threshold: f32,
+        /// Index of the left child.
+        left: u32,
+        /// Index of the right child.
+        right: u32,
+    },
     /// Leaf payload. For classification forests (`ModelKind::RandomForest`)
     /// this is a per-class probability vector (sums to 1). For boosted
     /// trees (`ModelKind::Gbt`) it is a per-class margin contribution.
-    Leaf { values: Vec<f32> },
+    Leaf {
+        /// Per-class values (length `n_classes`).
+        values: Vec<f32>,
+    },
 }
 
 /// A single decision tree: `nodes[0]` is the root.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Tree {
+    /// Flat node array; child links are indices into it.
     pub nodes: Vec<Node>,
 }
 
@@ -46,24 +59,38 @@ pub enum ModelKind {
 /// A trained tree-ensemble model in the common IR.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Model {
+    /// How leaf values combine (probability average vs additive margins).
     pub kind: ModelKind,
+    /// Feature columns the model consumes.
     pub n_features: usize,
+    /// Classes the model predicts.
     pub n_classes: usize,
+    /// The ensemble's trees.
     pub trees: Vec<Tree>,
     /// GBT initial margin per class (zeros for random forests).
     pub base_score: Vec<f32>,
 }
 
-/// IR validation failure.
+/// IR validation failure. Fields locate the offender: `tree` / `node`
+/// are indices into [`Model::trees`] and [`Tree::nodes`].
 #[derive(Debug, PartialEq)]
+#[allow(missing_docs)] // variant docs + the field convention above cover these
 pub enum IrError {
+    /// A tree has no nodes.
     EmptyTree(usize),
+    /// A child index points outside the tree.
     BadChild { tree: usize, node: usize },
+    /// A split references a feature the model does not have.
     BadFeature { tree: usize, node: usize, feature: u32 },
+    /// A leaf's value vector does not match `n_classes`.
     BadLeafArity { tree: usize, node: usize, got: usize },
+    /// A split threshold is NaN or infinite.
     NonFiniteThreshold { tree: usize, node: usize },
+    /// An RF leaf's values are not a probability distribution.
     LeafNotDistribution { tree: usize, node: usize, sum: f32 },
+    /// A node cannot be reached from the root.
     Unreachable { tree: usize, node: usize },
+    /// Child links form a cycle.
     Cycle { tree: usize },
     /// A node is the child of more than one branch (a DAG, not a tree).
     SharedChild { tree: usize, node: usize },

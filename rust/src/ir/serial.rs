@@ -83,7 +83,10 @@ pub fn to_json(model: &Model) -> Json {
 
 /// Deserialization error.
 #[derive(Debug)]
-pub struct SerialError(pub String);
+pub struct SerialError(
+    /// Human-readable cause.
+    pub String,
+);
 
 impl std::fmt::Display for SerialError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {

@@ -11,11 +11,17 @@ use crate::inference::quickscorer::QS_MAX_LEAVES;
 /// Summary statistics of a trained model.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ModelStats {
+    /// Trees in the ensemble.
     pub n_trees: usize,
+    /// Total nodes across all trees.
     pub n_nodes: usize,
+    /// Internal split nodes.
     pub n_branches: usize,
+    /// Leaf nodes.
     pub n_leaves: usize,
+    /// Maximum root-to-leaf depth in the ensemble.
     pub max_depth: usize,
+    /// Mean node depth over all nodes.
     pub mean_depth: f64,
     /// Smallest non-zero leaf probability in the model — drives the
     /// paper's first edge case (probabilities < ~0.001 lose relative

@@ -31,10 +31,21 @@
 //!    batched inference engine (AOT-lowered JAX+Pallas forest traversal)
 //!    behind a dynamic-batching request router drained by a sharded
 //!    worker pool.
+//! 9. **End-to-end pipeline** ([`pipeline`]) — one call (or one
+//!    `intreeger pipeline` command) from a CSV to trained, quantized,
+//!    **verified** integer-only C plus a machine-readable report; the
+//!    "no loss of precision" claim is checked on a stratified holdout
+//!    on every run.
 //!
-//! See `DESIGN.md` (repo root) for the module map, the batch execution
-//! core and its batched-vs-scalar parity invariant, and `EXPERIMENTS.md`
-//! for the experiment index with paper-vs-measured notes.
+//! See `README.md` (repo root) for the quickstart and CLI reference,
+//! `DESIGN.md` for the module map, the batch execution core and its
+//! batched-vs-scalar parity invariant, and `EXPERIMENTS.md` for the
+//! experiment index with paper-vs-measured notes.
+
+// The docs gate: every public item documents itself, and CI runs
+// rustdoc with `-D warnings` so a missing doc or a broken intra-doc
+// link fails the build rather than rotting silently.
+#![warn(missing_docs)]
 
 pub mod codegen;
 pub mod coordinator;
@@ -43,6 +54,7 @@ pub mod energy;
 pub mod flint;
 pub mod inference;
 pub mod ir;
+pub mod pipeline;
 pub mod quant;
 pub mod runtime;
 pub mod simarch;

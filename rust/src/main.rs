@@ -2,22 +2,22 @@
 //! dataset in → trained model → integer-only C out, plus serving,
 //! simulation and evaluation utilities.
 //!
-//! Subcommands:
-//!   train     train an RF/GBT on a dataset (synthetic or CSV) → model.json
-//!   codegen   generate integer-only (or float/flint) C from a model
-//!   predict   run a model over a CSV and print predictions
-//!   simulate  per-core cycle estimates for all three variants (Fig 3)
-//!   serve     start the batching server and run a demo workload
-//!   tablei    print the evaluation-core table (Table I)
+//! The headline command is `pipeline`: dataset → trained forest →
+//! quantized IR → **verified** integer-only C + report, in one
+//! invocation. The remaining subcommands expose the individual stages.
 //!
 //! Argument parsing is hand-rolled (`--key value` pairs) — the offline
-//! build has no clap; see `Args`.
+//! build has no clap; see `Args`. The usage text is *generated* from the
+//! same `COMMANDS` table the dispatcher consults, so help and reality
+//! cannot drift (a `tests/cli.rs` test walks the table through
+//! `--help`).
 
 use intreeger::codegen::{self, Layout};
-use intreeger::coordinator::{InferenceServer, ServerConfig};
+use intreeger::coordinator::{self, InferenceServer, ServerConfig};
 use intreeger::data::{self, Dataset};
 use intreeger::inference::{self, Variant};
 use intreeger::ir::Model;
+use intreeger::pipeline::{self, PipelineConfig};
 use intreeger::simarch::{self, Core};
 use intreeger::trees::{self, ForestParams, GbtParams, RandomForest};
 use intreeger::util::Rng;
@@ -60,10 +60,139 @@ impl Args {
         self.get(key).map(|v| v.parse().expect("bad integer flag")).unwrap_or(default)
     }
 
+    fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).map(|v| v.parse().expect("bad float flag")).unwrap_or(default)
+    }
+
     fn flag(&self, key: &str) -> bool {
         matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
     }
 }
+
+// ---------------------------------------------------------------------------
+// Command table: the single source of truth for dispatch AND usage text.
+// ---------------------------------------------------------------------------
+
+/// One CLI subcommand: name, flag synopsis (generated at runtime so
+/// enumerations like the layout list stay in sync with the code), a
+/// one-line description, and the handler.
+struct CommandSpec {
+    name: &'static str,
+    synopsis: fn() -> String,
+    about: &'static str,
+    run: fn(&Args),
+}
+
+fn layout_names() -> String {
+    Layout::all().iter().map(|l| l.name()).collect::<Vec<_>>().join("|")
+}
+
+fn variant_names() -> String {
+    Variant::all().iter().map(|v| v.name()).collect::<Vec<_>>().join("|")
+}
+
+static COMMANDS: &[CommandSpec] = &[
+    CommandSpec {
+        name: "pipeline",
+        synopsis: || {
+            format!(
+                "--csv data.csv --out DIR [--target COL] [--header] [--holdout F] [--trees N] \
+                 [--depth D] [--gbt] [--no-rf] [--layout {}] [--bench] [--simulate] [--seed S] \
+                 [--dataset shuttle|esa --rows N]",
+                layout_names()
+            )
+        },
+        about: "dataset -> trained forest -> quantized IR -> verified integer-only C + report",
+        run: cmd_pipeline,
+    },
+    CommandSpec {
+        name: "train",
+        synopsis: || {
+            "--dataset shuttle|esa|csv:PATH [--header] [--rows N] [--trees N] [--depth D] \
+             [--gbt] [--seed S] [--out model.json]"
+                .to_string()
+        },
+        about: "train an RF/GBT on a dataset -> model.json",
+        run: cmd_train,
+    },
+    CommandSpec {
+        name: "import",
+        synopsis: || {
+            "--file dump.txt [--format lightgbm|xgboost] [--features N --classes N] \
+             [--base-score B] [--out model.json]"
+                .to_string()
+        },
+        about: "import an XGBoost/LightGBM text dump into the IR",
+        run: cmd_import,
+    },
+    CommandSpec {
+        name: "codegen",
+        synopsis: || {
+            format!(
+                "--model model.json [--variant {}] [--layout {}] [--out model.c]",
+                variant_names(),
+                layout_names()
+            )
+        },
+        about: "generate C from a model (stdout without --out)",
+        run: cmd_codegen,
+    },
+    CommandSpec {
+        name: "predict",
+        synopsis: || "--model model.json --csv data.csv [--header] [--engine float|flint|int]".to_string(),
+        about: "run a model over a CSV and print predictions",
+        run: cmd_predict,
+    },
+    CommandSpec {
+        name: "inspect",
+        synopsis: || "--model model.json [--trees]".to_string(),
+        about: "model stats + per-tree QuickScorer eligibility",
+        run: cmd_inspect,
+    },
+    CommandSpec {
+        name: "simulate",
+        synopsis: || "--model model.json [--dataset shuttle|esa|csv:PATH] [--rows N]".to_string(),
+        about: "per-core cycle estimates for all three variants (Fig 3)",
+        run: cmd_simulate,
+    },
+    CommandSpec {
+        name: "serve",
+        synopsis: || {
+            "--model model.json | --pipeline DIR [--artifacts DIR] [--requests N] [--workers W] \
+             [--calibrate] [--dataset ...]"
+                .to_string()
+        },
+        about: "start the batching server (from a model or a pipeline bundle) and run a demo workload",
+        run: cmd_serve,
+    },
+    CommandSpec {
+        name: "tablei",
+        synopsis: String::new,
+        about: "print the evaluation-core table (Table I)",
+        run: |_| cmd_tablei(),
+    },
+];
+
+/// Usage text generated from [`COMMANDS`] — the same table `main`
+/// dispatches on, so a new subcommand (or flag synopsis change) shows up
+/// here by construction.
+fn usage() -> String {
+    let names: Vec<&str> = COMMANDS.iter().map(|c| c.name).collect();
+    let mut s = format!("usage: intreeger <{}> [--flags]\n\n", names.join("|"));
+    for c in COMMANDS {
+        s.push_str(&format!("  {:<9} {}\n", c.name, c.about));
+        let syn = (c.synopsis)();
+        if !syn.is_empty() {
+            s.push_str(&format!("            intreeger {} {}\n", c.name, syn));
+        }
+    }
+    s.push_str("\n  help      print this text (also --help / -h)\n");
+    s
+}
+
+// ---------------------------------------------------------------------------
+// Handlers
+// ---------------------------------------------------------------------------
 
 fn load_dataset(args: &Args) -> Dataset {
     let rows = args.usize_or("rows", 8000);
@@ -83,6 +212,78 @@ fn load_model(args: &Args) -> Model {
     let path = args.get("model").expect("--model PATH required");
     let text = std::fs::read_to_string(path).expect("cannot read model file");
     Model::from_json(&text).expect("invalid model file")
+}
+
+fn parse_variant(s: &str) -> Variant {
+    if s == "int" {
+        return Variant::IntTreeger; // shorthand kept for muscle memory
+    }
+    Variant::from_name(s)
+        .unwrap_or_else(|| panic!("unknown variant '{s}' (use {} | int)", variant_names()))
+}
+
+fn parse_layout(s: &str) -> Layout {
+    Layout::from_name(s)
+        .unwrap_or_else(|| panic!("unknown layout '{s}' (use {})", layout_names()))
+}
+
+fn cmd_pipeline(args: &Args) {
+    let out = PathBuf::from(args.get("out").expect("--out DIR required"));
+    let cfg = PipelineConfig {
+        holdout_frac: args.f64_or("holdout", 0.25),
+        seed: args.u64_or("seed", 42),
+        train_rf: !args.flag("no-rf"),
+        train_gbt: args.flag("gbt"),
+        n_trees: args.usize_or("trees", 10),
+        max_depth: args.usize_or("depth", 6),
+        layout: parse_layout(args.get("layout").unwrap_or("ifelse")),
+        bench: args.flag("bench"),
+        simulate: args.flag("simulate"),
+        source: String::new(), // filled below
+    };
+    let result = match args.get("csv") {
+        Some(path) => {
+            pipeline::run_csv(Path::new(path), args.flag("header"), args.get("target"), &out, &cfg)
+        }
+        None => {
+            // Synthetic fallback so the quickstart works with zero files.
+            let mut cfg = cfg;
+            cfg.source = format!("synthetic:{}", args.get("dataset").unwrap_or("shuttle"));
+            let ds = load_dataset(args);
+            pipeline::run(&ds, &out, &cfg)
+        }
+    };
+    match result {
+        Ok(outcome) => {
+            let r = &outcome.report;
+            eprintln!(
+                "pipeline PASS: {} model(s) verified on {} holdout rows; artifacts in {}",
+                r.models.len(),
+                r.dataset.holdout_rows,
+                outcome.out_dir.display()
+            );
+            for m in &r.models {
+                eprintln!(
+                    "  {}: accuracy float {:.4} / int {:.4}, max fixed-point error {:.3e} \
+                     (bound {:.3e}){}",
+                    m.kind,
+                    m.parity.accuracy_float,
+                    m.parity.accuracy_int,
+                    m.parity.max_abs_error,
+                    m.parity.error_bound,
+                    match &m.codegen {
+                        Some(c) => format!(", C: {} ({} bytes)", c.file, c.bytes),
+                        None => String::new(),
+                    }
+                );
+            }
+            eprintln!("  report: {} / REPORT.md", outcome.out_dir.join("report.json").display());
+        }
+        Err(e) => {
+            eprintln!("pipeline FAILED: {e}");
+            std::process::exit(1);
+        }
+    }
 }
 
 fn cmd_train(args: &Args) {
@@ -122,15 +323,6 @@ fn cmd_train(args: &Args) {
     eprintln!("wrote {out}");
 }
 
-fn parse_variant(s: &str) -> Variant {
-    match s {
-        "float" => Variant::Float,
-        "flint" => Variant::FlInt,
-        "intreeger" | "int" => Variant::IntTreeger,
-        other => panic!("unknown variant '{other}'"),
-    }
-}
-
 fn cmd_import(args: &Args) {
     let path = args.get("file").expect("--file PATH required");
     let text = std::fs::read_to_string(path).expect("cannot read dump file");
@@ -161,13 +353,7 @@ fn cmd_import(args: &Args) {
 fn cmd_codegen(args: &Args) {
     let model = load_model(args);
     let variant = parse_variant(args.get("variant").unwrap_or("intreeger"));
-    let layout = match args.get("layout").unwrap_or("ifelse") {
-        "ifelse" => Layout::IfElse,
-        "native" => Layout::Native,
-        "native-predicated" => Layout::NativePredicated,
-        "quickscorer" => Layout::QuickScorer,
-        other => panic!("unknown layout '{other}'"),
-    };
+    let layout = parse_layout(args.get("layout").unwrap_or("ifelse"));
     let src = codegen::generate(&model, layout, variant);
     match args.get("out") {
         Some(path) => {
@@ -226,24 +412,41 @@ fn cmd_simulate(args: &Args) {
 }
 
 fn cmd_serve(args: &Args) {
-    let model = load_model(args);
-    let ds = load_dataset(args);
-    let artifacts = args
-        .get("artifacts")
-        .map(PathBuf::from)
-        .or_else(|| Some(PathBuf::from("artifacts")))
-        .filter(|p| intreeger::runtime::artifacts_available(p));
-    if artifacts.is_none() {
-        eprintln!("(artifacts not found — scalar route only)");
-    }
     let config = ServerConfig {
         n_workers: args.usize_or("workers", 1),
         auto_calibrate: args.flag("calibrate"),
         ..ServerConfig::default()
     };
-    let server = InferenceServer::start(&model, artifacts, config);
+    // Boot either from a pipeline bundle (model + holdout in one dir) or
+    // from an explicit model file.
+    let (server, demo): (InferenceServer, Dataset) = match args.get("pipeline") {
+        Some(dir) => {
+            let dir = PathBuf::from(dir);
+            let (server, model) =
+                coordinator::server_from_pipeline(&dir, config).expect("boot from pipeline bundle");
+            // Demo traffic: the bundle's own holdout, falling back to a
+            // synthetic set with the model's arity.
+            let demo = data::csv::read_file(&dir.join("holdout.csv"), false)
+                .unwrap_or_else(|_| load_dataset(args));
+            assert_eq!(demo.n_features, model.n_features, "demo rows must match the model");
+            (server, demo)
+        }
+        None => {
+            let model = load_model(args);
+            let ds = load_dataset(args);
+            let artifacts = args
+                .get("artifacts")
+                .map(PathBuf::from)
+                .or_else(|| Some(PathBuf::from("artifacts")))
+                .filter(|p| intreeger::runtime::artifacts_available(p));
+            if artifacts.is_none() {
+                eprintln!("(artifacts not found — scalar route only)");
+            }
+            (InferenceServer::start(&model, artifacts, config), ds)
+        }
+    };
     let n = args.usize_or("requests", 1000);
-    let rows: Vec<Vec<f32>> = (0..n).map(|i| ds.row(i % ds.n_rows()).to_vec()).collect();
+    let rows: Vec<Vec<f32>> = (0..n).map(|i| demo.row(i % demo.n_rows()).to_vec()).collect();
     let t0 = std::time::Instant::now();
     let responses = server.infer_many(rows);
     let wall = t0.elapsed();
@@ -312,40 +515,32 @@ fn cmd_inspect(args: &Args) {
     }
 }
 
-const USAGE: &str = "usage: intreeger <train|import|codegen|predict|inspect|simulate|serve|tablei> [--flags]\n\
-  train    --dataset shuttle|esa|csv:PATH [--rows N] [--trees N] [--depth D] [--gbt] [--seed S] [--out model.json]\n\
-  import   --file dump.txt [--format lightgbm|xgboost] [--features N --classes N] [--out model.json]\n\
-  codegen  --model model.json [--variant float|flint|intreeger] [--layout ifelse|native|native-predicated|quickscorer] [--out model.c]\n\
-  predict  --model model.json --csv data.csv [--engine float|flint|int]\n\
-  inspect  --model model.json [--trees]   (stats + per-tree QuickScorer eligibility)\n\
-  simulate --model model.json [--dataset ...]\n\
-  serve    --model model.json [--artifacts DIR] [--requests N] [--workers W] [--calibrate]\n\
-  tablei\n";
-
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = argv.first() else {
-        eprint!("{USAGE}");
+        eprint!("{}", usage());
         std::process::exit(2);
     };
+    // `--help`/`-h` win anywhere on the line: `intreeger pipeline
+    // --help` must print usage, not dispatch cmd_pipeline (which would
+    // panic on the missing --out) or, worse, silently run a training
+    // job. Bare `help` only counts in command position — it could
+    // legitimately appear as a flag *value*.
+    if cmd == "help" || argv.iter().any(|a| matches!(a.as_str(), "--help" | "-h")) {
+        print!("{}", usage());
+        return;
+    }
     let args = match Args::parse(&argv[1..]) {
         Ok(a) => a,
         Err(e) => {
-            eprintln!("{e}\n{USAGE}");
+            eprintln!("{e}\n{}", usage());
             std::process::exit(2);
         }
     };
-    match cmd.as_str() {
-        "train" => cmd_train(&args),
-        "import" => cmd_import(&args),
-        "codegen" => cmd_codegen(&args),
-        "predict" => cmd_predict(&args),
-        "inspect" => cmd_inspect(&args),
-        "simulate" => cmd_simulate(&args),
-        "serve" => cmd_serve(&args),
-        "tablei" => cmd_tablei(),
-        other => {
-            eprintln!("unknown command '{other}'\n{USAGE}");
+    match COMMANDS.iter().find(|c| c.name == cmd.as_str()) {
+        Some(c) => (c.run)(&args),
+        None => {
+            eprintln!("unknown command '{cmd}'\n{}", usage());
             std::process::exit(2);
         }
     }

@@ -1,0 +1,498 @@
+//! End-to-end pipeline: dataset → trained forest → quantized IR →
+//! **verified** integer-only C, in one call (the paper's Fig 1 as a
+//! single command).
+//!
+//! The paper's headline claim is end-to-end: the framework "takes a
+//! training dataset as input, and outputs an architecture-agnostic
+//! integer-only C implementation … without loss of precision". This
+//! module is that loop, closed and machine-checked:
+//!
+//! 1. **Split** — a seeded, *stratified* train/holdout split
+//!    ([`crate::data::Dataset::stratified_split`]) so rare classes are
+//!    represented on both sides;
+//! 2. **Train** — a Random Forest and/or GBT ([`crate::trees`]);
+//! 3. **Quantize** — leaf probabilities → `u32` fixed point (margins →
+//!    `i64`) via [`crate::quant`];
+//! 4. **Verify** — the holdout runs through the f32 reference engine and
+//!    every integer engine × traversal kernel; predictions must be
+//!    argmax-identical and the fixed-point error must sit within the
+//!    paper's `n/2^32` bound ([`verify`]);
+//! 5. **Emit** — integer-only C for a chosen [`Layout`] (gcc-parity
+//!    checked when a compiler is present) plus a
+//!    [`crate::runtime::PipelineManifest`] artifact bundle the serving
+//!    coordinator can boot from directly;
+//! 6. **Report** — machine-readable `report.json` + human `REPORT.md`
+//!    ([`report`]), with model statistics, accuracy float-vs-int, kernel
+//!    throughput and (optionally) per-core cycle estimates.
+//!
+//! The CLI front-end is `intreeger pipeline --csv data.csv --target col
+//! --out dir/`; see the repository README for the full quickstart.
+
+pub mod report;
+pub mod verify;
+
+pub use report::{Report, REPORT_FORMAT};
+pub use verify::ParityVerdict;
+
+use crate::codegen::{self, Layout};
+use crate::data::{csv, Dataset};
+use crate::inference::{Engine as _, GbtIntEngine, IntEngine, TraversalKernel, Variant};
+use crate::ir::{Model, ModelKind};
+use crate::quant;
+use crate::runtime::{PipelineManifest, PipelineModelEntry};
+use crate::simarch::{self, Core};
+use crate::trees::{train_gbt, ForestParams, GbtParams, RandomForest};
+use crate::util::bench::{black_box, measure_opts, BenchOpts};
+use crate::util::Rng;
+use report::{BenchRow, CodegenSummary, DatasetSummary, ModelReport, QuantSummary, SimRow};
+use std::path::{Path, PathBuf};
+
+/// Pipeline configuration (everything except the dataset itself).
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    /// Fraction of rows held out for verification (stratified per class).
+    pub holdout_frac: f64,
+    /// Seed for the split and the trainers (bit-reproducible runs).
+    pub seed: u64,
+    /// Train a Random Forest (the paper's primary model family).
+    pub train_rf: bool,
+    /// Additionally train a gradient-boosted model.
+    pub train_gbt: bool,
+    /// Trees (RF) / boosting rounds (GBT).
+    pub n_trees: usize,
+    /// Depth limit for every tree.
+    pub max_depth: usize,
+    /// C code layout to emit for the RF model.
+    pub layout: Layout,
+    /// Measure batched throughput per traversal kernel on the holdout.
+    /// Off by default (matching the CLI's opt-in `--bench`) — timed
+    /// sweeps cost wall-clock and their rows are non-deterministic.
+    pub bench: bool,
+    /// Add trace-driven per-core cycle estimates (Table I cores).
+    pub simulate: bool,
+    /// Free-form dataset provenance recorded in the report.
+    pub source: String,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            holdout_frac: 0.25,
+            seed: 42,
+            train_rf: true,
+            train_gbt: false,
+            n_trees: 10,
+            max_depth: 6,
+            layout: Layout::IfElse,
+            bench: false,
+            simulate: false,
+            source: "unspecified".to_string(),
+        }
+    }
+}
+
+/// What a pipeline run produced.
+#[derive(Clone, Debug)]
+pub struct PipelineOutcome {
+    /// The artifact directory (model JSON/C, `report.json`, `REPORT.md`,
+    /// `manifest.json`, `holdout.csv`).
+    pub out_dir: PathBuf,
+    /// The full report (already written to disk as JSON and markdown).
+    pub report: Report,
+}
+
+/// Run the end-to-end pipeline on an in-memory dataset, writing every
+/// artifact into `out_dir` (created if missing).
+///
+/// Returns an error if configuration is invalid, any artifact cannot be
+/// written, or — after the report files have been written — the parity
+/// verification failed: a pipeline run that returns `Ok` **is** the
+/// machine-checked "no loss of precision" verdict.
+///
+/// ```
+/// use intreeger::pipeline::{run, PipelineConfig};
+/// let ds = intreeger::data::shuttle_like(300, 7);
+/// let out = std::env::temp_dir().join(format!("intreeger_doc_pipeline_{}", std::process::id()));
+/// let cfg = PipelineConfig { n_trees: 3, max_depth: 3, bench: false, ..Default::default() };
+/// let outcome = run(&ds, &out, &cfg).expect("pipeline");
+/// assert!(outcome.report.all_verified());
+/// assert!(out.join("report.json").is_file() && out.join("model_rf.c").is_file());
+/// ```
+pub fn run(ds: &Dataset, out_dir: &Path, cfg: &PipelineConfig) -> anyhow::Result<PipelineOutcome> {
+    anyhow::ensure!(cfg.train_rf || cfg.train_gbt, "nothing to train: enable RF and/or GBT");
+    anyhow::ensure!(cfg.n_trees > 0, "n_trees must be positive");
+    anyhow::ensure!(cfg.max_depth > 0, "max_depth must be positive");
+    anyhow::ensure!(
+        cfg.holdout_frac > 0.0 && cfg.holdout_frac < 1.0,
+        "holdout_frac must be in (0, 1), got {}",
+        cfg.holdout_frac
+    );
+    anyhow::ensure!(ds.n_rows() >= 8, "dataset too small ({} rows)", ds.n_rows());
+    // report.json / manifest.json store the seed as a JSON number (f64);
+    // reject seeds that would silently round instead of recording a
+    // bit-reproducibility value that does not reproduce.
+    anyhow::ensure!(
+        cfg.seed <= (1u64 << 53),
+        "seed {} exceeds 2^53 and cannot round-trip through the JSON report exactly",
+        cfg.seed
+    );
+    std::fs::create_dir_all(out_dir)?;
+
+    // 1. Stratified, seeded split.
+    let mut rng = Rng::new(cfg.seed ^ 0x51DE_CA5E);
+    let (train, holdout) = ds.stratified_split(cfg.holdout_frac, &mut rng);
+    anyhow::ensure!(
+        train.n_rows() > 0 && holdout.n_rows() > 0,
+        "split produced an empty side ({} train / {} holdout)",
+        train.n_rows(),
+        holdout.n_rows()
+    );
+    csv::write_file(&out_dir.join("holdout.csv"), &holdout)
+        .map_err(|e| anyhow::anyhow!("writing holdout.csv: {e}"))?;
+
+    // 2..5 per model kind. gcc-divergence failures are *deferred* so the
+    // report still reaches disk (the inspectable-evidence contract);
+    // configuration errors (e.g. an ineligible layout) abort immediately.
+    let mut models = Vec::new();
+    let mut entries = Vec::new();
+    let mut deferred: Vec<String> = Vec::new();
+    if cfg.train_rf {
+        let model = RandomForest::train(
+            &train,
+            &ForestParams { n_trees: cfg.n_trees, max_depth: cfg.max_depth, ..Default::default() },
+            cfg.seed,
+        );
+        let (mr, entry, defer) = process_model(&model, "rf", &holdout, out_dir, cfg)?;
+        models.push(mr);
+        entries.push(entry);
+        deferred.extend(defer);
+    }
+    if cfg.train_gbt {
+        let model = train_gbt(
+            &train,
+            &GbtParams { n_rounds: cfg.n_trees, max_depth: cfg.max_depth, ..Default::default() },
+            cfg.seed,
+        );
+        let (mr, entry, defer) = process_model(&model, "gbt", &holdout, out_dir, cfg)?;
+        models.push(mr);
+        entries.push(entry);
+        deferred.extend(defer);
+    }
+
+    // 6. Report + manifest — written even when verification failed, so
+    // the failure is inspectable.
+    let report = Report {
+        seed: cfg.seed,
+        dataset: DatasetSummary {
+            rows: ds.n_rows(),
+            features: ds.n_features,
+            classes: ds.n_classes,
+            train_rows: train.n_rows(),
+            holdout_rows: holdout.n_rows(),
+            source: cfg.source.clone(),
+        },
+        models,
+    };
+    std::fs::write(out_dir.join("report.json"), report.to_json().to_string())?;
+    std::fs::write(out_dir.join("REPORT.md"), report.to_markdown())?;
+    let manifest = PipelineManifest { seed: cfg.seed, report_file: "report.json".to_string(), models: entries };
+    manifest.write(out_dir)?;
+
+    anyhow::ensure!(
+        report.all_verified(),
+        "float-vs-integer parity verification FAILED — see {}",
+        out_dir.join("REPORT.md").display()
+    );
+    anyhow::ensure!(
+        deferred.is_empty(),
+        "generated-C verification FAILED (report written): {}",
+        deferred.join("; ")
+    );
+    Ok(PipelineOutcome { out_dir: out_dir.to_path_buf(), report })
+}
+
+/// Run the pipeline on a CSV file. `target` selects the label column by
+/// header name (requires `has_header`) or zero-based index; `None` means
+/// the last column.
+pub fn run_csv(
+    csv_path: &Path,
+    has_header: bool,
+    target: Option<&str>,
+    out_dir: &Path,
+    cfg: &PipelineConfig,
+) -> anyhow::Result<PipelineOutcome> {
+    let ds = csv::read_file_with_target(csv_path, has_header, target)
+        .map_err(|e| anyhow::anyhow!("loading {}: {e}", csv_path.display()))?;
+    let mut cfg = cfg.clone();
+    cfg.source = format!("csv:{}", csv_path.display());
+    run(&ds, out_dir, &cfg)
+}
+
+/// Stages 3–5 for one trained model: write the IR, verify parity,
+/// summarize quantization, emit + gcc-check C (RF only), bench kernels,
+/// simulate cores.
+///
+/// The third tuple element carries *deferred* failure messages (gcc
+/// parity divergence): the caller writes the report first and fails the
+/// run afterwards, so the evidence reaches disk. Hard errors (invalid
+/// model, unwritable files, ineligible layout) return `Err` directly.
+fn process_model(
+    model: &Model,
+    kind: &str,
+    holdout: &Dataset,
+    out_dir: &Path,
+    cfg: &PipelineConfig,
+) -> anyhow::Result<(ModelReport, PipelineModelEntry, Option<String>)> {
+    model.validate().map_err(|e| anyhow::anyhow!("trained {kind} model invalid: {e}"))?;
+    let model_file = format!("model_{kind}.json");
+    std::fs::write(out_dir.join(&model_file), model.to_json())?;
+
+    let stats = crate::ir::stats::stats(model);
+    let parity = verify::verify(model, holdout);
+
+    let quant_summary = match model.kind {
+        ModelKind::RandomForest => QuantSummary::ProbU32 {
+            scale_factor: quant::scale_factor(model.trees.len()),
+            error_bound: quant::error_bound(model.trees.len()),
+            beats_f32: quant::beats_f32(model.trees.len()),
+        },
+        ModelKind::Gbt => QuantSummary::MarginI64 { shift: quant::margin_scale(model).shift },
+    };
+
+    // Integer-only C, RF only (the C generator targets probability
+    // models); gcc-parity checked when a compiler is present.
+    let mut deferred: Option<String> = None;
+    let codegen_summary = if model.kind == ModelKind::RandomForest {
+        if cfg.layout == Layout::QuickScorer && !stats.qs_ineligible.is_empty() {
+            anyhow::bail!(
+                "layout quickscorer requires every tree to have <= {} leaves (trees {:?} exceed \
+                 it) — use --layout native-predicated or lower --depth",
+                crate::inference::QS_MAX_LEAVES,
+                stats.qs_ineligible
+            );
+        }
+        let src = codegen::generate(model, cfg.layout, Variant::IntTreeger);
+        let c_file = format!("model_{kind}.c");
+        std::fs::write(out_dir.join(&c_file), &src)?;
+        // A divergence here is evidence, not a config error: record it
+        // as unchecked + a deferred failure so the report (and the
+        // offending .c file) land on disk before the run fails.
+        let gcc_checked = if codegen::compile::gcc_available() {
+            match gcc_parity_check(model, &src, holdout) {
+                Ok(()) => true,
+                Err(e) => {
+                    deferred = Some(format!("{kind}: {e}"));
+                    false
+                }
+            }
+        } else {
+            false
+        };
+        Some(CodegenSummary {
+            layout: cfg.layout.name().to_string(),
+            variant: Variant::IntTreeger.name().to_string(),
+            file: c_file,
+            bytes: src.len(),
+            gcc_checked,
+        })
+    } else {
+        None
+    };
+
+    let bench = if cfg.bench { bench_kernels(model, holdout) } else { Vec::new() };
+    let simarch = if cfg.simulate && model.kind == ModelKind::RandomForest {
+        simulate_cores(model, holdout)
+    } else {
+        Vec::new()
+    };
+
+    let entry = PipelineModelEntry {
+        kind: kind.to_string(),
+        model_file: model_file.clone(),
+        c_file: codegen_summary.as_ref().map(|c| c.file.clone()),
+        layout: cfg.layout.name().to_string(),
+        variant: Variant::IntTreeger.name().to_string(),
+    };
+    Ok((
+        ModelReport {
+            kind: kind.to_string(),
+            n_trees_param: cfg.n_trees,
+            max_depth_param: cfg.max_depth,
+            model_file,
+            stats,
+            parity,
+            quant: quant_summary,
+            codegen: codegen_summary,
+            bench,
+            simarch,
+        },
+        entry,
+        deferred,
+    ))
+}
+
+/// Compile the generated C with gcc and require bit-identical u32
+/// accumulators against the integer engine on a holdout sample.
+fn gcc_parity_check(model: &Model, src: &str, holdout: &Dataset) -> anyhow::Result<()> {
+    let bin = codegen::CBinary::compile(
+        src,
+        Variant::IntTreeger,
+        model.n_features,
+        model.n_classes,
+        "pipeline",
+    )
+    .map_err(|e| anyhow::anyhow!("gcc on generated C: {e}"))?;
+    let n = holdout.n_rows().min(64);
+    let rows = &holdout.features[..n * holdout.n_features];
+    let got = bin.predict_u32(rows).map_err(|e| anyhow::anyhow!("running generated C: {e}"))?;
+    let ie = IntEngine::compile(model);
+    for (i, fixed) in got.iter().enumerate() {
+        anyhow::ensure!(
+            fixed == &ie.predict_fixed(holdout.row(i)),
+            "generated C diverged from the integer engine at holdout row {i}"
+        );
+    }
+    Ok(())
+}
+
+/// Min-of-k batched throughput of the integer engine per traversal
+/// kernel, over (a capped slice of) the holdout.
+fn bench_kernels(model: &Model, holdout: &Dataset) -> Vec<BenchRow> {
+    let n = holdout.n_rows().min(2048);
+    let flat = &holdout.features[..n * holdout.n_features];
+    match model.kind {
+        ModelKind::RandomForest => {
+            let mut e = IntEngine::compile(model);
+            bench_sweep(n as u64, |k| {
+                e.set_kernel(k);
+                black_box(e.predict_batch(flat));
+            })
+        }
+        ModelKind::Gbt => {
+            let mut e = GbtIntEngine::compile(model);
+            bench_sweep(n as u64, |k| {
+                e.set_kernel(k);
+                black_box(e.predict_batch(flat));
+            })
+        }
+    }
+}
+
+/// One measured row per traversal kernel. `run` sets the kernel and
+/// executes one batch (re-setting the kernel per repetition is a plain
+/// field store — negligible next to the forest walk it times).
+fn bench_sweep(n_rows: u64, mut run: impl FnMut(TraversalKernel)) -> Vec<BenchRow> {
+    let opts = BenchOpts { warmup: 1, reps: 5 };
+    TraversalKernel::all()
+        .into_iter()
+        .map(|kernel| {
+            let m = measure_opts(opts, n_rows, || run(kernel));
+            BenchRow {
+                kernel: kernel.name().to_string(),
+                ns_per_row: m.per_item_ns(),
+                rows_per_s: m.throughput_per_s(),
+            }
+        })
+        .collect()
+}
+
+/// Trace-driven cycle estimates on the paper's four cores, all variants.
+fn simulate_cores(model: &Model, holdout: &Dataset) -> Vec<SimRow> {
+    let mut rows = Vec::new();
+    for core in Core::all() {
+        for v in Variant::all() {
+            let r = simarch::simulate(model, holdout, v, core, 200);
+            rows.push(SimRow {
+                core: core.name().to_string(),
+                variant: v.name().to_string(),
+                instructions: r.instructions,
+                cycles: r.cycles,
+                us_per_inference: r.seconds() * 1e6,
+            });
+        }
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::shuttle_like;
+
+    fn outdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("intreeger_pipeline_{}_{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn minimal_rf_run_produces_all_artifacts() {
+        let ds = shuttle_like(600, 31);
+        let out = outdir("rf");
+        let cfg = PipelineConfig { n_trees: 4, max_depth: 4, bench: false, ..Default::default() };
+        let o = run(&ds, &out, &cfg).expect("pipeline");
+        assert!(o.report.all_verified());
+        for f in ["model_rf.json", "model_rf.c", "report.json", "REPORT.md", "manifest.json", "holdout.csv"] {
+            assert!(out.join(f).is_file(), "missing {f}");
+        }
+        // The bundle reloads end-to-end.
+        let man = PipelineManifest::load(&out).unwrap();
+        assert_eq!(man.models.len(), 1);
+        let m = Model::from_json(&std::fs::read_to_string(out.join(&man.models[0].model_file)).unwrap()).unwrap();
+        assert_eq!(m.trees.len(), 4);
+        // Holdout CSV reloads with the original shape.
+        let holdout = csv::read_file(&out.join("holdout.csv"), false).unwrap();
+        assert_eq!(holdout.n_features, ds.n_features);
+        assert_eq!(holdout.n_rows(), o.report.dataset.holdout_rows);
+    }
+
+    #[test]
+    fn rf_plus_gbt_run_reports_both() {
+        let ds = shuttle_like(600, 32);
+        let out = outdir("both");
+        let cfg = PipelineConfig {
+            n_trees: 3,
+            max_depth: 3,
+            train_gbt: true,
+            bench: false,
+            ..Default::default()
+        };
+        let o = run(&ds, &out, &cfg).expect("pipeline");
+        assert_eq!(o.report.models.len(), 2);
+        assert_eq!(o.report.models[0].kind, "rf");
+        assert_eq!(o.report.models[1].kind, "gbt");
+        assert!(o.report.models[1].codegen.is_none(), "no C for GBT");
+        assert!(out.join("model_gbt.json").is_file());
+        assert!(!out.join("model_gbt.c").exists());
+    }
+
+    #[test]
+    fn rejects_bad_config() {
+        let ds = shuttle_like(100, 33);
+        let out = outdir("bad");
+        let none = PipelineConfig { train_rf: false, ..Default::default() };
+        assert!(run(&ds, &out, &none).is_err());
+        let frac = PipelineConfig { holdout_frac: 1.5, ..Default::default() };
+        assert!(run(&ds, &out, &frac).is_err());
+        let zero = PipelineConfig { n_trees: 0, ..Default::default() };
+        assert!(run(&ds, &out, &zero).is_err());
+    }
+
+    #[test]
+    fn bench_and_simulate_populate_report() {
+        let ds = shuttle_like(400, 34);
+        let out = outdir("bench");
+        let cfg = PipelineConfig {
+            n_trees: 2,
+            max_depth: 3,
+            bench: true,
+            simulate: true,
+            ..Default::default()
+        };
+        let o = run(&ds, &out, &cfg).expect("pipeline");
+        let m = &o.report.models[0];
+        assert_eq!(m.bench.len(), 3, "one row per kernel");
+        assert!(m.bench.iter().all(|b| b.ns_per_row > 0.0));
+        assert_eq!(m.simarch.len(), 12, "4 cores x 3 variants");
+    }
+}

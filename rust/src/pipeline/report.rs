@@ -1,0 +1,456 @@
+//! Pipeline report: one machine-readable `report.json` plus one human
+//! `REPORT.md` per pipeline run.
+//!
+//! The JSON schema (format tag [`REPORT_FORMAT`]) is pinned by the
+//! golden end-to-end test (`rust/tests/pipeline_golden.rs`): tools that
+//! consume pipeline reports — dashboards, the EXPERIMENTS.md
+//! paper-reproduction recipe, CI acceptance checks — can rely on the
+//! key set not drifting silently.
+
+use super::verify::ParityVerdict;
+use crate::ir::stats::ModelStats;
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// Format tag of `report.json` (bump on schema changes).
+pub const REPORT_FORMAT: &str = "intreeger-pipeline-report-v1";
+
+/// Dataset shape and split sizes.
+#[derive(Clone, Debug)]
+pub struct DatasetSummary {
+    /// Total rows loaded.
+    pub rows: usize,
+    /// Feature columns.
+    pub features: usize,
+    /// Distinct classes.
+    pub classes: usize,
+    /// Rows in the training split.
+    pub train_rows: usize,
+    /// Rows in the verification holdout.
+    pub holdout_rows: usize,
+    /// Where the data came from (e.g. `csv:data.csv`, `synthetic:shuttle`).
+    pub source: String,
+}
+
+/// How the model's leaf values were converted to integers.
+#[derive(Clone, Debug)]
+pub enum QuantSummary {
+    /// RF probability leaves → `u32` fixed point, scale `2^32/n` (§III-A).
+    ProbU32 {
+        /// The scaling factor `2^32 / n_trees`.
+        scale_factor: f64,
+        /// Paper bound `n/2^32` on the accumulated probability error.
+        error_bound: f64,
+        /// Whether the bound beats f32's `2^-24` (`n <= 256`).
+        beats_f32: bool,
+    },
+    /// GBT margin leaves → `i64` fixed point, power-of-two shift.
+    MarginI64 {
+        /// The power-of-two exponent of the margin scale.
+        shift: u32,
+    },
+}
+
+/// The generated-C artifact of one model.
+#[derive(Clone, Debug)]
+pub struct CodegenSummary {
+    /// Code layout emitted (`ifelse`, `native`, ...).
+    pub layout: String,
+    /// Numeric variant emitted (always `intreeger` in the pipeline).
+    pub variant: String,
+    /// File name inside the output directory.
+    pub file: String,
+    /// Source size in bytes.
+    pub bytes: usize,
+    /// True when gcc compiled the C and its outputs matched the integer
+    /// engine bit-for-bit on holdout rows (false when gcc is absent).
+    pub gcc_checked: bool,
+}
+
+/// One kernel's measured batched throughput on the holdout.
+#[derive(Clone, Debug)]
+pub struct BenchRow {
+    /// Traversal kernel name.
+    pub kernel: String,
+    /// Min-of-k nanoseconds per row.
+    pub ns_per_row: f64,
+    /// Rows per second at the min-of-k time.
+    pub rows_per_s: f64,
+}
+
+/// One simulated (core, variant) cycle estimate.
+#[derive(Clone, Debug)]
+pub struct SimRow {
+    /// Core name (Table I).
+    pub core: String,
+    /// Numeric variant simulated.
+    pub variant: String,
+    /// Average dynamic instructions per inference.
+    pub instructions: f64,
+    /// Average cycles per inference.
+    pub cycles: f64,
+    /// Wall-clock microseconds per inference at the core's frequency.
+    pub us_per_inference: f64,
+}
+
+/// Everything the pipeline learned about one trained model.
+#[derive(Clone, Debug)]
+pub struct ModelReport {
+    /// `"rf"` or `"gbt"`.
+    pub kind: String,
+    /// Trees (RF) or boosting rounds (GBT) requested.
+    pub n_trees_param: usize,
+    /// Depth limit requested.
+    pub max_depth_param: usize,
+    /// Model file name inside the output directory.
+    pub model_file: String,
+    /// Structural statistics from [`crate::ir::stats`].
+    pub stats: ModelStats,
+    /// The float-vs-integer parity verdict.
+    pub parity: ParityVerdict,
+    /// Integer conversion parameters.
+    pub quant: QuantSummary,
+    /// Generated C artifact (None for GBT — C generation currently
+    /// targets RF probability models).
+    pub codegen: Option<CodegenSummary>,
+    /// Kernel throughput measurements (empty when benching is off).
+    pub bench: Vec<BenchRow>,
+    /// Per-core cycle estimates (empty unless requested).
+    pub simarch: Vec<SimRow>,
+}
+
+/// The full pipeline report.
+#[derive(Clone, Debug)]
+pub struct Report {
+    /// Seed every stochastic stage derived from.
+    pub seed: u64,
+    /// Dataset shape and split.
+    pub dataset: DatasetSummary,
+    /// One entry per trained model kind.
+    pub models: Vec<ModelReport>,
+}
+
+impl Report {
+    /// True when every model's parity verdict passed.
+    pub fn all_verified(&self) -> bool {
+        self.models.iter().all(|m| m.parity.passed())
+    }
+
+    /// Serialize to the pinned `report.json` schema.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("format", s(REPORT_FORMAT)),
+            ("seed", num(self.seed as f64)),
+            ("verified", Json::Bool(self.all_verified())),
+            (
+                "dataset",
+                obj(vec![
+                    ("rows", num(self.dataset.rows as f64)),
+                    ("features", num(self.dataset.features as f64)),
+                    ("classes", num(self.dataset.classes as f64)),
+                    ("train_rows", num(self.dataset.train_rows as f64)),
+                    ("holdout_rows", num(self.dataset.holdout_rows as f64)),
+                    ("source", s(&self.dataset.source)),
+                ]),
+            ),
+            ("models", arr(self.models.iter().map(model_json))),
+        ])
+    }
+
+    /// Render the human-readable `REPORT.md`.
+    pub fn to_markdown(&self) -> String {
+        let mut md = String::new();
+        md.push_str("# InTreeger pipeline report\n\n");
+        md.push_str(&format!(
+            "- overall verdict: **{}**\n- seed: {}\n- dataset: {} rows ({} train / {} holdout), \
+             {} features, {} classes (source: {})\n\n",
+            if self.all_verified() { "PASS" } else { "FAIL" },
+            self.seed,
+            self.dataset.rows,
+            self.dataset.train_rows,
+            self.dataset.holdout_rows,
+            self.dataset.features,
+            self.dataset.classes,
+            self.dataset.source
+        ));
+        for m in &self.models {
+            md.push_str(&model_markdown(m));
+        }
+        md.push_str(
+            "---\n\nGenerated by `intreeger pipeline`. The parity verdict checks the paper's \
+             \"no loss of precision\" claim: integer-only predictions must be argmax-identical \
+             to the float reference on every holdout row, across every engine and traversal \
+             kernel, with fixed-point probability error within the documented bound.\n",
+        );
+        md
+    }
+}
+
+fn model_json(m: &ModelReport) -> Json {
+    let p = &m.parity;
+    let quant = match &m.quant {
+        QuantSummary::ProbU32 { scale_factor, error_bound, beats_f32 } => obj(vec![
+            ("scheme", s("prob-u32")),
+            ("scale_factor", num(*scale_factor)),
+            ("error_bound", num(*error_bound)),
+            ("beats_f32", Json::Bool(*beats_f32)),
+        ]),
+        QuantSummary::MarginI64 { shift } => {
+            obj(vec![("scheme", s("margin-i64")), ("shift", num(*shift as f64))])
+        }
+    };
+    let codegen = match &m.codegen {
+        Some(c) => obj(vec![
+            ("layout", s(&c.layout)),
+            ("variant", s(&c.variant)),
+            ("file", s(&c.file)),
+            ("bytes", num(c.bytes as f64)),
+            ("gcc_checked", Json::Bool(c.gcc_checked)),
+        ]),
+        None => Json::Null,
+    };
+    obj(vec![
+        ("kind", s(&m.kind)),
+        (
+            "params",
+            obj(vec![
+                ("n_trees", num(m.n_trees_param as f64)),
+                ("max_depth", num(m.max_depth_param as f64)),
+            ]),
+        ),
+        ("model_file", s(&m.model_file)),
+        (
+            "stats",
+            obj(vec![
+                ("n_trees", num(m.stats.n_trees as f64)),
+                ("n_nodes", num(m.stats.n_nodes as f64)),
+                ("n_branches", num(m.stats.n_branches as f64)),
+                ("n_leaves", num(m.stats.n_leaves as f64)),
+                ("max_depth", num(m.stats.max_depth as f64)),
+                ("mean_leaf_depth", num(m.stats.mean_leaf_depth)),
+                ("min_nonzero_leaf_prob", num(m.stats.min_nonzero_leaf_prob as f64)),
+                ("qs_eligible_trees", num(m.stats.qs_eligible_trees as f64)),
+            ]),
+        ),
+        (
+            "accuracy",
+            obj(vec![("float", num(p.accuracy_float)), ("int", num(p.accuracy_int))]),
+        ),
+        (
+            "parity",
+            obj(vec![
+                ("rows", num(p.rows as f64)),
+                ("mismatches", num(p.mismatches as f64)),
+                ("argmax_identical", Json::Bool(p.argmax_identical)),
+                ("kernels", arr(p.kernels.iter().map(|k| s(k)))),
+                ("engines", arr(p.engines.iter().map(|e| s(e)))),
+                ("per_class_max_error", arr(p.per_class_max_error.iter().map(|&e| num(e)))),
+                ("max_abs_error", num(p.max_abs_error)),
+                ("error_bound", num(p.error_bound)),
+                ("within_bound", Json::Bool(p.within_bound)),
+            ]),
+        ),
+        ("quant", quant),
+        ("codegen", codegen),
+        (
+            "bench",
+            arr(m.bench.iter().map(|b| {
+                obj(vec![
+                    ("kernel", s(&b.kernel)),
+                    ("ns_per_row", num(b.ns_per_row)),
+                    ("rows_per_s", num(b.rows_per_s)),
+                ])
+            })),
+        ),
+        (
+            "simarch",
+            arr(m.simarch.iter().map(|r| {
+                obj(vec![
+                    ("core", s(&r.core)),
+                    ("variant", s(&r.variant)),
+                    ("instructions", num(r.instructions)),
+                    ("cycles", num(r.cycles)),
+                    ("us_per_inference", num(r.us_per_inference)),
+                ])
+            })),
+        ),
+    ])
+}
+
+fn model_markdown(m: &ModelReport) -> String {
+    let p = &m.parity;
+    let mut md = format!(
+        "## Model `{}` ({} trees requested, max depth {})\n\n",
+        m.kind, m.n_trees_param, m.max_depth_param
+    );
+    md.push_str(&format!(
+        "**Parity verdict: {}** — {} holdout rows, {} mismatches across engines {} × kernels \
+         {} (per-row and batched); max fixed-point probability error {:.3e} vs bound {:.3e}.\n\n",
+        if p.passed() { "PASS" } else { "FAIL" },
+        p.rows,
+        p.mismatches,
+        p.engines.join("/"),
+        p.kernels.join("/"),
+        p.max_abs_error,
+        p.error_bound,
+    ));
+    md.push_str("| metric | value |\n|---|---|\n");
+    md.push_str(&format!("| accuracy (float reference) | {:.4} |\n", p.accuracy_float));
+    md.push_str(&format!("| accuracy (integer-only) | {:.4} |\n", p.accuracy_int));
+    md.push_str(&format!(
+        "| trees / nodes / leaves | {} / {} / {} |\n",
+        m.stats.n_trees, m.stats.n_nodes, m.stats.n_leaves
+    ));
+    md.push_str(&format!(
+        "| depth (max / mean leaf) | {} / {:.2} |\n",
+        m.stats.max_depth, m.stats.mean_leaf_depth
+    ));
+    md.push_str(&format!(
+        "| quickscorer-eligible trees | {}/{} |\n",
+        m.stats.qs_eligible_trees, m.stats.n_trees
+    ));
+    match &m.quant {
+        QuantSummary::ProbU32 { scale_factor, error_bound, beats_f32 } => {
+            md.push_str(&format!("| fixed-point scale 2^32/n | {scale_factor:.1} |\n"));
+            md.push_str(&format!(
+                "| paper error bound n/2^32 | {error_bound:.3e} (beats f32: {beats_f32}) |\n"
+            ));
+        }
+        QuantSummary::MarginI64 { shift } => {
+            md.push_str(&format!("| margin fixed-point shift | 2^{shift} |\n"));
+        }
+    }
+    match &m.codegen {
+        Some(c) => md.push_str(&format!(
+            "| generated C | `{}` ({} bytes, layout {}, variant {}, gcc parity {}) |\n",
+            c.file,
+            c.bytes,
+            c.layout,
+            c.variant,
+            if c.gcc_checked { "checked" } else { "not run" }
+        )),
+        None => md.push_str("| generated C | (skipped — C generation targets RF models) |\n"),
+    }
+    md.push('\n');
+    if !m.bench.is_empty() {
+        md.push_str("### Batched throughput (holdout, integer engine)\n\n");
+        md.push_str("| kernel | ns/row | rows/s |\n|---|---|---|\n");
+        for b in &m.bench {
+            md.push_str(&format!(
+                "| {} | {:.1} | {:.0} |\n",
+                b.kernel, b.ns_per_row, b.rows_per_s
+            ));
+        }
+        md.push('\n');
+    }
+    if !m.simarch.is_empty() {
+        md.push_str("### Simulated per-core cost (trace-driven model)\n\n");
+        md.push_str("| core | variant | instructions | cycles | us/inference |\n|---|---|---|---|---|\n");
+        for r in &m.simarch {
+            md.push_str(&format!(
+                "| {} | {} | {:.1} | {:.1} | {:.3} |\n",
+                r.core, r.variant, r.instructions, r.cycles, r.us_per_inference
+            ));
+        }
+        md.push('\n');
+    }
+    md
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn verdict() -> ParityVerdict {
+        ParityVerdict {
+            rows: 100,
+            mismatches: 0,
+            argmax_identical: true,
+            kernels: vec!["branchy".into(), "branchless".into(), "quickscorer".into()],
+            engines: vec!["float".into(), "flint".into(), "intreeger".into()],
+            per_class_max_error: vec![1e-9, 2e-9],
+            max_abs_error: 2e-9,
+            error_bound: 3e-9,
+            within_bound: true,
+            accuracy_float: 0.97,
+            accuracy_int: 0.97,
+        }
+    }
+
+    fn report() -> Report {
+        Report {
+            seed: 42,
+            dataset: DatasetSummary {
+                rows: 400,
+                features: 7,
+                classes: 7,
+                train_rows: 300,
+                holdout_rows: 100,
+                source: "synthetic:shuttle".into(),
+            },
+            models: vec![ModelReport {
+                kind: "rf".into(),
+                n_trees_param: 10,
+                max_depth_param: 6,
+                model_file: "model_rf.json".into(),
+                stats: crate::ir::stats::stats(&crate::trees::RandomForest::train(
+                    &crate::data::shuttle_like(200, 1),
+                    &crate::trees::ForestParams { n_trees: 2, max_depth: 3, ..Default::default() },
+                    1,
+                )),
+                parity: verdict(),
+                quant: QuantSummary::ProbU32 {
+                    scale_factor: 4.29e8,
+                    error_bound: 2.3e-9,
+                    beats_f32: true,
+                },
+                codegen: Some(CodegenSummary {
+                    layout: "ifelse".into(),
+                    variant: "intreeger".into(),
+                    file: "model_rf.c".into(),
+                    bytes: 1234,
+                    gcc_checked: false,
+                }),
+                bench: vec![BenchRow {
+                    kernel: "branchless".into(),
+                    ns_per_row: 120.0,
+                    rows_per_s: 8.3e6,
+                }],
+                simarch: vec![],
+            }],
+        }
+    }
+
+    #[test]
+    fn json_roundtrips_and_carries_format() {
+        let r = report();
+        let text = r.to_json().to_string();
+        let v = Json::parse(&text).unwrap();
+        assert_eq!(v.get("format").and_then(Json::as_str), Some(REPORT_FORMAT));
+        assert_eq!(v.get("verified"), Some(&Json::Bool(true)));
+        let models = v.get("models").and_then(Json::as_arr).unwrap();
+        assert_eq!(models.len(), 1);
+        assert_eq!(models[0].get("kind").and_then(Json::as_str), Some("rf"));
+        assert!(models[0].get("parity").unwrap().get("argmax_identical").is_some());
+    }
+
+    #[test]
+    fn markdown_carries_verdict_and_tables() {
+        let md = report().to_markdown();
+        assert!(md.contains("# InTreeger pipeline report"));
+        assert!(md.contains("**PASS**"));
+        assert!(md.contains("Parity verdict: PASS"));
+        assert!(md.contains("| accuracy (float reference) | 0.9700 |"));
+        assert!(md.contains("branchless | 120.0"));
+    }
+
+    #[test]
+    fn failed_verdict_renders_fail() {
+        let mut r = report();
+        r.models[0].parity.argmax_identical = false;
+        r.models[0].parity.mismatches = 3;
+        assert!(!r.all_verified());
+        assert!(r.to_markdown().contains("Parity verdict: FAIL"));
+        let v = Json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(v.get("verified"), Some(&Json::Bool(false)));
+    }
+}

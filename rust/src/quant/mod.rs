@@ -96,6 +96,7 @@ pub fn max_accumulated(n_trees: usize) -> u64 {
 /// A quantized leaf: per-class `u32` fixed-point contributions.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct QuantLeaf {
+    /// Per-class fixed-point values (scale `2^32 / n_trees`).
     pub values: Vec<u32>,
 }
 
@@ -132,6 +133,7 @@ pub fn quantize_forest(model: &Model) -> Vec<Vec<Option<QuantLeaf>>> {
 /// accumulated in `i64`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct MarginScale {
+    /// Power-of-two exponent: margins are scaled by `2^shift`.
     pub shift: u32,
 }
 

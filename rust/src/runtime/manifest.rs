@@ -1,28 +1,50 @@
-//! Artifact manifest: the contract between `python/compile/aot.py` and
-//! the rust runtime. Describes every compiled HLO tier (shapes, depth,
-//! file name) so the runtime can pick the smallest tier a model fits.
+//! Artifact manifests.
+//!
+//! Two bundle formats live here:
+//!
+//! * [`Manifest`] — the XLA artifact contract between
+//!   `python/compile/aot.py` and the rust runtime: every compiled HLO
+//!   tier (shapes, depth, file name) so the runtime can pick the
+//!   smallest tier a model fits.
+//! * [`PipelineManifest`] — the output bundle of `intreeger pipeline`
+//!   (model IR + generated C + report); the serving coordinator can
+//!   boot straight from such a directory
+//!   ([`crate::coordinator::server_from_pipeline`]).
+//!
+//! Both live in `manifest.json` of their respective directories and are
+//! told apart by their `format` tag.
 
 use crate::ir::Model;
-use crate::util::Json;
+use crate::util::json::{arr, num, obj, s, Json};
 use std::path::Path;
 
 /// One compiled artifact tier (fixed shapes baked at AOT time).
 #[derive(Clone, Debug, PartialEq)]
 pub struct Tier {
+    /// Tier name (e.g. `quick`, `big`).
     pub name: String,
+    /// HLO file name inside the artifact directory.
     pub file: String,
+    /// Batch rows the executable was compiled for.
     pub batch: usize,
+    /// Padded feature count.
     pub features: usize,
+    /// Padded tree count.
     pub trees: usize,
+    /// Padded nodes per tree.
     pub nodes: usize,
+    /// Padded class count.
     pub classes: usize,
+    /// Maximum tree depth the lowered loop unrolls to.
     pub depth: usize,
+    /// Whether this tier is the Pallas-lowered kernel (vs the oracle).
     pub use_pallas: bool,
 }
 
 /// Parsed manifest.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// Every compiled tier the artifact directory offers.
     pub tiers: Vec<Tier>,
 }
 
@@ -94,6 +116,135 @@ impl Manifest {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Pipeline artifact bundle
+// ---------------------------------------------------------------------------
+
+/// Format tag of a pipeline bundle's `manifest.json`.
+pub const PIPELINE_FORMAT: &str = "intreeger-pipeline-v1";
+
+/// One model inside a pipeline bundle.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PipelineModelEntry {
+    /// `"rf"` or `"gbt"`.
+    pub kind: String,
+    /// Model IR file name inside the bundle directory.
+    pub model_file: String,
+    /// Generated C file name (None for model kinds without C emission).
+    pub c_file: Option<String>,
+    /// C layout the bundle was generated with.
+    pub layout: String,
+    /// Numeric variant of the generated C.
+    pub variant: String,
+}
+
+/// The `manifest.json` of an `intreeger pipeline` output directory —
+/// the machine-readable table of contents the serving coordinator and
+/// downstream tooling navigate the bundle with.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PipelineManifest {
+    /// Seed the pipeline ran with (bit-reproducibility record). Stored
+    /// as a JSON number, so it must not exceed 2^53 — `pipeline::run`
+    /// rejects larger seeds up front.
+    pub seed: u64,
+    /// Report file name inside the bundle directory (`report.json`).
+    pub report_file: String,
+    /// One entry per trained model.
+    pub models: Vec<PipelineModelEntry>,
+}
+
+impl PipelineManifest {
+    /// Serialize to the bundle's `manifest.json` schema.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("format", s(PIPELINE_FORMAT)),
+            ("seed", num(self.seed as f64)),
+            ("report", s(&self.report_file)),
+            (
+                "models",
+                arr(self.models.iter().map(|m| {
+                    obj(vec![
+                        ("kind", s(&m.kind)),
+                        ("model", s(&m.model_file)),
+                        (
+                            "c",
+                            match &m.c_file {
+                                Some(f) => s(f),
+                                None => Json::Null,
+                            },
+                        ),
+                        ("layout", s(&m.layout)),
+                        ("variant", s(&m.variant)),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    /// Write `manifest.json` into a bundle directory.
+    pub fn write(&self, dir: &Path) -> anyhow::Result<()> {
+        std::fs::write(dir.join("manifest.json"), self.to_json().to_string())?;
+        Ok(())
+    }
+
+    /// Parse a bundle manifest, rejecting other formats (notably the XLA
+    /// artifact manifest, which shares the file name).
+    pub fn parse(text: &str) -> anyhow::Result<PipelineManifest> {
+        let v = Json::parse(text).map_err(|e| anyhow::anyhow!("pipeline manifest: {e}"))?;
+        match v.get("format").and_then(Json::as_str) {
+            Some(PIPELINE_FORMAT) => {}
+            other => anyhow::bail!("not a pipeline bundle (format {other:?})"),
+        }
+        let seed = v
+            .get("seed")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("pipeline manifest: missing seed"))? as u64;
+        let report_file = v
+            .get("report")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("pipeline manifest: missing report"))?
+            .to_string();
+        let models_json = v
+            .get("models")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("pipeline manifest: missing models"))?;
+        let mut models = Vec::new();
+        for m in models_json {
+            let field = |k: &str| -> anyhow::Result<String> {
+                m.get(k)
+                    .and_then(Json::as_str)
+                    .map(str::to_string)
+                    .ok_or_else(|| anyhow::anyhow!("pipeline manifest model: bad field '{k}'"))
+            };
+            models.push(PipelineModelEntry {
+                kind: field("kind")?,
+                model_file: field("model")?,
+                c_file: m.get("c").and_then(Json::as_str).map(str::to_string),
+                layout: field("layout")?,
+                variant: field("variant")?,
+            });
+        }
+        Ok(PipelineManifest { seed, report_file, models })
+    }
+
+    /// Load `manifest.json` from a pipeline bundle directory.
+    pub fn load(dir: &Path) -> anyhow::Result<PipelineManifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        Self::parse(&text)
+    }
+
+    /// Load the model IR of the bundle's entry of the given kind.
+    pub fn load_model(&self, dir: &Path, kind: &str) -> anyhow::Result<Model> {
+        let entry = self
+            .models
+            .iter()
+            .find(|m| m.kind == kind)
+            .ok_or_else(|| anyhow::anyhow!("pipeline bundle has no '{kind}' model"))?;
+        let text = std::fs::read_to_string(dir.join(&entry.model_file))?;
+        Model::from_json(&text).map_err(|e| anyhow::anyhow!("loading {}: {e}", entry.model_file))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -149,6 +300,70 @@ mod tests {
             1,
         );
         assert!(m.pick(&huge, 1).is_none());
+    }
+
+    fn sample_pipeline_manifest() -> PipelineManifest {
+        PipelineManifest {
+            seed: 42,
+            report_file: "report.json".into(),
+            models: vec![
+                PipelineModelEntry {
+                    kind: "rf".into(),
+                    model_file: "model_rf.json".into(),
+                    c_file: Some("model_rf.c".into()),
+                    layout: "ifelse".into(),
+                    variant: "intreeger".into(),
+                },
+                PipelineModelEntry {
+                    kind: "gbt".into(),
+                    model_file: "model_gbt.json".into(),
+                    c_file: None,
+                    layout: "ifelse".into(),
+                    variant: "intreeger".into(),
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn pipeline_manifest_roundtrips() {
+        let m = sample_pipeline_manifest();
+        let back = PipelineManifest::parse(&m.to_json().to_string()).unwrap();
+        assert_eq!(m, back);
+        assert_eq!(back.models[1].c_file, None);
+    }
+
+    #[test]
+    fn pipeline_manifest_rejects_other_formats() {
+        // The XLA artifact manifest shares the file name but not the tag.
+        assert!(PipelineManifest::parse(SAMPLE).is_err());
+        assert!(PipelineManifest::parse("{}").is_err());
+        assert!(PipelineManifest::parse("nope").is_err());
+        // And vice versa: the tier manifest parser rejects bundles.
+        let bundle = sample_pipeline_manifest().to_json().to_string();
+        assert!(Manifest::parse(&bundle).is_err());
+    }
+
+    #[test]
+    fn pipeline_manifest_write_load_and_model() {
+        let dir = std::env::temp_dir()
+            .join(format!("intreeger_pipe_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let m = sample_pipeline_manifest();
+        m.write(&dir).unwrap();
+        let back = PipelineManifest::load(&dir).unwrap();
+        assert_eq!(m, back);
+        // load_model: write a real model file under the rf entry.
+        let ds = shuttle_like(200, 90);
+        let model = RandomForest::train(
+            &ds,
+            &ForestParams { n_trees: 2, max_depth: 3, ..Default::default() },
+            1,
+        );
+        std::fs::write(dir.join("model_rf.json"), model.to_json()).unwrap();
+        let loaded = back.load_model(&dir, "rf").unwrap();
+        assert_eq!(loaded, model);
+        assert!(back.load_model(&dir, "nope").is_err());
     }
 
     #[test]

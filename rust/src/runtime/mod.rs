@@ -21,7 +21,7 @@ pub mod manifest;
 pub mod pack;
 pub mod pjrt;
 
-pub use manifest::{Manifest, Tier};
+pub use manifest::{Manifest, PipelineManifest, PipelineModelEntry, Tier, PIPELINE_FORMAT};
 pub use pack::ForestPack;
 pub use pjrt::PjrtEngine;
 

@@ -16,6 +16,7 @@ use crate::quant::prob_to_fixed;
 /// Padded tensors for one model in one tier (row-major).
 #[derive(Clone, Debug)]
 pub struct ForestPack {
+    /// Name of the tier these tensors were padded for.
     pub tier_name: String,
     /// i32[T, N]
     pub feat: Vec<i32>,
@@ -27,10 +28,15 @@ pub struct ForestPack {
     pub right: Vec<i32>,
     /// u32[T, N, C]
     pub leaf_val: Vec<u32>,
+    /// Padded tree count `T`.
     pub trees: usize,
+    /// Padded nodes per tree `N`.
     pub nodes: usize,
+    /// Padded class count `C`.
     pub classes: usize,
+    /// Padded feature count.
     pub features: usize,
+    /// Batch rows the tier executes per call.
     pub batch: usize,
     /// The model's true class count (≤ tier classes).
     pub model_classes: usize,

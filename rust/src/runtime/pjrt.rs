@@ -45,10 +45,12 @@ impl PjrtEngine {
         Ok(PjrtEngine { client, exe, tier, pack, forest_buffers })
     }
 
+    /// The artifact tier this engine was compiled from.
     pub fn tier(&self) -> &Tier {
         &self.tier
     }
 
+    /// The padded forest tensors bound to the executable.
     pub fn pack(&self) -> &ForestPack {
         &self.pack
     }

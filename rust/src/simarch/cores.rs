@@ -43,6 +43,7 @@ pub enum Core {
 }
 
 impl Core {
+    /// Every evaluated core, in Table I order.
     pub fn all() -> [Core; 4] {
         [Core::Epyc7282, Core::CortexA72, Core::U74, Core::Fe310]
     }
@@ -53,6 +54,7 @@ impl Core {
         [Core::Epyc7282, Core::CortexA72, Core::U74]
     }
 
+    /// Display name (core + ISA).
     pub fn name(self) -> &'static str {
         match self {
             Core::Epyc7282 => "EPYC 7282 (x86-64)",
@@ -62,6 +64,8 @@ impl Core {
         }
     }
 
+    /// The core's cost-model parameters (Table I + microarchitectural
+    /// costs; see the module docs for provenance).
     pub fn params(self) -> CoreParams {
         match self {
             Core::Epyc7282 => CoreParams {
@@ -201,12 +205,19 @@ impl Core {
 /// costs; see module docs for the provenance of each number).
 #[derive(Clone, Debug)]
 pub struct CoreParams {
+    /// Which core these parameters model.
     pub core: Core,
+    /// ISA name as evaluated by the paper.
     pub isa: &'static str,
+    /// Native word width (bits).
     pub word_bits: u32,
+    /// Clock frequency (Hz).
     pub freq_hz: f64,
+    /// Maximum instructions issued per cycle.
     pub issue_width: u32,
+    /// L1 instruction-cache capacity (bytes).
     pub icache_bytes: u64,
+    /// Free-text data-cache description (Table I column).
     pub dcache_note: &'static str,
     /// Cycles per instruction-fetch miss.
     pub miss_penalty: f64,
@@ -215,38 +226,61 @@ pub struct CoreParams {
     pub locality_beta: f64,
     /// Instructions per cache line (code density for the fetch model).
     pub instrs_per_line: f64,
+    /// Average code bytes per instruction (footprint estimate).
     pub bytes_per_instr: f64,
 
+    /// Cycles per float-compare branch node.
     pub branch_float: f64,
+    /// Cycles per integer-compare branch node.
     pub branch_int: f64,
+    /// Fraction of branch nodes that mispredict.
     pub mispredict_rate: f64,
+    /// Cycles per misprediction.
     pub mispredict: f64,
+    /// Cycles per float leaf-class accumulation.
     pub leaf_add_float: f64,
+    /// Cycles per integer leaf-class accumulation.
     pub leaf_add_int: f64,
+    /// Cycles per FlInt feature transform.
     pub transform_feature: f64,
+    /// Cycles per float divide (the RF probability average).
     pub div_float: f64,
 
+    /// Instructions per float branch node.
     pub i_branch_float: f64,
+    /// Instructions per integer branch node.
     pub i_branch_int: f64,
+    /// Extra immediate-materialization instructions per integer branch.
     pub i_branch_int_extra_imm: f64,
+    /// Instructions per float leaf accumulation.
     pub i_leaf_float: f64,
+    /// Instructions per integer leaf accumulation.
     pub i_leaf_int: f64,
+    /// Extra immediate-materialization instructions per integer leaf add.
     pub i_leaf_int_extra_imm: f64,
+    /// Instructions per FlInt feature transform.
     pub i_transform: f64,
+    /// Instructions per float divide.
     pub i_div: f64,
 }
 
 /// Cycles split by cause (for the §IV-C / §IV-D analysis output).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct CycleBreakdown {
+    /// Cycles spent in branch-node evaluation.
     pub traversal: f64,
+    /// Cycles spent accumulating leaf class values.
     pub leaf_accum: f64,
+    /// Per-inference fixed overhead (call, transform, final divide).
     pub prologue_epilogue: f64,
+    /// Branch-misprediction penalty cycles.
     pub mispredict: f64,
+    /// Instruction-fetch penalty cycles (see [`super::cache`]).
     pub fetch: f64,
 }
 
 impl CycleBreakdown {
+    /// Sum of all categories.
     pub fn total(&self) -> f64 {
         self.traversal + self.leaf_accum + self.prologue_epilogue + self.mispredict + self.fetch
     }

@@ -20,12 +20,16 @@ use crate::ir::Model;
 /// RV32IMAC.
 #[derive(Clone, Copy, Debug)]
 pub struct Footprint {
+    /// Code section size (bytes).
     pub text_bytes: u64,
+    /// Initialized-data section size (bytes).
     pub data_bytes: u64,
+    /// Zero-initialized reservation (bytes).
     pub bss_bytes: u64,
 }
 
 impl Footprint {
+    /// Total firmware footprint (text + data + bss).
     pub fn total(&self) -> u64 {
         self.text_bytes + self.data_bytes + self.bss_bytes
     }
@@ -66,11 +70,17 @@ pub fn footprint(model: &Model) -> Footprint {
 /// Bare-metal use-case simulation output.
 #[derive(Clone, Copy, Debug)]
 pub struct UseCaseResult {
+    /// Estimated firmware memory footprint.
     pub footprint: Footprint,
+    /// Average dynamic instructions per inference.
     pub instructions_per_inference: f64,
+    /// Average cycles per inference (incl. QSPI fetch penalty).
     pub cycles_per_inference: f64,
+    /// Instructions per cycle.
     pub ipc: f64,
+    /// Throughput at 16 MHz.
     pub inferences_per_second: f64,
+    /// Latency per inference (s).
     pub seconds_per_inference: f64,
 }
 

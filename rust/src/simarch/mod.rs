@@ -37,7 +37,9 @@ use crate::ir::Model;
 /// Result of simulating one (model, variant, core) combination.
 #[derive(Clone, Debug)]
 pub struct SimResult {
+    /// Core simulated.
     pub core: Core,
+    /// Numeric variant simulated.
     pub variant: Variant,
     /// Average dynamic instructions per inference.
     pub instructions: f64,

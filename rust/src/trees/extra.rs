@@ -11,8 +11,11 @@ use crate::util::Rng;
 /// ExtraTrees training parameters.
 #[derive(Clone, Debug)]
 pub struct ExtraParams {
+    /// Number of trees.
     pub n_trees: usize,
+    /// Depth limit for every tree.
     pub max_depth: usize,
+    /// Minimum rows a node needs to be split further.
     pub min_samples_split: usize,
     /// Candidate features per split; 0 = floor(sqrt(n_features)).
     pub max_features: usize,

@@ -16,8 +16,11 @@ pub struct ForestParams {
     /// Number of trees. The paper evaluates up to 100 (and notes that
     /// >256 would break the fixed-point precision argument).
     pub n_trees: usize,
+    /// Depth limit for every tree.
     pub max_depth: usize,
+    /// Minimum rows a node needs to be split further.
     pub min_samples_split: usize,
+    /// Minimum rows each side of a split must keep.
     pub min_samples_leaf: usize,
     /// Features per split; `0` = floor(sqrt(n_features)) (sklearn default).
     pub max_features: usize,

@@ -17,10 +17,13 @@ use crate::util::Rng;
 pub struct GbtParams {
     /// Boosting rounds; each round trains `n_classes` trees (one-vs-all).
     pub n_rounds: usize,
+    /// Depth limit for every tree.
     pub max_depth: usize,
+    /// Shrinkage applied to every leaf weight.
     pub learning_rate: f32,
     /// L2 regularization on leaf weights (XGBoost lambda).
     pub lambda: f64,
+    /// Minimum rows each side of a split must keep.
     pub min_samples_leaf: usize,
     /// Row subsample fraction per round (stochastic gradient boosting).
     pub subsample: f64,

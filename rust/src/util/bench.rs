@@ -54,8 +54,11 @@ impl BenchOpts {
 /// Result of one measurement.
 #[derive(Clone, Copy, Debug)]
 pub struct Measurement {
+    /// Fastest timed run (the headline estimator).
     pub min_ns: f64,
+    /// Median timed run.
     pub median_ns: f64,
+    /// Mean over timed runs.
     pub mean_ns: f64,
     /// Work items per run (ns are divided by this for per-item figures).
     pub items: u64,

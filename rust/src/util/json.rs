@@ -11,18 +11,26 @@ use std::fmt::Write as _;
 /// A parsed JSON value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any number (stored as f64; integers survive below 2^53).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys — serialization is deterministic).
     Obj(BTreeMap<String, Json>),
 }
 
 /// Parse error with byte offset.
 #[derive(Debug, PartialEq)]
 pub struct JsonError {
+    /// Byte offset of the failure in the input.
     pub offset: usize,
+    /// Human-readable cause.
     pub msg: String,
 }
 
@@ -36,6 +44,7 @@ impl std::error::Error for JsonError {}
 impl Json {
     // -- accessors ---------------------------------------------------------
 
+    /// The number value, if this is a `Num`.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -43,6 +52,7 @@ impl Json {
         }
     }
 
+    /// The value as a non-negative integer, if it is one exactly.
     pub fn as_usize(&self) -> Option<usize> {
         match self {
             Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 => Some(*n as usize),
@@ -50,6 +60,7 @@ impl Json {
         }
     }
 
+    /// The string value, if this is a `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -57,6 +68,7 @@ impl Json {
         }
     }
 
+    /// The items, if this is an `Arr`.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -64,6 +76,7 @@ impl Json {
         }
     }
 
+    /// Object field lookup (`None` for missing keys and non-objects).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -160,14 +173,17 @@ pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
     Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
 
+/// Array from any iterator of values.
 pub fn arr<I: IntoIterator<Item = Json>>(items: I) -> Json {
     Json::Arr(items.into_iter().collect())
 }
 
+/// Number value.
 pub fn num(n: f64) -> Json {
     Json::Num(n)
 }
 
+/// String value (clones the slice).
 pub fn s(v: &str) -> Json {
     Json::Str(v.to_string())
 }

@@ -44,10 +44,12 @@ pub struct Histogram {
 }
 
 impl Histogram {
+    /// Empty histogram.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Record one value (microseconds; negatives clamp to 0).
     pub fn record(&mut self, value_us: f64) {
         let v = value_us.max(0.0);
         let b = if v < 1.0 { 0 } else { (v.log2().floor() as usize).min(31) };
@@ -56,10 +58,12 @@ impl Histogram {
         self.sum += v;
     }
 
+    /// Number of recorded values.
     pub fn count(&self) -> u64 {
         self.count
     }
 
+    /// Mean of recorded values (0.0 when empty).
     pub fn mean(&self) -> f64 {
         if self.count == 0 {
             0.0

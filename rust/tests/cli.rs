@@ -20,6 +20,115 @@ fn no_args_prints_usage() {
     assert!(String::from_utf8_lossy(&out.stderr).contains("usage:"));
 }
 
+/// The usage text is generated from the same command table `main`
+/// dispatches on; this pins the full subcommand set (including flags
+/// that drifted out of the old hand-written USAGE string) so a new or
+/// renamed command must show up in `--help`.
+#[test]
+fn help_lists_every_subcommand_and_flag_enumeration() {
+    let out = Command::new(bin()).arg("--help").output().unwrap();
+    assert!(out.status.success(), "--help must exit 0");
+    let text = String::from_utf8_lossy(&out.stdout);
+    for cmd in [
+        "pipeline", "train", "import", "codegen", "predict", "inspect", "simulate", "serve",
+        "tablei",
+    ] {
+        assert!(text.contains(cmd), "missing subcommand '{cmd}' in help:\n{text}");
+    }
+    // Flags the old hand-written USAGE drifted on, plus generated lists.
+    for needle in [
+        "--trees",            // inspect per-tree table
+        "--workers",          // serve worker pool
+        "--calibrate",        // serve auto-calibration
+        "--pipeline",         // serve from a bundle
+        "--target",           // pipeline label column
+        "--holdout",          // pipeline split fraction
+        "ifelse|native|native-predicated|quickscorer", // full layout list, generated
+        "float|flint|intreeger",                       // full variant list, generated
+    ] {
+        assert!(text.contains(needle), "missing '{needle}' in help:\n{text}");
+    }
+    // `help` and `-h` behave identically.
+    let h2 = Command::new(bin()).arg("help").output().unwrap();
+    assert!(h2.status.success());
+    assert_eq!(out.stdout, h2.stdout);
+    // `--help` after a subcommand prints usage too — it must not
+    // dispatch (pipeline would panic on the missing --out; train would
+    // silently run a full training job).
+    let h3 = Command::new(bin()).args(["pipeline", "--help"]).output().unwrap();
+    assert!(h3.status.success(), "subcommand --help must exit 0");
+    assert_eq!(out.stdout, h3.stdout);
+}
+
+/// The headline command: CSV in -> verified integer-only C + report out,
+/// then `serve --pipeline` boots straight from the bundle.
+#[test]
+fn pipeline_cli_end_to_end_and_serve_from_bundle() {
+    let dir = tmpdir();
+    let csv = dir.join("pipe_data.csv");
+    let out_dir = dir.join("pipe_out");
+    let ds = intreeger::data::shuttle_like(600, 16);
+    intreeger::data::csv::write_file(&csv, &ds).unwrap();
+
+    let out = Command::new(bin())
+        .args(["pipeline", "--csv"])
+        .arg(&csv)
+        .args(["--trees", "3", "--depth", "4", "--seed", "9", "--out"])
+        .arg(&out_dir)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "pipeline failed: {}", String::from_utf8_lossy(&out.stderr));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("pipeline PASS"), "missing verdict in:\n{stderr}");
+    for f in ["model_rf.json", "model_rf.c", "report.json", "REPORT.md", "manifest.json", "holdout.csv"] {
+        assert!(out_dir.join(f).is_file(), "missing artifact {f}");
+    }
+    let report = std::fs::read_to_string(out_dir.join("report.json")).unwrap();
+    assert!(report.contains("\"format\":\"intreeger-pipeline-report-v1\""));
+    assert!(report.contains("\"argmax_identical\":true"));
+    assert!(report.contains("\"verified\":true"));
+
+    // Serve boots from the bundle and answers the demo workload.
+    let serve = Command::new(bin())
+        .args(["serve", "--pipeline"])
+        .arg(&out_dir)
+        .args(["--requests", "50"])
+        .output()
+        .unwrap();
+    assert!(serve.status.success(), "serve failed: {}", String::from_utf8_lossy(&serve.stderr));
+    let text = String::from_utf8_lossy(&serve.stdout);
+    assert!(text.contains("served 50 requests"), "unexpected serve output:\n{text}");
+}
+
+/// `--target` selects a non-last label column by header name.
+#[test]
+fn pipeline_cli_target_column_by_name() {
+    let dir = tmpdir();
+    let csv = dir.join("target_data.csv");
+    let out_dir = dir.join("target_out");
+    // Rebuild a shuttle-like CSV with the label as the FIRST column.
+    let ds = intreeger::data::shuttle_like(400, 17);
+    let mut text = String::from("label,f0,f1,f2,f3,f4,f5,f6\n");
+    for i in 0..ds.n_rows() {
+        text.push_str(&ds.labels[i].to_string());
+        for v in ds.row(i) {
+            text.push_str(&format!(",{v}"));
+        }
+        text.push('\n');
+    }
+    std::fs::write(&csv, text).unwrap();
+
+    let out = Command::new(bin())
+        .args(["pipeline", "--csv"])
+        .arg(&csv)
+        .args(["--header", "--target", "label", "--trees", "2", "--depth", "3", "--out"])
+        .arg(&out_dir)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "pipeline failed: {}", String::from_utf8_lossy(&out.stderr));
+    assert!(out_dir.join("report.json").is_file());
+}
+
 #[test]
 fn train_codegen_predict_roundtrip() {
     let dir = tmpdir();

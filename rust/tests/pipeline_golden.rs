@@ -1,0 +1,283 @@
+//! Golden end-to-end pipeline test: one `pipeline::run` on a small
+//! synthetic dataset pins (a) the `report.json` schema — key sets at
+//! every level — and (b) the float-vs-integer parity verdict, plus one
+//! deliberately overflow-adjacent `n_trees` case exercising the quant
+//! clamp documented in `quant/mod.rs`.
+
+use intreeger::data::synth::{generate, SynthSpec};
+use intreeger::data::Dataset;
+use intreeger::ir::{Model, ModelKind, Node, Tree};
+use intreeger::pipeline::{self, verify, PipelineConfig};
+use intreeger::quant;
+use intreeger::util::Json;
+use std::path::PathBuf;
+
+fn outdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("intreeger_golden_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Small synthetic dataset with a rare class (stratification matters).
+fn small_synth() -> Dataset {
+    generate(
+        &SynthSpec {
+            n_rows: 500,
+            n_features: 5,
+            n_classes: 3,
+            teacher_depth: 4,
+            label_noise: 0.03,
+            class_prior: vec![0.7, 0.2, 0.1],
+            range: (-10.0, 10.0),
+        },
+        0xC0FFEE,
+    )
+}
+
+fn obj_keys(v: &Json) -> Vec<String> {
+    match v {
+        Json::Obj(m) => m.keys().cloned().collect(),
+        other => panic!("expected object, got {other:?}"),
+    }
+}
+
+#[test]
+fn golden_report_schema_and_parity_verdict() {
+    let ds = small_synth();
+    let out = outdir("schema");
+    let cfg = PipelineConfig {
+        n_trees: 5,
+        max_depth: 4,
+        train_gbt: true,
+        bench: true,
+        simulate: true,
+        seed: 7,
+        source: "synthetic:golden".to_string(),
+        ..Default::default()
+    };
+    let outcome = pipeline::run(&ds, &out, &cfg).expect("pipeline run");
+    assert!(outcome.report.all_verified(), "parity verdict must pass");
+
+    // --- report.json parses and the schema is pinned ------------------
+    let text = std::fs::read_to_string(out.join("report.json")).unwrap();
+    let v = Json::parse(&text).expect("report.json parses");
+    assert_eq!(
+        obj_keys(&v),
+        ["dataset", "format", "models", "seed", "verified"],
+        "top-level schema drifted"
+    );
+    assert_eq!(v.get("format").and_then(Json::as_str), Some(pipeline::REPORT_FORMAT));
+    assert_eq!(v.get("verified"), Some(&Json::Bool(true)));
+    assert_eq!(v.get("seed").and_then(Json::as_usize), Some(7));
+
+    assert_eq!(
+        obj_keys(v.get("dataset").unwrap()),
+        ["classes", "features", "holdout_rows", "rows", "source", "train_rows"],
+        "dataset schema drifted"
+    );
+    let d = v.get("dataset").unwrap();
+    assert_eq!(d.get("rows").and_then(Json::as_usize), Some(500));
+    assert_eq!(d.get("features").and_then(Json::as_usize), Some(5));
+    let train = d.get("train_rows").and_then(Json::as_usize).unwrap();
+    let hold = d.get("holdout_rows").and_then(Json::as_usize).unwrap();
+    assert_eq!(train + hold, 500);
+    assert!(hold > 100 && hold < 150, "~25% stratified holdout, got {hold}");
+
+    let models = v.get("models").and_then(Json::as_arr).unwrap();
+    assert_eq!(models.len(), 2, "rf + gbt");
+    for m in models {
+        assert_eq!(
+            obj_keys(m),
+            [
+                "accuracy", "bench", "codegen", "kind", "model_file", "params", "parity",
+                "quant", "simarch", "stats"
+            ],
+            "model schema drifted"
+        );
+        let p = m.get("parity").unwrap();
+        assert_eq!(
+            obj_keys(p),
+            [
+                "argmax_identical",
+                "engines",
+                "error_bound",
+                "kernels",
+                "max_abs_error",
+                "mismatches",
+                "per_class_max_error",
+                "rows",
+                "within_bound"
+            ],
+            "parity schema drifted"
+        );
+        // The machine-checked verdict itself.
+        assert_eq!(p.get("argmax_identical"), Some(&Json::Bool(true)));
+        assert_eq!(p.get("within_bound"), Some(&Json::Bool(true)));
+        assert_eq!(p.get("mismatches").and_then(Json::as_usize), Some(0));
+        assert_eq!(p.get("rows").and_then(Json::as_usize), Some(hold));
+        // All three kernels swept.
+        let kernels: Vec<&str> =
+            p.get("kernels").and_then(Json::as_arr).unwrap().iter().filter_map(Json::as_str).collect();
+        assert_eq!(kernels, ["branchy", "branchless", "quickscorer"]);
+        let err = p.get("max_abs_error").and_then(Json::as_f64).unwrap();
+        let bound = p.get("error_bound").and_then(Json::as_f64).unwrap();
+        assert!(err <= bound, "err {err} > bound {bound}");
+        // Bench rows (one per kernel) and simarch (RF only: 4 cores x 3
+        // variants; GBT skips simulation).
+        assert_eq!(m.get("bench").and_then(Json::as_arr).unwrap().len(), 3);
+    }
+    let rf = &models[0];
+    assert_eq!(rf.get("kind").and_then(Json::as_str), Some("rf"));
+    assert_eq!(rf.get("simarch").and_then(Json::as_arr).unwrap().len(), 12);
+    let rf_quant = rf.get("quant").unwrap();
+    assert_eq!(obj_keys(rf_quant), ["beats_f32", "error_bound", "scale_factor", "scheme"]);
+    assert_eq!(rf_quant.get("scheme").and_then(Json::as_str), Some("prob-u32"));
+    // 5 trees: scale 2^32/5, bound 5/2^32, well inside f32 territory.
+    assert_eq!(rf_quant.get("beats_f32"), Some(&Json::Bool(true)));
+    let cg = rf.get("codegen").unwrap();
+    assert_eq!(obj_keys(cg), ["bytes", "file", "gcc_checked", "layout", "variant"]);
+    assert_eq!(cg.get("variant").and_then(Json::as_str), Some("intreeger"));
+
+    let gbt = &models[1];
+    assert_eq!(gbt.get("kind").and_then(Json::as_str), Some("gbt"));
+    assert_eq!(gbt.get("codegen"), Some(&Json::Null));
+    assert_eq!(gbt.get("simarch").and_then(Json::as_arr).unwrap().len(), 0);
+    assert_eq!(
+        obj_keys(gbt.get("quant").unwrap()),
+        ["scheme", "shift"],
+        "gbt quant schema drifted"
+    );
+
+    // --- the generated C is integer-only ------------------------------
+    let c = std::fs::read_to_string(out.join("model_rf.c")).unwrap();
+    assert!(
+        c.contains("void predict(const float *data, uint32_t *result)"),
+        "integer-only entry point expected"
+    );
+    // No float probability average anywhere on the inference path (the
+    // float/flint variants divide by (float)N_TREES; intreeger must not).
+    assert!(!c.contains("/= (float)"), "float accumulation leaked into the integer-only C");
+
+    // --- REPORT.md verdict --------------------------------------------
+    let md = std::fs::read_to_string(out.join("REPORT.md")).unwrap();
+    assert!(md.contains("overall verdict: **PASS**"));
+    assert!(md.contains("Parity verdict: PASS"));
+}
+
+/// Determinism: same dataset + config => byte-identical report.json.
+#[test]
+fn golden_report_is_deterministic() {
+    let ds = small_synth();
+    let (o1, o2) = (outdir("det1"), outdir("det2"));
+    // bench timings are non-deterministic by nature — keep them off here.
+    let cfg = PipelineConfig { n_trees: 3, max_depth: 3, bench: false, ..Default::default() };
+    pipeline::run(&ds, &o1, &cfg).unwrap();
+    pipeline::run(&ds, &o2, &cfg).unwrap();
+    let a = std::fs::read_to_string(o1.join("report.json")).unwrap();
+    let b = std::fs::read_to_string(o2.join("report.json")).unwrap();
+    assert_eq!(a, b, "report.json must be bit-reproducible from the seed");
+    assert_eq!(
+        std::fs::read_to_string(o1.join("model_rf.c")).unwrap(),
+        std::fs::read_to_string(o2.join("model_rf.c")).unwrap()
+    );
+}
+
+/// The overflow-adjacent case the paper glosses over: `n` trees with
+/// `n | 2^32` and saturated `p = 1.0` leaves. Without the clamp in
+/// `quant::prob_to_fixed`, four such trees would sum to exactly 2^32
+/// and wrap a `u32` accumulator to 0, catastrophically mis-ranking the
+/// class; with it, the sum parks at `2^32 - 4` and the parity harness
+/// must still return a clean PASS.
+#[test]
+fn overflow_adjacent_trees_exercise_quant_clamp() {
+    let n_trees = 4usize; // divides 2^32 exactly
+    let cap = u32::MAX / n_trees as u32;
+    assert_eq!(quant::prob_to_fixed(1.0, n_trees), cap, "clamp must engage at p = 1.0");
+
+    // Hand-built forest: every tree routes x0 <= 0 to a PURE class-0
+    // leaf and x0 > 0 to a pure class-1 leaf.
+    let tree = Tree {
+        nodes: vec![
+            Node::Branch { feature: 0, threshold: 0.0, left: 1, right: 2 },
+            Node::Leaf { values: vec![1.0, 0.0] },
+            Node::Leaf { values: vec![0.0, 1.0] },
+        ],
+    };
+    let model = Model {
+        kind: ModelKind::RandomForest,
+        n_features: 1,
+        n_classes: 2,
+        trees: vec![tree; n_trees],
+        base_score: vec![0.0, 0.0],
+    };
+    model.validate().unwrap();
+
+    // The quantized leaves hit the clamp exactly.
+    let q = quant::quantize_forest(&model);
+    let saturated = q
+        .iter()
+        .flatten()
+        .flatten()
+        .flat_map(|leaf| leaf.values.iter())
+        .filter(|&&v| v == cap)
+        .count();
+    assert_eq!(saturated, 2 * n_trees, "every pure leaf must clamp");
+
+    // The accumulated sum parks just under the wrap, never at 0.
+    let ie = intreeger::inference::IntEngine::compile(&model);
+    let fixed = ie.predict_fixed(&[-1.0]);
+    assert_eq!(fixed, vec![u32::MAX - 3, 0], "4 * cap = 2^32 - 4, no wrap");
+
+    // And the full parity harness agrees across engines and kernels.
+    let holdout = Dataset::new(
+        vec![-2.0, -1.0, -0.5, 0.0, 0.5, 1.0, 2.0, 100.0],
+        vec![0, 0, 0, 0, 1, 1, 1, 1],
+        1,
+        2,
+    );
+    let v = verify::verify_rf(&model, &holdout);
+    assert!(v.passed(), "overflow-adjacent forest must verify: {v:?}");
+    assert_eq!(v.mismatches, 0);
+    assert_eq!(v.accuracy_int, 1.0);
+    assert!(v.max_abs_error <= v.error_bound, "{v:?}");
+}
+
+/// Same clamp case end-to-end through `pipeline::run`: a separable
+/// dataset trained with a power-of-two tree count produces pure leaves,
+/// and the run must still PASS.
+#[test]
+fn pipeline_run_with_power_of_two_trees_passes() {
+    // Zero label noise -> fully separable -> pure (p = 1.0) leaves.
+    let ds = generate(
+        &SynthSpec {
+            n_rows: 400,
+            n_features: 4,
+            n_classes: 2,
+            teacher_depth: 3,
+            label_noise: 0.0,
+            class_prior: vec![0.6, 0.4],
+            range: (-5.0, 5.0),
+        },
+        99,
+    );
+    let out = outdir("pow2");
+    let cfg = PipelineConfig {
+        n_trees: 4,
+        max_depth: 6,
+        bench: false,
+        seed: 99,
+        ..Default::default()
+    };
+    let outcome = pipeline::run(&ds, &out, &cfg).expect("pipeline");
+    assert!(outcome.report.all_verified());
+    // The trained forest really does carry saturated leaves (otherwise
+    // this test exercises nothing).
+    let model = Model::from_json(&std::fs::read_to_string(out.join("model_rf.json")).unwrap()).unwrap();
+    let cap = u32::MAX / 4;
+    let any_saturated = quant::quantize_forest(&model)
+        .iter()
+        .flatten()
+        .flatten()
+        .any(|leaf| leaf.values.iter().any(|&v| v == cap));
+    assert!(any_saturated, "expected at least one pure leaf hitting the clamp");
+}
