@@ -1,6 +1,7 @@
 //! E10 — batch-first execution core: branchy vs predicated-branchless
 //! vs QuickScorer-bitvector kernels vs the per-row scalar engines,
-//! swept over batch size × variant × node layout.
+//! swept over batch size × variant × node layout × **SIMD backend**
+//! (scalar vs runtime-detected AVX2/NEON intrinsics).
 //!
 //! Acceptance targets:
 //! * ISSUE 1: at batch ≥ 64 on the shuttle-like model, the tiled kernel
@@ -12,13 +13,18 @@
 //! * ISSUE 3: at batch ≥ 256 on QS-eligible models (every tree ≤ 64
 //!   leaves; integer variants), the QuickScorer kernel delivers ≥ 1.3x
 //!   rows/sec over the branchless walker.
+//! * ISSUE 5: at batch ≥ 256 (integer variants), AVX2 branchless
+//!   delivers ≥ 1.3x rows/sec over scalar-backend branchless (rows
+//!   emitted only on hosts where AVX2 was detected; NEON analog on
+//!   aarch64).
 //!
 //! Besides the human-readable table, every cell is appended to a
 //! machine-readable **`BENCH_batch.json`** at the repository root (path
 //! overridable via `INTREEGER_BENCH_JSON`) so the perf trajectory is
-//! tracked across PRs; the `"acceptance"` array inside it carries every
-//! speedup cell with its target and pass flag (CI asserts the section
-//! exists). Counts come from `BenchOpts::from_env()`
+//! tracked across PRs; schema 3 tags every row with its backend and
+//! records the host's `detected_features`, and the `"acceptance"` array
+//! carries every speedup cell with its target and pass flag (CI asserts
+//! the section exists). Counts come from `BenchOpts::from_env()`
 //! (`INTREEGER_BENCH_WARMUP` / `INTREEGER_BENCH_REPS`); headline numbers
 //! are min-of-k. Set **`BENCH_SMOKE=1`** for the reduced-rep CI mode
 //! (tiny rep counts, two batch sizes, auxiliary sections skipped — the
@@ -26,7 +32,7 @@
 
 use intreeger::data::{esa_like, shuttle_like};
 use intreeger::inference::{
-    compile_variant_with, Engine, IntEngine, NodeOrder, TraversalKernel, Variant,
+    compile_variant_with, Engine, IntEngine, NodeOrder, SimdBackend, TraversalKernel, Variant,
 };
 use intreeger::trees::{ForestParams, RandomForest};
 use intreeger::util::bench::{black_box, measure_opts, report, section, BenchOpts, Measurement};
@@ -39,6 +45,7 @@ struct Cell {
     variant: String,
     layout: String,
     kernel: String,
+    backend: String,
     batch: usize,
     m: Measurement,
 }
@@ -50,6 +57,7 @@ impl Cell {
             ("variant", s(&self.variant)),
             ("layout", s(&self.layout)),
             ("kernel", s(&self.kernel)),
+            ("backend", s(&self.backend)),
             ("batch", num(self.batch as f64)),
             ("per_item_ns_min", num(self.m.per_item_ns())),
             ("per_item_ns_median", num(self.m.per_item_ns_median())),
@@ -84,9 +92,12 @@ impl Accept {
 
 fn print_acceptance(title: &str, cells: &[&Accept]) {
     section(title);
+    if cells.is_empty() {
+        println!("(no cells on this host)");
+    }
     for a in cells {
         println!(
-            "{:<44} {:>6.2}x {}",
+            "{:<52} {:>6.2}x {}",
             a.name,
             a.speedup,
             if a.pass() {
@@ -106,6 +117,17 @@ fn main() {
     } else {
         BenchOpts::from_env()
     };
+    // `sweep()`, not `available()`: an `INTREEGER_BACKEND` pin collapses
+    // the bench to that backend, same as every engine in the process
+    // (profiling the fallback path is exactly when you want that).
+    let backends: Vec<SimdBackend> = SimdBackend::sweep();
+    let best = *backends.last().expect("sweep is never empty");
+    let scalar_baseline = backends[0] == SimdBackend::Scalar;
+    println!(
+        "host SIMD features: [{}]; backends swept: [{}]",
+        SimdBackend::detected_features().join(", "),
+        backends.iter().map(|b| b.name()).collect::<Vec<_>>().join(", ")
+    );
     let mut cells: Vec<Cell> = Vec::new();
     let mut accepts: Vec<Accept> = Vec::new();
 
@@ -121,11 +143,11 @@ fn main() {
     assert!(qs_eligible, "the shuttle bench model must be QS-eligible");
 
     let kernels = TraversalKernel::all();
-    section("tiled/bitvector kernels vs per-row, by batch size x variant x layout (shuttle-like)");
+    section("kernels x backends vs per-row, by batch size x variant x layout (shuttle-like)");
     println!(
-        "{:<10} {:<8} {:>6} {:>11} {:>11} {:>11} {:>11} {:>7} {:>7} {:>7}",
-        "variant", "layout", "batch", "per-row ns", "branchy ns", "brless ns", "qs ns", "pr/bl",
-        "bl/by", "qs/bl"
+        "{:<10} {:<8} {:<7} {:>6} {:>11} {:>11} {:>11} {:>11} {:>7} {:>7} {:>7}",
+        "variant", "layout", "backend", "batch", "per-row ns", "branchy ns", "brless ns",
+        "qs ns", "pr/bl", "bl/by", "qs/bl"
     );
     let batches: &[usize] = if smoke { &[8, 256] } else { &[1, 8, 64, 256, 1024] };
     for variant in Variant::all() {
@@ -140,45 +162,62 @@ fn main() {
                     }
                     black_box(acc);
                 });
-                let mut kernel_ns = [0.0f64; 3];
-                for (ki, kernel) in kernels.into_iter().enumerate() {
-                    engine.set_kernel(kernel);
-                    let m = measure_opts(opts, batch as u64, || {
-                        let out = engine.predict_batch(&flat);
-                        black_box(out[0]);
-                    });
-                    kernel_ns[ki] = m.per_item_ns();
-                    cells.push(Cell {
-                        section: "rf_predict_batch",
-                        variant: variant.name().into(),
-                        layout: order.name().into(),
-                        kernel: kernel.name().into(),
-                        batch,
-                        m,
-                    });
-                }
                 cells.push(Cell {
                     section: "rf_per_row",
                     variant: variant.name().into(),
                     layout: order.name().into(),
                     kernel: "per-row".into(),
+                    backend: "scalar".into(),
                     batch,
                     m: per_row,
                 });
-                let [branchy_ns, branchless_ns, qs_ns] = kernel_ns;
-                println!(
-                    "{:<10} {:<8} {:>6} {:>11.1} {:>11.1} {:>11.1} {:>11.1} {:>6.2}x {:>6.2}x {:>6.2}x",
-                    variant.name(),
-                    order.name(),
-                    batch,
-                    per_row.per_item_ns(),
-                    branchy_ns,
-                    branchless_ns,
-                    qs_ns,
-                    per_row.per_item_ns() / branchless_ns,
-                    branchy_ns / branchless_ns,
-                    branchless_ns / qs_ns
-                );
+                // kernel_ns[backend index][kernel index]
+                let mut kernel_ns = vec![[0.0f64; 3]; backends.len()];
+                for (bi, &backend) in backends.iter().enumerate() {
+                    engine.set_backend(backend);
+                    for (ki, kernel) in kernels.into_iter().enumerate() {
+                        engine.set_kernel(kernel);
+                        let m = measure_opts(opts, batch as u64, || {
+                            let out = engine.predict_batch(&flat);
+                            black_box(out[0]);
+                        });
+                        kernel_ns[bi][ki] = m.per_item_ns();
+                        cells.push(Cell {
+                            section: "rf_predict_batch",
+                            variant: variant.name().into(),
+                            layout: order.name().into(),
+                            kernel: kernel.name().into(),
+                            backend: backend.name().into(),
+                            batch,
+                            m,
+                        });
+                    }
+                    let [branchy_ns, branchless_ns, qs_ns] = kernel_ns[bi];
+                    println!(
+                        "{:<10} {:<8} {:<7} {:>6} {:>11.1} {:>11.1} {:>11.1} {:>11.1} {:>6.2}x {:>6.2}x {:>6.2}x",
+                        variant.name(),
+                        order.name(),
+                        backend.name(),
+                        batch,
+                        per_row.per_item_ns(),
+                        branchy_ns,
+                        branchless_ns,
+                        qs_ns,
+                        per_row.per_item_ns() / branchless_ns,
+                        branchy_ns / branchless_ns,
+                        branchless_ns / qs_ns
+                    );
+                }
+                // Scalar-backend cells carry the PR-1/2/3 acceptance
+                // gates (their semantics predate the backend dimension);
+                // the backend gate compares best-vs-scalar branchless.
+                // Under an env pin to a non-scalar backend there is no
+                // scalar baseline in the sweep, so no gates are emitted
+                // (rows are still recorded).
+                if !scalar_baseline {
+                    continue;
+                }
+                let [branchy_ns, branchless_ns, qs_ns] = kernel_ns[0];
                 let tag = format!("{}/{}/batch{}", variant.name(), order.name(), batch);
                 if batch >= 64 {
                     // Tiled *walker* kernels only (the ISSUE-1 gate):
@@ -199,17 +238,28 @@ fn main() {
                     });
                     accepts.push(Accept {
                         section: "qs_vs_branchless",
-                        name: tag,
+                        name: tag.clone(),
                         speedup: branchless_ns / qs_ns,
                         target: 1.3,
                     });
+                    if best != SimdBackend::Scalar {
+                        // The ISSUE-5 gate: explicit lanes must beat the
+                        // autovectorization hope by a measured margin.
+                        let simd_branchless_ns = kernel_ns[backends.len() - 1][1];
+                        accepts.push(Accept {
+                            section: "simd_branchless_vs_scalar_branchless",
+                            name: format!("{tag}/{}", best.name()),
+                            speedup: branchless_ns / simd_branchless_ns,
+                            target: 1.3,
+                        });
+                    }
                 }
             }
         }
     }
 
     if !smoke {
-        section("wide rows (esa-like, 87 features): integer variant, all kernels");
+        section("wide rows (esa-like, 87 features): integer variant, all kernels x backends");
         let esa = esa_like(4_000, 11);
         let esa_model = RandomForest::train(
             &esa,
@@ -219,21 +269,32 @@ fn main() {
         let mut engine = compile_variant_with(&esa_model, Variant::IntTreeger, NodeOrder::Breadth);
         for batch in [64usize, 1024] {
             let flat: Vec<f32> = esa.features[..batch * esa.n_features].to_vec();
-            for kernel in kernels {
-                engine.set_kernel(kernel);
-                let m = measure_opts(opts, batch as u64, || {
-                    let out = engine.predict_batch(&flat);
-                    black_box(out[0]);
-                });
-                report(&format!("esa/int/breadth/{}/batch{batch}", kernel.name()), &m);
-                cells.push(Cell {
-                    section: "esa_wide",
-                    variant: "intreeger".into(),
-                    layout: "breadth".into(),
-                    kernel: kernel.name().into(),
-                    batch,
-                    m,
-                });
+            for &backend in &backends {
+                engine.set_backend(backend);
+                for kernel in kernels {
+                    engine.set_kernel(kernel);
+                    let m = measure_opts(opts, batch as u64, || {
+                        let out = engine.predict_batch(&flat);
+                        black_box(out[0]);
+                    });
+                    report(
+                        &format!(
+                            "esa/int/breadth/{}/{}/batch{batch}",
+                            kernel.name(),
+                            backend.name()
+                        ),
+                        &m,
+                    );
+                    cells.push(Cell {
+                        section: "esa_wide",
+                        variant: "intreeger".into(),
+                        layout: "breadth".into(),
+                        kernel: kernel.name().into(),
+                        backend: backend.name().into(),
+                        batch,
+                        m,
+                    });
+                }
             }
         }
 
@@ -241,21 +302,32 @@ fn main() {
         let mut int_engine = IntEngine::compile(&model);
         for batch in [64usize, 256] {
             let flat: Vec<f32> = ds.features[..batch * ds.n_features].to_vec();
-            for kernel in kernels {
-                int_engine.set_kernel(kernel);
-                let m = measure_opts(opts, batch as u64, || {
-                    let out = int_engine.predict_fixed_batch(&flat);
-                    black_box(out[0][0]);
-                });
-                report(&format!("int/predict_fixed_batch/{}/batch{batch}", kernel.name()), &m);
-                cells.push(Cell {
-                    section: "serving_fixed",
-                    variant: "intreeger".into(),
-                    layout: "depth".into(),
-                    kernel: kernel.name().into(),
-                    batch,
-                    m,
-                });
+            for &backend in &backends {
+                int_engine.set_backend(backend);
+                for kernel in kernels {
+                    int_engine.set_kernel(kernel);
+                    let m = measure_opts(opts, batch as u64, || {
+                        let out = int_engine.predict_fixed_batch(&flat);
+                        black_box(out[0][0]);
+                    });
+                    report(
+                        &format!(
+                            "int/predict_fixed_batch/{}/{}/batch{batch}",
+                            kernel.name(),
+                            backend.name()
+                        ),
+                        &m,
+                    );
+                    cells.push(Cell {
+                        section: "serving_fixed",
+                        variant: "intreeger".into(),
+                        layout: "depth".into(),
+                        kernel: kernel.name().into(),
+                        backend: backend.name().into(),
+                        batch,
+                        m,
+                    });
+                }
             }
         }
     }
@@ -275,18 +347,33 @@ fn main() {
         "acceptance: quickscorer vs branchless (integer variants, QS-eligible, batch >= 256, target >= 1.3x)",
         &by_section("qs_vs_branchless"),
     );
+    print_acceptance(
+        "acceptance: SIMD branchless vs scalar branchless (integer variants, batch >= 256, target >= 1.3x)",
+        &by_section("simd_branchless_vs_scalar_branchless"),
+    );
 
-    write_json(&cells, &accepts, opts, smoke);
+    write_json(&cells, &accepts, &backends, opts, smoke);
 }
 
-fn write_json(cells: &[Cell], accepts: &[Accept], opts: BenchOpts, smoke: bool) {
+fn write_json(
+    cells: &[Cell],
+    accepts: &[Accept],
+    backends: &[SimdBackend],
+    opts: BenchOpts,
+    smoke: bool,
+) {
     let path = std::env::var("INTREEGER_BENCH_JSON").unwrap_or_else(|_| {
         concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_batch.json").to_string()
     });
     let doc = obj(vec![
         ("bench", s("batch_throughput")),
-        ("schema", num(2.0)),
+        ("schema", num(3.0)),
         ("note", s("min-of-k timings; regenerate with: cargo bench --bench batch_throughput")),
+        (
+            "detected_features",
+            arr(SimdBackend::detected_features().into_iter().map(s)),
+        ),
+        ("backends", arr(backends.iter().map(|b| s(b.name())))),
         (
             "opts",
             obj(vec![

@@ -33,6 +33,11 @@ pub struct Metrics {
     /// the quantity the batch-first refactor optimizes, reported per
     /// batch rather than per request.
     batch_latency_us: Mutex<Histogram>,
+    /// The execution strategy serving the scalar route — (traversal
+    /// kernel, SIMD backend), recorded once at server startup (the
+    /// calibrated winner, or the compile-time defaults). `None` until a
+    /// server records it.
+    execution: Mutex<Option<(String, String)>>,
 }
 
 /// Exact histogram for small integer values (batch sizes). Unlike the
@@ -122,6 +127,14 @@ pub struct MetricsSnapshot {
     pub batch_latency_p50_us: f64,
     /// p99 per-batch service time (us, bucket upper bound).
     pub batch_latency_p99_us: f64,
+    /// Traversal kernel serving the scalar route (recorded at server
+    /// startup; `None` when no server recorded one yet).
+    pub kernel: Option<String>,
+    /// SIMD execution backend serving the scalar route.
+    pub backend: Option<String>,
+    /// CPU SIMD features detected on this host (computed at snapshot
+    /// time; explains *why* the backend was picked).
+    pub detected_features: Vec<&'static str>,
 }
 
 impl Metrics {
@@ -138,6 +151,13 @@ impl Metrics {
     /// Record how long serving one flushed batch took.
     pub fn record_batch_latency_us(&self, us: f64) {
         self.batch_latency_us.lock().unwrap().record(us);
+    }
+
+    /// Record the execution strategy serving the scalar route (called
+    /// once at server startup with the calibrated — or default —
+    /// traversal kernel and SIMD backend names).
+    pub fn record_execution(&self, kernel: &str, backend: &str) {
+        *self.execution.lock().unwrap() = Some((kernel.to_string(), backend.to_string()));
     }
 
     /// Record one flushed batch (size, route, and why it flushed).
@@ -162,6 +182,11 @@ impl Metrics {
         let lat = self.latency_us.lock().unwrap();
         let sizes = self.batch_sizes.lock().unwrap();
         let blat = self.batch_latency_us.lock().unwrap();
+        let execution = self.execution.lock().unwrap().clone();
+        let (kernel, backend) = match execution {
+            Some((k, b)) => (Some(k), Some(b)),
+            None => (None, None),
+        };
         MetricsSnapshot {
             requests: self.requests.load(Ordering::Relaxed),
             responses: self.responses.load(Ordering::Relaxed),
@@ -181,6 +206,9 @@ impl Metrics {
             batch_latency_mean_us: blat.mean(),
             batch_latency_p50_us: blat.quantile(0.5),
             batch_latency_p99_us: blat.quantile(0.99),
+            kernel,
+            backend,
+            detected_features: crate::inference::SimdBackend::detected_features(),
         }
     }
 }
@@ -218,6 +246,24 @@ mod tests {
         // Latency quantiles remain bucket upper bounds.
         assert!(s.batch_latency_p50_us >= 50.0);
         assert!(s.batch_latency_p99_us >= s.batch_latency_p50_us);
+    }
+
+    #[test]
+    fn execution_recorded_and_snapshotted() {
+        let m = Metrics::new();
+        let s = m.snapshot();
+        assert_eq!(s.kernel, None);
+        assert_eq!(s.backend, None);
+        m.record_execution("branchless", "avx2");
+        let s = m.snapshot();
+        assert_eq!(s.kernel.as_deref(), Some("branchless"));
+        assert_eq!(s.backend.as_deref(), Some("avx2"));
+        // detected_features reflects this host's CPU, matching the simd
+        // module's availability report.
+        assert_eq!(
+            s.detected_features,
+            crate::inference::SimdBackend::detected_features()
+        );
     }
 
     #[test]

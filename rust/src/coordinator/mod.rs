@@ -31,7 +31,9 @@ pub mod server;
 pub use batcher::{BatchPolicy, Batcher, FlushReason};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use router::Router;
-pub use server::{InferenceServer, Request, Response, Route, ServerConfig};
+pub use server::{
+    calibrate_execution, ExecutionChoice, InferenceServer, Request, Response, Route, ServerConfig,
+};
 
 use crate::ir::Model;
 use crate::runtime::PipelineManifest;

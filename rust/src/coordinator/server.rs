@@ -14,7 +14,7 @@
 
 use super::batcher::{BatchPolicy, Batcher, FlushReason};
 use super::metrics::Metrics;
-use crate::inference::{IntEngine, TraversalKernel};
+use crate::inference::{IntEngine, SimdBackend, TraversalKernel};
 use crate::ir::{argmax, Model};
 use crate::runtime::PjrtEngine;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -64,12 +64,15 @@ pub struct ServerConfig {
     pub queue_depth: usize,
     /// Measure alternative execution strategies at startup and keep the
     /// fastest:
-    /// 1. the scalar route's traversal kernel — branchy early-exit vs the
-    ///    predicated branchless descent vs the QuickScorer bitvector
-    ///    evaluation (all three are probed) — is timed on the loaded
-    ///    model (deep, early-exiting trees can favor branchy; shallow
-    ///    balanced trees favor branchless; wide QS-eligible forests at
-    ///    big batches favor quickscorer), and
+    /// 1. the scalar route's traversal kernel **×** SIMD backend —
+    ///    branchy early-exit vs the predicated branchless descent vs the
+    ///    QuickScorer bitvector evaluation, each under every detected
+    ///    backend (scalar / AVX2 / NEON; `INTREEGER_BACKEND` pins the
+    ///    sweep) — is timed on the loaded model (deep, early-exiting
+    ///    trees can favor branchy; shallow balanced trees favor
+    ///    branchless; wide QS-eligible forests at big batches favor
+    ///    quickscorer; gather-friendly hosts favor AVX2), and the winner
+    ///    is recorded in the metrics snapshot, and
     /// 2. the XLA route is disabled when the batched scalar kernel beats
     ///    it at the full policy batch size. On a single CPU core the
     ///    padded batched artifact usually loses to the tiled scalar
@@ -126,14 +129,25 @@ impl InferenceServer {
     ) -> InferenceServer {
         let n_workers = config.n_workers.max(1);
         // One compiled forest shared by every worker (read-only walks).
-        // The tile-walk kernel is calibrated once, before sharing: the
-        // choice is per *model* (tree shape), not per worker.
+        // The execution strategy (tile-walk kernel × SIMD backend) is
+        // calibrated once, before sharing: the choice is per *model*
+        // (tree shape) and per *host* (CPU features), not per worker.
         let mut scalar_engine = IntEngine::compile(model);
+        let metrics = Arc::new(Metrics::new());
         if config.auto_calibrate {
-            calibrate_kernel(&mut scalar_engine, model.n_features, config.policy.max_batch);
+            calibrate_execution(&mut scalar_engine, model.n_features, config.policy.max_batch);
+        }
+        {
+            // Record the execution strategy actually serving (calibrated
+            // or compile-time default) so the metrics snapshot — and
+            // anything built on it — can explain per-machine deltas.
+            use crate::inference::Engine as _;
+            metrics.record_execution(
+                scalar_engine.kernel().name(),
+                scalar_engine.backend().name(),
+            );
         }
         let scalar = Arc::new(scalar_engine);
-        let metrics = Arc::new(Metrics::new());
         let n_features = model.n_features;
         let per_worker_depth = (config.queue_depth / n_workers).max(1);
 
@@ -260,39 +274,70 @@ fn calibration_rows(engine: &IntEngine, n_features: usize, b: usize) -> Vec<f32>
     rows
 }
 
-/// Startup micro-benchmark: pick the fastest traversal kernel (branchy
-/// early-exit vs predicated branchless fixed-trip vs QuickScorer
-/// bitvector) for this model's tree shapes. Leaves the winner set on
-/// `engine`. Uses min-of-k timing on a full-policy batch of
-/// threshold-representative probe rows.
-fn calibrate_kernel(engine: &mut IntEngine, n_features: usize, batch: usize) {
+/// The execution strategy calibration settled on.
+#[derive(Clone, Debug)]
+pub struct ExecutionChoice {
+    /// Winning traversal kernel.
+    pub kernel: TraversalKernel,
+    /// Winning SIMD execution backend.
+    pub backend: SimdBackend,
+    /// Min-of-k probe time per `kernel@backend` candidate, in seconds
+    /// (candidate name, time) — the evidence behind the pick.
+    pub timings: Vec<(String, f64)>,
+}
+
+/// Startup micro-benchmark: pick the fastest execution strategy —
+/// traversal kernel (branchy early-exit vs predicated branchless
+/// fixed-trip vs QuickScorer bitvector) × SIMD backend
+/// ([`SimdBackend::sweep`]: every detected backend, or just the forced
+/// one when `INTREEGER_BACKEND` pins it) — for this model's tree shapes
+/// on this host. Leaves the winner set on `engine` and returns the full
+/// choice. Uses min-of-k timing on a full-policy batch of
+/// threshold-representative probe rows. Also used by the CLI `inspect`
+/// command to explain per-machine performance deltas.
+pub fn calibrate_execution(
+    engine: &mut IntEngine,
+    n_features: usize,
+    batch: usize,
+) -> ExecutionChoice {
     use crate::inference::Engine as _;
     let b = batch.max(crate::inference::TILE_ROWS);
     let rows = calibration_rows(engine, n_features, b);
-    let mut best = (f64::INFINITY, TraversalKernel::default());
-    let mut timings = Vec::new();
-    for kernel in TraversalKernel::all() {
-        engine.set_kernel(kernel);
-        std::hint::black_box(engine.predict_fixed_batch(&rows)); // warmup
-        let mut t_min = f64::INFINITY;
-        for _ in 0..3 {
-            let t0 = Instant::now();
-            std::hint::black_box(engine.predict_fixed_batch(&rows));
-            t_min = t_min.min(t0.elapsed().as_secs_f64());
-        }
-        timings.push((kernel, t_min));
-        if t_min < best.0 {
-            best = (t_min, kernel);
+    let mut best = (f64::INFINITY, TraversalKernel::default(), SimdBackend::Scalar);
+    let mut timings: Vec<(String, f64)> = Vec::new();
+    for (bi, &backend) in SimdBackend::sweep().iter().enumerate() {
+        engine.set_backend(backend);
+        for kernel in TraversalKernel::all() {
+            // The branchy walk ignores the backend (inherently
+            // divergent, always scalar); timing it once is enough.
+            if kernel == TraversalKernel::Branchy && bi > 0 {
+                continue;
+            }
+            engine.set_kernel(kernel);
+            std::hint::black_box(engine.predict_fixed_batch(&rows)); // warmup
+            let mut t_min = f64::INFINITY;
+            for _ in 0..3 {
+                let t0 = Instant::now();
+                std::hint::black_box(engine.predict_fixed_batch(&rows));
+                t_min = t_min.min(t0.elapsed().as_secs_f64());
+            }
+            timings.push((format!("{}@{}", kernel.name(), backend.name()), t_min));
+            if t_min < best.0 {
+                best = (t_min, kernel, backend);
+            }
         }
     }
     engine.set_kernel(best.1);
+    engine.set_backend(best.2);
     let report: Vec<String> =
-        timings.iter().map(|(k, t)| format!("{} {:.0} us", k.name(), t * 1e6)).collect();
+        timings.iter().map(|(name, t)| format!("{name} {:.0} us", t * 1e6)).collect();
     eprintln!(
-        "intreeger-server: auto-calibration picked the {} tile kernel per {b}-batch ({})",
+        "intreeger-server: auto-calibration picked {}@{} per {b}-batch ({})",
         best.1.name(),
+        best.2.name(),
         report.join(", ")
     );
+    ExecutionChoice { kernel: best.1, backend: best.2, timings }
 }
 
 /// Startup micro-benchmark: keep the XLA engine only if it beats the
@@ -459,6 +504,14 @@ mod tests {
         // Every flush served at least one batch, so batch latency was
         // recorded.
         assert!(snap.batch_latency_mean_us > 0.0);
+        // The execution strategy is recorded even without calibration
+        // (the engine's compile-time defaults).
+        assert_eq!(snap.kernel.as_deref(), Some(TraversalKernel::default().name()));
+        let backend = snap.backend.expect("backend recorded at startup");
+        assert!(
+            SimdBackend::from_name(&backend).unwrap().is_available(),
+            "recorded backend {backend} must be executable"
+        );
     }
 
     #[test]
@@ -600,6 +653,38 @@ mod tests {
             assert_eq!(r.fixed, oracle.predict_fixed(ds.row(i)), "row {i}");
             assert_eq!(r.route, Route::Scalar);
         }
+        // Whatever won, the calibrated execution strategy is on record
+        // and names real, executable candidates.
+        let snap = server.metrics();
+        let kernel = snap.kernel.expect("calibrated kernel recorded");
+        assert!(TraversalKernel::all().iter().any(|k| k.name() == kernel), "{kernel}");
+        let backend = snap.backend.expect("calibrated backend recorded");
+        assert!(SimdBackend::from_name(&backend).unwrap().is_available(), "{backend}");
+    }
+
+    /// The calibration helper itself: sweeps kernel × available backend,
+    /// returns timings for every candidate, and leaves the winner set on
+    /// the engine.
+    #[test]
+    fn calibrate_execution_sets_winner_and_reports_timings() {
+        use crate::inference::Engine as _;
+        let (_, m) = model();
+        let mut engine = IntEngine::compile(&m);
+        let choice = calibrate_execution(&mut engine, m.n_features, 64);
+        assert_eq!(engine.kernel(), choice.kernel);
+        assert_eq!(engine.backend(), choice.backend);
+        assert!(choice.backend.is_available());
+        // branchy once + (branchless + quickscorer) per backend.
+        let n_backends = SimdBackend::sweep().len();
+        assert_eq!(choice.timings.len(), 1 + 2 * n_backends);
+        assert!(choice.timings.iter().all(|(_, t)| *t > 0.0));
+        // The winner was one of the timed candidates.
+        let winner = format!("{}@{}", choice.kernel.name(), choice.backend.name());
+        assert!(
+            choice.timings.iter().any(|(n, _)| *n == winner),
+            "winner {winner} missing from timings {:?}",
+            choice.timings
+        );
     }
 
     #[test]

@@ -40,6 +40,17 @@
 //! compare), shared by all three RF variants *and* the GBT engine; the
 //! QuickScorer scan reuses the same crate-internal `Domain` abstraction.
 //!
+//! ## SIMD backends ([`SimdBackend`], [`super::simd`])
+//!
+//! Orthogonal to the kernel choice, a runtime-dispatched execution
+//! backend selects how the branchless walk and the QuickScorer scan
+//! run: portable scalar code, AVX2 intrinsics (8 lane cursors per
+//! `__m256i`, `vpgatherdd` node fetches over the compiled SoA mirror
+//! planes), or NEON intrinsics (4-lane half-tiles). The branchy kernel
+//! is inherently divergent and always runs scalar. Backends are a pure
+//! performance knob: every one is bit-identical (the parity suite
+//! sweeps kernel × backend).
+//!
 //! ## Parity invariant (load-bearing — the parity suite enforces it)
 //!
 //! For every engine variant and **every kernel**, the batched results
@@ -70,6 +81,7 @@
 
 use super::compiled::{CompiledForest, Node8};
 use super::quickscorer::{accumulate_qs, QsBlock, QsPlan};
+use super::simd::SimdBackend;
 use crate::flint::ordered_u32;
 use crate::ir::argmax;
 use std::cell::RefCell;
@@ -174,6 +186,55 @@ pub(crate) trait Domain {
     /// The QuickScorer condition-stream threshold words of this domain
     /// (the plan stores both 32-bit encodings side by side).
     fn qs_words(block: &QsBlock) -> &[u32];
+
+    /// AVX2 predicated fixed-trip tile walk of this domain (see
+    /// [`super::simd`]); `row_base[r]` is lane `r`'s row element offset
+    /// (clamped-duplicate convention for ragged tails).
+    ///
+    /// # Safety
+    ///
+    /// Caller must have verified AVX2 via [`SimdBackend`] detection and
+    /// checked the batch shape ([`walk_tile_predicated`] does both).
+    #[cfg(target_arch = "x86_64")]
+    unsafe fn walk_tile_avx2(
+        trees: &PackedTrees,
+        t: usize,
+        rows: &[Self::Elem],
+        row_base: &[u32; TILE_ROWS],
+        leaves: &mut [u32; TILE_ROWS],
+    );
+
+    /// NEON predicated fixed-trip tile walk of this domain.
+    ///
+    /// # Safety
+    ///
+    /// Caller must have verified NEON via [`SimdBackend`] detection and
+    /// checked the batch shape ([`walk_tile_predicated`] does both).
+    #[cfg(target_arch = "aarch64")]
+    unsafe fn walk_tile_neon(
+        trees: &PackedTrees,
+        t: usize,
+        rows: &[Self::Elem],
+        row_base: &[u32; TILE_ROWS],
+        leaves: &mut [u32; TILE_ROWS],
+    );
+
+    /// AVX2 QuickScorer false-prefix scan: length of the leading
+    /// `go_right` run of an ascending condition stream.
+    ///
+    /// # Safety
+    ///
+    /// Caller must have verified AVX2 via [`SimdBackend`] detection.
+    #[cfg(target_arch = "x86_64")]
+    unsafe fn qs_prefix_avx2(x: Self::Elem, words: &[u32]) -> usize;
+
+    /// NEON QuickScorer false-prefix scan.
+    ///
+    /// # Safety
+    ///
+    /// Caller must have verified NEON via [`SimdBackend`] detection.
+    #[cfg(target_arch = "aarch64")]
+    unsafe fn qs_prefix_neon(x: Self::Elem, words: &[u32]) -> usize;
 }
 
 /// Ordered-u32 domain (FlInt / InTreeger / GBT walks).
@@ -186,6 +247,34 @@ impl Domain for OrdDomain {
     }
     fn qs_words(block: &QsBlock) -> &[u32] {
         &block.thresh_ord
+    }
+    #[cfg(target_arch = "x86_64")]
+    unsafe fn walk_tile_avx2(
+        trees: &PackedTrees,
+        t: usize,
+        rows: &[u32],
+        row_base: &[u32; TILE_ROWS],
+        leaves: &mut [u32; TILE_ROWS],
+    ) {
+        super::simd::avx2::walk_tile_ord(trees, t, rows, row_base, leaves)
+    }
+    #[cfg(target_arch = "aarch64")]
+    unsafe fn walk_tile_neon(
+        trees: &PackedTrees,
+        t: usize,
+        rows: &[u32],
+        row_base: &[u32; TILE_ROWS],
+        leaves: &mut [u32; TILE_ROWS],
+    ) {
+        super::simd::neon::walk_tile_ord(trees, t, rows, row_base, leaves)
+    }
+    #[cfg(target_arch = "x86_64")]
+    unsafe fn qs_prefix_avx2(x: u32, words: &[u32]) -> usize {
+        super::simd::avx2::qs_false_prefix_ord(x, words)
+    }
+    #[cfg(target_arch = "aarch64")]
+    unsafe fn qs_prefix_neon(x: u32, words: &[u32]) -> usize {
+        super::simd::neon::qs_false_prefix_ord(x, words)
     }
 }
 
@@ -207,6 +296,34 @@ impl Domain for F32Domain {
     fn qs_words(block: &QsBlock) -> &[u32] {
         &block.thresh_f32
     }
+    #[cfg(target_arch = "x86_64")]
+    unsafe fn walk_tile_avx2(
+        trees: &PackedTrees,
+        t: usize,
+        rows: &[f32],
+        row_base: &[u32; TILE_ROWS],
+        leaves: &mut [u32; TILE_ROWS],
+    ) {
+        super::simd::avx2::walk_tile_f32(trees, t, rows, row_base, leaves)
+    }
+    #[cfg(target_arch = "aarch64")]
+    unsafe fn walk_tile_neon(
+        trees: &PackedTrees,
+        t: usize,
+        rows: &[f32],
+        row_base: &[u32; TILE_ROWS],
+        leaves: &mut [u32; TILE_ROWS],
+    ) {
+        super::simd::neon::walk_tile_f32(trees, t, rows, row_base, leaves)
+    }
+    #[cfg(target_arch = "x86_64")]
+    unsafe fn qs_prefix_avx2(x: f32, words: &[u32]) -> usize {
+        super::simd::avx2::qs_false_prefix_f32(x, words)
+    }
+    #[cfg(target_arch = "aarch64")]
+    unsafe fn qs_prefix_neon(x: f32, words: &[u32]) -> usize {
+        super::simd::neon::qs_false_prefix_f32(x, words)
+    }
 }
 
 /// A packed forest as the walkers see it — lets the GBT engine reuse the
@@ -214,6 +331,11 @@ impl Domain for F32Domain {
 pub(crate) struct PackedTrees<'a> {
     /// All trees' packed nodes, concatenated.
     pub nodes: &'a [Node8],
+    /// SIMD gather plane: `nodes[i].tw` as a flat u32 array (same
+    /// indexing; see `CompiledForest::soa_tw_ord`).
+    pub tw_plane: &'a [u32],
+    /// SIMD gather plane: `nodes[i].ff | nodes[i].left << 16`.
+    pub ffl_plane: &'a [u32],
     /// Start index of each tree's nodes; length `n_trees + 1`.
     pub tree_offsets: &'a [u32],
     /// Fixed trip count of the branchless kernel; length `n_trees`.
@@ -354,6 +476,84 @@ pub(crate) fn walk_tile_lockstep_tail<D: Domain>(
     }
 }
 
+/// Per-lane row element offsets of one tile, with missing lanes clamped
+/// to the last real row (the duplicated-lane tail convention of
+/// [`walk_tile_lockstep_tail`], shared by the SIMD walkers so full tiles
+/// and ragged tails run one intrinsic body).
+#[inline]
+pub(crate) fn row_base_lanes(
+    stride: usize,
+    tile_start: usize,
+    tile_rows: usize,
+) -> [u32; TILE_ROWS] {
+    debug_assert!(tile_rows >= 1 && tile_rows <= TILE_ROWS);
+    let mut rb = [0u32; TILE_ROWS];
+    for (r, slot) in rb.iter_mut().enumerate() {
+        *slot = ((tile_start + r.min(tile_rows - 1)) * stride) as u32;
+    }
+    rb
+}
+
+/// Predicated (branchless) tile walk behind the backend dispatch: the
+/// scalar lockstep walkers, or the AVX2 / NEON intrinsic walkers of
+/// [`super::simd`]. Bit-identical either way — the intrinsic bodies run
+/// the exact same compare/mask/add step per lane per level.
+///
+/// `row_base` is the tile's per-lane row offsets from [`row_base_lanes`]
+/// (hoisted to once per tile by the drivers — it is tree-independent,
+/// and this dispatch runs once per tree). The non-scalar arms are
+/// unreachable unless the matching CPU feature was detected: engines
+/// assert availability in `set_backend`, [`accumulate_batch`] — the one
+/// funnel into the drivers — re-asserts it per batch (a plain assert:
+/// executing an AVX2 block on a non-AVX2 core is undefined behavior,
+/// not a panic), and this dispatch keeps a debug tripwire.
+#[allow(clippy::too_many_arguments)] // internal hot-path dispatch, mirrors the walker signatures
+#[inline]
+pub(crate) fn walk_tile_predicated<D: Domain>(
+    trees: &PackedTrees,
+    t: usize,
+    rows: &[D::Elem],
+    tile_start: usize,
+    tile_rows: usize,
+    row_base: &[u32; TILE_ROWS],
+    backend: SimdBackend,
+    leaves: &mut [u32; TILE_ROWS],
+) {
+    debug_assert_eq!(*row_base, row_base_lanes(trees.stride, tile_start, tile_rows));
+    match backend {
+        SimdBackend::Scalar => {
+            if tile_rows == TILE_ROWS {
+                walk_tile_lockstep::<D>(trees, t, rows, tile_start, leaves)
+            } else {
+                walk_tile_lockstep_tail::<D>(trees, t, rows, tile_start, tile_rows, leaves)
+            }
+        }
+        #[cfg(target_arch = "x86_64")]
+        SimdBackend::Avx2 => {
+            debug_assert!(SimdBackend::Avx2.is_available());
+            // SAFETY: AVX2 availability was asserted by
+            // `accumulate_batch`'s per-batch funnel check (and by
+            // `set_backend`); the drivers checked the batch shape
+            // (`n_rows * stride <= rows.len()`, `rows.len() <=
+            // i32::MAX`), `row_base_lanes` clamps every lane into the
+            // batch, and `Model::validate()` bounds the node/feature
+            // indices the gathers dereference.
+            unsafe { D::walk_tile_avx2(trees, t, rows, row_base, leaves) }
+        }
+        #[cfg(target_arch = "aarch64")]
+        SimdBackend::Neon => {
+            debug_assert!(SimdBackend::Neon.is_available());
+            // SAFETY: NEON availability asserted by the same funnel;
+            // same shape and index bounds argument as the AVX2 arm.
+            unsafe { D::walk_tile_neon(trees, t, rows, row_base, leaves) }
+        }
+        other => unreachable!(
+            "backend {} cannot execute on this architecture (engines assert availability)",
+            other.name()
+        ),
+    }
+}
+
 /// Shared batch driver: walk every (tile, tree) pair with the selected
 /// kernel and accumulate leaf payload rows into `acc` (row-major
 /// `n_rows * n_classes`, pre-initialized by the caller). Per row,
@@ -361,7 +561,10 @@ pub(crate) fn walk_tile_lockstep_tail<D: Domain>(
 ///
 /// `qs` carries the compiled QuickScorer plan; it is only consulted when
 /// `kernel` is [`TraversalKernel::QuickScorer`] (every engine compiles
-/// one, so internal callers always pass `Some`).
+/// one, so internal callers always pass `Some`). `backend` selects the
+/// SIMD execution of the branchless walk and the QuickScorer scan; the
+/// branchy kernel is inherently divergent (per-lane early exit) and
+/// always runs scalar.
 #[allow(clippy::too_many_arguments)] // internal monomorphized driver; a param struct would obscure the hot path
 pub(crate) fn accumulate_batch<D: Domain, T>(
     trees: &PackedTrees,
@@ -371,15 +574,30 @@ pub(crate) fn accumulate_batch<D: Domain, T>(
     n_classes: usize,
     leaf_table: &[T],
     kernel: TraversalKernel,
+    backend: SimdBackend,
     acc: &mut [T],
 ) where
     T: Copy + std::ops::AddAssign<T>,
 {
     assert_eq!(acc.len(), n_rows * n_classes);
     assert!(n_rows * trees.stride <= rows.len());
+    if backend != SimdBackend::Scalar {
+        // Non-scalar callers normally arrive via `set_backend` (which
+        // asserts availability); the public `*_exec` entry points can
+        // pass a backend directly, so the funnel re-checks — an
+        // undetected backend must never reach an intrinsic block.
+        assert!(
+            backend.is_available(),
+            "backend {} selected but not detected on this host",
+            backend.name()
+        );
+        // The AVX2 row gathers index with i32 element offsets; bound the
+        // batch once here rather than per gather.
+        assert!(rows.len() <= i32::MAX as usize, "batch too large for 32-bit SIMD gathers");
+    }
     if kernel == TraversalKernel::QuickScorer {
         let plan = qs.expect("QuickScorer kernel requires a compiled QsPlan");
-        accumulate_qs::<D, T>(plan, trees, rows, n_rows, n_classes, leaf_table, acc);
+        accumulate_qs::<D, T>(plan, trees, rows, n_rows, n_classes, leaf_table, backend, acc);
         return;
     }
     let n_trees = trees.tree_offsets.len() - 1;
@@ -387,15 +605,18 @@ pub(crate) fn accumulate_batch<D: Domain, T>(
     let mut tile_start = 0;
     while tile_start < n_rows {
         let tile_rows = TILE_ROWS.min(n_rows - tile_start);
+        // Tree-independent; computed once per tile, not once per tree.
+        let row_base = row_base_lanes(trees.stride, tile_start, tile_rows);
         for t in 0..n_trees {
             if kernel == TraversalKernel::Branchy {
                 walk_tile_branchy::<D>(trees, t, rows, tile_start, tile_rows, &mut leaves);
-            } else if tile_rows == TILE_ROWS {
-                walk_tile_lockstep::<D>(trees, t, rows, tile_start, &mut leaves);
             } else {
-                // Ragged tail: stay on the selected branchless kernel
-                // with duplicated lanes (bit-identical; see the walker).
-                walk_tile_lockstep_tail::<D>(trees, t, rows, tile_start, tile_rows, &mut leaves);
+                // Branchless: backend-dispatched predicated walk (the
+                // ragged tail stays on the selected backend via the
+                // duplicated-lane convention; see the walkers).
+                walk_tile_predicated::<D>(
+                    trees, t, rows, tile_start, tile_rows, &row_base, backend, &mut leaves,
+                );
             }
             for (r, &p) in leaves[..tile_rows].iter().enumerate() {
                 let leaf = &leaf_table[p as usize * n_classes..(p as usize + 1) * n_classes];
@@ -430,6 +651,8 @@ impl CompiledForest {
     pub(crate) fn packed_ord(&self) -> PackedTrees<'_> {
         PackedTrees {
             nodes: &self.nodes_ord,
+            tw_plane: &self.soa_tw_ord,
+            ffl_plane: &self.soa_ffl,
             tree_offsets: &self.tree_offsets,
             tree_depths: &self.tree_depths,
             stride: self.n_features,
@@ -440,6 +663,8 @@ impl CompiledForest {
     pub(crate) fn packed_f32(&self) -> PackedTrees<'_> {
         PackedTrees {
             nodes: &self.nodes_f32,
+            tw_plane: &self.soa_tw_f32,
+            ffl_plane: &self.soa_ffl,
             tree_offsets: &self.tree_offsets,
             tree_depths: &self.tree_depths,
             stride: self.n_features,
@@ -454,11 +679,22 @@ pub fn float_proba_batch(f: &CompiledForest, rows: &[f32]) -> Vec<f32> {
     float_proba_batch_with(f, rows, TraversalKernel::default())
 }
 
-/// [`float_proba_batch`] with an explicit kernel.
+/// [`float_proba_batch`] with an explicit kernel (backend resolved from
+/// the environment / host detection).
 pub fn float_proba_batch_with(
     f: &CompiledForest,
     rows: &[f32],
     kernel: TraversalKernel,
+) -> Vec<f32> {
+    float_proba_batch_exec(f, rows, kernel, SimdBackend::resolve())
+}
+
+/// [`float_proba_batch`] with an explicit kernel and SIMD backend.
+pub fn float_proba_batch_exec(
+    f: &CompiledForest,
+    rows: &[f32],
+    kernel: TraversalKernel,
+    backend: SimdBackend,
 ) -> Vec<f32> {
     let n_rows = batch_rows(f, rows.len());
     let c = f.n_classes;
@@ -471,6 +707,7 @@ pub fn float_proba_batch_with(
         c,
         &f.leaf_f32,
         kernel,
+        backend,
         &mut acc,
     );
     let inv = 1.0 / f.n_trees as f32;
@@ -487,11 +724,22 @@ pub fn flint_proba_batch(f: &CompiledForest, rows: &[f32]) -> Vec<f32> {
     flint_proba_batch_with(f, rows, TraversalKernel::default())
 }
 
-/// [`flint_proba_batch`] with an explicit kernel.
+/// [`flint_proba_batch`] with an explicit kernel (backend resolved from
+/// the environment / host detection).
 pub fn flint_proba_batch_with(
     f: &CompiledForest,
     rows: &[f32],
     kernel: TraversalKernel,
+) -> Vec<f32> {
+    flint_proba_batch_exec(f, rows, kernel, SimdBackend::resolve())
+}
+
+/// [`flint_proba_batch`] with an explicit kernel and SIMD backend.
+pub fn flint_proba_batch_exec(
+    f: &CompiledForest,
+    rows: &[f32],
+    kernel: TraversalKernel,
+    backend: SimdBackend,
 ) -> Vec<f32> {
     let n_rows = batch_rows(f, rows.len());
     let c = f.n_classes;
@@ -505,6 +753,7 @@ pub fn flint_proba_batch_with(
             c,
             &f.leaf_f32,
             kernel,
+            backend,
             &mut acc,
         );
         let inv = 1.0 / f.n_trees as f32;
@@ -525,8 +774,19 @@ pub fn int_fixed_batch(f: &CompiledForest, rows: &[f32]) -> Vec<u32> {
     int_fixed_batch_with(f, rows, TraversalKernel::default())
 }
 
-/// [`int_fixed_batch`] with an explicit kernel.
+/// [`int_fixed_batch`] with an explicit kernel (backend resolved from
+/// the environment / host detection).
 pub fn int_fixed_batch_with(f: &CompiledForest, rows: &[f32], kernel: TraversalKernel) -> Vec<u32> {
+    int_fixed_batch_exec(f, rows, kernel, SimdBackend::resolve())
+}
+
+/// [`int_fixed_batch`] with an explicit kernel and SIMD backend.
+pub fn int_fixed_batch_exec(
+    f: &CompiledForest,
+    rows: &[f32],
+    kernel: TraversalKernel,
+    backend: SimdBackend,
+) -> Vec<u32> {
     let n_rows = batch_rows(f, rows.len());
     let c = f.n_classes;
     with_ordered_batch(rows, |rows_ord| {
@@ -539,6 +799,7 @@ pub fn int_fixed_batch_with(f: &CompiledForest, rows: &[f32], kernel: TraversalK
             c,
             &f.leaf_u32,
             kernel,
+            backend,
             &mut acc,
         );
         acc
@@ -626,6 +887,69 @@ mod tests {
             assert_eq!(float_proba_batch(&f, rows), float_proba_batch_with(&f, rows, kernel));
             assert_eq!(flint_proba_batch(&f, rows), flint_proba_batch_with(&f, rows, kernel));
             assert_eq!(int_fixed_batch(&f, rows), int_fixed_batch_with(&f, rows, kernel));
+            for &backend in SimdBackend::available() {
+                assert_eq!(
+                    float_proba_batch(&f, rows),
+                    float_proba_batch_exec(&f, rows, kernel, backend),
+                    "{}/{}",
+                    kernel.name(),
+                    backend.name()
+                );
+                assert_eq!(
+                    int_fixed_batch(&f, rows),
+                    int_fixed_batch_exec(&f, rows, kernel, backend),
+                    "{}/{}",
+                    kernel.name(),
+                    backend.name()
+                );
+            }
+        }
+    }
+
+    /// The SIMD predicated walker must agree with the scalar lockstep
+    /// walker lane for lane, at every tail width, in both threshold
+    /// domains (exercised directly here; the engine-level parity suite
+    /// covers the same thing end to end). Runs the intrinsic path only
+    /// where the CPU feature was detected.
+    #[test]
+    fn simd_walkers_match_scalar_lane_for_lane() {
+        let f = forest();
+        let ds = shuttle_like(64, 25);
+        let rows_ord: Vec<u32> = ds.features.iter().map(|&x| ordered_u32(x)).collect();
+        let trees_ord = f.packed_ord();
+        let trees_f32 = f.packed_f32();
+        let mut want = [0u32; TILE_ROWS];
+        let mut got = [0u32; TILE_ROWS];
+        for &backend in SimdBackend::available() {
+            for tile_rows in 1..=TILE_ROWS {
+                let rb = row_base_lanes(trees_ord.stride, 0, tile_rows);
+                for t in 0..f.n_trees {
+                    walk_tile_branchy::<OrdDomain>(
+                        &trees_ord, t, &rows_ord, 0, tile_rows, &mut want,
+                    );
+                    walk_tile_predicated::<OrdDomain>(
+                        &trees_ord, t, &rows_ord, 0, tile_rows, &rb, backend, &mut got,
+                    );
+                    assert_eq!(
+                        got[..tile_rows],
+                        want[..tile_rows],
+                        "ord {} t{t} width {tile_rows}",
+                        backend.name()
+                    );
+                    walk_tile_branchy::<F32Domain>(
+                        &trees_f32, t, &ds.features, 0, tile_rows, &mut want,
+                    );
+                    walk_tile_predicated::<F32Domain>(
+                        &trees_f32, t, &ds.features, 0, tile_rows, &rb, backend, &mut got,
+                    );
+                    assert_eq!(
+                        got[..tile_rows],
+                        want[..tile_rows],
+                        "f32 {} t{t} width {tile_rows}",
+                        backend.name()
+                    );
+                }
+            }
         }
     }
 

@@ -186,6 +186,18 @@ pub struct CompiledForest {
     pub nodes_f32: Vec<NodeF32>,
     /// Packed AoS hot nodes, ordered-u32 thresholds.
     pub nodes_ord: Vec<NodeOrd>,
+    /// SIMD gather plane mirroring `nodes_ord[i].tw` (ordered-u32
+    /// threshold word / leaf payload per node). Built once at compile
+    /// time alongside the packed arrays and asserted consistent; the
+    /// `vpgatherdd`-based AVX2 walkers ([`super::simd`]) fetch nodes
+    /// from these u32 planes instead of the 8-byte AoS structs.
+    pub soa_tw_ord: Vec<u32>,
+    /// SIMD gather plane mirroring `nodes_f32[i].tw` (raw f32 bits).
+    pub soa_tw_f32: Vec<u32>,
+    /// SIMD gather plane packing `nodes_*[i].ff` (low 16 bits: feature |
+    /// [`LEAF_BIT`]) and `nodes_*[i].left` (high 16 bits) into one u32
+    /// word — identical for both threshold domains, asserted so.
+    pub soa_ffl: Vec<u32>,
     /// Node layout this forest was compiled with.
     pub order: NodeOrder,
     /// QuickScorer condition-stream plan (the bitvector kernel; built for
@@ -287,6 +299,16 @@ pub(crate) fn pack_tree(
     out
 }
 
+/// Build the SIMD gather planes of a packed node array: the `tw` words
+/// and the `ff | left << 16` words, one u32 each per node (see the
+/// `CompiledForest::soa_*` field docs). Shared by the RF and GBT
+/// compilers so the plane encoding lives in exactly one place.
+pub(crate) fn soa_planes(nodes: &[Node8]) -> (Vec<u32>, Vec<u32>) {
+    let tw = nodes.iter().map(|n| n.tw).collect();
+    let ffl = nodes.iter().map(|n| (n.ff as u32) | ((n.left as u32) << 16)).collect();
+    (tw, ffl)
+}
+
 impl CompiledForest {
     /// Compile with the default (depth-first) node order.
     /// Panics on GBT models (use [`crate::inference::GbtIntEngine`]).
@@ -322,6 +344,9 @@ impl CompiledForest {
             leaf_u32: Vec::new(),
             nodes_f32: Vec::new(),
             nodes_ord: Vec::new(),
+            soa_tw_ord: Vec::new(),
+            soa_tw_f32: Vec::new(),
+            soa_ffl: Vec::new(),
             order,
             qs: QsPlan::build(model),
         };
@@ -453,6 +478,17 @@ impl CompiledForest {
             self.nodes_ord.extend(ord);
             self.nodes_f32.extend(f32n);
         }
+        // SIMD gather planes: a u32-per-node mirror of the packed
+        // arrays, built once here. The ff/left halves must agree across
+        // the two threshold domains (one shared ffl plane serves both) —
+        // asserted, not assumed, since a divergence would silently route
+        // SIMD lanes differently from the scalar walkers.
+        let (tw_ord, ffl_ord) = soa_planes(&self.nodes_ord);
+        let (tw_f32, ffl_f32) = soa_planes(&self.nodes_f32);
+        assert_eq!(ffl_ord, ffl_f32, "ord/f32 packed arrays disagree on ff/left");
+        self.soa_tw_ord = tw_ord;
+        self.soa_tw_f32 = tw_f32;
+        self.soa_ffl = ffl_ord;
     }
 
     /// Walk tree `t` on a raw float row, returning the leaf payload index.
@@ -575,6 +611,30 @@ mod tests {
                         assert_eq!(f32::from_bits(c.nodes_f32[i].tw), c.thresh_f32[i]);
                     }
                 }
+            }
+        }
+    }
+
+    /// The SIMD gather planes are an exact mirror of the packed Node8
+    /// arrays: `tw` word for word, and `ffl` packing ff (low 16) and
+    /// left (high 16) — the decode the intrinsic walkers perform
+    /// (`feature = ffl & 0x7FFF`, `leaf = (ffl >> 15) & 1`,
+    /// `left = ffl >> 16`) must recover the scalar walkers' fields.
+    #[test]
+    fn soa_planes_mirror_packed_nodes() {
+        let m = model();
+        for order in NodeOrder::all() {
+            let c = CompiledForest::compile_with(&m, order);
+            assert_eq!(c.soa_tw_ord.len(), c.n_nodes());
+            assert_eq!(c.soa_tw_f32.len(), c.n_nodes());
+            assert_eq!(c.soa_ffl.len(), c.n_nodes());
+            for i in 0..c.n_nodes() {
+                assert_eq!(c.soa_tw_ord[i], c.nodes_ord[i].tw);
+                assert_eq!(c.soa_tw_f32[i], c.nodes_f32[i].tw);
+                let ffl = c.soa_ffl[i];
+                assert_eq!((ffl & 0x7FFF) as usize, c.nodes_ord[i].feature_index());
+                assert_eq!((ffl >> 15) & 1, 1 - c.nodes_ord[i].branch_mask());
+                assert_eq!(ffl >> 16, c.nodes_ord[i].left as u32);
             }
         }
     }

@@ -20,6 +20,7 @@
 
 use super::batch::{self, TraversalKernel};
 use super::compiled::{CompiledForest, NodeOrder};
+use super::simd::SimdBackend;
 use crate::ir::{argmax, Model};
 use crate::quant::fixed_to_prob;
 
@@ -113,6 +114,17 @@ pub trait Engine: Send + Sync {
     fn kernel(&self) -> TraversalKernel;
     /// Select the tile-walk kernel for subsequent batched calls.
     fn set_kernel(&mut self, kernel: TraversalKernel);
+    /// SIMD execution backend the batched methods use (bit-identical
+    /// results on every backend; a pure performance knob). Defaults to
+    /// [`SimdBackend::resolve`] at compile time (env override or best
+    /// detected).
+    fn backend(&self) -> SimdBackend;
+    /// Select the SIMD backend for subsequent batched calls.
+    ///
+    /// Panics when `backend` is not executable on this host
+    /// ([`SimdBackend::is_available`]) — the intrinsic paths must stay
+    /// unreachable without the matching CPU feature.
+    fn set_backend(&mut self, backend: SimdBackend);
 }
 
 // ---------------------------------------------------------------------------
@@ -121,6 +133,7 @@ pub trait Engine: Send + Sync {
 pub struct FloatEngine {
     forest: CompiledForest,
     kernel: TraversalKernel,
+    backend: SimdBackend,
 }
 
 impl FloatEngine {
@@ -134,6 +147,7 @@ impl FloatEngine {
         FloatEngine {
             forest: CompiledForest::compile_with(model, order),
             kernel: TraversalKernel::default(),
+            backend: SimdBackend::resolve(),
         }
     }
 
@@ -171,13 +185,13 @@ impl Engine for FloatEngine {
     }
     fn predict_batch(&self, rows: &[f32]) -> Vec<u32> {
         batch::argmax_rows(
-            &batch::float_proba_batch_with(&self.forest, rows, self.kernel),
+            &batch::float_proba_batch_exec(&self.forest, rows, self.kernel, self.backend),
             self.forest.n_classes,
         )
     }
     fn predict_proba_batch(&self, rows: &[f32]) -> Vec<Vec<f32>> {
         batch::split_rows(
-            batch::float_proba_batch_with(&self.forest, rows, self.kernel),
+            batch::float_proba_batch_exec(&self.forest, rows, self.kernel, self.backend),
             self.forest.n_classes,
         )
     }
@@ -196,6 +210,13 @@ impl Engine for FloatEngine {
     fn set_kernel(&mut self, kernel: TraversalKernel) {
         self.kernel = kernel;
     }
+    fn backend(&self) -> SimdBackend {
+        self.backend
+    }
+    fn set_backend(&mut self, backend: SimdBackend) {
+        assert!(backend.is_available(), "backend {} not available on this host", backend.name());
+        self.backend = backend;
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -204,6 +225,7 @@ impl Engine for FloatEngine {
 pub struct FlIntEngine {
     forest: CompiledForest,
     kernel: TraversalKernel,
+    backend: SimdBackend,
 }
 
 impl FlIntEngine {
@@ -217,6 +239,7 @@ impl FlIntEngine {
         FlIntEngine {
             forest: CompiledForest::compile_with(model, order),
             kernel: TraversalKernel::default(),
+            backend: SimdBackend::resolve(),
         }
     }
 
@@ -258,13 +281,13 @@ impl Engine for FlIntEngine {
     }
     fn predict_batch(&self, rows: &[f32]) -> Vec<u32> {
         batch::argmax_rows(
-            &batch::flint_proba_batch_with(&self.forest, rows, self.kernel),
+            &batch::flint_proba_batch_exec(&self.forest, rows, self.kernel, self.backend),
             self.forest.n_classes,
         )
     }
     fn predict_proba_batch(&self, rows: &[f32]) -> Vec<Vec<f32>> {
         batch::split_rows(
-            batch::flint_proba_batch_with(&self.forest, rows, self.kernel),
+            batch::flint_proba_batch_exec(&self.forest, rows, self.kernel, self.backend),
             self.forest.n_classes,
         )
     }
@@ -283,6 +306,13 @@ impl Engine for FlIntEngine {
     fn set_kernel(&mut self, kernel: TraversalKernel) {
         self.kernel = kernel;
     }
+    fn backend(&self) -> SimdBackend {
+        self.backend
+    }
+    fn set_backend(&mut self, backend: SimdBackend) {
+        assert!(backend.is_available(), "backend {} not available on this host", backend.name());
+        self.backend = backend;
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -293,6 +323,7 @@ impl Engine for FlIntEngine {
 pub struct IntEngine {
     forest: CompiledForest,
     kernel: TraversalKernel,
+    backend: SimdBackend,
 }
 
 impl IntEngine {
@@ -306,6 +337,7 @@ impl IntEngine {
         IntEngine {
             forest: CompiledForest::compile_with(model, order),
             kernel: TraversalKernel::default(),
+            backend: SimdBackend::resolve(),
         }
     }
 
@@ -338,7 +370,7 @@ impl IntEngine {
     /// row; the coordinator's scalar route is built on this).
     pub fn predict_fixed_batch(&self, rows: &[f32]) -> Vec<Vec<u32>> {
         batch::split_rows(
-            batch::int_fixed_batch_with(&self.forest, rows, self.kernel),
+            batch::int_fixed_batch_exec(&self.forest, rows, self.kernel, self.backend),
             self.forest.n_classes,
         )
     }
@@ -353,12 +385,12 @@ impl Engine for IntEngine {
     }
     fn predict_batch(&self, rows: &[f32]) -> Vec<u32> {
         batch::argmax_rows(
-            &batch::int_fixed_batch_with(&self.forest, rows, self.kernel),
+            &batch::int_fixed_batch_exec(&self.forest, rows, self.kernel, self.backend),
             self.forest.n_classes,
         )
     }
     fn predict_proba_batch(&self, rows: &[f32]) -> Vec<Vec<f32>> {
-        batch::int_fixed_batch_with(&self.forest, rows, self.kernel)
+        batch::int_fixed_batch_exec(&self.forest, rows, self.kernel, self.backend)
             .chunks_exact(self.forest.n_classes)
             .map(|fixed| fixed.iter().map(|&q| fixed_to_prob(q)).collect())
             .collect()
@@ -382,6 +414,13 @@ impl Engine for IntEngine {
     }
     fn set_kernel(&mut self, kernel: TraversalKernel) {
         self.kernel = kernel;
+    }
+    fn backend(&self) -> SimdBackend {
+        self.backend
+    }
+    fn set_backend(&mut self, backend: SimdBackend) {
+        assert!(backend.is_available(), "backend {} not available on this host", backend.name());
+        self.backend = backend;
     }
 }
 
@@ -548,28 +587,51 @@ mod tests {
         }
     }
 
-    /// The kernel is a pure performance knob: switching it changes no
-    /// output bit, on any variant — including the QuickScorer bitvector
-    /// kernel.
+    /// The kernel and the SIMD backend are pure performance knobs:
+    /// switching either changes no output bit, on any variant —
+    /// including the QuickScorer bitvector kernel.
     #[test]
-    fn kernel_is_a_pure_performance_knob() {
+    fn kernel_and_backend_are_pure_performance_knobs() {
         let (ds, m) = setup(8, 9);
         let flat = &ds.features[..100 * ds.n_features];
         for v in Variant::all() {
             let mut e = compile_variant(&m, v);
             assert_eq!(e.kernel(), TraversalKernel::Branchless, "default kernel");
+            assert!(e.backend().is_available(), "default backend must be executable");
             let branchless_probas = e.predict_proba_batch(flat);
             let branchless_classes = e.predict_batch(flat);
             for kernel in TraversalKernel::all() {
                 e.set_kernel(kernel);
                 assert_eq!(e.kernel(), kernel);
-                assert_eq!(e.predict_proba_batch(flat), branchless_probas, "{}", v.name());
-                assert_eq!(e.predict_batch(flat), branchless_classes, "{}", v.name());
+                for &backend in SimdBackend::available() {
+                    e.set_backend(backend);
+                    assert_eq!(e.backend(), backend);
+                    let tag = format!("{}/{}/{}", v.name(), kernel.name(), backend.name());
+                    assert_eq!(e.predict_proba_batch(flat), branchless_probas, "{tag}");
+                    assert_eq!(e.predict_batch(flat), branchless_classes, "{tag}");
+                }
                 let via_full = compile_variant_full(&m, v, NodeOrder::Breadth, kernel);
                 assert_eq!(via_full.kernel(), kernel);
                 assert_eq!(via_full.predict_batch(flat), branchless_classes, "{}", v.name());
             }
         }
+    }
+
+    /// Forcing a backend the host cannot execute must panic in
+    /// `set_backend` — the intrinsic blocks stay unreachable without
+    /// the CPU feature.
+    #[test]
+    fn unavailable_backend_rejected() {
+        let unavailable = SimdBackend::all()
+            .into_iter()
+            .find(|b| !b.is_available());
+        let Some(bad) = unavailable else {
+            return; // host implausibly supports every backend
+        };
+        let (_, m) = setup(2, 10);
+        let mut e = compile_variant(&m, Variant::IntTreeger);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| e.set_backend(bad)));
+        assert!(r.is_err(), "set_backend({}) must panic", bad.name());
     }
 
     #[test]

@@ -20,8 +20,9 @@ use super::batch::{
     accumulate_batch, with_ordered_batch, with_ordered_row, OrdDomain, PackedTrees,
     TraversalKernel,
 };
-use super::compiled::{pack_tree, Node8, NodeOrder, LEAF, MAX_FEATURES, MAX_TREE_NODES};
+use super::compiled::{pack_tree, soa_planes, Node8, NodeOrder, LEAF, MAX_FEATURES, MAX_TREE_NODES};
 use super::quickscorer::QsPlan;
+use super::simd::SimdBackend;
 use crate::flint::ordered_u32;
 use crate::ir::{argmax, softmax, Model, ModelKind, Node};
 use crate::quant::{margin_scale, margin_to_fixed, MarginScale};
@@ -37,6 +38,11 @@ pub struct GbtIntEngine {
     tree_depths: Vec<u32>,
     /// Packed 8-byte nodes, ordered-u32 thresholds (leaf payload in `tw`).
     nodes: Vec<Node8>,
+    /// SIMD gather plane mirroring `nodes[i].tw` (see
+    /// `CompiledForest::soa_tw_ord`).
+    soa_tw: Vec<u32>,
+    /// SIMD gather plane packing `nodes[i].ff | nodes[i].left << 16`.
+    soa_ffl: Vec<u32>,
     /// Quantized margins, `n_leaves * n_classes`.
     leaf_q: Vec<i64>,
     /// Quantized base score per class.
@@ -45,6 +51,7 @@ pub struct GbtIntEngine {
     /// engines — GBT leaf payload indices follow the same IR order).
     qs: QsPlan,
     kernel: TraversalKernel,
+    backend: SimdBackend,
 }
 
 impl GbtIntEngine {
@@ -65,10 +72,13 @@ impl GbtIntEngine {
             tree_offsets: Vec::with_capacity(model.trees.len() + 1),
             tree_depths: model.trees.iter().map(|t| t.depth() as u32).collect(),
             nodes: Vec::new(),
+            soa_tw: Vec::new(),
+            soa_ffl: Vec::new(),
             leaf_q: Vec::new(),
             base_q: model.base_score.iter().map(|&b| margin_to_fixed(b, scale)).collect(),
             qs: QsPlan::build(model),
             kernel: TraversalKernel::default(),
+            backend: SimdBackend::resolve(),
         };
         // Per-tree scratch SoA in IR order, packed to the BFS
         // child-adjacent form (same canonical encoding as
@@ -109,6 +119,11 @@ impl GbtIntEngine {
             e.nodes.extend(pack_tree(&feature, &thresh, &left, &right, NodeOrder::Breadth));
         }
         e.tree_offsets.push(e.nodes.len() as u32);
+        // SIMD gather planes, mirrored from the packed nodes through the
+        // same encoder as the RF compiler.
+        let (tw, ffl) = soa_planes(&e.nodes);
+        e.soa_tw = tw;
+        e.soa_ffl = ffl;
         e
     }
 
@@ -137,9 +152,24 @@ impl GbtIntEngine {
         self.kernel = kernel;
     }
 
+    /// SIMD execution backend the batched methods use (pure performance
+    /// knob; defaults to [`SimdBackend::resolve`]).
+    pub fn backend(&self) -> SimdBackend {
+        self.backend
+    }
+
+    /// Select the SIMD backend for subsequent batched calls. Panics when
+    /// `backend` is not executable on this host.
+    pub fn set_backend(&mut self, backend: SimdBackend) {
+        assert!(backend.is_available(), "backend {} not available on this host", backend.name());
+        self.backend = backend;
+    }
+
     fn packed(&self) -> PackedTrees<'_> {
         PackedTrees {
             nodes: &self.nodes,
+            tw_plane: &self.soa_tw,
+            ffl_plane: &self.soa_ffl,
             tree_offsets: &self.tree_offsets,
             tree_depths: &self.tree_depths,
             stride: self.n_features,
@@ -209,6 +239,7 @@ impl GbtIntEngine {
                 c,
                 &self.leaf_q,
                 self.kernel,
+                self.backend,
                 &mut acc,
             );
             acc.chunks_exact(c).map(|row| row.to_vec()).collect()
@@ -267,29 +298,31 @@ mod tests {
     }
 
     #[test]
-    fn batched_margins_bit_identical_to_scalar_all_kernels() {
+    fn batched_margins_bit_identical_to_scalar_all_kernels_and_backends() {
         let ds = shuttle_like(800, 15);
         let m = train_gbt(&ds, &GbtParams { n_rounds: 4, max_depth: 4, ..Default::default() }, 5);
         let mut e = GbtIntEngine::compile(&m);
         for kernel in TraversalKernel::all() {
             e.set_kernel(kernel);
-            for n in [1usize, 7, 8, 9, 100] {
-                let flat = &ds.features[..n * ds.n_features];
-                let batched = e.predict_fixed_batch(flat);
-                let classes = e.predict_batch(flat);
-                for i in 0..n {
-                    assert_eq!(
-                        batched[i],
-                        e.predict_fixed(ds.row(i)),
-                        "{} margins row {i} (n={n})",
-                        kernel.name()
-                    );
-                    assert_eq!(
-                        classes[i],
-                        e.predict(ds.row(i)),
-                        "{} class row {i} (n={n})",
-                        kernel.name()
-                    );
+            for &backend in SimdBackend::available() {
+                e.set_backend(backend);
+                for n in [1usize, 7, 8, 9, 100] {
+                    let flat = &ds.features[..n * ds.n_features];
+                    let batched = e.predict_fixed_batch(flat);
+                    let classes = e.predict_batch(flat);
+                    for i in 0..n {
+                        let tag = format!("{}/{}", kernel.name(), backend.name());
+                        assert_eq!(
+                            batched[i],
+                            e.predict_fixed(ds.row(i)),
+                            "{tag} margins row {i} (n={n})"
+                        );
+                        assert_eq!(
+                            classes[i],
+                            e.predict(ds.row(i)),
+                            "{tag} class row {i} (n={n})"
+                        );
+                    }
                 }
             }
         }

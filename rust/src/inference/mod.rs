@@ -25,18 +25,24 @@
 //! 8-byte [`compiled::Node8`] encoding), and [`TraversalKernel`] selects
 //! the branchy early-exit walk, the predicated branchless fixed-trip
 //! walk, or the [`quickscorer`] bitvector evaluation (feature-sorted
-//! condition streams + `u64` false-leaf masks, no node walks at all) —
-//! every combination is bit-identical; they are pure performance knobs.
+//! condition streams + `u64` false-leaf masks, no node walks at all).
+//! Orthogonally, [`SimdBackend`] selects the execution backend of the
+//! branchless walk and the QuickScorer scan: portable scalar code or
+//! runtime-detected AVX2 / NEON intrinsics ([`simd`]) — every kernel ×
+//! backend combination is bit-identical; they are pure performance
+//! knobs.
 
 pub mod batch;
 pub mod compiled;
 pub mod engines;
 pub mod gbt_int;
 pub mod quickscorer;
+pub mod simd;
 
 pub use batch::{TraversalKernel, TILE_ROWS};
 pub use compiled::{CompiledForest, Node8, NodeOrder, LEAF};
 pub use quickscorer::{QsPlan, QS_MAX_LEAVES};
+pub use simd::{SimdBackend, BACKEND_ENV};
 pub use engines::{
     compile_variant, compile_variant_full, compile_variant_with, Engine, FlIntEngine, FloatEngine,
     IntEngine, Variant,

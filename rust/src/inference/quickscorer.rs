@@ -51,9 +51,8 @@
 //! logged at plan-build time — never silent — and surfaced by
 //! `ir::stats` and the CLI `inspect` command.
 
-use super::batch::{
-    walk_tile_lockstep, walk_tile_lockstep_tail, Domain, PackedTrees, TILE_ROWS,
-};
+use super::batch::{row_base_lanes, walk_tile_predicated, Domain, PackedTrees, TILE_ROWS};
+use super::simd::SimdBackend;
 use crate::flint::ordered_u32;
 use crate::ir::{Model, Node, Tree};
 
@@ -283,17 +282,44 @@ fn leaf_ranges(tree: &Tree) -> (Vec<(u32, u32)>, Vec<usize>) {
 /// Scan one row against one block's condition streams, ANDing false-leaf
 /// masks into `bv` (pre-initialized from `block.init`). `words` selects
 /// the threshold encoding of the caller's domain.
+///
+/// Ascending thresholds make the false conditions (`go right`) a
+/// *prefix* of each feature's stream; the scan computes the prefix
+/// length — scalar early-exit compare, or the SIMD 8-/4-wide compare of
+/// [`super::simd`] per `backend` — then ANDs exactly that many masks.
+/// The masks ANDed (and their order) are identical across backends, so
+/// the resulting bitvectors are bit-equal by construction.
 #[inline]
-fn eval_block<D: Domain>(block: &QsBlock, words: &[u32], row: &[D::Elem], bv: &mut [u64]) {
+fn eval_block<D: Domain>(
+    block: &QsBlock,
+    words: &[u32],
+    row: &[D::Elem],
+    backend: SimdBackend,
+    bv: &mut [u64],
+) {
     let offs = &block.feature_offsets;
     for (f, &x) in row.iter().enumerate() {
         let (s, e) = (offs[f] as usize, offs[f + 1] as usize);
-        // Ascending thresholds make the false conditions (`go right`) a
-        // prefix: AND masks until the first true condition, then stop.
-        for i in s..e {
-            if !D::go_right(x, words[i]) {
-                break;
+        let stream = &words[s..e];
+        let prefix = match backend {
+            SimdBackend::Scalar => {
+                stream.iter().take_while(|&&w| D::go_right(x, w)).count()
             }
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: every non-scalar backend passes the
+            // `is_available()` assert in `accumulate_batch` (the single
+            // funnel into this driver) — AVX2 was detected at runtime.
+            // The scan reads only within the `stream` slice.
+            SimdBackend::Avx2 => unsafe { D::qs_prefix_avx2(x, stream) },
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: as above — NEON was detected before selection.
+            SimdBackend::Neon => unsafe { D::qs_prefix_neon(x, stream) },
+            other => unreachable!(
+                "backend {} cannot execute on this architecture",
+                other.name()
+            ),
+        };
+        for i in s..s + prefix {
             bv[block.tree_of[i] as usize] &= block.masks[i];
         }
     }
@@ -310,6 +336,7 @@ pub(crate) fn accumulate_qs<D: Domain, T>(
     n_rows: usize,
     n_classes: usize,
     leaf_table: &[T],
+    backend: SimdBackend,
     acc: &mut [T],
 ) where
     T: Copy + std::ops::AddAssign<T>,
@@ -336,7 +363,7 @@ pub(crate) fn accumulate_qs<D: Domain, T>(
                 let row = &rows[base..base + stride];
                 let bv = &mut bv[..block.n_trees];
                 bv.copy_from_slice(&block.init);
-                eval_block::<D>(block, words, row, bv);
+                eval_block::<D>(block, words, row, backend, bv);
                 for (lt, &tid) in block.tree_ids.iter().enumerate() {
                     let leaf = bv[lt].trailing_zeros() as usize;
                     let lo = block.leaf_offsets[lt] as usize;
@@ -344,13 +371,22 @@ pub(crate) fn accumulate_qs<D: Domain, T>(
                 }
             }
         }
+        // Tree-independent per-lane offsets for the fallback walks,
+        // computed once per tile.
+        let row_base = (!plan.fallback.is_empty())
+            .then(|| row_base_lanes(trees.stride, tile_start, tile_rows));
         for &t in &plan.fallback {
             let t = t as usize;
-            if tile_rows == TILE_ROWS {
-                walk_tile_lockstep::<D>(trees, t, rows, tile_start, &mut leaves);
-            } else {
-                walk_tile_lockstep_tail::<D>(trees, t, rows, tile_start, tile_rows, &mut leaves);
-            }
+            walk_tile_predicated::<D>(
+                trees,
+                t,
+                rows,
+                tile_start,
+                tile_rows,
+                row_base.as_ref().expect("computed when fallback is non-empty"),
+                backend,
+                &mut leaves,
+            );
             for (r, &p) in leaves[..tile_rows].iter().enumerate() {
                 payloads[r * n_trees + t] = p;
             }
@@ -481,18 +517,21 @@ mod tests {
         let n = 37usize;
         let flat = &ds.features[..n * ds.n_features];
         let rows_ord: Vec<u32> = flat.iter().map(|&x| ordered_u32(x)).collect();
-        let mut got = vec![0u32; n * f.n_classes];
-        accumulate_qs::<OrdDomain, u32>(
-            &plan,
-            &f.packed_ord(),
-            &rows_ord,
-            n,
-            f.n_classes,
-            &f.leaf_u32,
-            &mut got,
-        );
         let want = int_fixed_batch_with(&f, flat, TraversalKernel::Branchy);
-        assert_eq!(got, want);
+        for &backend in SimdBackend::available() {
+            let mut got = vec![0u32; n * f.n_classes];
+            accumulate_qs::<OrdDomain, u32>(
+                &plan,
+                &f.packed_ord(),
+                &rows_ord,
+                n,
+                f.n_classes,
+                &f.leaf_u32,
+                backend,
+                &mut got,
+            );
+            assert_eq!(got, want, "{}", backend.name());
+        }
     }
 
     #[test]

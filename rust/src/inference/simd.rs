@@ -1,0 +1,594 @@
+//! Explicit SIMD execution backends for the batch kernels.
+//!
+//! The predicated fixed-trip walk ([`super::batch`]) and the QuickScorer
+//! condition-stream scan ([`super::quickscorer`]) were shaped so LLVM
+//! *can* autovectorize them — but autovectorization is a hope, not a
+//! contract. This module makes the lane parallelism explicit: hand
+//! written intrinsic inner loops behind a runtime-dispatched
+//! [`SimdBackend`], so a binary built for generic `x86_64` / `aarch64`
+//! still runs the vector path on capable hardware and falls back to the
+//! scalar kernels everywhere else.
+//!
+//! ## Backends
+//!
+//! * [`SimdBackend::Scalar`] — the existing scalar kernels (always
+//!   available; the reference semantics).
+//! * [`SimdBackend::Avx2`] — x86_64 with AVX2 detected at runtime
+//!   (`is_x86_feature_detected!("avx2")`). Eight u32 lane cursors live
+//!   in one `__m256i`; node words come from two `vpgatherdd` gathers
+//!   over the [`CompiledForest`](super::CompiledForest) SoA mirror
+//!   planes, and the descent is pure mask arithmetic.
+//! * [`SimdBackend::Neon`] — aarch64 NEON (baseline on AArch64, still
+//!   verified via `is_aarch64_feature_detected!`). NEON has no gather,
+//!   so node/row fetches stay scalar while the compare + mask + add
+//!   descent runs on `uint32x4_t` half-tiles.
+//!
+//! ## Selection
+//!
+//! [`SimdBackend::resolve`] picks the best *detected* backend, unless
+//! the [`BACKEND_ENV`] environment variable (CLI: `--backend`) forces
+//! one. A forced backend that the host cannot execute is refused loudly
+//! and falls back to the best available one — the `#[target_feature]`
+//! blocks below must stay unreachable unless the corresponding CPU
+//! feature was actually detected (executing AVX2 code on a non-AVX2
+//! core is undefined behavior, not a slow path).
+//!
+//! ## Parity (load-bearing — the parity suite sweeps this dimension)
+//!
+//! Every backend routes every lane through the literal `!(x <= t)`
+//! comparison sequence of the scalar walkers (`x > t` unsigned in the
+//! ordered-u32 domain via the sign-bias trick; `_CMP_NLE_UQ` /
+//! `vmvnq_u32(vcleq_f32(..))` in the f32 domain, preserving NaN
+//! routing), and leaf payloads are accumulated in ascending tree order
+//! by the shared drivers — so Scalar, AVX2 and NEON results are
+//! **byte-identical**. The backend is a pure performance knob, exactly
+//! like [`super::TraversalKernel`].
+
+use std::sync::OnceLock;
+
+/// Environment variable forcing an execution backend (`scalar`, `avx2`,
+/// `neon`); the CLI `--backend` flag sets it process-wide. Invalid or
+/// unavailable values are refused loudly and fall back to the best
+/// detected backend.
+pub const BACKEND_ENV: &str = "INTREEGER_BACKEND";
+
+/// Which SIMD execution backend the batch kernels use behind
+/// [`super::TraversalKernel::Branchless`] and
+/// [`super::TraversalKernel::QuickScorer`] (the branchy early-exit walk
+/// is inherently divergent and always runs scalar).
+///
+/// All backends produce bit-identical results (module docs); this is a
+/// pure performance knob, swept by the serving coordinator's startup
+/// auto-calibration alongside the traversal kernel.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum SimdBackend {
+    /// Portable scalar kernels (always available; reference semantics).
+    #[default]
+    Scalar,
+    /// x86_64 AVX2 intrinsics (8-lane gathers + mask-arithmetic descent).
+    Avx2,
+    /// aarch64 NEON intrinsics (4-lane half-tiles, scalar gathers).
+    Neon,
+}
+
+impl SimdBackend {
+    /// Display / calibration-log / env name of the backend.
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdBackend::Scalar => "scalar",
+            SimdBackend::Avx2 => "avx2",
+            SimdBackend::Neon => "neon",
+        }
+    }
+
+    /// Parse a backend name (inverse of [`Self::name`]).
+    pub fn from_name(name: &str) -> Option<SimdBackend> {
+        Self::all().into_iter().find(|b| b.name() == name)
+    }
+
+    /// Every backend the enum knows, available on this host or not
+    /// (CLI enumerations use this; execution sweeps use
+    /// [`Self::available`]).
+    pub fn all() -> [SimdBackend; 3] {
+        [SimdBackend::Scalar, SimdBackend::Avx2, SimdBackend::Neon]
+    }
+
+    /// Whether this backend can execute on the current host (CPU
+    /// feature detected *and* the matching architecture compiled in).
+    pub fn is_available(self) -> bool {
+        Self::available().contains(&self)
+    }
+
+    /// The backends executable on this host, scalar first, best last.
+    /// Detection runs once and is cached.
+    pub fn available() -> &'static [SimdBackend] {
+        static AVAILABLE: OnceLock<Vec<SimdBackend>> = OnceLock::new();
+        AVAILABLE.get_or_init(detect)
+    }
+
+    /// The fastest-expected available backend (the last of
+    /// [`Self::available`]): AVX2 / NEON when detected, scalar otherwise.
+    pub fn best() -> SimdBackend {
+        *Self::available().last().expect("scalar backend is always available")
+    }
+
+    /// Resolve the backend to use: the [`BACKEND_ENV`] override when set
+    /// (validated against [`Self::available`]; refused loudly when the
+    /// host cannot execute it), otherwise [`Self::best`]. Engines use
+    /// this as their compile-time default, so the override pins every
+    /// engine in the process.
+    pub fn resolve() -> SimdBackend {
+        match std::env::var(BACKEND_ENV) {
+            Ok(raw) => match Self::from_name(raw.trim()) {
+                Some(b) if b.is_available() => b,
+                Some(b) => {
+                    eprintln!(
+                        "intreeger: {BACKEND_ENV}={} is not executable on this host \
+                         (available: {:?}); using {}",
+                        b.name(),
+                        Self::available().iter().map(|b| b.name()).collect::<Vec<_>>(),
+                        Self::best().name()
+                    );
+                    Self::best()
+                }
+                None => {
+                    eprintln!(
+                        "intreeger: unknown {BACKEND_ENV}='{raw}' (use scalar | avx2 | neon); \
+                         using {}",
+                        Self::best().name()
+                    );
+                    Self::best()
+                }
+            },
+            Err(_) => Self::best(),
+        }
+    }
+
+    /// The backends a calibration sweep should time: just the forced one
+    /// when [`BACKEND_ENV`] is set (the override pins the choice),
+    /// otherwise everything available.
+    pub fn sweep() -> Vec<SimdBackend> {
+        if std::env::var(BACKEND_ENV).is_ok() {
+            vec![Self::resolve()]
+        } else {
+            Self::available().to_vec()
+        }
+    }
+
+    /// Human-readable CPU SIMD features detected on this host (reported
+    /// by `inspect`, the serving metrics snapshot, and the bench JSON).
+    pub fn detected_features() -> Vec<&'static str> {
+        let mut feats = Vec::new();
+        #[cfg(target_arch = "x86_64")]
+        {
+            feats.push("sse2"); // x86_64 baseline
+            if is_x86_feature_detected!("avx2") {
+                feats.push("avx2");
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            if std::arch::is_aarch64_feature_detected!("neon") {
+                feats.push("neon");
+            }
+        }
+        feats
+    }
+}
+
+/// Runtime backend detection (cached by [`SimdBackend::available`]).
+fn detect() -> Vec<SimdBackend> {
+    let mut v = vec![SimdBackend::Scalar];
+    #[cfg(target_arch = "x86_64")]
+    if is_x86_feature_detected!("avx2") {
+        v.push(SimdBackend::Avx2);
+    }
+    #[cfg(target_arch = "aarch64")]
+    if std::arch::is_aarch64_feature_detected!("neon") {
+        v.push(SimdBackend::Neon);
+    }
+    v
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 kernels (x86_64).
+//
+// Layout recap (see `compiled.rs`): the SoA mirror keeps two u32 planes
+// per node — `tw` (threshold word or leaf payload) and `ffl`
+// (`ff | left << 16`, i.e. feature-and-leaf-bit in the low half,
+// left-child / self-loop index in the high half). For node `i`:
+//   feature      = ffl & 0x7FFF
+//   leaf bit     = (ffl >> 15) & 1          (branch_mask = leaf_bit ^ 1)
+//   left / self  = ffl >> 16
+// and the predicated descent is idx = left + (go_right & branch_mask),
+// identical to the scalar `walk_tile_lockstep` step.
+
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod avx2 {
+    use super::super::batch::{PackedTrees, TILE_ROWS};
+    use std::arch::x86_64::*;
+
+    /// AVX2 predicated fixed-trip walk of one tree over one tile: eight
+    /// u32 lane cursors in one `__m256i`, node fetches via two
+    /// `vpgatherdd` gathers over the SoA mirror planes, descent by mask
+    /// arithmetic. `row_base[r]` is the element offset of lane `r`'s row
+    /// (ragged tails pass clamped offsets that duplicate the last real
+    /// lane — exactly the scalar tail walker's trick).
+    ///
+    /// # Safety
+    ///
+    /// Caller must have verified AVX2 via [`super::SimdBackend`]
+    /// detection. Memory safety of the gathers relies on the compiled
+    /// invariants the scalar walkers also rely on (`Model::validate()`
+    /// bounds child/feature indices; leaves self-loop and read feature
+    /// 0) plus the driver-checked bounds: every `row_base[r] + feature`
+    /// stays inside `rows` (the drivers assert the batch shape and that
+    /// `rows.len() <= i32::MAX`, so the i32 gather indices cannot wrap).
+    #[target_feature(enable = "avx2")]
+    pub(crate) unsafe fn walk_tile_ord(
+        trees: &PackedTrees,
+        t: usize,
+        rows: &[u32],
+        row_base: &[u32; TILE_ROWS],
+        leaves: &mut [u32; TILE_ROWS],
+    ) {
+        let base = trees.tree_offsets[t] as usize;
+        let depth = trees.tree_depths[t];
+        let tw = trees.tw_plane.as_ptr().add(base) as *const i32;
+        let ffl = trees.ffl_plane.as_ptr().add(base) as *const i32;
+        let rowp = rows.as_ptr() as *const i32;
+        let vrow_base = _mm256_loadu_si256(row_base.as_ptr() as *const __m256i);
+        let bias = _mm256_set1_epi32(i32::MIN);
+        let feat_mask = _mm256_set1_epi32(0x7FFF);
+        let one = _mm256_set1_epi32(1);
+        let mut idx = _mm256_setzero_si256();
+        for _ in 0..depth {
+            let vtw = _mm256_i32gather_epi32::<4>(tw, idx);
+            let vffl = _mm256_i32gather_epi32::<4>(ffl, idx);
+            let feat = _mm256_and_si256(vffl, feat_mask);
+            let left = _mm256_srli_epi32::<16>(vffl);
+            // branch_mask = ((ffl >> 15) & 1) ^ 1 — 0 for leaves.
+            let bm = _mm256_xor_si256(_mm256_and_si256(_mm256_srli_epi32::<15>(vffl), one), one);
+            let x = _mm256_i32gather_epi32::<4>(rowp, _mm256_add_epi32(vrow_base, feat));
+            // Unsigned x > tw via the sign-bias trick (AVX2 has only the
+            // signed 32-bit compare) — same predicate as the scalar walk.
+            let gt = _mm256_cmpgt_epi32(_mm256_xor_si256(x, bias), _mm256_xor_si256(vtw, bias));
+            idx = _mm256_add_epi32(left, _mm256_and_si256(gt, bm));
+        }
+        // Every lane is parked on its leaf; the payload rides in tw.
+        let payload = _mm256_i32gather_epi32::<4>(tw, idx);
+        _mm256_storeu_si256(leaves.as_mut_ptr() as *mut __m256i, payload);
+    }
+
+    /// AVX2 walk in the raw-f32 threshold domain. The descent predicate
+    /// is `_CMP_NLE_UQ` — the literal IEEE negation of `x <= t`
+    /// (unordered → true), so NaN routes right exactly like the scalar
+    /// `!(x <= t)` and the generated C.
+    ///
+    /// # Safety
+    ///
+    /// Same contract as [`walk_tile_ord`].
+    #[target_feature(enable = "avx2")]
+    pub(crate) unsafe fn walk_tile_f32(
+        trees: &PackedTrees,
+        t: usize,
+        rows: &[f32],
+        row_base: &[u32; TILE_ROWS],
+        leaves: &mut [u32; TILE_ROWS],
+    ) {
+        let base = trees.tree_offsets[t] as usize;
+        let depth = trees.tree_depths[t];
+        let tw = trees.tw_plane.as_ptr().add(base) as *const i32;
+        let ffl = trees.ffl_plane.as_ptr().add(base) as *const i32;
+        let vrow_base = _mm256_loadu_si256(row_base.as_ptr() as *const __m256i);
+        let feat_mask = _mm256_set1_epi32(0x7FFF);
+        let one = _mm256_set1_epi32(1);
+        let mut idx = _mm256_setzero_si256();
+        for _ in 0..depth {
+            let vtw = _mm256_i32gather_epi32::<4>(tw, idx);
+            let vffl = _mm256_i32gather_epi32::<4>(ffl, idx);
+            let feat = _mm256_and_si256(vffl, feat_mask);
+            let left = _mm256_srli_epi32::<16>(vffl);
+            let bm = _mm256_xor_si256(_mm256_and_si256(_mm256_srli_epi32::<15>(vffl), one), one);
+            let x = _mm256_i32gather_ps::<4>(rows.as_ptr(), _mm256_add_epi32(vrow_base, feat));
+            let gr = _mm256_cmp_ps::<_CMP_NLE_UQ>(x, _mm256_castsi256_ps(vtw));
+            idx = _mm256_add_epi32(left, _mm256_and_si256(_mm256_castps_si256(gr), bm));
+        }
+        let payload = _mm256_i32gather_epi32::<4>(tw, idx);
+        _mm256_storeu_si256(leaves.as_mut_ptr() as *mut __m256i, payload);
+    }
+
+    /// Length of the leading `x > words[i]` run of an ascending
+    /// QuickScorer condition stream (ordered-u32 domain), eight
+    /// conditions per compare. The stream is threshold-sorted, so the
+    /// "go right" conditions are a prefix; the driver ANDs exactly that
+    /// many false-leaf masks — the same masks, in the same order, as the
+    /// scalar early-exit scan.
+    ///
+    /// # Safety
+    ///
+    /// Caller must have verified AVX2 availability; `words` is an
+    /// ordinary slice and all loads stay within it.
+    #[target_feature(enable = "avx2")]
+    pub(crate) unsafe fn qs_false_prefix_ord(x: u32, words: &[u32]) -> usize {
+        let bias = _mm256_set1_epi32(i32::MIN);
+        let vx = _mm256_xor_si256(_mm256_set1_epi32(x as i32), bias);
+        let mut p = 0usize;
+        while p + 8 <= words.len() {
+            let vt = _mm256_loadu_si256(words.as_ptr().add(p) as *const __m256i);
+            let gt = _mm256_cmpgt_epi32(vx, _mm256_xor_si256(vt, bias));
+            // 8-bit mask, bit r set when lane r is still "go right".
+            let m = _mm256_movemask_ps(_mm256_castsi256_ps(gt)) as u32;
+            let run = (!m).trailing_zeros() as usize; // leading ones of m
+            p += run;
+            if run < 8 {
+                return p;
+            }
+        }
+        while p < words.len() && x > words[p] {
+            p += 1;
+        }
+        p
+    }
+
+    /// f32-domain variant of [`qs_false_prefix_ord`]: the compare is
+    /// `_CMP_NLE_UQ` — the literal `!(x <= t)` of the scalar scan.
+    ///
+    /// # Safety
+    ///
+    /// Same contract as [`qs_false_prefix_ord`].
+    #[target_feature(enable = "avx2")]
+    pub(crate) unsafe fn qs_false_prefix_f32(x: f32, words: &[u32]) -> usize {
+        let vx = _mm256_set1_ps(x);
+        let mut p = 0usize;
+        while p + 8 <= words.len() {
+            let vt =
+                _mm256_castsi256_ps(_mm256_loadu_si256(words.as_ptr().add(p) as *const __m256i));
+            let gr = _mm256_cmp_ps::<_CMP_NLE_UQ>(vx, vt);
+            let m = _mm256_movemask_ps(gr) as u32;
+            let run = (!m).trailing_zeros() as usize;
+            p += run;
+            if run < 8 {
+                return p;
+            }
+        }
+        while p < words.len() && !(x <= f32::from_bits(words[p])) {
+            p += 1;
+        }
+        p
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NEON kernels (aarch64). NEON has no gather instruction, so node and
+// row fetches stay scalar (lane-by-lane into a stack array) while the
+// compare + branch-mask + add descent runs on uint32x4_t half-tiles.
+// The comparisons are exactly the scalar walkers': vcgtq_u32 is the
+// native unsigned >, and vmvnq_u32(vcleq_f32(x, t)) is the literal
+// !(x <= t) including NaN routing.
+
+#[cfg(target_arch = "aarch64")]
+pub(crate) mod neon {
+    use super::super::batch::{PackedTrees, TILE_ROWS};
+    use std::arch::aarch64::*;
+
+    /// NEON predicated fixed-trip walk (ordered-u32 domain): two
+    /// `uint32x4_t` half-tiles of lane cursors; scalar gathers, vector
+    /// descent. `row_base` follows the same clamped-duplicate tail
+    /// convention as the AVX2 walker.
+    ///
+    /// # Safety
+    ///
+    /// Caller must have verified NEON via [`super::SimdBackend`]
+    /// detection; memory safety follows the scalar walkers' argument
+    /// (validated child/feature indices, driver-checked batch shape).
+    #[target_feature(enable = "neon")]
+    pub(crate) unsafe fn walk_tile_ord(
+        trees: &PackedTrees,
+        t: usize,
+        rows: &[u32],
+        row_base: &[u32; TILE_ROWS],
+        leaves: &mut [u32; TILE_ROWS],
+    ) {
+        let base = trees.tree_offsets[t] as usize;
+        let depth = trees.tree_depths[t];
+        let tw = trees.tw_plane.as_ptr().add(base);
+        let ffl = trees.ffl_plane.as_ptr().add(base);
+        let rp = rows.as_ptr();
+        let one = vdupq_n_u32(1);
+        for half in 0..2 {
+            let rb = &row_base[half * 4..half * 4 + 4];
+            let mut idx = vdupq_n_u32(0);
+            for _ in 0..depth {
+                let mut ia = [0u32; 4];
+                vst1q_u32(ia.as_mut_ptr(), idx);
+                let mut tww = [0u32; 4];
+                let mut fflw = [0u32; 4];
+                let mut xs = [0u32; 4];
+                for (l, &i) in ia.iter().enumerate() {
+                    tww[l] = *tw.add(i as usize);
+                    fflw[l] = *ffl.add(i as usize);
+                    xs[l] = *rp.add(rb[l] as usize + (fflw[l] & 0x7FFF) as usize);
+                }
+                let vtw = vld1q_u32(tww.as_ptr());
+                let vffl = vld1q_u32(fflw.as_ptr());
+                let vx = vld1q_u32(xs.as_ptr());
+                let left = vshrq_n_u32::<16>(vffl);
+                let bm = veorq_u32(vandq_u32(vshrq_n_u32::<15>(vffl), one), one);
+                let gt = vcgtq_u32(vx, vtw);
+                idx = vaddq_u32(left, vandq_u32(gt, bm));
+            }
+            let mut ia = [0u32; 4];
+            vst1q_u32(ia.as_mut_ptr(), idx);
+            for (l, &i) in ia.iter().enumerate() {
+                leaves[half * 4 + l] = *tw.add(i as usize);
+            }
+        }
+    }
+
+    /// NEON walk in the raw-f32 domain (`vmvnq_u32(vcleq_f32(..))` is
+    /// the literal `!(x <= t)`, NaN → go right, like the scalar walk).
+    ///
+    /// # Safety
+    ///
+    /// Same contract as [`walk_tile_ord`].
+    #[target_feature(enable = "neon")]
+    pub(crate) unsafe fn walk_tile_f32(
+        trees: &PackedTrees,
+        t: usize,
+        rows: &[f32],
+        row_base: &[u32; TILE_ROWS],
+        leaves: &mut [u32; TILE_ROWS],
+    ) {
+        let base = trees.tree_offsets[t] as usize;
+        let depth = trees.tree_depths[t];
+        let tw = trees.tw_plane.as_ptr().add(base);
+        let ffl = trees.ffl_plane.as_ptr().add(base);
+        let rp = rows.as_ptr();
+        let one = vdupq_n_u32(1);
+        for half in 0..2 {
+            let rb = &row_base[half * 4..half * 4 + 4];
+            let mut idx = vdupq_n_u32(0);
+            for _ in 0..depth {
+                let mut ia = [0u32; 4];
+                vst1q_u32(ia.as_mut_ptr(), idx);
+                let mut tww = [0u32; 4];
+                let mut fflw = [0u32; 4];
+                let mut xs = [0f32; 4];
+                for (l, &i) in ia.iter().enumerate() {
+                    tww[l] = *tw.add(i as usize);
+                    fflw[l] = *ffl.add(i as usize);
+                    xs[l] = *rp.add(rb[l] as usize + (fflw[l] & 0x7FFF) as usize);
+                }
+                let vtw = vld1q_u32(tww.as_ptr());
+                let vffl = vld1q_u32(fflw.as_ptr());
+                let vx = vld1q_f32(xs.as_ptr());
+                let left = vshrq_n_u32::<16>(vffl);
+                let bm = veorq_u32(vandq_u32(vshrq_n_u32::<15>(vffl), one), one);
+                let gr = vmvnq_u32(vcleq_f32(vx, vreinterpretq_f32_u32(vtw)));
+                idx = vaddq_u32(left, vandq_u32(gr, bm));
+            }
+            let mut ia = [0u32; 4];
+            vst1q_u32(ia.as_mut_ptr(), idx);
+            for (l, &i) in ia.iter().enumerate() {
+                leaves[half * 4 + l] = *tw.add(i as usize);
+            }
+        }
+    }
+
+    /// NEON QuickScorer false-prefix scan (ordered-u32 domain), four
+    /// conditions per compare; lane masks are packed via `vmovn_u32`
+    /// into one u64 (16 bits per lane) for the leading-run count.
+    ///
+    /// # Safety
+    ///
+    /// Caller must have verified NEON availability.
+    #[target_feature(enable = "neon")]
+    pub(crate) unsafe fn qs_false_prefix_ord(x: u32, words: &[u32]) -> usize {
+        let vx = vdupq_n_u32(x);
+        let mut p = 0usize;
+        while p + 4 <= words.len() {
+            let vt = vld1q_u32(words.as_ptr().add(p));
+            let gt = vcgtq_u32(vx, vt);
+            let packed = vget_lane_u64::<0>(vreinterpret_u64_u16(vmovn_u32(gt)));
+            let run = ((!packed).trailing_zeros() / 16) as usize;
+            p += run;
+            if run < 4 {
+                return p;
+            }
+        }
+        while p < words.len() && x > words[p] {
+            p += 1;
+        }
+        p
+    }
+
+    /// f32-domain variant of [`qs_false_prefix_ord`] (`!(x <= t)`).
+    ///
+    /// # Safety
+    ///
+    /// Same contract as [`qs_false_prefix_ord`].
+    #[target_feature(enable = "neon")]
+    pub(crate) unsafe fn qs_false_prefix_f32(x: f32, words: &[u32]) -> usize {
+        let vx = vdupq_n_f32(x);
+        let mut p = 0usize;
+        while p + 4 <= words.len() {
+            let vt = vreinterpretq_f32_u32(vld1q_u32(words.as_ptr().add(p)));
+            let gr = vmvnq_u32(vcleq_f32(vx, vt));
+            let packed = vget_lane_u64::<0>(vreinterpret_u64_u16(vmovn_u32(gr)));
+            let run = ((!packed).trailing_zeros() / 16) as usize;
+            p += run;
+            if run < 4 {
+                return p;
+            }
+        }
+        while p < words.len() && !(x <= f32::from_bits(words[p])) {
+            p += 1;
+        }
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_and_parse_roundtrip() {
+        assert_eq!(SimdBackend::all().len(), 3);
+        for b in SimdBackend::all() {
+            assert_eq!(SimdBackend::from_name(b.name()), Some(b));
+        }
+        assert_eq!(SimdBackend::from_name("avx512"), None);
+        assert_eq!(SimdBackend::default(), SimdBackend::Scalar);
+    }
+
+    #[test]
+    fn scalar_always_available_and_first() {
+        let avail = SimdBackend::available();
+        assert_eq!(avail[0], SimdBackend::Scalar);
+        assert!(SimdBackend::Scalar.is_available());
+        assert!(SimdBackend::best().is_available());
+        // Architecture sanity: a backend can only be available on its
+        // own architecture.
+        #[cfg(not(target_arch = "x86_64"))]
+        assert!(!SimdBackend::Avx2.is_available());
+        #[cfg(not(target_arch = "aarch64"))]
+        assert!(!SimdBackend::Neon.is_available());
+    }
+
+    #[test]
+    fn detected_features_match_availability() {
+        let feats = SimdBackend::detected_features();
+        assert_eq!(SimdBackend::Avx2.is_available(), feats.contains(&"avx2"));
+        assert_eq!(SimdBackend::Neon.is_available(), feats.contains(&"neon"));
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_qs_prefix_matches_scalar_scan() {
+        if !SimdBackend::Avx2.is_available() {
+            eprintln!("avx2 not available; skipping");
+            return;
+        }
+        let mut rng = crate::util::Rng::new(0x51D);
+        for len in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 64, 100] {
+            // Ascending stream like a real condition bucket.
+            let mut words: Vec<u32> = (0..len).map(|_| rng.next_u64() as u32 % 50_000).collect();
+            words.sort_unstable();
+            for probe in 0..40u32 {
+                let x = probe * 1_500;
+                let want = words.iter().take_while(|&&w| x > w).count();
+                // SAFETY: AVX2 availability checked above.
+                let got = unsafe { avx2::qs_false_prefix_ord(x, &words) };
+                assert_eq!(got, want, "len={len} x={x}");
+                let xf = x as f32 * 0.25 - 6_000.0;
+                let wantf =
+                    words.iter().take_while(|&&w| !(xf <= f32::from_bits(w))).count();
+                // SAFETY: AVX2 availability checked above.
+                let gotf = unsafe { avx2::qs_false_prefix_f32(xf, &words) };
+                assert_eq!(gotf, wantf, "f32 len={len} x={xf}");
+            }
+        }
+    }
+}

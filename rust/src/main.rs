@@ -15,7 +15,7 @@
 use intreeger::codegen::{self, Layout};
 use intreeger::coordinator::{self, InferenceServer, ServerConfig};
 use intreeger::data::{self, Dataset};
-use intreeger::inference::{self, Variant};
+use intreeger::inference::{self, SimdBackend, Variant, BACKEND_ENV};
 use intreeger::ir::Model;
 use intreeger::pipeline::{self, PipelineConfig};
 use intreeger::simarch::{self, Core};
@@ -91,6 +91,22 @@ fn variant_names() -> String {
     Variant::all().iter().map(|v| v.name()).collect::<Vec<_>>().join("|")
 }
 
+fn backend_names() -> String {
+    SimdBackend::all().iter().map(|b| b.name()).collect::<Vec<_>>().join("|")
+}
+
+/// `--backend NAME` pins the SIMD execution backend for everything this
+/// process compiles, by setting [`BACKEND_ENV`] (the same override
+/// operators use in deployment). Validated here so a typo fails fast
+/// instead of silently falling back.
+fn apply_backend_flag(args: &Args) {
+    if let Some(name) = args.get("backend") {
+        let b = SimdBackend::from_name(name)
+            .unwrap_or_else(|| panic!("unknown backend '{name}' (use {})", backend_names()));
+        std::env::set_var(BACKEND_ENV, b.name());
+    }
+}
+
 static COMMANDS: &[CommandSpec] = &[
     CommandSpec {
         name: "pipeline",
@@ -145,8 +161,8 @@ static COMMANDS: &[CommandSpec] = &[
     },
     CommandSpec {
         name: "inspect",
-        synopsis: || "--model model.json [--trees]".to_string(),
-        about: "model stats + per-tree QuickScorer eligibility",
+        synopsis: || format!("--model model.json [--trees] [--backend {}]", backend_names()),
+        about: "model stats, QuickScorer eligibility + SIMD backend calibration preview",
         run: cmd_inspect,
     },
     CommandSpec {
@@ -158,9 +174,11 @@ static COMMANDS: &[CommandSpec] = &[
     CommandSpec {
         name: "serve",
         synopsis: || {
-            "--model model.json | --pipeline DIR [--artifacts DIR] [--requests N] [--workers W] \
-             [--calibrate] [--dataset ...]"
-                .to_string()
+            format!(
+                "--model model.json | --pipeline DIR [--artifacts DIR] [--requests N] \
+                 [--workers W] [--calibrate] [--backend {}] [--dataset ...]",
+                backend_names()
+            )
         },
         about: "start the batching server (from a model or a pipeline bundle) and run a demo workload",
         run: cmd_serve,
@@ -412,6 +430,7 @@ fn cmd_simulate(args: &Args) {
 }
 
 fn cmd_serve(args: &Args) {
+    apply_backend_flag(args);
     let config = ServerConfig {
         n_workers: args.usize_or("workers", 1),
         auto_calibrate: args.flag("calibrate"),
@@ -460,6 +479,16 @@ fn cmd_serve(args: &Args) {
         "routes: scalar {} rows / xla {} rows; mean batch {:.1}; latency p50 {:.0} us p99 {:.0} us",
         snap.rows_scalar, snap.rows_xla, snap.mean_batch, snap.latency_p50_us, snap.latency_p99_us
     );
+    println!(
+        "execution: kernel {} on the {} backend (host SIMD: {})",
+        snap.kernel.as_deref().unwrap_or("?"),
+        snap.backend.as_deref().unwrap_or("?"),
+        if snap.detected_features.is_empty() {
+            "none".to_string()
+        } else {
+            snap.detected_features.join(", ")
+        }
+    );
     let _ = responses;
 }
 
@@ -467,10 +496,13 @@ fn cmd_tablei() {
     print!("{}", simarch::cores::table_i());
 }
 
-/// Model statistics with QuickScorer eligibility: shows *why* a model
-/// did or did not take the bitvector fast path.
+/// Model statistics with QuickScorer eligibility (shows *why* a model
+/// did or did not take the bitvector fast path) plus the host's SIMD
+/// features and the execution strategy calibration would pick for this
+/// model here — the per-machine half of a perf delta.
 fn cmd_inspect(args: &Args) {
     use intreeger::inference::QS_MAX_LEAVES;
+    apply_backend_flag(args);
     let model = load_model(args);
     let s = intreeger::ir::stats::stats(&model);
     println!("kind:            {:?}", model.kind);
@@ -496,6 +528,27 @@ fn cmd_inspect(args: &Args) {
             "                 fallback to the branchless walker: trees {:?}",
             s.qs_ineligible
         );
+    }
+    let feats = SimdBackend::detected_features();
+    println!(
+        "simd:            host features [{}]; backends available [{}]; default {}",
+        feats.join(", "),
+        SimdBackend::available().iter().map(|b| b.name()).collect::<Vec<_>>().join(", "),
+        SimdBackend::resolve().name()
+    );
+    if model.kind == intreeger::ir::ModelKind::RandomForest {
+        // Run the serving coordinator's actual startup calibration on a
+        // representative probe batch: the same timing that decides the
+        // execution strategy at `serve --calibrate` time.
+        let mut engine = inference::IntEngine::compile(&model);
+        let choice = coordinator::calibrate_execution(&mut engine, model.n_features, 256);
+        println!(
+            "calibration:     would pick {} @ {} for this model on this host (256-row probe)",
+            choice.kernel.name(),
+            choice.backend.name()
+        );
+    } else {
+        println!("calibration:     (serving calibration targets RF models; GBT uses the defaults)");
     }
     if args.flag("trees") {
         println!("per-tree:");

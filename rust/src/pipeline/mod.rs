@@ -36,7 +36,7 @@ pub use verify::ParityVerdict;
 
 use crate::codegen::{self, Layout};
 use crate::data::{csv, Dataset};
-use crate::inference::{Engine as _, GbtIntEngine, IntEngine, TraversalKernel, Variant};
+use crate::inference::{Engine as _, GbtIntEngine, IntEngine, SimdBackend, TraversalKernel, Variant};
 use crate::ir::{Model, ModelKind};
 use crate::quant;
 use crate::runtime::{PipelineManifest, PipelineModelEntry};
@@ -44,7 +44,9 @@ use crate::simarch::{self, Core};
 use crate::trees::{train_gbt, ForestParams, GbtParams, RandomForest};
 use crate::util::bench::{black_box, measure_opts, BenchOpts};
 use crate::util::Rng;
-use report::{BenchRow, CodegenSummary, DatasetSummary, ModelReport, QuantSummary, SimRow};
+use report::{
+    BenchRow, CodegenSummary, DatasetSummary, ExecutionSummary, ModelReport, QuantSummary, SimRow,
+};
 use std::path::{Path, PathBuf};
 
 /// Pipeline configuration (everything except the dataset itself).
@@ -190,6 +192,16 @@ pub fn run(ds: &Dataset, out_dir: &Path, cfg: &PipelineConfig) -> anyhow::Result
             train_rows: train.n_rows(),
             holdout_rows: holdout.n_rows(),
             source: cfg.source.clone(),
+        },
+        // The configured execution, not a timed winner — keeps the
+        // report byte-reproducible per host (see ExecutionSummary docs).
+        execution: ExecutionSummary {
+            kernel: TraversalKernel::default().name().to_string(),
+            backend: SimdBackend::resolve().name().to_string(),
+            detected_features: SimdBackend::detected_features()
+                .into_iter()
+                .map(str::to_string)
+                .collect(),
         },
         models,
     };

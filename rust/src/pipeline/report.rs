@@ -118,6 +118,24 @@ pub struct ModelReport {
     pub simarch: Vec<SimRow>,
 }
 
+/// The execution environment the pipeline's verification and bench
+/// stages ran under (additive in `intreeger-pipeline-report-v1`).
+///
+/// Deliberately records the *configured* strategy — the default
+/// traversal kernel and the resolved SIMD backend — not a timed
+/// calibration winner: report.json is bit-reproducible per host, and a
+/// timing race deciding a recorded field would break that (the serving
+/// coordinator's metrics snapshot carries the calibrated winner).
+#[derive(Clone, Debug)]
+pub struct ExecutionSummary {
+    /// Default traversal kernel the verification sweep centers on.
+    pub kernel: String,
+    /// SIMD backend the run resolved (env override or best detected).
+    pub backend: String,
+    /// CPU SIMD features detected on the host that produced the report.
+    pub detected_features: Vec<String>,
+}
+
 /// The full pipeline report.
 #[derive(Clone, Debug)]
 pub struct Report {
@@ -125,6 +143,8 @@ pub struct Report {
     pub seed: u64,
     /// Dataset shape and split.
     pub dataset: DatasetSummary,
+    /// Execution environment (kernel / SIMD backend / host features).
+    pub execution: ExecutionSummary,
     /// One entry per trained model kind.
     pub models: Vec<ModelReport>,
 }
@@ -152,6 +172,17 @@ impl Report {
                     ("source", s(&self.dataset.source)),
                 ]),
             ),
+            (
+                "execution",
+                obj(vec![
+                    ("kernel", s(&self.execution.kernel)),
+                    ("backend", s(&self.execution.backend)),
+                    (
+                        "detected_features",
+                        arr(self.execution.detected_features.iter().map(|f| s(f))),
+                    ),
+                ]),
+            ),
             ("models", arr(self.models.iter().map(model_json))),
         ])
     }
@@ -171,6 +202,16 @@ impl Report {
             self.dataset.features,
             self.dataset.classes,
             self.dataset.source
+        ));
+        md.push_str(&format!(
+            "- execution: kernel {} on the {} backend (host SIMD features: {})\n\n",
+            self.execution.kernel,
+            self.execution.backend,
+            if self.execution.detected_features.is_empty() {
+                "none".to_string()
+            } else {
+                self.execution.detected_features.join(", ")
+            }
         ));
         for m in &self.models {
             md.push_str(&model_markdown(m));
@@ -387,6 +428,11 @@ mod tests {
                 holdout_rows: 100,
                 source: "synthetic:shuttle".into(),
             },
+            execution: ExecutionSummary {
+                kernel: "branchless".into(),
+                backend: "avx2".into(),
+                detected_features: vec!["sse2".into(), "avx2".into()],
+            },
             models: vec![ModelReport {
                 kind: "rf".into(),
                 n_trees_param: 10,
@@ -431,6 +477,10 @@ mod tests {
         assert_eq!(models.len(), 1);
         assert_eq!(models[0].get("kind").and_then(Json::as_str), Some("rf"));
         assert!(models[0].get("parity").unwrap().get("argmax_identical").is_some());
+        let exec = v.get("execution").unwrap();
+        assert_eq!(exec.get("kernel").and_then(Json::as_str), Some("branchless"));
+        assert_eq!(exec.get("backend").and_then(Json::as_str), Some("avx2"));
+        assert_eq!(exec.get("detected_features").and_then(Json::as_arr).unwrap().len(), 2);
     }
 
     #[test]
@@ -441,6 +491,8 @@ mod tests {
         assert!(md.contains("Parity verdict: PASS"));
         assert!(md.contains("| accuracy (float reference) | 0.9700 |"));
         assert!(md.contains("branchless | 120.0"));
+        assert!(md.contains("execution: kernel branchless on the avx2 backend"));
+        assert!(md.contains("sse2, avx2"));
     }
 
     #[test]

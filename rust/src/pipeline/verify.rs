@@ -4,8 +4,9 @@
 //!
 //! For a Random Forest the holdout set is pushed through the f32
 //! reference engine and both integer engines (FlInt and InTreeger),
-//! per-row **and** batched under every [`TraversalKernel`], and the
-//! predictions must be argmax-identical everywhere. On top of the class
+//! per-row **and** batched under every [`TraversalKernel`] × available
+//! [`SimdBackend`], and the predictions must be argmax-identical
+//! everywhere. On top of the class
 //! identity, the fixed-point accumulators are compared per class against
 //! an exact `f64` re-accumulation of the leaf probabilities: the paper's
 //! §III-A analysis bounds the absolute error by `n/2^32`, and the
@@ -23,8 +24,8 @@
 
 use crate::data::Dataset;
 use crate::inference::{
-    compile_variant, Engine, FlIntEngine, FloatEngine, GbtIntEngine, IntEngine, TraversalKernel,
-    Variant,
+    compile_variant, Engine, FlIntEngine, FloatEngine, GbtIntEngine, IntEngine, SimdBackend,
+    TraversalKernel, Variant,
 };
 use crate::ir::{Model, ModelKind};
 use crate::quant::{self, TWO_32};
@@ -129,17 +130,21 @@ pub fn verify_rf(model: &Model, holdout: &Dataset) -> ParityVerdict {
         }
     }
 
-    // Batched sweep: every variant × kernel must reproduce the scalar
-    // float predictions element-wise. Compile each variant once —
-    // switching the kernel is a cheap knob on a compiled engine.
+    // Batched sweep: every variant × kernel × available SIMD backend
+    // must reproduce the scalar float predictions element-wise. Compile
+    // each variant once — switching the kernel/backend is a cheap knob
+    // on a compiled engine.
     let kernels: Vec<String> =
         TraversalKernel::all().iter().map(|k| k.name().to_string()).collect();
     for v in Variant::all() {
         let mut e = compile_variant(model, v);
         for kernel in TraversalKernel::all() {
             e.set_kernel(kernel);
-            let preds = e.predict_batch(&holdout.features);
-            mismatches += preds.iter().zip(&float_preds).filter(|(p, f)| p != f).count();
+            for &backend in SimdBackend::available() {
+                e.set_backend(backend);
+                let preds = e.predict_batch(&holdout.features);
+                mismatches += preds.iter().zip(&float_preds).filter(|(p, f)| p != f).count();
+            }
         }
     }
 
@@ -200,8 +205,11 @@ pub fn verify_gbt(model: &Model, holdout: &Dataset) -> ParityVerdict {
     for kernel in TraversalKernel::all() {
         kernels.push(kernel.name().to_string());
         ge.set_kernel(kernel);
-        let preds = ge.predict_batch(&holdout.features);
-        mismatches += preds.iter().zip(&float_preds).filter(|(p, f)| p != f).count();
+        for &backend in SimdBackend::available() {
+            ge.set_backend(backend);
+            let preds = ge.predict_batch(&holdout.features);
+            mismatches += preds.iter().zip(&float_preds).filter(|(p, f)| p != f).count();
+        }
     }
 
     let max_abs_error = per_class.iter().cloned().fold(0.0f64, f64::max);

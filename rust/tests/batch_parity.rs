@@ -1,12 +1,13 @@
-//! Batch-vs-scalar parity suite (ISSUE 1 + 2 + 3 acceptance): for every
-//! engine variant, both node layouts and **all three kernels** (branchy
-//! early-exit, predicated branchless fixed-trip, and the QuickScorer
-//! bitvector evaluation), the batch kernel must be **element-wise
-//! identical** to the per-row path — including ragged final tiles
-//! (batch sizes 1, R−1, R, R+1, and the exhaustive 1..=17 sweep) and a
-//! batch large enough to cross many tiles (1000). Probabilities are
-//! compared with `assert_eq` on the raw f32s: the invariant is
-//! bit-identity, not closeness.
+//! Batch-vs-scalar parity suite (ISSUE 1 + 2 + 3 + 5 acceptance): for
+//! every engine variant, both node layouts, **all three kernels**
+//! (branchy early-exit, predicated branchless fixed-trip, and the
+//! QuickScorer bitvector evaluation) and **every available SIMD
+//! backend** (scalar, plus AVX2 / NEON where the CPU feature was
+//! detected), the batch kernel must be **element-wise identical** to
+//! the per-row path — including ragged final tiles (batch sizes 1, R−1,
+//! R, R+1, and the exhaustive 1..=17 sweep) and a batch large enough to
+//! cross many tiles (1000). Probabilities are compared with `assert_eq`
+//! on the raw f32s: the invariant is bit-identity, not closeness.
 //!
 //! The randomized topology suite additionally sweeps hand-built models
 //! with trees of depth 0..=16 — single-leaf trees, stumps, a
@@ -17,8 +18,8 @@
 
 use intreeger::data::{esa_like, shuttle_like, synth, SynthSpec};
 use intreeger::inference::{
-    compile_variant_with, Engine, GbtIntEngine, IntEngine, NodeOrder, TraversalKernel, Variant,
-    TILE_ROWS,
+    compile_variant_with, Engine, GbtIntEngine, IntEngine, NodeOrder, SimdBackend,
+    TraversalKernel, Variant, BACKEND_ENV, TILE_ROWS,
 };
 use intreeger::ir::{Model, ModelKind, Node, Tree};
 use intreeger::trees::{train_gbt, ForestParams, GbtParams, RandomForest};
@@ -32,10 +33,10 @@ fn batch_sizes() -> [usize; 5] {
 }
 
 /// Assert batch == scalar bit-identically for a set of flat batches,
-/// across variants × layouts × kernels, with the integer variant's fixed
-/// accumulators included. Engines (and the fixed-point oracle, only
-/// needed for the integer variant) compile once per variant × layout,
-/// outside the batch/kernel loops.
+/// across variants × layouts × kernels × available SIMD backends, with
+/// the integer variant's fixed accumulators included. Engines (and the
+/// fixed-point oracle, only needed for the integer variant) compile once
+/// per variant × layout, outside the batch/kernel/backend loops.
 fn assert_parity(model: &Model, batches: &[&[f32]], tag0: &str) {
     let nf = model.n_features;
     for variant in Variant::all() {
@@ -44,41 +45,54 @@ fn assert_parity(model: &Model, batches: &[&[f32]], tag0: &str) {
             let fixed_oracle = (variant == Variant::IntTreeger)
                 .then(|| IntEngine::compile_with(model, order));
             for kernel in TraversalKernel::all() {
-                engine.set_kernel(kernel);
-                let tag = format!("{tag0}/{}/{}/{}", variant.name(), order.name(), kernel.name());
-                for &flat in batches {
-                    assert_eq!(flat.len() % nf, 0);
-                    let n = flat.len() / nf;
-                    let classes = engine.predict_batch(flat);
-                    let probas = engine.predict_proba_batch(flat);
-                    assert_eq!(classes.len(), n, "{tag}: class count");
-                    assert_eq!(probas.len(), n, "{tag}: proba count");
-                    for i in 0..n {
-                        let row = &flat[i * nf..(i + 1) * nf];
-                        assert_eq!(classes[i], engine.predict(row), "{tag}: class row {i} (n={n})");
-                        assert_eq!(
-                            probas[i],
-                            engine.predict_proba(row),
-                            "{tag}: proba row {i} (n={n}) not bit-identical"
-                        );
-                    }
-                    if let Some(oracle) = &fixed_oracle {
-                        let fixed = engine
-                            .predict_fixed_batch(flat)
-                            .expect("integer variant has fixed path");
+                for &backend in SimdBackend::available() {
+                    engine.set_kernel(kernel);
+                    engine.set_backend(backend);
+                    let tag = format!(
+                        "{tag0}/{}/{}/{}/{}",
+                        variant.name(),
+                        order.name(),
+                        kernel.name(),
+                        backend.name()
+                    );
+                    for &flat in batches {
+                        assert_eq!(flat.len() % nf, 0);
+                        let n = flat.len() / nf;
+                        let classes = engine.predict_batch(flat);
+                        let probas = engine.predict_proba_batch(flat);
+                        assert_eq!(classes.len(), n, "{tag}: class count");
+                        assert_eq!(probas.len(), n, "{tag}: proba count");
                         for i in 0..n {
                             let row = &flat[i * nf..(i + 1) * nf];
                             assert_eq!(
-                                fixed[i],
-                                oracle.predict_fixed(row),
-                                "{tag}: fixed row {i} (n={n})"
+                                classes[i],
+                                engine.predict(row),
+                                "{tag}: class row {i} (n={n})"
+                            );
+                            assert_eq!(
+                                probas[i],
+                                engine.predict_proba(row),
+                                "{tag}: proba row {i} (n={n}) not bit-identical"
                             );
                         }
-                    } else {
-                        assert!(
-                            engine.predict_fixed_batch(flat).is_none(),
-                            "{tag}: float-accumulating variant must not claim a fixed path"
-                        );
+                        if let Some(oracle) = &fixed_oracle {
+                            let fixed = engine
+                                .predict_fixed_batch(flat)
+                                .expect("integer variant has fixed path");
+                            for i in 0..n {
+                                let row = &flat[i * nf..(i + 1) * nf];
+                                assert_eq!(
+                                    fixed[i],
+                                    oracle.predict_fixed(row),
+                                    "{tag}: fixed row {i} (n={n})"
+                                );
+                            }
+                        } else {
+                            assert!(
+                                engine.predict_fixed_batch(flat).is_none(),
+                                "{tag}: float-accumulating variant must not claim a fixed path"
+                            );
+                        }
                     }
                 }
             }
@@ -212,7 +226,10 @@ fn chain_tree(rng: &mut Rng, depth: usize, nf: usize, nc: usize) -> Tree {
 }
 
 /// Rows for a hand-built model: random values plus rows that hit split
-/// thresholds exactly (the `<=` boundary).
+/// thresholds exactly (the `<=` boundary), plus NaN rows — NaN is out of
+/// the engines' data contract, but every kernel and backend must still
+/// route it identically to its own per-row path (the literal `!(x <= t)`
+/// negation the walkers, the SIMD compares and the generated C share).
 fn probe_rows(rng: &mut Rng, model: &Model, n_rows: usize) -> Vec<f32> {
     let nf = model.n_features;
     let thresholds: Vec<(u32, f32)> = model
@@ -231,6 +248,13 @@ fn probe_rows(rng: &mut Rng, model: &Model, n_rows: usize) -> Vec<f32> {
         if i % 3 == 0 && !thresholds.is_empty() {
             let (f, t) = thresholds[rng.below(thresholds.len())];
             row[f as usize] = t;
+        }
+        // Every seventh row carries a NaN (alternating sign bit — the
+        // ordered-u32 transform maps the two differently, and both must
+        // stay batch-vs-scalar consistent).
+        if i % 7 == 1 {
+            let f = rng.below(nf);
+            row[f] = if i % 14 == 1 { f32::NAN } else { -f32::NAN };
         }
         rows.extend_from_slice(&row);
     }
@@ -359,33 +383,71 @@ fn ragged_tail_parity_sizes_1_to_17() {
 }
 
 #[test]
-fn gbt_batch_parity_all_kernels() {
+fn gbt_batch_parity_all_kernels_and_backends() {
     let ds = shuttle_like(1500, 35);
     let model =
         train_gbt(&ds, &GbtParams { n_rounds: 5, max_depth: 4, ..Default::default() }, 35);
     let mut engine = GbtIntEngine::compile(&model);
     for kernel in TraversalKernel::all() {
         engine.set_kernel(kernel);
-        for n in batch_sizes() {
-            let n = n.min(ds.n_rows());
-            let flat = &ds.features[..n * ds.n_features];
-            let margins = engine.predict_fixed_batch(flat);
-            let classes = engine.predict_batch(flat);
-            for i in 0..n {
-                assert_eq!(
-                    margins[i],
-                    engine.predict_fixed(ds.row(i)),
-                    "{} gbt margins row {i} (n={n})",
-                    kernel.name()
-                );
-                assert_eq!(
-                    classes[i],
-                    engine.predict(ds.row(i)),
-                    "{} gbt class row {i} (n={n})",
-                    kernel.name()
-                );
+        for &backend in SimdBackend::available() {
+            engine.set_backend(backend);
+            let tag = format!("{}/{}", kernel.name(), backend.name());
+            for n in batch_sizes() {
+                let n = n.min(ds.n_rows());
+                let flat = &ds.features[..n * ds.n_features];
+                let margins = engine.predict_fixed_batch(flat);
+                let classes = engine.predict_batch(flat);
+                for i in 0..n {
+                    assert_eq!(
+                        margins[i],
+                        engine.predict_fixed(ds.row(i)),
+                        "{tag} gbt margins row {i} (n={n})"
+                    );
+                    assert_eq!(
+                        classes[i],
+                        engine.predict(ds.row(i)),
+                        "{tag} gbt class row {i} (n={n})"
+                    );
+                }
             }
         }
+    }
+}
+
+/// The override env actually pins the backend: with
+/// `INTREEGER_BACKEND=scalar` every engine compiled in the process gets
+/// the Scalar backend (even on AVX2/NEON hosts) and calibration sweeps
+/// collapse to that single candidate.
+#[test]
+fn backend_env_override_pins_scalar() {
+    // Restore (not remove) afterwards: the forced-scalar CI leg sets
+    // this variable for the whole test binary, and unconditionally
+    // deleting it would un-pin every test that starts after this one.
+    let prior = std::env::var(BACKEND_ENV).ok();
+    std::env::set_var(BACKEND_ENV, "scalar");
+    let ds = shuttle_like(300, 39);
+    let model = RandomForest::train(
+        &ds,
+        &ForestParams { n_trees: 3, max_depth: 4, ..Default::default() },
+        39,
+    );
+    let engine = compile_variant_with(&model, Variant::IntTreeger, NodeOrder::Depth);
+    let pinned = engine.backend();
+    let resolved = SimdBackend::resolve();
+    let sweep = SimdBackend::sweep();
+    match prior {
+        Some(v) => std::env::set_var(BACKEND_ENV, v),
+        None => std::env::remove_var(BACKEND_ENV),
+    }
+    assert_eq!(pinned, SimdBackend::Scalar, "engine default must honor the override");
+    assert_eq!(resolved, SimdBackend::Scalar);
+    assert_eq!(sweep, vec![SimdBackend::Scalar], "calibration sweep must collapse");
+    // And the pinned engine still answers correctly.
+    let flat = &ds.features[..16 * ds.n_features];
+    let classes = engine.predict_batch(flat);
+    for (i, &c) in classes.iter().enumerate() {
+        assert_eq!(c, engine.predict(ds.row(i)), "row {i}");
     }
 }
 

@@ -40,11 +40,13 @@ fn help_lists_every_subcommand_and_flag_enumeration() {
         "--trees",            // inspect per-tree table
         "--workers",          // serve worker pool
         "--calibrate",        // serve auto-calibration
+        "--backend",          // serve SIMD backend override
         "--pipeline",         // serve from a bundle
         "--target",           // pipeline label column
         "--holdout",          // pipeline split fraction
         "ifelse|native|native-predicated|quickscorer", // full layout list, generated
         "float|flint|intreeger",                       // full variant list, generated
+        "scalar|avx2|neon",                            // full backend list, generated
     ] {
         assert!(text.contains(needle), "missing '{needle}' in help:\n{text}");
     }
@@ -98,6 +100,13 @@ fn pipeline_cli_end_to_end_and_serve_from_bundle() {
     assert!(serve.status.success(), "serve failed: {}", String::from_utf8_lossy(&serve.stderr));
     let text = String::from_utf8_lossy(&serve.stdout);
     assert!(text.contains("served 50 requests"), "unexpected serve output:\n{text}");
+    assert!(
+        text.contains("execution: kernel"),
+        "serve must surface the execution strategy:\n{text}"
+    );
+    // report.json carries the additive execution object (schema v1).
+    assert!(report.contains("\"backend\":"), "missing execution backend in report");
+    assert!(report.contains("\"detected_features\":"), "missing detected_features in report");
 }
 
 /// `--target` selects a non-last label column by header name.
@@ -200,7 +209,7 @@ fn simulate_outputs_all_cores_and_variants() {
 }
 
 #[test]
-fn inspect_reports_quickscorer_eligibility() {
+fn inspect_reports_quickscorer_eligibility_and_simd() {
     let dir = tmpdir();
     let model = dir.join("inspect_model.json");
     let st = Command::new(bin())
@@ -222,6 +231,24 @@ fn inspect_reports_quickscorer_eligibility() {
     assert!(text.contains("3/3 trees eligible"), "depth-5 trees must all be eligible:\n{text}");
     assert!(text.contains("tree   0:"), "missing per-tree table:\n{text}");
     assert!(text.contains("qs-eligible"), "missing per-tree verdict:\n{text}");
+    // SIMD backend section: host features, available backends, and the
+    // calibration preview (this model is RF, so the probe runs).
+    assert!(text.contains("simd:"), "missing SIMD summary in:\n{text}");
+    assert!(text.contains("backends available [scalar"), "missing backend list in:\n{text}");
+    assert!(text.contains("calibration:     would pick"), "missing calibration preview:\n{text}");
+
+    // A forced backend flows through `inspect --backend` into the
+    // resolved default and the calibration sweep.
+    let out = Command::new(bin())
+        .args(["inspect", "--model"])
+        .arg(&model)
+        .args(["--backend", "scalar"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("default scalar"), "override must pin the default:\n{text}");
+    assert!(text.contains("@ scalar"), "calibration must collapse to scalar:\n{text}");
 }
 
 #[test]

@@ -63,7 +63,7 @@ fn golden_report_schema_and_parity_verdict() {
     let v = Json::parse(&text).expect("report.json parses");
     assert_eq!(
         obj_keys(&v),
-        ["dataset", "format", "models", "seed", "verified"],
+        ["dataset", "execution", "format", "models", "seed", "verified"],
         "top-level schema drifted"
     );
     assert_eq!(v.get("format").and_then(Json::as_str), Some(pipeline::REPORT_FORMAT));
@@ -75,6 +75,22 @@ fn golden_report_schema_and_parity_verdict() {
         ["classes", "features", "holdout_rows", "rows", "source", "train_rows"],
         "dataset schema drifted"
     );
+    // The additive execution object: configured kernel, resolved SIMD
+    // backend, and host features (values are host-dependent; the schema
+    // and executability are not).
+    let exec = v.get("execution").unwrap();
+    assert_eq!(
+        obj_keys(exec),
+        ["backend", "detected_features", "kernel"],
+        "execution schema drifted"
+    );
+    assert_eq!(exec.get("kernel").and_then(Json::as_str), Some("branchless"));
+    let backend = exec.get("backend").and_then(Json::as_str).unwrap();
+    let backend = intreeger::inference::SimdBackend::from_name(backend)
+        .unwrap_or_else(|| panic!("unknown backend '{backend}' in report"));
+    assert!(backend.is_available(), "reported backend must be executable on this host");
+    assert!(exec.get("detected_features").and_then(Json::as_arr).is_some());
+
     let d = v.get("dataset").unwrap();
     assert_eq!(d.get("rows").and_then(Json::as_usize), Some(500));
     assert_eq!(d.get("features").and_then(Json::as_usize), Some(5));
