@@ -17,18 +17,24 @@
 //!   delivers ≥ 1.3x rows/sec over scalar-backend branchless (rows
 //!   emitted only on hosts where AVX2 was detected; NEON analog on
 //!   aarch64).
+//! * ISSUE 6: at batch ≥ 4096 (integer variant, best backend), 2
+//!   intra-batch threads deliver ≥ 1.6x rows/sec over 1 thread (the
+//!   `scaling` section; cells emitted only on hosts with ≥ 2 logical
+//!   cores — single-core hosts record a 1-thread curve with no gate).
 //!
 //! Besides the human-readable table, every cell is appended to a
 //! machine-readable **`BENCH_batch.json`** at the repository root (path
 //! overridable via `INTREEGER_BENCH_JSON`) so the perf trajectory is
-//! tracked across PRs; schema 3 tags every row with its backend and
-//! records the host's `detected_features`, and the `"acceptance"` array
+//! tracked across PRs; schema 4 tags every row with its backend, records
+//! the host's `detected_features`, carries the intra-batch thread
+//! `scaling` curve (rows/sec, speedup vs 1 thread and efficiency =
+//! speedup/threads per swept thread count), and the `"acceptance"` array
 //! carries every speedup cell with its target and pass flag (CI asserts
-//! the section exists). Counts come from `BenchOpts::from_env()`
+//! the sections exist). Counts come from `BenchOpts::from_env()`
 //! (`INTREEGER_BENCH_WARMUP` / `INTREEGER_BENCH_REPS`); headline numbers
 //! are min-of-k. Set **`BENCH_SMOKE=1`** for the reduced-rep CI mode
 //! (tiny rep counts, two batch sizes, auxiliary sections skipped — the
-//! JSON schema and acceptance section are identical).
+//! JSON schema, scaling and acceptance sections are identical).
 
 use intreeger::data::{esa_like, shuttle_like};
 use intreeger::inference::{
@@ -62,6 +68,33 @@ impl Cell {
             ("per_item_ns_min", num(self.m.per_item_ns())),
             ("per_item_ns_median", num(self.m.per_item_ns_median())),
             ("rows_per_s", num(self.m.throughput_per_s())),
+        ])
+    }
+}
+
+/// One point of the intra-batch scaling curve (ISSUE 6): the integer
+/// serving path at a many-tile batch on the best backend, per swept
+/// thread count and kernel.
+struct ScalePoint {
+    kernel: String,
+    backend: String,
+    batch: usize,
+    threads: usize,
+    rows_per_s: f64,
+    speedup_vs_1t: f64,
+    efficiency: f64,
+}
+
+impl ScalePoint {
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("kernel", s(&self.kernel)),
+            ("backend", s(&self.backend)),
+            ("batch", num(self.batch as f64)),
+            ("threads", num(self.threads as f64)),
+            ("rows_per_s", num(self.rows_per_s)),
+            ("speedup_vs_1t", num(self.speedup_vs_1t)),
+            ("efficiency", num(self.efficiency)),
         ])
     }
 }
@@ -131,7 +164,7 @@ fn main() {
     let mut cells: Vec<Cell> = Vec::new();
     let mut accepts: Vec<Accept> = Vec::new();
 
-    let ds = shuttle_like(if smoke { 4_000 } else { 12_000 }, 7);
+    let ds = shuttle_like(if smoke { 5_000 } else { 12_000 }, 7);
     let model = RandomForest::train(
         &ds,
         &ForestParams { n_trees: 10, max_depth: 6, ..Default::default() },
@@ -332,6 +365,73 @@ fn main() {
         }
     }
 
+    // Intra-batch thread scaling (ISSUE 6): the serving hot path
+    // (`predict_fixed_batch`) at a many-tile batch on the best backend,
+    // per kernel, over the same thread counts startup calibration sweeps
+    // ([1, powers of two, all logical cores] — or a pinned
+    // INTREEGER_THREADS). Runs in smoke mode too: CI validates the
+    // section's schema on every push.
+    section("intra-batch thread scaling (integer serving path, best backend, batch 4096)");
+    let threads_sweep = intreeger::inference::parallel::sweep();
+    println!(
+        "logical cores detected: {}; thread counts swept: {threads_sweep:?}",
+        intreeger::inference::parallel::detected()
+    );
+    let mut scaling: Vec<ScalePoint> = Vec::new();
+    {
+        let batch = 4096usize.min(ds.n_rows());
+        let flat: Vec<f32> = ds.features[..batch * ds.n_features].to_vec();
+        let mut engine = IntEngine::compile(&model);
+        engine.set_backend(best);
+        for kernel in kernels {
+            engine.set_kernel(kernel);
+            let mut base_rows_per_s = 0.0f64;
+            for &threads in &threads_sweep {
+                engine.set_threads(threads);
+                let m = measure_opts(opts, batch as u64, || {
+                    let out = engine.predict_fixed_batch(&flat);
+                    black_box(out[0][0]);
+                });
+                let rows_per_s = m.throughput_per_s();
+                // Reference = the first swept count (1 thread unless an
+                // env pin collapsed the sweep).
+                if base_rows_per_s == 0.0 {
+                    base_rows_per_s = rows_per_s;
+                }
+                let speedup = rows_per_s / base_rows_per_s;
+                let efficiency = speedup / threads as f64;
+                println!(
+                    "{:<12} {:>2} thread(s): {:>12.0} rows/s  ({:.2}x vs 1t, efficiency {:.2})",
+                    kernel.name(),
+                    threads,
+                    rows_per_s,
+                    speedup,
+                    efficiency
+                );
+                scaling.push(ScalePoint {
+                    kernel: kernel.name().into(),
+                    backend: best.name().into(),
+                    batch,
+                    threads,
+                    rows_per_s,
+                    speedup_vs_1t: speedup,
+                    efficiency,
+                });
+                // The 2-thread gate only exists where the reference really
+                // was 1 thread and the host has a second core to scale to.
+                if threads == 2 && threads_sweep.first() == Some(&1) {
+                    accepts.push(Accept {
+                        section: "scaling",
+                        name: format!("int/{}/{}/batch{batch}/2t", kernel.name(), best.name()),
+                        speedup,
+                        target: 1.6,
+                    });
+                }
+            }
+            engine.set_threads(1);
+        }
+    }
+
     let by_section = |sec: &str| -> Vec<&Accept> {
         accepts.iter().filter(|a| a.section == sec).collect()
     };
@@ -351,12 +451,17 @@ fn main() {
         "acceptance: SIMD branchless vs scalar branchless (integer variants, batch >= 256, target >= 1.3x)",
         &by_section("simd_branchless_vs_scalar_branchless"),
     );
+    print_acceptance(
+        "acceptance: 2 intra-batch threads vs 1 (integer serving path, batch 4096, target >= 1.6x)",
+        &by_section("scaling"),
+    );
 
-    write_json(&cells, &accepts, &backends, opts, smoke);
+    write_json(&cells, &scaling, &accepts, &backends, opts, smoke);
 }
 
 fn write_json(
     cells: &[Cell],
+    scaling: &[ScalePoint],
     accepts: &[Accept],
     backends: &[SimdBackend],
     opts: BenchOpts,
@@ -367,7 +472,7 @@ fn write_json(
     });
     let doc = obj(vec![
         ("bench", s("batch_throughput")),
-        ("schema", num(3.0)),
+        ("schema", num(4.0)),
         ("note", s("min-of-k timings; regenerate with: cargo bench --bench batch_throughput")),
         (
             "detected_features",
@@ -383,13 +488,15 @@ fn write_json(
             ]),
         ),
         ("rows", arr(cells.iter().map(Cell::to_json))),
+        ("scaling", arr(scaling.iter().map(ScalePoint::to_json))),
         ("acceptance", arr(accepts.iter().map(Accept::to_json))),
     ]);
     match std::fs::write(&path, doc.to_string() + "\n") {
         Ok(()) => println!(
-            "\nwrote {} ({} cells, {} acceptance entries)",
+            "\nwrote {} ({} cells, {} scaling points, {} acceptance entries)",
             path,
             cells.len(),
+            scaling.len(),
             accepts.len()
         ),
         Err(e) => eprintln!("\ncould not write {path}: {e}"),

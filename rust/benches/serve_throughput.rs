@@ -2,7 +2,9 @@
 //! batch kernel) vs the AOT-compiled XLA/Pallas batched engine, the
 //! batch-size crossover the coordinator's router exploits, and
 //! end-to-end server throughput with dynamic batching across a sharded
-//! worker pool.
+//! worker pool — plus the ISSUE-6 question: at a **fixed core budget**,
+//! is it better to spend cores on worker shards (inter-batch
+//! parallelism), on the intra-batch tile scheduler, or on a mix?
 
 use intreeger::coordinator::{BatchPolicy, InferenceServer, ServerConfig};
 use intreeger::data::shuttle_like;
@@ -70,6 +72,58 @@ fn main() {
             snap.batch_latency_p99_us
         );
         black_box(responses.len());
+    }
+
+    // Fixed core budget B: B workers x 1 thread (pure sharding) vs
+    // 1 worker x B threads (pure intra-batch splitting) vs B/2 x 2
+    // (combined). Large max_batch so the tile scheduler has rows to
+    // split; the threads knob reaches the server's engines through the
+    // same INTREEGER_THREADS override operators use (engines resolve it
+    // at server start).
+    section("fixed core budget: worker shards vs intra-batch threads vs combined");
+    let budget = intreeger::inference::parallel::detected().clamp(1, 4);
+    println!(
+        "core budget {budget} (of {} logical cores)",
+        intreeger::inference::parallel::detected()
+    );
+    let mut configs: Vec<(String, usize, usize)> = vec![
+        (format!("{budget} workers x 1 thread"), budget, 1),
+        (format!("1 worker x {budget} threads"), 1, budget),
+    ];
+    if budget >= 4 {
+        configs.push((format!("{} workers x 2 threads", budget / 2), budget / 2, 2));
+    }
+    let prior_threads = std::env::var(intreeger::inference::THREADS_ENV).ok();
+    for (label, n_workers, threads) in configs {
+        std::env::set_var(intreeger::inference::THREADS_ENV, threads.to_string());
+        let server = InferenceServer::start(
+            &model,
+            None,
+            ServerConfig {
+                policy: BatchPolicy { max_batch: 256, max_wait: Duration::from_micros(300) },
+                n_workers,
+                ..Default::default()
+            },
+        );
+        let n = 6000usize;
+        let reqs: Vec<Vec<f32>> = (0..n).map(|i| ds.row(i % ds.n_rows()).to_vec()).collect();
+        let t0 = std::time::Instant::now();
+        let responses = server.infer_many(reqs);
+        let wall = t0.elapsed().as_secs_f64();
+        let snap = server.metrics();
+        println!(
+            "{label:<24} {:>8.0} req/s  p50 {:>6.0} us  p99 {:>7.0} us  (mean batch {:.1}, batch service p99 {:.0} us)",
+            n as f64 / wall,
+            snap.latency_p50_us,
+            snap.latency_p99_us,
+            snap.mean_batch,
+            snap.batch_latency_p99_us
+        );
+        black_box(responses.len());
+    }
+    match prior_threads {
+        Some(v) => std::env::set_var(intreeger::inference::THREADS_ENV, v),
+        None => std::env::remove_var(intreeger::inference::THREADS_ENV),
     }
 
     if !artifacts_available(&dir) {

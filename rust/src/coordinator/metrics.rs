@@ -34,10 +34,10 @@ pub struct Metrics {
     /// batch rather than per request.
     batch_latency_us: Mutex<Histogram>,
     /// The execution strategy serving the scalar route — (traversal
-    /// kernel, SIMD backend), recorded once at server startup (the
-    /// calibrated winner, or the compile-time defaults). `None` until a
-    /// server records it.
-    execution: Mutex<Option<(String, String)>>,
+    /// kernel, SIMD backend, intra-batch thread count), recorded once at
+    /// server startup (the calibrated winner, or the compile-time
+    /// defaults). `None` until a server records it.
+    execution: Mutex<Option<(String, String, usize)>>,
 }
 
 /// Exact histogram for small integer values (batch sizes). Unlike the
@@ -132,6 +132,8 @@ pub struct MetricsSnapshot {
     pub kernel: Option<String>,
     /// SIMD execution backend serving the scalar route.
     pub backend: Option<String>,
+    /// Intra-batch thread count serving the scalar route.
+    pub threads: Option<usize>,
     /// CPU SIMD features detected on this host (computed at snapshot
     /// time; explains *why* the backend was picked).
     pub detected_features: Vec<&'static str>,
@@ -155,9 +157,10 @@ impl Metrics {
 
     /// Record the execution strategy serving the scalar route (called
     /// once at server startup with the calibrated — or default —
-    /// traversal kernel and SIMD backend names).
-    pub fn record_execution(&self, kernel: &str, backend: &str) {
-        *self.execution.lock().unwrap() = Some((kernel.to_string(), backend.to_string()));
+    /// traversal kernel, SIMD backend, and intra-batch thread count).
+    pub fn record_execution(&self, kernel: &str, backend: &str, threads: usize) {
+        *self.execution.lock().unwrap() =
+            Some((kernel.to_string(), backend.to_string(), threads));
     }
 
     /// Record one flushed batch (size, route, and why it flushed).
@@ -183,9 +186,9 @@ impl Metrics {
         let sizes = self.batch_sizes.lock().unwrap();
         let blat = self.batch_latency_us.lock().unwrap();
         let execution = self.execution.lock().unwrap().clone();
-        let (kernel, backend) = match execution {
-            Some((k, b)) => (Some(k), Some(b)),
-            None => (None, None),
+        let (kernel, backend, threads) = match execution {
+            Some((k, b, t)) => (Some(k), Some(b), Some(t)),
+            None => (None, None, None),
         };
         MetricsSnapshot {
             requests: self.requests.load(Ordering::Relaxed),
@@ -208,6 +211,7 @@ impl Metrics {
             batch_latency_p99_us: blat.quantile(0.99),
             kernel,
             backend,
+            threads,
             detected_features: crate::inference::SimdBackend::detected_features(),
         }
     }
@@ -254,10 +258,12 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.kernel, None);
         assert_eq!(s.backend, None);
-        m.record_execution("branchless", "avx2");
+        assert_eq!(s.threads, None);
+        m.record_execution("branchless", "avx2", 4);
         let s = m.snapshot();
         assert_eq!(s.kernel.as_deref(), Some("branchless"));
         assert_eq!(s.backend.as_deref(), Some("avx2"));
+        assert_eq!(s.threads, Some(4));
         // detected_features reflects this host's CPU, matching the simd
         // module's availability report.
         assert_eq!(

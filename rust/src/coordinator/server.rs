@@ -145,6 +145,7 @@ impl InferenceServer {
             metrics.record_execution(
                 scalar_engine.kernel().name(),
                 scalar_engine.backend().name(),
+                scalar_engine.threads(),
             );
         }
         let scalar = Arc::new(scalar_engine);
@@ -281,7 +282,9 @@ pub struct ExecutionChoice {
     pub kernel: TraversalKernel,
     /// Winning SIMD execution backend.
     pub backend: SimdBackend,
-    /// Min-of-k probe time per `kernel@backend` candidate, in seconds
+    /// Winning intra-batch thread count.
+    pub threads: usize,
+    /// Min-of-k probe time per `kernel@backend@Nt` candidate, in seconds
     /// (candidate name, time) — the evidence behind the pick.
     pub timings: Vec<(String, f64)>,
 }
@@ -290,9 +293,12 @@ pub struct ExecutionChoice {
 /// traversal kernel (branchy early-exit vs predicated branchless
 /// fixed-trip vs QuickScorer bitvector) × SIMD backend
 /// ([`SimdBackend::sweep`]: every detected backend, or just the forced
-/// one when `INTREEGER_BACKEND` pins it) — for this model's tree shapes
-/// on this host. Leaves the winner set on `engine` and returns the full
-/// choice. Uses min-of-k timing on a full-policy batch of
+/// one when `INTREEGER_BACKEND` pins it) × intra-batch thread count
+/// ([`parallel::sweep`](crate::inference::parallel::sweep): 1, powers of
+/// two, and the detected core count, or just the forced one when
+/// `INTREEGER_THREADS` pins it) — for this model's tree shapes on this
+/// host. Leaves the winner set on `engine` and returns the full choice.
+/// Uses min-of-k timing on a full-policy batch of
 /// threshold-representative probe rows. Also used by the CLI `inspect`
 /// command to explain per-machine performance deltas.
 pub fn calibrate_execution(
@@ -303,41 +309,50 @@ pub fn calibrate_execution(
     use crate::inference::Engine as _;
     let b = batch.max(crate::inference::TILE_ROWS);
     let rows = calibration_rows(engine, n_features, b);
-    let mut best = (f64::INFINITY, TraversalKernel::default(), SimdBackend::Scalar);
+    let mut best = (f64::INFINITY, TraversalKernel::default(), SimdBackend::Scalar, 1usize);
     let mut timings: Vec<(String, f64)> = Vec::new();
-    for (bi, &backend) in SimdBackend::sweep().iter().enumerate() {
-        engine.set_backend(backend);
-        for kernel in TraversalKernel::all() {
-            // The branchy walk ignores the backend (inherently
-            // divergent, always scalar); timing it once is enough.
-            if kernel == TraversalKernel::Branchy && bi > 0 {
-                continue;
-            }
-            engine.set_kernel(kernel);
-            std::hint::black_box(engine.predict_fixed_batch(&rows)); // warmup
-            let mut t_min = f64::INFINITY;
-            for _ in 0..3 {
-                let t0 = Instant::now();
-                std::hint::black_box(engine.predict_fixed_batch(&rows));
-                t_min = t_min.min(t0.elapsed().as_secs_f64());
-            }
-            timings.push((format!("{}@{}", kernel.name(), backend.name()), t_min));
-            if t_min < best.0 {
-                best = (t_min, kernel, backend);
+    for &threads in &crate::inference::parallel::sweep() {
+        engine.set_threads(threads);
+        for (bi, &backend) in SimdBackend::sweep().iter().enumerate() {
+            engine.set_backend(backend);
+            for kernel in TraversalKernel::all() {
+                // The branchy walk ignores the backend (inherently
+                // divergent, always scalar); timing it once per thread
+                // count is enough — it still scales across row chunks.
+                if kernel == TraversalKernel::Branchy && bi > 0 {
+                    continue;
+                }
+                engine.set_kernel(kernel);
+                std::hint::black_box(engine.predict_fixed_batch(&rows)); // warmup
+                let mut t_min = f64::INFINITY;
+                for _ in 0..3 {
+                    let t0 = Instant::now();
+                    std::hint::black_box(engine.predict_fixed_batch(&rows));
+                    t_min = t_min.min(t0.elapsed().as_secs_f64());
+                }
+                timings.push((
+                    format!("{}@{}@{}t", kernel.name(), backend.name(), threads),
+                    t_min,
+                ));
+                if t_min < best.0 {
+                    best = (t_min, kernel, backend, threads);
+                }
             }
         }
     }
     engine.set_kernel(best.1);
     engine.set_backend(best.2);
+    engine.set_threads(best.3);
     let report: Vec<String> =
         timings.iter().map(|(name, t)| format!("{name} {:.0} us", t * 1e6)).collect();
     eprintln!(
-        "intreeger-server: auto-calibration picked {}@{} per {b}-batch ({})",
+        "intreeger-server: auto-calibration picked {}@{}@{}t per {b}-batch ({})",
         best.1.name(),
         best.2.name(),
+        best.3,
         report.join(", ")
     );
-    ExecutionChoice { kernel: best.1, backend: best.2, timings }
+    ExecutionChoice { kernel: best.1, backend: best.2, threads: best.3, timings }
 }
 
 /// Startup micro-benchmark: keep the XLA engine only if it beats the
@@ -512,6 +527,8 @@ mod tests {
             SimdBackend::from_name(&backend).unwrap().is_available(),
             "recorded backend {backend} must be executable"
         );
+        let threads = snap.threads.expect("thread count recorded at startup");
+        assert!((1..=crate::inference::parallel::detected()).contains(&threads));
     }
 
     #[test]
@@ -660,11 +677,16 @@ mod tests {
         assert!(TraversalKernel::all().iter().any(|k| k.name() == kernel), "{kernel}");
         let backend = snap.backend.expect("calibrated backend recorded");
         assert!(SimdBackend::from_name(&backend).unwrap().is_available(), "{backend}");
+        let threads = snap.threads.expect("calibrated thread count recorded");
+        assert!(
+            (1..=crate::inference::parallel::detected()).contains(&threads),
+            "{threads} threads"
+        );
     }
 
-    /// The calibration helper itself: sweeps kernel × available backend,
-    /// returns timings for every candidate, and leaves the winner set on
-    /// the engine.
+    /// The calibration helper itself: sweeps kernel × available backend
+    /// × thread count, returns timings for every candidate, and leaves
+    /// the winner set on the engine.
     #[test]
     fn calibrate_execution_sets_winner_and_reports_timings() {
         use crate::inference::Engine as _;
@@ -673,13 +695,22 @@ mod tests {
         let choice = calibrate_execution(&mut engine, m.n_features, 64);
         assert_eq!(engine.kernel(), choice.kernel);
         assert_eq!(engine.backend(), choice.backend);
+        assert_eq!(engine.threads(), choice.threads);
         assert!(choice.backend.is_available());
-        // branchy once + (branchless + quickscorer) per backend.
+        assert!((1..=crate::inference::parallel::detected()).contains(&choice.threads));
+        // Per thread count: branchy once + (branchless + quickscorer)
+        // per backend.
         let n_backends = SimdBackend::sweep().len();
-        assert_eq!(choice.timings.len(), 1 + 2 * n_backends);
+        let n_threads = crate::inference::parallel::sweep().len();
+        assert_eq!(choice.timings.len(), n_threads * (1 + 2 * n_backends));
         assert!(choice.timings.iter().all(|(_, t)| *t > 0.0));
         // The winner was one of the timed candidates.
-        let winner = format!("{}@{}", choice.kernel.name(), choice.backend.name());
+        let winner = format!(
+            "{}@{}@{}t",
+            choice.kernel.name(),
+            choice.backend.name(),
+            choice.threads
+        );
         assert!(
             choice.timings.iter().any(|(n, _)| *n == winner),
             "winner {winner} missing from timings {:?}",

@@ -51,6 +51,17 @@
 //! performance knob: every one is bit-identical (the parity suite
 //! sweeps kernel × backend).
 //!
+//! ## Intra-batch threads ([`super::parallel`])
+//!
+//! A third orthogonal knob: [`accumulate_batch`] splits one batch across
+//! a work-stealing pool — tile-aligned row ranges for the walker
+//! kernels (each task owns a disjoint accumulator slice), block ×
+//! row-range tasks plus an ordered payload fold for QuickScorer (see
+//! [`super::parallel`] for the task shapes and the determinism
+//! argument). Every worker runs the dispatched kernel × backend on its
+//! tasks, and results stay bit-identical at any thread count because no
+//! row's accumulation sequence ever changes.
+//!
 //! ## Parity invariant (load-bearing — the parity suite enforces it)
 //!
 //! For every engine variant and **every kernel**, the batched results
@@ -80,6 +91,7 @@
 //! interior-mutability hazard on the `Sync` engines.
 
 use super::compiled::{CompiledForest, Node8};
+use super::parallel;
 use super::quickscorer::{accumulate_qs, QsBlock, QsPlan};
 use super::simd::SimdBackend;
 use crate::flint::ordered_u32;
@@ -179,7 +191,9 @@ pub(crate) fn with_ordered_batch<R>(rows: &[f32], f: impl FnOnce(&[u32]) -> R) -
 /// monomorphizes over this, replacing the near-identical
 /// `walk_tile_ord`/`walk_tile_f32` pair PR 1 carried.
 pub(crate) trait Domain {
-    type Elem: Copy;
+    /// Row element type — `Send + Sync` so batches can be shared
+    /// read-only across the scheduler's workers.
+    type Elem: Copy + Send + Sync;
     /// The negation of the IR's `<=`-goes-left split, i.e. exactly
     /// "take the right child".
     fn go_right(x: Self::Elem, tw: u32) -> bool;
@@ -564,7 +578,11 @@ pub(crate) fn walk_tile_predicated<D: Domain>(
 /// one, so internal callers always pass `Some`). `backend` selects the
 /// SIMD execution of the branchless walk and the QuickScorer scan; the
 /// branchy kernel is inherently divergent (per-lane early exit) and
-/// always runs scalar.
+/// always runs scalar. `threads > 1` runs the batch on the
+/// work-stealing pool ([`super::parallel`]): tile-aligned row-range
+/// tasks, each owning a disjoint slice of `acc`, so every row's
+/// accumulation sequence — and therefore every output bit — is
+/// unchanged from the single-thread walk.
 #[allow(clippy::too_many_arguments)] // internal monomorphized driver; a param struct would obscure the hot path
 pub(crate) fn accumulate_batch<D: Domain, T>(
     trees: &PackedTrees,
@@ -575,9 +593,10 @@ pub(crate) fn accumulate_batch<D: Domain, T>(
     leaf_table: &[T],
     kernel: TraversalKernel,
     backend: SimdBackend,
+    threads: usize,
     acc: &mut [T],
 ) where
-    T: Copy + std::ops::AddAssign<T>,
+    T: Copy + std::ops::AddAssign<T> + Send + Sync,
 {
     assert_eq!(acc.len(), n_rows * n_classes);
     assert!(n_rows * trees.stride <= rows.len());
@@ -597,38 +616,64 @@ pub(crate) fn accumulate_batch<D: Domain, T>(
     }
     if kernel == TraversalKernel::QuickScorer {
         let plan = qs.expect("QuickScorer kernel requires a compiled QsPlan");
-        accumulate_qs::<D, T>(plan, trees, rows, n_rows, n_classes, leaf_table, backend, acc);
+        accumulate_qs::<D, T>(
+            plan, trees, rows, n_rows, n_classes, leaf_table, backend, threads, acc,
+        );
         return;
     }
     let n_trees = trees.tree_offsets.len() - 1;
-    let mut leaves = [0u32; TILE_ROWS];
-    let mut tile_start = 0;
-    while tile_start < n_rows {
-        let tile_rows = TILE_ROWS.min(n_rows - tile_start);
-        // Tree-independent; computed once per tile, not once per tree.
-        let row_base = row_base_lanes(trees.stride, tile_start, tile_rows);
-        for t in 0..n_trees {
-            if kernel == TraversalKernel::Branchy {
-                walk_tile_branchy::<D>(trees, t, rows, tile_start, tile_rows, &mut leaves);
-            } else {
-                // Branchless: backend-dispatched predicated walk (the
-                // ragged tail stays on the selected backend via the
-                // duplicated-lane convention; see the walkers).
-                walk_tile_predicated::<D>(
-                    trees, t, rows, tile_start, tile_rows, &row_base, backend, &mut leaves,
-                );
-            }
-            for (r, &p) in leaves[..tile_rows].iter().enumerate() {
-                let leaf = &leaf_table[p as usize * n_classes..(p as usize + 1) * n_classes];
-                let row_acc =
-                    &mut acc[(tile_start + r) * n_classes..(tile_start + r + 1) * n_classes];
-                for (a, &v) in row_acc.iter_mut().zip(leaf) {
-                    *a += v;
+    // One task body shared by the sequential and parallel paths: walk
+    // rows `[lo, hi)` through every tree in ascending order,
+    // accumulating into `chunk_acc` (that range's slice of `acc`). The
+    // row split never touches a row's per-tree accumulation sequence,
+    // which is what float rounding and the parity invariant depend on.
+    let walk_range = |lo: usize, hi: usize, chunk_acc: &mut [T]| {
+        let mut leaves = [0u32; TILE_ROWS];
+        let mut tile_start = lo;
+        while tile_start < hi {
+            let tile_rows = TILE_ROWS.min(hi - tile_start);
+            // Tree-independent; computed once per tile, not once per tree.
+            let row_base = row_base_lanes(trees.stride, tile_start, tile_rows);
+            for t in 0..n_trees {
+                if kernel == TraversalKernel::Branchy {
+                    walk_tile_branchy::<D>(trees, t, rows, tile_start, tile_rows, &mut leaves);
+                } else {
+                    // Branchless: backend-dispatched predicated walk (the
+                    // ragged tail stays on the selected backend via the
+                    // duplicated-lane convention; see the walkers).
+                    walk_tile_predicated::<D>(
+                        trees, t, rows, tile_start, tile_rows, &row_base, backend, &mut leaves,
+                    );
+                }
+                for (r, &p) in leaves[..tile_rows].iter().enumerate() {
+                    let leaf = &leaf_table[p as usize * n_classes..(p as usize + 1) * n_classes];
+                    let row_acc = &mut chunk_acc[(tile_start + r - lo) * n_classes
+                        ..(tile_start + r - lo + 1) * n_classes];
+                    for (a, &v) in row_acc.iter_mut().zip(leaf) {
+                        *a += v;
+                    }
                 }
             }
+            tile_start += tile_rows;
         }
-        tile_start += tile_rows;
+    };
+    if threads <= 1 {
+        walk_range(0, n_rows, acc);
+        return;
     }
+    // Row-range tasks over the work-stealing pool. Chunk boundaries are
+    // tile-aligned ([`parallel::tile_chunks`]), so the duplicated-lane
+    // ragged tail fires only on the true final tile of the batch —
+    // exactly where the sequential walk runs it.
+    let chunks = parallel::tile_chunks(n_rows, TILE_ROWS, threads);
+    let slab = parallel::SharedSlab::new(acc);
+    parallel::run_tasks(threads, chunks.len(), |i| {
+        let (lo, hi) = chunks[i];
+        // SAFETY: the chunks partition `0..n_rows` into disjoint row
+        // ranges, so no two tasks' accumulator slices overlap.
+        let chunk_acc = unsafe { slab.slice_mut(lo * n_classes, (hi - lo) * n_classes) };
+        walk_range(lo, hi, chunk_acc);
+    });
 }
 
 // ---------------------------------------------------------------------------
@@ -679,22 +724,24 @@ pub fn float_proba_batch(f: &CompiledForest, rows: &[f32]) -> Vec<f32> {
     float_proba_batch_with(f, rows, TraversalKernel::default())
 }
 
-/// [`float_proba_batch`] with an explicit kernel (backend resolved from
-/// the environment / host detection).
+/// [`float_proba_batch`] with an explicit kernel (backend and thread
+/// count resolved from the environment / host detection).
 pub fn float_proba_batch_with(
     f: &CompiledForest,
     rows: &[f32],
     kernel: TraversalKernel,
 ) -> Vec<f32> {
-    float_proba_batch_exec(f, rows, kernel, SimdBackend::resolve())
+    float_proba_batch_exec(f, rows, kernel, SimdBackend::resolve(), parallel::resolve())
 }
 
-/// [`float_proba_batch`] with an explicit kernel and SIMD backend.
+/// [`float_proba_batch`] with an explicit kernel, SIMD backend, and
+/// intra-batch thread count (results are bit-identical at any count).
 pub fn float_proba_batch_exec(
     f: &CompiledForest,
     rows: &[f32],
     kernel: TraversalKernel,
     backend: SimdBackend,
+    threads: usize,
 ) -> Vec<f32> {
     let n_rows = batch_rows(f, rows.len());
     let c = f.n_classes;
@@ -708,6 +755,7 @@ pub fn float_proba_batch_exec(
         &f.leaf_f32,
         kernel,
         backend,
+        threads,
         &mut acc,
     );
     let inv = 1.0 / f.n_trees as f32;
@@ -724,22 +772,24 @@ pub fn flint_proba_batch(f: &CompiledForest, rows: &[f32]) -> Vec<f32> {
     flint_proba_batch_with(f, rows, TraversalKernel::default())
 }
 
-/// [`flint_proba_batch`] with an explicit kernel (backend resolved from
-/// the environment / host detection).
+/// [`flint_proba_batch`] with an explicit kernel (backend and thread
+/// count resolved from the environment / host detection).
 pub fn flint_proba_batch_with(
     f: &CompiledForest,
     rows: &[f32],
     kernel: TraversalKernel,
 ) -> Vec<f32> {
-    flint_proba_batch_exec(f, rows, kernel, SimdBackend::resolve())
+    flint_proba_batch_exec(f, rows, kernel, SimdBackend::resolve(), parallel::resolve())
 }
 
-/// [`flint_proba_batch`] with an explicit kernel and SIMD backend.
+/// [`flint_proba_batch`] with an explicit kernel, SIMD backend, and
+/// intra-batch thread count (results are bit-identical at any count).
 pub fn flint_proba_batch_exec(
     f: &CompiledForest,
     rows: &[f32],
     kernel: TraversalKernel,
     backend: SimdBackend,
+    threads: usize,
 ) -> Vec<f32> {
     let n_rows = batch_rows(f, rows.len());
     let c = f.n_classes;
@@ -754,6 +804,7 @@ pub fn flint_proba_batch_exec(
             &f.leaf_f32,
             kernel,
             backend,
+            threads,
             &mut acc,
         );
         let inv = 1.0 / f.n_trees as f32;
@@ -774,18 +825,20 @@ pub fn int_fixed_batch(f: &CompiledForest, rows: &[f32]) -> Vec<u32> {
     int_fixed_batch_with(f, rows, TraversalKernel::default())
 }
 
-/// [`int_fixed_batch`] with an explicit kernel (backend resolved from
-/// the environment / host detection).
+/// [`int_fixed_batch`] with an explicit kernel (backend and thread
+/// count resolved from the environment / host detection).
 pub fn int_fixed_batch_with(f: &CompiledForest, rows: &[f32], kernel: TraversalKernel) -> Vec<u32> {
-    int_fixed_batch_exec(f, rows, kernel, SimdBackend::resolve())
+    int_fixed_batch_exec(f, rows, kernel, SimdBackend::resolve(), parallel::resolve())
 }
 
-/// [`int_fixed_batch`] with an explicit kernel and SIMD backend.
+/// [`int_fixed_batch`] with an explicit kernel, SIMD backend, and
+/// intra-batch thread count (results are bit-identical at any count).
 pub fn int_fixed_batch_exec(
     f: &CompiledForest,
     rows: &[f32],
     kernel: TraversalKernel,
     backend: SimdBackend,
+    threads: usize,
 ) -> Vec<u32> {
     let n_rows = batch_rows(f, rows.len());
     let c = f.n_classes;
@@ -800,6 +853,7 @@ pub fn int_fixed_batch_exec(
             &f.leaf_u32,
             kernel,
             backend,
+            threads,
             &mut acc,
         );
         acc
@@ -888,20 +942,24 @@ mod tests {
             assert_eq!(flint_proba_batch(&f, rows), flint_proba_batch_with(&f, rows, kernel));
             assert_eq!(int_fixed_batch(&f, rows), int_fixed_batch_with(&f, rows, kernel));
             for &backend in SimdBackend::available() {
-                assert_eq!(
-                    float_proba_batch(&f, rows),
-                    float_proba_batch_exec(&f, rows, kernel, backend),
-                    "{}/{}",
-                    kernel.name(),
-                    backend.name()
-                );
-                assert_eq!(
-                    int_fixed_batch(&f, rows),
-                    int_fixed_batch_exec(&f, rows, kernel, backend),
-                    "{}/{}",
-                    kernel.name(),
-                    backend.name()
-                );
+                for threads in [1usize, 3] {
+                    assert_eq!(
+                        float_proba_batch(&f, rows),
+                        float_proba_batch_exec(&f, rows, kernel, backend, threads),
+                        "{}/{}/{}t",
+                        kernel.name(),
+                        backend.name(),
+                        threads
+                    );
+                    assert_eq!(
+                        int_fixed_batch(&f, rows),
+                        int_fixed_batch_exec(&f, rows, kernel, backend, threads),
+                        "{}/{}/{}t",
+                        kernel.name(),
+                        backend.name(),
+                        threads
+                    );
+                }
             }
         }
     }

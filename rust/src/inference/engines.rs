@@ -20,6 +20,7 @@
 
 use super::batch::{self, TraversalKernel};
 use super::compiled::{CompiledForest, NodeOrder};
+use super::parallel;
 use super::simd::SimdBackend;
 use crate::ir::{argmax, Model};
 use crate::quant::fixed_to_prob;
@@ -125,6 +126,14 @@ pub trait Engine: Send + Sync {
     /// ([`SimdBackend::is_available`]) — the intrinsic paths must stay
     /// unreachable without the matching CPU feature.
     fn set_backend(&mut self, backend: SimdBackend);
+    /// Intra-batch thread count the batched methods use (bit-identical
+    /// results at every count; a pure performance knob). Defaults to
+    /// [`parallel::resolve`] at compile time (env override or 1).
+    fn threads(&self) -> usize;
+    /// Select the intra-batch thread count for subsequent batched calls.
+    /// Requests above the detected logical core count are clamped loudly
+    /// ([`parallel::clamp`]); zero is raised to 1.
+    fn set_threads(&mut self, threads: usize);
 }
 
 // ---------------------------------------------------------------------------
@@ -134,6 +143,7 @@ pub struct FloatEngine {
     forest: CompiledForest,
     kernel: TraversalKernel,
     backend: SimdBackend,
+    threads: usize,
 }
 
 impl FloatEngine {
@@ -148,6 +158,7 @@ impl FloatEngine {
             forest: CompiledForest::compile_with(model, order),
             kernel: TraversalKernel::default(),
             backend: SimdBackend::resolve(),
+            threads: parallel::resolve(),
         }
     }
 
@@ -185,13 +196,17 @@ impl Engine for FloatEngine {
     }
     fn predict_batch(&self, rows: &[f32]) -> Vec<u32> {
         batch::argmax_rows(
-            &batch::float_proba_batch_exec(&self.forest, rows, self.kernel, self.backend),
+            &batch::float_proba_batch_exec(
+                &self.forest, rows, self.kernel, self.backend, self.threads,
+            ),
             self.forest.n_classes,
         )
     }
     fn predict_proba_batch(&self, rows: &[f32]) -> Vec<Vec<f32>> {
         batch::split_rows(
-            batch::float_proba_batch_exec(&self.forest, rows, self.kernel, self.backend),
+            batch::float_proba_batch_exec(
+                &self.forest, rows, self.kernel, self.backend, self.threads,
+            ),
             self.forest.n_classes,
         )
     }
@@ -217,6 +232,12 @@ impl Engine for FloatEngine {
         assert!(backend.is_available(), "backend {} not available on this host", backend.name());
         self.backend = backend;
     }
+    fn threads(&self) -> usize {
+        self.threads
+    }
+    fn set_threads(&mut self, threads: usize) {
+        self.threads = parallel::clamp(threads);
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -226,6 +247,7 @@ pub struct FlIntEngine {
     forest: CompiledForest,
     kernel: TraversalKernel,
     backend: SimdBackend,
+    threads: usize,
 }
 
 impl FlIntEngine {
@@ -240,6 +262,7 @@ impl FlIntEngine {
             forest: CompiledForest::compile_with(model, order),
             kernel: TraversalKernel::default(),
             backend: SimdBackend::resolve(),
+            threads: parallel::resolve(),
         }
     }
 
@@ -281,13 +304,17 @@ impl Engine for FlIntEngine {
     }
     fn predict_batch(&self, rows: &[f32]) -> Vec<u32> {
         batch::argmax_rows(
-            &batch::flint_proba_batch_exec(&self.forest, rows, self.kernel, self.backend),
+            &batch::flint_proba_batch_exec(
+                &self.forest, rows, self.kernel, self.backend, self.threads,
+            ),
             self.forest.n_classes,
         )
     }
     fn predict_proba_batch(&self, rows: &[f32]) -> Vec<Vec<f32>> {
         batch::split_rows(
-            batch::flint_proba_batch_exec(&self.forest, rows, self.kernel, self.backend),
+            batch::flint_proba_batch_exec(
+                &self.forest, rows, self.kernel, self.backend, self.threads,
+            ),
             self.forest.n_classes,
         )
     }
@@ -313,6 +340,12 @@ impl Engine for FlIntEngine {
         assert!(backend.is_available(), "backend {} not available on this host", backend.name());
         self.backend = backend;
     }
+    fn threads(&self) -> usize {
+        self.threads
+    }
+    fn set_threads(&mut self, threads: usize) {
+        self.threads = parallel::clamp(threads);
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -324,6 +357,7 @@ pub struct IntEngine {
     forest: CompiledForest,
     kernel: TraversalKernel,
     backend: SimdBackend,
+    threads: usize,
 }
 
 impl IntEngine {
@@ -338,6 +372,7 @@ impl IntEngine {
             forest: CompiledForest::compile_with(model, order),
             kernel: TraversalKernel::default(),
             backend: SimdBackend::resolve(),
+            threads: parallel::resolve(),
         }
     }
 
@@ -370,7 +405,9 @@ impl IntEngine {
     /// row; the coordinator's scalar route is built on this).
     pub fn predict_fixed_batch(&self, rows: &[f32]) -> Vec<Vec<u32>> {
         batch::split_rows(
-            batch::int_fixed_batch_exec(&self.forest, rows, self.kernel, self.backend),
+            batch::int_fixed_batch_exec(
+                &self.forest, rows, self.kernel, self.backend, self.threads,
+            ),
             self.forest.n_classes,
         )
     }
@@ -385,12 +422,14 @@ impl Engine for IntEngine {
     }
     fn predict_batch(&self, rows: &[f32]) -> Vec<u32> {
         batch::argmax_rows(
-            &batch::int_fixed_batch_exec(&self.forest, rows, self.kernel, self.backend),
+            &batch::int_fixed_batch_exec(
+                &self.forest, rows, self.kernel, self.backend, self.threads,
+            ),
             self.forest.n_classes,
         )
     }
     fn predict_proba_batch(&self, rows: &[f32]) -> Vec<Vec<f32>> {
-        batch::int_fixed_batch_exec(&self.forest, rows, self.kernel, self.backend)
+        batch::int_fixed_batch_exec(&self.forest, rows, self.kernel, self.backend, self.threads)
             .chunks_exact(self.forest.n_classes)
             .map(|fixed| fixed.iter().map(|&q| fixed_to_prob(q)).collect())
             .collect()
@@ -421,6 +460,12 @@ impl Engine for IntEngine {
     fn set_backend(&mut self, backend: SimdBackend) {
         assert!(backend.is_available(), "backend {} not available on this host", backend.name());
         self.backend = backend;
+    }
+    fn threads(&self) -> usize {
+        self.threads
+    }
+    fn set_threads(&mut self, threads: usize) {
+        self.threads = parallel::clamp(threads);
     }
 }
 
@@ -606,15 +651,43 @@ mod tests {
                 for &backend in SimdBackend::available() {
                     e.set_backend(backend);
                     assert_eq!(e.backend(), backend);
-                    let tag = format!("{}/{}/{}", v.name(), kernel.name(), backend.name());
-                    assert_eq!(e.predict_proba_batch(flat), branchless_probas, "{tag}");
-                    assert_eq!(e.predict_batch(flat), branchless_classes, "{tag}");
+                    for threads in [1usize, 2] {
+                        e.set_threads(threads);
+                        let tag = format!(
+                            "{}/{}/{}/{}t",
+                            v.name(),
+                            kernel.name(),
+                            backend.name(),
+                            threads
+                        );
+                        assert_eq!(e.predict_proba_batch(flat), branchless_probas, "{tag}");
+                        assert_eq!(e.predict_batch(flat), branchless_classes, "{tag}");
+                    }
+                    e.set_threads(1);
                 }
                 let via_full = compile_variant_full(&m, v, NodeOrder::Breadth, kernel);
                 assert_eq!(via_full.kernel(), kernel);
                 assert_eq!(via_full.predict_batch(flat), branchless_classes, "{}", v.name());
             }
         }
+    }
+
+    /// `set_threads` clamps into `1..=detected` (loudly, never a panic —
+    /// unlike an unavailable backend, an over-subscribed pool is merely
+    /// pointless, not unsound).
+    #[test]
+    fn thread_requests_clamped_to_detected_cores() {
+        let (_, m) = setup(2, 11);
+        let mut e = compile_variant(&m, Variant::IntTreeger);
+        assert!(e.threads() >= 1, "compile-time default is at least 1");
+        e.set_threads(0);
+        assert_eq!(e.threads(), 1, "zero raised to one");
+        e.set_threads(usize::MAX);
+        assert_eq!(
+            e.threads(),
+            crate::inference::parallel::detected(),
+            "over-subscription clamps to the detected core count"
+        );
     }
 
     /// Forcing a backend the host cannot execute must panic in

@@ -21,6 +21,7 @@ use super::batch::{
     TraversalKernel,
 };
 use super::compiled::{pack_tree, soa_planes, Node8, NodeOrder, LEAF, MAX_FEATURES, MAX_TREE_NODES};
+use super::parallel;
 use super::quickscorer::QsPlan;
 use super::simd::SimdBackend;
 use crate::flint::ordered_u32;
@@ -52,6 +53,7 @@ pub struct GbtIntEngine {
     qs: QsPlan,
     kernel: TraversalKernel,
     backend: SimdBackend,
+    threads: usize,
 }
 
 impl GbtIntEngine {
@@ -79,6 +81,7 @@ impl GbtIntEngine {
             qs: QsPlan::build(model),
             kernel: TraversalKernel::default(),
             backend: SimdBackend::resolve(),
+            threads: parallel::resolve(),
         };
         // Per-tree scratch SoA in IR order, packed to the BFS
         // child-adjacent form (same canonical encoding as
@@ -165,6 +168,18 @@ impl GbtIntEngine {
         self.backend = backend;
     }
 
+    /// Intra-batch thread count the batched methods use (pure
+    /// performance knob; bit-identical results at every count).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Select the intra-batch thread count for subsequent batched calls
+    /// (clamped loudly into `1..=`[`parallel::detected`]).
+    pub fn set_threads(&mut self, threads: usize) {
+        self.threads = parallel::clamp(threads);
+    }
+
     fn packed(&self) -> PackedTrees<'_> {
         PackedTrees {
             nodes: &self.nodes,
@@ -231,6 +246,9 @@ impl GbtIntEngine {
             for _ in 0..n_rows {
                 acc.extend_from_slice(&self.base_q);
             }
+            // The row-range task split adds each task's trees onto its
+            // rows' pre-seeded base scores directly, so the base is
+            // applied exactly once at any thread count.
             accumulate_batch::<OrdDomain, i64>(
                 &self.packed(),
                 Some(&self.qs),
@@ -240,6 +258,7 @@ impl GbtIntEngine {
                 &self.leaf_q,
                 self.kernel,
                 self.backend,
+                self.threads,
                 &mut acc,
             );
             acc.chunks_exact(c).map(|row| row.to_vec()).collect()
@@ -306,24 +325,31 @@ mod tests {
             e.set_kernel(kernel);
             for &backend in SimdBackend::available() {
                 e.set_backend(backend);
-                for n in [1usize, 7, 8, 9, 100] {
-                    let flat = &ds.features[..n * ds.n_features];
-                    let batched = e.predict_fixed_batch(flat);
-                    let classes = e.predict_batch(flat);
-                    for i in 0..n {
-                        let tag = format!("{}/{}", kernel.name(), backend.name());
-                        assert_eq!(
-                            batched[i],
-                            e.predict_fixed(ds.row(i)),
-                            "{tag} margins row {i} (n={n})"
-                        );
-                        assert_eq!(
-                            classes[i],
-                            e.predict(ds.row(i)),
-                            "{tag} class row {i} (n={n})"
-                        );
+                // threads > 1 checks the scheduler keeps the pre-seeded
+                // base score applied exactly once per row.
+                for threads in [1usize, 3] {
+                    e.set_threads(threads);
+                    for n in [1usize, 7, 8, 9, 100] {
+                        let flat = &ds.features[..n * ds.n_features];
+                        let batched = e.predict_fixed_batch(flat);
+                        let classes = e.predict_batch(flat);
+                        for i in 0..n {
+                            let tag =
+                                format!("{}/{}/{}t", kernel.name(), backend.name(), threads);
+                            assert_eq!(
+                                batched[i],
+                                e.predict_fixed(ds.row(i)),
+                                "{tag} margins row {i} (n={n})"
+                            );
+                            assert_eq!(
+                                classes[i],
+                                e.predict(ds.row(i)),
+                                "{tag} class row {i} (n={n})"
+                            );
+                        }
                     }
                 }
+                e.set_threads(1);
             }
         }
     }

@@ -28,19 +28,23 @@
 //! condition streams + `u64` false-leaf masks, no node walks at all).
 //! Orthogonally, [`SimdBackend`] selects the execution backend of the
 //! branchless walk and the QuickScorer scan: portable scalar code or
-//! runtime-detected AVX2 / NEON intrinsics ([`simd`]) — every kernel ×
-//! backend combination is bit-identical; they are pure performance
-//! knobs.
+//! runtime-detected AVX2 / NEON intrinsics ([`simd`]) — and the
+//! intra-batch thread count ([`parallel`]) splits one batch across a
+//! work-stealing pool of cores with deterministic, fixed-order
+//! reductions. Every kernel × backend × thread-count combination is
+//! bit-identical; they are pure performance knobs.
 
 pub mod batch;
 pub mod compiled;
 pub mod engines;
 pub mod gbt_int;
+pub mod parallel;
 pub mod quickscorer;
 pub mod simd;
 
 pub use batch::{TraversalKernel, TILE_ROWS};
 pub use compiled::{CompiledForest, Node8, NodeOrder, LEAF};
+pub use parallel::THREADS_ENV;
 pub use quickscorer::{QsPlan, QS_MAX_LEAVES};
 pub use simd::{SimdBackend, BACKEND_ENV};
 pub use engines::{

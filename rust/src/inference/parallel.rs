@@ -1,0 +1,432 @@
+//! Intra-batch multi-core scheduling for the batch kernels — the
+//! work-stealing tile scheduler behind `accumulate_batch` /
+//! `accumulate_qs`.
+//!
+//! After the single-thread levers (tiling → branchless → QuickScorer →
+//! AVX2/NEON), the remaining headroom on a serving host is plain cores.
+//! The coordinator's worker pool already overlaps *independent* batches;
+//! this module overlaps work **inside** one batch: the drivers split a
+//! batch into tasks, a small dependency-free thread pool executes them,
+//! and the results are written / reduced so every output bit is identical
+//! to the single-thread engines.
+//!
+//! ## Task shapes
+//!
+//! * **Walker kernels** (branchy / branchless): tasks are contiguous
+//!   **row-tile ranges** ([`super::batch::TILE_ROWS`]-aligned, a few
+//!   tiles each). Every task walks *all* trees over its rows in
+//!   ascending tree order and owns a disjoint slice of the accumulator,
+//!   so the per-row accumulation sequence — the thing float parity
+//!   depends on — is exactly the scalar sequence, and no reduction is
+//!   needed at all.
+//! * **QuickScorer**: tasks are **condition-stream block × row-range**
+//!   pairs (reusing the plan's [`super::quickscorer::QS_BLOCK_TREES`]
+//!   cache blocking), plus one fallback-walk task per row range. Each
+//!   task fills its disjoint cells of a per-batch **exit-payload
+//!   matrix** (`row × tree`, the per-task partial state); a second pass
+//!   then folds the payloads into the accumulator **per row in ascending
+//!   tree order** — a fixed, task-index-independent reduction order, so
+//!   f32/u32/i64 sums see the same operand sequence as a single thread
+//!   regardless of which worker finished first.
+//!
+//! The node arrays, SoA planes, condition streams and leaf tables are
+//! shared read-only across workers; the only shared-mutable state is the
+//! disjointly-partitioned output (see [`SharedSlab`]).
+//!
+//! ## Why work-stealing rather than a static split
+//!
+//! Task costs are uneven by construction: QuickScorer plans mix cheap
+//! bitvector blocks with expensive per-tree walker fallbacks (trees over
+//! `QS_MAX_LEAVES` leaves), the branchy walker's cost tracks the
+//! data-dependent average leaf depth, and a ragged final tile is cheaper
+//! than a full one. A static one-range-per-worker split would finish at
+//! the pace of the unluckiest worker; here every worker drains its own
+//! shard of the task list and then **steals** from the other shards
+//! ([`Injector`] — a sharded atomic-cursor injector over `std::sync`,
+//! no external crates), so stragglers shed load automatically.
+//!
+//! ## Selection
+//!
+//! Thread count is a pure performance knob, resolved like the SIMD
+//! backend: [`resolve`] honors the [`THREADS_ENV`] environment variable
+//! (CLI: `--threads`), loudly clamping to the detected logical core
+//! count; engines default to **1** (single-thread, the calibration
+//! baseline) and the serving coordinator's auto-calibration sweeps
+//! kernel × backend × [`sweep`] thread counts to find the saturation
+//! point for the loaded model on the current host.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Environment variable forcing the intra-batch thread count (a positive
+/// integer; the CLI `--threads` flag sets it process-wide). Values above
+/// the detected logical core count are clamped loudly; invalid values
+/// fall back loudly to 1.
+pub const THREADS_ENV: &str = "INTREEGER_THREADS";
+
+/// Logical cores detected on this host (cached; at least 1).
+pub fn detected() -> usize {
+    static DETECTED: OnceLock<usize> = OnceLock::new();
+    *DETECTED.get_or_init(|| std::thread::available_parallelism().map_or(1, |n| n.get()))
+}
+
+/// Physical cores on this host, when the platform exposes them
+/// (`/proc/cpuinfo` on Linux: distinct `(physical id, core id)` pairs).
+/// `None` where unknown — reported by `inspect` next to [`detected`] so
+/// SMT-inflated scaling expectations are visible.
+pub fn physical_cores() -> Option<usize> {
+    #[cfg(target_os = "linux")]
+    {
+        let text = std::fs::read_to_string("/proc/cpuinfo").ok()?;
+        let mut pairs = std::collections::HashSet::new();
+        let (mut phys, mut core) = (None, None);
+        for line in text.lines() {
+            let mut it = line.splitn(2, ':');
+            let key = it.next().unwrap_or("").trim();
+            let val = it.next().unwrap_or("").trim();
+            match key {
+                "physical id" => phys = val.parse::<u32>().ok(),
+                "core id" => core = val.parse::<u32>().ok(),
+                // Blank line terminates one processor stanza.
+                "" => {
+                    if let (Some(p), Some(c)) = (phys, core) {
+                        pairs.insert((p, c));
+                    }
+                    phys = None;
+                    core = None;
+                }
+                _ => {}
+            }
+        }
+        if let (Some(p), Some(c)) = (phys, core) {
+            pairs.insert((p, c));
+        }
+        (!pairs.is_empty()).then(|| pairs.len())
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        None
+    }
+}
+
+/// Clamp a requested thread count into `1..=`[`detected`], loudly when
+/// the request exceeds the host (mirrors the SIMD backend's refused-
+/// loudly contract: an over-subscribed pool would only add scheduling
+/// noise, never throughput).
+pub fn clamp(n: usize) -> usize {
+    let n = n.max(1);
+    let d = detected();
+    if n > d {
+        eprintln!(
+            "intreeger: {n} threads requested but only {d} logical cores detected; \
+             clamping to {d}"
+        );
+        d
+    } else {
+        n
+    }
+}
+
+/// Resolve the thread count engines default to: the [`THREADS_ENV`]
+/// override when set (parsed and clamped loudly), otherwise **1**.
+/// Single-thread is the deliberate default — it is the bit-exactness
+/// baseline the parity suite compares against and keeps the perf
+/// trajectory of the bench ledger comparable across PRs; multi-core
+/// execution is opted into per process (env / `--threads`) or picked by
+/// the serving auto-calibration.
+pub fn resolve() -> usize {
+    match std::env::var(THREADS_ENV) {
+        Ok(raw) => match raw.trim().parse::<usize>() {
+            Ok(n) if n >= 1 => clamp(n),
+            _ => {
+                eprintln!(
+                    "intreeger: invalid {THREADS_ENV}='{raw}' (use a positive integer); \
+                     using 1 thread"
+                );
+                1
+            }
+        },
+        Err(_) => 1,
+    }
+}
+
+/// The thread counts a calibration sweep should time: just the forced
+/// one when [`THREADS_ENV`] is set (the override pins the choice),
+/// otherwise 1, the powers of two below the detected core count, and
+/// the detected count itself — e.g. `[1, 2, 4, 6]` on a 6-core host.
+pub fn sweep() -> Vec<usize> {
+    if std::env::var(THREADS_ENV).is_ok() {
+        return vec![resolve()];
+    }
+    let d = detected();
+    let mut v = vec![1usize];
+    let mut t = 2;
+    while t < d {
+        v.push(t);
+        t *= 2;
+    }
+    if d > 1 {
+        v.push(d);
+    }
+    v
+}
+
+// ---------------------------------------------------------------------------
+// The scheduler: sharded work-stealing injector + scoped worker pool.
+
+/// Oversubscription factor of the row-range task split: a few tasks per
+/// worker so stealing can rebalance uneven costs (ragged tails, QS
+/// fallback trees) without shrinking tasks to cache-hostile slivers.
+const TASKS_PER_THREAD: usize = 4;
+
+/// A fixed task list `0..n_tasks` sharded into one contiguous range per
+/// worker, each with an atomic claim cursor. A worker drains its home
+/// shard front-to-back (cache-friendly: neighboring tasks touch
+/// neighboring rows), then steals from the other shards — the
+/// dependency-free `std::sync` stand-in for per-worker Chase-Lev
+/// deques, sufficient because tasks are claimed exactly once and never
+/// re-pushed.
+pub(crate) struct Injector {
+    shards: Vec<Shard>,
+}
+
+struct Shard {
+    /// Next unclaimed task of this shard; `fetch_add` claims it (values
+    /// at/above `end` mean the shard is drained).
+    next: AtomicUsize,
+    /// One past the last task of this shard.
+    end: usize,
+}
+
+impl Injector {
+    /// Split `0..n_tasks` into `n_shards` contiguous ranges (the leading
+    /// shards are one task longer when the split is uneven).
+    pub(crate) fn new(n_tasks: usize, n_shards: usize) -> Injector {
+        let n_shards = n_shards.max(1);
+        let per = n_tasks / n_shards;
+        let extra = n_tasks % n_shards;
+        let mut shards = Vec::with_capacity(n_shards);
+        let mut lo = 0;
+        for s in 0..n_shards {
+            let len = per + usize::from(s < extra);
+            shards.push(Shard { next: AtomicUsize::new(lo), end: lo + len });
+            lo += len;
+        }
+        debug_assert_eq!(lo, n_tasks);
+        Injector { shards }
+    }
+
+    /// Claim the next task: the home shard first, then steal round-robin
+    /// from the others. `None` once every shard is drained.
+    pub(crate) fn claim(&self, home: usize) -> Option<usize> {
+        let n = self.shards.len();
+        for k in 0..n {
+            let shard = &self.shards[(home + k) % n];
+            // Relaxed is enough: the claim itself is the only shared
+            // state, and the scope join at the end of `run_tasks` is the
+            // synchronization point for the task *outputs*.
+            let i = shard.next.fetch_add(1, Ordering::Relaxed);
+            if i < shard.end {
+                return Some(i);
+            }
+        }
+        None
+    }
+}
+
+/// Run `f(task)` for every task in `0..n_tasks` on up to `threads`
+/// workers (scoped threads over a work-stealing [`Injector`]; the
+/// calling thread is worker 0). `threads <= 1` — or a single task —
+/// runs inline with zero scheduling overhead. Returns only after every
+/// task completed, so task outputs are visible to the caller.
+pub(crate) fn run_tasks<F>(threads: usize, n_tasks: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let threads = threads.max(1).min(n_tasks);
+    if threads <= 1 {
+        for i in 0..n_tasks {
+            f(i);
+        }
+        return;
+    }
+    let injector = Injector::new(n_tasks, threads);
+    let injector = &injector;
+    let f = &f;
+    std::thread::scope(|scope| {
+        for w in 1..threads {
+            scope.spawn(move || {
+                while let Some(i) = injector.claim(w) {
+                    f(i);
+                }
+            });
+        }
+        while let Some(i) = injector.claim(0) {
+            f(i);
+        }
+    });
+}
+
+/// Split `n_rows` into contiguous `tile`-aligned row ranges `(lo, hi)`,
+/// about [`TASKS_PER_THREAD`] per worker. Range boundaries land on tile
+/// boundaries so the drivers' ragged-tail handling (duplicate-last-lane)
+/// fires only on the true final tile of the batch — chunking must not
+/// change which comparisons run, only who runs them.
+pub(crate) fn tile_chunks(n_rows: usize, tile: usize, threads: usize) -> Vec<(usize, usize)> {
+    debug_assert!(tile >= 1);
+    let n_tiles = n_rows.div_ceil(tile);
+    let n_chunks = n_tiles.min(threads.max(1) * TASKS_PER_THREAD).max(1);
+    let tiles_per = n_tiles.div_ceil(n_chunks);
+    let mut out = Vec::with_capacity(n_chunks);
+    let mut lo_tile = 0;
+    while lo_tile < n_tiles {
+        let hi_tile = (lo_tile + tiles_per).min(n_tiles);
+        out.push((lo_tile * tile, (hi_tile * tile).min(n_rows)));
+        lo_tile = hi_tile;
+    }
+    out
+}
+
+/// A mutable output slab shared across scheduler tasks through raw
+/// pointers, because safe `&mut` hand-out does not survive dynamic task
+/// claiming. Soundness is the *callers'* obligation: concurrent tasks
+/// must touch disjoint element ranges (the drivers partition by row
+/// range, or by `(row, tree)` cell), so no element is ever written by
+/// two tasks and no `&mut` reference overlaps another.
+pub(crate) struct SharedSlab<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: std::marker::PhantomData<&'a mut [T]>,
+}
+
+// SAFETY: the slab only moves a raw pointer between threads; access
+// discipline (disjointness) is enforced by the unsafe contract of
+// `slice_mut` / `write` at the call sites.
+unsafe impl<T: Send> Send for SharedSlab<'_, T> {}
+unsafe impl<T: Send> Sync for SharedSlab<'_, T> {}
+
+impl<'a, T> SharedSlab<'a, T> {
+    /// Wrap an exclusive slice for the duration of a task run. The
+    /// borrow keeps the underlying storage alive and un-aliased for the
+    /// slab's lifetime.
+    pub(crate) fn new(slice: &'a mut [T]) -> SharedSlab<'a, T> {
+        SharedSlab { ptr: slice.as_mut_ptr(), len: slice.len(), _marker: std::marker::PhantomData }
+    }
+
+    /// A mutable sub-slice `[start, start + len)`.
+    ///
+    /// # Safety
+    ///
+    /// No concurrently live `slice_mut`/`write` of this slab may overlap
+    /// the range — callers must partition the slab into disjoint ranges
+    /// across tasks.
+    #[allow(clippy::mut_from_ref)] // the shared-&self-to-&mut escape is this type's entire purpose
+    pub(crate) unsafe fn slice_mut(&self, start: usize, len: usize) -> &mut [T] {
+        debug_assert!(start + len <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(start), len)
+    }
+
+    /// Write one element.
+    ///
+    /// # Safety
+    ///
+    /// No concurrently live `slice_mut` may cover `idx`, and no other
+    /// task may `write` the same `idx` — element-disjoint writes only.
+    pub(crate) unsafe fn write(&self, idx: usize, value: T) {
+        debug_assert!(idx < self.len);
+        self.ptr.add(idx).write(value);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    #[test]
+    fn injector_claims_every_task_exactly_once() {
+        for (n_tasks, n_shards) in [(0usize, 3usize), (1, 1), (7, 3), (64, 4), (10, 16)] {
+            let inj = Injector::new(n_tasks, n_shards);
+            let mut seen = vec![0u32; n_tasks];
+            // Drain from one "worker" after another, including stealing
+            // across shard seams.
+            for home in 0..n_shards {
+                while let Some(i) = inj.claim(home) {
+                    seen[i] += 1;
+                }
+            }
+            assert!(seen.iter().all(|&c| c == 1), "tasks {n_tasks} shards {n_shards}: {seen:?}");
+            assert_eq!(inj.claim(0), None, "drained injector must stay drained");
+        }
+    }
+
+    #[test]
+    fn run_tasks_covers_all_tasks_at_any_thread_count() {
+        for threads in [1usize, 2, 3, 8] {
+            let n_tasks = 37;
+            let hits: Vec<AtomicU32> = (0..n_tasks).map(|_| AtomicU32::new(0)).collect();
+            run_tasks(threads, n_tasks, |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                "threads {threads}"
+            );
+        }
+    }
+
+    #[test]
+    fn tile_chunks_are_aligned_contiguous_and_exhaustive() {
+        for (n_rows, tile, threads) in
+            [(0usize, 8usize, 4usize), (1, 8, 4), (8, 8, 1), (17, 8, 2), (4096, 8, 3), (100, 8, 16)]
+        {
+            let chunks = tile_chunks(n_rows, tile, threads);
+            let mut expect_lo = 0usize;
+            for &(lo, hi) in &chunks {
+                assert_eq!(lo, expect_lo, "contiguous");
+                assert!(hi > lo, "non-empty");
+                assert_eq!(lo % tile, 0, "tile-aligned start");
+                assert!(hi % tile == 0 || hi == n_rows, "tile-aligned end or batch tail");
+                expect_lo = hi;
+            }
+            assert_eq!(expect_lo, n_rows, "rows {n_rows} tile {tile} threads {threads}");
+            if n_rows == 0 {
+                assert!(chunks.is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn shared_slab_disjoint_ranges_round_trip() {
+        let mut data = vec![0u32; 64];
+        {
+            let slab = SharedSlab::new(&mut data);
+            run_tasks(4, 8, |i| {
+                // SAFETY: tasks cover disjoint 8-element ranges.
+                let chunk = unsafe { slab.slice_mut(i * 8, 8) };
+                for (k, v) in chunk.iter_mut().enumerate() {
+                    *v = (i * 8 + k) as u32;
+                }
+            });
+        }
+        assert!(data.iter().enumerate().all(|(i, &v)| v == i as u32));
+    }
+
+    #[test]
+    fn clamp_and_detection_sane() {
+        assert!(detected() >= 1);
+        assert_eq!(clamp(0), 1);
+        assert_eq!(clamp(1), 1);
+        assert_eq!(clamp(usize::MAX), detected());
+        if let Some(p) = physical_cores() {
+            assert!(p >= 1);
+        }
+        // sweep() starts at the single-thread baseline and never exceeds
+        // the host (when the env override is not set, sweep is derived
+        // from detection; when it is set, it is the resolved pin — both
+        // are clamped).
+        let s = sweep();
+        assert!(!s.is_empty());
+        assert!(s.iter().all(|&t| (1..=detected()).contains(&t)));
+    }
+}

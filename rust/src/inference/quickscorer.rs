@@ -52,6 +52,7 @@
 //! `ir::stats` and the CLI `inspect` command.
 
 use super::batch::{row_base_lanes, walk_tile_predicated, Domain, PackedTrees, TILE_ROWS};
+use super::parallel;
 use super::simd::SimdBackend;
 use crate::flint::ordered_u32;
 use crate::ir::{Model, Node, Tree};
@@ -329,6 +330,16 @@ fn eval_block<D: Domain>(
 /// ineligible trees, then per-row accumulation in **ascending tree
 /// order** — the scalar engines' exact sequence, so float sums see the
 /// same rounding order and results stay bit-identical to the walkers.
+///
+/// `threads > 1` runs two phases on the work-stealing pool
+/// ([`super::parallel`]): independent (block × row-range) and
+/// (fallback-walk × row-range) tasks fill a batch-wide exit-payload
+/// matrix — leaf *indices* only, no accumulation arithmetic, so the fill
+/// order is irrelevant — then, after the pool joins, each row's payloads
+/// fold into `acc` in ascending tree order. The reduction sequence is
+/// fixed and task-index independent, so f32/u32/i64 outputs are
+/// bit-identical at any thread count.
+#[allow(clippy::too_many_arguments)] // internal monomorphized driver, mirrors accumulate_batch
 pub(crate) fn accumulate_qs<D: Domain, T>(
     plan: &QsPlan,
     trees: &PackedTrees,
@@ -337,9 +348,10 @@ pub(crate) fn accumulate_qs<D: Domain, T>(
     n_classes: usize,
     leaf_table: &[T],
     backend: SimdBackend,
+    threads: usize,
     acc: &mut [T],
 ) where
-    T: Copy + std::ops::AddAssign<T>,
+    T: Copy + std::ops::AddAssign<T> + Send + Sync,
 {
     assert_eq!(acc.len(), n_rows * n_classes);
     assert!(n_rows * trees.stride <= rows.len());
@@ -347,62 +359,145 @@ pub(crate) fn accumulate_qs<D: Domain, T>(
     debug_assert_eq!(plan.n_features, trees.stride);
     let n_trees = plan.n_trees;
     let stride = trees.stride;
-    let max_block = plan.blocks.iter().map(|b| b.n_trees).max().unwrap_or(0);
-    let mut bv = vec![0u64; max_block];
-    // Exit payload per (row-in-tile, tree): filled out of order (blocks,
-    // then fallback trees), consumed in tree order.
-    let mut payloads = vec![0u32; TILE_ROWS * n_trees];
-    let mut leaves = [0u32; TILE_ROWS];
-    let mut tile_start = 0;
-    while tile_start < n_rows {
-        let tile_rows = TILE_ROWS.min(n_rows - tile_start);
-        for block in &plan.blocks {
-            let words = D::qs_words(block);
-            for r in 0..tile_rows {
-                let base = (tile_start + r) * stride;
-                let row = &rows[base..base + stride];
-                let bv = &mut bv[..block.n_trees];
-                bv.copy_from_slice(&block.init);
-                eval_block::<D>(block, words, row, backend, bv);
-                for (lt, &tid) in block.tree_ids.iter().enumerate() {
-                    let leaf = bv[lt].trailing_zeros() as usize;
-                    let lo = block.leaf_offsets[lt] as usize;
-                    payloads[r * n_trees + tid as usize] = block.leaf_payloads[lo + leaf];
+    if threads <= 1 {
+        let max_block = plan.blocks.iter().map(|b| b.n_trees).max().unwrap_or(0);
+        let mut bv = vec![0u64; max_block];
+        // Exit payload per (row-in-tile, tree): filled out of order
+        // (blocks, then fallback trees), consumed in tree order.
+        let mut payloads = vec![0u32; TILE_ROWS * n_trees];
+        let mut leaves = [0u32; TILE_ROWS];
+        let mut tile_start = 0;
+        while tile_start < n_rows {
+            let tile_rows = TILE_ROWS.min(n_rows - tile_start);
+            for block in &plan.blocks {
+                let words = D::qs_words(block);
+                for r in 0..tile_rows {
+                    let base = (tile_start + r) * stride;
+                    let row = &rows[base..base + stride];
+                    let bv = &mut bv[..block.n_trees];
+                    bv.copy_from_slice(&block.init);
+                    eval_block::<D>(block, words, row, backend, bv);
+                    for (lt, &tid) in block.tree_ids.iter().enumerate() {
+                        let leaf = bv[lt].trailing_zeros() as usize;
+                        let lo = block.leaf_offsets[lt] as usize;
+                        payloads[r * n_trees + tid as usize] = block.leaf_payloads[lo + leaf];
+                    }
                 }
             }
-        }
-        // Tree-independent per-lane offsets for the fallback walks,
-        // computed once per tile.
-        let row_base = (!plan.fallback.is_empty())
-            .then(|| row_base_lanes(trees.stride, tile_start, tile_rows));
-        for &t in &plan.fallback {
-            let t = t as usize;
-            walk_tile_predicated::<D>(
-                trees,
-                t,
-                rows,
-                tile_start,
-                tile_rows,
-                row_base.as_ref().expect("computed when fallback is non-empty"),
-                backend,
-                &mut leaves,
-            );
-            for (r, &p) in leaves[..tile_rows].iter().enumerate() {
-                payloads[r * n_trees + t] = p;
+            // Tree-independent per-lane offsets for the fallback walks,
+            // computed once per tile.
+            let row_base = (!plan.fallback.is_empty())
+                .then(|| row_base_lanes(trees.stride, tile_start, tile_rows));
+            for &t in &plan.fallback {
+                let t = t as usize;
+                walk_tile_predicated::<D>(
+                    trees,
+                    t,
+                    rows,
+                    tile_start,
+                    tile_rows,
+                    row_base.as_ref().expect("computed when fallback is non-empty"),
+                    backend,
+                    &mut leaves,
+                );
+                for (r, &p) in leaves[..tile_rows].iter().enumerate() {
+                    payloads[r * n_trees + t] = p;
+                }
             }
+            for r in 0..tile_rows {
+                let row_acc =
+                    &mut acc[(tile_start + r) * n_classes..(tile_start + r + 1) * n_classes];
+                for &p in &payloads[r * n_trees..r * n_trees + n_trees] {
+                    let leaf = &leaf_table[p as usize * n_classes..(p as usize + 1) * n_classes];
+                    for (a, &v) in row_acc.iter_mut().zip(leaf) {
+                        *a += v;
+                    }
+                }
+            }
+            tile_start += tile_rows;
         }
-        for r in 0..tile_rows {
+        return;
+    }
+    // Multi-core path. The payload matrix covers the whole batch (the
+    // single-thread path reuses a TILE_ROWS-deep one) so block tasks and
+    // fallback tasks can run in any order on any worker: each (row,
+    // tree) cell has exactly one writer — rows partition across chunks,
+    // trees across units.
+    let chunks = parallel::tile_chunks(n_rows, TILE_ROWS, threads);
+    let mut payloads = vec![0u32; n_rows * n_trees];
+    // Phase-1 units: every condition-stream block, plus one walker unit
+    // covering all fallback trees when present.
+    let n_units = plan.blocks.len() + usize::from(!plan.fallback.is_empty());
+    {
+        let slab = parallel::SharedSlab::new(&mut payloads);
+        parallel::run_tasks(threads, chunks.len() * n_units, |task| {
+            let (lo, hi) = chunks[task / n_units];
+            let unit = task % n_units;
+            if let Some(block) = plan.blocks.get(unit) {
+                let words = D::qs_words(block);
+                let mut bv = vec![0u64; block.n_trees];
+                for row_i in lo..hi {
+                    let base = row_i * stride;
+                    let row = &rows[base..base + stride];
+                    bv.copy_from_slice(&block.init);
+                    eval_block::<D>(block, words, row, backend, &mut bv);
+                    for (lt, &tid) in block.tree_ids.iter().enumerate() {
+                        let leaf = bv[lt].trailing_zeros() as usize;
+                        let off = block.leaf_offsets[lt] as usize;
+                        // SAFETY: cell (row_i, tid) belongs to exactly
+                        // this (chunk, block) task — disjoint writes.
+                        unsafe {
+                            slab.write(
+                                row_i * n_trees + tid as usize,
+                                block.leaf_payloads[off + leaf],
+                            );
+                        }
+                    }
+                }
+            } else {
+                // The fallback walker unit of this row range.
+                let mut leaves = [0u32; TILE_ROWS];
+                let mut tile_start = lo;
+                while tile_start < hi {
+                    let tile_rows = TILE_ROWS.min(hi - tile_start);
+                    let row_base = row_base_lanes(stride, tile_start, tile_rows);
+                    for &t in &plan.fallback {
+                        let t = t as usize;
+                        walk_tile_predicated::<D>(
+                            trees, t, rows, tile_start, tile_rows, &row_base, backend,
+                            &mut leaves,
+                        );
+                        for (r, &p) in leaves[..tile_rows].iter().enumerate() {
+                            // SAFETY: fallback tree ids are written only
+                            // by this unit; rows only by this chunk.
+                            unsafe { slab.write((tile_start + r) * n_trees + t, p) };
+                        }
+                    }
+                    tile_start += tile_rows;
+                }
+            }
+        });
+    }
+    // Phase 2 — the pool join above is the barrier that makes every
+    // payload visible. Fold per row in ascending tree order: a fixed
+    // reduction sequence, independent of which worker filled what.
+    let payloads = &payloads;
+    let slab = parallel::SharedSlab::new(acc);
+    parallel::run_tasks(threads, chunks.len(), |i| {
+        let (lo, hi) = chunks[i];
+        // SAFETY: disjoint row ranges of `acc` across tasks.
+        let chunk_acc = unsafe { slab.slice_mut(lo * n_classes, (hi - lo) * n_classes) };
+        for row_i in lo..hi {
             let row_acc =
-                &mut acc[(tile_start + r) * n_classes..(tile_start + r + 1) * n_classes];
-            for &p in &payloads[r * n_trees..r * n_trees + n_trees] {
+                &mut chunk_acc[(row_i - lo) * n_classes..(row_i - lo + 1) * n_classes];
+            for &p in &payloads[row_i * n_trees..(row_i + 1) * n_trees] {
                 let leaf = &leaf_table[p as usize * n_classes..(p as usize + 1) * n_classes];
                 for (a, &v) in row_acc.iter_mut().zip(leaf) {
                     *a += v;
                 }
             }
         }
-        tile_start += tile_rows;
-    }
+    });
 }
 
 #[cfg(test)]
@@ -519,18 +614,23 @@ mod tests {
         let rows_ord: Vec<u32> = flat.iter().map(|&x| ordered_u32(x)).collect();
         let want = int_fixed_batch_with(&f, flat, TraversalKernel::Branchy);
         for &backend in SimdBackend::available() {
-            let mut got = vec![0u32; n * f.n_classes];
-            accumulate_qs::<OrdDomain, u32>(
-                &plan,
-                &f.packed_ord(),
-                &rows_ord,
-                n,
-                f.n_classes,
-                &f.leaf_u32,
-                backend,
-                &mut got,
-            );
-            assert_eq!(got, want, "{}", backend.name());
+            // threads > 1 exercises the two-phase payload-matrix path
+            // (block × row-range tasks + the ordered fold).
+            for threads in [1usize, 3] {
+                let mut got = vec![0u32; n * f.n_classes];
+                accumulate_qs::<OrdDomain, u32>(
+                    &plan,
+                    &f.packed_ord(),
+                    &rows_ord,
+                    n,
+                    f.n_classes,
+                    &f.leaf_u32,
+                    backend,
+                    threads,
+                    &mut got,
+                );
+                assert_eq!(got, want, "{} {}t", backend.name(), threads);
+            }
         }
     }
 

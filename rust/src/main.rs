@@ -15,7 +15,7 @@
 use intreeger::codegen::{self, Layout};
 use intreeger::coordinator::{self, InferenceServer, ServerConfig};
 use intreeger::data::{self, Dataset};
-use intreeger::inference::{self, SimdBackend, Variant, BACKEND_ENV};
+use intreeger::inference::{self, SimdBackend, Variant, BACKEND_ENV, THREADS_ENV};
 use intreeger::ir::Model;
 use intreeger::pipeline::{self, PipelineConfig};
 use intreeger::simarch::{self, Core};
@@ -107,6 +107,22 @@ fn apply_backend_flag(args: &Args) {
     }
 }
 
+/// `--threads N` pins the intra-batch thread count for everything this
+/// process compiles, by setting [`THREADS_ENV`] (the same override
+/// operators use in deployment). Must be a positive integer; counts
+/// above the detected cores are clamped loudly by the engines rather
+/// than rejected here, matching the env-var behavior.
+fn apply_threads_flag(args: &Args) {
+    if let Some(raw) = args.get("threads") {
+        let n: usize = raw
+            .parse()
+            .ok()
+            .filter(|&n| n > 0)
+            .unwrap_or_else(|| panic!("bad --threads '{raw}' (use a positive integer)"));
+        std::env::set_var(THREADS_ENV, n.to_string());
+    }
+}
+
 static COMMANDS: &[CommandSpec] = &[
     CommandSpec {
         name: "pipeline",
@@ -161,8 +177,10 @@ static COMMANDS: &[CommandSpec] = &[
     },
     CommandSpec {
         name: "inspect",
-        synopsis: || format!("--model model.json [--trees] [--backend {}]", backend_names()),
-        about: "model stats, QuickScorer eligibility + SIMD backend calibration preview",
+        synopsis: || {
+            format!("--model model.json [--trees] [--backend {}] [--threads N]", backend_names())
+        },
+        about: "model stats, QuickScorer eligibility + SIMD/threads calibration preview",
         run: cmd_inspect,
     },
     CommandSpec {
@@ -176,7 +194,7 @@ static COMMANDS: &[CommandSpec] = &[
         synopsis: || {
             format!(
                 "--model model.json | --pipeline DIR [--artifacts DIR] [--requests N] \
-                 [--workers W] [--calibrate] [--backend {}] [--dataset ...]",
+                 [--workers W] [--calibrate] [--backend {}] [--threads N] [--dataset ...]",
                 backend_names()
             )
         },
@@ -431,6 +449,7 @@ fn cmd_simulate(args: &Args) {
 
 fn cmd_serve(args: &Args) {
     apply_backend_flag(args);
+    apply_threads_flag(args);
     let config = ServerConfig {
         n_workers: args.usize_or("workers", 1),
         auto_calibrate: args.flag("calibrate"),
@@ -480,9 +499,10 @@ fn cmd_serve(args: &Args) {
         snap.rows_scalar, snap.rows_xla, snap.mean_batch, snap.latency_p50_us, snap.latency_p99_us
     );
     println!(
-        "execution: kernel {} on the {} backend (host SIMD: {})",
+        "execution: kernel {} on the {} backend with {} intra-batch thread(s) (host SIMD: {})",
         snap.kernel.as_deref().unwrap_or("?"),
         snap.backend.as_deref().unwrap_or("?"),
+        snap.threads.map(|t| t.to_string()).unwrap_or_else(|| "?".to_string()),
         if snap.detected_features.is_empty() {
             "none".to_string()
         } else {
@@ -503,6 +523,7 @@ fn cmd_tablei() {
 fn cmd_inspect(args: &Args) {
     use intreeger::inference::QS_MAX_LEAVES;
     apply_backend_flag(args);
+    apply_threads_flag(args);
     let model = load_model(args);
     let s = intreeger::ir::stats::stats(&model);
     println!("kind:            {:?}", model.kind);
@@ -536,6 +557,15 @@ fn cmd_inspect(args: &Args) {
         SimdBackend::available().iter().map(|b| b.name()).collect::<Vec<_>>().join(", "),
         SimdBackend::resolve().name()
     );
+    println!(
+        "cores:           {} logical{}; default intra-batch threads {}",
+        inference::parallel::detected(),
+        match inference::parallel::physical_cores() {
+            Some(p) => format!(" / {p} physical"),
+            None => String::new(),
+        },
+        inference::parallel::resolve()
+    );
     if model.kind == intreeger::ir::ModelKind::RandomForest {
         // Run the serving coordinator's actual startup calibration on a
         // representative probe batch: the same timing that decides the
@@ -543,9 +573,10 @@ fn cmd_inspect(args: &Args) {
         let mut engine = inference::IntEngine::compile(&model);
         let choice = coordinator::calibrate_execution(&mut engine, model.n_features, 256);
         println!(
-            "calibration:     would pick {} @ {} for this model on this host (256-row probe)",
+            "calibration:     would pick {} @ {} @ {}t for this model on this host (256-row probe)",
             choice.kernel.name(),
-            choice.backend.name()
+            choice.backend.name(),
+            choice.threads
         );
     } else {
         println!("calibration:     (serving calibration targets RF models; GBT uses the defaults)");

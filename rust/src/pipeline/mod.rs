@@ -198,6 +198,7 @@ pub fn run(ds: &Dataset, out_dir: &Path, cfg: &PipelineConfig) -> anyhow::Result
         execution: ExecutionSummary {
             kernel: TraversalKernel::default().name().to_string(),
             backend: SimdBackend::resolve().name().to_string(),
+            threads: crate::inference::parallel::resolve(),
             detected_features: SimdBackend::detected_features()
                 .into_iter()
                 .map(str::to_string)

@@ -132,6 +132,9 @@ pub struct ExecutionSummary {
     pub kernel: String,
     /// SIMD backend the run resolved (env override or best detected).
     pub backend: String,
+    /// Intra-batch thread count the run resolved (env override or the
+    /// single-thread default).
+    pub threads: usize,
     /// CPU SIMD features detected on the host that produced the report.
     pub detected_features: Vec<String>,
 }
@@ -177,6 +180,7 @@ impl Report {
                 obj(vec![
                     ("kernel", s(&self.execution.kernel)),
                     ("backend", s(&self.execution.backend)),
+                    ("threads", num(self.execution.threads as f64)),
                     (
                         "detected_features",
                         arr(self.execution.detected_features.iter().map(|f| s(f))),
@@ -204,9 +208,11 @@ impl Report {
             self.dataset.source
         ));
         md.push_str(&format!(
-            "- execution: kernel {} on the {} backend (host SIMD features: {})\n\n",
+            "- execution: kernel {} on the {} backend with {} intra-batch thread(s) \
+             (host SIMD features: {})\n\n",
             self.execution.kernel,
             self.execution.backend,
+            self.execution.threads,
             if self.execution.detected_features.is_empty() {
                 "none".to_string()
             } else {
@@ -431,6 +437,7 @@ mod tests {
             execution: ExecutionSummary {
                 kernel: "branchless".into(),
                 backend: "avx2".into(),
+                threads: 2,
                 detected_features: vec!["sse2".into(), "avx2".into()],
             },
             models: vec![ModelReport {
@@ -480,6 +487,7 @@ mod tests {
         let exec = v.get("execution").unwrap();
         assert_eq!(exec.get("kernel").and_then(Json::as_str), Some("branchless"));
         assert_eq!(exec.get("backend").and_then(Json::as_str), Some("avx2"));
+        assert_eq!(exec.get("threads").and_then(Json::as_f64), Some(2.0));
         assert_eq!(exec.get("detected_features").and_then(Json::as_arr).unwrap().len(), 2);
     }
 
@@ -491,7 +499,7 @@ mod tests {
         assert!(md.contains("Parity verdict: PASS"));
         assert!(md.contains("| accuracy (float reference) | 0.9700 |"));
         assert!(md.contains("branchless | 120.0"));
-        assert!(md.contains("execution: kernel branchless on the avx2 backend"));
+        assert!(md.contains("execution: kernel branchless on the avx2 backend with 2 intra-batch thread(s)"));
         assert!(md.contains("sse2, avx2"));
     }
 

@@ -1,9 +1,11 @@
-//! Batch-vs-scalar parity suite (ISSUE 1 + 2 + 3 + 5 acceptance): for
-//! every engine variant, both node layouts, **all three kernels**
+//! Batch-vs-scalar parity suite (ISSUE 1 + 2 + 3 + 5 + 6 acceptance):
+//! for every engine variant, both node layouts, **all three kernels**
 //! (branchy early-exit, predicated branchless fixed-trip, and the
-//! QuickScorer bitvector evaluation) and **every available SIMD
-//! backend** (scalar, plus AVX2 / NEON where the CPU feature was
-//! detected), the batch kernel must be **element-wise identical** to
+//! QuickScorer bitvector evaluation), **every available SIMD backend**
+//! (scalar, plus AVX2 / NEON where the CPU feature was detected) and
+//! **every intra-batch thread count** (1/2/3/8 — see the dedicated
+//! threads suite at the bottom), the batch kernel must be
+//! **element-wise identical** to
 //! the per-row path — including ragged final tiles (batch sizes 1, R−1,
 //! R, R+1, and the exhaustive 1..=17 sweep) and a batch large enough to
 //! cross many tiles (1000). Probabilities are compared with `assert_eq`
@@ -19,7 +21,7 @@
 use intreeger::data::{esa_like, shuttle_like, synth, SynthSpec};
 use intreeger::inference::{
     compile_variant_with, Engine, GbtIntEngine, IntEngine, NodeOrder, SimdBackend,
-    TraversalKernel, Variant, BACKEND_ENV, TILE_ROWS,
+    TraversalKernel, Variant, BACKEND_ENV, THREADS_ENV, TILE_ROWS,
 };
 use intreeger::ir::{Model, ModelKind, Node, Tree};
 use intreeger::trees::{train_gbt, ForestParams, GbtParams, RandomForest};
@@ -474,6 +476,156 @@ fn layouts_agree_batched_and_scalar() {
                 variant.name()
             );
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Intra-batch threads dimension (ISSUE 6 acceptance): the thread count is
+// a pure performance knob — bit-identical at every count.
+
+/// For every node order × kernel × available SIMD backend, running the
+/// batch accumulation with 2, 3 or 8 intra-batch threads must be
+/// **bit-identical** to the single-thread result — raw f32 probabilities
+/// (float and FlInt) and `u32` fixed accumulators — at every ragged
+/// batch size 1..=17 and at a many-tile 4096-row batch, on rows that
+/// include exact-threshold and NaN probes. Drives the public `*_exec`
+/// funnels directly (the task scheduler caps at the task count, so the
+/// parallel split runs even on single-core hosts where the engine-level
+/// `set_threads` would clamp the request away).
+#[test]
+fn threads_parity_bit_identical_across_counts() {
+    use intreeger::inference::batch::{
+        float_proba_batch_exec, flint_proba_batch_exec, int_fixed_batch_exec,
+    };
+    use intreeger::inference::CompiledForest;
+
+    let ds = shuttle_like(600, 40);
+    let model = RandomForest::train(
+        &ds,
+        &ForestParams { n_trees: 9, max_depth: 6, ..Default::default() },
+        40,
+    );
+    let mut rng = Rng::new(40);
+    let mut row_sets: Vec<Vec<f32>> =
+        (1..=17).map(|n| probe_rows(&mut rng, &model, n)).collect();
+    row_sets.push(probe_rows(&mut rng, &model, 4096));
+    for order in NodeOrder::all() {
+        let f = CompiledForest::compile_with(&model, order);
+        for kernel in TraversalKernel::all() {
+            for &backend in SimdBackend::available() {
+                for rows in &row_sets {
+                    let n = rows.len() / model.n_features;
+                    let float1 = float_proba_batch_exec(&f, rows, kernel, backend, 1);
+                    let flint1 = flint_proba_batch_exec(&f, rows, kernel, backend, 1);
+                    let int1 = int_fixed_batch_exec(&f, rows, kernel, backend, 1);
+                    for threads in [2usize, 3, 8] {
+                        let tag = format!(
+                            "{}/{}/{}/{threads}t n={n}",
+                            order.name(),
+                            kernel.name(),
+                            backend.name()
+                        );
+                        assert_eq!(
+                            float1,
+                            float_proba_batch_exec(&f, rows, kernel, backend, threads),
+                            "{tag}: float probas not bit-identical"
+                        );
+                        assert_eq!(
+                            flint1,
+                            flint_proba_batch_exec(&f, rows, kernel, backend, threads),
+                            "{tag}: flint probas not bit-identical"
+                        );
+                        assert_eq!(
+                            int1,
+                            int_fixed_batch_exec(&f, rows, kernel, backend, threads),
+                            "{tag}: fixed accumulators not bit-identical"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The engine-level threads knob composes with kernels: `set_threads`
+/// (clamped to this host's cores, so the larger counts only bite on
+/// multi-core CI legs) must leave classes and probabilities bit-identical
+/// to the per-row path for every variant, and GBT margins must apply the
+/// pre-seeded base score exactly once at any count.
+#[test]
+fn engine_set_threads_is_a_pure_performance_knob() {
+    let ds = shuttle_like(900, 41);
+    let model = RandomForest::train(
+        &ds,
+        &ForestParams { n_trees: 6, max_depth: 5, ..Default::default() },
+        41,
+    );
+    let n = 137usize;
+    let flat = &ds.features[..n * ds.n_features];
+    for variant in Variant::all() {
+        let mut engine = compile_variant_with(&model, variant, NodeOrder::Depth);
+        for kernel in TraversalKernel::all() {
+            engine.set_kernel(kernel);
+            for threads in [1usize, 2, 3, 8] {
+                engine.set_threads(threads);
+                let tag = format!("{}/{}/{threads}t", variant.name(), kernel.name());
+                let classes = engine.predict_batch(flat);
+                let probas = engine.predict_proba_batch(flat);
+                for i in 0..n {
+                    assert_eq!(classes[i], engine.predict(ds.row(i)), "{tag}: class row {i}");
+                    assert_eq!(
+                        probas[i],
+                        engine.predict_proba(ds.row(i)),
+                        "{tag}: proba row {i} not bit-identical"
+                    );
+                }
+            }
+        }
+    }
+    let gbt = train_gbt(&ds, &GbtParams { n_rounds: 4, max_depth: 4, ..Default::default() }, 41);
+    let mut e = GbtIntEngine::compile(&gbt);
+    for threads in [1usize, 2, 3, 8] {
+        e.set_threads(threads);
+        let margins = e.predict_fixed_batch(flat);
+        for i in 0..n {
+            assert_eq!(margins[i], e.predict_fixed(ds.row(i)), "gbt {threads}t margin row {i}");
+        }
+    }
+}
+
+/// The override env actually pins the thread count: with
+/// `INTREEGER_THREADS=1` every engine compiled in the process defaults
+/// to single-thread execution and the calibration sweep collapses to
+/// that single candidate (mirrors `backend_env_override_pins_scalar`).
+#[test]
+fn threads_env_override_pins_single_thread() {
+    // Restore (not remove) afterwards: the pinned-threads CI legs set
+    // this variable for the whole test binary, and unconditionally
+    // deleting it would un-pin every test that starts after this one.
+    let prior = std::env::var(THREADS_ENV).ok();
+    std::env::set_var(THREADS_ENV, "1");
+    let ds = shuttle_like(300, 42);
+    let model = RandomForest::train(
+        &ds,
+        &ForestParams { n_trees: 3, max_depth: 4, ..Default::default() },
+        42,
+    );
+    let engine = compile_variant_with(&model, Variant::IntTreeger, NodeOrder::Depth);
+    let pinned = engine.threads();
+    let resolved = intreeger::inference::parallel::resolve();
+    let sweep = intreeger::inference::parallel::sweep();
+    match prior {
+        Some(v) => std::env::set_var(THREADS_ENV, v),
+        None => std::env::remove_var(THREADS_ENV),
+    }
+    assert_eq!(pinned, 1, "engine default must honor the override");
+    assert_eq!(resolved, 1);
+    assert_eq!(sweep, vec![1], "calibration sweep must collapse");
+    // And the pinned engine still answers correctly.
+    let flat = &ds.features[..16 * ds.n_features];
+    let classes = engine.predict_batch(flat);
+    for (i, &c) in classes.iter().enumerate() {
+        assert_eq!(c, engine.predict(ds.row(i)), "row {i}");
     }
 }
 

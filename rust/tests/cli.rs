@@ -41,6 +41,7 @@ fn help_lists_every_subcommand_and_flag_enumeration() {
         "--workers",          // serve worker pool
         "--calibrate",        // serve auto-calibration
         "--backend",          // serve SIMD backend override
+        "--threads",          // serve/inspect intra-batch thread override
         "--pipeline",         // serve from a bundle
         "--target",           // pipeline label column
         "--holdout",          // pipeline split fraction
@@ -104,8 +105,13 @@ fn pipeline_cli_end_to_end_and_serve_from_bundle() {
         text.contains("execution: kernel"),
         "serve must surface the execution strategy:\n{text}"
     );
+    assert!(
+        text.contains("intra-batch thread(s)"),
+        "serve must surface the thread count:\n{text}"
+    );
     // report.json carries the additive execution object (schema v1).
     assert!(report.contains("\"backend\":"), "missing execution backend in report");
+    assert!(report.contains("\"threads\":"), "missing execution threads in report");
     assert!(report.contains("\"detected_features\":"), "missing detected_features in report");
 }
 
@@ -235,6 +241,13 @@ fn inspect_reports_quickscorer_eligibility_and_simd() {
     // calibration preview (this model is RF, so the probe runs).
     assert!(text.contains("simd:"), "missing SIMD summary in:\n{text}");
     assert!(text.contains("backends available [scalar"), "missing backend list in:\n{text}");
+    // Core topology + threads default (the per-machine half of scaling).
+    assert!(text.contains("cores:"), "missing core summary in:\n{text}");
+    assert!(text.contains("logical"), "missing logical core count in:\n{text}");
+    assert!(
+        text.contains("default intra-batch threads"),
+        "missing threads default in:\n{text}"
+    );
     assert!(text.contains("calibration:     would pick"), "missing calibration preview:\n{text}");
 
     // A forced backend flows through `inspect --backend` into the
@@ -249,6 +262,50 @@ fn inspect_reports_quickscorer_eligibility_and_simd() {
     let text = String::from_utf8_lossy(&out.stdout);
     assert!(text.contains("default scalar"), "override must pin the default:\n{text}");
     assert!(text.contains("@ scalar"), "calibration must collapse to scalar:\n{text}");
+}
+
+/// `--threads 1` (and equivalently `INTREEGER_THREADS=1`) pins the
+/// intra-batch thread count: the inspect default collapses to 1 and the
+/// calibration preview's winner label carries `@ 1t`.
+#[test]
+fn inspect_threads_flag_and_env_pin_single_thread() {
+    let dir = tmpdir();
+    let model = dir.join("threads_model.json");
+    let st = Command::new(bin())
+        .args(["train", "--dataset", "shuttle", "--rows", "800", "--trees", "3", "--depth", "4",
+               "--seed", "11", "--out"])
+        .arg(&model)
+        .status()
+        .unwrap();
+    assert!(st.success());
+    // Flag form.
+    let out = Command::new(bin())
+        .args(["inspect", "--model"])
+        .arg(&model)
+        .args(["--threads", "1"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "inspect failed: {}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        text.contains("default intra-batch threads 1"),
+        "--threads 1 must pin the default:\n{text}"
+    );
+    assert!(text.contains("@ 1t"), "calibration winner must carry the thread count:\n{text}");
+    // Env form — same pin without the flag.
+    let out = Command::new(bin())
+        .args(["inspect", "--model"])
+        .arg(&model)
+        .env("INTREEGER_THREADS", "1")
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        text.contains("default intra-batch threads 1"),
+        "INTREEGER_THREADS=1 must pin the default:\n{text}"
+    );
+    assert!(text.contains("@ 1t"), "calibration sweep must collapse to 1 thread:\n{text}");
 }
 
 #[test]

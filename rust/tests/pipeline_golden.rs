@@ -76,12 +76,12 @@ fn golden_report_schema_and_parity_verdict() {
         "dataset schema drifted"
     );
     // The additive execution object: configured kernel, resolved SIMD
-    // backend, and host features (values are host-dependent; the schema
-    // and executability are not).
+    // backend, resolved thread count, and host features (values are
+    // host-dependent; the schema and executability are not).
     let exec = v.get("execution").unwrap();
     assert_eq!(
         obj_keys(exec),
-        ["backend", "detected_features", "kernel"],
+        ["backend", "detected_features", "kernel", "threads"],
         "execution schema drifted"
     );
     assert_eq!(exec.get("kernel").and_then(Json::as_str), Some("branchless"));
@@ -89,6 +89,11 @@ fn golden_report_schema_and_parity_verdict() {
     let backend = intreeger::inference::SimdBackend::from_name(backend)
         .unwrap_or_else(|| panic!("unknown backend '{backend}' in report"));
     assert!(backend.is_available(), "reported backend must be executable on this host");
+    let threads = exec.get("threads").and_then(Json::as_usize).unwrap();
+    assert!(
+        (1..=intreeger::inference::parallel::detected()).contains(&threads),
+        "reported thread count must be runnable on this host"
+    );
     assert!(exec.get("detected_features").and_then(Json::as_arr).is_some());
 
     let d = v.get("dataset").unwrap();
