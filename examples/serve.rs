@@ -71,8 +71,10 @@ fn main() {
                 let burst = burst.min(n - answered);
                 let rows: Vec<Vec<f32>> =
                     (0..burst).map(|k| ds.row((i + k) % ds.n_rows()).to_vec()).collect();
+                // Every request resolves — count only the Ok ones as
+                // answered (typed failures would be retried next burst).
                 let rs = server.infer_many(rows);
-                answered += rs.len();
+                answered += rs.iter().filter(|r| r.is_ok()).count();
                 i += burst;
                 std::thread::sleep(Duration::from_micros(200));
             }
@@ -100,8 +102,12 @@ fn main() {
             snap.latency_mean_us, snap.latency_p50_us, snap.latency_p99_us
         );
         println!(
-            "  per-batch: size p50 {:.0} / p99 {:.0}, service p50 {:.0} us / p99 {:.0} us\n",
+            "  per-batch: size p50 {:.0} / p99 {:.0}, service p50 {:.0} us / p99 {:.0} us",
             snap.batch_p50, snap.batch_p99, snap.batch_latency_p50_us, snap.batch_latency_p99_us
+        );
+        println!(
+            "  failure model: shed {} expired {} rejected {} lost {} (degraded: {})\n",
+            snap.shed, snap.expired, snap.rejected, snap.lost, snap.degraded
         );
     }
 

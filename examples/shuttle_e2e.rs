@@ -144,10 +144,15 @@ fn main() {
     let responses = server.infer_many(reqs);
     let wall = t0.elapsed().as_secs_f64();
     let snap = server.metrics();
+    // Requests now resolve as Result: a typed failure counts as a
+    // mismatch here — the closed-loop driver expects every row answered.
     let serve_mismatch = responses
         .iter()
         .enumerate()
-        .filter(|(i, r)| r.fixed != ie.predict_fixed(test.row(i % test.n_rows())))
+        .filter(|(i, r)| match r {
+            Ok(r) => r.fixed != ie.predict_fixed(test.row(i % test.n_rows())),
+            Err(_) => true,
+        })
         .count();
     println!(
         "[7] served {n_req} reqs at {:.0} req/s (p50 {:.0} us, p99 {:.0} us; {} rows scalar / {} rows xla); {} mismatches",

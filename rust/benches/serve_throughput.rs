@@ -5,15 +5,25 @@
 //! worker pool — plus the ISSUE-6 question: at a **fixed core budget**,
 //! is it better to spend cores on worker shards (inter-batch
 //! parallelism), on the intra-batch tile scheduler, or on a mix?
+//!
+//! ISSUE 7 adds the **overload section**: an open-loop flood at offered
+//! load ≥ 2x measured capacity against a small admission queue, showing
+//! the failure model at work — goodput (accepted req/s actually
+//! answered), shed rate, and the latency p99 **of accepted requests**
+//! (the point of load shedding: admitted work keeps its latency). The
+//! section writes a machine-readable `BENCH_serve.json` at the repo root
+//! (path overridable via `INTREEGER_SERVE_JSON`); `BENCH_SMOKE=1` runs
+//! the reduced-size CI variant with an identical schema.
 
-use intreeger::coordinator::{BatchPolicy, InferenceServer, ServerConfig};
+use intreeger::coordinator::{BatchPolicy, InferenceServer, ServeError, ServerConfig};
 use intreeger::data::shuttle_like;
 use intreeger::inference::IntEngine;
 use intreeger::runtime::{artifacts_available, engine_for_model};
 use intreeger::trees::{ForestParams, RandomForest};
 use intreeger::util::bench::{black_box, measure, report, section};
+use intreeger::util::json::{num, obj, s, Json};
 use std::path::Path;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 fn main() {
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -71,7 +81,7 @@ fn main() {
             snap.mean_batch,
             snap.batch_latency_p99_us
         );
-        black_box(responses.len());
+        black_box(responses.iter().filter(|r| r.is_ok()).count());
     }
 
     // Fixed core budget B: B workers x 1 thread (pure sharding) vs
@@ -119,12 +129,14 @@ fn main() {
             snap.mean_batch,
             snap.batch_latency_p99_us
         );
-        black_box(responses.len());
+        black_box(responses.iter().filter(|r| r.is_ok()).count());
     }
     match prior_threads {
         Some(v) => std::env::set_var(intreeger::inference::THREADS_ENV, v),
         None => std::env::remove_var(intreeger::inference::THREADS_ENV),
     }
+
+    overload_section(&model, &ds);
 
     if !artifacts_available(&dir) {
         println!("\n(artifacts not built — run `make artifacts` for the XLA comparisons)");
@@ -176,6 +188,7 @@ fn main() {
                 queue_depth: 4096,
                 auto_calibrate: false, // measure both routes explicitly
                 n_workers: 1,          // isolate routing from pool scaling
+                ..Default::default()
             },
         );
         let n = 4000usize;
@@ -193,6 +206,116 @@ fn main() {
             snap.rows_xla,
             snap.mean_batch
         );
-        black_box(responses.len());
+        black_box(responses.iter().filter(|r| r.is_ok()).count());
+    }
+}
+
+/// ISSUE-7 overload study. Two runs against the same small-queue config:
+///
+/// 1. **capacity probe** — a closed-loop `infer_many` (blocking clients,
+///    every request resolves) measures what the server can actually
+///    sustain;
+/// 2. **open-loop flood** — raw `submit_with_ttl` as fast as the client
+///    can go (submission is orders of magnitude cheaper than serving, so
+///    offered load lands far above 2x capacity) against a 256-deep
+///    admission queue with a 5 ms TTL. Overflow sheds at admission
+///    (`QueueFull`), admitted-but-stale work expires at batch formation
+///    (`DeadlineExceeded`), and everything still resolves.
+///
+/// Reported: goodput (answered req/s), shed rate, and latency p50/p99 of
+/// the *accepted* requests — the metric load shedding exists to protect.
+fn overload_section(model: &intreeger::ir::Model, ds: &intreeger::data::Dataset) {
+    section("overload: open-loop flood at >= 2x capacity (admission control + TTL)");
+    let smoke = std::env::var("BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let config = ServerConfig {
+        policy: BatchPolicy { max_batch: 64, max_wait: Duration::from_micros(200) },
+        queue_depth: 256,
+        n_workers: 1,
+        ..Default::default()
+    };
+
+    // 1. Closed-loop capacity probe.
+    let probe_n = if smoke { 1_000 } else { 4_000 };
+    let server = InferenceServer::start(model, None, config.clone());
+    let reqs: Vec<Vec<f32>> = (0..probe_n).map(|i| ds.row(i % ds.n_rows()).to_vec()).collect();
+    let t0 = Instant::now();
+    let answered = server.infer_many(reqs).iter().filter(|r| r.is_ok()).count();
+    let capacity = answered as f64 / t0.elapsed().as_secs_f64();
+    drop(server);
+    println!("capacity (closed loop, queue 256): {capacity:>8.0} req/s");
+
+    // 2. Open-loop flood with a per-request TTL.
+    let offered = if smoke { 2_000 } else { 8_000 };
+    let ttl = Duration::from_millis(5);
+    let server = InferenceServer::start(model, None, config);
+    let mut rxs = Vec::with_capacity(offered);
+    let mut shed = 0u64;
+    let t0 = Instant::now();
+    for i in 0..offered {
+        match server.submit_with_ttl(ds.row(i % ds.n_rows()).to_vec(), Some(ttl)) {
+            Ok(rx) => rxs.push(rx),
+            Err(ServeError::QueueFull) => shed += 1,
+            Err(e) => panic!("unexpected admission error: {e}"),
+        }
+    }
+    let submit_wall = t0.elapsed().as_secs_f64();
+    let (mut ok, mut expired, mut lost) = (0u64, 0u64, 0u64);
+    for rx in rxs {
+        match rx.recv().unwrap_or(Err(ServeError::WorkerLost)) {
+            Ok(_) => ok += 1,
+            Err(ServeError::DeadlineExceeded) => expired += 1,
+            Err(_) => lost += 1,
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let snap = server.metrics();
+    let offered_rate = offered as f64 / submit_wall;
+    let goodput = ok as f64 / wall;
+    let shed_rate = shed as f64 / offered as f64;
+    assert_eq!(ok + expired + lost + shed, offered as u64, "every request resolves");
+    println!(
+        "offered {offered} req at {offered_rate:>8.0} req/s ({:.1}x capacity)",
+        offered_rate / capacity.max(1.0)
+    );
+    println!(
+        "goodput {goodput:>8.0} req/s  shed rate {:.1}% ({shed})  expired {expired}  lost {lost}",
+        shed_rate * 100.0
+    );
+    println!(
+        "accepted-request latency: p50 {:.0} us  p99 {:.0} us (admitted work keeps its latency)",
+        snap.latency_p50_us,
+        snap.latency_p99_us
+    );
+
+    // Machine-readable artifact, BENCH_batch.json-style.
+    let path = std::env::var("INTREEGER_SERVE_JSON").unwrap_or_else(|_| {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve.json").to_string()
+    });
+    let doc = obj(vec![
+        ("bench", s("serve_throughput")),
+        ("schema", num(1.0)),
+        ("note", s("overload study; regenerate with: cargo bench --bench serve_throughput")),
+        ("pending", Json::Bool(false)),
+        ("smoke", Json::Bool(smoke)),
+        ("capacity_req_s", num(capacity)),
+        ("offered_req_s", num(offered_rate)),
+        ("goodput_req_s", num(goodput)),
+        ("shed_rate", num(shed_rate)),
+        ("accepted_p50_us", num(snap.latency_p50_us)),
+        ("accepted_p99_us", num(snap.latency_p99_us)),
+        (
+            "counters",
+            obj(vec![
+                ("offered", num(offered as f64)),
+                ("ok", num(ok as f64)),
+                ("shed", num(shed as f64)),
+                ("expired", num(expired as f64)),
+                ("lost", num(lost as f64)),
+            ]),
+        ),
+    ]);
+    match std::fs::write(&path, doc.to_string() + "\n") {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
     }
 }

@@ -115,6 +115,30 @@ impl<T> Batcher<T> {
         self.oldest = None;
         std::mem::replace(&mut self.pending, Vec::with_capacity(self.policy.max_batch))
     }
+
+    /// Split a flushed batch into (live, expired) by per-item deadline,
+    /// preserving order within each part. An item with deadline `d` is
+    /// expired iff `now > d` (a deadline of exactly `now` still serves);
+    /// items without a deadline never expire. This is the TTL check the
+    /// server applies at batch-formation time — expiry is evaluated when
+    /// the batch is about to execute, not at submission, so a request
+    /// that waited out its TTL in the queue is answered `DeadlineExceeded`
+    /// instead of burning kernel time.
+    pub fn partition_expired(
+        batch: Vec<T>,
+        now: Instant,
+        deadline: impl Fn(&T) -> Option<Instant>,
+    ) -> (Vec<T>, Vec<T>) {
+        let mut live = Vec::with_capacity(batch.len());
+        let mut expired = Vec::new();
+        for item in batch {
+            match deadline(&item) {
+                Some(d) if now > d => expired.push(item),
+                _ => live.push(item),
+            }
+        }
+        (live, expired)
+    }
 }
 
 #[cfg(test)]
@@ -183,6 +207,93 @@ mod tests {
         assert_eq!(d, Duration::from_micros(600));
         let d2 = b.time_to_deadline(t0 + Duration::from_micros(2000)).unwrap();
         assert_eq!(d2, Duration::ZERO);
+    }
+
+    #[test]
+    fn partition_expired_splits_by_deadline() {
+        let t0 = Instant::now();
+        // Items carry (id, deadline).
+        let batch: Vec<(u64, Option<Instant>)> = vec![
+            (0, None),                                    // no TTL: never expires
+            (1, Some(t0)),                                // already lapsed
+            (2, Some(t0 + Duration::from_micros(500))),   // still live at t0+100us
+            (3, Some(t0 + Duration::from_micros(50))),    // lapsed at t0+100us
+        ];
+        let now = t0 + Duration::from_micros(100);
+        let (live, expired) = Batcher::partition_expired(batch, now, |it| it.1);
+        assert_eq!(live.iter().map(|it| it.0).collect::<Vec<_>>(), vec![0, 2]);
+        assert_eq!(expired.iter().map(|it| it.0).collect::<Vec<_>>(), vec![1, 3]);
+    }
+
+    #[test]
+    fn partition_expired_boundary_is_inclusive_for_serving() {
+        // A deadline of exactly `now` still serves: expiry is strict
+        // (`now > d`), matching "TTL of the remaining wait".
+        let t0 = Instant::now();
+        let (live, expired) =
+            Batcher::partition_expired(vec![(1u8, Some(t0))], t0, |it| it.1);
+        assert_eq!(live.len(), 1);
+        assert!(expired.is_empty());
+    }
+
+    #[test]
+    fn partition_expired_all_live_and_all_expired() {
+        let t0 = Instant::now();
+        let now = t0 + Duration::from_millis(10);
+        let all_live: Vec<(u8, Option<Instant>)> = (0..5).map(|i| (i, None)).collect();
+        let (live, expired) = Batcher::partition_expired(all_live, now, |it| it.1);
+        assert_eq!((live.len(), expired.len()), (5, 0));
+        let all_dead: Vec<(u8, Option<Instant>)> = (0..5).map(|i| (i, Some(t0))).collect();
+        let (live, expired) = Batcher::partition_expired(all_dead, now, |it| it.1);
+        assert_eq!((live.len(), expired.len()), (0, 5));
+        // Order preserved inside the expired part too.
+        assert_eq!(expired.iter().map(|it| it.0).collect::<Vec<_>>(), vec![0, 1, 2, 3, 4]);
+    }
+
+    /// Property: partition_expired never loses or duplicates an item,
+    /// whatever the deadline pattern (the TTL sibling of the batcher's
+    /// no-loss invariant).
+    #[test]
+    fn prop_partition_expired_no_loss() {
+        check(
+            "partition_expired_no_loss",
+            |r| {
+                let n = r.below(40);
+                // Per item: 0 = no TTL, 1 = lapsed, 2 = live.
+                (0..n).map(|_| r.below(3) as u8).collect::<Vec<_>>()
+            },
+            |pattern| {
+                let t0 = Instant::now();
+                let now = t0 + Duration::from_micros(100);
+                let batch: Vec<(usize, Option<Instant>)> = pattern
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &k)| {
+                        let d = match k {
+                            0 => None,
+                            1 => Some(t0),
+                            _ => Some(now + Duration::from_micros(50)),
+                        };
+                        (i, d)
+                    })
+                    .collect();
+                let n_lapsed = pattern.iter().filter(|&&k| k == 1).count();
+                let (live, expired) = Batcher::partition_expired(batch, now, |it| it.1);
+                prop_ensure!(
+                    expired.len() == n_lapsed,
+                    "expired {} != lapsed {n_lapsed}",
+                    expired.len()
+                );
+                let mut ids: Vec<usize> =
+                    live.iter().chain(expired.iter()).map(|it| it.0).collect();
+                ids.sort_unstable();
+                prop_ensure!(
+                    ids == (0..pattern.len()).collect::<Vec<_>>(),
+                    "items lost or duplicated: {ids:?}"
+                );
+                Ok(())
+            },
+        );
     }
 
     /// Property: no item is ever lost or duplicated across an arbitrary

@@ -1,0 +1,245 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! A [`FaultPlan`] is a *script* of failures — worker panics on specific
+//! batch sequence numbers, artificial per-batch service latency, forced
+//! queue-full rejections on the first N submissions — that the
+//! [`super::server`] consults at well-defined points. The plan is plain
+//! data (cloneable, comparable); the server materializes it into a
+//! [`Faults`] injector holding the monotone sequence counters, shared by
+//! every worker shard.
+//!
+//! Determinism is the whole point: the chaos suite (`tests/chaos.rs`)
+//! asserts serving invariants (no lost reply, no hang, surviving results
+//! bit-identical to a fault-free run) under *reproducible* failures. A
+//! plan has no randomness — injection triggers on exact global sequence
+//! numbers, so the same plan against the same request stream (with one
+//! worker shard) fails the same batch every run. With several shards the
+//! *set* of injected faults is still exact (the counters are global and
+//! atomic); only which shard draws a given sequence number varies.
+//!
+//! Plans come from two places:
+//! * programmatically — [`ServerConfig::faults`](super::ServerConfig)
+//!   (tests, benches);
+//! * the [`FAULTS_ENV`] environment variable (`INTREEGER_FAULTS`) — for
+//!   injecting faults into an unmodified binary (the CI chaos leg pins
+//!   plans this way). Format: `;`- or `,`-separated directives:
+//!   `panic_batch=N` (repeatable; 1-indexed executed-batch sequence
+//!   numbers that panic mid-execution), `latency_us=N` (added to every
+//!   batch's service time), `queue_full_n=N` (the first N submissions
+//!   are refused with `QueueFull`). Malformed directives are reported
+//!   loudly on stderr and skipped — an operator typo must not take the
+//!   server down (loud-never-panic, the same contract as the backend and
+//!   threads overrides).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Environment variable holding a fault plan for the serving stack
+/// (see the module docs for the directive syntax).
+pub const FAULTS_ENV: &str = "INTREEGER_FAULTS";
+
+/// A deterministic failure script (plain data; see the module docs).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// 1-indexed global batch sequence numbers whose execution panics
+    /// (simulating a crash in the kernel / engine path).
+    pub panic_batches: Vec<u64>,
+    /// Artificial latency added to every batch's execution.
+    pub latency: Option<Duration>,
+    /// The first N submissions are refused as `QueueFull` (simulating a
+    /// saturated admission queue regardless of actual depth).
+    pub queue_full_first: u64,
+}
+
+impl FaultPlan {
+    /// The empty plan: no faults injected.
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// True when the plan injects nothing.
+    pub fn is_empty(&self) -> bool {
+        self.panic_batches.is_empty() && self.latency.is_none() && self.queue_full_first == 0
+    }
+
+    /// Parse the `INTREEGER_FAULTS` directive syntax. Unknown or
+    /// malformed directives are returned as errors; [`Self::from_env`]
+    /// downgrades them to loud warnings.
+    pub fn parse(text: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::none();
+        for tok in text.split([';', ',']).map(str::trim).filter(|t| !t.is_empty()) {
+            let (key, value) = tok
+                .split_once('=')
+                .ok_or_else(|| format!("fault directive '{tok}' is not key=value"))?;
+            let n: u64 = value
+                .trim()
+                .parse()
+                .map_err(|e| format!("fault directive '{tok}': {e}"))?;
+            match key.trim() {
+                "panic_batch" => plan.panic_batches.push(n),
+                "latency_us" => plan.latency = Some(Duration::from_micros(n)),
+                "queue_full_n" => plan.queue_full_first = n,
+                other => return Err(format!("unknown fault directive '{other}'")),
+            }
+        }
+        plan.panic_batches.sort_unstable();
+        plan.panic_batches.dedup();
+        Ok(plan)
+    }
+
+    /// Read the plan from [`FAULTS_ENV`]; unset means no faults.
+    /// Malformed plans are reported on stderr and treated as empty
+    /// (loud-never-panic).
+    pub fn from_env() -> FaultPlan {
+        match std::env::var(FAULTS_ENV) {
+            Ok(text) => match Self::parse(&text) {
+                Ok(plan) => {
+                    if !plan.is_empty() {
+                        eprintln!("intreeger-server: fault injection ACTIVE ({FAULTS_ENV}={text})");
+                    }
+                    plan
+                }
+                Err(e) => {
+                    eprintln!("intreeger-server: ignoring malformed {FAULTS_ENV}: {e}");
+                    FaultPlan::none()
+                }
+            },
+            Err(_) => FaultPlan::none(),
+        }
+    }
+}
+
+/// The runtime injector: a [`FaultPlan`] plus the global sequence
+/// counters. One per server, shared (behind an `Arc`) by the admission
+/// path and every worker shard.
+#[derive(Debug, Default)]
+pub struct Faults {
+    plan: FaultPlan,
+    /// Batches that have *started* executing, across all shards.
+    batches: AtomicU64,
+    /// Submissions admitted or shed so far.
+    submits: AtomicU64,
+}
+
+impl Faults {
+    /// Materialize a plan into an injector with zeroed counters.
+    pub fn new(plan: FaultPlan) -> Faults {
+        Faults { plan, ..Faults::default() }
+    }
+
+    /// The plan this injector runs.
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Admission-time hook: returns true when this submission must be
+    /// refused as `QueueFull` (counted against `queue_full_first`).
+    pub fn inject_queue_full(&self) -> bool {
+        if self.plan.queue_full_first == 0 {
+            return false; // fast path: skip the counter
+        }
+        let seq = self.submits.fetch_add(1, Ordering::Relaxed) + 1;
+        seq <= self.plan.queue_full_first
+    }
+
+    /// Execution-time hook, called *inside* the shard's catch_unwind
+    /// region: sleeps the scripted latency, then panics if this batch's
+    /// global 1-indexed sequence number is in `panic_batches`.
+    pub fn on_batch_execution(&self) {
+        if self.plan.latency.is_none() && self.plan.panic_batches.is_empty() {
+            return; // fast path: no counter traffic on the hot path
+        }
+        let seq = self.batches.fetch_add(1, Ordering::Relaxed) + 1;
+        if let Some(d) = self.plan.latency {
+            std::thread::sleep(d);
+        }
+        if self.plan.panic_batches.binary_search(&seq).is_ok() {
+            panic!("injected fault: worker panic on batch #{seq}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_plan() {
+        let p = FaultPlan::parse("panic_batch=3;latency_us=250,panic_batch=1;queue_full_n=5")
+            .unwrap();
+        assert_eq!(p.panic_batches, vec![1, 3]); // sorted + deduped
+        assert_eq!(p.latency, Some(Duration::from_micros(250)));
+        assert_eq!(p.queue_full_first, 5);
+        assert!(!p.is_empty());
+    }
+
+    #[test]
+    fn parse_empty_and_whitespace() {
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse(" ; , ").unwrap().is_empty());
+        assert!(FaultPlan::none().is_empty());
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        assert!(FaultPlan::parse("panic_batch").is_err());
+        assert!(FaultPlan::parse("panic_batch=x").is_err());
+        assert!(FaultPlan::parse("frobnicate=1").is_err());
+        assert!(FaultPlan::parse("latency_us=-5").is_err());
+    }
+
+    #[test]
+    fn queue_full_injection_counts_down() {
+        let f = Faults::new(FaultPlan { queue_full_first: 2, ..FaultPlan::none() });
+        assert!(f.inject_queue_full());
+        assert!(f.inject_queue_full());
+        assert!(!f.inject_queue_full());
+        assert!(!f.inject_queue_full());
+        // The empty plan never injects and never touches the counter.
+        let quiet = Faults::new(FaultPlan::none());
+        for _ in 0..10 {
+            assert!(!quiet.inject_queue_full());
+        }
+        assert_eq!(quiet.submits.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn batch_panic_fires_on_exact_sequence_numbers() {
+        let f = Faults::new(FaultPlan { panic_batches: vec![2], ..FaultPlan::none() });
+        f.on_batch_execution(); // batch 1: fine
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f.on_batch_execution() // batch 2: scripted panic
+        }));
+        assert!(r.is_err());
+        f.on_batch_execution(); // batch 3: fine again
+    }
+
+    #[test]
+    fn latency_injection_sleeps() {
+        let f = Faults::new(FaultPlan {
+            latency: Some(Duration::from_millis(5)),
+            ..FaultPlan::none()
+        });
+        let t0 = std::time::Instant::now();
+        f.on_batch_execution();
+        assert!(t0.elapsed() >= Duration::from_millis(5));
+    }
+
+    #[test]
+    fn env_roundtrip_formats() {
+        // The exact strings the CI chaos leg pins.
+        for (text, check) in [
+            ("latency_us=500", FaultPlan {
+                latency: Some(Duration::from_micros(500)),
+                ..FaultPlan::none()
+            }),
+            ("queue_full_n=3", FaultPlan { queue_full_first: 3, ..FaultPlan::none() }),
+            ("panic_batch=1;panic_batch=2", FaultPlan {
+                panic_batches: vec![1, 2],
+                ..FaultPlan::none()
+            }),
+        ] {
+            assert_eq!(FaultPlan::parse(text).unwrap(), check, "{text}");
+        }
+    }
+}

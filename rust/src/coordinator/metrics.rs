@@ -1,7 +1,16 @@
-//! Serving metrics: request counters and latency histograms per route.
+//! Serving metrics: request counters and latency histograms per route,
+//! plus the failure-model counters (shed / expired / rejected / lost,
+//! worker panics and restarts, and the degraded-state flag).
+//!
+//! All mutex-guarded state is accessed through poison-recovering locks
+//! ([`super::lock_unpoisoned`]): one panicked thread must not cascade
+//! into a poisoned-lock panic in every later metrics call — the data is
+//! plain counters and histograms, always valid whatever thread died
+//! mid-update.
 
+use super::lock_unpoisoned;
 use crate::util::stats::Histogram;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
 
 /// Shared metrics sink (cheap atomic counters; histograms behind a
@@ -26,6 +35,20 @@ pub struct Metrics {
     pub flush_deadline: AtomicU64,
     /// Flushes triggered by drain/shutdown.
     pub flush_drain: AtomicU64,
+    /// Requests shed at admission (queue full, or a scripted fault).
+    pub shed: AtomicU64,
+    /// Admitted requests whose TTL lapsed before execution.
+    pub expired: AtomicU64,
+    /// Requests refused at validation (wrong arity, non-finite values).
+    pub rejected: AtomicU64,
+    /// Admitted requests answered `WorkerLost` (their shard crashed).
+    pub lost: AtomicU64,
+    /// Batch executions that panicked (caught by the shard supervisor).
+    pub worker_panics: AtomicU64,
+    /// Worker-loop restarts performed by shard supervisors.
+    pub worker_restarts: AtomicU64,
+    /// True once any shard degraded to the fallback execution strategy.
+    pub degraded: AtomicBool,
     latency_us: Mutex<Histogram>,
     batch_sizes: Mutex<SizeHistogram>,
     /// Time to *execute* one flushed batch (flatten + forest walks; the
@@ -109,6 +132,20 @@ pub struct MetricsSnapshot {
     pub flush_deadline: u64,
     /// Flushes triggered by drain/shutdown.
     pub flush_drain: u64,
+    /// Requests shed at admission (queue full, or a scripted fault).
+    pub shed: u64,
+    /// Admitted requests whose TTL lapsed before execution.
+    pub expired: u64,
+    /// Requests refused at validation (wrong arity, non-finite values).
+    pub rejected: u64,
+    /// Admitted requests answered `WorkerLost` (their shard crashed).
+    pub lost: u64,
+    /// Batch executions that panicked (caught by the shard supervisor).
+    pub worker_panics: u64,
+    /// Worker-loop restarts performed by shard supervisors.
+    pub worker_restarts: u64,
+    /// True once any shard degraded to the fallback execution strategy.
+    pub degraded: bool,
     /// Mean per-request latency (us).
     pub latency_mean_us: f64,
     /// Median per-request latency (us, bucket upper bound).
@@ -147,19 +184,19 @@ impl Metrics {
 
     /// Record one request's end-to-end latency.
     pub fn record_latency_us(&self, us: f64) {
-        self.latency_us.lock().unwrap().record(us);
+        lock_unpoisoned(&self.latency_us).record(us);
     }
 
     /// Record how long serving one flushed batch took.
     pub fn record_batch_latency_us(&self, us: f64) {
-        self.batch_latency_us.lock().unwrap().record(us);
+        lock_unpoisoned(&self.batch_latency_us).record(us);
     }
 
     /// Record the execution strategy serving the scalar route (called
     /// once at server startup with the calibrated — or default —
     /// traversal kernel, SIMD backend, and intra-batch thread count).
     pub fn record_execution(&self, kernel: &str, backend: &str, threads: usize) {
-        *self.execution.lock().unwrap() =
+        *lock_unpoisoned(&self.execution) =
             Some((kernel.to_string(), backend.to_string(), threads));
     }
 
@@ -177,15 +214,15 @@ impl Metrics {
             super::FlushReason::Deadline => self.flush_deadline.fetch_add(1, Ordering::Relaxed),
             super::FlushReason::Drain => self.flush_drain.fetch_add(1, Ordering::Relaxed),
         };
-        self.batch_sizes.lock().unwrap().record(size);
+        lock_unpoisoned(&self.batch_sizes).record(size);
     }
 
     /// Point-in-time copy of every counter and histogram summary.
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let lat = self.latency_us.lock().unwrap();
-        let sizes = self.batch_sizes.lock().unwrap();
-        let blat = self.batch_latency_us.lock().unwrap();
-        let execution = self.execution.lock().unwrap().clone();
+        let lat = lock_unpoisoned(&self.latency_us);
+        let sizes = lock_unpoisoned(&self.batch_sizes);
+        let blat = lock_unpoisoned(&self.batch_latency_us);
+        let execution = lock_unpoisoned(&self.execution).clone();
         let (kernel, backend, threads) = match execution {
             Some((k, b, t)) => (Some(k), Some(b), Some(t)),
             None => (None, None, None),
@@ -200,6 +237,13 @@ impl Metrics {
             flush_full: self.flush_full.load(Ordering::Relaxed),
             flush_deadline: self.flush_deadline.load(Ordering::Relaxed),
             flush_drain: self.flush_drain.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            expired: self.expired.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            lost: self.lost.load(Ordering::Relaxed),
+            worker_panics: self.worker_panics.load(Ordering::Relaxed),
+            worker_restarts: self.worker_restarts.load(Ordering::Relaxed),
+            degraded: self.degraded.load(Ordering::Relaxed),
             latency_mean_us: lat.mean(),
             latency_p50_us: lat.quantile(0.5),
             latency_p99_us: lat.quantile(0.99),
@@ -270,6 +314,57 @@ mod tests {
             s.detected_features,
             crate::inference::SimdBackend::detected_features()
         );
+    }
+
+    #[test]
+    fn failure_counters_accumulate_and_snapshot() {
+        let m = Metrics::new();
+        let s = m.snapshot();
+        assert_eq!(
+            (s.shed, s.expired, s.rejected, s.lost, s.worker_panics, s.worker_restarts),
+            (0, 0, 0, 0, 0, 0)
+        );
+        assert!(!s.degraded);
+        m.shed.fetch_add(3, Ordering::Relaxed);
+        m.expired.fetch_add(2, Ordering::Relaxed);
+        m.rejected.fetch_add(1, Ordering::Relaxed);
+        m.lost.fetch_add(4, Ordering::Relaxed);
+        m.worker_panics.fetch_add(1, Ordering::Relaxed);
+        m.worker_restarts.fetch_add(1, Ordering::Relaxed);
+        m.degraded.store(true, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.shed, 3);
+        assert_eq!(s.expired, 2);
+        assert_eq!(s.rejected, 1);
+        assert_eq!(s.lost, 4);
+        assert_eq!(s.worker_panics, 1);
+        assert_eq!(s.worker_restarts, 1);
+        assert!(s.degraded);
+    }
+
+    /// A thread panicking while holding a metrics lock must not break
+    /// every later metrics call: the poison-recovering accessor keeps
+    /// recording and snapshotting (the data is always-valid counters).
+    #[test]
+    fn metrics_survive_a_poisoned_lock() {
+        let m = std::sync::Arc::new(Metrics::new());
+        m.record_latency_us(100.0);
+        let m2 = std::sync::Arc::clone(&m);
+        // Poison latency_us by panicking while the guard is held.
+        let _ = std::thread::spawn(move || {
+            let _guard = m2.latency_us.lock().unwrap();
+            panic!("poison the metrics lock");
+        })
+        .join();
+        assert!(m.latency_us.lock().is_err(), "lock must actually be poisoned");
+        // Recording and snapshotting still work.
+        m.record_latency_us(300.0);
+        m.record_batch(8, false, FlushReason::Full);
+        m.record_execution("branchless", "scalar", 1);
+        let s = m.snapshot();
+        assert!((s.latency_mean_us - 200.0).abs() < 1e-9);
+        assert_eq!(s.batches_scalar, 1);
+        assert_eq!(s.kernel.as_deref(), Some("branchless"));
     }
 
     #[test]

@@ -17,23 +17,48 @@
 //!   on shard 0 can offload to the XLA/PJRT engine (the AOT-compiled
 //!   Pallas path). All routes produce bit-identical u32 accumulators,
 //!   so routing is invisible to clients.
-//! * [`metrics`] — counters, per-request latency histograms, and
-//!   per-batch size/service-time histograms.
+//! * [`metrics`] — counters, per-request latency histograms, per-batch
+//!   size/service-time histograms, and the failure-model counters
+//!   (shed / expired / rejected / lost, worker panics/restarts,
+//!   degraded flag).
+//! * [`faults`] — deterministic fault injection ([`FaultPlan`],
+//!   `INTREEGER_FAULTS`) powering the chaos suite.
 //!
 //! Everything is std-threads + channels (the build environment has no
 //! async runtime), which also keeps the hot path allocation-light.
+//!
+//! The serving stack has a **typed failure model** (see [`server`]):
+//! every submitted request resolves with a [`Response`] or a
+//! [`ServeError`] — admission sheds instead of blocking under overload,
+//! TTLs expire at batch-formation time, and panicking worker shards are
+//! supervised (requests answered `WorkerLost`, bounded-backoff restart,
+//! degradation to the conservative scalar engine after repeated
+//! failures).
 
 pub mod batcher;
+pub mod faults;
 pub mod metrics;
 pub mod router;
 pub mod server;
 
 pub use batcher::{BatchPolicy, Batcher, FlushReason};
+pub use faults::{FaultPlan, Faults, FAULTS_ENV};
 pub use metrics::{Metrics, MetricsSnapshot};
-pub use router::Router;
+pub use router::{RouteError, Router};
 pub use server::{
-    calibrate_execution, ExecutionChoice, InferenceServer, Request, Response, Route, ServerConfig,
+    calibrate_execution, ExecutionChoice, InferenceServer, Request, Response, Route, ServeError,
+    ServeResult, ServerConfig, DEGRADE_AFTER,
 };
+
+/// Lock a mutex, recovering from poisoning: the coordinator's
+/// mutex-guarded state (metrics histograms, per-shard batchers) is
+/// always structurally valid — each critical section is a single
+/// record/push — so a thread that panicked while holding the lock
+/// leaves usable data behind. Recovering keeps one crashed thread from
+/// cascading into a poisoned-lock panic in every subsequent accessor.
+pub(crate) fn lock_unpoisoned<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
 
 use crate::ir::Model;
 use crate::runtime::PipelineManifest;
@@ -80,7 +105,7 @@ mod tests {
         let (server, model) = server_from_pipeline(&out, ServerConfig::default()).expect("boot");
         let oracle = crate::inference::IntEngine::compile(&model);
         for i in 0..20 {
-            let r = server.infer(ds.row(i).to_vec());
+            let r = server.infer(ds.row(i).to_vec()).expect("serve");
             assert_eq!(r.fixed, oracle.predict_fixed(ds.row(i)), "row {i}");
         }
     }

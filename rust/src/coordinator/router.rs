@@ -2,12 +2,17 @@
 //! side, hot-swappable (the "end-to-end framework" face of the system —
 //! retrain on new data, re-register, clients never stop).
 
-use super::server::{InferenceServer, Response, ServerConfig};
+use super::server::{InferenceServer, Response, ServeError, ServerConfig};
 use crate::ir::Model;
 use std::collections::HashMap;
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, PoisonError, RwLock, RwLockReadGuard, RwLockWriteGuard};
 
 /// Thread-safe name → server mapping.
+///
+/// Registry locks recover from poisoning: a thread that panicked while
+/// holding the lock leaves a perfectly usable `HashMap` behind (every
+/// mutation is a single insert/remove), so later routing calls proceed
+/// instead of cascading the panic.
 #[derive(Default)]
 pub struct Router {
     servers: RwLock<HashMap<String, Arc<InferenceServer>>>,
@@ -18,21 +23,40 @@ pub struct Router {
 pub enum RouteError {
     /// No model is registered under the given name.
     UnknownModel(String),
+    /// The model exists but serving it failed (typed serving error).
+    Serve(ServeError),
 }
 
 impl std::fmt::Display for RouteError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             RouteError::UnknownModel(name) => write!(f, "unknown model '{name}'"),
+            RouteError::Serve(e) => write!(f, "serving failed: {e}"),
         }
     }
 }
 impl std::error::Error for RouteError {}
 
+impl From<ServeError> for RouteError {
+    fn from(e: ServeError) -> RouteError {
+        RouteError::Serve(e)
+    }
+}
+
 impl Router {
     /// Empty registry.
     pub fn new() -> Router {
         Router::default()
+    }
+
+    /// Read lock on the registry, recovering from poisoning.
+    fn read(&self) -> RwLockReadGuard<'_, HashMap<String, Arc<InferenceServer>>> {
+        self.servers.read().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Write lock on the registry, recovering from poisoning.
+    fn write(&self) -> RwLockWriteGuard<'_, HashMap<String, Arc<InferenceServer>>> {
+        self.servers.write().unwrap_or_else(PoisonError::into_inner)
     }
 
     /// Register (or replace) a model under a name. Replacement is atomic:
@@ -46,34 +70,34 @@ impl Router {
         config: ServerConfig,
     ) {
         let server = Arc::new(InferenceServer::start(model, artifacts_dir, config));
-        self.servers.write().unwrap().insert(name.to_string(), server);
+        self.write().insert(name.to_string(), server);
     }
 
     /// Remove a model. Returns true if it existed.
     pub fn unregister(&self, name: &str) -> bool {
-        self.servers.write().unwrap().remove(name).is_some()
+        self.write().remove(name).is_some()
     }
 
     /// Registered model names, sorted.
     pub fn names(&self) -> Vec<String> {
-        let mut v: Vec<String> = self.servers.read().unwrap().keys().cloned().collect();
+        let mut v: Vec<String> = self.read().keys().cloned().collect();
         v.sort();
         v
     }
 
     /// Get a handle to a model's server.
     pub fn server(&self, name: &str) -> Result<Arc<InferenceServer>, RouteError> {
-        self.servers
-            .read()
-            .unwrap()
+        self.read()
             .get(name)
             .cloned()
             .ok_or_else(|| RouteError::UnknownModel(name.to_string()))
     }
 
-    /// Blocking inference against a named model.
+    /// Blocking inference against a named model. Serving failures
+    /// surface as [`RouteError::Serve`] — one typed error space for the
+    /// whole lookup-then-serve path.
     pub fn infer(&self, name: &str, features: Vec<f32>) -> Result<Response, RouteError> {
-        Ok(self.server(name)?.infer(features))
+        Ok(self.server(name)?.infer(features)?)
     }
 }
 
@@ -135,6 +159,46 @@ mod tests {
             }
         }
         assert!(differs, "models m1/m2 unexpectedly identical");
+    }
+
+    #[test]
+    fn serving_failures_surface_as_typed_route_errors() {
+        let router = Router::new();
+        let (_, m) = model(115);
+        router.register("m", &m, None, ServerConfig::default());
+        let err = router.infer("m", vec![1.0]).unwrap_err();
+        assert_eq!(
+            err,
+            RouteError::Serve(ServeError::WrongFeatureCount { expected: m.n_features, got: 1 })
+        );
+        // Both error spaces render through one Display.
+        assert!(err.to_string().contains("wrong feature count"), "{err}");
+        assert!(RouteError::UnknownModel("x".into()).to_string().contains("unknown model"));
+    }
+
+    /// A thread panicking while holding the registry lock must not take
+    /// routing down: the poison-recovering accessors keep the registry
+    /// usable (every mutation is a single insert/remove, so the map is
+    /// always valid).
+    #[test]
+    fn registry_survives_a_poisoned_lock() {
+        let router = std::sync::Arc::new(Router::new());
+        let (ds, m) = model(116);
+        router.register("m", &m, None, ServerConfig::default());
+        let r2 = std::sync::Arc::clone(&router);
+        let _ = std::thread::spawn(move || {
+            let _guard = r2.servers.write().unwrap();
+            panic!("poison the registry lock");
+        })
+        .join();
+        assert!(router.servers.read().is_err(), "lock must actually be poisoned");
+        // Lookup, serving, registration, and removal all still work.
+        assert_eq!(router.names(), vec!["m".to_string()]);
+        router.infer("m", ds.row(0).to_vec()).unwrap();
+        let (_, m2) = model(117);
+        router.register("n", &m2, None, ServerConfig::default());
+        assert_eq!(router.names().len(), 2);
+        assert!(router.unregister("n"));
     }
 
     #[test]

@@ -1,5 +1,5 @@
 //! The inference server: dynamic batching over two execution backends,
-//! drained by a sharded pool of worker threads.
+//! drained by a sharded pool of *supervised* worker threads.
 //!
 //! Requests are round-robin sharded across `n_workers` worker threads;
 //! each worker owns a [`Batcher`] and drains its own channel, so
@@ -11,24 +11,148 @@
 //! is enough). Both backends emit bit-identical u32 fixed-point
 //! accumulators, so the route is an implementation detail (asserted by
 //! integration tests).
+//!
+//! # Failure model
+//!
+//! Every submitted request **resolves** — with a [`Response`] or a typed
+//! [`ServeError`] — and never panics the caller:
+//!
+//! * **Admission control**: [`InferenceServer::submit`] validates the
+//!   row (arity, finiteness), then `try_send`s into the shard channel.
+//!   A full channel *sheds* the request ([`ServeError::QueueFull`])
+//!   instead of blocking the caller — under overload the server
+//!   protects the latency of admitted work and refuses the rest. The
+//!   blocking conveniences ([`InferenceServer::infer`] /
+//!   [`InferenceServer::infer_many`]) are closed-loop clients: they
+//!   absorb transient `QueueFull` with a bounded retry so existing
+//!   all-answered semantics hold, and surface every other error.
+//! * **Deadlines**: a per-request TTL ([`ServerConfig::default_ttl`] or
+//!   [`InferenceServer::submit_with_ttl`]) is checked at batch-formation
+//!   time; rows whose deadline passed before execution resolve as
+//!   [`ServeError::DeadlineExceeded`] without burning kernel time.
+//! * **Shard supervision**: batch execution runs under `catch_unwind`.
+//!   A panicking execution path answers every in-flight request of that
+//!   batch with [`ServeError::WorkerLost`], then the shard's supervisor
+//!   restarts the worker loop with bounded exponential backoff. After
+//!   [`DEGRADE_AFTER`] execution failures the shard *degrades*: it swaps
+//!   to a pre-compiled scalar-branchless single-thread engine (the most
+//!   conservative execution strategy, bit-identical by the parity
+//!   invariant) and records the degraded flag in [`Metrics`].
+//! * **Fault injection**: a deterministic [`FaultPlan`]
+//!   ([`ServerConfig::faults`] or the `INTREEGER_FAULTS` env) scripts
+//!   worker panics, added service latency, and forced queue-full, which
+//!   is how `tests/chaos.rs` proves the above without flaky sleeps.
 
 use super::batcher::{BatchPolicy, Batcher, FlushReason};
+use super::faults::{FaultPlan, Faults};
+use super::lock_unpoisoned;
 use super::metrics::Metrics;
 use crate::inference::{IntEngine, SimdBackend, TraversalKernel};
 use crate::ir::{argmax, Model};
 use crate::runtime::PjrtEngine;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
-use std::sync::Arc;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
+
+/// Execution failures a shard tolerates before degrading to the
+/// conservative fallback engine (scalar-branchless, one thread).
+pub const DEGRADE_AFTER: u32 = 2;
+
+/// Why a request could not be served. Every variant is a *resolution*:
+/// the caller always gets an answer, never a hang or a panic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// The submitted row's length does not match the model.
+    WrongFeatureCount {
+        /// The model's feature count.
+        expected: usize,
+        /// The submitted row's length.
+        got: usize,
+    },
+    /// A feature value is NaN or infinite.
+    NonFiniteFeature {
+        /// Index of the first offending value.
+        index: usize,
+    },
+    /// The admission queue is full; the request was shed (load
+    /// shedding under overload, or a scripted fault).
+    QueueFull,
+    /// The request's TTL expired before its batch executed.
+    DeadlineExceeded,
+    /// The worker shard serving the request crashed; the request was
+    /// answered by the supervisor, not executed.
+    WorkerLost,
+    /// The server is shutting down and no longer admits work.
+    ShuttingDown,
+}
+
+impl ServeError {
+    /// One representative instance of every variant (payload-carrying
+    /// variants use zeroed payloads) — the exhaustiveness anchor for
+    /// round-trip tests and error tables.
+    pub const ALL: [ServeError; 6] = [
+        ServeError::WrongFeatureCount { expected: 0, got: 0 },
+        ServeError::NonFiniteFeature { index: 0 },
+        ServeError::QueueFull,
+        ServeError::DeadlineExceeded,
+        ServeError::WorkerLost,
+        ServeError::ShuttingDown,
+    ];
+
+    /// Stable machine-readable name of the variant (payloads ignored).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ServeError::WrongFeatureCount { .. } => "wrong_feature_count",
+            ServeError::NonFiniteFeature { .. } => "non_finite_feature",
+            ServeError::QueueFull => "queue_full",
+            ServeError::DeadlineExceeded => "deadline_exceeded",
+            ServeError::WorkerLost => "worker_lost",
+            ServeError::ShuttingDown => "shutting_down",
+        }
+    }
+
+    /// Inverse of [`Self::kind`] up to payloads: returns the
+    /// representative instance whose kind matches.
+    pub fn from_kind(kind: &str) -> Option<ServeError> {
+        ServeError::ALL.iter().copied().find(|e| e.kind() == kind)
+    }
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::WrongFeatureCount { expected, got } => {
+                write!(f, "wrong feature count: expected {expected}, got {got}")
+            }
+            ServeError::NonFiniteFeature { index } => {
+                write!(f, "non-finite feature value at index {index}")
+            }
+            ServeError::QueueFull => write!(f, "request shed: admission queue full"),
+            ServeError::DeadlineExceeded => write!(f, "deadline exceeded before execution"),
+            ServeError::WorkerLost => write!(f, "worker shard lost while serving the request"),
+            ServeError::ShuttingDown => write!(f, "server is shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// What a submitted request resolves to: a [`Response`] or a typed
+/// [`ServeError`]. Never neither — the chaos suite's core invariant.
+pub type ServeResult = Result<Response, ServeError>;
 
 /// An inference request: one feature row.
 pub struct Request {
     /// The feature row to classify.
     pub features: Vec<f32>,
-    tx: SyncSender<Response>,
+    tx: SyncSender<ServeResult>,
     t_arrival: Instant,
+    /// Absolute deadline; past it the request resolves as
+    /// `DeadlineExceeded` instead of executing.
+    deadline: Option<Instant>,
 }
 
 /// Which backend served a request.
@@ -60,7 +184,9 @@ pub struct ServerConfig {
     pub policy: BatchPolicy,
     /// Batches of at least this many rows go to the XLA engine.
     pub xla_threshold: usize,
-    /// Total channel capacity (backpressure bound), split across workers.
+    /// Total channel capacity (admission bound), split across workers.
+    /// A full shard channel **sheds** (`ServeError::QueueFull`) instead
+    /// of blocking the submitter.
     pub queue_depth: usize,
     /// Measure alternative execution strategies at startup and keep the
     /// fastest:
@@ -87,6 +213,14 @@ pub struct ServerConfig {
     /// batched route scales near-linearly with workers; the XLA offload
     /// rides shard 0 only. Clamped to at least 1.
     pub n_workers: usize,
+    /// TTL applied to requests submitted without an explicit one
+    /// ([`InferenceServer::submit_with_ttl`] overrides per request).
+    /// `None` means requests never expire.
+    pub default_ttl: Option<Duration>,
+    /// Deterministic fault script for chaos testing. `None` consults the
+    /// `INTREEGER_FAULTS` environment variable; `Some(FaultPlan::none())`
+    /// pins faults off regardless of environment.
+    pub faults: Option<FaultPlan>,
 }
 
 impl Default for ServerConfig {
@@ -97,6 +231,8 @@ impl Default for ServerConfig {
             queue_depth: 1024,
             auto_calibrate: false,
             n_workers: 1,
+            default_ttl: None,
+            faults: None,
         }
     }
 }
@@ -113,6 +249,55 @@ pub struct InferenceServer {
     metrics: Arc<Metrics>,
     n_features: usize,
     workers: Vec<JoinHandle<()>>,
+    shutting_down: AtomicBool,
+    default_ttl: Option<Duration>,
+    faults: Arc<Faults>,
+}
+
+/// A shard's execution state: the shared calibrated engine, the
+/// conservative fallback it degrades to, and the failure count driving
+/// that decision. Lives in the shard's supervisor so it survives worker
+/// restarts — degradation is per shard lifetime, not per incarnation.
+struct ShardExec {
+    primary: Arc<IntEngine>,
+    /// Scalar-branchless @ 1 thread: the execution strategy with the
+    /// fewest moving parts (no SIMD dispatch, no thread pool), used
+    /// after repeated primary-path failures. Bit-identical to the
+    /// primary by the parity invariant.
+    fallback: Arc<IntEngine>,
+    exec_failures: u32,
+    degraded: bool,
+}
+
+impl ShardExec {
+    fn engine(&self) -> &IntEngine {
+        if self.degraded {
+            &self.fallback
+        } else {
+            &self.primary
+        }
+    }
+
+    fn record_failure(&mut self, metrics: &Metrics) {
+        self.exec_failures += 1;
+        if !self.degraded && self.exec_failures >= DEGRADE_AFTER {
+            self.degraded = true;
+            metrics.degraded.store(true, Ordering::Relaxed);
+            use crate::inference::Engine as _;
+            metrics.record_execution(
+                self.fallback.kernel().name(),
+                self.fallback.backend().name(),
+                self.fallback.threads(),
+            );
+            eprintln!(
+                "intreeger-server: shard DEGRADED to {}@{}@{}t after {} execution failures",
+                self.fallback.kernel().name(),
+                self.fallback.backend().name(),
+                self.fallback.threads(),
+                self.exec_failures
+            );
+        }
+    }
 }
 
 impl InferenceServer {
@@ -149,6 +334,18 @@ impl InferenceServer {
             );
         }
         let scalar = Arc::new(scalar_engine);
+        // The degradation target, pre-compiled while the process is
+        // healthy: scalar backend, branchless kernel, one thread.
+        let fallback = {
+            use crate::inference::Engine as _;
+            let mut e = IntEngine::compile(model);
+            e.set_kernel(TraversalKernel::Branchless);
+            e.set_backend(SimdBackend::Scalar);
+            e.set_threads(1);
+            Arc::new(e)
+        };
+        let faults =
+            Arc::new(Faults::new(config.faults.clone().unwrap_or_else(FaultPlan::from_env)));
         let n_features = model.n_features;
         let per_worker_depth = (config.queue_depth / n_workers).max(1);
 
@@ -158,7 +355,9 @@ impl InferenceServer {
             let (tx, rx) = sync_channel::<Msg>(per_worker_depth);
             txs.push(tx);
             let scalar = Arc::clone(&scalar);
+            let fallback = Arc::clone(&fallback);
             let m2 = Arc::clone(&metrics);
+            let f2 = Arc::clone(&faults);
             let config = config.clone();
             // Only shard 0 needs the model (to pack the XLA artifact).
             let xla_seed = (w == 0).then(|| (artifacts_dir.clone(), model.clone()));
@@ -188,35 +387,149 @@ impl InferenceServer {
                     } else {
                         xla
                     };
-                    worker_loop(rx, scalar, xla, config, m2, n_features)
+                    let exec =
+                        ShardExec { primary: scalar, fallback, exec_failures: 0, degraded: false };
+                    supervise(rx, exec, xla, config, m2, n_features, f2)
                 })
                 .expect("spawn server worker");
             workers.push(worker);
         }
-        InferenceServer { txs, next_shard: AtomicUsize::new(0), metrics, n_features, workers }
+        InferenceServer {
+            txs,
+            next_shard: AtomicUsize::new(0),
+            metrics,
+            n_features,
+            workers,
+            shutting_down: AtomicBool::new(false),
+            default_ttl: config.default_ttl,
+            faults,
+        }
     }
 
-    /// Asynchronous submit: returns a receiver for the response.
-    /// Requests round-robin across worker shards.
-    pub fn submit(&self, features: Vec<f32>) -> Receiver<Response> {
-        assert_eq!(features.len(), self.n_features, "wrong feature count");
+    /// The full admission path. On `QueueFull` the feature row is handed
+    /// back so blocking callers can retry without cloning.
+    fn admit(
+        &self,
+        features: Vec<f32>,
+        ttl: Option<Duration>,
+    ) -> Result<Receiver<ServeResult>, (ServeError, Option<Vec<f32>>)> {
+        if self.shutting_down.load(Ordering::Relaxed) {
+            return Err((ServeError::ShuttingDown, Some(features)));
+        }
+        if features.len() != self.n_features {
+            self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            let e = ServeError::WrongFeatureCount {
+                expected: self.n_features,
+                got: features.len(),
+            };
+            return Err((e, Some(features)));
+        }
+        if let Some(index) = features.iter().position(|v| !v.is_finite()) {
+            self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err((ServeError::NonFiniteFeature { index }, Some(features)));
+        }
+        if self.faults.inject_queue_full() {
+            self.metrics.shed.fetch_add(1, Ordering::Relaxed);
+            return Err((ServeError::QueueFull, Some(features)));
+        }
         let (tx, rx) = sync_channel(1);
-        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
-        let req = Request { features, tx, t_arrival: Instant::now() };
+        let t_arrival = Instant::now();
+        let deadline = ttl.and_then(|d| t_arrival.checked_add(d));
+        let req = Request { features, tx, t_arrival, deadline };
         let shard = self.next_shard.fetch_add(1, Ordering::Relaxed) % self.txs.len();
-        self.txs[shard].send(Msg::Infer(req)).expect("server thread gone");
-        rx
+        match self.txs[shard].try_send(Msg::Infer(req)) {
+            Ok(()) => {
+                self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+                Ok(rx)
+            }
+            Err(TrySendError::Full(msg)) => {
+                self.metrics.shed.fetch_add(1, Ordering::Relaxed);
+                let features = match msg {
+                    Msg::Infer(r) => Some(r.features),
+                    Msg::Shutdown => None,
+                };
+                Err((ServeError::QueueFull, features))
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                // Workers only exit on shutdown (panics are supervised),
+                // so a dead channel outside shutdown is a lost shard.
+                let e = if self.shutting_down.load(Ordering::Relaxed) {
+                    ServeError::ShuttingDown
+                } else {
+                    ServeError::WorkerLost
+                };
+                Err((e, None))
+            }
+        }
     }
 
-    /// Blocking inference.
-    pub fn infer(&self, features: Vec<f32>) -> Response {
-        self.submit(features).recv().expect("server dropped response")
+    /// Closed-loop admission for the blocking helpers: absorb transient
+    /// `QueueFull` with a bounded retry (the shard drains concurrently),
+    /// surface everything else immediately.
+    fn admit_blocking(
+        &self,
+        features: Vec<f32>,
+        ttl: Option<Duration>,
+    ) -> Result<Receiver<ServeResult>, ServeError> {
+        const SPIN: Duration = Duration::from_micros(100);
+        const MAX_SPINS: u32 = 100_000; // ~10 s of sustained backpressure
+        let mut features = features;
+        let mut spins = 0u32;
+        loop {
+            match self.admit(features, ttl) {
+                Ok(rx) => return Ok(rx),
+                Err((ServeError::QueueFull, Some(f))) if spins < MAX_SPINS => {
+                    features = f;
+                    spins += 1;
+                    std::thread::sleep(SPIN);
+                }
+                Err((e, _)) => return Err(e),
+            }
+        }
     }
 
-    /// Blocking batch inference (submits all, then waits).
-    pub fn infer_many(&self, rows: Vec<Vec<f32>>) -> Vec<Response> {
-        let rxs: Vec<_> = rows.into_iter().map(|r| self.submit(r)).collect();
-        rxs.into_iter().map(|rx| rx.recv().expect("response")).collect()
+    /// Asynchronous submit: validates and *tries* to admit the request,
+    /// returning a receiver for its resolution. Requests round-robin
+    /// across worker shards; a full shard queue sheds
+    /// ([`ServeError::QueueFull`]) instead of blocking. Applies
+    /// [`ServerConfig::default_ttl`].
+    pub fn submit(&self, features: Vec<f32>) -> Result<Receiver<ServeResult>, ServeError> {
+        self.submit_with_ttl(features, self.default_ttl)
+    }
+
+    /// [`Self::submit`] with an explicit per-request TTL (`None` never
+    /// expires). The deadline is checked when the batch forms: an
+    /// admitted request whose TTL lapses while queued resolves as
+    /// [`ServeError::DeadlineExceeded`].
+    pub fn submit_with_ttl(
+        &self,
+        features: Vec<f32>,
+        ttl: Option<Duration>,
+    ) -> Result<Receiver<ServeResult>, ServeError> {
+        self.admit(features, ttl).map_err(|(e, _)| e)
+    }
+
+    /// Blocking inference. Waits out transient queue-full (bounded), so
+    /// a closed-loop caller sees every request resolve.
+    pub fn infer(&self, features: Vec<f32>) -> ServeResult {
+        match self.admit_blocking(features, self.default_ttl) {
+            Ok(rx) => rx.recv().unwrap_or(Err(ServeError::WorkerLost)),
+            Err(e) => Err(e),
+        }
+    }
+
+    /// Blocking batch inference (submits all, then waits). One
+    /// `ServeResult` per input row, in order.
+    pub fn infer_many(&self, rows: Vec<Vec<f32>>) -> Vec<ServeResult> {
+        let slots: Vec<Result<Receiver<ServeResult>, ServeError>> =
+            rows.into_iter().map(|r| self.admit_blocking(r, self.default_ttl)).collect();
+        slots
+            .into_iter()
+            .map(|slot| match slot {
+                Ok(rx) => rx.recv().unwrap_or(Err(ServeError::WorkerLost)),
+                Err(e) => Err(e),
+            })
+            .collect()
     }
 
     /// Number of worker shards actually running.
@@ -232,6 +545,9 @@ impl InferenceServer {
 
 impl Drop for InferenceServer {
     fn drop(&mut self) {
+        // Refuse new admissions first so queued Shutdown messages are
+        // not buried under a flood of racing submits.
+        self.shutting_down.store(true, Ordering::SeqCst);
         for tx in &self.txs {
             let _ = tx.send(Msg::Shutdown);
         }
@@ -397,89 +713,169 @@ fn calibrate(
     }
 }
 
-fn worker_loop(
+/// Shard supervisor: runs the worker loop under `catch_unwind` and
+/// restarts it with bounded exponential backoff after a panic. Requests
+/// stranded in the shard's batcher by the crash resolve as
+/// [`ServeError::WorkerLost`] before the restart — nothing is lost, the
+/// caller just learns the truth.
+fn supervise(
     rx: Receiver<Msg>,
-    scalar: Arc<IntEngine>,
+    mut exec: ShardExec,
     xla: Option<PjrtEngine>,
     config: ServerConfig,
     metrics: Arc<Metrics>,
     n_features: usize,
+    faults: Arc<Faults>,
 ) {
-    let mut batcher: Batcher<Request> = Batcher::new(config.policy);
+    // The batcher lives *outside* the unwind region behind a mutex so
+    // the supervisor can flush stranded requests after a crash.
+    let pending: Mutex<Batcher<Request>> = Mutex::new(Batcher::new(config.policy));
+    let mut restarts: u32 = 0;
     loop {
-        // Wait bounded by the batch deadline (if any).
-        let timeout = batcher
-            .time_to_deadline(Instant::now())
-            .unwrap_or(Duration::from_millis(50));
-        match rx.recv_timeout(timeout) {
-            Ok(Msg::Infer(req)) => {
-                if let Some((batch, why)) = batcher.push(req) {
-                    serve_batch(batch, why, &scalar, &xla, &config, &metrics, n_features);
+        let finished = catch_unwind(AssertUnwindSafe(|| {
+            worker_loop(&rx, &pending, &mut exec, &xla, &config, &metrics, n_features, &faults)
+        }));
+        match finished {
+            Ok(()) => return, // clean shutdown / channel closed
+            Err(_) => {
+                metrics.worker_restarts.fetch_add(1, Ordering::Relaxed);
+                if let Some((batch, _)) = lock_unpoisoned(&pending).drain() {
+                    metrics.lost.fetch_add(batch.len() as u64, Ordering::Relaxed);
+                    for req in batch {
+                        let _ = req.tx.send(Err(ServeError::WorkerLost));
+                    }
                 }
-            }
-            Ok(Msg::Shutdown) => {
-                if let Some((batch, why)) = batcher.drain() {
-                    serve_batch(batch, why, &scalar, &xla, &config, &metrics, n_features);
-                }
-                return;
-            }
-            Err(RecvTimeoutError::Timeout) => {
-                if let Some((batch, why)) = batcher.poll() {
-                    serve_batch(batch, why, &scalar, &xla, &config, &metrics, n_features);
-                }
-            }
-            Err(RecvTimeoutError::Disconnected) => {
-                if let Some((batch, why)) = batcher.drain() {
-                    serve_batch(batch, why, &scalar, &xla, &config, &metrics, n_features);
-                }
-                return;
+                let backoff = Duration::from_millis(1u64 << restarts.min(6));
+                restarts += 1;
+                eprintln!(
+                    "intreeger-server: worker shard panicked; restart #{restarts} in {backoff:?}"
+                );
+                std::thread::sleep(backoff);
             }
         }
     }
 }
 
-fn serve_batch(
-    batch: Vec<Request>,
-    why: FlushReason,
-    scalar: &IntEngine,
+#[allow(clippy::too_many_arguments)]
+fn worker_loop(
+    rx: &Receiver<Msg>,
+    pending: &Mutex<Batcher<Request>>,
+    exec: &mut ShardExec,
     xla: &Option<PjrtEngine>,
     config: &ServerConfig,
     metrics: &Arc<Metrics>,
     n_features: usize,
+    faults: &Faults,
 ) {
-    let use_xla = match xla {
-        Some(engine) => batch.len() >= config.xla_threshold && batch.len() <= engine.max_batch(),
-        None => false,
-    };
-    metrics.record_batch(batch.len(), use_xla, why);
+    loop {
+        // Wait bounded by the batch deadline (if any).
+        let timeout = lock_unpoisoned(pending)
+            .time_to_deadline(Instant::now())
+            .unwrap_or(Duration::from_millis(50));
+        match rx.recv_timeout(timeout) {
+            Ok(Msg::Infer(req)) => {
+                let flushed = lock_unpoisoned(pending).push(req);
+                if let Some((batch, why)) = flushed {
+                    serve_batch(batch, why, exec, xla, config, metrics, n_features, faults);
+                }
+            }
+            Ok(Msg::Shutdown) | Err(RecvTimeoutError::Disconnected) => {
+                let flushed = lock_unpoisoned(pending).drain();
+                if let Some((batch, why)) = flushed {
+                    serve_batch(batch, why, exec, xla, config, metrics, n_features, faults);
+                }
+                return;
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                let flushed = lock_unpoisoned(pending).poll();
+                if let Some((batch, why)) = flushed {
+                    serve_batch(batch, why, exec, xla, config, metrics, n_features, faults);
+                }
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn serve_batch(
+    batch: Vec<Request>,
+    why: FlushReason,
+    exec: &mut ShardExec,
+    xla: &Option<PjrtEngine>,
+    config: &ServerConfig,
+    metrics: &Arc<Metrics>,
+    n_features: usize,
+    faults: &Faults,
+) {
+    // Deadline check at batch-formation time: expired rows resolve
+    // without burning kernel time.
+    let now = Instant::now();
+    let (live, expired) = Batcher::partition_expired(batch, now, |r: &Request| r.deadline);
+    if !expired.is_empty() {
+        metrics.expired.fetch_add(expired.len() as u64, Ordering::Relaxed);
+        for req in expired {
+            let _ = req.tx.send(Err(ServeError::DeadlineExceeded));
+        }
+    }
+    if live.is_empty() {
+        return;
+    }
+    let use_xla = !exec.degraded
+        && match xla {
+            Some(engine) => {
+                live.len() >= config.xla_threshold && live.len() <= engine.max_batch()
+            }
+            None => false,
+        };
+    metrics.record_batch(live.len(), use_xla, why);
     let t_serve = Instant::now();
 
     // Flatten once; both routes consume the row-major buffer.
-    let mut rows = Vec::with_capacity(batch.len() * n_features);
-    for r in &batch {
+    let mut rows = Vec::with_capacity(live.len() * n_features);
+    for r in &live {
         rows.extend_from_slice(&r.features);
     }
-    let results: Vec<Vec<u32>> = if use_xla {
-        let engine = xla.as_ref().unwrap();
-        match engine.execute(&rows, n_features) {
-            Ok(out) => out,
-            // Fall back to the batched scalar kernel on runtime errors —
-            // requests must never be dropped.
-            Err(_) => scalar.predict_fixed_batch(&rows),
+    // Execution is the untrusted region: a panicking kernel (or an
+    // injected fault) must not strand the batch's callers.
+    let engine = exec.engine();
+    let outcome = catch_unwind(AssertUnwindSafe(|| {
+        faults.on_batch_execution();
+        if use_xla {
+            let x = xla.as_ref().unwrap();
+            match x.execute(&rows, n_features) {
+                Ok(out) => out,
+                // Fall back to the batched scalar kernel on runtime errors —
+                // requests must never be dropped.
+                Err(_) => engine.predict_fixed_batch(&rows),
+            }
+        } else {
+            engine.predict_fixed_batch(&rows)
         }
-    } else {
-        scalar.predict_fixed_batch(&rows)
-    };
-    metrics.record_batch_latency_us(t_serve.elapsed().as_secs_f64() * 1e6);
-
-    let route = if use_xla { Route::Xla } else { Route::Scalar };
-    for (req, fixed) in batch.into_iter().zip(results) {
-        let latency = req.t_arrival.elapsed();
-        metrics.record_latency_us(latency.as_secs_f64() * 1e6);
-        metrics.responses.fetch_add(1, Ordering::Relaxed);
-        let class = argmax(&fixed);
-        // Receiver may have gone away; that's fine.
-        let _ = req.tx.send(Response { fixed, class, route, latency });
+    }));
+    match outcome {
+        Ok(results) => {
+            metrics.record_batch_latency_us(t_serve.elapsed().as_secs_f64() * 1e6);
+            let route = if use_xla { Route::Xla } else { Route::Scalar };
+            for (req, fixed) in live.into_iter().zip(results) {
+                let latency = req.t_arrival.elapsed();
+                metrics.record_latency_us(latency.as_secs_f64() * 1e6);
+                metrics.responses.fetch_add(1, Ordering::Relaxed);
+                let class = argmax(&fixed);
+                // Receiver may have gone away; that's fine.
+                let _ = req.tx.send(Ok(Response { fixed, class, route, latency }));
+            }
+        }
+        Err(payload) => {
+            // The batch's callers learn the truth now; the supervisor
+            // learns it next (re-raised) and restarts the worker.
+            metrics.worker_panics.fetch_add(1, Ordering::Relaxed);
+            metrics.lost.fetch_add(live.len() as u64, Ordering::Relaxed);
+            for req in live {
+                let _ = req.tx.send(Err(ServeError::WorkerLost));
+            }
+            exec.record_failure(metrics);
+            resume_unwind(payload);
+        }
     }
 }
 
@@ -500,13 +896,20 @@ mod tests {
         (ds, m)
     }
 
+    /// Config with faults pinned off: unit tests must not pick up an
+    /// `INTREEGER_FAULTS` plan from the environment (the CI chaos leg
+    /// sets one process-wide).
+    fn quiet() -> ServerConfig {
+        ServerConfig { faults: Some(FaultPlan::none()), ..Default::default() }
+    }
+
     #[test]
     fn scalar_only_server_answers_correctly() {
         let (ds, m) = model();
-        let server = InferenceServer::start(&m, None, ServerConfig::default());
+        let server = InferenceServer::start(&m, None, quiet());
         let oracle = crate::inference::IntEngine::compile(&m);
         for i in 0..50 {
-            let r = server.infer(ds.row(i).to_vec());
+            let r = server.infer(ds.row(i).to_vec()).expect("serve");
             assert_eq!(r.fixed, oracle.predict_fixed(ds.row(i)));
             assert_eq!(r.class, oracle.predict(ds.row(i)));
             assert_eq!(r.route, Route::Scalar);
@@ -516,6 +919,14 @@ mod tests {
         assert_eq!(snap.responses, 50);
         assert_eq!(snap.rows_scalar, 50);
         assert_eq!(snap.rows_xla, 0);
+        // A healthy run records no failures.
+        assert_eq!(snap.shed, 0);
+        assert_eq!(snap.expired, 0);
+        assert_eq!(snap.rejected, 0);
+        assert_eq!(snap.lost, 0);
+        assert_eq!(snap.worker_panics, 0);
+        assert_eq!(snap.worker_restarts, 0);
+        assert!(!snap.degraded);
         // Every flush served at least one batch, so batch latency was
         // recorded.
         assert!(snap.batch_latency_mean_us > 0.0);
@@ -539,15 +950,18 @@ mod tests {
             None,
             ServerConfig {
                 policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(100) },
-                ..Default::default()
+                ..quiet()
             },
         ));
         let mut rxs = Vec::new();
         for i in 0..200 {
-            rxs.push(server.submit(ds.row(i % ds.n_rows()).to_vec()));
+            rxs.push(server.submit(ds.row(i % ds.n_rows()).to_vec()).expect("admitted"));
         }
         for rx in rxs {
-            let r = rx.recv_timeout(Duration::from_secs(5)).expect("response");
+            let r = rx
+                .recv_timeout(Duration::from_secs(5))
+                .expect("resolved")
+                .expect("served");
             assert_eq!(r.fixed.len(), ds.n_classes);
         }
         assert_eq!(server.metrics().responses, 200);
@@ -563,7 +977,7 @@ mod tests {
             ServerConfig {
                 policy: BatchPolicy { max_batch: 16, max_wait: Duration::from_micros(200) },
                 n_workers: 4,
-                ..Default::default()
+                ..quiet()
             },
         );
         assert_eq!(server.n_workers(), 4);
@@ -571,6 +985,7 @@ mod tests {
         let responses = server.infer_many(rows);
         assert_eq!(responses.len(), 400);
         for (i, r) in responses.iter().enumerate() {
+            let r = r.as_ref().expect("served");
             assert_eq!(r.fixed, oracle.predict_fixed(ds.row(i % ds.n_rows())), "row {i}");
             assert_eq!(r.route, Route::Scalar);
         }
@@ -594,9 +1009,9 @@ mod tests {
     fn zero_workers_clamped_to_one() {
         let (ds, m) = model();
         let server =
-            InferenceServer::start(&m, None, ServerConfig { n_workers: 0, ..Default::default() });
+            InferenceServer::start(&m, None, ServerConfig { n_workers: 0, ..quiet() });
         assert_eq!(server.n_workers(), 1);
-        let r = server.infer(ds.row(0).to_vec());
+        let r = server.infer(ds.row(0).to_vec()).expect("serve");
         assert_eq!(r.fixed.len(), ds.n_classes);
     }
 
@@ -615,13 +1030,14 @@ mod tests {
             ServerConfig {
                 policy: BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(5) },
                 xla_threshold: 8,
-                ..Default::default()
+                ..quiet()
             },
         );
         let rows: Vec<Vec<f32>> = (0..64).map(|i| ds.row(i).to_vec()).collect();
         let responses = server.infer_many(rows);
         let mut xla_routed = 0;
         for (i, r) in responses.iter().enumerate() {
+            let r = r.as_ref().expect("served");
             assert_eq!(r.fixed, oracle.predict_fixed(ds.row(i)), "row {i} parity");
             if r.route == Route::Xla {
                 xla_routed += 1;
@@ -642,14 +1058,14 @@ mod tests {
         let server = InferenceServer::start(
             &m,
             Some(dir),
-            ServerConfig { auto_calibrate: true, ..Default::default() },
+            ServerConfig { auto_calibrate: true, ..quiet() },
         );
         // Whatever the calibration decided, requests must be answered
         // correctly (on this 1-core host the scalar route wins).
         let oracle = crate::inference::IntEngine::compile(&m);
         let rows: Vec<Vec<f32>> = (0..64).map(|i| ds.row(i).to_vec()).collect();
         for (i, r) in server.infer_many(rows).iter().enumerate() {
-            assert_eq!(r.fixed, oracle.predict_fixed(ds.row(i)));
+            assert_eq!(r.as_ref().expect("served").fixed, oracle.predict_fixed(ds.row(i)));
         }
     }
 
@@ -662,11 +1078,12 @@ mod tests {
         let server = InferenceServer::start(
             &m,
             None,
-            ServerConfig { auto_calibrate: true, n_workers: 2, ..Default::default() },
+            ServerConfig { auto_calibrate: true, n_workers: 2, ..quiet() },
         );
         let oracle = crate::inference::IntEngine::compile(&m);
         let rows: Vec<Vec<f32>> = (0..64).map(|i| ds.row(i).to_vec()).collect();
         for (i, r) in server.infer_many(rows).iter().enumerate() {
+            let r = r.as_ref().expect("served");
             assert_eq!(r.fixed, oracle.predict_fixed(ds.row(i)), "row {i}");
             assert_eq!(r.route, Route::Scalar);
         }
@@ -719,10 +1136,121 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "wrong feature count")]
-    fn rejects_wrong_arity() {
+    fn rejects_wrong_arity_with_typed_error() {
         let (_, m) = model();
-        let server = InferenceServer::start(&m, None, ServerConfig::default());
-        server.infer(vec![1.0, 2.0]);
+        let server = InferenceServer::start(&m, None, quiet());
+        let err = server.infer(vec![1.0, 2.0]).unwrap_err();
+        assert_eq!(err, ServeError::WrongFeatureCount { expected: m.n_features, got: 2 });
+        // The legacy panic message survives as the Display text so old
+        // operator runbooks keep grepping.
+        assert!(err.to_string().contains("wrong feature count"), "{err}");
+        let snap = server.metrics();
+        assert_eq!(snap.rejected, 1);
+        assert_eq!(snap.requests, 0, "rejected rows are not admitted");
+    }
+
+    #[test]
+    fn rejects_non_finite_features_with_typed_error() {
+        let (ds, m) = model();
+        let server = InferenceServer::start(&m, None, quiet());
+        let mut row = ds.row(0).to_vec();
+        row[3] = f32::NAN;
+        assert_eq!(
+            server.infer(row.clone()).unwrap_err(),
+            ServeError::NonFiniteFeature { index: 3 }
+        );
+        row[3] = f32::INFINITY;
+        assert_eq!(
+            server.infer(row).unwrap_err(),
+            ServeError::NonFiniteFeature { index: 3 }
+        );
+        assert_eq!(server.metrics().rejected, 2);
+    }
+
+    #[test]
+    fn forced_queue_full_sheds_with_typed_error() {
+        let (ds, m) = model();
+        let server = InferenceServer::start(
+            &m,
+            None,
+            ServerConfig {
+                faults: Some(FaultPlan { queue_full_first: 3, ..FaultPlan::none() }),
+                ..Default::default()
+            },
+        );
+        let mut shed = 0;
+        let mut rxs = Vec::new();
+        for i in 0..5 {
+            match server.submit(ds.row(i).to_vec()) {
+                Ok(rx) => rxs.push(rx),
+                Err(e) => {
+                    assert_eq!(e, ServeError::QueueFull);
+                    shed += 1;
+                }
+            }
+        }
+        assert_eq!(shed, 3, "exactly the scripted number of sheds");
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(5)).expect("resolved").expect("served");
+        }
+        let snap = server.metrics();
+        assert_eq!(snap.shed, 3);
+        assert_eq!(snap.requests, 2);
+        assert_eq!(snap.responses, 2);
+    }
+
+    #[test]
+    fn serve_error_display_kind_roundtrip_exhaustive() {
+        // Six variants, all distinct in kind and Display, all
+        // round-trippable through from_kind.
+        assert_eq!(ServeError::ALL.len(), 6);
+        let mut kinds: Vec<&str> = ServeError::ALL.iter().map(|e| e.kind()).collect();
+        kinds.sort_unstable();
+        kinds.dedup();
+        assert_eq!(kinds.len(), 6, "kinds must be unique");
+        for e in ServeError::ALL {
+            let text = e.to_string();
+            assert!(!text.is_empty());
+            let back = ServeError::from_kind(e.kind()).expect("kind round-trips");
+            assert_eq!(back.kind(), e.kind());
+            // std::error::Error is implemented (boxable).
+            let boxed: Box<dyn std::error::Error> = Box::new(e);
+            assert_eq!(boxed.to_string(), text);
+        }
+        assert_eq!(ServeError::from_kind("no_such_kind"), None);
+        // Payloads show up in the human text.
+        let e = ServeError::WrongFeatureCount { expected: 9, got: 2 };
+        assert_eq!(e.to_string(), "wrong feature count: expected 9, got 2");
+        assert_eq!(
+            ServeError::NonFiniteFeature { index: 4 }.to_string(),
+            "non-finite feature value at index 4"
+        );
+    }
+
+    #[test]
+    fn submit_with_ttl_expires_queued_requests() {
+        let (ds, m) = model();
+        // Slow batch formation (long max_wait, huge max_batch) so a
+        // zero TTL is guaranteed to lapse before the flush.
+        let server = InferenceServer::start(
+            &m,
+            None,
+            ServerConfig {
+                policy: BatchPolicy { max_batch: 512, max_wait: Duration::from_millis(20) },
+                ..quiet()
+            },
+        );
+        let rx = server
+            .submit_with_ttl(ds.row(0).to_vec(), Some(Duration::ZERO))
+            .expect("admitted");
+        assert_eq!(
+            rx.recv_timeout(Duration::from_secs(5)).expect("resolved"),
+            Err(ServeError::DeadlineExceeded)
+        );
+        // A TTL-free request on the same server still serves.
+        server.infer(ds.row(1).to_vec()).expect("served");
+        let snap = server.metrics();
+        assert_eq!(snap.expired, 1);
+        assert_eq!(snap.responses, 1);
     }
 }

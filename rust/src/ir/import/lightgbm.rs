@@ -21,7 +21,7 @@
 //! thresholds import verbatim (no predecessor trick needed).
 
 use super::{err, ImportError};
-use crate::ir::{Model, ModelKind, Node, Tree};
+use crate::ir::{Model, ModelKind, Node, Tree, MAX_CLASSES, MAX_FEATURES, MAX_TREES};
 use std::collections::HashMap;
 
 /// Import a LightGBM text model.
@@ -67,6 +67,17 @@ pub fn import(text: &str) -> Result<Model, ImportError> {
         .and_then(|v| v.parse::<usize>().ok())
         .map(|m| m + 1)
         .ok_or_else(|| ImportError("missing max_feature_idx".into()))?;
+    // Header-declared sizes drive allocations below (every leaf vector is
+    // n_classes long) — bound them before trusting them.
+    if n_features > MAX_FEATURES {
+        return err(format!("max_feature_idx implies {n_features} features (limit {MAX_FEATURES})"));
+    }
+    if n_classes > MAX_CLASSES {
+        return err(format!("num_class {num_class} exceeds limit {MAX_CLASSES}"));
+    }
+    if tree_blocks.len() > MAX_TREES {
+        return err(format!("{} trees exceeds limit {MAX_TREES}", tree_blocks.len()));
+    }
     let round_robin = if num_class <= 1 { 1 } else { num_class };
     if tree_blocks.len() % round_robin != 0 {
         return err(format!(

@@ -17,7 +17,7 @@
 //! engines (the IR has no NaN semantics; documented limitation).
 
 use super::{err, ImportError};
-use crate::ir::{Model, ModelKind, Node, Tree};
+use crate::ir::{Model, ModelKind, Node, Tree, MAX_CLASSES, MAX_FEATURES, MAX_TREES};
 use crate::util::Json;
 
 /// Import an XGBoost JSON dump.
@@ -43,6 +43,18 @@ pub fn import(
     if n_classes < 2 {
         return err("n_classes must be >= 2");
     }
+    if n_classes > MAX_CLASSES {
+        return err(format!("n_classes {n_classes} exceeds limit {MAX_CLASSES}"));
+    }
+    if n_features > MAX_FEATURES {
+        return err(format!("n_features {n_features} exceeds limit {MAX_FEATURES}"));
+    }
+    if trees_json.len() > MAX_TREES {
+        return err(format!("{} trees exceeds limit {MAX_TREES}", trees_json.len()));
+    }
+    if !base_score.is_finite() {
+        return err("non-finite base_score");
+    }
     // Binary boosters emit one tree per round (class column 1... by
     // convention we place binary margins in column 1, base in column 1).
     let round_robin = if n_classes > 2 { n_classes } else { 1 };
@@ -58,7 +70,7 @@ pub fn import(
     for (ti, tv) in trees_json.iter().enumerate() {
         let class = if round_robin == 1 { 1 } else { ti % n_classes };
         let mut nodes: Vec<Node> = Vec::new();
-        build_node(tv, &mut nodes, n_features, n_classes, class, ti)?;
+        build_node(tv, &mut nodes, n_features, n_classes, class, ti, 0)?;
         trees.push(Tree { nodes });
     }
 
@@ -74,6 +86,7 @@ pub fn import(
     Ok(model)
 }
 
+#[allow(clippy::too_many_arguments)]
 fn build_node(
     v: &Json,
     nodes: &mut Vec<Node>,
@@ -81,7 +94,13 @@ fn build_node(
     n_classes: usize,
     class: usize,
     ti: usize,
+    depth: usize,
 ) -> Result<u32, ImportError> {
+    // Recursion bound: mirrors the lightgbm importer's cap so a
+    // pathologically deep dump errors instead of exhausting the stack.
+    if depth > 512 {
+        return err(format!("tree {ti}: depth > 512"));
+    }
     let id = nodes.len() as u32;
     if let Some(leaf) = v.get("leaf") {
         let margin = leaf
@@ -137,8 +156,8 @@ fn build_node(
 
     nodes.push(Node::Leaf { values: vec![] }); // placeholder
     // xgboost: x < cond → 'yes' branch; ours: x <= pred(cond) → left.
-    let left = build_node(child_id(yes)?, nodes, n_features, n_classes, class, ti)?;
-    let right = build_node(child_id(no)?, nodes, n_features, n_classes, class, ti)?;
+    let left = build_node(child_id(yes)?, nodes, n_features, n_classes, class, ti, depth + 1)?;
+    let right = build_node(child_id(no)?, nodes, n_features, n_classes, class, ti, depth + 1)?;
     nodes[id as usize] =
         Node::Branch { feature, threshold: super::f32_pred(cond), left, right };
     Ok(id)

@@ -15,6 +15,29 @@ pub mod import;
 pub mod serial;
 pub mod stats;
 
+// ---------------------------------------------------------------------------
+// Capacity limits — the admission bounds of every model-loading path.
+//
+// Untrusted inputs (model files, importer dumps, manifests) declare their
+// own sizes; without bounds a corrupt or hostile file can demand
+// pathological allocations before structural validation ever runs. The
+// first two mirror hard encoding limits of the packed execution layout
+// ([`crate::inference::compiled`]: 15-bit feature field, u16 child
+// index); the last two are sanity ceilings far above anything the paper
+// (or tree learning generally) produces.
+// ---------------------------------------------------------------------------
+
+/// Maximum feature columns a model may declare (compiled nodes store the
+/// feature in a 15-bit field).
+pub const MAX_FEATURES: usize = 32_768;
+/// Maximum nodes in a single tree (compiled nodes store child links as
+/// u16 indices).
+pub const MAX_NODES_PER_TREE: usize = 65_536;
+/// Maximum trees in an ensemble.
+pub const MAX_TREES: usize = 100_000;
+/// Maximum classes a model may declare.
+pub const MAX_CLASSES: usize = 4_096;
+
 /// One node of a tree: either an internal split or a leaf.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Node {
@@ -94,6 +117,24 @@ pub enum IrError {
     Cycle { tree: usize },
     /// A node is the child of more than one branch (a DAG, not a tree).
     SharedChild { tree: usize, node: usize },
+    /// The model has no trees at all (nothing to evaluate; RF averaging
+    /// would divide by zero).
+    NoTrees,
+    /// `n_features` exceeds [`MAX_FEATURES`].
+    TooManyFeatures { got: usize },
+    /// `n_classes` exceeds [`MAX_CLASSES`] (or is zero).
+    BadClassCount { got: usize },
+    /// The ensemble has more than [`MAX_TREES`] trees.
+    TooManyTrees { got: usize },
+    /// A tree has more than [`MAX_NODES_PER_TREE`] nodes.
+    TreeTooLarge { tree: usize, got: usize },
+    /// `base_score` length does not match `n_classes`.
+    BadBaseScoreArity { got: usize },
+    /// A `base_score` entry is NaN or infinite.
+    NonFiniteBaseScore { index: usize },
+    /// A leaf value is NaN or infinite (poisons quantization and every
+    /// engine downstream).
+    NonFiniteLeafValue { tree: usize, node: usize },
 }
 
 impl std::fmt::Display for IrError {
@@ -194,9 +235,32 @@ impl Model {
     /// Validate structural invariants. Called after training and after
     /// deserialization; the codegen and simulators assume a valid model.
     pub fn validate(&self) -> Result<(), IrError> {
+        // Capacity limits first: a corrupt or hostile file fails on its
+        // declared sizes before any per-node work happens.
+        if self.trees.is_empty() {
+            return Err(IrError::NoTrees);
+        }
+        if self.n_features > MAX_FEATURES {
+            return Err(IrError::TooManyFeatures { got: self.n_features });
+        }
+        if self.n_classes == 0 || self.n_classes > MAX_CLASSES {
+            return Err(IrError::BadClassCount { got: self.n_classes });
+        }
+        if self.trees.len() > MAX_TREES {
+            return Err(IrError::TooManyTrees { got: self.trees.len() });
+        }
+        if self.base_score.len() != self.n_classes {
+            return Err(IrError::BadBaseScoreArity { got: self.base_score.len() });
+        }
+        if let Some(index) = self.base_score.iter().position(|v| !v.is_finite()) {
+            return Err(IrError::NonFiniteBaseScore { index });
+        }
         for (ti, tree) in self.trees.iter().enumerate() {
             if tree.nodes.is_empty() {
                 return Err(IrError::EmptyTree(ti));
+            }
+            if tree.nodes.len() > MAX_NODES_PER_TREE {
+                return Err(IrError::TreeTooLarge { tree: ti, got: tree.nodes.len() });
             }
             let n = tree.nodes.len();
             let mut seen = vec![false; n];
@@ -238,6 +302,9 @@ impl Model {
                     Node::Leaf { values } => {
                         if values.len() != self.n_classes {
                             return Err(IrError::BadLeafArity { tree: ti, node: i, got: values.len() });
+                        }
+                        if values.iter().any(|v| !v.is_finite()) {
+                            return Err(IrError::NonFiniteLeafValue { tree: ti, node: i });
                         }
                         if self.kind == ModelKind::RandomForest {
                             let sum: f32 = values.iter().sum();
@@ -442,6 +509,44 @@ mod tests {
         let mut m = stump();
         m.trees[0].nodes[1] = Node::Leaf { values: vec![1.0] };
         assert!(matches!(m.validate(), Err(IrError::BadLeafArity { .. })));
+    }
+
+    #[test]
+    fn validate_enforces_capacity_limits() {
+        let mut m = stump();
+        m.trees.clear();
+        assert_eq!(m.validate(), Err(IrError::NoTrees));
+
+        let mut m = stump();
+        m.n_features = MAX_FEATURES + 1;
+        assert_eq!(m.validate(), Err(IrError::TooManyFeatures { got: MAX_FEATURES + 1 }));
+
+        let mut m = stump();
+        m.n_classes = MAX_CLASSES + 1;
+        assert_eq!(m.validate(), Err(IrError::BadClassCount { got: MAX_CLASSES + 1 }));
+        m.n_classes = 0;
+        assert_eq!(m.validate(), Err(IrError::BadClassCount { got: 0 }));
+    }
+
+    #[test]
+    fn validate_catches_base_score_corruption() {
+        let mut m = stump();
+        m.base_score = vec![0.0];
+        assert_eq!(m.validate(), Err(IrError::BadBaseScoreArity { got: 1 }));
+
+        let mut m = stump();
+        m.base_score[1] = f32::INFINITY;
+        assert_eq!(m.validate(), Err(IrError::NonFiniteBaseScore { index: 1 }));
+    }
+
+    #[test]
+    fn validate_catches_nonfinite_leaf() {
+        // GBT kind so the RF distribution check cannot mask the leaf
+        // finiteness check.
+        let mut m = stump();
+        m.kind = ModelKind::Gbt;
+        m.trees[0].nodes[2] = Node::Leaf { values: vec![0.2, f32::NAN] };
+        assert_eq!(m.validate(), Err(IrError::NonFiniteLeafValue { tree: 0, node: 2 }));
     }
 
     #[test]

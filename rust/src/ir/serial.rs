@@ -24,6 +24,7 @@
 //! ```
 
 use super::{Model, ModelKind, Node, Tree};
+use super::{MAX_CLASSES, MAX_FEATURES, MAX_NODES_PER_TREE, MAX_TREES};
 use crate::util::json::{arr, f32_arr, num, obj, s, Json};
 
 /// Current format tag.
@@ -127,10 +128,16 @@ pub fn from_json(v: &Json) -> Result<Model, SerialError> {
         .get("n_features")
         .and_then(Json::as_usize)
         .ok_or_else(|| SerialError("bad n_features".into()))?;
+    if n_features > MAX_FEATURES {
+        return err(format!("n_features {n_features} exceeds limit {MAX_FEATURES}"));
+    }
     let n_classes = v
         .get("n_classes")
         .and_then(Json::as_usize)
         .ok_or_else(|| SerialError("bad n_classes".into()))?;
+    if n_classes == 0 || n_classes > MAX_CLASSES {
+        return err(format!("n_classes {n_classes} outside 1..={MAX_CLASSES}"));
+    }
     let base_score: Vec<f32> =
         get_f64s(v, "base_score")?.into_iter().map(|x| x as f32).collect();
 
@@ -138,6 +145,9 @@ pub fn from_json(v: &Json) -> Result<Model, SerialError> {
         Some(a) => a,
         None => return err("missing 'trees'"),
     };
+    if trees_json.len() > MAX_TREES {
+        return err(format!("{} trees exceeds limit {MAX_TREES}", trees_json.len()));
+    }
     let mut trees = Vec::with_capacity(trees_json.len());
     for (ti, tv) in trees_json.iter().enumerate() {
         let feature = get_f64s(tv, "feature")?;
@@ -151,6 +161,9 @@ pub fn from_json(v: &Json) -> Result<Model, SerialError> {
         let n = feature.len();
         if threshold.len() != n || left.len() != n || right.len() != n || leaf.len() != n {
             return err(format!("tree {ti}: column length mismatch"));
+        }
+        if n > MAX_NODES_PER_TREE {
+            return err(format!("tree {ti}: {n} nodes exceeds limit {MAX_NODES_PER_TREE}"));
         }
         let mut nodes = Vec::with_capacity(n);
         for i in 0..n {
@@ -167,9 +180,17 @@ pub fn from_json(v: &Json) -> Result<Model, SerialError> {
                     .collect::<Result<Vec<f32>, _>>()?;
                 nodes.push(Node::Leaf { values });
             } else {
+                // The f64 → f32 narrowing can overflow to infinity (JSON
+                // happily encodes 1e300); catch it here with a located
+                // message — `validate` would reject it too, but later and
+                // namelessly relative to the file.
+                let th = threshold[i] as f32;
+                if !th.is_finite() {
+                    return err(format!("tree {ti} node {i}: non-finite threshold"));
+                }
                 nodes.push(Node::Branch {
                     feature: feature[i] as u32,
-                    threshold: threshold[i] as f32,
+                    threshold: th,
                     left: left[i] as u32,
                     right: right[i] as u32,
                 });
@@ -248,6 +269,40 @@ mod tests {
             "n_classes":2,"base_score":[0,0],
             "trees":[{"feature":[-1],"threshold":[0,0],"left":[0],"right":[0],"leaf":[[1,0]]}]}"#;
         assert!(Model::from_json(bad).is_err());
+    }
+
+    #[test]
+    fn rejects_oversized_declared_counts() {
+        // Hostile headers fail on their declared sizes, before any
+        // allocation or per-node work.
+        let huge_features = r#"{"format":"intreeger-ir-v1","kind":"rf",
+            "n_features":9999999999,"n_classes":2,"base_score":[0,0],
+            "trees":[{"feature":[-1],"threshold":[0],"left":[0],"right":[0],"leaf":[[1,0]]}]}"#;
+        assert!(Model::from_json(huge_features).is_err());
+        let huge_classes = r#"{"format":"intreeger-ir-v1","kind":"rf",
+            "n_features":1,"n_classes":9999999,"base_score":[0,0],
+            "trees":[{"feature":[-1],"threshold":[0],"left":[0],"right":[0],"leaf":[[1,0]]}]}"#;
+        assert!(Model::from_json(huge_classes).is_err());
+        let zero_classes = r#"{"format":"intreeger-ir-v1","kind":"rf",
+            "n_features":1,"n_classes":0,"base_score":[],
+            "trees":[{"feature":[-1],"threshold":[0],"left":[0],"right":[0],"leaf":[[]]}]}"#;
+        assert!(Model::from_json(zero_classes).is_err());
+    }
+
+    #[test]
+    fn rejects_nonfinite_threshold_encodings() {
+        // 1e999 parses to f64 infinity; 1e300 is finite in f64 but
+        // overflows the f32 narrowing. Both must be typed errors.
+        for enc in ["1e999", "1e300", "-1e999"] {
+            let bad = format!(
+                r#"{{"format":"intreeger-ir-v1","kind":"rf","n_features":1,
+                "n_classes":2,"base_score":[0,0],
+                "trees":[{{"feature":[0,-1,-1],"threshold":[{enc},0,0],
+                "left":[1,0,0],"right":[2,0,0],
+                "leaf":[[],[0.9,0.1],[0.2,0.8]]}}]}}"#
+            );
+            assert!(Model::from_json(&bad).is_err(), "threshold {enc} must be rejected");
+        }
     }
 
     #[test]

@@ -230,6 +230,14 @@ fn usage() -> String {
 // Handlers
 // ---------------------------------------------------------------------------
 
+/// Print a CLI-facing error and exit(1). The library layers return
+/// typed errors (`IrError`, `ServeError`, …); the CLI's job is to render
+/// them once, at top level, instead of unwinding with a panic backtrace.
+fn die(msg: impl std::fmt::Display) -> ! {
+    eprintln!("error: {msg}");
+    std::process::exit(1);
+}
+
 fn load_dataset(args: &Args) -> Dataset {
     let rows = args.usize_or("rows", 8000);
     let seed = args.u64_or("seed", 42);
@@ -245,9 +253,11 @@ fn load_dataset(args: &Args) -> Dataset {
 }
 
 fn load_model(args: &Args) -> Model {
-    let path = args.get("model").expect("--model PATH required");
-    let text = std::fs::read_to_string(path).expect("cannot read model file");
-    Model::from_json(&text).expect("invalid model file")
+    let path = args.get("model").unwrap_or_else(|| die("--model PATH required"));
+    let text = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| die(format!("cannot read model file '{path}': {e}")));
+    Model::from_json(&text)
+        .unwrap_or_else(|e| die(format!("invalid model file '{path}': {e}")))
 }
 
 fn parse_variant(s: &str) -> Variant {
@@ -360,21 +370,26 @@ fn cmd_train(args: &Args) {
 }
 
 fn cmd_import(args: &Args) {
-    let path = args.get("file").expect("--file PATH required");
-    let text = std::fs::read_to_string(path).expect("cannot read dump file");
+    let path = args.get("file").unwrap_or_else(|| die("--file PATH required"));
+    let text = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| die(format!("cannot read dump file '{path}': {e}")));
     let model = match args.get("format").unwrap_or("lightgbm") {
-        "lightgbm" => intreeger::ir::import::lightgbm::import(&text).expect("lightgbm import"),
+        "lightgbm" => intreeger::ir::import::lightgbm::import(&text)
+            .unwrap_or_else(|e| die(format!("lightgbm import of '{path}' failed: {e}"))),
         "xgboost" => {
             let nf = args.usize_or("features", 0);
             let nc = args.usize_or("classes", 2);
-            assert!(nf > 0, "--features N required for xgboost dumps");
+            if nf == 0 {
+                die("--features N required for xgboost dumps");
+            }
             let base = args
                 .get("base-score")
-                .map(|v| v.parse::<f32>().expect("bad base-score"))
+                .map(|v| v.parse::<f32>().unwrap_or_else(|_| die("bad --base-score")))
                 .unwrap_or(0.0);
-            intreeger::ir::import::xgboost::import(&text, nf, nc, base).expect("xgboost import")
+            intreeger::ir::import::xgboost::import(&text, nf, nc, base)
+                .unwrap_or_else(|e| die(format!("xgboost import of '{path}' failed: {e}")))
         }
-        other => panic!("unknown format '{other}' (use lightgbm | xgboost)"),
+        other => die(format!("unknown format '{other}' (use lightgbm | xgboost)")),
     };
     let stats = intreeger::ir::stats::stats(&model);
     eprintln!(
@@ -460,13 +475,20 @@ fn cmd_serve(args: &Args) {
     let (server, demo): (InferenceServer, Dataset) = match args.get("pipeline") {
         Some(dir) => {
             let dir = PathBuf::from(dir);
-            let (server, model) =
-                coordinator::server_from_pipeline(&dir, config).expect("boot from pipeline bundle");
+            let (server, model) = coordinator::server_from_pipeline(&dir, config)
+                .unwrap_or_else(|e| {
+                    die(format!("cannot boot from pipeline bundle '{}': {e}", dir.display()))
+                });
             // Demo traffic: the bundle's own holdout, falling back to a
             // synthetic set with the model's arity.
             let demo = data::csv::read_file(&dir.join("holdout.csv"), false)
                 .unwrap_or_else(|_| load_dataset(args));
-            assert_eq!(demo.n_features, model.n_features, "demo rows must match the model");
+            if demo.n_features != model.n_features {
+                die(format!(
+                    "demo rows have {} features but the model expects {}",
+                    demo.n_features, model.n_features
+                ));
+            }
             (server, demo)
         }
         None => {
@@ -489,10 +511,25 @@ fn cmd_serve(args: &Args) {
     let responses = server.infer_many(rows);
     let wall = t0.elapsed();
     let snap = server.metrics();
+    // Every submitted request resolves — as a Response or a typed
+    // ServeError (shed/expired/lost) — so ok + failed always equals n.
+    let ok = responses.iter().filter(|r| r.is_ok()).count();
     println!(
         "served {n} requests in {:.1} ms ({:.0} req/s)",
         wall.as_secs_f64() * 1e3,
         n as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "outcomes: {ok} ok / {} failed; shed {} expired {} rejected {} lost {}; \
+         worker panics {} restarts {}{}",
+        n - ok,
+        snap.shed,
+        snap.expired,
+        snap.rejected,
+        snap.lost,
+        snap.worker_panics,
+        snap.worker_restarts,
+        if snap.degraded { " (DEGRADED: serving on the fallback scalar engine)" } else { "" }
     );
     println!(
         "routes: scalar {} rows / xla {} rows; mean batch {:.1}; latency p50 {:.0} us p99 {:.0} us",
@@ -509,7 +546,6 @@ fn cmd_serve(args: &Args) {
             snap.detected_features.join(", ")
         }
     );
-    let _ = responses;
 }
 
 fn cmd_tablei() {

@@ -14,9 +14,16 @@
 //! Both live in `manifest.json` of their respective directories and are
 //! told apart by their `format` tag.
 
-use crate::ir::Model;
+use crate::ir::{Model, MAX_CLASSES, MAX_FEATURES, MAX_NODES_PER_TREE, MAX_TREES};
 use crate::util::json::{arr, num, obj, s, Json};
 use std::path::Path;
+
+/// Largest batch an artifact tier may declare. Tier shapes size host
+/// buffers at load time, so a corrupt manifest must not be able to
+/// demand a pathological allocation.
+pub const MAX_TIER_BATCH: usize = 1 << 20;
+/// Largest unrolled depth an artifact tier may declare.
+pub const MAX_TIER_DEPTH: usize = 512;
 
 /// One compiled artifact tier (fixed shapes baked at AOT time).
 #[derive(Clone, Debug, PartialEq)]
@@ -68,10 +75,26 @@ impl Manifest {
             .ok_or_else(|| anyhow::anyhow!("manifest: missing tiers"))?;
         let mut tiers = Vec::new();
         for t in tiers_json {
+            // Each shape field must be positive and inside the same
+            // capacity limits the IR enforces — tier shapes size host
+            // buffers, so they are admission-checked like model files.
             let field = |k: &str| -> anyhow::Result<usize> {
-                t.get(k)
+                let limit = match k {
+                    "B" => MAX_TIER_BATCH,
+                    "F" => MAX_FEATURES,
+                    "T" => MAX_TREES,
+                    "N" => MAX_NODES_PER_TREE,
+                    "C" => MAX_CLASSES,
+                    _ => MAX_TIER_DEPTH,
+                };
+                let v = t
+                    .get(k)
                     .and_then(Json::as_usize)
-                    .ok_or_else(|| anyhow::anyhow!("manifest tier: bad field '{k}'"))
+                    .ok_or_else(|| anyhow::anyhow!("manifest tier: bad field '{k}'"))?;
+                if v == 0 || v > limit {
+                    anyhow::bail!("manifest tier: field '{k}' = {v} outside 1..={limit}");
+                }
+                Ok(v)
             };
             tiers.push(Tier {
                 name: t
@@ -273,6 +296,22 @@ mod tests {
         assert!(Manifest::parse("{\"format\":\"x\",\"tiers\":[]}").is_err());
         assert!(Manifest::parse("{}").is_err());
         assert!(Manifest::parse("nope").is_err());
+    }
+
+    #[test]
+    fn parse_rejects_out_of_bounds_tier_shapes() {
+        // Tier shapes size host buffers; zero and absurd values are
+        // admission errors, not later allocation failures.
+        let tier = |b: usize, n: usize| {
+            format!(
+                r#"{{"format":"intreeger-artifacts-v1","tiers":[
+                    {{"name":"t","file":"f.hlo.txt","B":{b},"F":8,"T":16,"N":{n},"C":8,"depth":6,"use_pallas":true}}]}}"#
+            )
+        };
+        assert!(Manifest::parse(&tier(64, 63)).is_ok());
+        assert!(Manifest::parse(&tier(0, 63)).is_err(), "zero batch");
+        assert!(Manifest::parse(&tier(1 << 30, 63)).is_err(), "absurd batch");
+        assert!(Manifest::parse(&tier(64, 999_999_999)).is_err(), "absurd node count");
     }
 
     #[test]

@@ -1,0 +1,344 @@
+//! Chaos suite: deterministic fault injection against the serving
+//! stack, asserting the failure-model invariants end to end:
+//!
+//! 1. **No lost reply**: every submitted request resolves with a
+//!    `Response` or a typed `ServeError` (all receives use bounded
+//!    timeouts — a hang is a failure, not a wait).
+//! 2. **No caller panic**: faults surface as values, never unwinding.
+//! 3. **Bit-identity of survivors**: requests that serve under a fault
+//!    plan produce exactly the oracle engine's fixed-point accumulators
+//!    (the same parity invariant the kernels guarantee), at every
+//!    worker count — and the whole suite runs under the CI
+//!    `INTREEGER_THREADS` / `INTREEGER_BACKEND` legs, covering thread
+//!    counts and backends.
+//! 4. **Counters consistent**: admitted = served + expired + lost, with
+//!    shed/rejected accounted at admission.
+//!
+//! Every test pins an explicit `FaultPlan` (`ServerConfig::faults:
+//! Some(..)`), so the suite is immune to a process-wide
+//! `INTREEGER_FAULTS` (the CI chaos leg sets one to exercise the env
+//! path; `env_plan_drives_injection` covers it hermetically here).
+
+use intreeger::coordinator::{
+    BatchPolicy, FaultPlan, InferenceServer, ServeError, ServerConfig, DEGRADE_AFTER, FAULTS_ENV,
+};
+use intreeger::data::{shuttle_like, Dataset};
+use intreeger::inference::IntEngine;
+use intreeger::ir::Model;
+use intreeger::trees::{ForestParams, RandomForest};
+use std::time::Duration;
+
+const RESOLVE: Duration = Duration::from_secs(10);
+
+fn model() -> (Dataset, Model) {
+    let ds = shuttle_like(1000, 41);
+    let m = RandomForest::train(
+        &ds,
+        &ForestParams { n_trees: 6, max_depth: 5, ..Default::default() },
+        7,
+    );
+    (ds, m)
+}
+
+fn no_faults() -> Option<FaultPlan> {
+    Some(FaultPlan::none())
+}
+
+/// Invariant 3 baseline: with faults pinned off, results are
+/// bit-identical to the oracle engine at every worker count, and the
+/// failure counters stay at zero.
+#[test]
+fn fault_free_run_bit_identical_across_worker_counts() {
+    let (ds, m) = model();
+    let oracle = IntEngine::compile(&m);
+    for n_workers in [1usize, 2, 4] {
+        let server = InferenceServer::start(
+            &m,
+            None,
+            ServerConfig {
+                policy: BatchPolicy { max_batch: 16, max_wait: Duration::from_micros(200) },
+                n_workers,
+                faults: no_faults(),
+                ..Default::default()
+            },
+        );
+        let rows: Vec<Vec<f32>> = (0..200).map(|i| ds.row(i % ds.n_rows()).to_vec()).collect();
+        for (i, r) in server.infer_many(rows).into_iter().enumerate() {
+            let r = r.expect("fault-free request must serve");
+            assert_eq!(
+                r.fixed,
+                oracle.predict_fixed(ds.row(i % ds.n_rows())),
+                "row {i} parity at {n_workers} workers"
+            );
+        }
+        let snap = server.metrics();
+        assert_eq!(snap.requests, 200);
+        assert_eq!(snap.responses, 200);
+        assert_eq!((snap.shed, snap.expired, snap.rejected, snap.lost), (0, 0, 0, 0));
+        assert_eq!((snap.worker_panics, snap.worker_restarts), (0, 0));
+        assert!(!snap.degraded);
+    }
+}
+
+/// A scripted worker panic on the first batch: every in-flight request
+/// resolves as `WorkerLost` (no hang, no caller panic), the supervisor
+/// restarts the shard, and the server keeps serving bit-identically.
+#[test]
+fn worker_panic_resolves_all_requests_and_recovers() {
+    let (ds, m) = model();
+    let oracle = IntEngine::compile(&m);
+    let server = InferenceServer::start(
+        &m,
+        None,
+        ServerConfig {
+            // One deadline-flushed batch holds the whole first wave.
+            policy: BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(20) },
+            n_workers: 1,
+            faults: Some(FaultPlan { panic_batches: vec![1], ..FaultPlan::none() }),
+            ..Default::default()
+        },
+    );
+    // Wave 1: all land in batch #1, which panics mid-execution.
+    let rxs: Vec<_> = (0..8)
+        .map(|i| server.submit(ds.row(i).to_vec()).expect("admitted"))
+        .collect();
+    for rx in rxs {
+        let resolved = rx.recv_timeout(RESOLVE).expect("request must resolve, not hang");
+        assert_eq!(resolved, Err(ServeError::WorkerLost));
+    }
+    // Wave 2: the restarted worker serves correctly.
+    for i in 0..8 {
+        let r = server.infer(ds.row(i).to_vec()).expect("post-restart serve");
+        assert_eq!(r.fixed, oracle.predict_fixed(ds.row(i)), "row {i} after restart");
+    }
+    let snap = server.metrics();
+    assert_eq!(snap.worker_panics, 1);
+    assert_eq!(snap.worker_restarts, 1);
+    assert_eq!(snap.lost, 8);
+    assert_eq!(snap.responses, 8);
+    assert_eq!(snap.requests, 16);
+    // One failure is below the degradation threshold.
+    assert!(DEGRADE_AFTER > 1 && !snap.degraded);
+}
+
+/// Repeated execution-path failure degrades the shard to the
+/// conservative fallback (scalar-branchless @ 1 thread), recorded in
+/// metrics — and the fallback's answers are bit-identical to the
+/// primary engine's (the parity invariant makes degradation lossless).
+#[test]
+fn repeated_panics_degrade_to_fallback_and_keep_serving() {
+    let (ds, m) = model();
+    let oracle = IntEngine::compile(&m);
+    let server = InferenceServer::start(
+        &m,
+        None,
+        ServerConfig {
+            policy: BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(1) },
+            n_workers: 1,
+            faults: Some(FaultPlan {
+                panic_batches: (1..=u64::from(DEGRADE_AFTER)).collect(),
+                ..FaultPlan::none()
+            }),
+            ..Default::default()
+        },
+    );
+    // Sequential blocking calls: each forms its own batch, so the first
+    // DEGRADE_AFTER batches crash deterministically.
+    for i in 0..DEGRADE_AFTER {
+        assert_eq!(
+            server.infer(ds.row(i as usize).to_vec()),
+            Err(ServeError::WorkerLost),
+            "scripted crash #{i}"
+        );
+    }
+    // The shard is degraded now; serving continues bit-identically.
+    for i in 0..30 {
+        let r = server.infer(ds.row(i).to_vec()).expect("degraded serve");
+        assert_eq!(r.fixed, oracle.predict_fixed(ds.row(i)), "row {i} on fallback engine");
+    }
+    let snap = server.metrics();
+    assert!(snap.degraded, "degraded flag must be recorded");
+    assert_eq!(snap.worker_panics, u64::from(DEGRADE_AFTER));
+    assert_eq!(snap.worker_restarts, u64::from(DEGRADE_AFTER));
+    assert_eq!(snap.lost, u64::from(DEGRADE_AFTER));
+    assert_eq!(snap.responses, 30);
+    // The recorded execution strategy is the fallback's.
+    assert_eq!(snap.kernel.as_deref(), Some("branchless"));
+    assert_eq!(snap.backend.as_deref(), Some("scalar"));
+    assert_eq!(snap.threads, Some(1));
+}
+
+/// Scripted service latency plus a short TTL: requests stuck behind a
+/// slow batch expire at batch-formation time with `DeadlineExceeded`
+/// instead of burning kernel time (and instead of hanging).
+#[test]
+fn latency_injection_expires_queued_requests() {
+    let (ds, m) = model();
+    let server = InferenceServer::start(
+        &m,
+        None,
+        ServerConfig {
+            // Flush per request so the injected latency serializes them.
+            policy: BatchPolicy { max_batch: 1, max_wait: Duration::from_micros(100) },
+            n_workers: 1,
+            faults: Some(FaultPlan {
+                latency: Some(Duration::from_millis(30)),
+                ..FaultPlan::none()
+            }),
+            ..Default::default()
+        },
+    );
+    // A (no TTL) enters batch #1; B (2 ms TTL) waits ≥30 ms behind A's
+    // injected service latency — far past its deadline.
+    let rx_a = server.submit_with_ttl(ds.row(0).to_vec(), None).expect("admitted A");
+    let rx_b = server
+        .submit_with_ttl(ds.row(1).to_vec(), Some(Duration::from_millis(2)))
+        .expect("admitted B");
+    let a = rx_a.recv_timeout(RESOLVE).expect("A resolves");
+    let b = rx_b.recv_timeout(RESOLVE).expect("B resolves");
+    assert!(a.is_ok(), "A was fresh at batch formation: {a:?}");
+    assert_eq!(b, Err(ServeError::DeadlineExceeded));
+    let snap = server.metrics();
+    assert_eq!(snap.expired, 1);
+    assert_eq!(snap.responses, 1);
+    assert_eq!(snap.requests, 2);
+}
+
+/// Forced queue-full sheds exactly the scripted number of submissions,
+/// every shed resolves immediately as `QueueFull`, and the admitted
+/// remainder serves normally.
+#[test]
+fn forced_queue_full_sheds_exactly_and_serves_the_rest() {
+    let (ds, m) = model();
+    let oracle = IntEngine::compile(&m);
+    let server = InferenceServer::start(
+        &m,
+        None,
+        ServerConfig {
+            faults: Some(FaultPlan { queue_full_first: 5, ..FaultPlan::none() }),
+            ..Default::default()
+        },
+    );
+    let mut shed = 0u64;
+    let mut rxs = Vec::new();
+    for i in 0..20 {
+        match server.submit(ds.row(i).to_vec()) {
+            Ok(rx) => rxs.push((i, rx)),
+            Err(e) => {
+                assert_eq!(e, ServeError::QueueFull);
+                shed += 1;
+            }
+        }
+    }
+    assert_eq!(shed, 5, "exactly the scripted sheds");
+    assert_eq!(rxs.len(), 15);
+    for (i, rx) in rxs {
+        let r = rx.recv_timeout(RESOLVE).expect("resolves").expect("serves");
+        assert_eq!(r.fixed, oracle.predict_fixed(ds.row(i)), "row {i}");
+    }
+    let snap = server.metrics();
+    assert_eq!(snap.shed, 5);
+    assert_eq!(snap.requests, 15);
+    assert_eq!(snap.responses, 15);
+}
+
+/// The counter accounting identity under a crash plan, at multiple
+/// workers: admitted = served + expired + lost, and the Ok results stay
+/// bit-identical to the oracle.
+#[test]
+fn accounting_identity_holds_under_panic_plan() {
+    let (ds, m) = model();
+    let oracle = IntEngine::compile(&m);
+    let server = InferenceServer::start(
+        &m,
+        None,
+        ServerConfig {
+            policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(200) },
+            n_workers: 2,
+            faults: Some(FaultPlan { panic_batches: vec![2], ..FaultPlan::none() }),
+            ..Default::default()
+        },
+    );
+    let rows: Vec<Vec<f32>> = (0..100).map(|i| ds.row(i % ds.n_rows()).to_vec()).collect();
+    let results = server.infer_many(rows);
+    assert_eq!(results.len(), 100, "every request resolves");
+    let mut ok = 0u64;
+    let mut lost = 0u64;
+    for (i, r) in results.into_iter().enumerate() {
+        match r {
+            Ok(resp) => {
+                ok += 1;
+                assert_eq!(
+                    resp.fixed,
+                    oracle.predict_fixed(ds.row(i % ds.n_rows())),
+                    "surviving row {i} parity"
+                );
+            }
+            Err(ServeError::WorkerLost) => lost += 1,
+            Err(other) => panic!("unexpected error under panic plan: {other}"),
+        }
+    }
+    assert!(lost > 0, "the scripted crash must strand at least one request");
+    let snap = server.metrics();
+    assert_eq!(snap.responses, ok);
+    assert_eq!(snap.lost, lost);
+    assert_eq!(
+        snap.requests,
+        snap.responses + snap.expired + snap.lost,
+        "admitted = served + expired + lost"
+    );
+    assert_eq!(snap.worker_panics, 1);
+}
+
+/// The `INTREEGER_FAULTS` env path: a server started with `faults: None`
+/// picks the plan up from the environment. (Other tests pin explicit
+/// plans, so this test owns the variable while it runs.)
+#[test]
+fn env_plan_drives_injection() {
+    let (ds, m) = model();
+    let prior = std::env::var(FAULTS_ENV).ok();
+    std::env::set_var(FAULTS_ENV, "queue_full_n=2");
+    let server = InferenceServer::start(
+        &m,
+        None,
+        ServerConfig { faults: None, ..Default::default() },
+    );
+    // The plan was captured at start; release the variable immediately.
+    match &prior {
+        Some(v) => std::env::set_var(FAULTS_ENV, v),
+        None => std::env::remove_var(FAULTS_ENV),
+    }
+    let mut shed = 0;
+    for i in 0..4 {
+        match server.submit(ds.row(i).to_vec()) {
+            Ok(rx) => {
+                rx.recv_timeout(RESOLVE).expect("resolves").expect("serves");
+            }
+            Err(ServeError::QueueFull) => shed += 1,
+            Err(other) => panic!("unexpected: {other}"),
+        }
+    }
+    assert_eq!(shed, 2, "env-scripted sheds");
+    assert_eq!(server.metrics().shed, 2);
+}
+
+/// A malformed env plan is ignored loudly, never panics, and the server
+/// serves normally.
+#[test]
+fn malformed_env_plan_is_ignored_not_fatal() {
+    let (ds, m) = model();
+    let prior = std::env::var(FAULTS_ENV).ok();
+    std::env::set_var(FAULTS_ENV, "panic_batch=oops;;frobnicate");
+    let server = InferenceServer::start(
+        &m,
+        None,
+        ServerConfig { faults: None, ..Default::default() },
+    );
+    match &prior {
+        Some(v) => std::env::set_var(FAULTS_ENV, v),
+        None => std::env::remove_var(FAULTS_ENV),
+    }
+    let r = server.infer(ds.row(0).to_vec()).expect("serves despite bad plan");
+    assert_eq!(r.fixed, IntEngine::compile(&m).predict_fixed(ds.row(0)));
+    assert_eq!(server.metrics().shed, 0);
+}

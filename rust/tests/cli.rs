@@ -102,6 +102,10 @@ fn pipeline_cli_end_to_end_and_serve_from_bundle() {
     let text = String::from_utf8_lossy(&serve.stdout);
     assert!(text.contains("served 50 requests"), "unexpected serve output:\n{text}");
     assert!(
+        text.contains("outcomes: 50 ok / 0 failed"),
+        "serve must report per-request outcomes:\n{text}"
+    );
+    assert!(
         text.contains("execution: kernel"),
         "serve must surface the execution strategy:\n{text}"
     );
@@ -306,6 +310,103 @@ fn inspect_threads_flag_and_env_pin_single_thread() {
         "INTREEGER_THREADS=1 must pin the default:\n{text}"
     );
     assert!(text.contains("@ 1t"), "calibration sweep must collapse to 1 thread:\n{text}");
+}
+
+/// The serve demo reports the failure-model counters, and a pinned
+/// `INTREEGER_FAULTS` plan drives them deterministically: the blocking
+/// demo client retries injected queue-fulls, so every request still
+/// resolves ok, while the shed counter records each refused admission.
+#[test]
+fn serve_reports_overload_counters_under_fault_plan() {
+    let dir = tmpdir();
+    let model = dir.join("faults_model.json");
+    let st = Command::new(bin())
+        .args(["train", "--dataset", "shuttle", "--rows", "900", "--trees", "3", "--depth", "4",
+               "--seed", "21", "--out"])
+        .arg(&model)
+        .status()
+        .unwrap();
+    assert!(st.success());
+
+    // Fault-free control: the outcomes line is present with zero failures.
+    let out = Command::new(bin())
+        .args(["serve", "--model"])
+        .arg(&model)
+        .args(["--requests", "40"])
+        .env("INTREEGER_FAULTS", "")
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "serve failed: {}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("served 40 requests"), "unexpected serve output:\n{text}");
+    assert!(text.contains("outcomes: 40 ok / 0 failed"), "missing outcomes line:\n{text}");
+    assert!(text.contains("shed 0 expired 0 rejected 0 lost 0"), "counters must be zero:\n{text}");
+
+    // Pinned fault plan: exactly 3 injected queue-fulls, all absorbed by
+    // the closed-loop client's retry, all recorded by the shed counter.
+    let out = Command::new(bin())
+        .args(["serve", "--model"])
+        .arg(&model)
+        .args(["--requests", "40"])
+        .env("INTREEGER_FAULTS", "queue_full_n=3")
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "serve failed: {}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("outcomes: 40 ok / 0 failed"), "requests must all resolve:\n{text}");
+    assert!(text.contains("shed 3"), "the injected sheds must be reported:\n{text}");
+}
+
+/// CLI error paths exit(1) with a rendered `error:` line — no panic
+/// backtraces for predictable failures (missing files, corrupt models,
+/// non-bundle directories).
+#[test]
+fn cli_errors_are_graceful_not_panics() {
+    let check = |out: std::process::Output, what: &str| {
+        assert!(!out.status.success(), "{what}: must fail");
+        assert_eq!(out.status.code(), Some(1), "{what}: must exit(1), not abort");
+        let err = String::from_utf8_lossy(&out.stderr);
+        assert!(err.contains("error:"), "{what}: missing rendered error:\n{err}");
+        assert!(!err.contains("panicked"), "{what}: must not panic:\n{err}");
+    };
+    check(
+        Command::new(bin())
+            .args(["codegen", "--model", "/nonexistent/model.json"])
+            .output()
+            .unwrap(),
+        "missing model file",
+    );
+    let dir = tmpdir();
+    let not_a_bundle = dir.join("not_a_bundle");
+    std::fs::create_dir_all(&not_a_bundle).unwrap();
+    check(
+        Command::new(bin())
+            .args(["serve", "--pipeline"])
+            .arg(&not_a_bundle)
+            .output()
+            .unwrap(),
+        "serve from a non-bundle dir",
+    );
+    let corrupt = dir.join("corrupt_model.json");
+    std::fs::write(&corrupt, "{\"format\":\"intreeger-ir-v1\",\"kind\":\"rf\"").unwrap();
+    check(
+        Command::new(bin())
+            .args(["codegen", "--model"])
+            .arg(&corrupt)
+            .output()
+            .unwrap(),
+        "corrupt model file",
+    );
+    let bad_dump = dir.join("bad_dump.txt");
+    std::fs::write(&bad_dump, "not a lightgbm dump").unwrap();
+    check(
+        Command::new(bin())
+            .args(["import", "--file"])
+            .arg(&bad_dump)
+            .output()
+            .unwrap(),
+        "malformed import dump",
+    );
 }
 
 #[test]

@@ -1,0 +1,254 @@
+//! Corrupt-input corpus: every model-loading front door — the IR JSON
+//! deserializer, the LightGBM/XGBoost importers, and both manifest
+//! parsers — must turn arbitrary broken input into a typed error. No
+//! panic, no hang, no pathological allocation driven by a hostile
+//! header. (ISSUE 7 satellite: harden model-loading inputs.)
+
+use intreeger::data::shuttle_like;
+use intreeger::ir::import::{lightgbm, xgboost};
+use intreeger::ir::{IrError, Model, MAX_CLASSES, MAX_FEATURES, MAX_TREES};
+use intreeger::runtime::{Manifest, PipelineManifest};
+use intreeger::trees::{ForestParams, RandomForest};
+
+fn trained_model_json() -> String {
+    let ds = shuttle_like(400, 13);
+    RandomForest::train(
+        &ds,
+        &ForestParams { n_trees: 3, max_depth: 4, ..Default::default() },
+        5,
+    )
+    .to_json()
+}
+
+/// Truncating a valid model file at any byte must produce an error,
+/// never a panic (and never an accepted model).
+#[test]
+fn truncated_model_json_always_errors() {
+    let json = trained_model_json();
+    // Every prefix is overkill (the file is tens of KB); sample a spread
+    // of cut points plus the tail region where the object almost closes.
+    let cuts: Vec<usize> = (0..json.len()).step_by(json.len() / 97 + 1).collect();
+    for cut in cuts.into_iter().chain(json.len() - 10..json.len()) {
+        assert!(
+            Model::from_json(&json[..cut]).is_err(),
+            "truncation at byte {cut}/{} must not yield a model",
+            json.len()
+        );
+    }
+    // The untruncated text still loads (the corpus is testing the cuts,
+    // not the model).
+    assert!(Model::from_json(&json).is_ok());
+}
+
+/// Byte-level mutations of a valid file: flip a character at a spread of
+/// positions. Most mutations break JSON or the format; *none* may panic,
+/// and whatever still parses must also pass structural validation.
+#[test]
+fn mutated_model_json_never_panics() {
+    let json = trained_model_json();
+    for pos in (0..json.len()).step_by(json.len() / 211 + 1) {
+        let mut bytes = json.clone().into_bytes();
+        bytes[pos] = match bytes[pos] {
+            b'0'..=b'9' => b'x',
+            _ => b'9',
+        };
+        if let Ok(s) = String::from_utf8(bytes) {
+            // Either outcome is fine; panicking is not.
+            let _ = Model::from_json(&s);
+        }
+    }
+}
+
+/// Hostile headers: declared counts beyond the capacity limits fail as
+/// typed errors before any per-node work.
+#[test]
+fn oversized_declared_counts_are_rejected() {
+    let stump_trees =
+        r#"[{"feature":[-1],"threshold":[0],"left":[0],"right":[0],"leaf":[[1,0]]}]"#;
+    let with_counts = |nf: usize, nc: usize| {
+        format!(
+            r#"{{"format":"intreeger-ir-v1","kind":"rf","n_features":{nf},
+            "n_classes":{nc},"base_score":[0,0],"trees":{stump_trees}}}"#
+        )
+    };
+    assert!(Model::from_json(&with_counts(MAX_FEATURES + 1, 2)).is_err());
+    assert!(Model::from_json(&with_counts(4_000_000_000, 2)).is_err());
+    assert!(Model::from_json(&with_counts(1, MAX_CLASSES + 1)).is_err());
+    assert!(Model::from_json(&with_counts(1, 0)).is_err());
+    // In-bounds control: the same skeleton with sane counts loads.
+    assert!(Model::from_json(&with_counts(1, 2)).is_ok());
+}
+
+/// NaN / infinity smuggled through JSON numbers (1e999 parses to f64
+/// infinity; 1e300 overflows the f32 narrowing) must be typed errors in
+/// thresholds, leaf values and base scores alike.
+#[test]
+fn non_finite_numbers_are_rejected_everywhere() {
+    let model_with = |threshold: &str, leaf: &str, base: &str| {
+        format!(
+            r#"{{"format":"intreeger-ir-v1","kind":"rf","n_features":1,
+            "n_classes":2,"base_score":{base},
+            "trees":[{{"feature":[0,-1,-1],"threshold":[{threshold},0,0],
+            "left":[1,0,0],"right":[2,0,0],
+            "leaf":[[],[0.9,0.1],{leaf}]}}]}}"#
+        )
+    };
+    // control
+    assert!(Model::from_json(&model_with("0.5", "[0.2,0.8]", "[0,0]")).is_ok());
+    for bad in ["1e999", "-1e999", "1e300"] {
+        assert!(
+            Model::from_json(&model_with(bad, "[0.2,0.8]", "[0,0]")).is_err(),
+            "threshold {bad}"
+        );
+        assert!(
+            Model::from_json(&model_with("0.5", &format!("[0.2,{bad}]"), "[0,0]")).is_err(),
+            "leaf {bad}"
+        );
+        assert!(
+            Model::from_json(&model_with("0.5", "[0.2,0.8]", &format!("[0,{bad}]"))).is_err(),
+            "base_score {bad}"
+        );
+    }
+}
+
+#[test]
+fn validate_reports_typed_capacity_errors() {
+    let mut m = Model::from_json(&trained_model_json()).unwrap();
+    m.n_features = MAX_FEATURES + 1;
+    assert_eq!(m.validate(), Err(IrError::TooManyFeatures { got: MAX_FEATURES + 1 }));
+    let mut m = Model::from_json(&trained_model_json()).unwrap();
+    m.trees.clear();
+    assert_eq!(m.validate(), Err(IrError::NoTrees));
+}
+
+/// LightGBM corpus: truncations, NaN payloads, and hostile headers.
+#[test]
+fn lightgbm_corrupt_dumps_error_cleanly() {
+    let valid = "\
+num_class=1\nmax_feature_idx=1\n\n\
+Tree=0\nnum_leaves=3\nsplit_feature=0 1\nthreshold=0.5 -1.25\n\
+decision_type=2 2\nleft_child=1 -1\nright_child=-2 -3\nleaf_value=0.1 -0.2 0.3\n\nend of trees\n";
+    assert!(lightgbm::import(valid).is_ok(), "control dump must import");
+
+    // Truncations at every line boundary.
+    let lines: Vec<&str> = valid.lines().collect();
+    for cut in 0..lines.len() {
+        let partial = lines[..cut].join("\n");
+        // Either a typed error or (for cuts that still form a complete
+        // dump) a valid model; never a panic.
+        let _ = lightgbm::import(&partial);
+    }
+
+    // NaN threshold and NaN leaf value ("nan" parses as f64 NaN).
+    let nan_threshold = valid.replace("threshold=0.5 -1.25", "threshold=nan -1.25");
+    assert!(lightgbm::import(&nan_threshold).is_err());
+    let nan_leaf = valid.replace("leaf_value=0.1 -0.2 0.3", "leaf_value=0.1 nan 0.3");
+    assert!(lightgbm::import(&nan_leaf).is_err());
+    let inf_leaf = valid.replace("leaf_value=0.1 -0.2 0.3", "leaf_value=0.1 inf 0.3");
+    assert!(lightgbm::import(&inf_leaf).is_err());
+
+    // Hostile headers: feature/class counts beyond the limits.
+    let huge_features = valid.replace("max_feature_idx=1", "max_feature_idx=4000000000");
+    assert!(lightgbm::import(&huge_features).is_err());
+    let huge_classes = valid.replace("num_class=1", &format!("num_class={}", MAX_CLASSES + 1));
+    assert!(lightgbm::import(&huge_classes).is_err());
+
+    // Dangling child references.
+    let dangling = valid.replace("right_child=-2 -3", "right_child=-2 -99");
+    assert!(lightgbm::import(&dangling).is_err());
+}
+
+/// XGBoost corpus: malformed JSON, non-finite conditions, hostile counts.
+#[test]
+fn xgboost_corrupt_dumps_error_cleanly() {
+    let valid = r#"[
+      {"nodeid":0,"split":"f0","split_condition":0.5,"yes":1,"no":2,"missing":1,
+       "children":[{"nodeid":1,"leaf":-0.4},{"nodeid":2,"leaf":0.6}]}
+    ]"#;
+    assert!(xgboost::import(valid, 2, 2, 0.0).is_ok(), "control dump must import");
+
+    // Truncations.
+    for cut in (0..valid.len()).step_by(7) {
+        let _ = xgboost::import(&valid[..cut], 2, 2, 0.0);
+    }
+
+    // Infinity via exponent overflow in split_condition and leaf.
+    let inf_cond = valid.replace("\"split_condition\":0.5", "\"split_condition\":1e999");
+    assert!(xgboost::import(&inf_cond, 2, 2, 0.0).is_err());
+    let inf_leaf = valid.replace("\"leaf\":0.6", "\"leaf\":1e999");
+    assert!(xgboost::import(&inf_leaf, 2, 2, 0.0).is_err());
+
+    // Non-finite base score and hostile caller-declared counts.
+    assert!(xgboost::import(valid, 2, 2, f32::NAN).is_err());
+    assert!(xgboost::import(valid, MAX_FEATURES + 1, 2, 0.0).is_err());
+    assert!(xgboost::import(valid, 2, MAX_CLASSES + 1, 0.0).is_err());
+    // A nodeid the children array does not contain.
+    let dangling = valid.replace("\"yes\":1", "\"yes\":42");
+    assert!(xgboost::import(&dangling, 2, 2, 0.0).is_err());
+}
+
+/// The tree-count limit holds even when every tree is tiny (a dump that
+/// declares a million stumps is refused on count, not materialized).
+#[test]
+fn tree_count_limit_enforced() {
+    let mut dump = String::from("[");
+    for i in 0..=MAX_TREES {
+        if i > 0 {
+            dump.push(',');
+        }
+        dump.push_str("{\"nodeid\":0,\"leaf\":0.1}");
+    }
+    dump.push(']');
+    assert!(xgboost::import(&dump, 2, 2, 0.0).is_err());
+}
+
+/// Cross-format manifest confusion: the XLA artifact manifest and the
+/// pipeline bundle manifest share a file name (`manifest.json`); each
+/// parser must reject the other's format with a typed error.
+#[test]
+fn manifest_cross_format_confusion_is_rejected() {
+    let xla = r#"{
+        "format": "intreeger-artifacts-v1",
+        "tiers": [{"name":"quick","file":"f.hlo.txt","B":64,"F":8,"T":16,"N":63,"C":8,"depth":6,"use_pallas":true}]}"#;
+    let bundle = r#"{
+        "format": "intreeger-pipeline-v1",
+        "seed": 42, "report": "report.json",
+        "models": [{"kind":"rf","model":"model_rf.json","c":null,"layout":"ifelse","variant":"intreeger"}]}"#;
+    assert!(Manifest::parse(xla).is_ok());
+    assert!(PipelineManifest::parse(bundle).is_ok());
+    assert!(Manifest::parse(bundle).is_err(), "tier parser must reject bundles");
+    assert!(PipelineManifest::parse(xla).is_err(), "bundle parser must reject tier manifests");
+
+    // And the serving boot path surfaces it as an error, not a panic:
+    // a directory holding an XLA manifest is not a pipeline bundle.
+    let dir = std::env::temp_dir()
+        .join(format!("intreeger_confused_manifest_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), xla).unwrap();
+    assert!(intreeger::coordinator::server_from_pipeline(
+        &dir,
+        intreeger::coordinator::ServerConfig::default()
+    )
+    .is_err());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A pipeline bundle whose model file is corrupt must fail at load with
+/// a located error (file name in the message), not serve garbage.
+#[test]
+fn bundle_with_corrupt_model_file_errors() {
+    let dir = std::env::temp_dir()
+        .join(format!("intreeger_corrupt_bundle_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let manifest = r#"{
+        "format": "intreeger-pipeline-v1",
+        "seed": 1, "report": "report.json",
+        "models": [{"kind":"rf","model":"model_rf.json","c":null,"layout":"ifelse","variant":"intreeger"}]}"#;
+    std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+    let json = trained_model_json();
+    std::fs::write(dir.join("model_rf.json"), &json[..json.len() / 2]).unwrap();
+    let m = PipelineManifest::load(&dir).unwrap();
+    let err = m.load_model(&dir, "rf").unwrap_err().to_string();
+    assert!(err.contains("model_rf.json"), "error must locate the file: {err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
