@@ -14,6 +14,17 @@
 //! section writes a machine-readable `BENCH_serve.json` at the repo root
 //! (path overridable via `INTREEGER_SERVE_JSON`); `BENCH_SMOKE=1` runs
 //! the reduced-size CI variant with an identical schema.
+//!
+//! ISSUE 8 adds the **Poisson saturation curve** (schema 2): instead of
+//! a single flat-out flood, an open-loop arrival process with
+//! deterministic seeded exponential inter-arrival times sweeps offered
+//! load through fractions and multiples of the measured capacity
+//! (0.5x, 0.9x, 1.2x, 2.0x). Each point runs against a fresh server
+//! with a 5 ms TTL and reports goodput, shed rate, and the accepted-
+//! request p50/p99 — the classic saturation story: latency flat below
+//! the knee, shed + TTL expiry absorbing everything above it, and the
+//! accounting identity `ok + shed + expired + lost == offered` holding
+//! at every point.
 
 use intreeger::coordinator::{BatchPolicy, InferenceServer, ServeError, ServerConfig};
 use intreeger::data::shuttle_like;
@@ -21,7 +32,8 @@ use intreeger::inference::IntEngine;
 use intreeger::runtime::{artifacts_available, engine_for_model};
 use intreeger::trees::{ForestParams, RandomForest};
 use intreeger::util::bench::{black_box, measure, report, section};
-use intreeger::util::json::{num, obj, s, Json};
+use intreeger::util::json::{arr, num, obj, s, Json};
+use intreeger::util::Rng;
 use std::path::Path;
 use std::time::{Duration, Instant};
 
@@ -287,14 +299,18 @@ fn overload_section(model: &intreeger::ir::Model, ds: &intreeger::data::Dataset)
         snap.latency_p99_us
     );
 
+    // Poisson saturation sweep (schema 2): open-loop arrivals at fixed
+    // fractions/multiples of the measured capacity.
+    let saturation = poisson_saturation(model, ds, capacity, smoke);
+
     // Machine-readable artifact, BENCH_batch.json-style.
     let path = std::env::var("INTREEGER_SERVE_JSON").unwrap_or_else(|_| {
         concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve.json").to_string()
     });
     let doc = obj(vec![
         ("bench", s("serve_throughput")),
-        ("schema", num(1.0)),
-        ("note", s("overload study; regenerate with: cargo bench --bench serve_throughput")),
+        ("schema", num(2.0)),
+        ("note", s("overload study + Poisson saturation curve; regenerate with: cargo bench --bench serve_throughput")),
         ("pending", Json::Bool(false)),
         ("smoke", Json::Bool(smoke)),
         ("capacity_req_s", num(capacity)),
@@ -313,9 +329,135 @@ fn overload_section(model: &intreeger::ir::Model, ds: &intreeger::data::Dataset)
                 ("lost", num(lost as f64)),
             ]),
         ),
+        ("saturation", saturation),
     ]);
     match std::fs::write(&path, doc.to_string() + "\n") {
         Ok(()) => println!("wrote {path}"),
         Err(e) => eprintln!("could not write {path}: {e}"),
     }
+}
+
+/// ISSUE-8 Poisson saturation sweep. Open-loop arrivals: inter-arrival
+/// gaps are drawn from a **deterministic seeded** exponential sampler
+/// (`dt = -ln(1-u)/lambda`, SplitMix64 underneath — the same schedule
+/// at every run), paced in real time, with each request carrying a 5 ms
+/// TTL. One fresh server per point so the per-point metrics (accepted
+/// p50/p99) are not contaminated across loads. Returns the
+/// machine-readable `saturation` array, sorted by measured offered
+/// rate, with `ok + shed + expired + lost == offered` asserted at every
+/// point.
+fn poisson_saturation(
+    model: &intreeger::ir::Model,
+    ds: &intreeger::data::Dataset,
+    capacity: f64,
+    smoke: bool,
+) -> Json {
+    section("Poisson saturation curve: open-loop arrivals at fractions of capacity");
+    let multiples = [0.5f64, 0.9, 1.2, 2.0];
+    let per_point = if smoke { 1_500 } else { 10_000 };
+    let ttl = Duration::from_millis(5);
+    let mut rng = Rng::new(0x9e3779b97f4a7c15);
+    let mut points: Vec<(f64, Json)> = Vec::new();
+
+    for (k, &mult) in multiples.iter().enumerate() {
+        let lambda = (capacity * mult).max(1.0); // arrivals per second
+        let config = ServerConfig {
+            policy: BatchPolicy { max_batch: 64, max_wait: Duration::from_micros(200) },
+            queue_depth: 256,
+            n_workers: 1,
+            ..Default::default()
+        };
+        let server = InferenceServer::start(model, None, config);
+
+        // Deterministic arrival schedule (seconds since t0), drawn
+        // before the clock starts so sampling cost never shapes load.
+        let mut point_rng = rng.fork(k as u64);
+        let mut schedule = Vec::with_capacity(per_point);
+        let mut t = 0.0f64;
+        for _ in 0..per_point {
+            let u = point_rng.uniform();
+            t += -(1.0 - u).ln() / lambda;
+            schedule.push(t);
+        }
+        // Rows pre-cloned so the pacing loop does no allocation beyond
+        // the handoff the coordinator requires anyway.
+        let mut rows: Vec<Vec<f32>> =
+            (0..per_point).map(|i| ds.row(i % ds.n_rows()).to_vec()).collect();
+        rows.reverse(); // pop() yields them in order
+
+        let mut rxs = Vec::with_capacity(per_point);
+        let mut shed = 0u64;
+        let t0 = Instant::now();
+        for &due in &schedule {
+            // Hybrid pacing: coarse sleep to ~200 us out, then spin —
+            // sleep granularity would otherwise flatten the high-rate
+            // points into a burst train.
+            loop {
+                let now = t0.elapsed().as_secs_f64();
+                let remaining = due - now;
+                if remaining <= 0.0 {
+                    break;
+                }
+                if remaining > 200e-6 {
+                    std::thread::sleep(Duration::from_secs_f64(remaining - 150e-6));
+                }
+            }
+            match server.submit_with_ttl(rows.pop().expect("row per arrival"), Some(ttl)) {
+                Ok(rx) => rxs.push(rx),
+                Err(ServeError::QueueFull) => shed += 1,
+                Err(e) => panic!("unexpected admission error: {e}"),
+            }
+        }
+        let submit_wall = t0.elapsed().as_secs_f64();
+        let (mut ok, mut expired, mut lost) = (0u64, 0u64, 0u64);
+        for rx in rxs {
+            match rx.recv().unwrap_or(Err(ServeError::WorkerLost)) {
+                Ok(_) => ok += 1,
+                Err(ServeError::DeadlineExceeded) => expired += 1,
+                Err(_) => lost += 1,
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let snap = server.metrics();
+        let offered_rate = per_point as f64 / submit_wall;
+        let goodput = ok as f64 / wall;
+        let shed_rate = shed as f64 / per_point as f64;
+        assert_eq!(
+            ok + shed + expired + lost,
+            per_point as u64,
+            "saturation point {mult}x: every request resolves"
+        );
+        println!(
+            "{mult:>4.1}x capacity: offered {offered_rate:>8.0} req/s  goodput {goodput:>8.0} req/s  \
+             shed {:>5.1}%  expired {expired:>5}  accepted p50 {:>6.0} us  p99 {:>7.0} us",
+            shed_rate * 100.0,
+            snap.latency_p50_us,
+            snap.latency_p99_us
+        );
+        points.push((
+            offered_rate,
+            obj(vec![
+                ("offered_mult", num(mult)),
+                ("offered_req_s", num(offered_rate)),
+                ("goodput_req_s", num(goodput)),
+                ("shed_rate", num(shed_rate)),
+                ("accepted_p50_us", num(snap.latency_p50_us)),
+                ("accepted_p99_us", num(snap.latency_p99_us)),
+                (
+                    "counters",
+                    obj(vec![
+                        ("offered", num(per_point as f64)),
+                        ("ok", num(ok as f64)),
+                        ("shed", num(shed as f64)),
+                        ("expired", num(expired as f64)),
+                        ("lost", num(lost as f64)),
+                    ]),
+                ),
+            ]),
+        ));
+    }
+    // Sorted by measured offered rate so the artifact reads as a curve
+    // (and the CI validator can assert monotonicity directly).
+    points.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    arr(points.into_iter().map(|(_, p)| p))
 }

@@ -1,10 +1,15 @@
 //! Dynamic batching policy — pure logic, unit-testable without threads.
 //!
 //! Requests arrive at arbitrary times; the batcher accumulates them and
-//! decides when to flush: when the batch is full (`max_batch`), or when
-//! the oldest request has waited `max_wait`, or on explicit drain. This
-//! is the standard continuous-batching trade-off (throughput vs tail
-//! latency) scaled down to tabular inference.
+//! decides when to flush: when the batch is full (`max_batch`), when
+//! the oldest request has waited `max_wait` (the `--max-batch-delay`
+//! knob), when the most urgent pending per-request TTL is about to
+//! lapse, or on explicit drain. This is the standard continuous-
+//! batching trade-off (throughput vs tail latency) scaled down to
+//! tabular inference, made *deadline-aware*: a fixed age deadline alone
+//! would let a short-TTL request sit out its whole TTL waiting for
+//! batch-mates and then expire at formation, so the effective flush
+//! deadline adapts to `min(oldest + max_wait, earliest pending TTL)`.
 //!
 //! Each worker shard of the [`super::server`] pool owns one `Batcher`;
 //! the policy is therefore per shard (a pool of N workers at
@@ -17,7 +22,9 @@ use std::time::{Duration, Instant};
 pub struct BatchPolicy {
     /// Flush as soon as this many requests are pending.
     pub max_batch: usize,
-    /// Flush when the oldest pending request has waited this long.
+    /// Flush when the oldest pending request has waited this long (the
+    /// `--max-batch-delay` serving knob; surfaced in metrics as
+    /// `max_batch_delay_us`).
     pub max_wait: Duration,
 }
 
@@ -34,6 +41,10 @@ pub enum FlushReason {
     Full,
     /// The oldest request hit the `max_wait` deadline.
     Deadline,
+    /// The most urgent pending per-request TTL reached its deadline —
+    /// the batch closed early to give that request its last chance to
+    /// execute before [`Batcher::partition_expired`] would drop it.
+    Ttl,
     /// An explicit drain (shutdown or channel close).
     Drain,
 }
@@ -43,13 +54,22 @@ pub struct Batcher<T> {
     policy: BatchPolicy,
     pending: Vec<T>,
     oldest: Option<Instant>,
+    /// Earliest TTL deadline among pending items (None when no pending
+    /// item carries one). Clamps the age deadline: the effective flush
+    /// time is `min(oldest + max_wait, min_deadline)`.
+    min_deadline: Option<Instant>,
 }
 
 impl<T> Batcher<T> {
     /// Empty batcher under a policy (`max_batch` must be positive).
     pub fn new(policy: BatchPolicy) -> Self {
         assert!(policy.max_batch > 0);
-        Batcher { policy, pending: Vec::with_capacity(policy.max_batch), oldest: None }
+        Batcher {
+            policy,
+            pending: Vec::with_capacity(policy.max_batch),
+            oldest: None,
+            min_deadline: None,
+        }
     }
 
     /// Items currently pending.
@@ -65,10 +85,29 @@ impl<T> Batcher<T> {
     /// Add an item (arrival time injectable for tests). Returns a full
     /// batch if the policy says flush-on-full.
     pub fn push_at(&mut self, item: T, now: Instant) -> Option<(Vec<T>, FlushReason)> {
+        self.push_deadline_at(item, None, now)
+    }
+
+    /// Add an item carrying an optional TTL deadline (arrival time
+    /// injectable for tests). The earliest pending deadline clamps the
+    /// batch's age deadline, so a short-TTL request pulls the flush
+    /// forward instead of silently expiring at formation. Returns a
+    /// full batch if the policy says flush-on-full.
+    pub fn push_deadline_at(
+        &mut self,
+        item: T,
+        deadline: Option<Instant>,
+        now: Instant,
+    ) -> Option<(Vec<T>, FlushReason)> {
         if self.pending.is_empty() {
             self.oldest = Some(now);
         }
         self.pending.push(item);
+        self.min_deadline = match (self.min_deadline, deadline) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, None) => a,
+            (None, b) => b,
+        };
         if self.pending.len() >= self.policy.max_batch {
             return Some((self.take(), FlushReason::Full));
         }
@@ -80,12 +119,37 @@ impl<T> Batcher<T> {
         self.push_at(item, Instant::now())
     }
 
-    /// Check the deadline; flush if the oldest item has waited too long.
+    /// Add an item with a TTL deadline at the current time (see
+    /// [`Self::push_deadline_at`]).
+    pub fn push_deadline(
+        &mut self,
+        item: T,
+        deadline: Option<Instant>,
+    ) -> Option<(Vec<T>, FlushReason)> {
+        self.push_deadline_at(item, deadline, Instant::now())
+    }
+
+    /// The instant at which the pending batch must flush: the oldest
+    /// item's age deadline, clamped by the earliest pending TTL. None
+    /// when nothing is pending.
+    fn effective_deadline(&self) -> Option<Instant> {
+        let t0 = self.oldest.filter(|_| !self.pending.is_empty())?;
+        let age = t0 + self.policy.max_wait;
+        Some(match self.min_deadline {
+            Some(ttl) if ttl < age => ttl,
+            _ => age,
+        })
+    }
+
+    /// Check the deadline; flush if the oldest item has waited too long
+    /// or the most urgent pending TTL has come due.
     pub fn poll_at(&mut self, now: Instant) -> Option<(Vec<T>, FlushReason)> {
-        match self.oldest {
-            Some(t0) if !self.pending.is_empty() && now.duration_since(t0) >= self.policy.max_wait => {
-                Some((self.take(), FlushReason::Deadline))
-            }
+        let t0 = self.oldest.filter(|_| !self.pending.is_empty())?;
+        if now.duration_since(t0) >= self.policy.max_wait {
+            return Some((self.take(), FlushReason::Deadline));
+        }
+        match self.min_deadline {
+            Some(ttl) if now >= ttl => Some((self.take(), FlushReason::Ttl)),
             _ => None,
         }
     }
@@ -95,11 +159,11 @@ impl<T> Batcher<T> {
         self.poll_at(Instant::now())
     }
 
-    /// Time until the current deadline fires (None when empty).
+    /// Time until the effective deadline fires (None when empty). The
+    /// worker loop bounds its receive timeout with this, so a short-TTL
+    /// arrival wakes the shard early enough to serve it.
     pub fn time_to_deadline(&self, now: Instant) -> Option<Duration> {
-        self.oldest.filter(|_| !self.pending.is_empty()).map(|t0| {
-            (t0 + self.policy.max_wait).saturating_duration_since(now)
-        })
+        self.effective_deadline().map(|d| d.saturating_duration_since(now))
     }
 
     /// Unconditionally flush whatever is pending.
@@ -113,6 +177,7 @@ impl<T> Batcher<T> {
 
     fn take(&mut self) -> Vec<T> {
         self.oldest = None;
+        self.min_deadline = None;
         std::mem::replace(&mut self.pending, Vec::with_capacity(self.policy.max_batch))
     }
 
@@ -207,6 +272,72 @@ mod tests {
         assert_eq!(d, Duration::from_micros(600));
         let d2 = b.time_to_deadline(t0 + Duration::from_micros(2000)).unwrap();
         assert_eq!(d2, Duration::ZERO);
+    }
+
+    #[test]
+    fn ttl_deadline_pulls_flush_forward() {
+        // max_wait 1 ms, but a pending request's TTL comes due at 200 us:
+        // the batch must close at the TTL, not the age deadline.
+        let mut b = Batcher::new(policy(100, 1000));
+        let t0 = Instant::now();
+        b.push_deadline_at(1, None, t0);
+        b.push_deadline_at(2, Some(t0 + Duration::from_micros(200)), t0);
+        assert!(b.poll_at(t0 + Duration::from_micros(199)).is_none());
+        let (batch, why) = b.poll_at(t0 + Duration::from_micros(200)).unwrap();
+        assert_eq!(batch, vec![1, 2]);
+        assert_eq!(why, FlushReason::Ttl);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn ttl_tracks_the_minimum_pending_deadline() {
+        let mut b = Batcher::new(policy(100, 10_000));
+        let t0 = Instant::now();
+        b.push_deadline_at(1, Some(t0 + Duration::from_micros(900)), t0);
+        b.push_deadline_at(2, Some(t0 + Duration::from_micros(300)), t0);
+        b.push_deadline_at(3, Some(t0 + Duration::from_micros(600)), t0);
+        // Effective deadline = min TTL = t0+300us.
+        let ttd = b.time_to_deadline(t0 + Duration::from_micros(100)).unwrap();
+        assert_eq!(ttd, Duration::from_micros(200));
+        let (batch, why) = b.poll_at(t0 + Duration::from_micros(300)).unwrap();
+        assert_eq!(batch.len(), 3);
+        assert_eq!(why, FlushReason::Ttl);
+    }
+
+    #[test]
+    fn ttl_state_resets_after_flush() {
+        let mut b = Batcher::new(policy(100, 1000));
+        let t0 = Instant::now();
+        b.push_deadline_at(1, Some(t0 + Duration::from_micros(100)), t0);
+        assert!(b.poll_at(t0 + Duration::from_micros(100)).is_some());
+        // New deadline-free item: back to plain age-based behavior.
+        b.push_at(2, t0 + Duration::from_micros(150));
+        assert!(b.poll_at(t0 + Duration::from_micros(1100)).is_none());
+        let (_, why) = b.poll_at(t0 + Duration::from_micros(1150)).unwrap();
+        assert_eq!(why, FlushReason::Deadline);
+    }
+
+    #[test]
+    fn age_deadline_wins_when_earlier_than_ttl() {
+        // TTL far in the future: the age deadline still governs, and the
+        // reason stays `Deadline`.
+        let mut b = Batcher::new(policy(100, 500));
+        let t0 = Instant::now();
+        b.push_deadline_at(1, Some(t0 + Duration::from_millis(50)), t0);
+        let (_, why) = b.poll_at(t0 + Duration::from_micros(500)).unwrap();
+        assert_eq!(why, FlushReason::Deadline);
+    }
+
+    #[test]
+    fn lapsed_ttl_flushes_immediately_on_next_poll() {
+        // A request admitted with an already-lapsed deadline flushes on
+        // the very next poll (it will then expire at partition time).
+        let mut b = Batcher::new(policy(100, 1_000_000));
+        let t0 = Instant::now();
+        b.push_deadline_at(1, Some(t0), t0);
+        assert_eq!(b.time_to_deadline(t0), Some(Duration::ZERO));
+        let (_, why) = b.poll_at(t0).unwrap();
+        assert_eq!(why, FlushReason::Ttl);
     }
 
     #[test]

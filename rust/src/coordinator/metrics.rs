@@ -35,6 +35,14 @@ pub struct Metrics {
     pub flush_deadline: AtomicU64,
     /// Flushes triggered by drain/shutdown.
     pub flush_drain: AtomicU64,
+    /// Flushes pulled forward by a pending per-request TTL (the
+    /// deadline-aware close: the batch executed early so the most
+    /// urgent request got its last chance instead of expiring).
+    pub flush_ttl: AtomicU64,
+    /// HTTP requests parsed off a socket by the `net` front end.
+    pub http_requests: AtomicU64,
+    /// HTTP responses flushed back to sockets by the `net` front end.
+    pub http_responses: AtomicU64,
     /// Requests shed at admission (queue full, or a scripted fault).
     pub shed: AtomicU64,
     /// Admitted requests whose TTL lapsed before execution.
@@ -61,6 +69,15 @@ pub struct Metrics {
     /// server startup (the calibrated winner, or the compile-time
     /// defaults). `None` until a server records it.
     execution: Mutex<Option<(String, String, usize)>>,
+    /// End-to-end SLO latency: first request byte read off the socket to
+    /// response bytes flushed back. Recorded by the HTTP front end, so
+    /// it covers parse + admission + queueing + batch execution + write
+    /// — the quantity a client-facing p99 SLO is stated against.
+    e2e_us: Mutex<Histogram>,
+    /// Batching policy the server was started with: (`max_batch`,
+    /// `max_batch_delay` in microseconds). `None` until a server
+    /// records it.
+    policy: Mutex<Option<(usize, u64)>>,
 }
 
 /// Exact histogram for small integer values (batch sizes). Unlike the
@@ -132,6 +149,12 @@ pub struct MetricsSnapshot {
     pub flush_deadline: u64,
     /// Flushes triggered by drain/shutdown.
     pub flush_drain: u64,
+    /// Flushes pulled forward by a pending per-request TTL.
+    pub flush_ttl: u64,
+    /// HTTP requests parsed off a socket by the `net` front end.
+    pub http_requests: u64,
+    /// HTTP responses flushed back to sockets by the `net` front end.
+    pub http_responses: u64,
     /// Requests shed at admission (queue full, or a scripted fault).
     pub shed: u64,
     /// Admitted requests whose TTL lapsed before execution.
@@ -171,6 +194,18 @@ pub struct MetricsSnapshot {
     pub backend: Option<String>,
     /// Intra-batch thread count serving the scalar route.
     pub threads: Option<usize>,
+    /// Mean end-to-end (socket-to-socket) latency (us).
+    pub e2e_mean_us: f64,
+    /// Median end-to-end latency (us, bucket upper bound).
+    pub e2e_p50_us: f64,
+    /// p99 end-to-end latency (us, bucket upper bound) — the SLO number.
+    pub e2e_p99_us: f64,
+    /// `max_batch` the serving policy was started with (`None` until a
+    /// server records its policy).
+    pub max_batch: Option<usize>,
+    /// `max_batch_delay` in microseconds the serving policy was started
+    /// with.
+    pub max_batch_delay_us: Option<u64>,
     /// CPU SIMD features detected on this host (computed at snapshot
     /// time; explains *why* the backend was picked).
     pub detected_features: Vec<&'static str>,
@@ -190,6 +225,18 @@ impl Metrics {
     /// Record how long serving one flushed batch took.
     pub fn record_batch_latency_us(&self, us: f64) {
         lock_unpoisoned(&self.batch_latency_us).record(us);
+    }
+
+    /// Record one request's end-to-end (socket-to-socket) latency —
+    /// first request byte read to response bytes flushed.
+    pub fn record_e2e_us(&self, us: f64) {
+        lock_unpoisoned(&self.e2e_us).record(us);
+    }
+
+    /// Record the batching policy the server was started with
+    /// (`max_batch` rows, `max_batch_delay` in microseconds).
+    pub fn record_policy(&self, max_batch: usize, max_batch_delay_us: u64) {
+        *lock_unpoisoned(&self.policy) = Some((max_batch, max_batch_delay_us));
     }
 
     /// Record the execution strategy serving the scalar route (called
@@ -212,6 +259,7 @@ impl Metrics {
         match reason {
             super::FlushReason::Full => self.flush_full.fetch_add(1, Ordering::Relaxed),
             super::FlushReason::Deadline => self.flush_deadline.fetch_add(1, Ordering::Relaxed),
+            super::FlushReason::Ttl => self.flush_ttl.fetch_add(1, Ordering::Relaxed),
             super::FlushReason::Drain => self.flush_drain.fetch_add(1, Ordering::Relaxed),
         };
         lock_unpoisoned(&self.batch_sizes).record(size);
@@ -222,7 +270,9 @@ impl Metrics {
         let lat = lock_unpoisoned(&self.latency_us);
         let sizes = lock_unpoisoned(&self.batch_sizes);
         let blat = lock_unpoisoned(&self.batch_latency_us);
+        let e2e = lock_unpoisoned(&self.e2e_us);
         let execution = lock_unpoisoned(&self.execution).clone();
+        let policy = *lock_unpoisoned(&self.policy);
         let (kernel, backend, threads) = match execution {
             Some((k, b, t)) => (Some(k), Some(b), Some(t)),
             None => (None, None, None),
@@ -237,6 +287,9 @@ impl Metrics {
             flush_full: self.flush_full.load(Ordering::Relaxed),
             flush_deadline: self.flush_deadline.load(Ordering::Relaxed),
             flush_drain: self.flush_drain.load(Ordering::Relaxed),
+            flush_ttl: self.flush_ttl.load(Ordering::Relaxed),
+            http_requests: self.http_requests.load(Ordering::Relaxed),
+            http_responses: self.http_responses.load(Ordering::Relaxed),
             shed: self.shed.load(Ordering::Relaxed),
             expired: self.expired.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
@@ -256,6 +309,11 @@ impl Metrics {
             kernel,
             backend,
             threads,
+            e2e_mean_us: e2e.mean(),
+            e2e_p50_us: e2e.quantile(0.5),
+            e2e_p99_us: e2e.quantile(0.99),
+            max_batch: policy.map(|(b, _)| b),
+            max_batch_delay_us: policy.map(|(_, d)| d),
             detected_features: crate::inference::SimdBackend::detected_features(),
         }
     }
@@ -365,6 +423,30 @@ mod tests {
         assert!((s.latency_mean_us - 200.0).abs() < 1e-9);
         assert_eq!(s.batches_scalar, 1);
         assert_eq!(s.kernel.as_deref(), Some("branchless"));
+    }
+
+    #[test]
+    fn e2e_slo_and_policy_snapshot() {
+        let m = Metrics::new();
+        let s = m.snapshot();
+        assert_eq!(s.e2e_p99_us, 0.0);
+        assert_eq!(s.max_batch, None);
+        assert_eq!(s.max_batch_delay_us, None);
+        m.record_e2e_us(100.0);
+        m.record_e2e_us(300.0);
+        m.record_policy(64, 250);
+        m.record_batch(5, false, FlushReason::Ttl);
+        m.http_requests.fetch_add(2, Ordering::Relaxed);
+        m.http_responses.fetch_add(2, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert!((s.e2e_mean_us - 200.0).abs() < 1e-9);
+        assert!(s.e2e_p50_us >= 100.0);
+        assert!(s.e2e_p99_us >= s.e2e_p50_us);
+        assert_eq!(s.max_batch, Some(64));
+        assert_eq!(s.max_batch_delay_us, Some(250));
+        assert_eq!(s.flush_ttl, 1);
+        assert_eq!(s.http_requests, 2);
+        assert_eq!(s.http_responses, 2);
     }
 
     #[test]

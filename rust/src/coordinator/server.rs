@@ -319,6 +319,7 @@ impl InferenceServer {
         // (tree shape) and per *host* (CPU features), not per worker.
         let mut scalar_engine = IntEngine::compile(model);
         let metrics = Arc::new(Metrics::new());
+        metrics.record_policy(config.policy.max_batch, config.policy.max_wait.as_micros() as u64);
         if config.auto_calibrate {
             calibrate_execution(&mut scalar_engine, model.n_features, config.policy.max_batch);
         }
@@ -541,6 +542,19 @@ impl InferenceServer {
     pub fn metrics(&self) -> super::MetricsSnapshot {
         self.metrics.snapshot()
     }
+
+    /// Shared handle to the live metrics sink — the recordable form the
+    /// HTTP front end uses for socket-to-socket SLO latency and
+    /// request/response counters ([`Metrics::record_e2e_us`] and the
+    /// `http_*` counters live outside the coordinator's own paths).
+    pub fn metrics_handle(&self) -> Arc<Metrics> {
+        Arc::clone(&self.metrics)
+    }
+
+    /// Feature columns a submitted row must have (the model's arity).
+    pub fn n_features(&self) -> usize {
+        self.n_features
+    }
 }
 
 impl Drop for InferenceServer {
@@ -661,8 +675,10 @@ pub fn calibrate_execution(
     engine.set_threads(best.3);
     let report: Vec<String> =
         timings.iter().map(|(name, t)| format!("{name} {:.0} us", t * 1e6)).collect();
+    let (pref, basis) = crate::inference::parallel::preferred();
     eprintln!(
-        "intreeger-server: auto-calibration picked {}@{}@{}t per {b}-batch ({})",
+        "intreeger-server: auto-calibration picked {}@{}@{}t per {b}-batch \
+         (threads swept to {pref} {basis} cores; {})",
         best.1.name(),
         best.2.name(),
         best.3,
@@ -756,6 +772,17 @@ fn supervise(
     }
 }
 
+/// Per-shard flat buffers reused across batch executions: the row-major
+/// input and the fixed-point output of the whole batch. Steady-state
+/// batch execution therefore allocates nothing batch-sized — only the
+/// per-request `Response.fixed` copies remain (client-owned by
+/// contract). Rebuilt (empty) when a supervisor restarts its worker.
+#[derive(Default)]
+struct BatchScratch {
+    rows: Vec<f32>,
+    fixed: Vec<u32>,
+}
+
 #[allow(clippy::too_many_arguments)]
 fn worker_loop(
     rx: &Receiver<Msg>,
@@ -767,6 +794,7 @@ fn worker_loop(
     n_features: usize,
     faults: &Faults,
 ) {
+    let mut scratch = BatchScratch::default();
     loop {
         // Wait bounded by the batch deadline (if any).
         let timeout = lock_unpoisoned(pending)
@@ -774,22 +802,31 @@ fn worker_loop(
             .unwrap_or(Duration::from_millis(50));
         match rx.recv_timeout(timeout) {
             Ok(Msg::Infer(req)) => {
-                let flushed = lock_unpoisoned(pending).push(req);
+                // The TTL deadline rides into the batcher so the flush
+                // deadline adapts to the most urgent pending request.
+                let deadline = req.deadline;
+                let flushed = lock_unpoisoned(pending).push_deadline(req, deadline);
                 if let Some((batch, why)) = flushed {
-                    serve_batch(batch, why, exec, xla, config, metrics, n_features, faults);
+                    serve_batch(
+                        batch, why, exec, xla, config, metrics, n_features, faults, &mut scratch,
+                    );
                 }
             }
             Ok(Msg::Shutdown) | Err(RecvTimeoutError::Disconnected) => {
                 let flushed = lock_unpoisoned(pending).drain();
                 if let Some((batch, why)) = flushed {
-                    serve_batch(batch, why, exec, xla, config, metrics, n_features, faults);
+                    serve_batch(
+                        batch, why, exec, xla, config, metrics, n_features, faults, &mut scratch,
+                    );
                 }
                 return;
             }
             Err(RecvTimeoutError::Timeout) => {
                 let flushed = lock_unpoisoned(pending).poll();
                 if let Some((batch, why)) = flushed {
-                    serve_batch(batch, why, exec, xla, config, metrics, n_features, faults);
+                    serve_batch(
+                        batch, why, exec, xla, config, metrics, n_features, faults, &mut scratch,
+                    );
                 }
             }
         }
@@ -806,6 +843,7 @@ fn serve_batch(
     metrics: &Arc<Metrics>,
     n_features: usize,
     faults: &Faults,
+    scratch: &mut BatchScratch,
 ) {
     // Deadline check at batch-formation time: expired rows resolve
     // without burning kernel time.
@@ -830,39 +868,51 @@ fn serve_batch(
     metrics.record_batch(live.len(), use_xla, why);
     let t_serve = Instant::now();
 
-    // Flatten once; both routes consume the row-major buffer.
-    let mut rows = Vec::with_capacity(live.len() * n_features);
+    // Flatten once into the reused scratch; both routes consume the
+    // row-major buffer. The flat fixed-point output is also reused —
+    // batch execution allocates nothing batch-sized in steady state.
+    use crate::inference::Engine as _;
+    let n_classes = exec.engine().n_classes();
+    scratch.rows.clear();
     for r in &live {
-        rows.extend_from_slice(&r.features);
+        scratch.rows.extend_from_slice(&r.features);
     }
+    scratch.fixed.clear();
+    scratch.fixed.resize(live.len() * n_classes, 0);
     // Execution is the untrusted region: a panicking kernel (or an
     // injected fault) must not strand the batch's callers.
     let engine = exec.engine();
     let outcome = catch_unwind(AssertUnwindSafe(|| {
         faults.on_batch_execution();
+        let mut served_by_xla = false;
         if use_xla {
             let x = xla.as_ref().unwrap();
-            match x.execute(&rows, n_features) {
-                Ok(out) => out,
-                // Fall back to the batched scalar kernel on runtime errors —
-                // requests must never be dropped.
-                Err(_) => engine.predict_fixed_batch(&rows),
+            // On runtime errors fall through to the batched scalar
+            // kernel — requests must never be dropped.
+            if let Ok(out) = x.execute(&scratch.rows, n_features) {
+                for (slot, row) in scratch.fixed.chunks_exact_mut(n_classes).zip(&out) {
+                    slot.copy_from_slice(row);
+                }
+                served_by_xla = true;
             }
-        } else {
-            engine.predict_fixed_batch(&rows)
+        }
+        if !served_by_xla {
+            engine.predict_fixed_batch_into(&scratch.rows, &mut scratch.fixed);
         }
     }));
     match outcome {
-        Ok(results) => {
+        Ok(()) => {
             metrics.record_batch_latency_us(t_serve.elapsed().as_secs_f64() * 1e6);
             let route = if use_xla { Route::Xla } else { Route::Scalar };
-            for (req, fixed) in live.into_iter().zip(results) {
+            for (req, fixed) in live.into_iter().zip(scratch.fixed.chunks_exact(n_classes)) {
                 let latency = req.t_arrival.elapsed();
                 metrics.record_latency_us(latency.as_secs_f64() * 1e6);
                 metrics.responses.fetch_add(1, Ordering::Relaxed);
-                let class = argmax(&fixed);
-                // Receiver may have gone away; that's fine.
-                let _ = req.tx.send(Ok(Response { fixed, class, route, latency }));
+                let class = argmax(fixed);
+                // Receiver may have gone away; that's fine. The copy
+                // into `Response.fixed` is the one remaining per-request
+                // allocation — the response is client-owned by contract.
+                let _ = req.tx.send(Ok(Response { fixed: fixed.to_vec(), class, route, latency }));
             }
         }
         Err(payload) => {

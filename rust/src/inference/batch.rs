@@ -743,9 +743,26 @@ pub fn float_proba_batch_exec(
     backend: SimdBackend,
     threads: usize,
 ) -> Vec<f32> {
+    let mut out = vec![0.0f32; batch_rows(f, rows.len()) * f.n_classes];
+    float_proba_batch_into(f, rows, kernel, backend, threads, &mut out);
+    out
+}
+
+/// [`float_proba_batch_exec`] writing into a caller-provided flat
+/// `n_rows * n_classes` buffer — the allocation-free form the serving
+/// hot path reuses across batches. `out` is fully overwritten.
+pub fn float_proba_batch_into(
+    f: &CompiledForest,
+    rows: &[f32],
+    kernel: TraversalKernel,
+    backend: SimdBackend,
+    threads: usize,
+    out: &mut [f32],
+) {
     let n_rows = batch_rows(f, rows.len());
     let c = f.n_classes;
-    let mut acc = vec![0.0f32; n_rows * c];
+    assert_eq!(out.len(), n_rows * c, "output buffer must be n_rows * n_classes");
+    out.fill(0.0);
     accumulate_batch::<F32Domain, f32>(
         &f.packed_f32(),
         Some(&f.qs),
@@ -756,13 +773,12 @@ pub fn float_proba_batch_exec(
         kernel,
         backend,
         threads,
-        &mut acc,
+        out,
     );
     let inv = 1.0 / f.n_trees as f32;
-    for a in &mut acc {
+    for a in out {
         *a *= inv;
     }
-    acc
 }
 
 /// Batched FlInt accumulation: ordered-u32 compares (whole batch
@@ -791,10 +807,27 @@ pub fn flint_proba_batch_exec(
     backend: SimdBackend,
     threads: usize,
 ) -> Vec<f32> {
+    let mut out = vec![0.0f32; batch_rows(f, rows.len()) * f.n_classes];
+    flint_proba_batch_into(f, rows, kernel, backend, threads, &mut out);
+    out
+}
+
+/// [`flint_proba_batch_exec`] writing into a caller-provided flat
+/// `n_rows * n_classes` buffer — the allocation-free form the serving
+/// hot path reuses across batches. `out` is fully overwritten.
+pub fn flint_proba_batch_into(
+    f: &CompiledForest,
+    rows: &[f32],
+    kernel: TraversalKernel,
+    backend: SimdBackend,
+    threads: usize,
+    out: &mut [f32],
+) {
     let n_rows = batch_rows(f, rows.len());
     let c = f.n_classes;
+    assert_eq!(out.len(), n_rows * c, "output buffer must be n_rows * n_classes");
+    out.fill(0.0);
     with_ordered_batch(rows, |rows_ord| {
-        let mut acc = vec![0.0f32; n_rows * c];
         accumulate_batch::<OrdDomain, f32>(
             &f.packed_ord(),
             Some(&f.qs),
@@ -805,13 +838,12 @@ pub fn flint_proba_batch_exec(
             kernel,
             backend,
             threads,
-            &mut acc,
+            out,
         );
         let inv = 1.0 / f.n_trees as f32;
-        for a in &mut acc {
+        for a in out.iter_mut() {
             *a *= inv;
         }
-        acc
     })
 }
 
@@ -840,10 +872,27 @@ pub fn int_fixed_batch_exec(
     backend: SimdBackend,
     threads: usize,
 ) -> Vec<u32> {
+    let mut out = vec![0u32; batch_rows(f, rows.len()) * f.n_classes];
+    int_fixed_batch_into(f, rows, kernel, backend, threads, &mut out);
+    out
+}
+
+/// [`int_fixed_batch_exec`] writing into a caller-provided flat
+/// `n_rows * n_classes` buffer — the allocation-free form the serving
+/// hot path reuses across batches. `out` is fully overwritten.
+pub fn int_fixed_batch_into(
+    f: &CompiledForest,
+    rows: &[f32],
+    kernel: TraversalKernel,
+    backend: SimdBackend,
+    threads: usize,
+    out: &mut [u32],
+) {
     let n_rows = batch_rows(f, rows.len());
     let c = f.n_classes;
+    assert_eq!(out.len(), n_rows * c, "output buffer must be n_rows * n_classes");
+    out.fill(0);
     with_ordered_batch(rows, |rows_ord| {
-        let mut acc = vec![0u32; n_rows * c];
         accumulate_batch::<OrdDomain, u32>(
             &f.packed_ord(),
             Some(&f.qs),
@@ -854,9 +903,8 @@ pub fn int_fixed_batch_exec(
             kernel,
             backend,
             threads,
-            &mut acc,
+            out,
         );
-        acc
     })
 }
 

@@ -97,6 +97,24 @@ pub trait Engine: Send + Sync {
         );
         rows.chunks_exact(self.n_features()).map(|r| self.predict_proba(r)).collect()
     }
+    /// Per-class probabilities per row written into a caller-provided
+    /// flat `n_rows * n_classes` buffer — the allocation-free sibling of
+    /// [`Engine::predict_proba_batch`] that the serving layer reuses
+    /// across batches (`out` is fully overwritten). Default: the
+    /// per-row path; engines override with the flat batch kernel.
+    fn predict_proba_batch_into(&self, rows: &[f32], out: &mut [f32]) {
+        let nf = self.n_features();
+        let c = self.n_classes();
+        assert!(
+            rows.len() % nf == 0,
+            "batch length {} is not a multiple of n_features {nf}",
+            rows.len()
+        );
+        assert_eq!(out.len(), rows.len() / nf * c, "output buffer must be n_rows * n_classes");
+        for (row, slot) in rows.chunks_exact(nf).zip(out.chunks_exact_mut(c)) {
+            slot.copy_from_slice(&self.predict_proba(row));
+        }
+    }
     /// Fixed-point accumulators per row, when the variant has an
     /// integer-only representation (`None` for the float-accumulating
     /// variants).
@@ -203,12 +221,18 @@ impl Engine for FloatEngine {
         )
     }
     fn predict_proba_batch(&self, rows: &[f32]) -> Vec<Vec<f32>> {
+        // Thin per-row reshaping over the flat allocation-free path.
         batch::split_rows(
             batch::float_proba_batch_exec(
                 &self.forest, rows, self.kernel, self.backend, self.threads,
             ),
             self.forest.n_classes,
         )
+    }
+    fn predict_proba_batch_into(&self, rows: &[f32], out: &mut [f32]) {
+        batch::float_proba_batch_into(
+            &self.forest, rows, self.kernel, self.backend, self.threads, out,
+        );
     }
     fn variant(&self) -> Variant {
         Variant::Float
@@ -311,12 +335,18 @@ impl Engine for FlIntEngine {
         )
     }
     fn predict_proba_batch(&self, rows: &[f32]) -> Vec<Vec<f32>> {
+        // Thin per-row reshaping over the flat allocation-free path.
         batch::split_rows(
             batch::flint_proba_batch_exec(
                 &self.forest, rows, self.kernel, self.backend, self.threads,
             ),
             self.forest.n_classes,
         )
+    }
+    fn predict_proba_batch_into(&self, rows: &[f32], out: &mut [f32]) {
+        batch::flint_proba_batch_into(
+            &self.forest, rows, self.kernel, self.backend, self.threads, out,
+        );
     }
     fn variant(&self) -> Variant {
         Variant::FlInt
@@ -401,8 +431,10 @@ impl IntEngine {
     }
 
     /// Batched fixed-point accumulators, one vector per row — the
-    /// serving hot path (bit-identical to [`Self::predict_fixed`] per
-    /// row; the coordinator's scalar route is built on this).
+    /// client-facing shape (bit-identical to [`Self::predict_fixed`]
+    /// per row). A thin reshaping wrapper over
+    /// [`Self::predict_fixed_batch_into`], which the coordinator's
+    /// scalar route uses directly with a reused flat buffer.
     pub fn predict_fixed_batch(&self, rows: &[f32]) -> Vec<Vec<u32>> {
         batch::split_rows(
             batch::int_fixed_batch_exec(
@@ -410,6 +442,14 @@ impl IntEngine {
             ),
             self.forest.n_classes,
         )
+    }
+
+    /// Batched fixed-point accumulators written into a caller-provided
+    /// flat `n_rows * n_classes` buffer — the allocation-free serving
+    /// hot path (`out` is fully overwritten; bit-identical to
+    /// [`Self::predict_fixed`] per row).
+    pub fn predict_fixed_batch_into(&self, rows: &[f32], out: &mut [u32]) {
+        batch::int_fixed_batch_into(&self.forest, rows, self.kernel, self.backend, self.threads, out);
     }
 }
 
@@ -433,6 +473,16 @@ impl Engine for IntEngine {
             .chunks_exact(self.forest.n_classes)
             .map(|fixed| fixed.iter().map(|&q| fixed_to_prob(q)).collect())
             .collect()
+    }
+    fn predict_proba_batch_into(&self, rows: &[f32], out: &mut [f32]) {
+        // Integer accumulation first, then one fixed→prob conversion
+        // per cell into the caller's buffer.
+        let fixed =
+            batch::int_fixed_batch_exec(&self.forest, rows, self.kernel, self.backend, self.threads);
+        assert_eq!(out.len(), fixed.len(), "output buffer must be n_rows * n_classes");
+        for (slot, &q) in out.iter_mut().zip(&fixed) {
+            *slot = fixed_to_prob(q);
+        }
     }
     fn predict_fixed_batch(&self, rows: &[f32]) -> Option<Vec<Vec<u32>>> {
         // Delegates to the inherent batched path (same name, inherent
@@ -669,6 +719,41 @@ mod tests {
                 assert_eq!(via_full.kernel(), kernel);
                 assert_eq!(via_full.predict_batch(flat), branchless_classes, "{}", v.name());
             }
+        }
+    }
+
+    /// The flat `_into` variants are bit-identical to the allocating
+    /// shapes on every engine — the serving layer swaps between them
+    /// freely (satellite of the zero-copy front-end work).
+    #[test]
+    fn flat_into_matches_allocating_shapes() {
+        let (ds, m) = setup(8, 12);
+        let n_rows = 60usize;
+        let flat = &ds.features[..n_rows * ds.n_features];
+        for v in Variant::all() {
+            let e = compile_variant(&m, v);
+            let c = e.n_classes();
+            let mut out = vec![0.0f32; n_rows * c];
+            // Dirty the buffer: `_into` must fully overwrite it.
+            out.fill(f32::NAN);
+            e.predict_proba_batch_into(flat, &mut out);
+            let nested = e.predict_proba_batch(flat);
+            for (i, row) in nested.iter().enumerate() {
+                assert_eq!(
+                    &out[i * c..(i + 1) * c],
+                    row.as_slice(),
+                    "{} row {i}",
+                    v.name()
+                );
+            }
+        }
+        let ie = IntEngine::compile(&m);
+        let c = ie.forest().n_classes;
+        let mut fixed_out = vec![u32::MAX; n_rows * c];
+        ie.predict_fixed_batch_into(flat, &mut fixed_out);
+        let nested = ie.predict_fixed_batch(flat);
+        for (i, row) in nested.iter().enumerate() {
+            assert_eq!(&fixed_out[i * c..(i + 1) * c], row.as_slice(), "fixed row {i}");
         }
     }
 

@@ -150,15 +150,32 @@ pub fn resolve() -> usize {
     }
 }
 
+/// The core count calibration should saturate at, with the basis of the
+/// number: `(physical, "physical")` when [`physical_cores`] parses a
+/// topology, `(logical, "logical")` otherwise. SMT siblings share
+/// execution ports and the L1/L2 the tile kernels live in, so sweeping
+/// past the physical count mostly times scheduler noise — calibration
+/// prefers the physical ceiling and `inspect` / the calibration log
+/// line record which basis was used. The count is clamped to
+/// [`detected`] (a topology claiming more cores than the logical count
+/// — containers with restricted cpusets — must not over-subscribe).
+pub fn preferred() -> (usize, &'static str) {
+    match physical_cores() {
+        Some(p) if p >= 1 => (p.min(detected()), "physical"),
+        _ => (detected(), "logical"),
+    }
+}
+
 /// The thread counts a calibration sweep should time: just the forced
 /// one when [`THREADS_ENV`] is set (the override pins the choice),
-/// otherwise 1, the powers of two below the detected core count, and
-/// the detected count itself — e.g. `[1, 2, 4, 6]` on a 6-core host.
+/// otherwise 1, the powers of two below the [`preferred`] core count,
+/// and the preferred count itself — e.g. `[1, 2, 4, 6]` on a 6-core
+/// host, `[1, 2, 4]` on 4-physical/8-logical SMT.
 pub fn sweep() -> Vec<usize> {
     if std::env::var(THREADS_ENV).is_ok() {
         return vec![resolve()];
     }
-    let d = detected();
+    let (d, _) = preferred();
     let mut v = vec![1usize];
     let mut t = 2;
     while t < d {
@@ -420,6 +437,14 @@ mod tests {
         assert_eq!(clamp(usize::MAX), detected());
         if let Some(p) = physical_cores() {
             assert!(p >= 1);
+        }
+        // preferred() reports the basis truthfully and never exceeds the
+        // logical count.
+        let (pref, basis) = preferred();
+        assert!((1..=detected()).contains(&pref));
+        match physical_cores() {
+            Some(_) => assert_eq!(basis, "physical"),
+            None => assert_eq!(basis, "logical"),
         }
         // sweep() starts at the single-thread baseline and never exceeds
         // the host (when the env override is not set, sweep is derived

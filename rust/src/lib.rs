@@ -30,7 +30,8 @@
 //! 8. **Deployment runtime** ([`runtime`], [`coordinator`]) — a PJRT/XLA
 //!    batched inference engine (AOT-lowered JAX+Pallas forest traversal)
 //!    behind a dynamic-batching request router drained by a sharded
-//!    worker pool.
+//!    worker pool, fronted by a zero-copy HTTP/1.1 serving layer
+//!    ([`net`]) with deadline-aware adaptive batch formation.
 //! 9. **End-to-end pipeline** ([`pipeline`]) — one call (or one
 //!    `intreeger pipeline` command) from a CSV to trained, quantized,
 //!    **verified** integer-only C plus a machine-readable report; the
@@ -54,6 +55,7 @@ pub mod energy;
 pub mod flint;
 pub mod inference;
 pub mod ir;
+pub mod net;
 pub mod pipeline;
 pub mod quant;
 pub mod runtime;

@@ -17,12 +17,15 @@ use intreeger::coordinator::{self, InferenceServer, ServerConfig};
 use intreeger::data::{self, Dataset};
 use intreeger::inference::{self, SimdBackend, Variant, BACKEND_ENV, THREADS_ENV};
 use intreeger::ir::Model;
+use intreeger::net::{HttpConfig, HttpServer};
 use intreeger::pipeline::{self, PipelineConfig};
 use intreeger::simarch::{self, Core};
 use intreeger::trees::{self, ForestParams, GbtParams, RandomForest};
 use intreeger::util::Rng;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
 
 /// Minimal `--key value` argument map with typed accessors.
 struct Args {
@@ -200,6 +203,19 @@ static COMMANDS: &[CommandSpec] = &[
         },
         about: "start the batching server (from a model or a pipeline bundle) and run a demo workload",
         run: cmd_serve,
+    },
+    CommandSpec {
+        name: "serve-http",
+        synopsis: || {
+            format!(
+                "--model model.json | --pipeline DIR [--addr HOST:PORT] [--max-batch N] \
+                 [--max-batch-delay USEC] [--workers W] [--conn-workers C] [--queue-depth Q] \
+                 [--ttl-ms T] [--duration SECS] [--calibrate] [--backend {}] [--threads N]",
+                backend_names()
+            )
+        },
+        about: "serve the model over HTTP/1.1 (zero-copy front end feeding the batching coordinator)",
+        run: cmd_serve_http,
     },
     CommandSpec {
         name: "tablei",
@@ -548,6 +564,104 @@ fn cmd_serve(args: &Args) {
     );
 }
 
+/// `serve-http`: boot the coordinator (model file or pipeline bundle,
+/// same resolution as `serve`) and put the zero-copy HTTP/1.1 front end
+/// in front of it. `--duration SECS` serves for a bounded window and
+/// prints an outcome summary on exit (CI smoke and benchmarks);
+/// without it the server runs until killed.
+fn cmd_serve_http(args: &Args) {
+    use std::io::Write as _;
+    apply_backend_flag(args);
+    apply_threads_flag(args);
+    let defaults = coordinator::BatchPolicy::default();
+    let policy = coordinator::BatchPolicy {
+        max_batch: args.usize_or("max-batch", defaults.max_batch),
+        max_wait: Duration::from_micros(
+            args.u64_or("max-batch-delay", defaults.max_wait.as_micros() as u64),
+        ),
+    };
+    let config = ServerConfig {
+        policy,
+        n_workers: args.usize_or("workers", 1),
+        queue_depth: args.usize_or("queue-depth", ServerConfig::default().queue_depth),
+        auto_calibrate: args.flag("calibrate"),
+        default_ttl: args
+            .get("ttl-ms")
+            .map(|v| Duration::from_millis(v.parse().expect("bad --ttl-ms (use milliseconds)"))),
+        ..ServerConfig::default()
+    };
+    let server = match args.get("pipeline") {
+        Some(dir) => {
+            let dir = PathBuf::from(dir);
+            let (server, _model) =
+                coordinator::server_from_pipeline(&dir, config).unwrap_or_else(|e| {
+                    die(format!("cannot boot from pipeline bundle '{}': {e}", dir.display()))
+                });
+            server
+        }
+        None => {
+            let model = load_model(args);
+            let artifacts = args
+                .get("artifacts")
+                .map(PathBuf::from)
+                .or_else(|| Some(PathBuf::from("artifacts")))
+                .filter(|p| intreeger::runtime::artifacts_available(p));
+            InferenceServer::start(&model, artifacts, config)
+        }
+    };
+    let server = Arc::new(server);
+    let http_config = HttpConfig {
+        addr: args.get("addr").unwrap_or("127.0.0.1:8080").to_string(),
+        conn_workers: args.usize_or("conn-workers", 4),
+        ..HttpConfig::default()
+    };
+    let http = HttpServer::start(Arc::clone(&server), http_config)
+        .unwrap_or_else(|e| die(format!("cannot bind HTTP listener: {e}")));
+    println!(
+        "intreeger serve-http: listening on http://{} (POST /predict, GET /metrics, GET /healthz)",
+        http.local_addr()
+    );
+    println!(
+        "policy: max_batch {}, max_batch_delay {} us; {} coordinator worker(s), {} connection worker(s)",
+        server.metrics().max_batch.unwrap_or(0),
+        server.metrics().max_batch_delay_us.unwrap_or(0),
+        args.usize_or("workers", 1),
+        args.usize_or("conn-workers", 4),
+    );
+    // Make the listening lines visible to pipes immediately (stdout is
+    // block-buffered when not a tty; CI tails the log while curling).
+    let _ = std::io::stdout().flush();
+    let duration = args.u64_or("duration", 0);
+    if duration == 0 {
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
+    std::thread::sleep(Duration::from_secs(duration));
+    drop(http); // join acceptor + connection workers before summarizing
+    let snap = server.metrics();
+    println!(
+        "outcomes: http {} requests / {} responses; coordinator {} ok; shed {} expired {} rejected {} lost {}",
+        snap.http_requests,
+        snap.http_responses,
+        snap.responses,
+        snap.shed,
+        snap.expired,
+        snap.rejected,
+        snap.lost
+    );
+    println!(
+        "e2e latency: mean {:.0} us, p50 {:.0} us, p99 {:.0} us; flushes full {} deadline {} ttl {} drain {}",
+        snap.e2e_mean_us,
+        snap.e2e_p50_us,
+        snap.e2e_p99_us,
+        snap.flush_full,
+        snap.flush_deadline,
+        snap.flush_ttl,
+        snap.flush_drain
+    );
+}
+
 fn cmd_tablei() {
     print!("{}", simarch::cores::table_i());
 }
@@ -593,8 +707,10 @@ fn cmd_inspect(args: &Args) {
         SimdBackend::available().iter().map(|b| b.name()).collect::<Vec<_>>().join(", "),
         SimdBackend::resolve().name()
     );
+    let (pref, basis) = inference::parallel::preferred();
     println!(
-        "cores:           {} logical{}; default intra-batch threads {}",
+        "cores:           {} logical{}; default intra-batch threads {}; \
+         calibration sweeps to {pref} {basis} cores",
         inference::parallel::detected(),
         match inference::parallel::physical_cores() {
             Some(p) => format!(" / {p} physical"),

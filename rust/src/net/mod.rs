@@ -1,0 +1,37 @@
+//! Pure-Rust, std-only HTTP/1.1 serving front end for the coordinator —
+//! the socket the ROADMAP's "millions of users" story was missing.
+//!
+//! Three pieces, one perf story:
+//!
+//! * [`parser`] — a lazy, zero-allocation HTTP/1.1 request parser:
+//!   borrowed `&str` slices over a reused per-connection buffer, no
+//!   header map, no copies. Only the three headers the server acts on
+//!   (`Content-Length`, `Connection`, `Transfer-Encoding`) are even
+//!   inspected; everything else is skipped byte-wise.
+//! * [`scan`] — a lazy JSON scanner that extracts **only** the
+//!   `features` array by byte-scanning, without building a DOM (the
+//!   mik-sdk ADR-002 idiom: scan bytes → find path → extract, ~33x for
+//!   partial field extraction), parsing `f32`s straight into a reused
+//!   arena `Vec<f32>`.
+//! * [`server`] — a sized acceptor plus connection-worker pool over
+//!   non-blocking `std::net`, keep-alive and pipelining over one reused
+//!   buffer per worker, vectored response writes, and `POST /predict`
+//!   / `GET /metrics` routed into the existing
+//!   [`InferenceServer`](crate::coordinator::InferenceServer).
+//!
+//! The request hot path — parse head, scan features, render response —
+//! performs **zero heap allocations per request in steady state**: the
+//! connection buffer, the feature arena, and both response buffers are
+//! reused across requests (verified by the debug-only allocation
+//! counter in `tests/http_corpus.rs`). The single deliberate exception
+//! is the coordinator admission boundary: the queue must own its row,
+//! so admission clones the arena into a `Vec<f32>` (one bounded copy),
+//! and `Response.fixed` is client-owned by the coordinator's contract.
+
+pub mod parser;
+pub mod scan;
+pub mod server;
+
+pub use parser::{parse_head, HttpError, RequestHead, MAX_BODY_BYTES, MAX_HEAD_BYTES};
+pub use scan::{extract_features, ScanError};
+pub use server::{HttpConfig, HttpServer};

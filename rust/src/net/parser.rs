@@ -1,0 +1,269 @@
+//! Lazy zero-allocation HTTP/1.1 request-head parser.
+//!
+//! The parser never copies: [`parse_head`] borrows method and path as
+//! `&str` slices straight out of the connection buffer, inspects only
+//! the headers the server acts on, and reports how many bytes the head
+//! consumed so the caller can frame the body (and the next pipelined
+//! request) without re-scanning. Incomplete input is a normal state
+//! (`Ok(None)` — read more), not an error; errors are typed so each
+//! maps onto exactly one HTTP status.
+
+/// Hard cap on the request head (request line + headers + terminator).
+/// A head that grows past this without terminating is rejected with
+/// `431 Request Header Fields Too Large` — the buffer never grows
+/// unboundedly for a client that just streams header bytes.
+pub const MAX_HEAD_BYTES: usize = 8 * 1024;
+
+/// Hard cap on the declared `Content-Length`. Larger bodies are
+/// rejected up front with `413 Content Too Large` before any body byte
+/// is buffered.
+pub const MAX_BODY_BYTES: usize = 1 << 20;
+
+/// Typed request-head parse failures; [`HttpError::status`] maps each
+/// to the one HTTP status it answers with. All of them are
+/// connection-fatal: once framing is in doubt the server responds and
+/// closes rather than guessing where the next request starts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HttpError {
+    /// Malformed request line or header (the `&str` names the offense).
+    BadRequest(&'static str),
+    /// The head exceeded [`MAX_HEAD_BYTES`] without terminating.
+    HeadersTooLarge,
+    /// The declared `Content-Length` exceeds [`MAX_BODY_BYTES`].
+    BodyTooLarge,
+    /// Valid HTTP the server deliberately does not implement
+    /// (`Transfer-Encoding` framing, `Expect: 100-continue`).
+    Unsupported(&'static str),
+}
+
+impl HttpError {
+    /// The `(status code, reason phrase)` this error answers with.
+    pub fn status(&self) -> (u16, &'static str) {
+        match self {
+            HttpError::BadRequest(_) => (400, "Bad Request"),
+            HttpError::HeadersTooLarge => (431, "Request Header Fields Too Large"),
+            HttpError::BodyTooLarge => (413, "Content Too Large"),
+            HttpError::Unsupported(_) => (501, "Not Implemented"),
+        }
+    }
+
+    /// A short human-readable detail string for the error body.
+    pub fn detail(&self) -> &'static str {
+        match self {
+            HttpError::BadRequest(d) | HttpError::Unsupported(d) => d,
+            HttpError::HeadersTooLarge => "request head exceeds the header size limit",
+            HttpError::BodyTooLarge => "declared content-length exceeds the body size limit",
+        }
+    }
+}
+
+/// A parsed request head. `method` and `path` borrow from the
+/// connection buffer — zero copies; the head is only valid until the
+/// caller shifts or refills that buffer.
+#[derive(Debug, Clone, Copy)]
+pub struct RequestHead<'a> {
+    /// Request method, verbatim (`GET`, `POST`, ...).
+    pub method: &'a str,
+    /// Request target, verbatim (`/predict`, `/metrics?x=1`, ...).
+    pub path: &'a str,
+    /// Whether the connection should stay open after the response
+    /// (HTTP/1.1 default yes, HTTP/1.0 default no, `Connection` header
+    /// overrides either way).
+    pub keep_alive: bool,
+    /// Declared body length (0 when no `Content-Length` header).
+    pub content_length: usize,
+    /// Bytes the head consumed, including the `\r\n\r\n` terminator;
+    /// the body starts at this offset.
+    pub head_len: usize,
+}
+
+impl RequestHead<'_> {
+    /// Total framed size of this request: head plus declared body.
+    pub fn total_len(&self) -> usize {
+        self.head_len + self.content_length
+    }
+}
+
+/// Try to parse one request head from the front of `buf`.
+///
+/// * `Ok(Some(head))` — a complete head; the body (if any) occupies
+///   `buf[head.head_len .. head.total_len()]` once that many bytes have
+///   been read.
+/// * `Ok(None)` — incomplete; read more bytes and call again.
+/// * `Err(e)` — malformed or over-limit; respond with `e.status()` and
+///   close the connection.
+pub fn parse_head(buf: &[u8]) -> Result<Option<RequestHead<'_>>, HttpError> {
+    let head_end = match find_terminator(buf) {
+        Some(end) => end,
+        None => {
+            // No terminator yet. Only an error if the head can no
+            // longer terminate within the cap.
+            if buf.len() >= MAX_HEAD_BYTES {
+                return Err(HttpError::HeadersTooLarge);
+            }
+            return Ok(None);
+        }
+    };
+    if head_end > MAX_HEAD_BYTES {
+        return Err(HttpError::HeadersTooLarge);
+    }
+
+    let head = &buf[..head_end - 4]; // strip the \r\n\r\n terminator
+    let mut lines = head.split(|&b| b == b'\n').map(|l| l.strip_suffix(b"\r").unwrap_or(l));
+
+    // Request line: METHOD SP TARGET SP HTTP/1.x
+    let request_line = lines.next().ok_or(HttpError::BadRequest("empty request line"))?;
+    let line = std::str::from_utf8(request_line)
+        .map_err(|_| HttpError::BadRequest("request line is not valid UTF-8"))?;
+    let mut parts = line.split(' ');
+    let method = parts.next().filter(|m| !m.is_empty()).ok_or(HttpError::BadRequest("missing method"))?;
+    let path = parts.next().filter(|p| !p.is_empty()).ok_or(HttpError::BadRequest("missing request target"))?;
+    let version = parts.next().ok_or(HttpError::BadRequest("missing HTTP version"))?;
+    if parts.next().is_some() {
+        return Err(HttpError::BadRequest("malformed request line"));
+    }
+    let mut keep_alive = match version {
+        "HTTP/1.1" => true,
+        "HTTP/1.0" => false,
+        _ => return Err(HttpError::BadRequest("unsupported HTTP version")),
+    };
+
+    // Headers: only the three the server acts on are inspected; the
+    // rest are skipped without being materialized anywhere.
+    let mut content_length = 0usize;
+    for raw in lines {
+        if raw.is_empty() {
+            continue;
+        }
+        let colon = raw
+            .iter()
+            .position(|&b| b == b':')
+            .ok_or(HttpError::BadRequest("header line without a colon"))?;
+        let name = &raw[..colon];
+        let value = trim_ascii(&raw[colon + 1..]);
+        if eq_ignore_case(name, b"content-length") {
+            let value = std::str::from_utf8(value)
+                .map_err(|_| HttpError::BadRequest("invalid content-length"))?;
+            content_length = value
+                .parse::<usize>()
+                .map_err(|_| HttpError::BadRequest("invalid content-length"))?;
+        } else if eq_ignore_case(name, b"connection") {
+            if eq_ignore_case(value, b"close") {
+                keep_alive = false;
+            } else if eq_ignore_case(value, b"keep-alive") {
+                keep_alive = true;
+            }
+        } else if eq_ignore_case(name, b"transfer-encoding") {
+            // Chunked (or any transfer coding) framing is out of scope:
+            // refusing is safer than misframing the stream.
+            return Err(HttpError::Unsupported("transfer-encoding is not supported"));
+        } else if eq_ignore_case(name, b"expect") {
+            return Err(HttpError::Unsupported("expect is not supported"));
+        }
+    }
+    if content_length > MAX_BODY_BYTES {
+        return Err(HttpError::BodyTooLarge);
+    }
+
+    Ok(Some(RequestHead { method, path, keep_alive, content_length, head_len: head_end }))
+}
+
+/// Offset one past the `\r\n\r\n` head terminator, if present.
+fn find_terminator(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n").map(|p| p + 4)
+}
+
+/// ASCII case-insensitive equality without allocating lowercase copies.
+fn eq_ignore_case(a: &[u8], b: &[u8]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.eq_ignore_ascii_case(y))
+}
+
+/// Trim ASCII spaces and tabs from both ends (header optional whitespace).
+fn trim_ascii(mut v: &[u8]) -> &[u8] {
+    while let [b' ' | b'\t', rest @ ..] = v {
+        v = rest;
+    }
+    while let [rest @ .., b' ' | b'\t'] = v {
+        v = rest;
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_a_minimal_post() {
+        let raw = b"POST /predict HTTP/1.1\r\nHost: x\r\nContent-Length: 5\r\n\r\nhello";
+        let head = parse_head(raw).unwrap().unwrap();
+        assert_eq!(head.method, "POST");
+        assert_eq!(head.path, "/predict");
+        assert!(head.keep_alive);
+        assert_eq!(head.content_length, 5);
+        assert_eq!(&raw[head.head_len..head.total_len()], b"hello");
+    }
+
+    #[test]
+    fn incomplete_head_asks_for_more() {
+        let raw = b"POST /predict HTTP/1.1\r\nContent-Le";
+        assert!(parse_head(raw).unwrap().is_none());
+        assert!(parse_head(b"").unwrap().is_none());
+    }
+
+    #[test]
+    fn header_names_and_values_are_case_insensitive() {
+        let raw = b"GET / HTTP/1.1\r\ncOnNeCtIoN: CLOSE\r\n\r\n";
+        let head = parse_head(raw).unwrap().unwrap();
+        assert!(!head.keep_alive);
+    }
+
+    #[test]
+    fn http_10_defaults_to_close_but_can_keep_alive() {
+        let plain = parse_head(b"GET / HTTP/1.0\r\n\r\n").unwrap().unwrap();
+        assert!(!plain.keep_alive);
+        let ka = parse_head(b"GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n").unwrap().unwrap();
+        assert!(ka.keep_alive);
+    }
+
+    #[test]
+    fn oversized_heads_and_bodies_are_typed_errors() {
+        // A head that never terminates within the cap.
+        let mut raw = b"GET / HTTP/1.1\r\nX: ".to_vec();
+        raw.resize(MAX_HEAD_BYTES + 1, b'a');
+        assert_eq!(parse_head(&raw), Err(HttpError::HeadersTooLarge));
+        // A declared body over the cap.
+        let raw = format!("POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY_BYTES + 1);
+        assert_eq!(parse_head(raw.as_bytes()), Err(HttpError::BodyTooLarge));
+    }
+
+    #[test]
+    fn malformed_lines_are_rejected() {
+        assert!(matches!(
+            parse_head(b"POST  HTTP/1.1\r\n\r\n"),
+            Err(HttpError::BadRequest(_)) | Err(HttpError::Unsupported(_))
+        ));
+        assert!(matches!(parse_head(b"GET / SPDY/3\r\n\r\n"), Err(HttpError::BadRequest(_))));
+        assert!(matches!(
+            parse_head(b"GET / HTTP/1.1\r\nno-colon-here\r\n\r\n"),
+            Err(HttpError::BadRequest(_))
+        ));
+        assert!(matches!(
+            parse_head(b"GET / HTTP/1.1\r\nContent-Length: nope\r\n\r\n"),
+            Err(HttpError::BadRequest(_))
+        ));
+        assert!(matches!(
+            parse_head(b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n"),
+            Err(HttpError::Unsupported(_))
+        ));
+    }
+
+    #[test]
+    fn pipelined_heads_frame_back_to_back() {
+        let raw = b"GET /healthz HTTP/1.1\r\n\r\nGET /metrics HTTP/1.1\r\n\r\n";
+        let first = parse_head(raw).unwrap().unwrap();
+        assert_eq!(first.path, "/healthz");
+        let second = parse_head(&raw[first.total_len()..]).unwrap().unwrap();
+        assert_eq!(second.path, "/metrics");
+    }
+}

@@ -1,0 +1,302 @@
+//! Lazy JSON feature extraction: byte-scan the request body for the
+//! top-level `"features"` array and parse its numbers straight into a
+//! reused `Vec<f32>` arena — no DOM, no intermediate strings, no
+//! per-request allocation once the arena is warm.
+//!
+//! This is the mik-sdk ADR-002 idiom (scan bytes → locate path →
+//! extract only the requested field): for a predict request the server
+//! needs exactly one field, so building a value tree for the whole
+//! document is pure waste. Values under other keys are *skipped* with a
+//! depth counter (string-aware, escape-aware) without being decoded,
+//! and the scanner returns as soon as the features array is parsed —
+//! bytes after it are never touched.
+//!
+//! Number handling is deliberately strict-JSON: `NaN` / `Infinity`
+//! literals are not numbers and are rejected here with a scan error,
+//! while overflowing decimal forms (`1e999`) parse to ±`inf` per IEEE
+//! 754 and flow on to the coordinator, whose admission check rejects
+//! them as `ServeError::NonFiniteFeature` — smuggling a non-finite
+//! value past validation by spelling it creatively is not possible.
+
+/// Typed scanner failures; each carries enough to produce a precise
+/// 400 body without formatting machinery on the hot path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScanError {
+    /// The body is not a JSON object (`{...}`).
+    NotAnObject,
+    /// The object has no top-level `"features"` key.
+    MissingFeatures,
+    /// The `"features"` value is not an array of JSON numbers; the
+    /// payload is the byte offset of the offending token.
+    BadNumber(usize),
+    /// Structurally malformed JSON at the given byte offset.
+    Syntax(usize),
+}
+
+impl ScanError {
+    /// Machine-readable error kind for the JSON error body.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ScanError::NotAnObject => "not_an_object",
+            ScanError::MissingFeatures => "missing_features",
+            ScanError::BadNumber(_) => "bad_number",
+            ScanError::Syntax(_) => "bad_json",
+        }
+    }
+}
+
+impl std::fmt::Display for ScanError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ScanError::NotAnObject => write!(f, "body is not a JSON object"),
+            ScanError::MissingFeatures => write!(f, "no top-level 'features' key"),
+            ScanError::BadNumber(off) => {
+                write!(f, "'features' must be an array of finite JSON numbers (byte {off})")
+            }
+            ScanError::Syntax(off) => write!(f, "malformed JSON at byte {off}"),
+        }
+    }
+}
+
+impl std::error::Error for ScanError {}
+
+/// Extract the top-level `"features"` array of `body` into `out`
+/// (cleared first, capacity reused). Returns as soon as the array has
+/// been parsed; the remainder of the document is not validated — lazy
+/// by design.
+pub fn extract_features(body: &[u8], out: &mut Vec<f32>) -> Result<(), ScanError> {
+    out.clear();
+    let mut s = Scanner { buf: body, pos: 0 };
+    s.skip_ws();
+    if s.next() != Some(b'{') {
+        return Err(ScanError::NotAnObject);
+    }
+    s.skip_ws();
+    if s.peek() == Some(b'}') {
+        return Err(ScanError::MissingFeatures);
+    }
+    loop {
+        // key
+        s.skip_ws();
+        let (key_lo, key_hi) = s.scan_string()?;
+        s.skip_ws();
+        if s.next() != Some(b':') {
+            return Err(ScanError::Syntax(s.pos));
+        }
+        s.skip_ws();
+        if &s.buf[key_lo..key_hi] == b"features" {
+            return s.parse_number_array(out);
+        }
+        s.skip_value()?;
+        s.skip_ws();
+        match s.next() {
+            Some(b',') => continue,
+            Some(b'}') => return Err(ScanError::MissingFeatures),
+            _ => return Err(ScanError::Syntax(s.pos)),
+        }
+    }
+}
+
+struct Scanner<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl Scanner<'_> {
+    fn peek(&self) -> Option<u8> {
+        self.buf.get(self.pos).copied()
+    }
+
+    fn next(&mut self) -> Option<u8> {
+        let b = self.peek()?;
+        self.pos += 1;
+        Some(b)
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    /// Consume a JSON string, returning the byte range of its raw
+    /// contents (between the quotes, escapes left as-is — key matching
+    /// is against the literal spelling, which is exact for `features`).
+    fn scan_string(&mut self) -> Result<(usize, usize), ScanError> {
+        if self.next() != Some(b'"') {
+            return Err(ScanError::Syntax(self.pos));
+        }
+        let lo = self.pos;
+        loop {
+            match self.next() {
+                Some(b'"') => return Ok((lo, self.pos - 1)),
+                Some(b'\\') => {
+                    // Skip the escaped byte; \uXXXX needs no special
+                    // care — its hex digits cannot contain '"' or '\'.
+                    self.next().ok_or(ScanError::Syntax(self.pos))?;
+                }
+                Some(_) => {}
+                None => return Err(ScanError::Syntax(self.pos)),
+            }
+        }
+    }
+
+    /// Skip one JSON value of any type without decoding it: strings are
+    /// scanned escape-aware, containers with a depth counter, scalars by
+    /// running to the next structural byte.
+    fn skip_value(&mut self) -> Result<(), ScanError> {
+        match self.peek().ok_or(ScanError::Syntax(self.pos))? {
+            b'"' => {
+                self.scan_string()?;
+                Ok(())
+            }
+            b'{' | b'[' => {
+                let mut depth = 0usize;
+                loop {
+                    match self.next().ok_or(ScanError::Syntax(self.pos))? {
+                        b'{' | b'[' => depth += 1,
+                        b'}' | b']' => {
+                            depth -= 1;
+                            if depth == 0 {
+                                return Ok(());
+                            }
+                        }
+                        b'"' => {
+                            // Rewind onto the quote and reuse the
+                            // escape-aware string scan.
+                            self.pos -= 1;
+                            self.scan_string()?;
+                        }
+                        _ => {}
+                    }
+                }
+            }
+            _ => {
+                // Scalar: number / true / false / null. Run to the next
+                // structural delimiter; the caller validates context.
+                while let Some(b) = self.peek() {
+                    if matches!(b, b',' | b'}' | b']' | b' ' | b'\t' | b'\n' | b'\r') {
+                        break;
+                    }
+                    self.pos += 1;
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Parse `[n, n, ...]` into `out`. Each element must be a JSON
+    /// number token; `str::parse::<f32>` does the decimal conversion in
+    /// place over the borrowed token slice.
+    fn parse_number_array(&mut self, out: &mut Vec<f32>) -> Result<(), ScanError> {
+        if self.next() != Some(b'[') {
+            return Err(ScanError::BadNumber(self.pos.saturating_sub(1)));
+        }
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(());
+        }
+        loop {
+            self.skip_ws();
+            let lo = self.pos;
+            while let Some(b) = self.peek() {
+                // JSON number alphabet only — 'N' (NaN), 'I' (Infinity)
+                // and friends terminate the token and fail the parse.
+                if matches!(b, b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E') {
+                    self.pos += 1;
+                } else {
+                    break;
+                }
+            }
+            if lo == self.pos {
+                return Err(ScanError::BadNumber(lo));
+            }
+            let token =
+                std::str::from_utf8(&self.buf[lo..self.pos]).map_err(|_| ScanError::BadNumber(lo))?;
+            let v: f32 = token.parse().map_err(|_| ScanError::BadNumber(lo))?;
+            out.push(v);
+            self.skip_ws();
+            match self.next() {
+                Some(b',') => continue,
+                Some(b']') => return Ok(()),
+                _ => return Err(ScanError::Syntax(self.pos)),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scan(body: &str) -> Result<Vec<f32>, ScanError> {
+        let mut out = Vec::new();
+        extract_features(body.as_bytes(), &mut out).map(|()| out)
+    }
+
+    #[test]
+    fn extracts_a_plain_features_array() {
+        assert_eq!(scan(r#"{"features": [1, 2.5, -3e2]}"#).unwrap(), vec![1.0, 2.5, -300.0]);
+        assert_eq!(scan(r#"{"features":[]}"#).unwrap(), Vec::<f32>::new());
+    }
+
+    #[test]
+    fn skips_other_keys_of_any_shape() {
+        let body = r#"{
+            "id": "req-42{\"}]",
+            "nested": {"a": [1, {"b": "]}"}], "c": null},
+            "flag": true,
+            "features": [7.5, 8],
+            "after": "never even scanned"
+        }"#;
+        assert_eq!(scan(body).unwrap(), vec![7.5, 8.0]);
+    }
+
+    #[test]
+    fn is_lazy_after_the_features_array() {
+        // Garbage *after* the extracted field is never touched — that is
+        // the point of scanning instead of building a DOM.
+        assert_eq!(scan(r#"{"features":[1,2] THIS IS NOT JSON"#).unwrap(), vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn rejects_non_objects_and_missing_key() {
+        assert_eq!(scan(r#"[1,2,3]"#), Err(ScanError::NotAnObject));
+        assert_eq!(scan(r#""features""#), Err(ScanError::NotAnObject));
+        assert_eq!(scan(r#"{}"#), Err(ScanError::MissingFeatures));
+        assert_eq!(scan(r#"{"other": 1}"#), Err(ScanError::MissingFeatures));
+    }
+
+    #[test]
+    fn rejects_nan_and_infinity_literals() {
+        assert!(matches!(scan(r#"{"features": [NaN]}"#), Err(ScanError::BadNumber(_))));
+        assert!(matches!(scan(r#"{"features": [Infinity]}"#), Err(ScanError::BadNumber(_))));
+        assert!(matches!(scan(r#"{"features": [1, null]}"#), Err(ScanError::BadNumber(_))));
+        assert!(matches!(scan(r#"{"features": "nope"}"#), Err(ScanError::BadNumber(_))));
+    }
+
+    #[test]
+    fn overflowing_decimals_parse_to_infinity_for_downstream_rejection() {
+        // 1e999 is valid JSON; IEEE 754 overflow makes it +inf, and the
+        // coordinator's finiteness check turns that into a typed 400.
+        let got = scan(r#"{"features": [1e999, -1e999]}"#).unwrap();
+        assert!(got[0].is_infinite() && got[0] > 0.0);
+        assert!(got[1].is_infinite() && got[1] < 0.0);
+    }
+
+    #[test]
+    fn truncated_bodies_are_syntax_errors() {
+        assert!(matches!(scan(r#"{"features": [1, 2"#), Err(ScanError::Syntax(_))));
+        assert!(matches!(scan(r#"{"features"#), Err(ScanError::Syntax(_))));
+        assert!(matches!(scan(r#"{"a": {"unclosed": 1}"#), Err(ScanError::Syntax(_))));
+    }
+
+    #[test]
+    fn arena_is_cleared_and_reused() {
+        let mut arena = vec![9.0f32; 100];
+        extract_features(br#"{"features": [1]}"#, &mut arena).unwrap();
+        assert_eq!(arena, vec![1.0]);
+        assert!(arena.capacity() >= 100, "capacity must be reused, not shrunk");
+    }
+}

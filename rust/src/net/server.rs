@@ -1,0 +1,598 @@
+//! The HTTP front end: a sized acceptor plus connection-worker pool
+//! over non-blocking `std::net`, feeding the coordinator.
+//!
+//! ## Shape
+//!
+//! One acceptor thread owns the non-blocking listener and hands
+//! accepted sockets to a fixed pool of connection workers over a
+//! **sized** channel — when every worker is busy and the handoff queue
+//! is full, the acceptor answers `503` and closes instead of queueing
+//! unboundedly: connection-level admission control, mirroring the
+//! coordinator's bounded request queue one layer down.
+//!
+//! Each worker owns one set of [`ConnBuffers`] — request buffer,
+//! feature arena, response head/body buffers — reused across every
+//! request and every connection it ever serves. Keep-alive and
+//! pipelining work over the same buffer: after each response the
+//! consumed bytes are shifted out with `copy_within` and the next
+//! request (possibly already buffered) parses in place. In steady
+//! state the parse → scan → render path performs **zero heap
+//! allocations per request**; the one deliberate exception is the
+//! coordinator admission boundary (the queue must own its row, so the
+//! arena is cloned into the submitted `Vec<f32>`).
+//!
+//! Responses go out with a single vectored write (`write_vectored`
+//! over head + body slices) with a write-all fallback for short
+//! writes.
+//!
+//! ## Routes
+//!
+//! * `POST /predict` — body `{"features": [..]}` → `200` with
+//!   `{"class", "route", "fixed", "proba"}`, or a typed error body.
+//! * `GET /metrics` — the full coordinator metrics snapshot as JSON,
+//!   including the e2e latency SLO percentiles and the batching
+//!   policy knobs.
+//! * `GET /healthz` — `200 ok` liveness probe.
+//!
+//! Error statuses: malformed HTTP or JSON and validation failures →
+//! `400`/`413`/`431`/`501`; shed (`QueueFull`/`ShuttingDown`) → `503`;
+//! TTL expiry (`DeadlineExceeded`) → `504`; `WorkerLost` → `500`.
+
+use std::io::{self, IoSlice, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::parser::{self, HttpError};
+use super::scan;
+use crate::coordinator::{InferenceServer, MetricsSnapshot, Response, Route, ServeError};
+use crate::quant::fixed_to_prob;
+
+/// HTTP front-end configuration.
+#[derive(Clone, Debug)]
+pub struct HttpConfig {
+    /// Listen address, e.g. `127.0.0.1:8080` (port 0 picks a free one).
+    pub addr: String,
+    /// Connection-worker threads (each serves one connection at a
+    /// time, keep-alive included). Clamped to at least 1.
+    pub conn_workers: usize,
+    /// Read timeout on idle keep-alive connections; a connection quiet
+    /// for this long is closed so its worker can serve someone else.
+    pub keep_alive_timeout: Duration,
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        HttpConfig {
+            addr: "127.0.0.1:8080".to_string(),
+            conn_workers: 4,
+            keep_alive_timeout: Duration::from_secs(5),
+        }
+    }
+}
+
+/// A running HTTP front end. Dropping it stops the acceptor, drains
+/// the workers, and joins every thread.
+pub struct HttpServer {
+    local_addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    acceptor: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind `config.addr` and start serving `server` over HTTP.
+    pub fn start(server: Arc<InferenceServer>, config: HttpConfig) -> io::Result<HttpServer> {
+        let listener = TcpListener::bind(&config.addr)?;
+        listener.set_nonblocking(true)?;
+        let local_addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let n_workers = config.conn_workers.max(1);
+
+        // Sized handoff: bounded queue between acceptor and workers.
+        let (tx, rx) = sync_channel::<TcpStream>(n_workers * 2);
+        let rx = Arc::new(Mutex::new(rx));
+
+        let mut workers = Vec::with_capacity(n_workers);
+        for w in 0..n_workers {
+            let rx = Arc::clone(&rx);
+            let server = Arc::clone(&server);
+            let cfg = config.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("http-conn-{w}"))
+                    .spawn(move || conn_worker(&rx, &server, &cfg))?,
+            );
+        }
+
+        let stop_flag = Arc::clone(&stop);
+        let acceptor = std::thread::Builder::new().name("http-acceptor".to_string()).spawn(
+            move || {
+                loop {
+                    if stop_flag.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    match listener.accept() {
+                        Ok((stream, _peer)) => match tx.try_send(stream) {
+                            Ok(()) => {}
+                            Err(TrySendError::Full(stream)) => overloaded_close(stream),
+                            Err(TrySendError::Disconnected(_)) => break,
+                        },
+                        Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(1));
+                        }
+                        // Transient accept errors (ECONNABORTED etc.):
+                        // back off briefly and keep accepting.
+                        Err(_) => std::thread::sleep(Duration::from_millis(1)),
+                    }
+                }
+                // `tx` drops here; workers drain queued sockets, then
+                // their recv() fails and they exit.
+            },
+        )?;
+
+        Ok(HttpServer { local_addr, stop, acceptor: Some(acceptor), workers })
+    }
+
+    /// The bound address (resolves port 0 to the actual port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Every connection queue slot is taken: answer 503 and close. Off the
+/// hot path by definition (this *is* the overload path), so the local
+/// buffers here may allocate.
+fn overloaded_close(mut stream: TcpStream) {
+    let _ = stream.set_nonblocking(false);
+    let mut body = Vec::new();
+    render_error_body(&mut body, "queue_full", &"connection queue is full");
+    let mut head = Vec::new();
+    render_head(&mut head, 503, "Service Unavailable", body.len(), false);
+    let _ = write_response(&mut stream, &head, &body);
+}
+
+/// Per-worker reusable buffers — the whole zero-allocation story lives
+/// in these four vectors keeping their capacity across requests and
+/// connections.
+#[derive(Default)]
+struct ConnBuffers {
+    /// Raw request bytes; `filled` of them are valid.
+    buf: Vec<u8>,
+    filled: usize,
+    /// Feature arena the JSON scanner parses into.
+    features: Vec<f32>,
+    /// Rendered response head / body.
+    head_out: Vec<u8>,
+    body_out: Vec<u8>,
+}
+
+fn conn_worker(rx: &Mutex<Receiver<TcpStream>>, server: &Arc<InferenceServer>, cfg: &HttpConfig) {
+    let mut conn = ConnBuffers::default();
+    conn.buf.resize(4096, 0);
+    loop {
+        // Only one idle worker blocks in recv() at a time; the handoff
+        // itself is brief, so this does not serialize serving.
+        let stream = {
+            let Ok(guard) = rx.lock() else { break };
+            guard.recv()
+        };
+        match stream {
+            Ok(s) => handle_connection(s, &mut conn, server, cfg),
+            Err(_) => break, // acceptor gone, queue drained
+        }
+    }
+}
+
+/// What a parsed head routes to, decided before any buffer mutation so
+/// the borrowed head can be dropped early.
+enum Routed {
+    Predict,
+    Metrics,
+    Health,
+    MethodNotAllowed,
+    NotFound,
+}
+
+fn handle_connection(
+    mut stream: TcpStream,
+    conn: &mut ConnBuffers,
+    server: &Arc<InferenceServer>,
+    cfg: &HttpConfig,
+) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_read_timeout(Some(cfg.keep_alive_timeout));
+    let metrics = server.metrics_handle();
+    conn.filled = 0;
+    let mut t_receipt: Option<Instant> = None;
+
+    loop {
+        // Frame one complete request (head + declared body) from the
+        // front of the buffer.
+        let (routed, keep_alive, body_start, total) =
+            match parser::parse_head(&conn.buf[..conn.filled]) {
+                Ok(Some(head)) if conn.filled >= head.total_len() => {
+                    let routed = match (head.method, head.path) {
+                        ("POST", "/predict") => Routed::Predict,
+                        ("GET", "/metrics") => Routed::Metrics,
+                        ("GET", "/healthz") => Routed::Health,
+                        (_, "/predict" | "/metrics" | "/healthz") => Routed::MethodNotAllowed,
+                        _ => Routed::NotFound,
+                    };
+                    (routed, head.keep_alive, head.head_len, head.total_len())
+                }
+                Ok(_) => {
+                    // Incomplete: read more. Grow (geometrically, capped
+                    // by the framing limits) only when full — steady
+                    // state never reallocates.
+                    if conn.filled == conn.buf.len() {
+                        let cap = parser::MAX_HEAD_BYTES + parser::MAX_BODY_BYTES;
+                        let new_len = (conn.buf.len() * 2).clamp(4096, cap);
+                        conn.buf.resize(new_len, 0);
+                    }
+                    match stream.read(&mut conn.buf[conn.filled..]) {
+                        Ok(0) => return, // peer closed (possibly mid-request)
+                        Ok(n) => {
+                            if t_receipt.is_none() {
+                                t_receipt = Some(Instant::now());
+                            }
+                            conn.filled += n;
+                            continue;
+                        }
+                        // Idle keep-alive timeout or interrupt: close.
+                        Err(_) => return,
+                    }
+                }
+                Err(e) => {
+                    // Framing is unknown from here on: answer and close.
+                    metrics.http_requests.fetch_add(1, Ordering::Relaxed);
+                    let (code, reason) = e.status();
+                    respond_error(&mut stream, conn, &metrics, code, reason, &e, t_receipt);
+                    return;
+                }
+            };
+
+        metrics.http_requests.fetch_add(1, Ordering::Relaxed);
+        conn.body_out.clear();
+        let (code, reason) = match routed {
+            Routed::Predict => {
+                match scan::extract_features(&conn.buf[body_start..total], &mut conn.features) {
+                    Err(e) => {
+                        render_error_body(&mut conn.body_out, e.kind(), &e);
+                        (400, "Bad Request")
+                    }
+                    // The one deliberate copy: the coordinator queue
+                    // must own its row, so the arena is cloned into the
+                    // submitted Vec (see module docs).
+                    Ok(()) => match server.submit(conn.features.clone()) {
+                        Ok(rx) => match rx.recv() {
+                            Ok(Ok(resp)) => {
+                                render_predict_body(&mut conn.body_out, &resp);
+                                (200, "OK")
+                            }
+                            Ok(Err(e)) => {
+                                render_error_body(&mut conn.body_out, e.kind(), &e);
+                                status_for(&e)
+                            }
+                            Err(_) => {
+                                let e = ServeError::WorkerLost;
+                                render_error_body(&mut conn.body_out, e.kind(), &e);
+                                status_for(&e)
+                            }
+                        },
+                        Err(e) => {
+                            render_error_body(&mut conn.body_out, e.kind(), &e);
+                            status_for(&e)
+                        }
+                    },
+                }
+            }
+            Routed::Metrics => {
+                render_metrics_body(&mut conn.body_out, &server.metrics());
+                (200, "OK")
+            }
+            Routed::Health => {
+                conn.body_out.extend_from_slice(b"{\"status\":\"ok\"}");
+                (200, "OK")
+            }
+            Routed::MethodNotAllowed => {
+                render_error_body(&mut conn.body_out, "method_not_allowed", &"use the documented method for this path");
+                (405, "Method Not Allowed")
+            }
+            Routed::NotFound => {
+                render_error_body(&mut conn.body_out, "not_found", &"unknown path");
+                (404, "Not Found")
+            }
+        };
+
+        render_head(&mut conn.head_out, code, reason, conn.body_out.len(), keep_alive);
+        if write_response(&mut stream, &conn.head_out, &conn.body_out).is_err() {
+            return;
+        }
+        metrics.http_responses.fetch_add(1, Ordering::Relaxed);
+        if let Some(t0) = t_receipt {
+            metrics.record_e2e_us(t0.elapsed().as_secs_f64() * 1e6);
+        }
+
+        // Shift the consumed request out; anything left is the next
+        // pipelined request, already received — its clock starts now.
+        conn.buf.copy_within(total..conn.filled, 0);
+        conn.filled -= total;
+        t_receipt = (conn.filled > 0).then(Instant::now);
+        if !keep_alive {
+            return;
+        }
+    }
+}
+
+/// Render + send a connection-fatal parse error.
+fn respond_error(
+    stream: &mut TcpStream,
+    conn: &mut ConnBuffers,
+    metrics: &crate::coordinator::Metrics,
+    code: u16,
+    reason: &str,
+    err: &HttpError,
+    t_receipt: Option<Instant>,
+) {
+    conn.body_out.clear();
+    render_error_body(&mut conn.body_out, error_kind(err), &err.detail());
+    render_head(&mut conn.head_out, code, reason, conn.body_out.len(), false);
+    if write_response(stream, &conn.head_out, &conn.body_out).is_ok() {
+        metrics.http_responses.fetch_add(1, Ordering::Relaxed);
+        if let Some(t0) = t_receipt {
+            metrics.record_e2e_us(t0.elapsed().as_secs_f64() * 1e6);
+        }
+    }
+}
+
+/// Machine-readable kind for an [`HttpError`] body.
+fn error_kind(e: &HttpError) -> &'static str {
+    match e {
+        HttpError::BadRequest(_) => "bad_request",
+        HttpError::HeadersTooLarge => "headers_too_large",
+        HttpError::BodyTooLarge => "body_too_large",
+        HttpError::Unsupported(_) => "not_implemented",
+    }
+}
+
+/// HTTP status answering a coordinator [`ServeError`].
+pub fn status_for(e: &ServeError) -> (u16, &'static str) {
+    match e {
+        ServeError::WrongFeatureCount { .. } | ServeError::NonFiniteFeature { .. } => {
+            (400, "Bad Request")
+        }
+        ServeError::QueueFull | ServeError::ShuttingDown => (503, "Service Unavailable"),
+        ServeError::DeadlineExceeded => (504, "Gateway Timeout"),
+        ServeError::WorkerLost => (500, "Internal Server Error"),
+    }
+}
+
+/// Render a response head into `out` (cleared first). Public so the
+/// allocation-counting test can drive the exact production path.
+pub fn render_head(out: &mut Vec<u8>, code: u16, reason: &str, content_len: usize, keep_alive: bool) {
+    out.clear();
+    let conn = if keep_alive { "keep-alive" } else { "close" };
+    let _ = write!(
+        out,
+        "HTTP/1.1 {code} {reason}\r\nContent-Type: application/json\r\nContent-Length: {content_len}\r\nConnection: {conn}\r\n\r\n"
+    );
+}
+
+/// Render the `POST /predict` success body into `out` (appended):
+/// `{"class":c,"route":"scalar","fixed":[..],"proba":[..]}` — the
+/// probabilities are streamed through [`fixed_to_prob`] without
+/// allocating a probability vector.
+pub fn render_predict_body(out: &mut Vec<u8>, resp: &Response) {
+    let route = match resp.route {
+        Route::Scalar => "scalar",
+        Route::Xla => "xla",
+    };
+    let _ = write!(out, "{{\"class\":{},\"route\":\"{}\",\"fixed\":[", resp.class, route);
+    for (i, &q) in resp.fixed.iter().enumerate() {
+        let sep = if i == 0 { "" } else { "," };
+        let _ = write!(out, "{sep}{q}");
+    }
+    let _ = write!(out, "],\"proba\":[");
+    for (i, &q) in resp.fixed.iter().enumerate() {
+        let sep = if i == 0 { "" } else { "," };
+        let _ = write!(out, "{sep}{}", fixed_to_prob(q));
+    }
+    let _ = write!(out, "]}}");
+}
+
+/// Render a typed error body into `out` (appended):
+/// `{"error":"<kind>","detail":"<display>"}`.
+pub fn render_error_body(out: &mut Vec<u8>, kind: &str, detail: &dyn std::fmt::Display) {
+    let _ = write!(out, "{{\"error\":\"{kind}\",\"detail\":\"{detail}\"}}");
+}
+
+/// Render the metrics snapshot as JSON into `out` (appended). Numbers
+/// that can be non-finite (percentiles over empty histograms) are
+/// clamped to 0 so the document is always valid JSON.
+pub fn render_metrics_body(out: &mut Vec<u8>, m: &MetricsSnapshot) {
+    fn fin(x: f64) -> f64 {
+        if x.is_finite() {
+            x
+        } else {
+            0.0
+        }
+    }
+    let _ = write!(
+        out,
+        "{{\"requests\":{},\"responses\":{},\"http_requests\":{},\"http_responses\":{}",
+        m.requests, m.responses, m.http_requests, m.http_responses
+    );
+    let _ = write!(
+        out,
+        ",\"shed\":{},\"expired\":{},\"rejected\":{},\"lost\":{},\"worker_panics\":{},\"worker_restarts\":{},\"degraded\":{}",
+        m.shed, m.expired, m.rejected, m.lost, m.worker_panics, m.worker_restarts, m.degraded
+    );
+    let _ = write!(
+        out,
+        ",\"batches_scalar\":{},\"batches_xla\":{},\"rows_scalar\":{},\"rows_xla\":{}",
+        m.batches_scalar, m.batches_xla, m.rows_scalar, m.rows_xla
+    );
+    let _ = write!(
+        out,
+        ",\"flush_full\":{},\"flush_deadline\":{},\"flush_ttl\":{},\"flush_drain\":{}",
+        m.flush_full, m.flush_deadline, m.flush_ttl, m.flush_drain
+    );
+    let _ = write!(
+        out,
+        ",\"latency_mean_us\":{},\"latency_p50_us\":{},\"latency_p99_us\":{}",
+        fin(m.latency_mean_us),
+        fin(m.latency_p50_us),
+        fin(m.latency_p99_us)
+    );
+    let _ = write!(
+        out,
+        ",\"e2e_mean_us\":{},\"e2e_p50_us\":{},\"e2e_p99_us\":{}",
+        fin(m.e2e_mean_us),
+        fin(m.e2e_p50_us),
+        fin(m.e2e_p99_us)
+    );
+    let _ = write!(
+        out,
+        ",\"mean_batch\":{},\"batch_p50\":{},\"batch_p99\":{}",
+        fin(m.mean_batch),
+        fin(m.batch_p50),
+        fin(m.batch_p99)
+    );
+    let _ = write!(
+        out,
+        ",\"batch_latency_mean_us\":{},\"batch_latency_p50_us\":{},\"batch_latency_p99_us\":{}",
+        fin(m.batch_latency_mean_us),
+        fin(m.batch_latency_p50_us),
+        fin(m.batch_latency_p99_us)
+    );
+    match m.max_batch {
+        Some(b) => {
+            let _ = write!(out, ",\"max_batch\":{b}");
+        }
+        None => {
+            let _ = write!(out, ",\"max_batch\":null");
+        }
+    }
+    match m.max_batch_delay_us {
+        Some(d) => {
+            let _ = write!(out, ",\"max_batch_delay_us\":{d}");
+        }
+        None => {
+            let _ = write!(out, ",\"max_batch_delay_us\":null");
+        }
+    }
+    for (name, v) in [("kernel", &m.kernel), ("backend", &m.backend)] {
+        match v {
+            Some(s) => {
+                let _ = write!(out, ",\"{name}\":\"{s}\"");
+            }
+            None => {
+                let _ = write!(out, ",\"{name}\":null");
+            }
+        }
+    }
+    match m.threads {
+        Some(t) => {
+            let _ = write!(out, ",\"threads\":{t}");
+        }
+        None => {
+            let _ = write!(out, ",\"threads\":null");
+        }
+    }
+    let _ = write!(out, ",\"detected_features\":[");
+    for (i, f) in m.detected_features.iter().enumerate() {
+        let sep = if i == 0 { "" } else { "," };
+        let _ = write!(out, "{sep}\"{f}\"");
+    }
+    let _ = write!(out, "]}}");
+}
+
+/// One vectored write of head + body, completed with a write-all loop
+/// when the kernel takes less than everything.
+fn write_response(stream: &mut TcpStream, head: &[u8], body: &[u8]) -> io::Result<()> {
+    let total = head.len() + body.len();
+    let mut n = stream.write_vectored(&[IoSlice::new(head), IoSlice::new(body)])?;
+    while n < total {
+        let m = if n < head.len() { stream.write(&head[n..])? } else { stream.write(&body[n - head.len()..])? };
+        if m == 0 {
+            return Err(io::ErrorKind::WriteZero.into());
+        }
+        n += m;
+    }
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn head_renders_exact_http() {
+        let mut out = Vec::new();
+        render_head(&mut out, 200, "OK", 17, true);
+        assert_eq!(
+            std::str::from_utf8(&out).unwrap(),
+            "HTTP/1.1 200 OK\r\nContent-Type: application/json\r\nContent-Length: 17\r\nConnection: keep-alive\r\n\r\n"
+        );
+        render_head(&mut out, 503, "Service Unavailable", 0, false);
+        assert!(out.starts_with(b"HTTP/1.1 503 Service Unavailable\r\n"));
+        assert!(out.ends_with(b"Connection: close\r\n\r\n"));
+    }
+
+    #[test]
+    fn predict_body_streams_fixed_and_proba() {
+        let resp = Response {
+            fixed: vec![0, u32::MAX],
+            class: 1,
+            route: Route::Scalar,
+            latency: Duration::from_micros(5),
+        };
+        let mut out = Vec::new();
+        render_predict_body(&mut out, &resp);
+        let s = std::str::from_utf8(&out).unwrap();
+        assert!(s.starts_with("{\"class\":1,\"route\":\"scalar\",\"fixed\":[0,4294967295]"), "{s}");
+        assert!(s.contains("\"proba\":[0,"), "{s}");
+        assert!(s.ends_with("]}"), "{s}");
+    }
+
+    #[test]
+    fn every_serve_error_maps_to_a_status() {
+        for e in ServeError::ALL {
+            let (code, reason) = status_for(&e);
+            assert!((400..=599).contains(&code), "{e}: {code}");
+            assert!(!reason.is_empty());
+        }
+        assert_eq!(status_for(&ServeError::QueueFull).0, 503);
+        assert_eq!(status_for(&ServeError::DeadlineExceeded).0, 504);
+        assert_eq!(status_for(&ServeError::NonFiniteFeature { index: 0 }).0, 400);
+    }
+
+    #[test]
+    fn metrics_body_is_json_with_the_slo_fields() {
+        let m = crate::coordinator::Metrics::new().snapshot();
+        let mut out = Vec::new();
+        render_metrics_body(&mut out, &m);
+        let s = std::str::from_utf8(&out).unwrap();
+        assert!(s.starts_with('{') && s.ends_with('}'), "{s}");
+        for field in ["e2e_p50_us", "e2e_p99_us", "max_batch_delay_us", "flush_ttl", "http_requests"] {
+            assert!(s.contains(&format!("\"{field}\"")), "missing {field} in {s}");
+        }
+    }
+}

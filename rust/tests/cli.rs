@@ -30,7 +30,15 @@ fn help_lists_every_subcommand_and_flag_enumeration() {
     assert!(out.status.success(), "--help must exit 0");
     let text = String::from_utf8_lossy(&out.stdout);
     for cmd in [
-        "pipeline", "train", "import", "codegen", "predict", "inspect", "simulate", "serve",
+        "pipeline",
+        "train",
+        "import",
+        "codegen",
+        "predict",
+        "inspect",
+        "simulate",
+        "serve",
+        "serve-http",
         "tablei",
     ] {
         assert!(text.contains(cmd), "missing subcommand '{cmd}' in help:\n{text}");
@@ -45,6 +53,8 @@ fn help_lists_every_subcommand_and_flag_enumeration() {
         "--pipeline",         // serve from a bundle
         "--target",           // pipeline label column
         "--holdout",          // pipeline split fraction
+        "--addr",             // serve-http listen address
+        "--max-batch-delay",  // serve-http adaptive-batching age bound
         "ifelse|native|native-predicated|quickscorer", // full layout list, generated
         "float|flint|intreeger",                       // full variant list, generated
         "scalar|avx2|neon",                            // full backend list, generated

@@ -1,0 +1,452 @@
+//! HTTP front-end corpus: malformed-input robustness, loopback
+//! bit-identity against the engine oracle, and the zero-allocation
+//! steady-state guarantee.
+//!
+//! Three layers:
+//!
+//! 1. **Corpus over a real socket** — truncated requests, byte-by-byte
+//!    split reads, oversized heads/bodies, pipelined keep-alive,
+//!    unsupported framing, and NaN / `1e999` smuggling all resolve to
+//!    the documented status codes; nothing panics and the server keeps
+//!    serving afterwards.
+//! 2. **Loopback e2e** — `POST /predict` responses carry exactly the
+//!    oracle engine's fixed-point accumulators (the kernels' parity
+//!    invariant, observed through the whole socket → parse → scan →
+//!    coordinator → render stack).
+//! 3. **Allocation counting** — a global counting allocator verifies
+//!    the per-request parse → scan → render path performs zero heap
+//!    allocations once its reused buffers are warm (the coordinator
+//!    admission boundary's one Vec clone is exercised separately over
+//!    the socket and documented in `net`'s module docs).
+
+use intreeger::coordinator::{
+    BatchPolicy, FaultPlan, InferenceServer, ServerConfig,
+};
+use intreeger::data::{shuttle_like, Dataset};
+use intreeger::inference::{Engine as _, IntEngine};
+use intreeger::ir::Model;
+use intreeger::net::{parse_head, HttpConfig, HttpServer};
+use intreeger::net::server::{render_head, render_predict_body};
+use intreeger::net::extract_features;
+use intreeger::trees::{ForestParams, RandomForest};
+use intreeger::util::json::Json;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+// ---------------------------------------------------------------------------
+// Counting allocator: every alloc/realloc bumps a counter so tests can
+// assert an exact zero over a code region.
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+// ---------------------------------------------------------------------------
+// Harness
+
+fn model() -> (Dataset, Model) {
+    let ds = shuttle_like(600, 77);
+    let m = RandomForest::train(
+        &ds,
+        &ForestParams { n_trees: 5, max_depth: 5, ..Default::default() },
+        7,
+    );
+    (ds, m)
+}
+
+fn serve() -> (HttpServer, Arc<InferenceServer>, Dataset, Model) {
+    let (ds, m) = model();
+    let server = Arc::new(InferenceServer::start(
+        &m,
+        None,
+        ServerConfig {
+            policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(200) },
+            n_workers: 1,
+            faults: Some(FaultPlan::none()),
+            ..Default::default()
+        },
+    ));
+    let http = HttpServer::start(
+        Arc::clone(&server),
+        HttpConfig {
+            addr: "127.0.0.1:0".to_string(),
+            conn_workers: 2,
+            keep_alive_timeout: Duration::from_millis(500),
+        },
+    )
+    .expect("bind loopback");
+    (http, server, ds, m)
+}
+
+/// Send raw bytes, half-close the write side, read everything the
+/// server answers until it closes. Exercises the full socket path.
+fn roundtrip(addr: SocketAddr, raw: &[u8]) -> String {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.write_all(raw).expect("send");
+    stream.shutdown(Shutdown::Write).expect("half-close");
+    let mut out = String::new();
+    stream.read_to_string(&mut out).expect("read response");
+    out
+}
+
+fn predict_request(features: &[f32]) -> Vec<u8> {
+    let body = format!(
+        "{{\"features\":[{}]}}",
+        features.iter().map(|f| f.to_string()).collect::<Vec<_>>().join(",")
+    );
+    format!(
+        "POST /predict HTTP/1.1\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{}",
+        body.len(),
+        body
+    )
+    .into_bytes()
+}
+
+fn body_of(response: &str) -> &str {
+    let (head, body) = response.split_once("\r\n\r\n").expect("head/body split");
+    assert!(head.starts_with("HTTP/1.1 "), "not an HTTP response: {head}");
+    body
+}
+
+fn status_of(response: &str) -> u16 {
+    response["HTTP/1.1 ".len()..].split(' ').next().unwrap().parse().unwrap()
+}
+
+// ---------------------------------------------------------------------------
+// 2. Loopback bit-identity
+
+#[test]
+fn predict_is_bit_identical_to_the_engine_oracle() {
+    let (http, _server, ds, m) = serve();
+    let oracle = IntEngine::compile(&m);
+    let addr = http.local_addr();
+    for i in 0..24 {
+        let row = ds.row(i);
+        let response = roundtrip(addr, &predict_request(row));
+        assert_eq!(status_of(&response), 200, "row {i}: {response}");
+        let json = Json::parse(body_of(&response)).expect("valid response JSON");
+        let class = json.get("class").and_then(Json::as_usize).expect("class field");
+        let fixed: Vec<u32> = json
+            .get("fixed")
+            .and_then(Json::as_arr)
+            .expect("fixed field")
+            .iter()
+            .map(|v| v.as_f64().unwrap() as u32)
+            .collect();
+        assert_eq!(fixed, oracle.predict_fixed(row), "row {i} accumulators");
+        assert_eq!(class as u32, oracle.predict(row), "row {i} class");
+        // Probabilities are derived from the same accumulators and must
+        // sum to ~1 over a normalized forest.
+        let proba: Vec<f64> = json
+            .get("proba")
+            .and_then(Json::as_arr)
+            .expect("proba field")
+            .iter()
+            .map(|v| v.as_f64().unwrap())
+            .collect();
+        let sum: f64 = proba.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-3, "row {i} proba sum {sum}");
+    }
+}
+
+#[test]
+fn keep_alive_serves_many_requests_on_one_connection() {
+    let (http, _server, ds, m) = serve();
+    let oracle = IntEngine::compile(&m);
+    let mut stream = TcpStream::connect(http.local_addr()).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut buf = vec![0u8; 64 * 1024];
+    for i in 0..8 {
+        let row = ds.row(i);
+        stream.write_all(&predict_request(row)).expect("send");
+        // Read one full response (head + declared body).
+        let response = read_one_response(&mut stream, &mut buf);
+        assert_eq!(status_of(&response), 200, "request {i} on kept-alive conn");
+        let json = Json::parse(body_of(&response)).expect("valid JSON");
+        assert_eq!(
+            json.get("class").and_then(Json::as_usize).unwrap() as u32,
+            oracle.predict(row),
+            "request {i}"
+        );
+    }
+}
+
+/// Read exactly one HTTP response using its Content-Length framing.
+fn read_one_response(stream: &mut TcpStream, buf: &mut [u8]) -> String {
+    let mut filled = 0;
+    loop {
+        let head = std::str::from_utf8(&buf[..filled]).ok().and_then(|s| {
+            s.find("\r\n\r\n").map(|p| (s[..p].to_string(), p + 4))
+        });
+        if let Some((head_text, body_start)) = head {
+            let clen = head_text
+                .lines()
+                .find_map(|l| l.to_ascii_lowercase().strip_prefix("content-length:").map(|v| v.trim().parse::<usize>().unwrap()))
+                .unwrap_or(0);
+            if filled >= body_start + clen {
+                return String::from_utf8_lossy(&buf[..body_start + clen]).into_owned();
+            }
+        }
+        let n = stream.read(&mut buf[filled..]).expect("read");
+        assert!(n > 0, "server closed mid-response");
+        filled += n;
+    }
+}
+
+#[test]
+fn pipelined_requests_answer_in_order() {
+    let (http, _server, ds, m) = serve();
+    let oracle = IntEngine::compile(&m);
+    // Two requests in one write; responses must come back in order on
+    // the same connection.
+    let mut raw = predict_request(ds.row(0));
+    raw.extend_from_slice(&predict_request(ds.row(1)));
+    let mut stream = TcpStream::connect(http.local_addr()).expect("connect");
+    stream.write_all(&raw).expect("send");
+    stream.shutdown(Shutdown::Write).expect("half-close");
+    let mut all = String::new();
+    stream.read_to_string(&mut all).expect("read");
+    let statuses: Vec<&str> = all.matches("HTTP/1.1 200 OK").collect();
+    assert_eq!(statuses.len(), 2, "both pipelined requests answered: {all}");
+    // Order: first body's class is row 0's prediction, second is row 1's.
+    let classes: Vec<u32> = all
+        .match_indices("\"class\":")
+        .map(|(p, _)| {
+            all[p + "\"class\":".len()..].split(|c: char| !c.is_ascii_digit()).next().unwrap().parse().unwrap()
+        })
+        .collect();
+    assert_eq!(classes, vec![oracle.predict(ds.row(0)), oracle.predict(ds.row(1))]);
+}
+
+#[test]
+fn split_reads_reassemble_into_one_request() {
+    let (http, _server, ds, m) = serve();
+    let oracle = IntEngine::compile(&m);
+    let raw = predict_request(ds.row(3));
+    let mut stream = TcpStream::connect(http.local_addr()).expect("connect");
+    // Drip the request in five fragments with pauses — the parser must
+    // treat partial heads and partial bodies as "read more", never as
+    // errors.
+    let step = raw.len().div_ceil(5);
+    for chunk in raw.chunks(step) {
+        stream.write_all(chunk).expect("send fragment");
+        stream.flush().unwrap();
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    stream.shutdown(Shutdown::Write).expect("half-close");
+    let mut response = String::new();
+    stream.read_to_string(&mut response).expect("read");
+    assert_eq!(status_of(&response), 200, "{response}");
+    let json = Json::parse(body_of(&response)).expect("valid JSON");
+    assert_eq!(json.get("class").and_then(Json::as_usize).unwrap() as u32, oracle.predict(ds.row(3)));
+}
+
+// ---------------------------------------------------------------------------
+// 1. Malformed-input corpus
+
+#[test]
+fn truncated_request_closes_cleanly_and_server_survives() {
+    let (http, _server, ds, _m) = serve();
+    let addr = http.local_addr();
+    let full = predict_request(ds.row(0));
+    // Truncate at several depths: mid-request-line, mid-headers,
+    // mid-body. The server must close without answering garbage and —
+    // crucially — keep serving new connections.
+    for cut in [4, 20, full.len() - 3] {
+        let mut stream = TcpStream::connect(addr).expect("connect");
+        stream.write_all(&full[..cut]).expect("send truncated");
+        stream.shutdown(Shutdown::Write).expect("half-close");
+        let mut out = String::new();
+        stream.read_to_string(&mut out).expect("read");
+        assert!(out.is_empty(), "truncated request (cut {cut}) must get no reply, got: {out}");
+    }
+    let response = roundtrip(addr, &full);
+    assert_eq!(status_of(&response), 200, "server must survive truncation: {response}");
+}
+
+#[test]
+fn oversized_heads_and_bodies_are_rejected_with_typed_statuses() {
+    let (http, _server, _ds, _m) = serve();
+    let addr = http.local_addr();
+    // A header stream that never terminates within the cap → 431.
+    let mut huge_head = b"GET /healthz HTTP/1.1\r\nX-Padding: ".to_vec();
+    huge_head.resize(intreeger::net::MAX_HEAD_BYTES + 64, b'a');
+    let response = roundtrip(addr, &huge_head);
+    assert_eq!(status_of(&response), 431, "{response}");
+    assert!(body_of(&response).contains("headers_too_large"), "{response}");
+    // A declared body over the cap → 413 before any body byte is read.
+    let huge_body = format!(
+        "POST /predict HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+        intreeger::net::MAX_BODY_BYTES + 1
+    );
+    let response = roundtrip(addr, huge_body.as_bytes());
+    assert_eq!(status_of(&response), 413, "{response}");
+    // Chunked framing is deliberately unimplemented → 501.
+    let chunked = "POST /predict HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n";
+    let response = roundtrip(addr, chunked.as_bytes());
+    assert_eq!(status_of(&response), 501, "{response}");
+}
+
+#[test]
+fn nan_and_overflow_smuggling_resolve_to_typed_400s() {
+    let (http, _server, _ds, _m) = serve();
+    let addr = http.local_addr();
+    // A NaN literal is not JSON: rejected by the scanner.
+    let body = "{\"features\":[1,2,NaN,4,5,6,7]}";
+    let raw = format!(
+        "POST /predict HTTP/1.1\r\nContent-Length: {}\r\n\r\n{}",
+        body.len(),
+        body
+    );
+    let response = roundtrip(addr, raw.as_bytes());
+    assert_eq!(status_of(&response), 400, "{response}");
+    assert!(body_of(&response).contains("bad_number"), "{response}");
+    // 1e999 IS valid JSON; it overflows to +inf and the coordinator's
+    // finiteness validation answers with the typed error — no panic,
+    // no poisoned batch.
+    let body = "{\"features\":[1,2,1e999,4,5,6,7]}";
+    let raw = format!(
+        "POST /predict HTTP/1.1\r\nContent-Length: {}\r\n\r\n{}",
+        body.len(),
+        body
+    );
+    let response = roundtrip(addr, raw.as_bytes());
+    assert_eq!(status_of(&response), 400, "{response}");
+    assert!(body_of(&response).contains("non_finite_feature"), "{response}");
+    // Wrong arity → the coordinator's typed validation error.
+    let body = "{\"features\":[1,2]}";
+    let raw = format!(
+        "POST /predict HTTP/1.1\r\nContent-Length: {}\r\n\r\n{}",
+        body.len(),
+        body
+    );
+    let response = roundtrip(addr, raw.as_bytes());
+    assert_eq!(status_of(&response), 400, "{response}");
+    assert!(body_of(&response).contains("wrong_feature_count"), "{response}");
+    // Not-an-object and missing-key bodies.
+    for body in ["[1,2,3]", "{\"rows\":[1,2,3]}", "{\"features\":\"x\"}", "not json at all"] {
+        let raw = format!(
+            "POST /predict HTTP/1.1\r\nContent-Length: {}\r\n\r\n{}",
+            body.len(),
+            body
+        );
+        let response = roundtrip(addr, raw.as_bytes());
+        assert_eq!(status_of(&response), 400, "body {body:?}: {response}");
+    }
+}
+
+#[test]
+fn unknown_paths_and_methods_get_404_and_405() {
+    let (http, _server, _ds, _m) = serve();
+    let addr = http.local_addr();
+    let response = roundtrip(addr, b"GET /nope HTTP/1.1\r\n\r\n");
+    assert_eq!(status_of(&response), 404, "{response}");
+    let response = roundtrip(addr, b"GET /predict HTTP/1.1\r\n\r\n");
+    assert_eq!(status_of(&response), 405, "{response}");
+    let response = roundtrip(addr, b"DELETE /metrics HTTP/1.1\r\n\r\n");
+    assert_eq!(status_of(&response), 405, "{response}");
+}
+
+#[test]
+fn healthz_and_metrics_render_valid_json_with_slo_fields() {
+    let (http, _server, ds, _m) = serve();
+    let addr = http.local_addr();
+    // Traffic first, so the SLO histograms have samples.
+    for i in 0..5 {
+        let response = roundtrip(addr, &predict_request(ds.row(i)));
+        assert_eq!(status_of(&response), 200);
+    }
+    let response = roundtrip(addr, b"GET /healthz HTTP/1.1\r\n\r\n");
+    assert_eq!(status_of(&response), 200, "{response}");
+    let response = roundtrip(addr, b"GET /metrics HTTP/1.1\r\n\r\n");
+    assert_eq!(status_of(&response), 200, "{response}");
+    let json = Json::parse(body_of(&response)).expect("metrics must be valid JSON");
+    for field in
+        ["e2e_mean_us", "e2e_p50_us", "e2e_p99_us", "max_batch", "max_batch_delay_us", "flush_ttl"]
+    {
+        assert!(json.get(field).is_some(), "metrics missing {field}");
+    }
+    assert!(json.get("http_requests").and_then(Json::as_f64).unwrap() >= 6.0);
+    assert_eq!(json.get("max_batch").and_then(Json::as_usize), Some(8));
+    assert_eq!(json.get("max_batch_delay_us").and_then(Json::as_usize), Some(200));
+    // Real traffic flowed, so the e2e SLO percentiles are live.
+    assert!(json.get("e2e_p99_us").and_then(Json::as_f64).unwrap() > 0.0);
+}
+
+// ---------------------------------------------------------------------------
+// 3. Zero allocations on the steady-state request path
+
+/// The per-request hot path — parse head, scan features, render the
+/// response — must not touch the allocator once its reused buffers are
+/// warm. This drives the exact production functions over the exact
+/// production buffer types; the coordinator boundary (queue ownership
+/// clone + response channel) is the documented exception and is
+/// covered functionally by the loopback tests above.
+#[test]
+#[cfg(debug_assertions)]
+fn request_hot_path_is_zero_alloc_in_steady_state() {
+    use intreeger::coordinator::{Response, Route};
+
+    let body = "{\"features\":[1,2.5,3,4,5,6,7.25]}";
+    let raw = format!(
+        "POST /predict HTTP/1.1\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{}",
+        body.len(),
+        body
+    )
+    .into_bytes();
+    let resp = Response {
+        fixed: vec![123456, u32::MAX / 3, 7, 0, 42, 9999, 1],
+        class: 1,
+        route: Route::Scalar,
+        latency: Duration::from_micros(10),
+    };
+    let mut features: Vec<f32> = Vec::new();
+    let mut head_out: Vec<u8> = Vec::new();
+    let mut body_out: Vec<u8> = Vec::new();
+
+    let hot_path = |features: &mut Vec<f32>, head_out: &mut Vec<u8>, body_out: &mut Vec<u8>| {
+        let head = parse_head(&raw).unwrap().expect("complete request");
+        assert_eq!(head.method, "POST");
+        extract_features(&raw[head.head_len..head.total_len()], features).unwrap();
+        assert_eq!(features.len(), 7);
+        body_out.clear();
+        render_predict_body(body_out, &resp);
+        render_head(head_out, 200, "OK", body_out.len(), true);
+    };
+
+    // Warm-up: buffers grow to steady-state capacity.
+    for _ in 0..16 {
+        hot_path(&mut features, &mut head_out, &mut body_out);
+    }
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for _ in 0..100 {
+        hot_path(&mut features, &mut head_out, &mut body_out);
+    }
+    let delta = ALLOCS.load(Ordering::SeqCst) - before;
+    assert_eq!(
+        delta, 0,
+        "parse→scan→render must be allocation-free in steady state, saw {delta} allocations \
+         over 100 requests"
+    );
+}
