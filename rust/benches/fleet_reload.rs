@@ -1,0 +1,142 @@
+//! Fleet benchmarks (EXPERIMENTS.md E14): what the binary model format
+//! and the versioned registry buy at deployment time.
+//!
+//! * **Load latency** — JSON parse + engine compile vs INTB
+//!   validate-and-cast (the zero-copy view) vs INTB engine
+//!   materialization. The binary path's headline is that validation is
+//!   bounds arithmetic, not per-node deserialization.
+//! * **Hot-swap latency** — publishing a pre-started server over a live
+//!   registry, including the drain of the displaced version (the
+//!   operator-visible "reload" cost).
+//! * **Routing overhead** — an unpinned registry resolve (read lock +
+//!   `Arc` clone) per request.
+//! * **Steady-state fleet** — `FleetLoader` over a directory of N
+//!   binary artifacts: cold load, unchanged-rescan cost, tracked bytes,
+//!   and (on Linux) the process RSS with all N models resident.
+//!
+//! Tunables: `INTREEGER_BENCH_WARMUP` / `INTREEGER_BENCH_REPS` (shared
+//! bench harness) and `INTREEGER_FLEET_MODELS` (fleet size, default 32).
+
+use intreeger::coordinator::{
+    FaultPlan, FleetLoader, InferenceServer, Metrics, ModelRegistry, ServerConfig,
+};
+use intreeger::data::shuttle_like;
+use intreeger::inference::IntEngine;
+use intreeger::ir::Model;
+use intreeger::runtime::binfmt::{self, OwnedBin};
+use intreeger::trees::{ForestParams, RandomForest};
+use intreeger::util::bench::{black_box, measure_opts, report, section, BenchOpts};
+use std::sync::Arc;
+
+/// Faults pinned off so a CI-wide `INTREEGER_FAULTS` can't skew timings.
+fn quiet() -> ServerConfig {
+    ServerConfig { faults: Some(FaultPlan::none()), ..Default::default() }
+}
+
+fn main() {
+    let opts = BenchOpts::from_env();
+    let n_models: usize = std::env::var("INTREEGER_FLEET_MODELS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(32);
+
+    let ds = shuttle_like(4000, 71);
+    let model = RandomForest::train(
+        &ds,
+        &ForestParams { n_trees: 30, max_depth: 8, ..Default::default() },
+        71,
+    );
+    let json = model.to_json();
+    let engine = IntEngine::compile(&model);
+    let bin = binfmt::write_forest(engine.forest());
+    println!(
+        "model: {} trees, JSON {} bytes, INTB {} bytes",
+        model.trees.len(),
+        json.len(),
+        bin.len()
+    );
+
+    section("model load: JSON parse+compile vs INTB validate+cast");
+    let m = measure_opts(opts, 1, || {
+        let m = Model::from_json(black_box(&json)).expect("json");
+        black_box(IntEngine::compile(&m));
+    });
+    report("load/json_parse_and_compile", &m);
+    let owned = OwnedBin::from_bytes(&bin);
+    let m = measure_opts(opts, 1, || {
+        // The full zero-copy gate: header, section table, structural
+        // validation — no engine yet.
+        black_box(owned.view().expect("validate").resident_bytes());
+    });
+    report("load/intb_validate_only", &m);
+    let m = measure_opts(opts, 1, || {
+        let v = owned.view().expect("validate");
+        black_box(IntEngine::from_forest(v.to_forest().expect("materialize")));
+    });
+    report("load/intb_validate_and_engine", &m);
+
+    section("hot swap: publish + drain over a live registry");
+    let registry = Arc::new(ModelRegistry::new(Arc::new(Metrics::new())));
+    let total = opts.warmup + opts.reps.max(1) + 1;
+    let mut pool: Vec<InferenceServer> =
+        (0..total).map(|_| InferenceServer::start(&model, None, quiet())).collect();
+    let mut version = 1u64;
+    registry
+        .publish("swap", version, bin.len() as u64, pool.pop().expect("pool"))
+        .expect("seed publish");
+    let m = measure_opts(opts, 1, || {
+        version += 1;
+        registry
+            .publish("swap", version, bin.len() as u64, pool.pop().expect("pool"))
+            .expect("swap publish");
+    });
+    report("swap/publish_and_drain_old", &m);
+
+    section("routing overhead: unpinned resolve per request");
+    let m = measure_opts(opts, 10_000, || {
+        for _ in 0..10_000 {
+            black_box(registry.resolve("swap", None).expect("resolve"));
+        }
+    });
+    report("route/resolve_unpinned", &m);
+
+    section("steady-state fleet via FleetLoader");
+    let dir = std::env::temp_dir().join(format!("intreeger_fleet_bench_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("bench dir");
+    let small_ds = shuttle_like(600, 5);
+    let small = RandomForest::train(
+        &small_ds,
+        &ForestParams { n_trees: 4, max_depth: 4, ..Default::default() },
+        5,
+    );
+    let small_bin = binfmt::write_forest(IntEngine::compile(&small).forest());
+    for i in 0..n_models {
+        std::fs::write(dir.join(format!("model_{i:03}.bin")), &small_bin).expect("write artifact");
+    }
+    let loader = FleetLoader::new(
+        dir.clone(),
+        Arc::new(ModelRegistry::new(Arc::new(Metrics::new()))),
+        quiet(),
+    );
+    let t0 = std::time::Instant::now();
+    let cold = loader.reload().expect("cold load");
+    let cold_ms = t0.elapsed().as_secs_f64() * 1e3;
+    println!(
+        "cold load: {} models in {cold_ms:.1} ms ({:.2} ms/model), tracked {} bytes",
+        cold.loaded.len(),
+        cold_ms / n_models.max(1) as f64,
+        loader.registry().tracked_bytes()
+    );
+    let m = measure_opts(opts, n_models as u64, || {
+        let r = loader.reload().expect("rescan");
+        black_box(r.unchanged);
+    });
+    report("fleet/rescan_unchanged_per_model", &m);
+    if let Ok(s) = std::fs::read_to_string("/proc/self/status") {
+        if let Some(line) = s.lines().find(|l| l.starts_with("VmRSS")) {
+            println!("steady-state with {n_models} resident models: {}", line.trim());
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

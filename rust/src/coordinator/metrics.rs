@@ -57,6 +57,14 @@ pub struct Metrics {
     pub worker_restarts: AtomicU64,
     /// True once any shard degraded to the fallback execution strategy.
     pub degraded: AtomicBool,
+    /// Resident bytes across every model currently published in the
+    /// fleet registry (node arrays + SoA planes + QuickScorer tables).
+    /// Maintained by [`super::ModelRegistry`]: incremented on publish,
+    /// decremented when a retired version is dropped.
+    pub model_bytes: AtomicU64,
+    /// Number of model versions currently resident (published or still
+    /// draining after a hot swap).
+    pub model_count: AtomicU64,
     latency_us: Mutex<Histogram>,
     batch_sizes: Mutex<SizeHistogram>,
     /// Time to *execute* one flushed batch (flatten + forest walks; the
@@ -169,6 +177,10 @@ pub struct MetricsSnapshot {
     pub worker_restarts: u64,
     /// True once any shard degraded to the fallback execution strategy.
     pub degraded: bool,
+    /// Resident bytes across every model version in the fleet registry.
+    pub model_bytes: u64,
+    /// Number of model versions currently resident in the registry.
+    pub model_count: u64,
     /// Mean per-request latency (us).
     pub latency_mean_us: f64,
     /// Median per-request latency (us, bucket upper bound).
@@ -297,6 +309,8 @@ impl Metrics {
             worker_panics: self.worker_panics.load(Ordering::Relaxed),
             worker_restarts: self.worker_restarts.load(Ordering::Relaxed),
             degraded: self.degraded.load(Ordering::Relaxed),
+            model_bytes: self.model_bytes.load(Ordering::Relaxed),
+            model_count: self.model_count.load(Ordering::Relaxed),
             latency_mean_us: lat.mean(),
             latency_p50_us: lat.quantile(0.5),
             latency_p99_us: lat.quantile(0.99),
@@ -447,6 +461,25 @@ mod tests {
         assert_eq!(s.flush_ttl, 1);
         assert_eq!(s.http_requests, 2);
         assert_eq!(s.http_responses, 2);
+    }
+
+    #[test]
+    fn fleet_gauges_accumulate_and_release() {
+        // The registry publishes two versions, then drops one: the
+        // gauges must track resident bytes and version count exactly.
+        let m = Metrics::new();
+        let s = m.snapshot();
+        assert_eq!((s.model_bytes, s.model_count), (0, 0));
+        m.model_bytes.fetch_add(4096, Ordering::Relaxed);
+        m.model_count.fetch_add(1, Ordering::Relaxed);
+        m.model_bytes.fetch_add(8192, Ordering::Relaxed);
+        m.model_count.fetch_add(1, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!((s.model_bytes, s.model_count), (12288, 2));
+        m.model_bytes.fetch_sub(4096, Ordering::Relaxed);
+        m.model_count.fetch_sub(1, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!((s.model_bytes, s.model_count), (8192, 1));
     }
 
     #[test]

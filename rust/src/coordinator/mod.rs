@@ -7,6 +7,9 @@
 //!
 //! * [`router`] — a model registry mapping names to served models; each
 //!   model can be hot-swapped (retrain → re-register).
+//! * [`registry`] — the versioned fleet registry: `(model_id, version)`
+//!   keys, atomic hot-swap with drain-on-drop, pinned-version and
+//!   percentage A/B routing, and per-model memory accounting.
 //! * [`batcher`] — dynamic batching policy: requests accumulate until
 //!   `max_batch` or `max_wait` and are flushed as one batch.
 //! * [`server`] — the execution layer: a **sharded pool of worker
@@ -38,13 +41,15 @@
 pub mod batcher;
 pub mod faults;
 pub mod metrics;
+pub mod registry;
 pub mod router;
 pub mod server;
 
 pub use batcher::{BatchPolicy, Batcher, FlushReason};
 pub use faults::{FaultPlan, Faults, FAULTS_ENV};
 pub use metrics::{Metrics, MetricsSnapshot};
-pub use router::{RouteError, Router};
+pub use registry::{FleetLoader, ModelEntry, ModelInfo, ModelRegistry, RegistryError, ReloadReport};
+pub use router::{RouteError, RouteSpec, Router};
 pub use server::{
     calibrate_execution, ExecutionChoice, InferenceServer, Request, Response, Route, ServeError,
     ServeResult, ServerConfig, DEGRADE_AFTER,

@@ -1,0 +1,858 @@
+//! Versioned model fleet registry: `(model_id, version)`-keyed serving
+//! with atomic hot-swap.
+//!
+//! The [`Router`](super::Router) maps a *name* to one server; the fleet
+//! registry adds the second axis production needs — **versions**. Each
+//! model id owns a *slot*: the currently-published version plus any
+//! older versions explicitly retained for pinned lookups or A/B splits.
+//!
+//! ## Swap-drain protocol
+//!
+//! Publishing version *v+1* swaps the slot's `Arc<ModelEntry>` under a
+//! short write lock, then drops the previous entry **after** the lock
+//! is released, on the *calling* thread. Dropping the last `Arc`
+//! reference runs [`InferenceServer`]'s `Drop`: shutdown messages go to
+//! every shard, workers drain their pending batches, and the publisher
+//! joins them. In-flight requests therefore finish on the version that
+//! admitted them; requests arriving after the swap resolve to the new
+//! version; nothing is lost, and routing is never blocked on the drain
+//! (readers only contend on the brief pointer swap).
+//!
+//! ## Memory accounting
+//!
+//! Every [`ModelEntry`] increments the fleet gauges
+//! ([`Metrics::model_bytes`] / [`Metrics::model_count`]) at
+//! construction and decrements them in `Drop` — the gauges track true
+//! residency, *including* versions still draining after retirement.
+
+use super::server::{InferenceServer, Response, ServeError};
+use super::Metrics;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, PoisonError, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+/// One resident model version: identity, memory footprint, and the
+/// server answering for it. Constructing an entry charges the fleet
+/// gauges; dropping it (after the last `Arc` ref goes away, i.e. once
+/// the drain finished) releases them.
+pub struct ModelEntry {
+    id: String,
+    version: u64,
+    resident_bytes: u64,
+    server: InferenceServer,
+    metrics: Arc<Metrics>,
+}
+
+impl ModelEntry {
+    fn new(
+        id: String,
+        version: u64,
+        resident_bytes: u64,
+        server: InferenceServer,
+        metrics: Arc<Metrics>,
+    ) -> ModelEntry {
+        metrics.model_bytes.fetch_add(resident_bytes, Ordering::Relaxed);
+        metrics.model_count.fetch_add(1, Ordering::Relaxed);
+        ModelEntry { id, version, resident_bytes, server, metrics }
+    }
+
+    /// Model id this entry serves under.
+    pub fn id(&self) -> &str {
+        &self.id
+    }
+
+    /// Version of this entry.
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// Resident bytes charged to the fleet gauges for this version.
+    pub fn resident_bytes(&self) -> u64 {
+        self.resident_bytes
+    }
+
+    /// The server answering for this version.
+    pub fn server(&self) -> &InferenceServer {
+        &self.server
+    }
+}
+
+impl Drop for ModelEntry {
+    fn drop(&mut self) {
+        self.metrics.model_bytes.fetch_sub(self.resident_bytes, Ordering::Relaxed);
+        self.metrics.model_count.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Typed fleet-registry error.
+#[derive(Debug, PartialEq)]
+pub enum RegistryError {
+    /// No model is published under the given id.
+    UnknownModel(String),
+    /// The model exists but the requested version is not resident.
+    UnknownVersion {
+        /// Model id looked up.
+        id: String,
+        /// Version requested.
+        version: u64,
+    },
+    /// Publishing a version not newer than the one already serving.
+    StaleVersion {
+        /// Model id published to.
+        id: String,
+        /// Version currently serving.
+        current: u64,
+        /// Version offered.
+        offered: u64,
+    },
+    /// Retiring the currently-serving version (publish a successor, or
+    /// remove the model outright).
+    RetireCurrent {
+        /// Model id.
+        id: String,
+        /// The current version that was asked to retire.
+        version: u64,
+    },
+    /// A/B split percentage outside `0..=100`.
+    BadSplit {
+        /// Offending percentage.
+        percent: u32,
+    },
+    /// The model resolved but serving it failed (typed serving error).
+    Serve(ServeError),
+}
+
+impl std::fmt::Display for RegistryError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RegistryError::UnknownModel(id) => write!(f, "unknown model '{id}'"),
+            RegistryError::UnknownVersion { id, version } => {
+                write!(f, "model '{id}' has no resident version {version}")
+            }
+            RegistryError::StaleVersion { id, current, offered } => write!(
+                f,
+                "stale publish for '{id}': offered version {offered}, already serving {current}"
+            ),
+            RegistryError::RetireCurrent { id, version } => {
+                write!(f, "version {version} is currently serving '{id}'; cannot retire it")
+            }
+            RegistryError::BadSplit { percent } => {
+                write!(f, "split percentage {percent} outside 0..=100")
+            }
+            RegistryError::Serve(e) => write!(f, "serving failed: {e}"),
+        }
+    }
+}
+impl std::error::Error for RegistryError {}
+
+impl RegistryError {
+    /// Machine-readable kind for HTTP error bodies (mirrors
+    /// [`ServeError::kind`]).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            RegistryError::UnknownModel(_) => "unknown_model",
+            RegistryError::UnknownVersion { .. } => "unknown_version",
+            RegistryError::StaleVersion { .. } => "stale_version",
+            RegistryError::RetireCurrent { .. } => "retire_current",
+            RegistryError::BadSplit { .. } => "bad_split",
+            RegistryError::Serve(e) => e.kind(),
+        }
+    }
+}
+
+impl From<ServeError> for RegistryError {
+    fn from(e: ServeError) -> RegistryError {
+        RegistryError::Serve(e)
+    }
+}
+
+/// A/B traffic split: `percent`% of un-pinned traffic goes to
+/// `version`, the rest to the slot's current version.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct Split {
+    version: u64,
+    percent: u32,
+}
+
+/// One model id's resident versions.
+struct Slot {
+    current: Arc<ModelEntry>,
+    /// Older versions still resolvable (pinned lookups, A/B splits),
+    /// in publication order (strictly increasing versions).
+    retained: Vec<Arc<ModelEntry>>,
+    split: Option<Split>,
+}
+
+impl Slot {
+    fn find(&self, version: u64) -> Option<&Arc<ModelEntry>> {
+        if self.current.version == version {
+            return Some(&self.current);
+        }
+        self.retained.iter().find(|e| e.version == version)
+    }
+}
+
+/// Point-in-time description of one published model (for `GET /models`
+/// and the CLI).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelInfo {
+    /// Model id.
+    pub id: String,
+    /// Currently-serving version.
+    pub version: u64,
+    /// Feature arity of the serving version.
+    pub n_features: usize,
+    /// Resident bytes of the serving version.
+    pub resident_bytes: u64,
+    /// Older versions still resident (pinned / A/B), ascending.
+    pub retained: Vec<u64>,
+    /// Active A/B split, if any: `(version, percent)` of un-pinned
+    /// traffic diverted to `version`.
+    pub split: Option<(u64, u32)>,
+}
+
+/// Thread-safe fleet registry. Locks recover from poisoning exactly as
+/// the [`Router`](super::Router)'s do: every mutation leaves a valid
+/// map behind, so a panicked publisher must not take routing down.
+pub struct ModelRegistry {
+    metrics: Arc<Metrics>,
+    slots: RwLock<HashMap<String, Slot>>,
+    /// Monotone ticket dispenser for the percentage split: ticket
+    /// `t` goes to the split version iff `t % 100 < percent` —
+    /// deterministic, lock-free, exact over any 100-request window.
+    ticket: AtomicU64,
+}
+
+impl ModelRegistry {
+    /// Empty registry charging residency to `metrics`.
+    pub fn new(metrics: Arc<Metrics>) -> ModelRegistry {
+        ModelRegistry { metrics, slots: RwLock::new(HashMap::new()), ticket: AtomicU64::new(0) }
+    }
+
+    /// The metrics sink fleet gauges are charged to.
+    pub fn metrics(&self) -> Arc<Metrics> {
+        Arc::clone(&self.metrics)
+    }
+
+    fn read(&self) -> RwLockReadGuard<'_, HashMap<String, Slot>> {
+        self.slots.read().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    fn write(&self) -> RwLockWriteGuard<'_, HashMap<String, Slot>> {
+        self.slots.write().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Publish `(id, version)`: new ids are inserted, existing ids are
+    /// hot-swapped and the previous version **drains on this thread**
+    /// (see the module docs for the swap-drain protocol). Versions must
+    /// be strictly increasing per id.
+    pub fn publish(
+        &self,
+        id: &str,
+        version: u64,
+        resident_bytes: u64,
+        server: InferenceServer,
+    ) -> Result<(), RegistryError> {
+        self.publish_inner(id, version, resident_bytes, server, false)
+    }
+
+    /// Like [`Self::publish`], but the previous current version stays
+    /// resident (resolvable by pinned version and eligible as an A/B
+    /// split target) until [`Self::retire`]d.
+    pub fn publish_retaining(
+        &self,
+        id: &str,
+        version: u64,
+        resident_bytes: u64,
+        server: InferenceServer,
+    ) -> Result<(), RegistryError> {
+        self.publish_inner(id, version, resident_bytes, server, true)
+    }
+
+    fn publish_inner(
+        &self,
+        id: &str,
+        version: u64,
+        resident_bytes: u64,
+        server: InferenceServer,
+        retain: bool,
+    ) -> Result<(), RegistryError> {
+        // The outgoing entry must drop *outside* the write lock: its
+        // drain joins worker threads, and holding the lock across that
+        // would stall every concurrent resolve.
+        let mut dropped: Option<Arc<ModelEntry>> = None;
+        {
+            let mut slots = self.write();
+            if let Some(slot) = slots.get(id) {
+                if version <= slot.current.version {
+                    return Err(RegistryError::StaleVersion {
+                        id: id.to_string(),
+                        current: slot.current.version,
+                        offered: version,
+                    });
+                }
+            }
+            let entry = Arc::new(ModelEntry::new(
+                id.to_string(),
+                version,
+                resident_bytes,
+                server,
+                Arc::clone(&self.metrics),
+            ));
+            match slots.get_mut(id) {
+                None => {
+                    slots.insert(
+                        id.to_string(),
+                        Slot { current: entry, retained: Vec::new(), split: None },
+                    );
+                }
+                Some(slot) => {
+                    let old = std::mem::replace(&mut slot.current, entry);
+                    if retain {
+                        slot.retained.push(old);
+                    } else {
+                        dropped = Some(old);
+                    }
+                    // A split aimed at a version that just left
+                    // residency is meaningless: clear it.
+                    if let Some(s) = slot.split {
+                        if slot.find(s.version).is_none() {
+                            slot.split = None;
+                        }
+                    }
+                }
+            }
+        }
+        drop(dropped);
+        Ok(())
+    }
+
+    /// Retire a retained (non-current) version. The entry drains on
+    /// this thread once the last in-flight handle to it is gone.
+    pub fn retire(&self, id: &str, version: u64) -> Result<(), RegistryError> {
+        let removed;
+        {
+            let mut slots = self.write();
+            let slot = slots
+                .get_mut(id)
+                .ok_or_else(|| RegistryError::UnknownModel(id.to_string()))?;
+            if slot.current.version == version {
+                return Err(RegistryError::RetireCurrent { id: id.to_string(), version });
+            }
+            let idx = slot
+                .retained
+                .iter()
+                .position(|e| e.version == version)
+                .ok_or(RegistryError::UnknownVersion { id: id.to_string(), version })?;
+            removed = slot.retained.remove(idx);
+            if slot.split.map(|s| s.version) == Some(version) {
+                slot.split = None;
+            }
+        }
+        drop(removed);
+        Ok(())
+    }
+
+    /// Remove a model id entirely (current + retained versions). Every
+    /// entry drains on this thread. Returns true if the id existed.
+    pub fn remove(&self, id: &str) -> bool {
+        let slot = self.write().remove(id);
+        slot.is_some()
+    }
+
+    /// Divert `percent`% of un-pinned traffic for `id` to a resident
+    /// `version` (typically an older retained one, serving as control
+    /// while the new current version is canaried — or vice versa).
+    pub fn set_split(&self, id: &str, version: u64, percent: u32) -> Result<(), RegistryError> {
+        if percent > 100 {
+            return Err(RegistryError::BadSplit { percent });
+        }
+        let mut slots = self.write();
+        let slot =
+            slots.get_mut(id).ok_or_else(|| RegistryError::UnknownModel(id.to_string()))?;
+        if slot.find(version).is_none() {
+            return Err(RegistryError::UnknownVersion { id: id.to_string(), version });
+        }
+        slot.split = Some(Split { version, percent });
+        Ok(())
+    }
+
+    /// Drop `id`'s A/B split; all un-pinned traffic returns to the
+    /// current version.
+    pub fn clear_split(&self, id: &str) -> Result<(), RegistryError> {
+        let mut slots = self.write();
+        let slot =
+            slots.get_mut(id).ok_or_else(|| RegistryError::UnknownModel(id.to_string()))?;
+        slot.split = None;
+        Ok(())
+    }
+
+    /// Resolve a model handle. `version: None` follows the slot's
+    /// routing rule (A/B split if one is set, else the current
+    /// version); `Some(v)` pins the lookup to a resident version.
+    pub fn resolve(
+        &self,
+        id: &str,
+        version: Option<u64>,
+    ) -> Result<Arc<ModelEntry>, RegistryError> {
+        let slots = self.read();
+        let slot = slots.get(id).ok_or_else(|| RegistryError::UnknownModel(id.to_string()))?;
+        match version {
+            Some(v) => slot
+                .find(v)
+                .cloned()
+                .ok_or(RegistryError::UnknownVersion { id: id.to_string(), version: v }),
+            None => {
+                if let Some(s) = slot.split {
+                    let t = self.ticket.fetch_add(1, Ordering::Relaxed);
+                    if t % 100 < u64::from(s.percent) {
+                        if let Some(e) = slot.find(s.version) {
+                            return Ok(Arc::clone(e));
+                        }
+                    }
+                }
+                Ok(Arc::clone(&slot.current))
+            }
+        }
+    }
+
+    /// Blocking inference against `(id, version)` — `None` follows the
+    /// routing rule. One typed error space for lookup-then-serve.
+    pub fn infer(
+        &self,
+        id: &str,
+        version: Option<u64>,
+        features: Vec<f32>,
+    ) -> Result<Response, RegistryError> {
+        let entry = self.resolve(id, version)?;
+        Ok(entry.server().infer(features)?)
+    }
+
+    /// Published model ids, sorted.
+    pub fn ids(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.read().keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Point-in-time fleet listing, sorted by id.
+    pub fn models(&self) -> Vec<ModelInfo> {
+        let slots = self.read();
+        let mut v: Vec<ModelInfo> = slots
+            .iter()
+            .map(|(id, slot)| ModelInfo {
+                id: id.clone(),
+                version: slot.current.version,
+                n_features: slot.current.server.n_features(),
+                resident_bytes: slot.current.resident_bytes,
+                retained: slot.retained.iter().map(|e| e.version).collect(),
+                split: slot.split.map(|s| (s.version, s.percent)),
+            })
+            .collect();
+        v.sort_by(|a, b| a.id.cmp(&b.id));
+        v
+    }
+
+    /// Total resident bytes across every version the registry still
+    /// tracks (current + retained; excludes entries already handed off
+    /// and draining).
+    pub fn tracked_bytes(&self) -> u64 {
+        let slots = self.read();
+        slots
+            .values()
+            .map(|s| {
+                s.current.resident_bytes
+                    + s.retained.iter().map(|e| e.resident_bytes).sum::<u64>()
+            })
+            .sum()
+    }
+}
+
+/// Outcome of one [`FleetLoader::reload`] scan.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ReloadReport {
+    /// `(id, version)` pairs published by this scan.
+    pub loaded: Vec<(String, u64)>,
+    /// Files whose fingerprint (mtime, length) was unchanged — skipped
+    /// without re-reading the artifact.
+    pub unchanged: usize,
+    /// Files that failed to load: `(file name, error)`. A bad artifact
+    /// never unpublishes the version already serving under its id.
+    pub failed: Vec<(String, String)>,
+}
+
+/// Filesystem-backed fleet loader: scans one directory of model
+/// artifacts — `*.bin` INTB binaries ([`crate::runtime::binfmt`]) and
+/// `*.json` IR models — and publishes each file under its stem as the
+/// model id. [`Self::reload`] rescans: files whose `(mtime, length)`
+/// fingerprint changed are re-published with a bumped version (the
+/// previous version drains per the swap-drain protocol), unchanged
+/// files are skipped without touching the registry.
+pub struct FleetLoader {
+    dir: std::path::PathBuf,
+    registry: Arc<ModelRegistry>,
+    config: super::ServerConfig,
+    /// id → (fingerprint, published version).
+    seen: std::sync::Mutex<HashMap<String, ((std::time::SystemTime, u64), u64)>>,
+}
+
+impl FleetLoader {
+    /// Loader over `dir`, publishing into `registry`; every published
+    /// server is started with `config`.
+    pub fn new(
+        dir: impl Into<std::path::PathBuf>,
+        registry: Arc<ModelRegistry>,
+        config: super::ServerConfig,
+    ) -> FleetLoader {
+        FleetLoader {
+            dir: dir.into(),
+            registry,
+            config,
+            seen: std::sync::Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// The registry this loader publishes into.
+    pub fn registry(&self) -> Arc<ModelRegistry> {
+        Arc::clone(&self.registry)
+    }
+
+    /// Scan the directory and (re)publish every new or changed
+    /// artifact. IO failure on the directory itself is the only hard
+    /// error; per-file failures are collected in the report.
+    pub fn reload(&self) -> std::io::Result<ReloadReport> {
+        let mut report = ReloadReport::default();
+        let mut files: Vec<std::path::PathBuf> = std::fs::read_dir(&self.dir)?
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| {
+                p.is_file()
+                    && matches!(
+                        p.extension().and_then(|x| x.to_str()),
+                        Some("bin") | Some("json")
+                    )
+            })
+            .collect();
+        files.sort();
+        let mut seen = super::lock_unpoisoned(&self.seen);
+        for path in files {
+            let Some(stem) = path.file_stem().and_then(|s| s.to_str()).map(str::to_string)
+            else {
+                continue;
+            };
+            let fname = path
+                .file_name()
+                .and_then(|s| s.to_str())
+                .unwrap_or(&stem)
+                .to_string();
+            let fp = match std::fs::metadata(&path) {
+                Ok(md) => (
+                    md.modified().unwrap_or(std::time::SystemTime::UNIX_EPOCH),
+                    md.len(),
+                ),
+                Err(e) => {
+                    report.failed.push((fname, e.to_string()));
+                    continue;
+                }
+            };
+            if seen.get(&stem).map(|&(old_fp, _)| old_fp) == Some(fp) {
+                report.unchanged += 1;
+                continue;
+            }
+            match self.load_one(&path) {
+                Ok((server, resident_bytes)) => {
+                    let version = seen.get(&stem).map_or(1, |&(_, v)| v + 1);
+                    match self.registry.publish(&stem, version, resident_bytes, server) {
+                        Ok(()) => {
+                            seen.insert(stem.clone(), (fp, version));
+                            report.loaded.push((stem, version));
+                        }
+                        Err(e) => report.failed.push((fname, e.to_string())),
+                    }
+                }
+                Err(e) => report.failed.push((fname, e)),
+            }
+        }
+        Ok(report)
+    }
+
+    /// Load one artifact into a running server plus its resident-bytes
+    /// figure. Binary artifacts go through the zero-copy loader (via an
+    /// owned aligned copy, since `fs::read` gives no alignment
+    /// guarantee); JSON goes through the IR.
+    fn load_one(&self, path: &std::path::Path) -> Result<(InferenceServer, u64), String> {
+        let bytes = std::fs::read(path).map_err(|e| e.to_string())?;
+        if crate::runtime::binfmt::is_binary(&bytes) {
+            let owned = crate::runtime::binfmt::OwnedBin::from_bytes(&bytes);
+            let view = owned.view().map_err(|e| e.to_string())?;
+            let forest = view.to_forest().map_err(|e| {
+                format!("{e} (the coordinator's u32 engine serves RF artifacts only)")
+            })?;
+            let resident = view.resident_bytes() as u64;
+            let engine = crate::inference::IntEngine::from_forest(forest);
+            Ok((InferenceServer::start_with_engine(engine, self.config.clone()), resident))
+        } else {
+            let text = std::str::from_utf8(&bytes).map_err(|e| e.to_string())?;
+            let model = crate::ir::Model::from_json(text).map_err(|e| e.to_string())?;
+            if model.kind != crate::ir::ModelKind::RandomForest {
+                return Err(
+                    "GBT model: the coordinator's u32 engine serves RF models only".to_string()
+                );
+            }
+            let resident = crate::runtime::binfmt::write_model(&model).len() as u64;
+            Ok((InferenceServer::start(&model, None, self.config.clone()), resident))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{FaultPlan, ServerConfig};
+    use crate::data::shuttle_like;
+    use crate::ir::Model;
+    use crate::trees::{ForestParams, RandomForest};
+
+    fn model(seed: u64) -> (crate::data::Dataset, Model) {
+        let ds = shuttle_like(600, seed);
+        let m = RandomForest::train(
+            &ds,
+            &ForestParams { n_trees: 4, max_depth: 4, ..Default::default() },
+            seed,
+        );
+        (ds, m)
+    }
+
+    fn quiet() -> ServerConfig {
+        ServerConfig { faults: Some(FaultPlan::none()), ..Default::default() }
+    }
+
+    fn server_for(m: &Model) -> InferenceServer {
+        InferenceServer::start(m, None, quiet())
+    }
+
+    #[test]
+    fn publish_resolve_and_gauge_accounting() {
+        let metrics = Arc::new(Metrics::new());
+        let reg = ModelRegistry::new(Arc::clone(&metrics));
+        let (ds, m1) = model(210);
+        reg.publish("shuttle", 1, 4096, server_for(&m1)).unwrap();
+        assert_eq!(reg.ids(), vec!["shuttle".to_string()]);
+        let s = metrics.snapshot();
+        assert_eq!((s.model_bytes, s.model_count), (4096, 1));
+
+        let e = reg.resolve("shuttle", None).unwrap();
+        assert_eq!((e.id(), e.version(), e.resident_bytes()), ("shuttle", 1, 4096));
+        let r = reg.infer("shuttle", None, ds.row(0).to_vec()).unwrap();
+        assert_eq!(r.fixed.len(), ds.n_classes);
+
+        // Hot-swap to v2 without retaining: v1 drains on this thread,
+        // the gauges settle back to one resident version.
+        let (_, m2) = model(211);
+        reg.publish("shuttle", 2, 8192, server_for(&m2)).unwrap();
+        let s = metrics.snapshot();
+        assert_eq!((s.model_bytes, s.model_count), (8192, 1));
+        assert_eq!(reg.resolve("shuttle", None).unwrap().version(), 2);
+        assert_eq!(
+            reg.resolve("shuttle", Some(1)).err(),
+            Some(RegistryError::UnknownVersion { id: "shuttle".into(), version: 1 })
+        );
+
+        // Stale publishes are typed errors, and the offered server
+        // (constructed by the caller) just drains — no registry change.
+        let (_, m3) = model(212);
+        assert_eq!(
+            reg.publish("shuttle", 2, 1, server_for(&m3)).err(),
+            Some(RegistryError::StaleVersion { id: "shuttle".into(), current: 2, offered: 2 })
+        );
+        assert_eq!(metrics.snapshot().model_count, 1);
+
+        assert!(reg.remove("shuttle"));
+        assert!(!reg.remove("shuttle"));
+        let s = metrics.snapshot();
+        assert_eq!((s.model_bytes, s.model_count), (0, 0));
+        assert_eq!(
+            reg.resolve("shuttle", None).err(),
+            Some(RegistryError::UnknownModel("shuttle".into()))
+        );
+    }
+
+    #[test]
+    fn hot_swap_changes_answers_and_pinned_version_keeps_old_ones() {
+        let metrics = Arc::new(Metrics::new());
+        let reg = ModelRegistry::new(metrics);
+        let (ds, m1) = model(220);
+        let (_, m2) = model(221);
+        reg.publish("m", 1, 100, server_for(&m1)).unwrap();
+        reg.publish_retaining("m", 2, 100, server_for(&m2)).unwrap();
+
+        let o1 = crate::inference::IntEngine::compile(&m1);
+        let o2 = crate::inference::IntEngine::compile(&m2);
+        let mut differs = false;
+        for i in 0..20 {
+            let new = reg.infer("m", None, ds.row(i).to_vec()).unwrap();
+            let old = reg.infer("m", Some(1), ds.row(i).to_vec()).unwrap();
+            assert_eq!(new.fixed, o2.predict_fixed(ds.row(i)));
+            assert_eq!(old.fixed, o1.predict_fixed(ds.row(i)));
+            differs = differs || new.fixed != old.fixed;
+        }
+        assert!(differs, "models unexpectedly identical");
+
+        let info = &reg.models()[0];
+        assert_eq!(info.version, 2);
+        assert_eq!(info.retained, vec![1]);
+        assert_eq!(info.n_features, ds.n_features);
+        assert_eq!(reg.tracked_bytes(), 200);
+
+        assert_eq!(
+            reg.retire("m", 2).err(),
+            Some(RegistryError::RetireCurrent { id: "m".into(), version: 2 })
+        );
+        reg.retire("m", 1).unwrap();
+        assert_eq!(
+            reg.retire("m", 1).err(),
+            Some(RegistryError::UnknownVersion { id: "m".into(), version: 1 })
+        );
+        assert_eq!(reg.resolve("m", Some(1)).err(),
+            Some(RegistryError::UnknownVersion { id: "m".into(), version: 1 }));
+        assert_eq!(reg.resolve("m", Some(2)).unwrap().version(), 2);
+    }
+
+    #[test]
+    fn percentage_split_is_exact_over_a_window() {
+        let metrics = Arc::new(Metrics::new());
+        let reg = ModelRegistry::new(metrics);
+        let (_, m1) = model(230);
+        let (_, m2) = model(231);
+        reg.publish("m", 1, 10, server_for(&m1)).unwrap();
+        reg.publish_retaining("m", 2, 10, server_for(&m2)).unwrap();
+
+        assert_eq!(
+            reg.set_split("m", 1, 101).err(),
+            Some(RegistryError::BadSplit { percent: 101 })
+        );
+        assert_eq!(
+            reg.set_split("m", 7, 50).err(),
+            Some(RegistryError::UnknownVersion { id: "m".into(), version: 7 })
+        );
+
+        // 30% of un-pinned traffic to the retained v1: the ticket
+        // dispenser makes the split exact over any 100-resolve window.
+        reg.set_split("m", 1, 30).unwrap();
+        assert_eq!(reg.models()[0].split, Some((1, 30)));
+        let mut v1 = 0;
+        for _ in 0..200 {
+            if reg.resolve("m", None).unwrap().version() == 1 {
+                v1 += 1;
+            }
+        }
+        assert_eq!(v1, 60);
+
+        // Pinned lookups ignore the split entirely.
+        assert_eq!(reg.resolve("m", Some(2)).unwrap().version(), 2);
+
+        // Retiring the split target clears the split.
+        reg.retire("m", 1).unwrap();
+        assert_eq!(reg.models()[0].split, None);
+        for _ in 0..50 {
+            assert_eq!(reg.resolve("m", None).unwrap().version(), 2);
+        }
+
+        // clear_split on a split-less slot is a no-op; unknown ids are
+        // typed errors.
+        reg.clear_split("m").unwrap();
+        assert_eq!(
+            reg.clear_split("nope").err(),
+            Some(RegistryError::UnknownModel("nope".into()))
+        );
+    }
+
+    #[test]
+    fn serving_failures_surface_as_typed_registry_errors() {
+        let metrics = Arc::new(Metrics::new());
+        let reg = ModelRegistry::new(metrics);
+        let (_, m) = model(240);
+        reg.publish("m", 1, 1, server_for(&m)).unwrap();
+        let err = reg.infer("m", None, vec![1.0]).unwrap_err();
+        assert_eq!(
+            err,
+            RegistryError::Serve(ServeError::WrongFeatureCount { expected: m.n_features, got: 1 })
+        );
+        assert!(err.to_string().contains("wrong feature count"), "{err}");
+        assert!(RegistryError::StaleVersion { id: "x".into(), current: 3, offered: 2 }
+            .to_string()
+            .contains("stale publish"));
+    }
+
+    #[test]
+    fn fleet_loader_publishes_and_bumps_versions() {
+        let dir = std::env::temp_dir().join(format!("intreeger_fleet_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let (ds, m1) = model(260);
+        let (_, m2) = model(261);
+        // One JSON artifact, one binary artifact, one hostile file, one
+        // file the loader must ignore outright.
+        std::fs::write(dir.join("alpha.json"), m1.to_json()).unwrap();
+        std::fs::write(dir.join("beta.bin"), crate::runtime::binfmt::write_model(&m2)).unwrap();
+        std::fs::write(dir.join("broken.json"), "{not json").unwrap();
+        std::fs::write(dir.join("notes.txt"), "ignored").unwrap();
+
+        let metrics = Arc::new(Metrics::new());
+        let reg = Arc::new(ModelRegistry::new(Arc::clone(&metrics)));
+        let loader = FleetLoader::new(&dir, Arc::clone(&reg), quiet());
+        let r = loader.reload().unwrap();
+        assert_eq!(r.loaded, vec![("alpha".to_string(), 1), ("beta".to_string(), 1)]);
+        assert_eq!(r.unchanged, 0);
+        assert_eq!(r.failed.len(), 1, "{:?}", r.failed);
+        assert_eq!(r.failed[0].0, "broken.json");
+        assert_eq!(reg.ids(), vec!["alpha".to_string(), "beta".to_string()]);
+        assert_eq!(metrics.snapshot().model_count, 2);
+
+        // Answers match the source model, whichever format carried it.
+        let o2 = crate::inference::IntEngine::compile(&m2);
+        let got = reg.infer("beta", None, ds.row(0).to_vec()).unwrap();
+        assert_eq!(got.fixed, o2.predict_fixed(ds.row(0)));
+
+        // Unchanged rescan publishes nothing (the broken file keeps
+        // failing — it was never fingerprinted as loaded).
+        let r = loader.reload().unwrap();
+        assert_eq!(r.loaded, vec![]);
+        assert_eq!(r.unchanged, 2);
+        assert_eq!(r.failed.len(), 1);
+
+        // Replacing alpha.json republishes it as version 2; the
+        // length-bearing fingerprint defeats coarse mtime granularity.
+        let (_, m3) = model(262);
+        let mut j = m3.to_json();
+        j.push('\n');
+        std::fs::write(dir.join("alpha.json"), j).unwrap();
+        let r = loader.reload().unwrap();
+        assert_eq!(r.loaded, vec![("alpha".to_string(), 2)]);
+        assert_eq!(reg.resolve("alpha", None).unwrap().version(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// A publisher panicking while holding the registry lock must not
+    /// take the fleet down: poison-recovering accessors keep resolve /
+    /// publish / retire working on the always-valid map.
+    #[test]
+    fn registry_survives_a_poisoned_lock() {
+        let metrics = Arc::new(Metrics::new());
+        let reg = Arc::new(ModelRegistry::new(metrics));
+        let (ds, m) = model(250);
+        reg.publish("m", 1, 1, server_for(&m)).unwrap();
+        let r2 = Arc::clone(&reg);
+        let _ = std::thread::spawn(move || {
+            let _guard = r2.slots.write().unwrap();
+            panic!("poison the fleet lock");
+        })
+        .join();
+        assert!(reg.slots.read().is_err(), "lock must actually be poisoned");
+        reg.infer("m", None, ds.row(0).to_vec()).unwrap();
+        let (_, m2) = model(251);
+        reg.publish_retaining("m", 2, 1, server_for(&m2)).unwrap();
+        assert_eq!(reg.models()[0].retained, vec![1]);
+        reg.retire("m", 1).unwrap();
+        assert!(reg.remove("m"));
+    }
+}

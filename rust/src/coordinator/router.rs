@@ -23,6 +23,13 @@ pub struct Router {
 pub enum RouteError {
     /// No model is registered under the given name.
     UnknownModel(String),
+    /// A route spec that does not parse (`"id"` or `"id@version"`).
+    BadSpec {
+        /// The spec as received.
+        spec: String,
+        /// What was wrong with it.
+        why: String,
+    },
     /// The model exists but serving it failed (typed serving error).
     Serve(ServeError),
 }
@@ -31,11 +38,69 @@ impl std::fmt::Display for RouteError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             RouteError::UnknownModel(name) => write!(f, "unknown model '{name}'"),
+            RouteError::BadSpec { spec, why } => write!(f, "bad route spec '{spec}': {why}"),
             RouteError::Serve(e) => write!(f, "serving failed: {e}"),
         }
     }
 }
 impl std::error::Error for RouteError {}
+
+/// A parsed routing rule: `"id"` follows the fleet's routing policy for
+/// that model (A/B split if one is set, else the current version);
+/// `"id@version"` pins the request to one resident version. This is the
+/// grammar the HTTP front end accepts in `POST /predict/{spec}` and the
+/// CLI accepts in `--model`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RouteSpec {
+    /// Model id.
+    pub id: String,
+    /// Pinned version, if the spec carried one.
+    pub version: Option<u64>,
+}
+
+impl RouteSpec {
+    /// Parse `"id"` / `"id@version"`. The id may not be empty or
+    /// contain `@`; the version must be a decimal `u64`.
+    pub fn parse(spec: &str) -> Result<RouteSpec, RouteError> {
+        let bad = |why: &str| RouteError::BadSpec { spec: spec.to_string(), why: why.to_string() };
+        match spec.split_once('@') {
+            None => {
+                if spec.is_empty() {
+                    return Err(bad("empty model id"));
+                }
+                Ok(RouteSpec { id: spec.to_string(), version: None })
+            }
+            Some((id, ver)) => {
+                if id.is_empty() {
+                    return Err(bad("empty model id"));
+                }
+                if ver.contains('@') {
+                    return Err(bad("more than one '@'"));
+                }
+                let version = ver
+                    .parse::<u64>()
+                    .map_err(|_| bad("version is not a decimal integer"))?;
+                Ok(RouteSpec { id: id.to_string(), version: Some(version) })
+            }
+        }
+    }
+}
+
+impl std::str::FromStr for RouteSpec {
+    type Err = RouteError;
+    fn from_str(s: &str) -> Result<RouteSpec, RouteError> {
+        RouteSpec::parse(s)
+    }
+}
+
+impl std::fmt::Display for RouteSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.version {
+            Some(v) => write!(f, "{}@{}", self.id, v),
+            None => write!(f, "{}", self.id),
+        }
+    }
+}
 
 impl From<ServeError> for RouteError {
     fn from(e: ServeError) -> RouteError {
@@ -199,6 +264,42 @@ mod tests {
         router.register("n", &m2, None, ServerConfig::default());
         assert_eq!(router.names().len(), 2);
         assert!(router.unregister("n"));
+    }
+
+    #[test]
+    fn route_specs_parse_and_reject() {
+        assert_eq!(
+            RouteSpec::parse("shuttle").unwrap(),
+            RouteSpec { id: "shuttle".into(), version: None }
+        );
+        assert_eq!(
+            RouteSpec::parse("shuttle@3").unwrap(),
+            RouteSpec { id: "shuttle".into(), version: Some(3) }
+        );
+        assert_eq!(RouteSpec::parse("shuttle@3").unwrap().to_string(), "shuttle@3");
+        assert_eq!(RouteSpec::parse("shuttle").unwrap().to_string(), "shuttle");
+        // FromStr routes through the same parser.
+        assert_eq!("m@7".parse::<RouteSpec>().unwrap().version, Some(7));
+
+        for (spec, why_frag) in [
+            ("", "empty model id"),
+            ("@3", "empty model id"),
+            ("m@", "not a decimal"),
+            ("m@x", "not a decimal"),
+            ("m@1@2", "more than one '@'"),
+            ("m@-1", "not a decimal"),
+            ("m@18446744073709551616", "not a decimal"), // u64::MAX + 1
+        ] {
+            let err = RouteSpec::parse(spec).unwrap_err();
+            match &err {
+                RouteError::BadSpec { spec: s, why } => {
+                    assert_eq!(s, spec);
+                    assert!(why.contains(why_frag), "{spec}: {why}");
+                }
+                other => panic!("{spec}: expected BadSpec, got {other:?}"),
+            }
+            assert!(err.to_string().contains("bad route spec"), "{err}");
+        }
     }
 
     #[test]

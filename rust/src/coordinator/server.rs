@@ -312,42 +312,62 @@ impl InferenceServer {
         artifacts_dir: Option<std::path::PathBuf>,
         config: ServerConfig,
     ) -> InferenceServer {
-        let n_workers = config.n_workers.max(1);
         // One compiled forest shared by every worker (read-only walks).
+        let scalar_engine = IntEngine::compile(model);
+        // The degradation target, pre-compiled while the process is
+        // healthy: scalar backend, branchless kernel, one thread.
+        let fallback = IntEngine::compile(model);
+        let xla_seed = artifacts_dir.map(|dir| (dir, model.clone()));
+        Self::start_inner(scalar_engine, fallback, xla_seed, config)
+    }
+
+    /// Start a server around an **already-compiled** engine — the
+    /// binary-artifact path ([`crate::runtime::binfmt`]): the forest was
+    /// materialized by pointer-cast + validation, there is no IR
+    /// [`Model`] in hand, and the XLA route (which packs from IR) is
+    /// simply absent. Everything else — sharding, supervision,
+    /// degradation, calibration — behaves exactly as [`Self::start`].
+    pub fn start_with_engine(engine: IntEngine, config: ServerConfig) -> InferenceServer {
+        let fallback = IntEngine::from_forest(engine.forest().clone());
+        Self::start_inner(engine, fallback, None, config)
+    }
+
+    /// Shared tail of [`Self::start`] / [`Self::start_with_engine`]:
+    /// calibrate, arm the fallback, spawn the supervised shard pool.
+    fn start_inner(
+        mut scalar_engine: IntEngine,
+        mut fallback: IntEngine,
+        xla_seed: Option<(std::path::PathBuf, Model)>,
+        config: ServerConfig,
+    ) -> InferenceServer {
+        use crate::inference::Engine as _;
+        let n_workers = config.n_workers.max(1);
+        let n_features = scalar_engine.n_features();
+        let metrics = Arc::new(Metrics::new());
+        metrics.record_policy(config.policy.max_batch, config.policy.max_wait.as_micros() as u64);
         // The execution strategy (tile-walk kernel × SIMD backend) is
         // calibrated once, before sharing: the choice is per *model*
         // (tree shape) and per *host* (CPU features), not per worker.
-        let mut scalar_engine = IntEngine::compile(model);
-        let metrics = Arc::new(Metrics::new());
-        metrics.record_policy(config.policy.max_batch, config.policy.max_wait.as_micros() as u64);
         if config.auto_calibrate {
-            calibrate_execution(&mut scalar_engine, model.n_features, config.policy.max_batch);
+            calibrate_execution(&mut scalar_engine, n_features, config.policy.max_batch);
         }
-        {
-            // Record the execution strategy actually serving (calibrated
-            // or compile-time default) so the metrics snapshot — and
-            // anything built on it — can explain per-machine deltas.
-            use crate::inference::Engine as _;
-            metrics.record_execution(
-                scalar_engine.kernel().name(),
-                scalar_engine.backend().name(),
-                scalar_engine.threads(),
-            );
-        }
+        // Record the execution strategy actually serving (calibrated
+        // or compile-time default) so the metrics snapshot — and
+        // anything built on it — can explain per-machine deltas.
+        metrics.record_execution(
+            scalar_engine.kernel().name(),
+            scalar_engine.backend().name(),
+            scalar_engine.threads(),
+        );
         let scalar = Arc::new(scalar_engine);
-        // The degradation target, pre-compiled while the process is
-        // healthy: scalar backend, branchless kernel, one thread.
-        let fallback = {
-            use crate::inference::Engine as _;
-            let mut e = IntEngine::compile(model);
-            e.set_kernel(TraversalKernel::Branchless);
-            e.set_backend(SimdBackend::Scalar);
-            e.set_threads(1);
-            Arc::new(e)
-        };
+        // Arm the degradation target: the execution strategy with the
+        // fewest moving parts (no SIMD dispatch, no thread pool).
+        fallback.set_kernel(TraversalKernel::Branchless);
+        fallback.set_backend(SimdBackend::Scalar);
+        fallback.set_threads(1);
+        let fallback = Arc::new(fallback);
         let faults =
             Arc::new(Faults::new(config.faults.clone().unwrap_or_else(FaultPlan::from_env)));
-        let n_features = model.n_features;
         let per_worker_depth = (config.queue_depth / n_workers).max(1);
 
         let mut txs = Vec::with_capacity(n_workers);
@@ -361,12 +381,11 @@ impl InferenceServer {
             let f2 = Arc::clone(&faults);
             let config = config.clone();
             // Only shard 0 needs the model (to pack the XLA artifact).
-            let xla_seed = (w == 0).then(|| (artifacts_dir.clone(), model.clone()));
+            let seed = if w == 0 { xla_seed.clone() } else { None };
             let worker = std::thread::Builder::new()
                 .name(format!("intreeger-server-{w}"))
                 .spawn(move || {
-                    let xla: Option<PjrtEngine> = xla_seed.and_then(|(dir, model)| {
-                        let dir = dir?;
+                    let xla: Option<PjrtEngine> = seed.and_then(|(dir, model)| {
                         if !crate::runtime::artifacts_available(&dir) {
                             return None;
                         }

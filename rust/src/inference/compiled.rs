@@ -141,6 +141,16 @@ impl Node8 {
     pub fn branch_mask(self) -> u32 {
         (self.ff >> 15) as u32 ^ 1
     }
+
+    /// The SIMD gather-plane word packing `ff` (low 16 bits) and `left`
+    /// (high 16 bits) — the single definition of the `soa_ffl` encoding,
+    /// shared by the plane builder ([`soa_planes`]) and the binary-format
+    /// validator ([`crate::runtime::binfmt`]), which re-checks stored
+    /// planes against it before any kernel trusts them.
+    #[inline(always)]
+    pub fn ffl_word(self) -> u32 {
+        (self.ff as u32) | ((self.left as u32) << 16)
+    }
 }
 
 /// One forest compiled to flat arrays.
@@ -305,7 +315,7 @@ pub(crate) fn pack_tree(
 /// compilers so the plane encoding lives in exactly one place.
 pub(crate) fn soa_planes(nodes: &[Node8]) -> (Vec<u32>, Vec<u32>) {
     let tw = nodes.iter().map(|n| n.tw).collect();
-    let ffl = nodes.iter().map(|n| (n.ff as u32) | ((n.left as u32) << 16)).collect();
+    let ffl = nodes.iter().map(|n| n.ffl_word()).collect();
     (tw, ffl)
 }
 

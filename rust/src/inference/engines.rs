@@ -180,6 +180,18 @@ impl FloatEngine {
         }
     }
 
+    /// Wrap an already-compiled forest (e.g. one materialized from the
+    /// binary format, [`crate::runtime::binfmt`]) with default execution
+    /// knobs.
+    pub fn from_forest(forest: CompiledForest) -> FloatEngine {
+        FloatEngine {
+            forest,
+            kernel: TraversalKernel::default(),
+            backend: SimdBackend::resolve(),
+            threads: parallel::resolve(),
+        }
+    }
+
     /// The compiled forest backing this engine.
     pub fn forest(&self) -> &CompiledForest {
         &self.forest
@@ -284,6 +296,18 @@ impl FlIntEngine {
     pub fn compile_with(model: &Model, order: NodeOrder) -> FlIntEngine {
         FlIntEngine {
             forest: CompiledForest::compile_with(model, order),
+            kernel: TraversalKernel::default(),
+            backend: SimdBackend::resolve(),
+            threads: parallel::resolve(),
+        }
+    }
+
+    /// Wrap an already-compiled forest (e.g. one materialized from the
+    /// binary format, [`crate::runtime::binfmt`]) with default execution
+    /// knobs.
+    pub fn from_forest(forest: CompiledForest) -> FlIntEngine {
+        FlIntEngine {
+            forest,
             kernel: TraversalKernel::default(),
             backend: SimdBackend::resolve(),
             threads: parallel::resolve(),
@@ -400,6 +424,18 @@ impl IntEngine {
     pub fn compile_with(model: &Model, order: NodeOrder) -> IntEngine {
         IntEngine {
             forest: CompiledForest::compile_with(model, order),
+            kernel: TraversalKernel::default(),
+            backend: SimdBackend::resolve(),
+            threads: parallel::resolve(),
+        }
+    }
+
+    /// Wrap an already-compiled forest (e.g. one materialized from the
+    /// binary format, [`crate::runtime::binfmt`]) with default execution
+    /// knobs.
+    pub fn from_forest(forest: CompiledForest) -> IntEngine {
+        IntEngine {
+            forest,
             kernel: TraversalKernel::default(),
             backend: SimdBackend::resolve(),
             threads: parallel::resolve(),

@@ -130,6 +130,47 @@ impl GbtIntEngine {
         e
     }
 
+    /// Borrow every compiled plane (the binary serializer's view — the
+    /// writer memcpy's these slices section by section).
+    pub(crate) fn parts(&self) -> GbtPartsRef<'_> {
+        GbtPartsRef {
+            n_features: self.n_features,
+            n_classes: self.n_classes,
+            scale: self.scale,
+            tree_offsets: &self.tree_offsets,
+            tree_depths: &self.tree_depths,
+            nodes: &self.nodes,
+            soa_tw: &self.soa_tw,
+            soa_ffl: &self.soa_ffl,
+            leaf_q: &self.leaf_q,
+            base_q: &self.base_q,
+            qs: &self.qs,
+        }
+    }
+
+    /// Rebuild an engine from pre-compiled planes (the binary loader's
+    /// constructor — the caller has already validated every structural
+    /// invariant the kernels rely on). Execution knobs take the same
+    /// defaults as [`Self::compile`].
+    pub(crate) fn from_parts(p: GbtEngineParts) -> GbtIntEngine {
+        GbtIntEngine {
+            n_classes: p.n_classes,
+            n_features: p.n_features,
+            scale: p.scale,
+            tree_offsets: p.tree_offsets,
+            tree_depths: p.tree_depths,
+            nodes: p.nodes,
+            soa_tw: p.soa_tw,
+            soa_ffl: p.soa_ffl,
+            leaf_q: p.leaf_q,
+            base_q: p.base_q,
+            qs: p.qs,
+            kernel: TraversalKernel::default(),
+            backend: SimdBackend::resolve(),
+            threads: parallel::resolve(),
+        }
+    }
+
     /// The margin fixed-point scale derived at compile time.
     pub fn scale(&self) -> MarginScale {
         self.scale
@@ -278,6 +319,38 @@ impl GbtIntEngine {
             self.predict_fixed(row).iter().map(|&q| (q as f64 * inv) as f32).collect();
         softmax(&margins)
     }
+}
+
+/// Borrowed view of every compiled GBT plane, consumed by the binary
+/// serializer ([`crate::runtime::binfmt::write_gbt`]).
+pub(crate) struct GbtPartsRef<'a> {
+    pub n_features: usize,
+    pub n_classes: usize,
+    pub scale: MarginScale,
+    pub tree_offsets: &'a [u32],
+    pub tree_depths: &'a [u32],
+    pub nodes: &'a [Node8],
+    pub soa_tw: &'a [u32],
+    pub soa_ffl: &'a [u32],
+    pub leaf_q: &'a [i64],
+    pub base_q: &'a [i64],
+    pub qs: &'a QsPlan,
+}
+
+/// Owned pre-compiled GBT planes, consumed by
+/// [`GbtIntEngine::from_parts`] (the binary loader's constructor).
+pub(crate) struct GbtEngineParts {
+    pub n_features: usize,
+    pub n_classes: usize,
+    pub scale: MarginScale,
+    pub tree_offsets: Vec<u32>,
+    pub tree_depths: Vec<u32>,
+    pub nodes: Vec<Node8>,
+    pub soa_tw: Vec<u32>,
+    pub soa_ffl: Vec<u32>,
+    pub leaf_q: Vec<i64>,
+    pub base_q: Vec<i64>,
+    pub qs: QsPlan,
 }
 
 #[cfg(test)]

@@ -336,8 +336,10 @@ impl Model {
         serial::to_json(self).to_string()
     }
 
-    /// Deserialize from JSON and validate.
+    /// Deserialize from JSON and validate. Binary `INTB` artifacts are
+    /// sniffed and rejected with a pointed error ([`serial::check_not_binary`]).
     pub fn from_json(s: &str) -> Result<Model, Box<dyn std::error::Error>> {
+        serial::check_not_binary(s)?;
         let v = crate::util::Json::parse(s)?;
         let m = serial::from_json(&v)?;
         m.validate()?;

@@ -30,6 +30,20 @@ use crate::util::json::{arr, f32_arr, num, obj, s, Json};
 /// Current format tag.
 pub const FORMAT: &str = "intreeger-ir-v1";
 
+/// Reject input that is actually an `INTB` binary model artifact
+/// ([`crate::runtime::binfmt`]) handed to the JSON deserializer — the
+/// format-confusion case gets a pointed typed error instead of an
+/// opaque JSON parse failure.
+pub fn check_not_binary(s: &str) -> Result<(), SerialError> {
+    if s.as_bytes().starts_with(b"INTB") {
+        return err(
+            "input is an INTB binary model artifact, not JSON IR; \
+             load it through runtime::binfmt (e.g. `serve --bin`)",
+        );
+    }
+    Ok(())
+}
+
 /// Serialize a model to a JSON value.
 pub fn to_json(model: &Model) -> Json {
     let trees: Vec<Json> = model

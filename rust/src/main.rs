@@ -164,12 +164,13 @@ static COMMANDS: &[CommandSpec] = &[
         name: "codegen",
         synopsis: || {
             format!(
-                "--model model.json [--variant {}] [--layout {}] [--out model.c]",
+                "--model model.json [--variant {}] [--layout {}] [--out model.c] \
+                 [--emit-bin model.bin]",
                 variant_names(),
                 layout_names()
             )
         },
-        about: "generate C from a model (stdout without --out)",
+        about: "generate C from a model (stdout without --out); --emit-bin also writes the INTB binary artifact",
         run: cmd_codegen,
     },
     CommandSpec {
@@ -196,25 +197,27 @@ static COMMANDS: &[CommandSpec] = &[
         name: "serve",
         synopsis: || {
             format!(
-                "--model model.json | --pipeline DIR [--artifacts DIR] [--requests N] \
-                 [--workers W] [--calibrate] [--backend {}] [--threads N] [--dataset ...]",
+                "--model model.json | --pipeline DIR | --bin model.bin [--artifacts DIR] \
+                 [--requests N] [--workers W] [--calibrate] [--backend {}] [--threads N] \
+                 [--dataset ...]",
                 backend_names()
             )
         },
-        about: "start the batching server (from a model or a pipeline bundle) and run a demo workload",
+        about: "start the batching server (model file, pipeline bundle, or INTB binary) and run a demo workload",
         run: cmd_serve,
     },
     CommandSpec {
         name: "serve-http",
         synopsis: || {
             format!(
-                "--model model.json | --pipeline DIR [--addr HOST:PORT] [--max-batch N] \
-                 [--max-batch-delay USEC] [--workers W] [--conn-workers C] [--queue-depth Q] \
-                 [--ttl-ms T] [--duration SECS] [--calibrate] [--backend {}] [--threads N]",
+                "--model model.json | --pipeline DIR | --models DIR [--addr HOST:PORT] \
+                 [--max-batch N] [--max-batch-delay USEC] [--workers W] [--conn-workers C] \
+                 [--queue-depth Q] [--ttl-ms T] [--duration SECS] [--calibrate] \
+                 [--backend {}] [--threads N]",
                 backend_names()
             )
         },
-        about: "serve the model over HTTP/1.1 (zero-copy front end feeding the batching coordinator)",
+        about: "serve over HTTP/1.1: one model, or (--models DIR) a hot-swappable versioned fleet",
         run: cmd_serve_http,
     },
     CommandSpec {
@@ -432,8 +435,36 @@ fn cmd_codegen(args: &Args) {
                 layout.name()
             );
         }
-        None => print!("{src}"),
+        None if args.get("emit-bin").is_none() => print!("{src}"),
+        None => {} // binary-only emission: keep stdout clean
     }
+    if let Some(path) = args.get("emit-bin") {
+        let bytes = intreeger::runtime::binfmt::write_model(&model);
+        std::fs::write(path, &bytes).expect("write binary artifact");
+        eprintln!(
+            "wrote {path} ({} bytes, INTB v{}; zero-copy loadable via serve --bin / serve-http --models)",
+            bytes.len(),
+            intreeger::runtime::binfmt::VERSION
+        );
+    }
+}
+
+/// Load an INTB binary artifact into a ready integer engine plus its
+/// resident-bytes figure. All binary-format failures are typed
+/// [`BinError`](intreeger::runtime::BinError)s rendered once, here.
+fn load_bin_engine(path: &str) -> (intreeger::inference::IntEngine, u64) {
+    let bytes = std::fs::read(path)
+        .unwrap_or_else(|e| die(format!("cannot read binary model '{path}': {e}")));
+    // fs::read gives no alignment guarantee; the owned copy does.
+    let owned = intreeger::runtime::OwnedBin::from_bytes(&bytes);
+    let view = owned
+        .view()
+        .unwrap_or_else(|e| die(format!("invalid binary model '{path}': {e}")));
+    let forest = view.to_forest().unwrap_or_else(|e| {
+        die(format!("'{path}': {e} (serving needs an RF artifact: probability leaves feed the u32 engine)"))
+    });
+    let resident = view.resident_bytes() as u64;
+    (intreeger::inference::IntEngine::from_forest(forest), resident)
 }
 
 fn cmd_predict(args: &Args) {
@@ -486,8 +517,23 @@ fn cmd_serve(args: &Args) {
         auto_calibrate: args.flag("calibrate"),
         ..ServerConfig::default()
     };
-    // Boot either from a pipeline bundle (model + holdout in one dir) or
-    // from an explicit model file.
+    // Boot from an INTB binary artifact, a pipeline bundle (model +
+    // holdout in one dir), or an explicit model file.
+    if let Some(bin) = args.get("bin") {
+        let (engine, resident) = load_bin_engine(bin);
+        let server = InferenceServer::start_with_engine(engine, config);
+        let demo = load_dataset(args);
+        if demo.n_features != server.n_features() {
+            die(format!(
+                "demo rows have {} features but the binary model expects {}",
+                demo.n_features,
+                server.n_features()
+            ));
+        }
+        eprintln!("(binary artifact: {resident} resident bytes, zero-copy sections; scalar route)");
+        run_serve_demo(args, server, demo);
+        return;
+    }
     let (server, demo): (InferenceServer, Dataset) = match args.get("pipeline") {
         Some(dir) => {
             let dir = PathBuf::from(dir);
@@ -521,6 +567,12 @@ fn cmd_serve(args: &Args) {
             (InferenceServer::start(&model, artifacts, config), ds)
         }
     };
+    run_serve_demo(args, server, demo);
+}
+
+/// The `serve` demo workload + outcome report, shared by every boot
+/// path (model file, pipeline bundle, INTB binary).
+fn run_serve_demo(args: &Args, server: InferenceServer, demo: Dataset) {
     let n = args.usize_or("requests", 1000);
     let rows: Vec<Vec<f32>> = (0..n).map(|i| demo.row(i % demo.n_rows()).to_vec()).collect();
     let t0 = std::time::Instant::now();
@@ -590,6 +642,15 @@ fn cmd_serve_http(args: &Args) {
             .map(|v| Duration::from_millis(v.parse().expect("bad --ttl-ms (use milliseconds)"))),
         ..ServerConfig::default()
     };
+    let http_config = HttpConfig {
+        addr: args.get("addr").unwrap_or("127.0.0.1:8080").to_string(),
+        conn_workers: args.usize_or("conn-workers", 4),
+        ..HttpConfig::default()
+    };
+    if let Some(models_dir) = args.get("models") {
+        serve_http_fleet(args, models_dir, config, http_config);
+        return;
+    }
     let server = match args.get("pipeline") {
         Some(dir) => {
             let dir = PathBuf::from(dir);
@@ -610,11 +671,6 @@ fn cmd_serve_http(args: &Args) {
         }
     };
     let server = Arc::new(server);
-    let http_config = HttpConfig {
-        addr: args.get("addr").unwrap_or("127.0.0.1:8080").to_string(),
-        conn_workers: args.usize_or("conn-workers", 4),
-        ..HttpConfig::default()
-    };
     let http = HttpServer::start(Arc::clone(&server), http_config)
         .unwrap_or_else(|e| die(format!("cannot bind HTTP listener: {e}")));
     println!(
@@ -659,6 +715,56 @@ fn cmd_serve_http(args: &Args) {
         snap.flush_deadline,
         snap.flush_ttl,
         snap.flush_drain
+    );
+}
+
+/// `serve-http --models DIR`: boot the versioned fleet. Every `*.bin` /
+/// `*.json` artifact in DIR is published under its file stem at version
+/// 1; `POST /admin/reload` rescans the directory and hot-swaps changed
+/// files with a bumped version while in-flight requests drain on the
+/// version that admitted them.
+fn serve_http_fleet(args: &Args, models_dir: &str, config: ServerConfig, http_config: HttpConfig) {
+    use std::io::Write as _;
+    let metrics = Arc::new(coordinator::Metrics::new());
+    let registry = Arc::new(coordinator::ModelRegistry::new(metrics));
+    let loader =
+        Arc::new(coordinator::FleetLoader::new(models_dir, Arc::clone(&registry), config));
+    let report = loader
+        .reload()
+        .unwrap_or_else(|e| die(format!("cannot scan models dir '{models_dir}': {e}")));
+    for (id, v) in &report.loaded {
+        eprintln!("published {id}@{v}");
+    }
+    for (file, err) in &report.failed {
+        eprintln!("skipped {file}: {err}");
+    }
+    if registry.ids().is_empty() {
+        die(format!("no servable models in '{models_dir}' (need RF *.bin or *.json artifacts)"));
+    }
+    let http = HttpServer::start_fleet(Arc::clone(&registry), Some(loader), http_config)
+        .unwrap_or_else(|e| die(format!("cannot bind HTTP listener: {e}")));
+    println!(
+        "intreeger serve-http: fleet of {} model(s) on http://{} \
+         (POST /predict/{{model}}, GET /models, POST /admin/reload, GET /metrics)",
+        registry.ids().len(),
+        http.local_addr()
+    );
+    // Make the listening line visible to pipes immediately (CI tails
+    // the log while curling).
+    let _ = std::io::stdout().flush();
+    let duration = args.u64_or("duration", 0);
+    if duration == 0 {
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
+    std::thread::sleep(Duration::from_secs(duration));
+    drop(http); // join acceptor + connection workers before summarizing
+    let snap = registry.metrics().snapshot();
+    println!(
+        "outcomes: http {} requests / {} responses; coordinator {} ok; \
+         fleet {} resident model version(s), {} resident bytes",
+        snap.http_requests, snap.http_responses, snap.responses, snap.model_count, snap.model_bytes
     );
 }
 

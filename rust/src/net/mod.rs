@@ -17,7 +17,11 @@
 //!   non-blocking `std::net`, keep-alive and pipelining over one reused
 //!   buffer per worker, vectored response writes, and `POST /predict`
 //!   / `GET /metrics` routed into the existing
-//!   [`InferenceServer`](crate::coordinator::InferenceServer).
+//!   [`InferenceServer`](crate::coordinator::InferenceServer). In
+//!   **fleet mode** the same front end serves a versioned
+//!   [`ModelRegistry`](crate::coordinator::ModelRegistry):
+//!   `POST /predict/{id}` (or `{id}@{version}`), `GET /models`, and a
+//!   `POST /admin/reload` hot-swap path.
 //!
 //! The request hot path — parse head, scan features, render response —
 //! performs **zero heap allocations per request in steady state**: the

@@ -30,13 +30,28 @@
 //! * `POST /predict` — body `{"features": [..]}` → `200` with
 //!   `{"class", "route", "fixed", "proba"}`, or a typed error body.
 //! * `GET /metrics` — the full coordinator metrics snapshot as JSON,
-//!   including the e2e latency SLO percentiles and the batching
-//!   policy knobs.
+//!   including the e2e latency SLO percentiles, the batching policy
+//!   knobs, and (fleet mode) the resident-model gauges.
 //! * `GET /healthz` — `200 ok` liveness probe.
 //!
+//! A server started in **fleet mode** ([`HttpServer::start_fleet`])
+//! serves a [`ModelRegistry`] instead of one pinned model and adds:
+//!
+//! * `POST /predict/{spec}` — `spec` is `id` (follow the fleet routing
+//!   rule: A/B split if set, else current version) or `id@version`
+//!   (pinned). The spec parse is the one deliberate allocation on this
+//!   path beyond the admission copy (the id must outlive the request
+//!   buffer).
+//! * `GET /models` — the fleet listing: per model the serving version,
+//!   feature arity, resident bytes, retained versions, and A/B split.
+//! * `POST /admin/reload` — rescan the `--models` directory via the
+//!   attached [`FleetLoader`], hot-swapping every changed artifact;
+//!   answers the reload report.
+//!
 //! Error statuses: malformed HTTP or JSON and validation failures →
-//! `400`/`413`/`431`/`501`; shed (`QueueFull`/`ShuttingDown`) → `503`;
-//! TTL expiry (`DeadlineExceeded`) → `504`; `WorkerLost` → `500`.
+//! `400`/`413`/`431`/`501`; unknown model/version → `404`; shed
+//! (`QueueFull`/`ShuttingDown`) → `503`; TTL expiry
+//! (`DeadlineExceeded`) → `504`; `WorkerLost` → `500`.
 
 use std::io::{self, IoSlice, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -48,7 +63,10 @@ use std::time::{Duration, Instant};
 
 use super::parser::{self, HttpError};
 use super::scan;
-use crate::coordinator::{InferenceServer, MetricsSnapshot, Response, Route, ServeError};
+use crate::coordinator::{
+    FleetLoader, InferenceServer, MetricsSnapshot, ModelInfo, ModelRegistry, RegistryError,
+    ReloadReport, Response, Route, RouteError, RouteSpec, ServeError,
+};
 use crate::quant::fixed_to_prob;
 
 /// HTTP front-end configuration.
@@ -83,9 +101,51 @@ pub struct HttpServer {
     workers: Vec<JoinHandle<()>>,
 }
 
+/// What the front end serves: one pinned model, or a versioned fleet.
+enum ServeTarget {
+    /// Classic single-model mode (`POST /predict`).
+    Single(Arc<InferenceServer>),
+    /// Fleet mode: `/predict/{spec}`, `/models`, and (with a loader)
+    /// `/admin/reload`.
+    Fleet {
+        /// The versioned registry requests resolve against.
+        registry: Arc<ModelRegistry>,
+        /// Directory loader behind `POST /admin/reload` (absent when
+        /// the fleet is managed programmatically).
+        loader: Option<Arc<FleetLoader>>,
+    },
+}
+
+impl ServeTarget {
+    fn metrics(&self) -> Arc<crate::coordinator::Metrics> {
+        match self {
+            ServeTarget::Single(s) => s.metrics_handle(),
+            ServeTarget::Fleet { registry, .. } => registry.metrics(),
+        }
+    }
+}
+
 impl HttpServer {
     /// Bind `config.addr` and start serving `server` over HTTP.
     pub fn start(server: Arc<InferenceServer>, config: HttpConfig) -> io::Result<HttpServer> {
+        Self::start_target(ServeTarget::Single(server), config)
+    }
+
+    /// Bind `config.addr` and serve a model **fleet**: requests resolve
+    /// against `registry` via `POST /predict/{spec}`, the fleet is
+    /// listed at `GET /models`, and — when a `loader` is attached —
+    /// `POST /admin/reload` rescans its directory and hot-swaps changed
+    /// artifacts.
+    pub fn start_fleet(
+        registry: Arc<ModelRegistry>,
+        loader: Option<Arc<FleetLoader>>,
+        config: HttpConfig,
+    ) -> io::Result<HttpServer> {
+        Self::start_target(ServeTarget::Fleet { registry, loader }, config)
+    }
+
+    fn start_target(target: ServeTarget, config: HttpConfig) -> io::Result<HttpServer> {
+        let target = Arc::new(target);
         let listener = TcpListener::bind(&config.addr)?;
         listener.set_nonblocking(true)?;
         let local_addr = listener.local_addr()?;
@@ -99,12 +159,12 @@ impl HttpServer {
         let mut workers = Vec::with_capacity(n_workers);
         for w in 0..n_workers {
             let rx = Arc::clone(&rx);
-            let server = Arc::clone(&server);
+            let target = Arc::clone(&target);
             let cfg = config.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("http-conn-{w}"))
-                    .spawn(move || conn_worker(&rx, &server, &cfg))?,
+                    .spawn(move || conn_worker(&rx, &target, &cfg))?,
             );
         }
 
@@ -182,7 +242,7 @@ struct ConnBuffers {
     body_out: Vec<u8>,
 }
 
-fn conn_worker(rx: &Mutex<Receiver<TcpStream>>, server: &Arc<InferenceServer>, cfg: &HttpConfig) {
+fn conn_worker(rx: &Mutex<Receiver<TcpStream>>, target: &Arc<ServeTarget>, cfg: &HttpConfig) {
     let mut conn = ConnBuffers::default();
     conn.buf.resize(4096, 0);
     loop {
@@ -193,32 +253,62 @@ fn conn_worker(rx: &Mutex<Receiver<TcpStream>>, server: &Arc<InferenceServer>, c
             guard.recv()
         };
         match stream {
-            Ok(s) => handle_connection(s, &mut conn, server, cfg),
+            Ok(s) => handle_connection(s, &mut conn, target, cfg),
             Err(_) => break, // acceptor gone, queue drained
         }
     }
 }
 
 /// What a parsed head routes to, decided before any buffer mutation so
-/// the borrowed head can be dropped early.
+/// the borrowed head can be dropped early. The model-route spec is
+/// parsed (and its id copied out) right here for the same reason.
 enum Routed {
     Predict,
+    PredictModel(Result<RouteSpec, RouteError>),
+    Models,
+    Reload,
     Metrics,
     Health,
     MethodNotAllowed,
     NotFound,
 }
 
+/// Decide where a request goes from its method and path alone.
+fn route(method: &str, path: &str) -> Routed {
+    match (method, path) {
+        ("POST", "/predict") => Routed::Predict,
+        ("GET", "/metrics") => Routed::Metrics,
+        ("GET", "/healthz") => Routed::Health,
+        ("GET", "/models") => Routed::Models,
+        ("POST", "/admin/reload") => Routed::Reload,
+        (m, p) => {
+            if let Some(spec) = p.strip_prefix("/predict/") {
+                return if m == "POST" {
+                    Routed::PredictModel(RouteSpec::parse(spec))
+                } else {
+                    Routed::MethodNotAllowed
+                };
+            }
+            match p {
+                "/predict" | "/metrics" | "/healthz" | "/models" | "/admin/reload" => {
+                    Routed::MethodNotAllowed
+                }
+                _ => Routed::NotFound,
+            }
+        }
+    }
+}
+
 fn handle_connection(
     mut stream: TcpStream,
     conn: &mut ConnBuffers,
-    server: &Arc<InferenceServer>,
+    target: &Arc<ServeTarget>,
     cfg: &HttpConfig,
 ) {
     let _ = stream.set_nodelay(true);
     let _ = stream.set_nonblocking(false);
     let _ = stream.set_read_timeout(Some(cfg.keep_alive_timeout));
-    let metrics = server.metrics_handle();
+    let metrics = target.metrics();
     conn.filled = 0;
     let mut t_receipt: Option<Instant> = None;
 
@@ -228,13 +318,7 @@ fn handle_connection(
         let (routed, keep_alive, body_start, total) =
             match parser::parse_head(&conn.buf[..conn.filled]) {
                 Ok(Some(head)) if conn.filled >= head.total_len() => {
-                    let routed = match (head.method, head.path) {
-                        ("POST", "/predict") => Routed::Predict,
-                        ("GET", "/metrics") => Routed::Metrics,
-                        ("GET", "/healthz") => Routed::Health,
-                        (_, "/predict" | "/metrics" | "/healthz") => Routed::MethodNotAllowed,
-                        _ => Routed::NotFound,
-                    };
+                    let routed = route(head.method, head.path);
                     (routed, head.keep_alive, head.head_len, head.total_len())
                 }
                 Ok(_) => {
@@ -271,40 +355,88 @@ fn handle_connection(
         metrics.http_requests.fetch_add(1, Ordering::Relaxed);
         conn.body_out.clear();
         let (code, reason) = match routed {
-            Routed::Predict => {
-                match scan::extract_features(&conn.buf[body_start..total], &mut conn.features) {
+            Routed::Predict => match &**target {
+                ServeTarget::Single(server) => predict_on(server, conn, body_start, total),
+                ServeTarget::Fleet { .. } => {
+                    render_error_body(
+                        &mut conn.body_out,
+                        "not_found",
+                        &"this server hosts a model fleet; use POST /predict/{model}",
+                    );
+                    (404, "Not Found")
+                }
+            },
+            Routed::PredictModel(spec) => match &**target {
+                ServeTarget::Single(_) => {
+                    render_error_body(
+                        &mut conn.body_out,
+                        "not_found",
+                        &"this server pins one model; use POST /predict",
+                    );
+                    (404, "Not Found")
+                }
+                ServeTarget::Fleet { registry, .. } => match spec {
                     Err(e) => {
-                        render_error_body(&mut conn.body_out, e.kind(), &e);
+                        render_error_body(&mut conn.body_out, "bad_route_spec", &e);
                         (400, "Bad Request")
                     }
-                    // The one deliberate copy: the coordinator queue
-                    // must own its row, so the arena is cloned into the
-                    // submitted Vec (see module docs).
-                    Ok(()) => match server.submit(conn.features.clone()) {
-                        Ok(rx) => match rx.recv() {
-                            Ok(Ok(resp)) => {
-                                render_predict_body(&mut conn.body_out, &resp);
-                                (200, "OK")
-                            }
-                            Ok(Err(e)) => {
-                                render_error_body(&mut conn.body_out, e.kind(), &e);
-                                status_for(&e)
-                            }
-                            Err(_) => {
-                                let e = ServeError::WorkerLost;
-                                render_error_body(&mut conn.body_out, e.kind(), &e);
-                                status_for(&e)
-                            }
-                        },
+                    Ok(spec) => match registry.resolve(&spec.id, spec.version) {
+                        Ok(entry) => predict_on(entry.server(), conn, body_start, total),
                         Err(e) => {
                             render_error_body(&mut conn.body_out, e.kind(), &e);
-                            status_for(&e)
+                            status_for_registry(&e)
                         }
                     },
+                },
+            },
+            Routed::Models => match &**target {
+                ServeTarget::Fleet { registry, .. } => {
+                    render_models_body(
+                        &mut conn.body_out,
+                        &registry.models(),
+                        registry.tracked_bytes(),
+                    );
+                    (200, "OK")
                 }
-            }
+                ServeTarget::Single(_) => {
+                    render_error_body(
+                        &mut conn.body_out,
+                        "not_found",
+                        &"this server pins one model; no fleet listing",
+                    );
+                    (404, "Not Found")
+                }
+            },
+            Routed::Reload => match &**target {
+                ServeTarget::Fleet { loader: Some(loader), .. } => match loader.reload() {
+                    Ok(report) => {
+                        render_reload_body(&mut conn.body_out, &report);
+                        (200, "OK")
+                    }
+                    Err(e) => {
+                        render_error_body(&mut conn.body_out, "reload_failed", &e);
+                        (500, "Internal Server Error")
+                    }
+                },
+                ServeTarget::Fleet { loader: None, .. } => {
+                    render_error_body(
+                        &mut conn.body_out,
+                        "not_implemented",
+                        &"no artifact directory attached; the fleet is managed programmatically",
+                    );
+                    (501, "Not Implemented")
+                }
+                ServeTarget::Single(_) => {
+                    render_error_body(
+                        &mut conn.body_out,
+                        "not_found",
+                        &"this server pins one model; nothing to reload",
+                    );
+                    (404, "Not Found")
+                }
+            },
             Routed::Metrics => {
-                render_metrics_body(&mut conn.body_out, &server.metrics());
+                render_metrics_body(&mut conn.body_out, &metrics.snapshot());
                 (200, "OK")
             }
             Routed::Health => {
@@ -338,6 +470,48 @@ fn handle_connection(
         if !keep_alive {
             return;
         }
+    }
+}
+
+/// One framed predict body against one server: scan the features out
+/// of the request buffer, submit, render the success or typed-error
+/// body, and return the HTTP status. Shared by the single-model and
+/// fleet routes so both take the identical hot path.
+fn predict_on(
+    server: &InferenceServer,
+    conn: &mut ConnBuffers,
+    body_start: usize,
+    total: usize,
+) -> (u16, &'static str) {
+    match scan::extract_features(&conn.buf[body_start..total], &mut conn.features) {
+        Err(e) => {
+            render_error_body(&mut conn.body_out, e.kind(), &e);
+            (400, "Bad Request")
+        }
+        // The one deliberate copy: the coordinator queue must own its
+        // row, so the arena is cloned into the submitted Vec (see
+        // module docs).
+        Ok(()) => match server.submit(conn.features.clone()) {
+            Ok(rx) => match rx.recv() {
+                Ok(Ok(resp)) => {
+                    render_predict_body(&mut conn.body_out, &resp);
+                    (200, "OK")
+                }
+                Ok(Err(e)) => {
+                    render_error_body(&mut conn.body_out, e.kind(), &e);
+                    status_for(&e)
+                }
+                Err(_) => {
+                    let e = ServeError::WorkerLost;
+                    render_error_body(&mut conn.body_out, e.kind(), &e);
+                    status_for(&e)
+                }
+            },
+            Err(e) => {
+                render_error_body(&mut conn.body_out, e.kind(), &e);
+                status_for(&e)
+            }
+        },
     }
 }
 
@@ -382,6 +556,64 @@ pub fn status_for(e: &ServeError) -> (u16, &'static str) {
         ServeError::DeadlineExceeded => (504, "Gateway Timeout"),
         ServeError::WorkerLost => (500, "Internal Server Error"),
     }
+}
+
+/// HTTP status answering a fleet [`RegistryError`].
+pub fn status_for_registry(e: &RegistryError) -> (u16, &'static str) {
+    match e {
+        RegistryError::UnknownModel(_) | RegistryError::UnknownVersion { .. } => {
+            (404, "Not Found")
+        }
+        RegistryError::StaleVersion { .. }
+        | RegistryError::RetireCurrent { .. }
+        | RegistryError::BadSplit { .. } => (409, "Conflict"),
+        RegistryError::Serve(e) => status_for(e),
+    }
+}
+
+/// Render the `GET /models` body into `out` (appended): the fleet
+/// listing plus the total tracked bytes.
+pub fn render_models_body(out: &mut Vec<u8>, models: &[ModelInfo], tracked_bytes: u64) {
+    let _ = write!(out, "{{\"models\":[");
+    for (i, m) in models.iter().enumerate() {
+        let sep = if i == 0 { "" } else { "," };
+        let _ = write!(
+            out,
+            "{sep}{{\"id\":\"{}\",\"version\":{},\"n_features\":{},\"resident_bytes\":{},\"retained\":[",
+            m.id, m.version, m.n_features, m.resident_bytes
+        );
+        for (j, v) in m.retained.iter().enumerate() {
+            let sep = if j == 0 { "" } else { "," };
+            let _ = write!(out, "{sep}{v}");
+        }
+        match m.split {
+            Some((version, percent)) => {
+                let _ = write!(out, "],\"split\":{{\"version\":{version},\"percent\":{percent}}}}}");
+            }
+            None => {
+                let _ = write!(out, "],\"split\":null}}");
+            }
+        }
+    }
+    let _ = write!(out, "],\"tracked_bytes\":{tracked_bytes}}}");
+}
+
+/// Render the `POST /admin/reload` body into `out` (appended).
+pub fn render_reload_body(out: &mut Vec<u8>, report: &ReloadReport) {
+    let _ = write!(out, "{{\"loaded\":[");
+    for (i, (id, version)) in report.loaded.iter().enumerate() {
+        let sep = if i == 0 { "" } else { "," };
+        let _ = write!(out, "{sep}{{\"id\":\"{id}\",\"version\":{version}}}");
+    }
+    let _ = write!(out, "],\"unchanged\":{},\"failed\":[", report.unchanged);
+    for (i, (file, err)) in report.failed.iter().enumerate() {
+        let sep = if i == 0 { "" } else { "," };
+        // Error strings may carry quotes; escape the two JSON-breaking
+        // characters rather than pulling in a full escaper.
+        let err = err.replace('\\', "\\\\").replace('"', "\\\"");
+        let _ = write!(out, "{sep}{{\"file\":\"{file}\",\"error\":\"{err}\"}}");
+    }
+    let _ = write!(out, "]}}");
 }
 
 /// Render a response head into `out` (cleared first). Public so the
@@ -443,6 +675,11 @@ pub fn render_metrics_body(out: &mut Vec<u8>, m: &MetricsSnapshot) {
         out,
         ",\"shed\":{},\"expired\":{},\"rejected\":{},\"lost\":{},\"worker_panics\":{},\"worker_restarts\":{},\"degraded\":{}",
         m.shed, m.expired, m.rejected, m.lost, m.worker_panics, m.worker_restarts, m.degraded
+    );
+    let _ = write!(
+        out,
+        ",\"model_bytes\":{},\"model_count\":{}",
+        m.model_bytes, m.model_count
     );
     let _ = write!(
         out,
@@ -591,8 +828,105 @@ mod tests {
         render_metrics_body(&mut out, &m);
         let s = std::str::from_utf8(&out).unwrap();
         assert!(s.starts_with('{') && s.ends_with('}'), "{s}");
-        for field in ["e2e_p50_us", "e2e_p99_us", "max_batch_delay_us", "flush_ttl", "http_requests"] {
+        for field in [
+            "e2e_p50_us",
+            "e2e_p99_us",
+            "max_batch_delay_us",
+            "flush_ttl",
+            "http_requests",
+            "model_bytes",
+            "model_count",
+        ] {
             assert!(s.contains(&format!("\"{field}\"")), "missing {field} in {s}");
         }
+    }
+
+    #[test]
+    fn fleet_routes_decided_from_method_and_path() {
+        assert!(matches!(route("POST", "/predict"), Routed::Predict));
+        assert!(matches!(route("GET", "/models"), Routed::Models));
+        assert!(matches!(route("POST", "/admin/reload"), Routed::Reload));
+        assert!(matches!(route("GET", "/metrics"), Routed::Metrics));
+        assert!(matches!(route("POST", "/predict/shuttle"), Routed::PredictModel(Ok(_))));
+        match route("POST", "/predict/shuttle@3") {
+            Routed::PredictModel(Ok(spec)) => {
+                assert_eq!(spec.id, "shuttle");
+                assert_eq!(spec.version, Some(3));
+            }
+            _ => panic!("expected a parsed model route"),
+        }
+        assert!(matches!(route("POST", "/predict/bad@spec"), Routed::PredictModel(Err(_))));
+        assert!(matches!(route("GET", "/predict/shuttle"), Routed::MethodNotAllowed));
+        assert!(matches!(route("DELETE", "/models"), Routed::MethodNotAllowed));
+        assert!(matches!(route("GET", "/nope"), Routed::NotFound));
+    }
+
+    #[test]
+    fn models_body_renders_fleet_listing() {
+        let models = vec![
+            ModelInfo {
+                id: "alpha".into(),
+                version: 3,
+                n_features: 9,
+                resident_bytes: 4096,
+                retained: vec![1, 2],
+                split: Some((2, 30)),
+            },
+            ModelInfo {
+                id: "beta".into(),
+                version: 1,
+                n_features: 4,
+                resident_bytes: 512,
+                retained: vec![],
+                split: None,
+            },
+        ];
+        let mut out = Vec::new();
+        render_models_body(&mut out, &models, 4608);
+        let s = std::str::from_utf8(&out).unwrap();
+        assert_eq!(
+            s,
+            "{\"models\":[\
+             {\"id\":\"alpha\",\"version\":3,\"n_features\":9,\"resident_bytes\":4096,\
+             \"retained\":[1,2],\"split\":{\"version\":2,\"percent\":30}},\
+             {\"id\":\"beta\",\"version\":1,\"n_features\":4,\"resident_bytes\":512,\
+             \"retained\":[],\"split\":null}],\"tracked_bytes\":4608}"
+        );
+    }
+
+    #[test]
+    fn reload_body_renders_report_and_escapes_errors() {
+        let report = ReloadReport {
+            loaded: vec![("alpha".into(), 2)],
+            unchanged: 3,
+            failed: vec![("bad.bin".into(), "said \"no\"".into())],
+        };
+        let mut out = Vec::new();
+        render_reload_body(&mut out, &report);
+        let s = std::str::from_utf8(&out).unwrap();
+        assert_eq!(
+            s,
+            "{\"loaded\":[{\"id\":\"alpha\",\"version\":2}],\"unchanged\":3,\
+             \"failed\":[{\"file\":\"bad.bin\",\"error\":\"said \\\"no\\\"\"}]}"
+        );
+    }
+
+    #[test]
+    fn registry_errors_map_to_statuses() {
+        assert_eq!(status_for_registry(&RegistryError::UnknownModel("x".into())).0, 404);
+        assert_eq!(
+            status_for_registry(&RegistryError::UnknownVersion { id: "x".into(), version: 2 }).0,
+            404
+        );
+        assert_eq!(
+            status_for_registry(&RegistryError::StaleVersion {
+                id: "x".into(),
+                current: 2,
+                offered: 2
+            })
+            .0,
+            409
+        );
+        assert_eq!(status_for_registry(&RegistryError::Serve(ServeError::QueueFull)).0, 503);
     }
 }

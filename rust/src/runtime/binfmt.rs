@@ -1,0 +1,1347 @@
+//! `INTB` — the zero-copy binary model format.
+//!
+//! A compiled forest is a handful of flat arrays (`Node8` packs, SoA
+//! gather planes, leaf tables, QuickScorer condition streams). JSON
+//! deserialization rebuilds all of them node by node on every boot; for
+//! a fleet of hundreds of resident models that is the dominant load
+//! cost. This module instead freezes the *compiled* layout on disk:
+//!
+//! ```text
+//! offset  size  field
+//! ------  ----  -----------------------------------------------------
+//!      0     4  magic "INTB"
+//!      4     4  format version (1)
+//!      8     4  endianness tag 0x0A0B0C0D (reads back byte-swapped
+//!               when the file crosses byte orders)
+//!     12     4  model kind: 0 = random forest, 1 = GBT
+//!     16     4  n_features          20     4  n_classes
+//!     24     4  n_trees             28     4  n_nodes
+//!     32     4  n_leaves (payload rows of the leaf tables)
+//!     36     4  node order: 0 = depth, 1 = breadth
+//!     40     4  GBT margin scale shift (0 for RF)
+//!     44     4  QS blocks           48     4  QS fallback trees
+//!     52     4  QS conditions       56     4  QS leaf payload slots
+//!     60     4  section count       64     8  total file length
+//!     72    56  reserved (must be zero)
+//!    128   16n  section table: (offset u64, length u64) per section
+//!      …        sections, each 64-byte aligned, in fixed kind order
+//! ```
+//!
+//! Loading ([`load`]) is bounds-check + validate + pointer-cast: every
+//! section becomes a borrowed `&[T]` straight into the source bytes, no
+//! per-node work. Because the traversal kernels index these arrays with
+//! unchecked loads (their safety contract is the compile-time shape
+//! invariants), the validator re-establishes **every** invariant the
+//! walkers rely on before a cast slice escapes: section
+//! alignment/bounds/non-overlap, tree-offset monotonicity, child
+//! adjacency (`right = left + 1`, children strictly after their parent —
+//! so traversal is acyclic), leaf self-loops and payload bounds, exact
+//! per-tree depths (the branchless kernel's fixed trip count), SoA
+//! planes mirroring the packed nodes, and the QuickScorer mask
+//! invariant that keeps every final bitvector nonzero (so
+//! `trailing_zeros` always lands inside the tree's payload range).
+//! A hostile file is rejected with a typed [`BinError`]; loading never
+//! panics and never reads past the buffer.
+//!
+//! Alignment: sections start on 64-byte boundaries, so any element type
+//! up to 8-byte alignment casts cleanly **provided the base pointer is
+//! 8-byte aligned**. [`load`] refuses unaligned bases
+//! ([`BinError::Unaligned`]); [`OwnedBin`] copies arbitrary bytes into a
+//! `u64`-backed buffer to guarantee the base alignment — the fallback
+//! for sources like `Vec<u8>` file reads that promise none.
+//!
+//! Byte order is native-with-a-tag: files are written in the host's
+//! byte order and record [`ENDIAN_TAG`]; a file produced on the
+//! opposite byte order fails with [`BinError::BadEndianness`] instead
+//! of silently mis-reading — coherent with the pointer-cast read model
+//! (no per-word swabbing on load).
+
+use crate::flint::ordered_u32;
+use crate::inference::compiled::{
+    CompiledForest, Node8, NodeOrder, LEAF, LEAF_BIT, MAX_FEATURES, MAX_TREE_NODES,
+};
+use crate::inference::gbt_int::GbtEngineParts;
+use crate::inference::quickscorer::{QsBlock, QsPlan, QS_MAX_LEAVES};
+use crate::inference::GbtIntEngine;
+use crate::ir::{Model, ModelKind, MAX_CLASSES, MAX_TREES};
+use crate::quant::MarginScale;
+
+/// File magic, first four bytes of every artifact.
+pub const MAGIC: [u8; 4] = *b"INTB";
+/// Current format version.
+pub const VERSION: u32 = 1;
+/// Byte-order tag written natively; reads back swapped across byte
+/// orders.
+pub const ENDIAN_TAG: u32 = 0x0A0B_0C0D;
+/// Fixed header length in bytes; the section table starts here.
+pub const HEADER_LEN: usize = 128;
+/// Alignment of every section start.
+pub const SECTION_ALIGN: usize = 64;
+
+/// Largest GBT margin shift a file may declare (mirrors the
+/// [`crate::quant::margin_scale`] clamp).
+const MAX_SCALE_SHIFT: u32 = 40;
+/// Section count of a random-forest artifact (14 model + 11 QS).
+const RF_SECTIONS: usize = 25;
+/// Section count of a GBT artifact (7 model + 11 QS).
+const GBT_SECTIONS: usize = 18;
+
+/// True when `bytes` begin with the `INTB` magic — the cheap format
+/// sniff the JSON loader uses to give a typed format-confusion error
+/// instead of a parse failure.
+pub fn is_binary(bytes: &[u8]) -> bool {
+    bytes.len() >= 4 && bytes[..4] == MAGIC
+}
+
+// ---------------------------------------------------------------------------
+// Errors
+
+/// Typed rejection of a binary artifact. Every invalid input maps to
+/// one of these — loading never panics and never reads past the buffer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum BinError {
+    /// Fewer bytes than the fixed header + section table need.
+    TooShort {
+        /// Bytes required to go on parsing.
+        need: usize,
+        /// Bytes actually provided.
+        got: usize,
+    },
+    /// First four bytes are not `INTB` (e.g. a JSON model was handed to
+    /// the binary loader).
+    BadMagic([u8; 4]),
+    /// Unsupported format version.
+    BadVersion(u32),
+    /// Endianness tag mismatch — the file was written on a host with
+    /// the opposite byte order.
+    BadEndianness(u32),
+    /// Unknown model-kind code.
+    BadKind(u32),
+    /// The base pointer is not 8-byte aligned; copy through
+    /// [`OwnedBin`] instead.
+    Unaligned,
+    /// A fixed header field is out of range or inconsistent.
+    BadHeader(String),
+    /// A section-table entry or section length failed validation.
+    BadSection {
+        /// Section name (fixed per kind).
+        name: &'static str,
+        /// What was wrong.
+        why: String,
+    },
+    /// Section contents violate a structural invariant the traversal
+    /// kernels rely on.
+    Malformed(String),
+    /// The artifact is valid but of the other model kind.
+    KindMismatch {
+        /// Kind the caller asked to materialize.
+        expected: &'static str,
+        /// Kind the artifact holds.
+        got: &'static str,
+    },
+}
+
+impl std::fmt::Display for BinError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BinError::TooShort { need, got } => {
+                write!(f, "binary model truncated: need at least {need} bytes, got {got}")
+            }
+            BinError::BadMagic(m) => write!(
+                f,
+                "not an INTB binary model (magic {m:02x?}); JSON models load via the IR deserializer"
+            ),
+            BinError::BadVersion(v) => {
+                write!(f, "unsupported INTB format version {v} (this build reads version {VERSION})")
+            }
+            BinError::BadEndianness(tag) => write!(
+                f,
+                "endianness tag {tag:#010x} does not match this host (expected {ENDIAN_TAG:#010x}); the file was written on an opposite-byte-order machine"
+            ),
+            BinError::BadKind(k) => write!(f, "unknown model kind code {k}"),
+            BinError::Unaligned => {
+                write!(f, "buffer base is not 8-byte aligned; load through OwnedBin::from_bytes")
+            }
+            BinError::BadHeader(why) => write!(f, "invalid INTB header: {why}"),
+            BinError::BadSection { name, why } => write!(f, "invalid section '{name}': {why}"),
+            BinError::Malformed(why) => write!(f, "malformed model structure: {why}"),
+            BinError::KindMismatch { expected, got } => {
+                write!(f, "artifact holds a {got} model, not the requested {expected}")
+            }
+        }
+    }
+}
+impl std::error::Error for BinError {}
+
+// ---------------------------------------------------------------------------
+// Raw byte reinterpretation
+
+/// Marker for element types that reinterpret safely to/from raw bytes:
+/// fixed layout, no padding, every bit pattern valid, alignment ≤ 8
+/// (the guarantee [`load`] enforces on section starts).
+unsafe trait Pod: Copy {}
+unsafe impl Pod for u16 {}
+unsafe impl Pod for u32 {}
+unsafe impl Pod for u64 {}
+unsafe impl Pod for i64 {}
+unsafe impl Pod for f32 {}
+// Node8 is #[repr(C)] { u32, u16, u16 }: size 8 equals the field sum,
+// so there is no padding, and every bit pattern is a *representable*
+// node — the canonical encoding is what the validator establishes.
+unsafe impl Pod for Node8 {}
+
+/// Byte view of a Pod slice (the write path's serializer: sections are
+/// memcpy'd, never re-encoded element by element).
+fn bytes_of<T: Pod>(s: &[T]) -> &[u8] {
+    // SAFETY: Pod guarantees no padding and no invalid byte patterns,
+    // and the length is exactly the slice's byte span.
+    unsafe { std::slice::from_raw_parts(s.as_ptr().cast::<u8>(), std::mem::size_of_val(s)) }
+}
+
+// ---------------------------------------------------------------------------
+// Writing
+
+/// Append-only section writer: header and table are reserved up front,
+/// sections land 64-byte aligned, then the table and total length are
+/// backpatched. Deterministic — identical inputs produce identical
+/// bytes (the round-trip byte-stability tests pin this).
+struct Writer {
+    buf: Vec<u8>,
+    sections: Vec<(u64, u64)>,
+    n_sections: usize,
+}
+
+impl Writer {
+    fn new(header: [u8; HEADER_LEN], n_sections: usize) -> Writer {
+        let mut buf = header.to_vec();
+        buf.resize(HEADER_LEN + n_sections * 16, 0);
+        Writer { buf, sections: Vec::with_capacity(n_sections), n_sections }
+    }
+
+    fn section<T: Pod>(&mut self, data: &[T]) {
+        while self.buf.len() % SECTION_ALIGN != 0 {
+            self.buf.push(0);
+        }
+        let off = self.buf.len() as u64;
+        let b = bytes_of(data);
+        self.buf.extend_from_slice(b);
+        self.sections.push((off, b.len() as u64));
+    }
+
+    fn finish(mut self) -> Vec<u8> {
+        assert_eq!(self.sections.len(), self.n_sections, "writer section count drifted");
+        for (i, &(off, len)) in self.sections.iter().enumerate() {
+            let at = HEADER_LEN + i * 16;
+            self.buf[at..at + 8].copy_from_slice(&off.to_ne_bytes());
+            self.buf[at + 8..at + 16].copy_from_slice(&len.to_ne_bytes());
+        }
+        let total = self.buf.len() as u64;
+        self.buf[64..72].copy_from_slice(&total.to_ne_bytes());
+        self.buf
+    }
+}
+
+/// Fixed header fields (file length is backpatched by the writer).
+struct Header {
+    kind: u32,
+    n_features: u32,
+    n_classes: u32,
+    n_trees: u32,
+    n_nodes: u32,
+    n_leaves: u32,
+    order: u32,
+    scale_shift: u32,
+    qs_blocks: u32,
+    qs_fallback: u32,
+    qs_conds: u32,
+    qs_payloads: u32,
+    n_sections: u32,
+}
+
+fn build_header(h: &Header) -> [u8; HEADER_LEN] {
+    let mut out = [0u8; HEADER_LEN];
+    out[0..4].copy_from_slice(&MAGIC);
+    let words = [
+        VERSION,
+        ENDIAN_TAG,
+        h.kind,
+        h.n_features,
+        h.n_classes,
+        h.n_trees,
+        h.n_nodes,
+        h.n_leaves,
+        h.order,
+        h.scale_shift,
+        h.qs_blocks,
+        h.qs_fallback,
+        h.qs_conds,
+        h.qs_payloads,
+        h.n_sections,
+    ];
+    for (i, w) in words.iter().enumerate() {
+        let at = 4 + i * 4;
+        out[at..at + 4].copy_from_slice(&w.to_ne_bytes());
+    }
+    out
+}
+
+/// Per-plan QS totals: (trees in blocks, conditions, payload slots).
+fn qs_totals(qs: &QsPlan) -> (usize, usize, usize) {
+    let trees = qs.blocks.iter().map(|b| b.n_trees).sum();
+    let conds = qs.blocks.iter().map(|b| b.masks.len()).sum();
+    let payloads = qs.blocks.iter().map(|b| b.leaf_payloads.len()).sum();
+    (trees, conds, payloads)
+}
+
+/// Append the 11 QuickScorer sections (shared by both kinds).
+fn write_qs(w: &mut Writer, qs: &QsPlan) {
+    let mut meta: Vec<u32> = Vec::with_capacity(qs.blocks.len() * 3);
+    for b in &qs.blocks {
+        meta.push(b.n_trees as u32);
+        meta.push(b.masks.len() as u32);
+        meta.push(b.leaf_payloads.len() as u32);
+    }
+    let cat_u32 = |f: fn(&QsBlock) -> &Vec<u32>| -> Vec<u32> {
+        qs.blocks.iter().flat_map(|b| f(b).iter().copied()).collect()
+    };
+    let tree_ids = cat_u32(|b| &b.tree_ids);
+    let init: Vec<u64> = qs.blocks.iter().flat_map(|b| b.init.iter().copied()).collect();
+    let feature_offsets = cat_u32(|b| &b.feature_offsets);
+    let thresh_ord = cat_u32(|b| &b.thresh_ord);
+    let thresh_f32 = cat_u32(|b| &b.thresh_f32);
+    let tree_of: Vec<u16> = qs.blocks.iter().flat_map(|b| b.tree_of.iter().copied()).collect();
+    let masks: Vec<u64> = qs.blocks.iter().flat_map(|b| b.masks.iter().copied()).collect();
+    let leaf_offsets = cat_u32(|b| &b.leaf_offsets);
+    let payloads = cat_u32(|b| &b.leaf_payloads);
+    w.section(&meta);
+    w.section(&tree_ids);
+    w.section(&init);
+    w.section(&feature_offsets);
+    w.section(&thresh_ord);
+    w.section(&thresh_f32);
+    w.section(&tree_of);
+    w.section(&masks);
+    w.section(&leaf_offsets);
+    w.section(&payloads);
+    w.section(&qs.fallback);
+}
+
+/// Serialize a compiled random forest. Deterministic; the inverse of
+/// [`BinView::to_forest`].
+pub fn write_forest(f: &CompiledForest) -> Vec<u8> {
+    let n_leaves = f.leaf_f32.len() / f.n_classes;
+    let (_, qs_conds, qs_payloads) = qs_totals(&f.qs);
+    let header = build_header(&Header {
+        kind: 0,
+        n_features: f.n_features as u32,
+        n_classes: f.n_classes as u32,
+        n_trees: f.n_trees as u32,
+        n_nodes: f.n_nodes() as u32,
+        n_leaves: n_leaves as u32,
+        order: match f.order {
+            NodeOrder::Depth => 0,
+            NodeOrder::Breadth => 1,
+        },
+        scale_shift: 0,
+        qs_blocks: f.qs.blocks.len() as u32,
+        qs_fallback: f.qs.fallback.len() as u32,
+        qs_conds: qs_conds as u32,
+        qs_payloads: qs_payloads as u32,
+        n_sections: RF_SECTIONS as u32,
+    });
+    let mut w = Writer::new(header, RF_SECTIONS);
+    w.section(&f.tree_offsets);
+    w.section(&f.tree_depths);
+    w.section(&f.feature);
+    w.section(&f.thresh_f32);
+    w.section(&f.thresh_ord);
+    w.section(&f.left);
+    w.section(&f.right);
+    w.section(&f.leaf_f32);
+    w.section(&f.leaf_u32);
+    w.section(&f.nodes_f32);
+    w.section(&f.nodes_ord);
+    w.section(&f.soa_tw_ord);
+    w.section(&f.soa_tw_f32);
+    w.section(&f.soa_ffl);
+    write_qs(&mut w, &f.qs);
+    w.finish()
+}
+
+/// Serialize a compiled GBT engine. Deterministic; the inverse of
+/// [`BinView::to_gbt`].
+pub fn write_gbt(e: &GbtIntEngine) -> Vec<u8> {
+    let p = e.parts();
+    let n_leaves = p.leaf_q.len() / p.n_classes;
+    let (_, qs_conds, qs_payloads) = qs_totals(p.qs);
+    let header = build_header(&Header {
+        kind: 1,
+        n_features: p.n_features as u32,
+        n_classes: p.n_classes as u32,
+        n_trees: (p.tree_offsets.len() - 1) as u32,
+        n_nodes: p.nodes.len() as u32,
+        n_leaves: n_leaves as u32,
+        order: 1, // the GBT compiler always packs breadth-first
+        scale_shift: p.scale.shift,
+        qs_blocks: p.qs.blocks.len() as u32,
+        qs_fallback: p.qs.fallback.len() as u32,
+        qs_conds: qs_conds as u32,
+        qs_payloads: qs_payloads as u32,
+        n_sections: GBT_SECTIONS as u32,
+    });
+    let mut w = Writer::new(header, GBT_SECTIONS);
+    w.section(p.tree_offsets);
+    w.section(p.tree_depths);
+    w.section(p.nodes);
+    w.section(p.soa_tw);
+    w.section(p.soa_ffl);
+    w.section(p.leaf_q);
+    w.section(p.base_q);
+    write_qs(&mut w, p.qs);
+    w.finish()
+}
+
+/// Compile an IR model and serialize it (RF with the engines' default
+/// depth-first layout; GBT with its canonical breadth-first one).
+pub fn write_model(model: &Model) -> Vec<u8> {
+    match model.kind {
+        ModelKind::RandomForest => write_forest(&CompiledForest::compile(model)),
+        ModelKind::Gbt => write_gbt(&GbtIntEngine::compile(model)),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Loading
+
+/// Model kind stored in an artifact.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BinKind {
+    /// Random forest (probability-averaging leaf tables).
+    Rf,
+    /// Gradient-boosted trees (fixed-point margin leaf tables).
+    Gbt,
+}
+
+impl BinKind {
+    /// Display name.
+    pub fn name(self) -> &'static str {
+        match self {
+            BinKind::Rf => "rf",
+            BinKind::Gbt => "gbt",
+        }
+    }
+}
+
+/// Borrowed random-forest sections, in file order.
+struct RfSections<'a> {
+    tree_offsets: &'a [u32],
+    tree_depths: &'a [u32],
+    feature: &'a [u32],
+    thresh_f32: &'a [f32],
+    thresh_ord: &'a [u32],
+    left: &'a [u32],
+    right: &'a [u32],
+    leaf_f32: &'a [f32],
+    leaf_u32: &'a [u32],
+    nodes_f32: &'a [Node8],
+    nodes_ord: &'a [Node8],
+    soa_tw_ord: &'a [u32],
+    soa_tw_f32: &'a [u32],
+    soa_ffl: &'a [u32],
+}
+
+/// Borrowed GBT sections, in file order.
+struct GbtSections<'a> {
+    tree_offsets: &'a [u32],
+    tree_depths: &'a [u32],
+    nodes: &'a [Node8],
+    soa_tw: &'a [u32],
+    soa_ffl: &'a [u32],
+    leaf_q: &'a [i64],
+    base_q: &'a [i64],
+}
+
+/// Borrowed QuickScorer sections (flattened across blocks).
+struct QsSections<'a> {
+    meta: &'a [u32],
+    tree_ids: &'a [u32],
+    init: &'a [u64],
+    feature_offsets: &'a [u32],
+    thresh_ord: &'a [u32],
+    thresh_f32: &'a [u32],
+    tree_of: &'a [u16],
+    masks: &'a [u64],
+    leaf_offsets: &'a [u32],
+    payloads: &'a [u32],
+    fallback: &'a [u32],
+}
+
+enum Body<'a> {
+    Rf(RfSections<'a>),
+    Gbt(GbtSections<'a>),
+}
+
+/// A validated, zero-copy view of a binary model: borrowed slices into
+/// the source bytes plus the decoded header. Materialize with
+/// [`Self::to_forest`] / [`Self::to_gbt`] — bulk copies of the
+/// validated slices, still no per-node deserialization.
+pub struct BinView<'a> {
+    kind: BinKind,
+    n_features: usize,
+    n_classes: usize,
+    n_trees: usize,
+    n_nodes: usize,
+    n_leaves: usize,
+    order: NodeOrder,
+    scale_shift: u32,
+    resident_bytes: usize,
+    body: Body<'a>,
+    qs: QsSections<'a>,
+}
+
+/// Sequential section reader: walks the table in the fixed kind order,
+/// enforcing exact lengths, 64-byte alignment, in-bounds extents, and
+/// strictly forward (non-overlapping) placement.
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    idx: usize,
+    min_off: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take<T: Pod>(&mut self, name: &'static str, count: usize) -> Result<&'a [T], BinError> {
+        let at = HEADER_LEN + self.idx * 16;
+        self.idx += 1;
+        let off64 = u64::from_ne_bytes(self.bytes[at..at + 8].try_into().unwrap());
+        let len64 = u64::from_ne_bytes(self.bytes[at + 8..at + 16].try_into().unwrap());
+        let off = usize::try_from(off64)
+            .map_err(|_| BinError::BadSection { name, why: format!("offset {off64} overflows") })?;
+        let len = usize::try_from(len64)
+            .map_err(|_| BinError::BadSection { name, why: format!("length {len64} overflows") })?;
+        let want = count.checked_mul(std::mem::size_of::<T>()).ok_or_else(|| {
+            BinError::BadSection { name, why: format!("element count {count} overflows") }
+        })?;
+        if len != want {
+            return Err(BinError::BadSection {
+                name,
+                why: format!("length {len} != expected {want} ({count} elements)"),
+            });
+        }
+        if off % SECTION_ALIGN != 0 {
+            return Err(BinError::BadSection {
+                name,
+                why: format!("offset {off} not {SECTION_ALIGN}-byte aligned"),
+            });
+        }
+        if off < self.min_off {
+            return Err(BinError::BadSection {
+                name,
+                why: format!(
+                    "offset {off} overlaps the previous section (ends at {})",
+                    self.min_off
+                ),
+            });
+        }
+        let end = off.checked_add(len).ok_or_else(|| BinError::BadSection {
+            name,
+            why: "extent overflows".to_string(),
+        })?;
+        if end > self.bytes.len() {
+            return Err(BinError::BadSection {
+                name,
+                why: format!("extent {off}..{end} exceeds file length {}", self.bytes.len()),
+            });
+        }
+        self.min_off = end;
+        // SAFETY: `off..end` is in bounds (checked above); the base
+        // pointer is 8-byte aligned (enforced by `load`) and `off` is a
+        // multiple of 64, so `base + off` satisfies `align_of::<T>() ≤ 8`;
+        // T is Pod, so any byte content is a valid value.
+        let ptr = unsafe { self.bytes.as_ptr().add(off) };
+        debug_assert_eq!(ptr as usize % std::mem::align_of::<T>(), 0);
+        Ok(unsafe { std::slice::from_raw_parts(ptr.cast::<T>(), count) })
+    }
+}
+
+fn read_u32(bytes: &[u8], at: usize) -> u32 {
+    u32::from_ne_bytes(bytes[at..at + 4].try_into().unwrap())
+}
+
+/// Parse and fully validate a binary model over borrowed bytes.
+///
+/// The base pointer must be 8-byte aligned (mapped files and
+/// [`OwnedBin`] buffers are); arbitrary `&[u8]` sources should go
+/// through [`OwnedBin::from_bytes`]. On success every structural
+/// invariant the unchecked traversal kernels rely on has been
+/// re-established — see the module docs for the full checklist.
+pub fn load(bytes: &[u8]) -> Result<BinView<'_>, BinError> {
+    if bytes.as_ptr() as usize % 8 != 0 {
+        return Err(BinError::Unaligned);
+    }
+    if bytes.len() < HEADER_LEN {
+        return Err(BinError::TooShort { need: HEADER_LEN, got: bytes.len() });
+    }
+    if bytes[..4] != MAGIC {
+        return Err(BinError::BadMagic([bytes[0], bytes[1], bytes[2], bytes[3]]));
+    }
+    let version = read_u32(bytes, 4);
+    if version != VERSION {
+        return Err(BinError::BadVersion(version));
+    }
+    let endian = read_u32(bytes, 8);
+    if endian != ENDIAN_TAG {
+        return Err(BinError::BadEndianness(endian));
+    }
+    let kind_code = read_u32(bytes, 12);
+    let kind = match kind_code {
+        0 => BinKind::Rf,
+        1 => BinKind::Gbt,
+        k => return Err(BinError::BadKind(k)),
+    };
+    let n_features = read_u32(bytes, 16) as usize;
+    let n_classes = read_u32(bytes, 20) as usize;
+    let n_trees = read_u32(bytes, 24) as usize;
+    let n_nodes = read_u32(bytes, 28) as usize;
+    let n_leaves = read_u32(bytes, 32) as usize;
+    let order_code = read_u32(bytes, 36);
+    let scale_shift = read_u32(bytes, 40);
+    let qs_blocks = read_u32(bytes, 44) as usize;
+    let qs_fallback = read_u32(bytes, 48) as usize;
+    let qs_conds = read_u32(bytes, 52) as usize;
+    let qs_payloads = read_u32(bytes, 56) as usize;
+    let n_sections = read_u32(bytes, 60) as usize;
+    let file_len = u64::from_ne_bytes(bytes[64..72].try_into().unwrap());
+
+    let bad = |why: String| Err(BinError::BadHeader(why));
+    if file_len != bytes.len() as u64 {
+        return bad(format!("declared file length {file_len} != actual {}", bytes.len()));
+    }
+    if bytes[72..HEADER_LEN].iter().any(|&b| b != 0) {
+        return bad("reserved header bytes are not zero".to_string());
+    }
+    if n_features == 0 || n_features > MAX_FEATURES {
+        return bad(format!("n_features {n_features} outside 1..={MAX_FEATURES}"));
+    }
+    if n_classes == 0 || n_classes > MAX_CLASSES {
+        return bad(format!("n_classes {n_classes} outside 1..={MAX_CLASSES}"));
+    }
+    if n_trees == 0 || n_trees > MAX_TREES {
+        return bad(format!("n_trees {n_trees} outside 1..={MAX_TREES}"));
+    }
+    if n_nodes < n_trees {
+        return bad(format!("n_nodes {n_nodes} < n_trees {n_trees} (every tree has a root)"));
+    }
+    if n_leaves == 0 || n_leaves > n_nodes {
+        return bad(format!("n_leaves {n_leaves} outside 1..=n_nodes ({n_nodes})"));
+    }
+    let order = match order_code {
+        0 => NodeOrder::Depth,
+        1 => NodeOrder::Breadth,
+        c => return bad(format!("unknown node-order code {c}")),
+    };
+    match kind {
+        BinKind::Rf => {
+            if scale_shift != 0 {
+                return bad(format!("RF artifacts carry no margin scale (shift {scale_shift})"));
+            }
+        }
+        BinKind::Gbt => {
+            if order != NodeOrder::Breadth {
+                return bad("GBT artifacts are always breadth-ordered".to_string());
+            }
+            if scale_shift > MAX_SCALE_SHIFT {
+                return bad(format!("margin scale shift {scale_shift} > {MAX_SCALE_SHIFT}"));
+            }
+        }
+    }
+    let expected_sections = match kind {
+        BinKind::Rf => RF_SECTIONS,
+        BinKind::Gbt => GBT_SECTIONS,
+    };
+    if n_sections != expected_sections {
+        return bad(format!(
+            "{} artifacts have {expected_sections} sections, header declares {n_sections}",
+            kind.name()
+        ));
+    }
+    let table_end = HEADER_LEN + n_sections * 16;
+    if bytes.len() < table_end {
+        return Err(BinError::TooShort { need: table_end, got: bytes.len() });
+    }
+    let leaf_rows = n_leaves
+        .checked_mul(n_classes)
+        .ok_or_else(|| BinError::BadHeader("leaf table size overflows".to_string()))?;
+
+    let mut cur = Cursor { bytes, idx: 0, min_off: table_end };
+    let body = match kind {
+        BinKind::Rf => Body::Rf(RfSections {
+            tree_offsets: cur.take("tree_offsets", n_trees + 1)?,
+            tree_depths: cur.take("tree_depths", n_trees)?,
+            feature: cur.take("feature", n_nodes)?,
+            thresh_f32: cur.take("thresh_f32", n_nodes)?,
+            thresh_ord: cur.take("thresh_ord", n_nodes)?,
+            left: cur.take("left", n_nodes)?,
+            right: cur.take("right", n_nodes)?,
+            leaf_f32: cur.take("leaf_f32", leaf_rows)?,
+            leaf_u32: cur.take("leaf_u32", leaf_rows)?,
+            nodes_f32: cur.take("nodes_f32", n_nodes)?,
+            nodes_ord: cur.take("nodes_ord", n_nodes)?,
+            soa_tw_ord: cur.take("soa_tw_ord", n_nodes)?,
+            soa_tw_f32: cur.take("soa_tw_f32", n_nodes)?,
+            soa_ffl: cur.take("soa_ffl", n_nodes)?,
+        }),
+        BinKind::Gbt => Body::Gbt(GbtSections {
+            tree_offsets: cur.take("tree_offsets", n_trees + 1)?,
+            tree_depths: cur.take("tree_depths", n_trees)?,
+            nodes: cur.take("nodes", n_nodes)?,
+            soa_tw: cur.take("soa_tw", n_nodes)?,
+            soa_ffl: cur.take("soa_ffl", n_nodes)?,
+            leaf_q: cur.take("leaf_q", leaf_rows)?,
+            base_q: cur.take("base_q", n_classes)?,
+        }),
+    };
+
+    // QS meta first — the remaining QS section lengths derive from it.
+    let meta = cur.take::<u32>("qs_block_meta", qs_blocks * 3)?;
+    let mut sum_trees = 0usize;
+    let mut sum_conds = 0usize;
+    let mut sum_payloads = 0usize;
+    for m in meta.chunks_exact(3) {
+        let add = |acc: usize, v: u32, what: &str| {
+            acc.checked_add(v as usize)
+                .ok_or_else(|| BinError::BadHeader(format!("QS {what} total overflows")))
+        };
+        sum_trees = add(sum_trees, m[0], "tree")?;
+        sum_conds = add(sum_conds, m[1], "condition")?;
+        sum_payloads = add(sum_payloads, m[2], "payload")?;
+    }
+    if sum_conds != qs_conds {
+        return bad(format!("QS condition total {sum_conds} != header {qs_conds}"));
+    }
+    if sum_payloads != qs_payloads {
+        return bad(format!("QS payload total {sum_payloads} != header {qs_payloads}"));
+    }
+    let fo_count = qs_blocks
+        .checked_mul(n_features + 1)
+        .ok_or_else(|| BinError::BadHeader("QS feature-offset table size overflows".to_string()))?;
+    let qs = QsSections {
+        meta,
+        tree_ids: cur.take("qs_tree_ids", sum_trees)?,
+        init: cur.take("qs_init", sum_trees)?,
+        feature_offsets: cur.take("qs_feature_offsets", fo_count)?,
+        thresh_ord: cur.take("qs_thresh_ord", qs_conds)?,
+        thresh_f32: cur.take("qs_thresh_f32", qs_conds)?,
+        tree_of: cur.take("qs_tree_of", qs_conds)?,
+        masks: cur.take("qs_masks", qs_conds)?,
+        leaf_offsets: cur.take("qs_leaf_offsets", sum_trees + qs_blocks)?,
+        payloads: cur.take("qs_payloads", qs_payloads)?,
+        fallback: cur.take("qs_fallback", qs_fallback)?,
+    };
+
+    let view = BinView {
+        kind,
+        n_features,
+        n_classes,
+        n_trees,
+        n_nodes,
+        n_leaves,
+        order,
+        scale_shift,
+        resident_bytes: bytes.len(),
+        body,
+        qs,
+    };
+    view.validate()?;
+    Ok(view)
+}
+
+// ---------------------------------------------------------------------------
+// Semantic validation
+
+/// Shared per-tree packed-node validation: canonical leaf/branch
+/// encoding, child adjacency, acyclicity (children strictly after their
+/// parent), payload bounds, and the exact depth the branchless kernel
+/// trusts as its fixed trip count.
+fn validate_packed(
+    nodes: &[Node8],
+    tree_offsets: &[u32],
+    tree_depths: &[u32],
+    n_features: usize,
+    n_leaves: usize,
+) -> Result<(), BinError> {
+    let err = |why: String| Err(BinError::Malformed(why));
+    for (t, w) in tree_offsets.windows(2).enumerate() {
+        let lo = w[0] as usize;
+        let hi = w[1] as usize;
+        let n = hi - lo;
+        // depth[i] = longest path below local node i, filled in reverse
+        // index order — children always sit at larger local indices
+        // (validated below), so both are done before their parent.
+        let mut depth = vec![0u32; n];
+        for i in (0..n).rev() {
+            let node = nodes[lo + i];
+            if node.ff & LEAF_BIT != 0 {
+                if node.ff != LEAF_BIT {
+                    return err(format!(
+                        "tree {t} node {i}: leaf carries feature bits (ff {:#06x})",
+                        node.ff
+                    ));
+                }
+                if node.left as usize != i {
+                    return err(format!(
+                        "tree {t} node {i}: leaf self-loop points at {}",
+                        node.left
+                    ));
+                }
+                if node.tw as usize >= n_leaves {
+                    return err(format!(
+                        "tree {t} node {i}: leaf payload {} >= {n_leaves}",
+                        node.tw
+                    ));
+                }
+            } else {
+                if (node.ff as usize) >= n_features {
+                    return err(format!("tree {t} node {i}: feature {} >= {n_features}", node.ff));
+                }
+                let l = node.left as usize;
+                if l <= i {
+                    return err(format!("tree {t} node {i}: left child {l} not after its parent"));
+                }
+                if l + 1 >= n {
+                    return err(format!(
+                        "tree {t} node {i}: children {l},{} outside tree of {n} nodes",
+                        l + 1
+                    ));
+                }
+                depth[i] = 1 + depth[l].max(depth[l + 1]);
+            }
+        }
+        if depth[0] != tree_depths[t] {
+            return err(format!(
+                "tree {t}: declared depth {} != computed {}",
+                tree_depths[t], depth[0]
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Tree-offset table: starts at zero, strictly increasing (no empty
+/// trees), per-tree size within the u16-indexed packing limit, ends at
+/// the node count.
+fn validate_tree_offsets(tree_offsets: &[u32], n_nodes: usize) -> Result<(), BinError> {
+    let err = |why: String| Err(BinError::Malformed(why));
+    if tree_offsets[0] != 0 {
+        return err(format!("tree_offsets[0] is {}, not 0", tree_offsets[0]));
+    }
+    for (t, w) in tree_offsets.windows(2).enumerate() {
+        let lo = w[0] as usize;
+        let hi = w[1] as usize;
+        if hi <= lo {
+            return err(format!("tree {t} is empty or offsets regress ({lo}..{hi})"));
+        }
+        if hi - lo > MAX_TREE_NODES {
+            return err(format!("tree {t} has {} nodes > {MAX_TREE_NODES}", hi - lo));
+        }
+    }
+    let last = tree_offsets[tree_offsets.len() - 1] as usize;
+    if last != n_nodes {
+        return err(format!("tree_offsets end at {last}, node count is {n_nodes}"));
+    }
+    Ok(())
+}
+
+impl BinView<'_> {
+    fn validate(&self) -> Result<(), BinError> {
+        match &self.body {
+            Body::Rf(rf) => self.validate_rf(rf)?,
+            Body::Gbt(g) => self.validate_gbt(g)?,
+        }
+        self.validate_qs()
+    }
+
+    fn validate_rf(&self, rf: &RfSections<'_>) -> Result<(), BinError> {
+        validate_tree_offsets(rf.tree_offsets, self.n_nodes)?;
+        validate_packed(
+            rf.nodes_ord,
+            rf.tree_offsets,
+            rf.tree_depths,
+            self.n_features,
+            self.n_leaves,
+        )?;
+        let err = |why: String| Err(BinError::Malformed(why));
+        // The two packed domains and the five SoA mirrors must agree
+        // node for node — the SIMD gathers and the scalar walkers read
+        // different copies of the same tree and must route identically.
+        for (g, &no) in rf.nodes_ord.iter().enumerate() {
+            let nf = rf.nodes_f32[g];
+            if nf.ff != no.ff || nf.left != no.left {
+                return err(format!("node {g}: ord/f32 packs disagree on ff/left"));
+            }
+            if rf.soa_tw_ord[g] != no.tw {
+                return err(format!("node {g}: soa_tw_ord mirror diverges"));
+            }
+            if rf.soa_tw_f32[g] != nf.tw {
+                return err(format!("node {g}: soa_tw_f32 mirror diverges"));
+            }
+            if rf.soa_ffl[g] != no.ffl_word() {
+                return err(format!("node {g}: soa_ffl mirror diverges"));
+            }
+            if no.ff == LEAF_BIT {
+                if nf.tw != no.tw {
+                    return err(format!("node {g}: leaf payload differs across domains"));
+                }
+                if rf.feature[g] != LEAF
+                    || rf.thresh_ord[g] != 0
+                    || rf.thresh_f32[g].to_bits() != 0
+                    || rf.left[g] != no.tw
+                    || rf.right[g] != 0
+                {
+                    return err(format!("node {g}: SoA leaf row diverges from packed leaf"));
+                }
+            } else {
+                if rf.feature[g] != no.ff as u32 {
+                    return err(format!("node {g}: SoA feature column diverges"));
+                }
+                if rf.thresh_ord[g] != no.tw || rf.thresh_f32[g].to_bits() != nf.tw {
+                    return err(format!("node {g}: SoA threshold columns diverge"));
+                }
+                if rf.thresh_ord[g] != ordered_u32(rf.thresh_f32[g]) {
+                    return err(format!(
+                        "node {g}: ordered threshold is not the order-preserving map of the f32 threshold"
+                    ));
+                }
+                if rf.left[g] != no.left as u32 || rf.right[g] != no.left as u32 + 1 {
+                    return err(format!("node {g}: SoA child columns diverge"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn validate_gbt(&self, g: &GbtSections<'_>) -> Result<(), BinError> {
+        validate_tree_offsets(g.tree_offsets, self.n_nodes)?;
+        validate_packed(g.nodes, g.tree_offsets, g.tree_depths, self.n_features, self.n_leaves)?;
+        let err = |why: String| Err(BinError::Malformed(why));
+        for (i, node) in g.nodes.iter().enumerate() {
+            if g.soa_tw[i] != node.tw {
+                return err(format!("node {i}: soa_tw mirror diverges"));
+            }
+            if g.soa_ffl[i] != node.ffl_word() {
+                return err(format!("node {i}: soa_ffl mirror diverges"));
+            }
+        }
+        Ok(())
+    }
+
+    /// QuickScorer plan validation. The scan kernels index payloads as
+    /// `leaf_offsets[tree] + trailing_zeros(bitvector)` without bounds
+    /// checks, so beyond shape checks this establishes the invariant
+    /// that keeps every final bitvector nonzero: each tree's in-order
+    /// last leaf (bit `k-1`) is in no condition's cleared left subtree,
+    /// so every mask — and `init` — must keep that bit set.
+    fn validate_qs(&self) -> Result<(), BinError> {
+        let q = &self.qs;
+        let err = |why: String| Err(BinError::Malformed(why));
+        let mut seen = vec![false; self.n_trees];
+        let mut claim = |id: u32, what: &str| -> Result<(), BinError> {
+            let i = id as usize;
+            if i >= self.n_trees {
+                return Err(BinError::Malformed(format!(
+                    "QS {what} names tree {i} of {}",
+                    self.n_trees
+                )));
+            }
+            if seen[i] {
+                return Err(BinError::Malformed(format!("QS assigns tree {i} twice")));
+            }
+            seen[i] = true;
+            Ok(())
+        };
+        let (mut t0, mut c0, mut p0, mut f0, mut l0) = (0usize, 0usize, 0usize, 0usize, 0usize);
+        for (b, m) in q.meta.chunks_exact(3).enumerate() {
+            let bt = m[0] as usize;
+            let bc = m[1] as usize;
+            let bp = m[2] as usize;
+            if bt == 0 {
+                return err(format!("QS block {b} holds no trees"));
+            }
+            if bt > u16::MAX as usize + 1 {
+                return err(format!("QS block {b} holds {bt} trees (> u16 range)"));
+            }
+            let tree_ids = &q.tree_ids[t0..t0 + bt];
+            let init = &q.init[t0..t0 + bt];
+            let fo = &q.feature_offsets[f0..f0 + self.n_features + 1];
+            let tree_of = &q.tree_of[c0..c0 + bc];
+            let masks = &q.masks[c0..c0 + bc];
+            let thresh_ord = &q.thresh_ord[c0..c0 + bc];
+            let lofs = &q.leaf_offsets[l0..l0 + bt + 1];
+            let payloads = &q.payloads[p0..p0 + bp];
+            for &id in tree_ids {
+                claim(id, "block")?;
+            }
+            // Leaf ranges: k leaves per tree, 1..=64, offsets exact.
+            if lofs[0] != 0 {
+                return err(format!("QS block {b}: leaf_offsets[0] is {}, not 0", lofs[0]));
+            }
+            let mut leaves = vec![0usize; bt];
+            for (j, lw) in lofs.windows(2).enumerate() {
+                let a = lw[0] as usize;
+                let z = lw[1] as usize;
+                if z <= a {
+                    return err(format!("QS block {b} tree {j}: empty/regressing leaf range"));
+                }
+                let k = z - a;
+                if k > QS_MAX_LEAVES {
+                    return err(format!("QS block {b} tree {j}: {k} leaves > {QS_MAX_LEAVES}"));
+                }
+                leaves[j] = k;
+                let want_init = if k == 64 { u64::MAX } else { (1u64 << k) - 1 };
+                if init[j] != want_init {
+                    return err(format!(
+                        "QS block {b} tree {j}: init {:#018x} != {want_init:#018x} for {k} leaves",
+                        init[j]
+                    ));
+                }
+            }
+            if lofs[bt] as usize != bp {
+                return err(format!(
+                    "QS block {b}: leaf_offsets end at {}, payload count is {bp}",
+                    lofs[bt]
+                ));
+            }
+            for &p in payloads {
+                if p as usize >= self.n_leaves {
+                    return err(format!("QS block {b}: payload row {p} >= {}", self.n_leaves));
+                }
+            }
+            // Condition streams: bucketed by feature, sorted ascending,
+            // each naming an in-block tree and keeping that tree's last
+            // in-order leaf bit set.
+            if fo[0] != 0 {
+                return err(format!("QS block {b}: feature_offsets[0] is {}, not 0", fo[0]));
+            }
+            for (f, fw) in fo.windows(2).enumerate() {
+                let (s, e) = (fw[0] as usize, fw[1] as usize);
+                if e < s || e > bc {
+                    return err(format!("QS block {b} feature {f}: bucket {s}..{e} invalid"));
+                }
+                for c in s..e {
+                    if c > s && thresh_ord[c] < thresh_ord[c - 1] {
+                        return err(format!("QS block {b} feature {f}: conditions not sorted at {c}"));
+                    }
+                    let tl = tree_of[c] as usize;
+                    if tl >= bt {
+                        return err(format!("QS block {b} condition {c}: tree {tl} of {bt}"));
+                    }
+                    let last_bit = 1u64 << (leaves[tl] - 1);
+                    if masks[c] & last_bit == 0 {
+                        return err(format!(
+                            "QS block {b} condition {c}: mask clears its tree's last leaf bit"
+                        ));
+                    }
+                }
+            }
+            if fo[self.n_features] as usize != bc {
+                return err(format!(
+                    "QS block {b}: feature_offsets end at {}, condition count is {bc}",
+                    fo[self.n_features]
+                ));
+            }
+            t0 += bt;
+            c0 += bc;
+            p0 += bp;
+            f0 += self.n_features + 1;
+            l0 += bt + 1;
+        }
+        for &id in q.fallback {
+            claim(id, "fallback")?;
+        }
+        if seen.iter().any(|&s| !s) {
+            return err("QS plan does not cover every tree".to_string());
+        }
+        Ok(())
+    }
+
+    // -- public accessors ---------------------------------------------------
+
+    /// Model kind stored in the artifact.
+    pub fn kind(&self) -> BinKind {
+        self.kind
+    }
+
+    /// Feature columns the model consumes.
+    pub fn n_features(&self) -> usize {
+        self.n_features
+    }
+
+    /// Classes the model predicts.
+    pub fn n_classes(&self) -> usize {
+        self.n_classes
+    }
+
+    /// Trees in the ensemble.
+    pub fn n_trees(&self) -> usize {
+        self.n_trees
+    }
+
+    /// Total packed nodes.
+    pub fn n_nodes(&self) -> usize {
+        self.n_nodes
+    }
+
+    /// Leaf payload rows.
+    pub fn n_leaves(&self) -> usize {
+        self.n_leaves
+    }
+
+    /// Node layout the forest was compiled with.
+    pub fn order(&self) -> NodeOrder {
+        self.order
+    }
+
+    /// Total artifact size in bytes — what a resident model costs, the
+    /// figure the registry's per-model memory accounting reports.
+    pub fn resident_bytes(&self) -> usize {
+        self.resident_bytes
+    }
+
+    fn qs_plan(&self) -> QsPlan {
+        let q = &self.qs;
+        let mut blocks = Vec::with_capacity(q.meta.len() / 3);
+        let (mut t0, mut c0, mut p0, mut f0, mut l0) = (0usize, 0usize, 0usize, 0usize, 0usize);
+        for m in q.meta.chunks_exact(3) {
+            let bt = m[0] as usize;
+            let bc = m[1] as usize;
+            let bp = m[2] as usize;
+            blocks.push(QsBlock {
+                n_trees: bt,
+                tree_ids: q.tree_ids[t0..t0 + bt].to_vec(),
+                init: q.init[t0..t0 + bt].to_vec(),
+                feature_offsets: q.feature_offsets[f0..f0 + self.n_features + 1].to_vec(),
+                thresh_ord: q.thresh_ord[c0..c0 + bc].to_vec(),
+                thresh_f32: q.thresh_f32[c0..c0 + bc].to_vec(),
+                tree_of: q.tree_of[c0..c0 + bc].to_vec(),
+                masks: q.masks[c0..c0 + bc].to_vec(),
+                leaf_offsets: q.leaf_offsets[l0..l0 + bt + 1].to_vec(),
+                leaf_payloads: q.payloads[p0..p0 + bp].to_vec(),
+            });
+            t0 += bt;
+            c0 += bc;
+            p0 += bp;
+            f0 += self.n_features + 1;
+            l0 += bt + 1;
+        }
+        QsPlan {
+            n_trees: self.n_trees,
+            n_features: self.n_features,
+            blocks,
+            fallback: q.fallback.to_vec(),
+        }
+    }
+
+    /// Materialize a random-forest [`CompiledForest`] — bulk copies of
+    /// the validated slices, no per-node rebuild.
+    pub fn to_forest(&self) -> Result<CompiledForest, BinError> {
+        let rf = match &self.body {
+            Body::Rf(rf) => rf,
+            Body::Gbt(_) => return Err(BinError::KindMismatch { expected: "rf", got: "gbt" }),
+        };
+        Ok(CompiledForest {
+            n_features: self.n_features,
+            n_classes: self.n_classes,
+            n_trees: self.n_trees,
+            tree_offsets: rf.tree_offsets.to_vec(),
+            tree_depths: rf.tree_depths.to_vec(),
+            feature: rf.feature.to_vec(),
+            thresh_f32: rf.thresh_f32.to_vec(),
+            thresh_ord: rf.thresh_ord.to_vec(),
+            left: rf.left.to_vec(),
+            right: rf.right.to_vec(),
+            leaf_f32: rf.leaf_f32.to_vec(),
+            leaf_u32: rf.leaf_u32.to_vec(),
+            nodes_f32: rf.nodes_f32.to_vec(),
+            nodes_ord: rf.nodes_ord.to_vec(),
+            soa_tw_ord: rf.soa_tw_ord.to_vec(),
+            soa_tw_f32: rf.soa_tw_f32.to_vec(),
+            soa_ffl: rf.soa_ffl.to_vec(),
+            order: self.order,
+            qs: self.qs_plan(),
+        })
+    }
+
+    /// Materialize a [`GbtIntEngine`] with default execution knobs —
+    /// bulk copies of the validated slices, no per-node rebuild.
+    pub fn to_gbt(&self) -> Result<GbtIntEngine, BinError> {
+        let g = match &self.body {
+            Body::Gbt(g) => g,
+            Body::Rf(_) => return Err(BinError::KindMismatch { expected: "gbt", got: "rf" }),
+        };
+        Ok(GbtIntEngine::from_parts(GbtEngineParts {
+            n_features: self.n_features,
+            n_classes: self.n_classes,
+            scale: MarginScale { shift: self.scale_shift },
+            tree_offsets: g.tree_offsets.to_vec(),
+            tree_depths: g.tree_depths.to_vec(),
+            nodes: g.nodes.to_vec(),
+            soa_tw: g.soa_tw.to_vec(),
+            soa_ffl: g.soa_ffl.to_vec(),
+            leaf_q: g.leaf_q.to_vec(),
+            base_q: g.base_q.to_vec(),
+            qs: self.qs_plan(),
+        }))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Owned fallback for unaligned sources
+
+/// An owned, 8-byte-aligned copy of artifact bytes — the fallback when
+/// the source (a `Vec<u8>` file read, a network buffer) promises no
+/// base alignment. The copy is backed by `u64` words, so
+/// [`Self::view`] always passes [`load`]'s alignment gate.
+pub struct OwnedBin {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl OwnedBin {
+    /// Copy arbitrary bytes into an aligned buffer.
+    pub fn from_bytes(bytes: &[u8]) -> OwnedBin {
+        let mut words = Vec::with_capacity(bytes.len().div_ceil(8));
+        for chunk in bytes.chunks(8) {
+            let mut b = [0u8; 8];
+            b[..chunk.len()].copy_from_slice(chunk);
+            words.push(u64::from_ne_bytes(b));
+        }
+        OwnedBin { words, len: bytes.len() }
+    }
+
+    /// The artifact bytes (8-byte-aligned base).
+    pub fn bytes(&self) -> &[u8] {
+        &bytes_of(&self.words)[..self.len]
+    }
+
+    /// Parse and validate — see [`load`].
+    pub fn view(&self) -> Result<BinView<'_>, BinError> {
+        load(self.bytes())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::shuttle_like;
+    use crate::trees::{train_gbt, ForestParams, GbtParams, RandomForest};
+
+    fn rf_model() -> Model {
+        let ds = shuttle_like(400, 9);
+        RandomForest::train(&ds, &ForestParams { n_trees: 4, max_depth: 4, ..Default::default() }, 9)
+    }
+
+    fn gbt_model() -> Model {
+        let ds = shuttle_like(300, 11);
+        train_gbt(&ds, &GbtParams { n_rounds: 3, max_depth: 3, ..Default::default() }, 11)
+    }
+
+    #[test]
+    fn rf_round_trip_and_byte_stability() {
+        let f = CompiledForest::compile(&rf_model());
+        let bytes = write_forest(&f);
+        let owned = OwnedBin::from_bytes(&bytes);
+        let view = owned.view().expect("own artifact must load");
+        assert_eq!(view.kind(), BinKind::Rf);
+        assert_eq!(view.n_features(), f.n_features);
+        assert_eq!(view.n_trees(), f.n_trees);
+        assert_eq!(view.resident_bytes(), bytes.len());
+        let f2 = view.to_forest().expect("RF artifact materializes as a forest");
+        assert_eq!(f2.nodes_ord, f.nodes_ord);
+        assert_eq!(
+            f2.thresh_f32.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            f.thresh_f32.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(f2.leaf_u32, f.leaf_u32);
+        assert_eq!(f2.qs.blocks.len(), f.qs.blocks.len());
+        // write → load → write is byte-stable.
+        assert_eq!(write_forest(&f2), bytes);
+        // GBT materialization of an RF artifact is a typed mismatch.
+        assert_eq!(
+            view.to_gbt().err(),
+            Some(BinError::KindMismatch { expected: "gbt", got: "rf" })
+        );
+    }
+
+    #[test]
+    fn gbt_round_trip_and_byte_stability() {
+        let e = GbtIntEngine::compile(&gbt_model());
+        let bytes = write_gbt(&e);
+        let owned = OwnedBin::from_bytes(&bytes);
+        let view = owned.view().expect("own artifact must load");
+        assert_eq!(view.kind(), BinKind::Gbt);
+        let e2 = view.to_gbt().expect("GBT artifact materializes as an engine");
+        assert_eq!(e2.scale().shift, e.scale().shift);
+        assert_eq!(write_gbt(&e2), bytes);
+        assert_eq!(
+            view.to_forest().err(),
+            Some(BinError::KindMismatch { expected: "rf", got: "gbt" })
+        );
+    }
+
+    #[test]
+    fn unaligned_base_is_refused_and_owned_copy_recovers() {
+        let bytes = write_model(&rf_model());
+        // Build a deliberately misaligned view: copy into an 8-aligned
+        // u64 buffer at byte offset 1.
+        let mut backing = vec![0u64; bytes.len() / 8 + 2];
+        assert_eq!(backing.as_ptr() as usize % 8, 0);
+        {
+            // SAFETY: u64 backing reinterpreted as its full byte span.
+            let dst = unsafe {
+                std::slice::from_raw_parts_mut(backing.as_mut_ptr().cast::<u8>(), backing.len() * 8)
+            };
+            dst[1..1 + bytes.len()].copy_from_slice(&bytes);
+        }
+        // SAFETY: offset 1 stays within the backing allocation.
+        let shifted = unsafe {
+            std::slice::from_raw_parts((backing.as_ptr() as *const u8).add(1), bytes.len())
+        };
+        assert_eq!(load(shifted).err(), Some(BinError::Unaligned));
+        // The owned fallback re-aligns the same bytes.
+        assert!(OwnedBin::from_bytes(shifted).view().is_ok());
+    }
+
+    #[test]
+    fn short_and_foreign_inputs_are_typed_errors() {
+        assert_eq!(
+            OwnedBin::from_bytes(&[]).view().err(),
+            Some(BinError::TooShort { need: HEADER_LEN, got: 0 })
+        );
+        let json = vec![b'{'; 200];
+        assert!(matches!(OwnedBin::from_bytes(&json).view().err(), Some(BinError::BadMagic(_))));
+        assert!(is_binary(&write_model(&rf_model())));
+        assert!(!is_binary(&json));
+    }
+
+    #[test]
+    fn header_field_mutations_are_typed_errors() {
+        let bytes = write_model(&rf_model());
+        let patch = |at: usize, v: u32| {
+            let mut b = bytes.clone();
+            b[at..at + 4].copy_from_slice(&v.to_ne_bytes());
+            OwnedBin::from_bytes(&b).view().err().expect("mutation must be rejected")
+        };
+        assert_eq!(patch(4, 2), BinError::BadVersion(2));
+        assert_eq!(
+            patch(8, ENDIAN_TAG.swap_bytes()),
+            BinError::BadEndianness(ENDIAN_TAG.swap_bytes())
+        );
+        assert_eq!(patch(12, 7), BinError::BadKind(7));
+        // n_features 0 / n_trees over the cap die in the header gate; a
+        // corrupted n_nodes survives it and dies on the first section
+        // whose length no longer matches.
+        assert!(matches!(patch(16, 0), BinError::BadHeader(_)));
+        assert!(matches!(patch(24, u32::MAX), BinError::BadHeader(_)));
+        assert!(matches!(patch(28, u32::MAX), BinError::BadSection { .. }));
+        assert!(matches!(patch(60, 3), BinError::BadHeader(_)));
+    }
+}

@@ -1,4 +1,7 @@
-//! PJRT/XLA runtime: loads the AOT-compiled JAX/Pallas forest-inference
+//! Deployment runtime: the zero-copy binary model format ([`binfmt`])
+//! and the PJRT/XLA execution path.
+//!
+//! The PJRT half loads the AOT-compiled JAX/Pallas forest-inference
 //! artifacts (HLO text, produced once by `python/compile/aot.py`) and
 //! executes them from rust. Python is never on this path.
 //!
@@ -17,10 +20,12 @@
 //! bit-identical to the scalar [`crate::inference::IntEngine`] (verified
 //! by `rust/tests/xla_parity.rs`).
 
+pub mod binfmt;
 pub mod manifest;
 pub mod pack;
 pub mod pjrt;
 
+pub use binfmt::{BinError, BinKind, BinView, OwnedBin};
 pub use manifest::{Manifest, PipelineManifest, PipelineModelEntry, Tier, PIPELINE_FORMAT};
 pub use pack::ForestPack;
 pub use pjrt::PjrtEngine;

@@ -1,0 +1,404 @@
+//! Binary-format round-trip suite (ISSUE 9 satellite): a model written
+//! to the INTB zero-copy format and loaded back must be **bit-identical
+//! in every observable output** to the same model loaded from JSON —
+//! across every traversal kernel, every available SIMD backend, both
+//! node orders and intra-batch thread counts 1/2. The topology corpus
+//! mirrors the batch-parity suite: single-leaf trees, stumps, depth-16
+//! ragged chains, random ragged mixtures, QuickScorer 63/64/65-leaf
+//! boundary trees, a 230-feature-wide trained forest, and a trained
+//! GBT. On top of prediction parity the serialization itself must be a
+//! fixed point: `write → load → write` reproduces the input byte for
+//! byte, so re-serializing a fleet never churns artifact fingerprints.
+
+use intreeger::data::{shuttle_like, synth, SynthSpec};
+use intreeger::inference::{
+    Engine, FlIntEngine, FloatEngine, GbtIntEngine, IntEngine, NodeOrder, SimdBackend,
+    TraversalKernel,
+};
+use intreeger::ir::{Model, ModelKind, Node, Tree};
+use intreeger::runtime::binfmt::{self, BinError, BinKind, OwnedBin};
+use intreeger::trees::{train_gbt, ForestParams, GbtParams, RandomForest};
+use intreeger::util::check::{balanced_tree, random_dist};
+use intreeger::util::Rng;
+
+// ---------------------------------------------------------------------------
+// Topology generators (same shapes as the batch-parity suite).
+
+/// Random tree with maximum depth `max_depth`; interior nodes become
+/// leaves early with probability ~0.3, so trees are ragged.
+fn random_tree(rng: &mut Rng, max_depth: usize, nf: usize, nc: usize) -> Tree {
+    fn build(nodes: &mut Vec<Node>, rng: &mut Rng, depth_left: usize, nf: usize, nc: usize) -> u32 {
+        let idx = nodes.len() as u32;
+        if depth_left == 0 || rng.chance(0.3) {
+            nodes.push(Node::Leaf { values: random_dist(rng, nc) });
+        } else {
+            nodes.push(Node::Branch {
+                feature: rng.below(nf) as u32,
+                threshold: rng.uniform_in(-50.0, 50.0),
+                left: 0,
+                right: 0,
+            });
+            let l = build(nodes, rng, depth_left - 1, nf, nc);
+            let r = build(nodes, rng, depth_left - 1, nf, nc);
+            if let Node::Branch { left, right, .. } = &mut nodes[idx as usize] {
+                *left = l;
+                *right = r;
+            }
+        }
+        idx
+    }
+    let mut nodes = Vec::new();
+    build(&mut nodes, rng, max_depth, nf, nc);
+    Tree { nodes }
+}
+
+/// A maximally-ragged chain of exactly `depth` branches: one lane exits
+/// at depth 1 while another runs the full trip.
+fn chain_tree(rng: &mut Rng, depth: usize, nf: usize, nc: usize) -> Tree {
+    fn build(nodes: &mut Vec<Node>, rng: &mut Rng, depth_left: usize, nf: usize, nc: usize) -> u32 {
+        let idx = nodes.len() as u32;
+        if depth_left == 0 {
+            nodes.push(Node::Leaf { values: random_dist(rng, nc) });
+            return idx;
+        }
+        nodes.push(Node::Branch {
+            feature: rng.below(nf) as u32,
+            threshold: rng.uniform_in(-20.0, 20.0),
+            left: 0,
+            right: 0,
+        });
+        let deep_left = depth_left % 2 == 0;
+        let (l, r) = if deep_left {
+            let l = build(nodes, rng, depth_left - 1, nf, nc);
+            let leaf = nodes.len() as u32;
+            nodes.push(Node::Leaf { values: random_dist(rng, nc) });
+            (l, leaf)
+        } else {
+            let leaf = nodes.len() as u32;
+            nodes.push(Node::Leaf { values: random_dist(rng, nc) });
+            let r = build(nodes, rng, depth_left - 1, nf, nc);
+            (leaf, r)
+        };
+        if let Node::Branch { left, right, .. } = &mut nodes[idx as usize] {
+            *left = l;
+            *right = r;
+        }
+        idx
+    }
+    let mut nodes = Vec::new();
+    build(&mut nodes, rng, depth, nf, nc);
+    Tree { nodes }
+}
+
+/// Rows for a model: random values, rows landing exactly on split
+/// thresholds (the `<=` boundary the ordered-u32 transform must
+/// preserve through serialization), and NaN rows with both sign bits.
+fn probe_rows(rng: &mut Rng, model: &Model, n_rows: usize) -> Vec<f32> {
+    let nf = model.n_features;
+    let thresholds: Vec<(u32, f32)> = model
+        .trees
+        .iter()
+        .flat_map(|t| &t.nodes)
+        .filter_map(|n| match n {
+            Node::Branch { feature, threshold, .. } => Some((*feature, *threshold)),
+            _ => None,
+        })
+        .collect();
+    let mut rows = Vec::with_capacity(n_rows * nf);
+    for i in 0..n_rows {
+        let mut row: Vec<f32> = (0..nf).map(|_| rng.uniform_in(-80.0, 80.0)).collect();
+        if i % 3 == 0 && !thresholds.is_empty() {
+            let (f, t) = thresholds[rng.below(thresholds.len())];
+            row[f as usize] = t;
+        }
+        if i % 7 == 1 {
+            let f = rng.below(nf);
+            row[f] = if i % 14 == 1 { f32::NAN } else { -f32::NAN };
+        }
+        rows.extend_from_slice(&row);
+    }
+    rows
+}
+
+fn hand_model(trees: Vec<Tree>, nf: usize, nc: usize) -> Model {
+    let model = Model {
+        kind: ModelKind::RandomForest,
+        n_features: nf,
+        n_classes: nc,
+        trees,
+        base_score: vec![0.0; nc],
+    };
+    model.validate().expect("hand-built model is valid");
+    model
+}
+
+// ---------------------------------------------------------------------------
+// The core comparator.
+
+/// For every node order: serialize the JSON-loaded model's compiled
+/// forest, reload it through [`OwnedBin`], and demand (a) byte-stable
+/// re-serialization and (b) bit-identical `predict_fixed_batch` /
+/// `predict_batch` / `predict_proba_batch` across kernels × available
+/// backends × threads 1/2.
+fn assert_bin_parity_rf(model: &Model, tag0: &str) {
+    let mut rng = Rng::new(0xB15 ^ model.trees.len() as u64);
+    let rows = probe_rows(&mut rng, model, 53);
+    let json_model = Model::from_json(&model.to_json()).expect("JSON round-trip");
+    for order in NodeOrder::all() {
+        let mut json_engine = IntEngine::compile_with(&json_model, order);
+        let bytes = binfmt::write_forest(json_engine.forest());
+        assert!(binfmt::is_binary(&bytes), "{tag0}: magic sniff");
+        let owned = OwnedBin::from_bytes(&bytes);
+        let view = owned
+            .view()
+            .unwrap_or_else(|e| panic!("{tag0}/{}: load: {e}", order.name()));
+        assert_eq!(view.kind(), BinKind::Rf, "{tag0}: kind");
+        assert_eq!(view.resident_bytes(), bytes.len(), "{tag0}: resident bytes");
+        let forest = view
+            .to_forest()
+            .unwrap_or_else(|e| panic!("{tag0}/{}: to_forest: {e}", order.name()));
+        // write → load → write is a fixed point, byte for byte.
+        assert_eq!(
+            binfmt::write_forest(&forest),
+            bytes,
+            "{tag0}/{}: re-serialization not byte-stable",
+            order.name()
+        );
+        let mut bin_engine = IntEngine::from_forest(forest);
+        for kernel in TraversalKernel::all() {
+            for &backend in SimdBackend::available() {
+                for threads in [1usize, 2] {
+                    for e in [&mut json_engine, &mut bin_engine] {
+                        e.set_kernel(kernel);
+                        e.set_backend(backend);
+                        e.set_threads(threads);
+                    }
+                    let tag = format!(
+                        "{tag0}/{}/{}/{}/{threads}t",
+                        order.name(),
+                        kernel.name(),
+                        backend.name()
+                    );
+                    assert_eq!(
+                        json_engine.predict_fixed_batch(&rows),
+                        bin_engine.predict_fixed_batch(&rows),
+                        "{tag}: fixed accumulators diverge"
+                    );
+                    assert_eq!(
+                        json_engine.predict_batch(&rows),
+                        bin_engine.predict_batch(&rows),
+                        "{tag}: argmax classes diverge"
+                    );
+                    assert_eq!(
+                        json_engine.predict_proba_batch(&rows),
+                        bin_engine.predict_proba_batch(&rows),
+                        "{tag}: probabilities diverge"
+                    );
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// RF topology corpus.
+
+#[test]
+fn stumps_leaf_only_and_qs_boundary_trees_round_trip() {
+    let nf = 6usize;
+    let nc = 3usize;
+    let mut rng = Rng::new(901);
+    let mut trees = vec![
+        // depth 0: single-leaf tree (no branch rows in any section).
+        Tree { nodes: vec![Node::Leaf { values: random_dist(&mut rng, nc) }] },
+        // a stump.
+        balanced_tree(&mut rng, 2, nf, nc),
+    ];
+    // QuickScorer u64-mask eligibility boundary: 63/64/65 leaves.
+    for leaves in [63, 64, 65] {
+        trees.push(balanced_tree(&mut rng, leaves, nf, nc));
+    }
+    assert_bin_parity_rf(&hand_model(trees, nf, nc), "stumps");
+}
+
+#[test]
+fn ragged_random_topologies_round_trip() {
+    let nf = 9usize;
+    let nc = 4usize;
+    for seed in [11u64, 12] {
+        let mut rng = Rng::new(seed);
+        let trees: Vec<Tree> =
+            (0..6).map(|i| random_tree(&mut rng, 2 + i * 2, nf, nc)).collect();
+        assert_bin_parity_rf(&hand_model(trees, nf, nc), &format!("ragged{seed}"));
+    }
+}
+
+#[test]
+fn chain_topologies_round_trip() {
+    let nf = 5usize;
+    let nc = 3usize;
+    let mut rng = Rng::new(77);
+    let trees = vec![
+        chain_tree(&mut rng, 16, nf, nc),
+        chain_tree(&mut rng, 9, nf, nc),
+        random_tree(&mut rng, 4, nf, nc),
+    ];
+    assert_bin_parity_rf(&hand_model(trees, nf, nc), "chains");
+}
+
+/// ≥200-feature regression: the SoA feature planes and the header's
+/// `n_features` must agree on very wide rows.
+#[test]
+fn wide_230_feature_forest_round_trips() {
+    let spec = SynthSpec {
+        n_rows: 900,
+        n_features: 230,
+        n_classes: 4,
+        teacher_depth: 6,
+        label_noise: 0.04,
+        class_prior: vec![0.4, 0.3, 0.2, 0.1],
+        range: (-50.0, 50.0),
+    };
+    let ds = synth::generate(&spec, 44);
+    let model = RandomForest::train(
+        &ds,
+        &ForestParams { n_trees: 4, max_depth: 6, ..Default::default() },
+        44,
+    );
+    assert_bin_parity_rf(&model, "wide230");
+}
+
+/// A trained forest on realistic data, plus the float and FlInt engine
+/// families rebuilt from the same binary artifact: all three families
+/// must match their JSON-compiled twins bit for bit.
+#[test]
+fn trained_rf_all_engine_families_agree_after_reload() {
+    let ds = shuttle_like(1200, 91);
+    let model = RandomForest::train(
+        &ds,
+        &ForestParams { n_trees: 8, max_depth: 6, ..Default::default() },
+        91,
+    );
+    assert_bin_parity_rf(&model, "shuttle");
+
+    let mut rng = Rng::new(91);
+    let rows = probe_rows(&mut rng, &model, 40);
+    let json_model = Model::from_json(&model.to_json()).expect("JSON round-trip");
+    for order in NodeOrder::all() {
+        let jf = FloatEngine::compile_with(&json_model, order);
+        let bytes = binfmt::write_forest(jf.forest());
+        let bf = FloatEngine::from_forest(
+            OwnedBin::from_bytes(&bytes).view().expect("load").to_forest().expect("rf"),
+        );
+        assert_eq!(
+            jf.predict_proba_batch(&rows),
+            bf.predict_proba_batch(&rows),
+            "float family diverges ({})",
+            order.name()
+        );
+
+        let ji = FlIntEngine::compile_with(&json_model, order);
+        let bytes = binfmt::write_forest(ji.forest());
+        let bi = FlIntEngine::from_forest(
+            OwnedBin::from_bytes(&bytes).view().expect("load").to_forest().expect("rf"),
+        );
+        assert_eq!(
+            ji.predict_batch(&rows),
+            bi.predict_batch(&rows),
+            "flint family diverges ({})",
+            order.name()
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// GBT.
+
+#[test]
+fn gbt_round_trips_bit_identically() {
+    let ds = shuttle_like(900, 55);
+    let model =
+        train_gbt(&ds, &GbtParams { n_rounds: 5, max_depth: 4, ..Default::default() }, 55);
+    let mut rng = Rng::new(55);
+    let rows = probe_rows(&mut rng, &model, 48);
+
+    let mut json_engine =
+        GbtIntEngine::compile(&Model::from_json(&model.to_json()).expect("JSON round-trip"));
+    let bytes = binfmt::write_gbt(&json_engine);
+    let owned = OwnedBin::from_bytes(&bytes);
+    let view = owned.view().expect("load gbt");
+    assert_eq!(view.kind(), BinKind::Gbt);
+    // Kind confusion is a typed error, not a misinterpretation.
+    assert!(matches!(view.to_forest(), Err(BinError::KindMismatch { .. })));
+    let mut bin_engine = view.to_gbt().expect("to_gbt");
+    assert_eq!(binfmt::write_gbt(&bin_engine), bytes, "gbt re-serialization not byte-stable");
+
+    for kernel in TraversalKernel::all() {
+        for &backend in SimdBackend::available() {
+            for threads in [1usize, 2] {
+                for e in [&mut json_engine, &mut bin_engine] {
+                    e.set_kernel(kernel);
+                    e.set_backend(backend);
+                    e.set_threads(threads);
+                }
+                let tag = format!("gbt/{}/{}/{threads}t", kernel.name(), backend.name());
+                assert_eq!(
+                    json_engine.predict_fixed_batch(&rows),
+                    bin_engine.predict_fixed_batch(&rows),
+                    "{tag}: margins diverge"
+                );
+                assert_eq!(
+                    json_engine.predict_batch(&rows),
+                    bin_engine.predict_batch(&rows),
+                    "{tag}: classes diverge"
+                );
+            }
+        }
+    }
+    let nf = model.n_features;
+    for i in 0..rows.len() / nf {
+        let row = &rows[i * nf..(i + 1) * nf];
+        assert_eq!(
+            json_engine.predict_proba(row),
+            bin_engine.predict_proba(row),
+            "gbt probabilities diverge at row {i}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Alignment fallback at the integration level.
+
+/// File reads land in `Vec<u8>` with no alignment promise. A deliberately
+/// shifted buffer must either load (the allocator happened to align it)
+/// or fail with exactly [`BinError::Unaligned`] — and [`OwnedBin`] must
+/// always recover it with full prediction parity.
+#[test]
+fn unaligned_sources_recover_through_owned_copy() {
+    let ds = shuttle_like(600, 21);
+    let model = RandomForest::train(
+        &ds,
+        &ForestParams { n_trees: 3, max_depth: 4, ..Default::default() },
+        21,
+    );
+    let engine = IntEngine::compile(&model);
+    let bytes = binfmt::write_forest(engine.forest());
+
+    let mut shifted = vec![0u8; bytes.len() + 1];
+    shifted[1..].copy_from_slice(&bytes);
+    let slice = &shifted[1..];
+    match binfmt::load(slice) {
+        Err(BinError::Unaligned) | Ok(_) => {}
+        Err(e) => panic!("shifted buffer must only fail as Unaligned, got {e}"),
+    }
+
+    let owned = OwnedBin::from_bytes(slice);
+    let reloaded = IntEngine::from_forest(owned.view().expect("load").to_forest().expect("rf"));
+    for i in 0..32 {
+        assert_eq!(
+            engine.predict_fixed(ds.row(i)),
+            reloaded.predict_fixed(ds.row(i)),
+            "row {i} diverges after the owned-copy recovery"
+        );
+    }
+}

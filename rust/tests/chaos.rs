@@ -20,13 +20,16 @@
 //! path; `env_plan_drives_injection` covers it hermetically here).
 
 use intreeger::coordinator::{
-    BatchPolicy, FaultPlan, InferenceServer, ServeError, ServerConfig, DEGRADE_AFTER, FAULTS_ENV,
+    BatchPolicy, FaultPlan, InferenceServer, Metrics, ModelRegistry, RegistryError, ServeError,
+    ServerConfig, DEGRADE_AFTER, FAULTS_ENV,
 };
 use intreeger::data::{shuttle_like, Dataset};
 use intreeger::inference::IntEngine;
 use intreeger::ir::Model;
 use intreeger::trees::{ForestParams, RandomForest};
-use std::time::Duration;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 const RESOLVE: Duration = Duration::from_secs(10);
 
@@ -341,4 +344,225 @@ fn malformed_env_plan_is_ignored_not_fatal() {
     let r = server.infer(ds.row(0).to_vec()).expect("serves despite bad plan");
     assert_eq!(r.fixed, IntEngine::compile(&m).predict_fixed(ds.row(0)));
     assert_eq!(server.metrics().shed, 0);
+}
+
+// ---------------------------------------------------------------------------
+// Hot-swap chaos (ISSUE 9): version swaps under flood. The registry's
+// swap-drain protocol promises that a publish is invisible to in-flight
+// traffic — every admitted request is answered by the version that
+// admitted it, nothing is dropped, and once the old version drains, all
+// new traffic serves from the new one.
+
+/// A second model on the same schema, trained differently enough that
+/// the two versions are distinguishable by their fixed accumulators.
+fn model_v2(ds: &Dataset) -> Model {
+    RandomForest::train(
+        ds,
+        &ForestParams { n_trees: 8, max_depth: 4, ..Default::default() },
+        19,
+    )
+}
+
+fn swap_config() -> ServerConfig {
+    ServerConfig {
+        policy: BatchPolicy { max_batch: 16, max_wait: Duration::from_micros(200) },
+        n_workers: 2,
+        faults: no_faults(),
+        ..Default::default()
+    }
+}
+
+/// Swap v1 → v2 in the middle of a multi-threaded flood: no reply is
+/// lost, every reply is bit-identical to one of the two versions'
+/// oracles, post-drain traffic answers from v2 only, the per-version
+/// accounting identity holds, and the memory gauges release v1.
+#[test]
+fn hot_swap_mid_flood_loses_no_replies() {
+    let (ds, m1) = model();
+    let m2 = model_v2(&ds);
+    let o1 = IntEngine::compile(&m1);
+    let o2 = IntEngine::compile(&m2);
+    let n_probe = 100usize;
+    let rows: Arc<Vec<Vec<f32>>> = Arc::new((0..n_probe).map(|i| ds.row(i).to_vec()).collect());
+    let exp1: Arc<Vec<Vec<u32>>> =
+        Arc::new((0..n_probe).map(|i| o1.predict_fixed(ds.row(i))).collect());
+    let exp2: Arc<Vec<Vec<u32>>> =
+        Arc::new((0..n_probe).map(|i| o2.predict_fixed(ds.row(i))).collect());
+    assert!(exp1.iter().zip(exp2.iter()).any(|(a, b)| a != b), "versions must be distinguishable");
+
+    let registry = Arc::new(ModelRegistry::new(Arc::new(Metrics::new())));
+    registry
+        .publish("m", 1, 4096, InferenceServer::start(&m1, None, swap_config()))
+        .expect("publish v1");
+    // Hold v1 so its metrics stay readable after the swap drops it from
+    // the slot (in production this handle is an in-flight request's).
+    let v1 = registry.resolve("m", None).expect("resolve v1");
+    assert_eq!(v1.version(), 1);
+
+    let n_threads = 4usize;
+    let per_thread = 120usize;
+    let done = Arc::new(AtomicU64::new(0));
+    let handles: Vec<_> = (0..n_threads)
+        .map(|t| {
+            let registry = Arc::clone(&registry);
+            let (rows, exp1, exp2) = (Arc::clone(&rows), Arc::clone(&exp1), Arc::clone(&exp2));
+            let done = Arc::clone(&done);
+            std::thread::spawn(move || {
+                let mut matched = 0usize;
+                for k in 0..per_thread {
+                    let i = (t + k * 4) % rows.len();
+                    let r = registry
+                        .infer("m", None, rows[i].clone())
+                        .expect("no lost reply under a fault-free swap");
+                    assert!(
+                        r.fixed == exp1[i] || r.fixed == exp2[i],
+                        "thread {t} row {i}: reply matches neither version's oracle"
+                    );
+                    matched += 1;
+                    done.fetch_add(1, Ordering::Relaxed);
+                }
+                matched
+            })
+        })
+        .collect();
+
+    // Swap once a third of the flood has been answered — mid-stream, not
+    // before or after it.
+    let third = (n_threads * per_thread / 3) as u64;
+    let deadline = Instant::now() + RESOLVE;
+    while done.load(Ordering::Relaxed) < third {
+        assert!(Instant::now() < deadline, "flood stalled before the swap point");
+        std::thread::yield_now();
+    }
+    registry
+        .publish("m", 2, 8192, InferenceServer::start(&m2, None, swap_config()))
+        .expect("publish v2 mid-flood");
+
+    let replies: usize = handles.into_iter().map(|h| h.join().expect("flood thread")).sum();
+    assert_eq!(replies, n_threads * per_thread, "every flooded request replied");
+
+    // Post-drain: unpinned traffic serves v2, bit-identically.
+    let v2 = registry.resolve("m", None).expect("resolve after swap");
+    assert_eq!(v2.version(), 2);
+    for i in 0..20 {
+        let r = registry.infer("m", None, rows[i].clone()).expect("post-swap serve");
+        assert_eq!(r.fixed, exp2[i], "post-drain row {i} must answer from v2");
+    }
+    // The non-retaining publish dropped v1 from the slot: pinning it is
+    // now a typed error, not a stale route.
+    assert!(matches!(
+        registry.infer("m", Some(1), rows[0].clone()),
+        Err(RegistryError::UnknownVersion { .. })
+    ));
+
+    // Accounting identity per version, and totals across the swap.
+    let s1 = v1.server().metrics();
+    let s2 = v2.server().metrics();
+    for (tag, s) in [("v1", &s1), ("v2", &s2)] {
+        assert_eq!(
+            s.requests,
+            s.responses + s.expired + s.lost,
+            "{tag}: admitted = served + expired + lost"
+        );
+        assert_eq!((s.expired, s.lost), (0, 0), "{tag}: fault-free swap loses nothing");
+    }
+    assert_eq!(
+        s1.requests + s2.requests,
+        (n_threads * per_thread + 20) as u64,
+        "both versions together saw exactly the flood"
+    );
+
+    // Releasing the last v1 handle drains it and releases its gauges.
+    drop(v1);
+    let gauges = registry.metrics().snapshot();
+    assert_eq!((gauges.model_count, gauges.model_bytes), (1, 8192));
+}
+
+/// The drain half of the protocol, isolated: a wave parked in v1's
+/// batcher when the swap lands still completes *on v1* (flushed by the
+/// drain, answered with v1's bits) while new traffic is already being
+/// served by v2.
+#[test]
+fn in_flight_v1_batches_drain_on_v1_while_v2_takes_over() {
+    let (ds, m1) = model();
+    let m2 = model_v2(&ds);
+    let o1 = IntEngine::compile(&m1);
+    let o2 = IntEngine::compile(&m2);
+
+    let registry = Arc::new(ModelRegistry::new(Arc::new(Metrics::new())));
+    // A long deadline and a large batch: the wave below sits in the
+    // batcher instead of flushing, so the swap provably overlaps it.
+    let parked = ServerConfig {
+        policy: BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(500) },
+        n_workers: 1,
+        faults: no_faults(),
+        ..Default::default()
+    };
+    registry.publish("m", 1, 4096, InferenceServer::start(&m1, None, parked)).expect("v1");
+    let v1 = registry.resolve("m", None).expect("resolve v1");
+    let rxs: Vec<_> = (0..12)
+        .map(|i| v1.server().submit(ds.row(i).to_vec()).expect("admitted on v1"))
+        .collect();
+
+    registry
+        .publish("m", 2, 4096, InferenceServer::start(&m2, None, swap_config()))
+        .expect("publish v2 over a parked wave");
+    for i in 0..8 {
+        let r = registry.infer("m", None, ds.row(i).to_vec()).expect("v2 serves during drain");
+        assert_eq!(r.fixed, o2.predict_fixed(ds.row(i)), "new row {i} answers from v2");
+    }
+
+    // Dropping the last handle runs the drain: the parked wave must be
+    // flushed and answered — by v1 — not disconnected.
+    drop(v1);
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let r = rx
+            .recv_timeout(RESOLVE)
+            .expect("drained request must resolve, not hang or disconnect")
+            .expect("drained request serves");
+        assert_eq!(r.fixed, o1.predict_fixed(ds.row(i)), "parked row {i} answers from v1");
+    }
+}
+
+/// A swap prompted by the worst reason — the old version's worker is
+/// crashing under a scripted fault plan: stranded v1 requests resolve as
+/// typed `WorkerLost` (never hang), the accounting identity holds on
+/// both sides, and the registry serves v2 cleanly afterwards.
+#[test]
+fn swap_away_from_a_crashing_version_keeps_the_identity() {
+    let (ds, m1) = model();
+    let m2 = model_v2(&ds);
+    let o2 = IntEngine::compile(&m2);
+
+    let registry = Arc::new(ModelRegistry::new(Arc::new(Metrics::new())));
+    let crashing = ServerConfig {
+        policy: BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(20) },
+        n_workers: 1,
+        faults: Some(FaultPlan { panic_batches: vec![1], ..FaultPlan::none() }),
+        ..Default::default()
+    };
+    registry.publish("m", 1, 4096, InferenceServer::start(&m1, None, crashing)).expect("v1");
+    let v1 = registry.resolve("m", None).expect("resolve v1");
+    let rxs: Vec<_> = (0..8)
+        .map(|i| v1.server().submit(ds.row(i).to_vec()).expect("admitted"))
+        .collect();
+    for rx in rxs {
+        let resolved = rx.recv_timeout(RESOLVE).expect("stranded request resolves, not hangs");
+        assert_eq!(resolved, Err(ServeError::WorkerLost));
+    }
+
+    registry
+        .publish("m", 2, 4096, InferenceServer::start(&m2, None, swap_config()))
+        .expect("publish the replacement");
+    for i in 0..8 {
+        let r = registry.infer("m", None, ds.row(i).to_vec()).expect("replacement serves");
+        assert_eq!(r.fixed, o2.predict_fixed(ds.row(i)), "row {i} from v2");
+    }
+
+    let s1 = v1.server().metrics();
+    assert_eq!(s1.lost, 8, "every stranded v1 request accounted as lost");
+    assert_eq!(s1.requests, s1.responses + s1.expired + s1.lost, "v1 identity under crash");
+    let s2 = registry.resolve("m", None).expect("v2").server().metrics();
+    assert_eq!(s2.requests, s2.responses + s2.expired + s2.lost, "v2 identity");
+    assert_eq!(s2.responses, 8);
 }

@@ -1,14 +1,20 @@
 //! Corrupt-input corpus: every model-loading front door — the IR JSON
-//! deserializer, the LightGBM/XGBoost importers, and both manifest
-//! parsers — must turn arbitrary broken input into a typed error. No
-//! panic, no hang, no pathological allocation driven by a hostile
-//! header. (ISSUE 7 satellite: harden model-loading inputs.)
+//! deserializer, the LightGBM/XGBoost importers, both manifest parsers,
+//! and the INTB zero-copy binary loader — must turn arbitrary broken
+//! input into a typed error. No panic, no hang, no over-read, no
+//! pathological allocation driven by a hostile header. (ISSUE 7
+//! satellite: harden model-loading inputs; ISSUE 9 satellite: the
+//! hostile-binary corpus.)
 
 use intreeger::data::shuttle_like;
+use intreeger::inference::{GbtIntEngine, IntEngine};
 use intreeger::ir::import::{lightgbm, xgboost};
 use intreeger::ir::{IrError, Model, MAX_CLASSES, MAX_FEATURES, MAX_TREES};
+use intreeger::runtime::binfmt::{
+    self, BinError, BinKind, OwnedBin, ENDIAN_TAG, HEADER_LEN, VERSION,
+};
 use intreeger::runtime::{Manifest, PipelineManifest};
-use intreeger::trees::{ForestParams, RandomForest};
+use intreeger::trees::{train_gbt, ForestParams, GbtParams, RandomForest};
 
 fn trained_model_json() -> String {
     let ds = shuttle_like(400, 13);
@@ -251,4 +257,223 @@ fn bundle_with_corrupt_model_file_errors() {
     let err = m.load_model(&dir, "rf").unwrap_err().to_string();
     assert!(err.contains("model_rf.json"), "error must locate the file: {err}");
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// Hostile INTB binaries (ISSUE 9 satellite). The binary loader's
+// contract is sharper than the JSON one's: the input is attacker-shaped
+// *pointer math*, so every mutation below must surface as a typed
+// `BinError` from bounds/validation code — never a panic, never a read
+// past the buffer.
+
+fn rf_bin() -> Vec<u8> {
+    let ds = shuttle_like(500, 61);
+    let model = RandomForest::train(
+        &ds,
+        &ForestParams { n_trees: 3, max_depth: 4, ..Default::default() },
+        61,
+    );
+    binfmt::write_forest(IntEngine::compile(&model).forest())
+}
+
+fn gbt_bin() -> Vec<u8> {
+    let ds = shuttle_like(500, 62);
+    let model =
+        train_gbt(&ds, &GbtParams { n_rounds: 3, max_depth: 3, ..Default::default() }, 62);
+    binfmt::write_gbt(&GbtIntEngine::compile(&model))
+}
+
+/// Run hostile bytes through the aligned owned path and, when the view
+/// parses, on into engine materialization. The typed error may surface
+/// at either stage; `None` means the artifact was fully accepted.
+fn reject(bytes: &[u8]) -> Option<BinError> {
+    let owned = OwnedBin::from_bytes(bytes);
+    match owned.view() {
+        Err(e) => Some(e),
+        Ok(v) => match v.kind() {
+            BinKind::Rf => v.to_forest().err(),
+            BinKind::Gbt => v.to_gbt().err(),
+        },
+    }
+}
+
+fn patched32(bytes: &[u8], off: usize, v: u32) -> Vec<u8> {
+    let mut b = bytes.to_vec();
+    b[off..off + 4].copy_from_slice(&v.to_ne_bytes());
+    b
+}
+
+fn patched64(bytes: &[u8], off: usize, v: u64) -> Vec<u8> {
+    let mut b = bytes.to_vec();
+    b[off..off + 8].copy_from_slice(&v.to_ne_bytes());
+    b
+}
+
+/// Decode the section table: `(offset, len)` per section, in file order.
+fn sections(bytes: &[u8]) -> Vec<(usize, usize)> {
+    let n = u32::from_ne_bytes(bytes[60..64].try_into().unwrap()) as usize;
+    (0..n)
+        .map(|i| {
+            let at = HEADER_LEN + i * 16;
+            (
+                u64::from_ne_bytes(bytes[at..at + 8].try_into().unwrap()) as usize,
+                u64::from_ne_bytes(bytes[at + 8..at + 16].try_into().unwrap()) as usize,
+            )
+        })
+        .collect()
+}
+
+/// Truncating an artifact at every structurally interesting byte — mid
+/// magic, mid header, at the section table edge, and at both edges of
+/// every section — must produce a typed error, never an accepted model.
+#[test]
+fn truncated_binaries_error_at_every_section_boundary() {
+    for bytes in [rf_bin(), gbt_bin()] {
+        assert!(reject(&bytes).is_none(), "control artifact must load");
+        let mut cuts = vec![0, 1, 3, 4, HEADER_LEN - 1, HEADER_LEN];
+        for (off, len) in sections(&bytes) {
+            cuts.extend([off.saturating_sub(1), off, off + 1, (off + len).saturating_sub(1), off + len]);
+        }
+        cuts.push(bytes.len() - 1);
+        for cut in cuts {
+            if cut >= bytes.len() {
+                continue;
+            }
+            assert!(
+                reject(&bytes[..cut]).is_some(),
+                "truncation at byte {cut}/{} must not yield a model",
+                bytes.len()
+            );
+        }
+    }
+}
+
+/// Fixed-header forgeries: wrong magic, unknown version, foreign
+/// endianness, unknown kind code, a lying file length, and dirty
+/// reserved bytes each map to their specific error variant.
+#[test]
+fn forged_binary_headers_are_typed_errors() {
+    let bytes = rf_bin();
+    let mut bad_magic = bytes.clone();
+    bad_magic[0] = b'J';
+    assert!(matches!(reject(&bad_magic), Some(BinError::BadMagic(_))));
+    assert!(matches!(
+        reject(&patched32(&bytes, 4, VERSION + 1)),
+        Some(BinError::BadVersion(v)) if v == VERSION + 1
+    ));
+    assert!(matches!(
+        reject(&patched32(&bytes, 8, ENDIAN_TAG.swap_bytes())),
+        Some(BinError::BadEndianness(_))
+    ));
+    assert!(matches!(reject(&patched32(&bytes, 12, 7)), Some(BinError::BadKind(7))));
+    assert!(matches!(
+        reject(&patched64(&bytes, 64, bytes.len() as u64 + 64)),
+        Some(BinError::BadHeader(_))
+    ));
+    let mut dirty_reserved = bytes.clone();
+    dirty_reserved[100] = 1;
+    assert!(matches!(reject(&dirty_reserved), Some(BinError::BadHeader(_))));
+    // An RF artifact claiming a GBT margin scale is inconsistent.
+    assert!(matches!(reject(&patched32(&bytes, 40, 1)), Some(BinError::BadHeader(_))));
+}
+
+/// Header counts beyond the IR capacity limits (or zero where zero is
+/// meaningless) are refused before any per-node work — the same
+/// `MAX_*` gates the JSON door enforces.
+#[test]
+fn oversized_binary_header_counts_are_rejected() {
+    let bytes = rf_bin();
+    for (off, val, what) in [
+        (16, MAX_FEATURES as u32 + 1, "n_features over cap"),
+        (16, 0, "zero features"),
+        (20, MAX_CLASSES as u32 + 1, "n_classes over cap"),
+        (20, 0, "zero classes"),
+        (24, MAX_TREES as u32 + 1, "n_trees over cap"),
+        (24, 0, "zero trees"),
+        (28, u32::MAX, "node count not matching any section"),
+        (32, 0, "zero leaves"),
+        (36, 9, "unknown node-order code"),
+        (60, 0, "zero sections"),
+        (60, 1000, "wrong section count"),
+    ] {
+        assert!(reject(&patched32(&bytes, off, val)).is_some(), "{what} must error");
+    }
+}
+
+/// Section-table mutations: misaligned starts, out-of-bounds offsets,
+/// off-by-one lengths, overlapping/backward sections, and a length
+/// chosen to bait an over-read. All contained, all typed.
+#[test]
+fn mutated_section_tables_are_contained() {
+    for bytes in [rf_bin(), gbt_bin()] {
+        let table = sections(&bytes);
+        // Section 0 pointed back into the header (backward/overlapping).
+        assert!(reject(&patched64(&bytes, HEADER_LEN, 0)).is_some());
+        for (i, &(off, len)) in table.iter().enumerate() {
+            let at = HEADER_LEN + i * 16;
+            assert!(
+                reject(&patched64(&bytes, at, off as u64 + 1)).is_some(),
+                "section {i}: misaligned start must error"
+            );
+            assert!(
+                reject(&patched64(&bytes, at, bytes.len() as u64 + 64)).is_some(),
+                "section {i}: start beyond EOF must error"
+            );
+            assert!(
+                reject(&patched64(&bytes, at + 8, len as u64 + 1)).is_some(),
+                "section {i}: length +1 must error"
+            );
+            if len > 0 {
+                assert!(
+                    reject(&patched64(&bytes, at + 8, len as u64 - 1)).is_some(),
+                    "section {i}: length -1 must error"
+                );
+            }
+            assert!(
+                reject(&patched64(&bytes, at + 8, u64::MAX / 2)).is_some(),
+                "section {i}: huge length must be bounds-checked, not trusted"
+            );
+            if i > 0 {
+                assert!(
+                    reject(&patched64(&bytes, at, table[i - 1].0 as u64)).is_some(),
+                    "section {i}: overlap with section {} must error",
+                    i - 1
+                );
+            }
+        }
+    }
+}
+
+/// Blind byte flips across the whole artifact — header, table, and
+/// payload: any outcome is fine except a panic. (Payload flips that
+/// survive structural validation load; most trip the SoA-mirror or
+/// topology checks.)
+#[test]
+fn binary_byte_flips_never_panic() {
+    for bytes in [rf_bin(), gbt_bin()] {
+        for pos in (0..bytes.len()).step_by(bytes.len() / 331 + 1) {
+            let mut b = bytes.clone();
+            b[pos] ^= 0x41;
+            let _ = reject(&b);
+        }
+    }
+}
+
+/// Format confusion in both directions: INTB bytes handed to the JSON
+/// deserializer and JSON text handed to the binary loader are each a
+/// typed rejection, and the cheap `is_binary` sniff agrees with both.
+#[test]
+fn json_and_binary_front_doors_reject_each_other() {
+    let bin = rf_bin();
+    assert!(binfmt::is_binary(&bin));
+    let as_text = String::from_utf8_lossy(&bin).into_owned();
+    assert!(Model::from_json(&as_text).is_err(), "JSON door must refuse INTB bytes");
+
+    let json = trained_model_json();
+    assert!(!binfmt::is_binary(json.as_bytes()));
+    assert!(matches!(
+        OwnedBin::from_bytes(json.as_bytes()).view(),
+        Err(BinError::BadMagic(_))
+    ));
+    assert!(matches!(OwnedBin::from_bytes(b"{}").view(), Err(BinError::TooShort { .. })));
 }
