@@ -5,6 +5,10 @@
 //!   validate-and-cast (the zero-copy view) vs INTB engine
 //!   materialization. The binary path's headline is that validation is
 //!   bounds arithmetic, not per-node deserialization.
+//! * **File load path** — `FileBin::open` (mmap(2) on unix, owned-copy
+//!   fallback elsewhere) vs an explicit read-into-heap + validate. The
+//!   delta is the byte copy the mapped path never pays; the fleet
+//!   section's RSS line below shows the residency side of the same coin.
 //! * **Hot-swap latency** — publishing a pre-started server over a live
 //!   registry, including the drain of the displaced version (the
 //!   operator-visible "reload" cost).
@@ -23,7 +27,7 @@ use intreeger::coordinator::{
 use intreeger::data::shuttle_like;
 use intreeger::inference::IntEngine;
 use intreeger::ir::Model;
-use intreeger::runtime::binfmt::{self, OwnedBin};
+use intreeger::runtime::binfmt::{self, FileBin, OwnedBin};
 use intreeger::trees::{ForestParams, RandomForest};
 use intreeger::util::bench::{black_box, measure_opts, report, section, BenchOpts};
 use std::sync::Arc;
@@ -74,6 +78,33 @@ fn main() {
         black_box(IntEngine::from_forest(v.to_forest().expect("materialize")));
     });
     report("load/intb_validate_and_engine", &m);
+
+    section("file load path: mmap(2) vs owned copy (FileBin)");
+    let bin_path = std::env::temp_dir().join(format!("intreeger_filebin_bench_{}.bin", std::process::id()));
+    std::fs::write(&bin_path, &bin).expect("write bench artifact");
+    let first = FileBin::open(&bin_path).expect("open artifact");
+    println!(
+        "FileBin source on this platform: {} ({} bytes)",
+        first.source(),
+        first.bytes().len()
+    );
+    drop(first);
+    let m = measure_opts(opts, 1, || {
+        // The serving-path load: mmap(2) the artifact (owned-copy
+        // fallback off unix), then run the full zero-copy validation.
+        let f = FileBin::open(black_box(&bin_path)).expect("open");
+        black_box(f.view().expect("validate").resident_bytes());
+    });
+    report("load/filebin_mmap_validate", &m);
+    let m = measure_opts(opts, 1, || {
+        // The pre-PR-10 path: read the whole file into a heap copy,
+        // then validate. The delta is the copy the mmap path never pays.
+        let bytes = std::fs::read(black_box(&bin_path)).expect("read");
+        let owned = OwnedBin::from_bytes(&bytes);
+        black_box(owned.view().expect("validate").resident_bytes());
+    });
+    report("load/filebin_owned_copy_validate", &m);
+    let _ = std::fs::remove_file(&bin_path);
 
     section("hot swap: publish + drain over a live registry");
     let registry = Arc::new(ModelRegistry::new(Arc::new(Metrics::new())));

@@ -25,8 +25,14 @@
 //! the knee, shed + TTL expiry absorbing everything above it, and the
 //! accounting identity `ok + shed + expired + lost == offered` holding
 //! at every point.
+//!
+//! ISSUE 10 adds the **admission path comparison** (schema 3): the same
+//! closed-loop workload through the clone-per-request `submit` path
+//! (heap `Vec<f32>` + fresh reply channel per request) and through the
+//! slab path (`checkout_row` into the arena + one reused `ReplySlot`),
+//! quantifying what the zero-alloc hot path buys at admission time.
 
-use intreeger::coordinator::{BatchPolicy, InferenceServer, ServeError, ServerConfig};
+use intreeger::coordinator::{BatchPolicy, InferenceServer, ReplySlot, ServeError, ServerConfig};
 use intreeger::data::shuttle_like;
 use intreeger::inference::IntEngine;
 use intreeger::runtime::{artifacts_available, engine_for_model};
@@ -303,14 +309,17 @@ fn overload_section(model: &intreeger::ir::Model, ds: &intreeger::data::Dataset)
     // fractions/multiples of the measured capacity.
     let saturation = poisson_saturation(model, ds, capacity, smoke);
 
+    // Admission path comparison (schema 3): clone vs slab hot path.
+    let admission = admission_section(model, ds, smoke);
+
     // Machine-readable artifact, BENCH_batch.json-style.
     let path = std::env::var("INTREEGER_SERVE_JSON").unwrap_or_else(|_| {
         concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve.json").to_string()
     });
     let doc = obj(vec![
         ("bench", s("serve_throughput")),
-        ("schema", num(2.0)),
-        ("note", s("overload study + Poisson saturation curve; regenerate with: cargo bench --bench serve_throughput")),
+        ("schema", num(3.0)),
+        ("note", s("overload study + Poisson saturation curve + admission path comparison; regenerate with: cargo bench --bench serve_throughput")),
         ("pending", Json::Bool(false)),
         ("smoke", Json::Bool(smoke)),
         ("capacity_req_s", num(capacity)),
@@ -330,6 +339,7 @@ fn overload_section(model: &intreeger::ir::Model, ds: &intreeger::data::Dataset)
             ]),
         ),
         ("saturation", saturation),
+        ("admission", admission),
     ]);
     match std::fs::write(&path, doc.to_string() + "\n") {
         Ok(()) => println!("wrote {path}"),
@@ -460,4 +470,63 @@ fn poisson_saturation(
     // (and the CI validator can assert monotonicity directly).
     points.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
     arr(points.into_iter().map(|(_, p)| p))
+}
+
+/// ISSUE-10 admission path comparison. The same closed-loop workload
+/// (submit, wait for the reply, repeat — queueing excluded so the delta
+/// is pure admission cost) through both front doors:
+///
+/// * **clone** — `submit(Vec<f32>)`: a heap copy of the feature row and
+///   a fresh reply channel per request (the pre-slab path, still the
+///   right call for callers who already own a `Vec`);
+/// * **slab** — `checkout_row` + `copy_from` + `submit_pooled` with one
+///   reused [`ReplySlot`]: features land in the arena, the reply reuses
+///   the slot's channel and recycled payload `Vec` — zero allocations
+///   per request in steady state (the counting-allocator test in
+///   `tests/http_corpus.rs` proves that claim; this section prices it).
+///
+/// Returns the machine-readable `admission` object for `BENCH_serve.json`.
+fn admission_section(model: &intreeger::ir::Model, ds: &intreeger::data::Dataset, smoke: bool) -> Json {
+    section("admission path: clone-per-request vs slab checkout (closed loop)");
+    let n = if smoke { 2_000usize } else { 10_000 };
+    let config = ServerConfig {
+        policy: BatchPolicy { max_batch: 64, max_wait: Duration::from_micros(100) },
+        n_workers: 1,
+        ..Default::default()
+    };
+
+    let server = InferenceServer::start(model, None, config.clone());
+    let t0 = Instant::now();
+    for i in 0..n {
+        let rx = server.submit(ds.row(i % ds.n_rows()).to_vec()).expect("clone submit");
+        let resp = rx.recv().unwrap_or(Err(ServeError::WorkerLost)).expect("clone reply");
+        black_box(resp.class);
+    }
+    let clone_rate = n as f64 / t0.elapsed().as_secs_f64();
+    drop(server);
+
+    let server = InferenceServer::start(model, None, config);
+    let mut slot = ReplySlot::new();
+    let t0 = Instant::now();
+    for i in 0..n {
+        let mut row = server.checkout_row().expect("slab row");
+        row.copy_from(ds.row(i % ds.n_rows()));
+        server.submit_pooled(row, &mut slot).expect("pooled submit");
+        let resp = slot.recv().expect("pooled reply");
+        black_box(resp.class);
+        slot.recycle(resp.fixed);
+    }
+    let slab_rate = n as f64 / t0.elapsed().as_secs_f64();
+    drop(server);
+
+    let ratio = slab_rate / clone_rate.max(1.0);
+    println!("clone submit:   {clone_rate:>8.0} req/s (heap Vec + fresh channel per request)");
+    println!("slab  submit:   {slab_rate:>8.0} req/s (arena row + reused ReplySlot, zero alloc)");
+    println!("slab vs clone:  {ratio:.2}x");
+    obj(vec![
+        ("requests_per_leg", num(n as f64)),
+        ("clone_req_s", num(clone_rate)),
+        ("slab_req_s", num(slab_rate)),
+        ("slab_vs_clone", num(ratio)),
+    ])
 }

@@ -58,6 +58,11 @@ pub struct Batcher<T> {
     /// item carries one). Clamps the age deadline: the effective flush
     /// time is `min(oldest + max_wait, min_deadline)`.
     min_deadline: Option<Instant>,
+    /// Recycled backing storage for the next flush ([`Self::recycle`]):
+    /// `take()` swaps it in instead of allocating, so a worker that
+    /// returns its drained batch after serving keeps flushes
+    /// allocation-free in steady state.
+    spare: Vec<T>,
 }
 
 impl<T> Batcher<T> {
@@ -69,6 +74,7 @@ impl<T> Batcher<T> {
             pending: Vec::with_capacity(policy.max_batch),
             oldest: None,
             min_deadline: None,
+            spare: Vec::with_capacity(policy.max_batch),
         }
     }
 
@@ -178,7 +184,19 @@ impl<T> Batcher<T> {
     fn take(&mut self) -> Vec<T> {
         self.oldest = None;
         self.min_deadline = None;
-        std::mem::replace(&mut self.pending, Vec::with_capacity(self.policy.max_batch))
+        // Swap in the recycled spare instead of allocating. Before the
+        // first recycle the spare is a fresh `max_batch`-capacity
+        // vector; after it, flushes reuse the previous batch's storage.
+        std::mem::replace(&mut self.pending, std::mem::take(&mut self.spare))
+    }
+
+    /// Hand a served batch's (now fully consumed) backing vector back so
+    /// the next flush reuses its capacity instead of allocating. The
+    /// vector is cleared here; callers pass the `Vec` they received from
+    /// a flush after draining or dropping its items.
+    pub fn recycle(&mut self, mut buf: Vec<T>) {
+        buf.clear();
+        self.spare = buf;
     }
 
     /// Split a flushed batch into (live, expired) by per-item deadline,

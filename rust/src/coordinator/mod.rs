@@ -26,9 +26,15 @@
 //!   degraded flag).
 //! * [`faults`] — deterministic fault injection ([`FaultPlan`],
 //!   `INTREEGER_FAULTS`) powering the chaos suite.
+//! * [`slab`] — the arena-owned feature-row slab behind the pooled
+//!   admission path ([`InferenceServer::submit_pooled`]): rows are
+//!   parsed in place at admission and returned to a free-list on every
+//!   resolution path, so steady-state serving performs **zero** heap
+//!   allocations per request.
 //!
 //! Everything is std-threads + channels (the build environment has no
-//! async runtime), which also keeps the hot path allocation-light.
+//! async runtime), which also keeps the hot path allocation-free in
+//! steady state.
 //!
 //! The serving stack has a **typed failure model** (see [`server`]):
 //! every submitted request resolves with a [`Response`] or a
@@ -44,6 +50,7 @@ pub mod metrics;
 pub mod registry;
 pub mod router;
 pub mod server;
+pub mod slab;
 
 pub use batcher::{BatchPolicy, Batcher, FlushReason};
 pub use faults::{FaultPlan, Faults, FAULTS_ENV};
@@ -51,9 +58,10 @@ pub use metrics::{Metrics, MetricsSnapshot};
 pub use registry::{FleetLoader, ModelEntry, ModelInfo, ModelRegistry, RegistryError, ReloadReport};
 pub use router::{RouteError, RouteSpec, Router};
 pub use server::{
-    calibrate_execution, ExecutionChoice, InferenceServer, Request, Response, Route, ServeError,
-    ServeResult, ServerConfig, DEGRADE_AFTER,
+    calibrate_execution, ExecutionChoice, InferenceServer, ReplySlot, Request, Response, Route,
+    ServeError, ServeResult, ServerConfig, DEGRADE_AFTER,
 };
+pub use slab::{FeatureSlab, SlabRow};
 
 /// Lock a mutex, recovering from poisoning: the coordinator's
 /// mutex-guarded state (metrics histograms, per-shard batchers) is

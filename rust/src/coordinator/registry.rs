@@ -576,14 +576,15 @@ impl FleetLoader {
     }
 
     /// Load one artifact into a running server plus its resident-bytes
-    /// figure. Binary artifacts go through the zero-copy loader (via an
-    /// owned aligned copy, since `fs::read` gives no alignment
-    /// guarantee); JSON goes through the IR.
+    /// figure. Binary artifacts go through the zero-copy loader over an
+    /// `mmap(2)`-backed page-aligned view where the platform provides
+    /// one ([`FileBin`](crate::runtime::FileBin)) — validation walks
+    /// the mapped pages directly, so no heap copy of the artifact file
+    /// is ever made; JSON goes through the IR.
     fn load_one(&self, path: &std::path::Path) -> Result<(InferenceServer, u64), String> {
-        let bytes = std::fs::read(path).map_err(|e| e.to_string())?;
-        if crate::runtime::binfmt::is_binary(&bytes) {
-            let owned = crate::runtime::binfmt::OwnedBin::from_bytes(&bytes);
-            let view = owned.view().map_err(|e| e.to_string())?;
+        let file = crate::runtime::FileBin::open(path).map_err(|e| e.to_string())?;
+        if crate::runtime::binfmt::is_binary(file.bytes()) {
+            let view = file.view().map_err(|e| e.to_string())?;
             let forest = view.to_forest().map_err(|e| {
                 format!("{e} (the coordinator's u32 engine serves RF artifacts only)")
             })?;
@@ -591,7 +592,7 @@ impl FleetLoader {
             let engine = crate::inference::IntEngine::from_forest(forest);
             Ok((InferenceServer::start_with_engine(engine, self.config.clone()), resident))
         } else {
-            let text = std::str::from_utf8(&bytes).map_err(|e| e.to_string())?;
+            let text = std::str::from_utf8(file.bytes()).map_err(|e| e.to_string())?;
             let model = crate::ir::Model::from_json(text).map_err(|e| e.to_string())?;
             if model.kind != crate::ir::ModelKind::RandomForest {
                 return Err(

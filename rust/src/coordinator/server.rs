@@ -47,6 +47,7 @@ use super::batcher::{BatchPolicy, Batcher, FlushReason};
 use super::faults::{FaultPlan, Faults};
 use super::lock_unpoisoned;
 use super::metrics::Metrics;
+use super::slab::{FeatureSlab, SlabRow};
 use crate::inference::{IntEngine, SimdBackend, TraversalKernel};
 use crate::ir::{argmax, Model};
 use crate::runtime::PjrtEngine;
@@ -144,10 +145,36 @@ impl std::error::Error for ServeError {}
 /// [`ServeError`]. Never neither — the chaos suite's core invariant.
 pub type ServeResult = Result<Response, ServeError>;
 
+/// The feature payload a queued request carries: an owned vector (the
+/// legacy `submit` path and the blocking helpers) or a checked-out
+/// arena slab row (the zero-copy [`InferenceServer::submit_pooled`]
+/// path — batch formation reads the row in place and the handle
+/// returns to the slab free-list when the request resolves, on every
+/// path: responded, shed, expired, or lost).
+enum RowPayload {
+    Owned(Vec<f32>),
+    Slab(SlabRow),
+}
+
+impl RowPayload {
+    fn as_slice(&self) -> &[f32] {
+        match self {
+            RowPayload::Owned(v) => v,
+            RowPayload::Slab(r) => r.as_slice(),
+        }
+    }
+}
+
 /// An inference request: one feature row.
 pub struct Request {
-    /// The feature row to classify.
-    pub features: Vec<f32>,
+    /// The feature row to classify (owned or slab-resident).
+    row: RowPayload,
+    /// Reusable output buffer traveling with the request: the worker
+    /// fills it with the row's fixed-point accumulators and sends it
+    /// back as `Response.fixed`; pooled callers recycle it through
+    /// their [`ReplySlot`], so steady-state pooled requests allocate
+    /// nothing on resolution either.
+    fixed_buf: Vec<u32>,
     tx: SyncSender<ServeResult>,
     t_arrival: Instant,
     /// Absolute deadline; past it the request resolves as
@@ -165,7 +192,7 @@ pub enum Route {
 }
 
 /// An inference response: the integer-only result.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Response {
     /// Fixed-point class accumulators (scale 2^32/n_trees).
     pub fixed: Vec<u32>,
@@ -175,6 +202,63 @@ pub struct Response {
     pub route: Route,
     /// End-to-end latency (arrival to response).
     pub latency: Duration,
+}
+
+/// A connection-lifetime reply endpoint for the pooled admission path:
+/// one reusable rendezvous channel plus a recycled `Response.fixed`
+/// buffer. Creating the channel once per connection (instead of once
+/// per request) and recycling the output buffer through
+/// [`Self::recycle`] is what makes the pooled request loop
+/// allocation-free in steady state. The contract is strict
+/// alternation: [`InferenceServer::submit_pooled`] then
+/// [`Self::recv`], never two outstanding submissions on one slot.
+pub struct ReplySlot {
+    tx: SyncSender<ServeResult>,
+    rx: Receiver<ServeResult>,
+    spare: Vec<u32>,
+}
+
+impl ReplySlot {
+    /// Fresh slot with an empty recycled buffer (the buffer gains its
+    /// steady-state capacity on the first response).
+    pub fn new() -> ReplySlot {
+        let (tx, rx) = sync_channel(1);
+        ReplySlot { tx, rx, spare: Vec::new() }
+    }
+
+    /// Block until the outstanding pooled request resolves. A dropped
+    /// resolution (impossible while the server honors its
+    /// every-request-resolves invariant) maps to `WorkerLost`.
+    pub fn recv(&self) -> ServeResult {
+        self.rx.recv().unwrap_or(Err(ServeError::WorkerLost))
+    }
+
+    /// Hand a rendered `Response.fixed` buffer back so the next request
+    /// submitted through this slot reuses its capacity.
+    pub fn recycle(&mut self, mut fixed: Vec<u32>) {
+        fixed.clear();
+        self.spare = fixed;
+    }
+
+    fn take_fixed(&mut self) -> Vec<u32> {
+        std::mem::take(&mut self.spare)
+    }
+
+    fn sender(&self) -> SyncSender<ServeResult> {
+        self.tx.clone()
+    }
+
+    /// Drop any stale resolution left by a caller that broke the
+    /// alternation contract, so `recv` can never read an old result.
+    fn clear_stale(&self) {
+        while self.rx.try_recv().is_ok() {}
+    }
+}
+
+impl Default for ReplySlot {
+    fn default() -> Self {
+        ReplySlot::new()
+    }
 }
 
 /// Server configuration.
@@ -252,6 +336,11 @@ pub struct InferenceServer {
     shutting_down: AtomicBool,
     default_ttl: Option<Duration>,
     faults: Arc<Faults>,
+    /// Arena of feature rows backing the pooled admission path; sized
+    /// to cover the full queue depth plus in-execution batches, so
+    /// exhaustion only happens past the point where admission would
+    /// shed anyway.
+    slab: Arc<FeatureSlab>,
 }
 
 /// A shard's execution state: the shared calibrated engine, the
@@ -369,6 +458,13 @@ impl InferenceServer {
         let faults =
             Arc::new(Faults::new(config.faults.clone().unwrap_or_else(FaultPlan::from_env)));
         let per_worker_depth = (config.queue_depth / n_workers).max(1);
+        // Cache-topology-aware placement (opt-in, INTREEGER_PIN=1):
+        // each shard thread pins itself to a distinct physical core
+        // inside one LLC group, so a shard's engine tables and slab
+        // rows stay resident in a single cache domain. `None` (gate
+        // off, or no usable topology — complained about loudly once)
+        // leaves every shard wherever the scheduler puts it.
+        let pin_plan = crate::inference::parallel::active_pin_plan(n_workers).map(Arc::new);
 
         let mut txs = Vec::with_capacity(n_workers);
         let mut workers = Vec::with_capacity(n_workers);
@@ -380,11 +476,15 @@ impl InferenceServer {
             let m2 = Arc::clone(&metrics);
             let f2 = Arc::clone(&faults);
             let config = config.clone();
+            let pin_plan = pin_plan.clone();
             // Only shard 0 needs the model (to pack the XLA artifact).
             let seed = if w == 0 { xla_seed.clone() } else { None };
             let worker = std::thread::Builder::new()
                 .name(format!("intreeger-server-{w}"))
                 .spawn(move || {
+                    if let Some(plan) = &pin_plan {
+                        plan.pin(w);
+                    }
                     let xla: Option<PjrtEngine> = seed.and_then(|(dir, model)| {
                         if !crate::runtime::artifacts_available(&dir) {
                             return None;
@@ -414,6 +514,12 @@ impl InferenceServer {
                 .expect("spawn server worker");
             workers.push(worker);
         }
+        // Slab sizing: every queued request may hold a row, every
+        // worker may hold a flushed batch plus one being answered, and
+        // a margin covers rows checked out by front-end connections
+        // between checkout and submit.
+        let slab_rows = config.queue_depth + 2 * n_workers * config.policy.max_batch + 64;
+        let slab = Arc::new(FeatureSlab::new(slab_rows, n_features.max(1)));
         InferenceServer {
             txs,
             next_shard: AtomicUsize::new(0),
@@ -423,52 +529,50 @@ impl InferenceServer {
             shutting_down: AtomicBool::new(false),
             default_ttl: config.default_ttl,
             faults,
+            slab,
         }
     }
 
-    /// The full admission path. On `QueueFull` the feature row is handed
-    /// back so blocking callers can retry without cloning.
-    fn admit(
-        &self,
-        features: Vec<f32>,
-        ttl: Option<Duration>,
-    ) -> Result<Receiver<ServeResult>, (ServeError, Option<Vec<f32>>)> {
+    /// Shared admission gate: shutdown, arity, finiteness, scripted
+    /// queue-full. Counts the matching rejection/shed metrics.
+    fn gate(&self, row: &[f32]) -> Result<(), ServeError> {
         if self.shutting_down.load(Ordering::Relaxed) {
-            return Err((ServeError::ShuttingDown, Some(features)));
+            return Err(ServeError::ShuttingDown);
         }
-        if features.len() != self.n_features {
+        if row.len() != self.n_features {
             self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
-            let e = ServeError::WrongFeatureCount {
+            return Err(ServeError::WrongFeatureCount {
                 expected: self.n_features,
-                got: features.len(),
-            };
-            return Err((e, Some(features)));
+                got: row.len(),
+            });
         }
-        if let Some(index) = features.iter().position(|v| !v.is_finite()) {
+        if let Some(index) = row.iter().position(|v| !v.is_finite()) {
             self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
-            return Err((ServeError::NonFiniteFeature { index }, Some(features)));
+            return Err(ServeError::NonFiniteFeature { index });
         }
         if self.faults.inject_queue_full() {
             self.metrics.shed.fetch_add(1, Ordering::Relaxed);
-            return Err((ServeError::QueueFull, Some(features)));
+            return Err(ServeError::QueueFull);
         }
-        let (tx, rx) = sync_channel(1);
-        let t_arrival = Instant::now();
-        let deadline = ttl.and_then(|d| t_arrival.checked_add(d));
-        let req = Request { features, tx, t_arrival, deadline };
+        Ok(())
+    }
+
+    /// Enqueue an already-gated request. On a full shard the whole
+    /// request is handed back so the caller can reclaim its payload.
+    fn enqueue(&self, req: Request) -> Result<(), (ServeError, Option<Request>)> {
         let shard = self.next_shard.fetch_add(1, Ordering::Relaxed) % self.txs.len();
         match self.txs[shard].try_send(Msg::Infer(req)) {
             Ok(()) => {
                 self.metrics.requests.fetch_add(1, Ordering::Relaxed);
-                Ok(rx)
+                Ok(())
             }
             Err(TrySendError::Full(msg)) => {
                 self.metrics.shed.fetch_add(1, Ordering::Relaxed);
-                let features = match msg {
-                    Msg::Infer(r) => Some(r.features),
+                let req = match msg {
+                    Msg::Infer(r) => Some(r),
                     Msg::Shutdown => None,
                 };
-                Err((ServeError::QueueFull, features))
+                Err((ServeError::QueueFull, req))
             }
             Err(TrySendError::Disconnected(_)) => {
                 // Workers only exit on shutdown (panics are supervised),
@@ -479,6 +583,39 @@ impl InferenceServer {
                     ServeError::WorkerLost
                 };
                 Err((e, None))
+            }
+        }
+    }
+
+    /// The full owned-row admission path. On `QueueFull` the feature
+    /// row is handed back so blocking callers can retry without
+    /// cloning.
+    fn admit(
+        &self,
+        features: Vec<f32>,
+        ttl: Option<Duration>,
+    ) -> Result<Receiver<ServeResult>, (ServeError, Option<Vec<f32>>)> {
+        if let Err(e) = self.gate(&features) {
+            return Err((e, Some(features)));
+        }
+        let (tx, rx) = sync_channel(1);
+        let t_arrival = Instant::now();
+        let deadline = ttl.and_then(|d| t_arrival.checked_add(d));
+        let req = Request {
+            row: RowPayload::Owned(features),
+            fixed_buf: Vec::new(),
+            tx,
+            t_arrival,
+            deadline,
+        };
+        match self.enqueue(req) {
+            Ok(()) => Ok(rx),
+            Err((e, req)) => {
+                let features = req.and_then(|r| match r.row {
+                    RowPayload::Owned(v) => Some(v),
+                    RowPayload::Slab(_) => None,
+                });
+                Err((e, features))
             }
         }
     }
@@ -527,6 +664,74 @@ impl InferenceServer {
         ttl: Option<Duration>,
     ) -> Result<Receiver<ServeResult>, ServeError> {
         self.admit(features, ttl).map_err(|(e, _)| e)
+    }
+
+    /// Check a feature row out of the server's arena slab for the
+    /// pooled admission path ([`Self::submit_pooled`]). `None` means
+    /// the slab is exhausted — counted as a shed here, mirroring
+    /// queue-full — and the caller must refuse the request; checkout
+    /// never blocks and never allocates a fallback row.
+    pub fn checkout_row(&self) -> Option<SlabRow> {
+        let row = FeatureSlab::checkout(&self.slab);
+        if row.is_none() {
+            self.metrics.shed.fetch_add(1, Ordering::Relaxed);
+        }
+        row
+    }
+
+    /// The server's feature-row arena (sizing and free-list
+    /// diagnostics; tests assert every resolution path refills it).
+    pub fn slab(&self) -> &Arc<FeatureSlab> {
+        &self.slab
+    }
+
+    /// Zero-copy admission for a slab-resident row
+    /// ([`Self::checkout_row`]): the row is validated in place and
+    /// enqueued with the slot's reusable reply channel and recycled
+    /// output buffer, so a steady-state pooled request performs no
+    /// heap allocation from admission through response. Applies
+    /// [`ServerConfig::default_ttl`]. The contract is one outstanding
+    /// submission per slot — [`ReplySlot::recv`] before submitting
+    /// again. On every error path the slab row is released back to
+    /// the free-list (dropped here or handed back by the shard),
+    /// never leaked.
+    pub fn submit_pooled(&self, row: SlabRow, slot: &mut ReplySlot) -> Result<(), ServeError> {
+        self.submit_pooled_with_ttl(row, slot, self.default_ttl)
+    }
+
+    /// [`Self::submit_pooled`] with an explicit per-request TTL
+    /// (`None` never expires).
+    pub fn submit_pooled_with_ttl(
+        &self,
+        row: SlabRow,
+        slot: &mut ReplySlot,
+        ttl: Option<Duration>,
+    ) -> Result<(), ServeError> {
+        if let Err(e) = self.gate(row.as_slice()) {
+            // Dropping `row` here returns it to the slab free-list.
+            return Err(e);
+        }
+        slot.clear_stale();
+        let t_arrival = Instant::now();
+        let deadline = ttl.and_then(|d| t_arrival.checked_add(d));
+        let req = Request {
+            row: RowPayload::Slab(row),
+            fixed_buf: slot.take_fixed(),
+            tx: slot.sender(),
+            t_arrival,
+            deadline,
+        };
+        match self.enqueue(req) {
+            Ok(()) => Ok(()),
+            Err((e, req)) => {
+                if let Some(r) = req {
+                    // Reclaim the output buffer; the slab row drops
+                    // with the rest of the request.
+                    slot.recycle(r.fixed_buf);
+                }
+                Err(e)
+            }
+        }
     }
 
     /// Blocking inference. Waits out transient queue-full (bounded), so
@@ -793,9 +998,11 @@ fn supervise(
 
 /// Per-shard flat buffers reused across batch executions: the row-major
 /// input and the fixed-point output of the whole batch. Steady-state
-/// batch execution therefore allocates nothing batch-sized — only the
-/// per-request `Response.fixed` copies remain (client-owned by
-/// contract). Rebuilt (empty) when a supervisor restarts its worker.
+/// batch execution therefore allocates nothing batch-sized, and the
+/// per-request output rides each request's traveling `fixed_buf`
+/// (recycled by pooled callers) — so a steady-state pooled request
+/// allocates nothing at all. Rebuilt (empty) when a supervisor
+/// restarts its worker.
 #[derive(Default)]
 struct BatchScratch {
     rows: Vec<f32>,
@@ -826,9 +1033,10 @@ fn worker_loop(
                 let deadline = req.deadline;
                 let flushed = lock_unpoisoned(pending).push_deadline(req, deadline);
                 if let Some((batch, why)) = flushed {
-                    serve_batch(
+                    let empty = serve_batch(
                         batch, why, exec, xla, config, metrics, n_features, faults, &mut scratch,
                     );
+                    lock_unpoisoned(pending).recycle(empty);
                 }
             }
             Ok(Msg::Shutdown) | Err(RecvTimeoutError::Disconnected) => {
@@ -843,9 +1051,10 @@ fn worker_loop(
             Err(RecvTimeoutError::Timeout) => {
                 let flushed = lock_unpoisoned(pending).poll();
                 if let Some((batch, why)) = flushed {
-                    serve_batch(
+                    let empty = serve_batch(
                         batch, why, exec, xla, config, metrics, n_features, faults, &mut scratch,
                     );
+                    lock_unpoisoned(pending).recycle(empty);
                 }
             }
         }
@@ -854,7 +1063,7 @@ fn worker_loop(
 
 #[allow(clippy::too_many_arguments)]
 fn serve_batch(
-    batch: Vec<Request>,
+    mut batch: Vec<Request>,
     why: FlushReason,
     exec: &mut ShardExec,
     xla: &Option<PjrtEngine>,
@@ -863,28 +1072,39 @@ fn serve_batch(
     n_features: usize,
     faults: &Faults,
     scratch: &mut BatchScratch,
-) {
-    // Deadline check at batch-formation time: expired rows resolve
-    // without burning kernel time.
+) -> Vec<Request> {
+    // Deadline check at batch-formation time, in place: expired rows
+    // resolve without burning kernel time and without allocating
+    // partition vectors (expiry strictness matches
+    // `Batcher::partition_expired`: a deadline of exactly `now` still
+    // serves). Dropping an expired request releases its slab row.
     let now = Instant::now();
-    let (live, expired) = Batcher::partition_expired(batch, now, |r: &Request| r.deadline);
-    if !expired.is_empty() {
-        metrics.expired.fetch_add(expired.len() as u64, Ordering::Relaxed);
-        for req in expired {
+    let mut n_expired = 0u64;
+    batch.retain(|req| {
+        let live = match req.deadline {
+            Some(d) => now <= d,
+            None => true,
+        };
+        if !live {
+            n_expired += 1;
             let _ = req.tx.send(Err(ServeError::DeadlineExceeded));
         }
+        live
+    });
+    if n_expired > 0 {
+        metrics.expired.fetch_add(n_expired, Ordering::Relaxed);
     }
-    if live.is_empty() {
-        return;
+    if batch.is_empty() {
+        return batch;
     }
     let use_xla = !exec.degraded
         && match xla {
             Some(engine) => {
-                live.len() >= config.xla_threshold && live.len() <= engine.max_batch()
+                batch.len() >= config.xla_threshold && batch.len() <= engine.max_batch()
             }
             None => false,
         };
-    metrics.record_batch(live.len(), use_xla, why);
+    metrics.record_batch(batch.len(), use_xla, why);
     let t_serve = Instant::now();
 
     // Flatten once into the reused scratch; both routes consume the
@@ -893,11 +1113,11 @@ fn serve_batch(
     use crate::inference::Engine as _;
     let n_classes = exec.engine().n_classes();
     scratch.rows.clear();
-    for r in &live {
-        scratch.rows.extend_from_slice(&r.features);
+    for r in &batch {
+        scratch.rows.extend_from_slice(r.row.as_slice());
     }
     scratch.fixed.clear();
-    scratch.fixed.resize(live.len() * n_classes, 0);
+    scratch.fixed.resize(batch.len() * n_classes, 0);
     // Execution is the untrusted region: a panicking kernel (or an
     // injected fault) must not strand the batch's callers.
     let engine = exec.engine();
@@ -923,29 +1143,37 @@ fn serve_batch(
         Ok(()) => {
             metrics.record_batch_latency_us(t_serve.elapsed().as_secs_f64() * 1e6);
             let route = if use_xla { Route::Xla } else { Route::Scalar };
-            for (req, fixed) in live.into_iter().zip(scratch.fixed.chunks_exact(n_classes)) {
+            for (mut req, fixed) in batch.drain(..).zip(scratch.fixed.chunks_exact(n_classes)) {
                 let latency = req.t_arrival.elapsed();
                 metrics.record_latency_us(latency.as_secs_f64() * 1e6);
                 metrics.responses.fetch_add(1, Ordering::Relaxed);
                 let class = argmax(fixed);
-                // Receiver may have gone away; that's fine. The copy
-                // into `Response.fixed` is the one remaining per-request
-                // allocation — the response is client-owned by contract.
-                let _ = req.tx.send(Ok(Response { fixed: fixed.to_vec(), class, route, latency }));
+                // Fill the request's traveling output buffer —
+                // clear + extend reuses the recycled capacity, so a
+                // steady-state pooled response allocates nothing.
+                // Receiver may have gone away; that's fine.
+                req.fixed_buf.clear();
+                req.fixed_buf.extend_from_slice(fixed);
+                let fixed_out = std::mem::take(&mut req.fixed_buf);
+                let _ = req.tx.send(Ok(Response { fixed: fixed_out, class, route, latency }));
+                // `req` drops here: a slab-resident row returns to the
+                // free-list only after its response resolved.
             }
         }
         Err(payload) => {
             // The batch's callers learn the truth now; the supervisor
             // learns it next (re-raised) and restarts the worker.
             metrics.worker_panics.fetch_add(1, Ordering::Relaxed);
-            metrics.lost.fetch_add(live.len() as u64, Ordering::Relaxed);
-            for req in live {
+            metrics.lost.fetch_add(batch.len() as u64, Ordering::Relaxed);
+            for req in batch.drain(..) {
                 let _ = req.tx.send(Err(ServeError::WorkerLost));
             }
             exec.record_failure(metrics);
             resume_unwind(payload);
         }
     }
+    // Hand the (now empty) batch vector back for the batcher to reuse.
+    batch
 }
 
 #[cfg(test)]
@@ -1321,5 +1549,125 @@ mod tests {
         let snap = server.metrics();
         assert_eq!(snap.expired, 1);
         assert_eq!(snap.responses, 1);
+    }
+
+    /// Wait (bounded) for every slab row to return to the free-list:
+    /// the worker drops a request just *after* sending its response,
+    /// so the caller can observe the resolution before the row lands.
+    fn wait_slab_full(server: &InferenceServer) {
+        let total = server.slab().rows();
+        for _ in 0..500 {
+            if server.slab().available() == total {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(server.slab().available(), total, "slab rows leaked");
+    }
+
+    #[test]
+    fn pooled_submission_answers_correctly_and_returns_rows() {
+        let (ds, m) = model();
+        let server = InferenceServer::start(&m, None, quiet());
+        let oracle = crate::inference::IntEngine::compile(&m);
+        let mut slot = ReplySlot::new();
+        for i in 0..50 {
+            let mut row = server.checkout_row().expect("slab row");
+            row.copy_from(ds.row(i));
+            server.submit_pooled(row, &mut slot).expect("admitted");
+            let r = slot.recv().expect("served");
+            assert_eq!(r.fixed, oracle.predict_fixed(ds.row(i)));
+            assert_eq!(r.class, oracle.predict(ds.row(i)));
+            slot.recycle(r.fixed);
+        }
+        let snap = server.metrics();
+        assert_eq!(snap.requests, 50);
+        assert_eq!(snap.responses, 50);
+        wait_slab_full(&server);
+    }
+
+    #[test]
+    fn slab_exhaustion_sheds_and_recovers() {
+        let (_, m) = model();
+        let server = InferenceServer::start(&m, None, quiet());
+        let total = server.slab().rows();
+        let held: Vec<_> =
+            (0..total).map(|_| server.checkout_row().expect("row available")).collect();
+        // Exhausted: checkout sheds (typed as queue-full by callers),
+        // never blocks.
+        assert!(server.checkout_row().is_none());
+        assert_eq!(server.metrics().shed, 1);
+        drop(held);
+        assert!(server.checkout_row().is_some(), "returned rows are reusable");
+        wait_slab_full(&server);
+    }
+
+    #[test]
+    fn pooled_ttl_expiry_returns_slab_row() {
+        let (ds, m) = model();
+        // Slow batch formation so a zero TTL lapses before the flush.
+        let server = InferenceServer::start(
+            &m,
+            None,
+            ServerConfig {
+                policy: BatchPolicy { max_batch: 512, max_wait: Duration::from_millis(20) },
+                ..quiet()
+            },
+        );
+        let mut slot = ReplySlot::new();
+        let mut row = server.checkout_row().expect("slab row");
+        row.copy_from(ds.row(0));
+        server
+            .submit_pooled_with_ttl(row, &mut slot, Some(Duration::ZERO))
+            .expect("admitted");
+        assert_eq!(slot.recv().unwrap_err(), ServeError::DeadlineExceeded);
+        wait_slab_full(&server);
+        assert_eq!(server.metrics().expired, 1);
+    }
+
+    #[test]
+    fn pooled_shed_returns_row_synchronously() {
+        let (ds, m) = model();
+        let server = InferenceServer::start(
+            &m,
+            None,
+            ServerConfig {
+                faults: Some(FaultPlan { queue_full_first: 1, ..FaultPlan::none() }),
+                ..Default::default()
+            },
+        );
+        let total = server.slab().rows();
+        let mut slot = ReplySlot::new();
+        let mut row = server.checkout_row().expect("slab row");
+        row.copy_from(ds.row(0));
+        assert_eq!(server.submit_pooled(row, &mut slot).unwrap_err(), ServeError::QueueFull);
+        // The gate shed the request before enqueue, so the row is back
+        // already — no waiting on a worker.
+        assert_eq!(server.slab().available(), total);
+        // The slot survives a shed: the next submission serves.
+        let mut row = server.checkout_row().expect("slab row");
+        row.copy_from(ds.row(0));
+        server.submit_pooled(row, &mut slot).expect("admitted");
+        slot.recv().expect("served");
+        wait_slab_full(&server);
+    }
+
+    #[test]
+    fn pooled_rejections_release_the_row() {
+        let (ds, m) = model();
+        let server = InferenceServer::start(&m, None, quiet());
+        let total = server.slab().rows();
+        let mut slot = ReplySlot::new();
+        // Non-finite feature: typed rejection, row released in place.
+        let mut row = server.checkout_row().expect("slab row");
+        let mut bad = ds.row(0).to_vec();
+        bad[2] = f32::NAN;
+        row.copy_from(&bad);
+        assert_eq!(
+            server.submit_pooled(row, &mut slot).unwrap_err(),
+            ServeError::NonFiniteFeature { index: 2 }
+        );
+        assert_eq!(server.slab().available(), total);
+        assert_eq!(server.metrics().rejected, 1);
     }
 }

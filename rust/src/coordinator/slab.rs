@@ -1,0 +1,217 @@
+//! Arena-owned feature-row slab for the serving admission path.
+//!
+//! The HTTP scanner used to clone its per-connection feature arena
+//! into a fresh `Vec<f32>` at admission — the one documented heap
+//! allocation left on the request hot path. This module removes it:
+//! the server owns one fixed `rows × row_len` f32 arena plus a
+//! free-list of row indices, admission checks out a row handle and
+//! copies the parsed features straight into the slab, and the handle
+//! rides inside the queued `Request` instead of an owned vector.
+//! Batch formation reads the row in place; dropping the handle (on
+//! *any* resolution path — responded, shed, expired, or lost to a
+//! worker panic) pushes the index back onto the free-list, so the
+//! slab can never leak rows while the chaos accounting identity
+//! `requests == responses + expired + lost` holds.
+//!
+//! Concurrency contract: the free-list is the exclusivity token. A
+//! checked-out index is owned by exactly one [`SlabRow`] until its
+//! `Drop` returns it, so writes through [`SlabRow::copy_from`] and
+//! reads through [`SlabRow::as_slice`] never alias another live
+//! handle's row. This is the same disjoint-ownership argument the
+//! intra-batch pool's `SharedSlab` makes for tile outputs, expressed
+//! here with `UnsafeCell` storage instead of raw pointers. Checkout
+//! **never blocks and never allocates**: an exhausted slab returns
+//! `None` and the caller sheds the request (typed `QueueFull`), and
+//! the free-list vector is pre-sized to hold every index so push/pop
+//! never reallocate.
+
+use std::cell::UnsafeCell;
+use std::sync::Mutex;
+
+use super::lock_unpoisoned;
+
+/// Fixed arena of feature rows with a free-list of row handles.
+///
+/// Sized once at server start (`rows` of `row_len` f32 each) and
+/// shared behind an `Arc`; see the module docs for the ownership
+/// contract that makes the interior mutability sound.
+pub struct FeatureSlab {
+    /// Row storage; cell interior-mutable because disjoint checked-out
+    /// rows are written without a storage-wide lock.
+    storage: Box<[UnsafeCell<f32>]>,
+    row_len: usize,
+    /// Indices currently available for checkout. Pre-sized to `rows`
+    /// capacity, so returning a row never allocates.
+    free: Mutex<Vec<u32>>,
+}
+
+// SAFETY: the free-list is the exclusivity token — a given row index
+// is reachable through exactly one live `SlabRow` at a time, so
+// cross-thread access to `storage` is always to disjoint rows (see
+// module docs).
+unsafe impl Send for FeatureSlab {}
+unsafe impl Sync for FeatureSlab {}
+
+impl FeatureSlab {
+    /// Build a slab of `rows` rows of `row_len` features each.
+    pub fn new(rows: usize, row_len: usize) -> FeatureSlab {
+        assert!(row_len > 0, "slab rows must be at least one feature wide");
+        let storage: Box<[UnsafeCell<f32>]> =
+            (0..rows * row_len).map(|_| UnsafeCell::new(0.0)).collect();
+        let mut free = Vec::with_capacity(rows);
+        // Hand out low indices first: reverse order so pop() starts at 0.
+        for i in (0..rows as u32).rev() {
+            free.push(i);
+        }
+        FeatureSlab { storage, row_len, free: Mutex::new(free) }
+    }
+
+    /// Features per row (the server's `n_features`).
+    pub fn row_len(&self) -> usize {
+        self.row_len
+    }
+
+    /// Total rows the slab holds.
+    pub fn rows(&self) -> usize {
+        if self.row_len == 0 { 0 } else { self.storage.len() / self.row_len }
+    }
+
+    /// Rows currently available for checkout (diagnostic; racy by
+    /// nature, exact only when no checkouts are in flight).
+    pub fn available(&self) -> usize {
+        lock_unpoisoned(&self.free).len()
+    }
+
+    /// Check a row out of the free-list, or `None` when the slab is
+    /// exhausted. Never blocks, never allocates — exhaustion is the
+    /// caller's shed signal. Takes the `Arc` (an associated function,
+    /// since `&Arc<Self>` is not a valid method receiver) so the
+    /// returned handle can keep the slab alive independently of the
+    /// server that owns it.
+    pub fn checkout(slab: &std::sync::Arc<FeatureSlab>) -> Option<SlabRow> {
+        let index = lock_unpoisoned(&slab.free).pop()?;
+        Some(SlabRow { slab: std::sync::Arc::clone(slab), index })
+    }
+
+    /// Return a row index to the free-list (handle `Drop` path).
+    fn give_back(&self, index: u32) {
+        let mut free = lock_unpoisoned(&self.free);
+        debug_assert!(!free.contains(&index), "slab row {index} returned twice");
+        debug_assert!(free.len() < free.capacity(), "slab free-list overflow");
+        free.push(index);
+    }
+}
+
+/// Exclusive handle to one checked-out slab row. Dropping the handle
+/// returns the row to the free-list, on every resolution path.
+pub struct SlabRow {
+    slab: std::sync::Arc<FeatureSlab>,
+    index: u32,
+}
+
+impl SlabRow {
+    /// Copy a parsed feature row into the slab. `src.len()` must equal
+    /// the slab's `row_len` (the admission arity check runs first).
+    pub fn copy_from(&mut self, src: &[f32]) {
+        assert_eq!(src.len(), self.slab.row_len, "slab row width mismatch");
+        let base = self.index as usize * self.slab.row_len;
+        for (i, &v) in src.iter().enumerate() {
+            // SAFETY: this handle exclusively owns row `index` until
+            // Drop (free-list contract), so no other reference to
+            // these cells exists.
+            unsafe { *self.slab.storage[base + i].get() = v };
+        }
+    }
+
+    /// The row contents, read in place (batch formation's view).
+    pub fn as_slice(&self) -> &[f32] {
+        let base = self.index as usize * self.slab.row_len;
+        // SAFETY: exclusive ownership of the row (free-list contract)
+        // means no concurrent writer; the cast only covers this row's
+        // cells, which are plain f32s.
+        unsafe {
+            std::slice::from_raw_parts(
+                self.slab.storage[base].get() as *const f32,
+                self.slab.row_len,
+            )
+        }
+    }
+}
+
+impl Drop for SlabRow {
+    fn drop(&mut self) {
+        self.slab.give_back(self.index);
+    }
+}
+
+impl std::fmt::Debug for SlabRow {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SlabRow").field("index", &self.index).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn checkout_copy_read_and_return() {
+        let slab = Arc::new(FeatureSlab::new(2, 3));
+        assert_eq!(slab.rows(), 2);
+        assert_eq!(slab.available(), 2);
+        let mut row = FeatureSlab::checkout(&slab).expect("fresh slab has rows");
+        row.copy_from(&[1.0, 2.0, 3.0]);
+        assert_eq!(row.as_slice(), &[1.0, 2.0, 3.0]);
+        assert_eq!(slab.available(), 1);
+        drop(row);
+        assert_eq!(slab.available(), 2);
+    }
+
+    #[test]
+    fn exhaustion_returns_none_without_blocking() {
+        let slab = Arc::new(FeatureSlab::new(1, 2));
+        let held = FeatureSlab::checkout(&slab).expect("one row available");
+        assert!(FeatureSlab::checkout(&slab).is_none(), "exhausted slab must shed");
+        drop(held);
+        assert!(FeatureSlab::checkout(&slab).is_some(), "returned row is reusable");
+    }
+
+    #[test]
+    fn rows_are_disjoint_across_handles() {
+        let slab = Arc::new(FeatureSlab::new(2, 2));
+        let mut a = FeatureSlab::checkout(&slab).unwrap();
+        let mut b = FeatureSlab::checkout(&slab).unwrap();
+        a.copy_from(&[1.0, 1.0]);
+        b.copy_from(&[2.0, 2.0]);
+        assert_eq!(a.as_slice(), &[1.0, 1.0]);
+        assert_eq!(b.as_slice(), &[2.0, 2.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "slab row width mismatch")]
+    fn width_mismatch_panics() {
+        let slab = Arc::new(FeatureSlab::new(1, 3));
+        FeatureSlab::checkout(&slab).unwrap().copy_from(&[0.0]);
+    }
+
+    #[test]
+    fn concurrent_checkout_return_cycles_never_leak() {
+        let slab = Arc::new(FeatureSlab::new(8, 4));
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let slab = Arc::clone(&slab);
+                s.spawn(move || {
+                    for i in 0..500 {
+                        if let Some(mut row) = FeatureSlab::checkout(&slab) {
+                            let v = (t * 1000 + i) as f32;
+                            row.copy_from(&[v; 4]);
+                            assert_eq!(row.as_slice(), &[v; 4]);
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(slab.available(), 8, "all rows must return to the free-list");
+    }
+}

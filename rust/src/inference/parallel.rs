@@ -54,6 +54,21 @@
 //! baseline) and the serving coordinator's auto-calibration sweeps
 //! kernel × backend × [`sweep`] thread counts to find the saturation
 //! point for the loaded model on the current host.
+//!
+//! ## Placement
+//!
+//! Opt-in via [`PIN_ENV`] (`INTREEGER_PIN=1`): [`pin_plan`] parses the
+//! shared-last-level-cache groups the kernel exposes in sysfs and
+//! assigns worker threads to **distinct physical cores inside one LLC
+//! group**, so a shard's working set (node arrays, SoA planes, the
+//! request-slab rows it reads) stays resident in a single cache domain
+//! instead of bouncing between them, and SMT siblings never fight over
+//! one core's ports. Both the coordinator's shard threads and this
+//! scheduler's pool workers apply the plan. Pinning degrades to a
+//! **loud no-op** wherever the topology is unreadable or
+//! `sched_setaffinity(2)` is refused (containers with restricted
+//! cpusets) — placement is a performance lever, never a correctness
+//! dependency.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::OnceLock;
@@ -70,6 +85,48 @@ pub fn detected() -> usize {
     *DETECTED.get_or_init(|| std::thread::available_parallelism().map_or(1, |n| n.get()))
 }
 
+/// One `(logical cpu, physical id, core id)` triple per `/proc/cpuinfo`
+/// processor stanza, sorted by logical cpu. `None` when the file is
+/// unreadable or no stanza carries all three ids (restricted
+/// containers).
+#[cfg(target_os = "linux")]
+fn cpu_topology() -> Option<Vec<(usize, u32, u32)>> {
+    parse_cpuinfo(&std::fs::read_to_string("/proc/cpuinfo").ok()?)
+}
+
+/// The `/proc/cpuinfo` stanza parse behind [`cpu_topology`], split out
+/// so tests can feed synthetic topologies.
+#[cfg(target_os = "linux")]
+fn parse_cpuinfo(text: &str) -> Option<Vec<(usize, u32, u32)>> {
+    let mut triples: Vec<(usize, u32, u32)> = Vec::new();
+    let (mut cpu, mut phys, mut core) = (None, None, None);
+    for line in text.lines() {
+        let mut it = line.splitn(2, ':');
+        let key = it.next().unwrap_or("").trim();
+        let val = it.next().unwrap_or("").trim();
+        match key {
+            "processor" => cpu = val.parse::<usize>().ok(),
+            "physical id" => phys = val.parse::<u32>().ok(),
+            "core id" => core = val.parse::<u32>().ok(),
+            // Blank line terminates one processor stanza.
+            "" => {
+                if let (Some(l), Some(p), Some(c)) = (cpu, phys, core) {
+                    triples.push((l, p, c));
+                }
+                cpu = None;
+                phys = None;
+                core = None;
+            }
+            _ => {}
+        }
+    }
+    if let (Some(l), Some(p), Some(c)) = (cpu, phys, core) {
+        triples.push((l, p, c));
+    }
+    triples.sort_unstable();
+    (!triples.is_empty()).then_some(triples)
+}
+
 /// Physical cores on this host, when the platform exposes them
 /// (`/proc/cpuinfo` on Linux: distinct `(physical id, core id)` pairs).
 /// `None` where unknown — reported by `inspect` next to [`detected`] so
@@ -77,31 +134,10 @@ pub fn detected() -> usize {
 pub fn physical_cores() -> Option<usize> {
     #[cfg(target_os = "linux")]
     {
-        let text = std::fs::read_to_string("/proc/cpuinfo").ok()?;
-        let mut pairs = std::collections::HashSet::new();
-        let (mut phys, mut core) = (None, None);
-        for line in text.lines() {
-            let mut it = line.splitn(2, ':');
-            let key = it.next().unwrap_or("").trim();
-            let val = it.next().unwrap_or("").trim();
-            match key {
-                "physical id" => phys = val.parse::<u32>().ok(),
-                "core id" => core = val.parse::<u32>().ok(),
-                // Blank line terminates one processor stanza.
-                "" => {
-                    if let (Some(p), Some(c)) = (phys, core) {
-                        pairs.insert((p, c));
-                    }
-                    phys = None;
-                    core = None;
-                }
-                _ => {}
-            }
-        }
-        if let (Some(p), Some(c)) = (phys, core) {
-            pairs.insert((p, c));
-        }
-        (!pairs.is_empty()).then(|| pairs.len())
+        let topo = cpu_topology()?;
+        let pairs: std::collections::HashSet<(u32, u32)> =
+            topo.iter().map(|&(_, p, c)| (p, c)).collect();
+        Some(pairs.len())
     }
     #[cfg(not(target_os = "linux"))]
     {
@@ -270,9 +306,19 @@ where
     let injector = Injector::new(n_tasks, threads);
     let injector = &injector;
     let f = &f;
+    // Spawned pool workers re-pin per the active plan: on Linux a
+    // scoped thread inherits its parent's affinity mask, so a pool
+    // spawned from a pinned coordinator shard would otherwise stack
+    // every worker on the shard's single CPU. Worker 0 is the calling
+    // thread and keeps its placement (it may *be* a pinned shard).
+    let plan = active_pin_plan(threads);
+    let plan = plan.as_ref();
     std::thread::scope(|scope| {
         for w in 1..threads {
             scope.spawn(move || {
+                if let Some(p) = plan {
+                    p.pin(w);
+                }
                 while let Some(i) = injector.claim(w) {
                     f(i);
                 }
@@ -353,6 +399,231 @@ impl<'a, T> SharedSlab<'a, T> {
         debug_assert!(idx < self.len);
         self.ptr.add(idx).write(value);
     }
+}
+
+// ---------------------------------------------------------------------------
+// Cache-topology-aware thread placement (opt-in via INTREEGER_PIN).
+
+/// Environment variable enabling cache-topology-aware thread pinning
+/// (`1` / `on`). Off by default: pinning wins on a dedicated serving
+/// host, but on a shared machine the kernel scheduler should stay free
+/// to migrate around noisy neighbors — so placement is a deliberate
+/// per-process opt-in, not a flag.
+pub const PIN_ENV: &str = "INTREEGER_PIN";
+
+/// True when [`PIN_ENV`] opts this process into thread pinning.
+pub fn pin_enabled() -> bool {
+    matches!(std::env::var(PIN_ENV).as_deref().map(str::trim), Ok("1") | Ok("on"))
+}
+
+/// Parse a kernel cpulist string (`"0-3,8-11"` — the sysfs
+/// `shared_cpu_list` format) into sorted, deduplicated logical CPU
+/// ids. `None` on an empty or malformed list (a reversed range counts
+/// as malformed).
+pub fn parse_cpu_list(s: &str) -> Option<Vec<usize>> {
+    let mut cpus = Vec::new();
+    for token in s.trim().split(',') {
+        let token = token.trim();
+        if token.is_empty() {
+            continue;
+        }
+        match token.split_once('-') {
+            Some((lo, hi)) => {
+                let lo = lo.trim().parse::<usize>().ok()?;
+                let hi = hi.trim().parse::<usize>().ok()?;
+                if hi < lo {
+                    return None;
+                }
+                cpus.extend(lo..=hi);
+            }
+            None => cpus.push(token.parse::<usize>().ok()?),
+        }
+    }
+    cpus.sort_unstable();
+    cpus.dedup();
+    (!cpus.is_empty()).then_some(cpus)
+}
+
+/// The last-level-cache sharing groups sysfs exposes
+/// (`/sys/devices/system/cpu/cpu*/cache/index3/shared_cpu_list`): each
+/// group is the sorted set of logical CPUs sharing one LLC, groups
+/// ordered by their first CPU. `None` where sysfs (or an L3 index) is
+/// unavailable — placement then falls back to the physical-core basis.
+pub fn llc_groups() -> Option<Vec<Vec<usize>>> {
+    #[cfg(target_os = "linux")]
+    {
+        let mut lists = std::collections::BTreeSet::new();
+        for entry in std::fs::read_dir("/sys/devices/system/cpu").ok()?.flatten() {
+            let name = entry.file_name();
+            let name = name.to_str().unwrap_or("");
+            let Some(digits) = name.strip_prefix("cpu") else { continue };
+            if digits.is_empty() || !digits.bytes().all(|b| b.is_ascii_digit()) {
+                continue;
+            }
+            let path = entry.path().join("cache/index3/shared_cpu_list");
+            if let Ok(text) = std::fs::read_to_string(path) {
+                lists.insert(text.trim().to_string());
+            }
+        }
+        let mut groups: Vec<Vec<usize>> = lists.iter().filter_map(|s| parse_cpu_list(s)).collect();
+        groups.sort_by_key(|g| g[0]);
+        groups.dedup();
+        (!groups.is_empty()).then_some(groups)
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        None
+    }
+}
+
+/// A thread→CPU placement: `cpus[slot]` is the logical CPU for worker
+/// `slot`, and `basis` records how the targets were derived.
+#[derive(Debug, Clone)]
+pub struct PinPlan {
+    /// Logical CPU id per worker slot, in slot order (the target list
+    /// wraps when more slots were requested than distinct cores exist).
+    pub cpus: Vec<usize>,
+    /// Derivation basis: `"llc"` (one CPU per distinct physical core
+    /// inside the largest LLC group) or `"physical"` (one per distinct
+    /// physical core; no LLC information was available).
+    pub basis: &'static str,
+}
+
+impl PinPlan {
+    /// Pin the calling thread to slot `slot`'s CPU; returns whether the
+    /// pin took (see [`pin_current_thread`] for the degrade contract).
+    pub fn pin(&self, slot: usize) -> bool {
+        pin_current_thread(self.cpus[slot % self.cpus.len()])
+    }
+}
+
+/// The deduplicated pin targets of this host — one logical CPU per
+/// distinct physical core inside the largest LLC group — computed once
+/// per process: the sysfs and `/proc/cpuinfo` reads must never land on
+/// the per-batch path.
+fn pin_targets() -> Option<&'static (Vec<usize>, &'static str)> {
+    static TARGETS: OnceLock<Option<(Vec<usize>, &'static str)>> = OnceLock::new();
+    TARGETS
+        .get_or_init(|| {
+            #[cfg(target_os = "linux")]
+            {
+                let topo = cpu_topology().unwrap_or_default();
+                let one_per_core = |allow: Option<&[usize]>| -> Vec<usize> {
+                    let mut seen = std::collections::HashSet::new();
+                    let mut cpus = Vec::new();
+                    for &(l, p, c) in &topo {
+                        if allow.is_some_and(|a| !a.contains(&l)) {
+                            continue;
+                        }
+                        if seen.insert((p, c)) {
+                            cpus.push(l);
+                        }
+                    }
+                    cpus
+                };
+                if let Some(group) =
+                    llc_groups().and_then(|gs| gs.into_iter().max_by_key(|g| g.len()))
+                {
+                    let cpus = one_per_core(Some(&group));
+                    // A restricted /proc/cpuinfo (no core ids) still
+                    // leaves the LLC group itself as pin targets.
+                    let cpus = if cpus.is_empty() { group } else { cpus };
+                    return Some((cpus, "llc"));
+                }
+                let cpus = one_per_core(None);
+                (!cpus.is_empty()).then_some((cpus, "physical"))
+            }
+            #[cfg(not(target_os = "linux"))]
+            {
+                None
+            }
+        })
+        .as_ref()
+}
+
+/// The placement for `slots` worker threads, independent of the
+/// [`PIN_ENV`] gate (so `inspect` can always display what *would* be
+/// pinned): worker `i` gets the `i`-th pin target, wrapping when
+/// `slots` exceeds the distinct-core count. `None` when the host
+/// exposes no usable topology, or `slots` is 0.
+pub fn pin_plan(slots: usize) -> Option<PinPlan> {
+    if slots == 0 {
+        return None;
+    }
+    let targets = pin_targets()?;
+    let assignment = (0..slots).map(|i| targets.0[i % targets.0.len()]).collect();
+    Some(PinPlan { cpus: assignment, basis: targets.1 })
+}
+
+/// The pin plan the serving path actually applies: `None` unless
+/// [`PIN_ENV`] opts in *and* the host topology is usable — the
+/// enabled-but-unusable case complains once per process and serving
+/// proceeds unpinned (the loud-no-op contract).
+pub fn active_pin_plan(slots: usize) -> Option<PinPlan> {
+    if !pin_enabled() {
+        return None;
+    }
+    match pin_plan(slots) {
+        Some(p) => Some(p),
+        None => {
+            static WARNED: OnceLock<()> = OnceLock::new();
+            WARNED.get_or_init(|| {
+                eprintln!(
+                    "intreeger: {PIN_ENV} is set but no usable CPU topology was found; \
+                     running unpinned"
+                );
+            });
+            None
+        }
+    }
+}
+
+/// Pin the calling thread to one logical CPU via `sched_setaffinity(2)`
+/// (a one-symbol FFI declaration over the libc std already links — no
+/// crate). Returns `false` — loudly, once per process — where the
+/// platform has no affinity syscall or the kernel refuses the mask
+/// (restricted cpuset, seccomp): the thread keeps running unpinned,
+/// a performance fallback, never an error.
+pub fn pin_current_thread(cpu: usize) -> bool {
+    #[cfg(target_os = "linux")]
+    {
+        extern "C" {
+            fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+        }
+        // 16 × u64 = 1024 CPUs — the size of glibc's default cpu_set_t.
+        let mut mask = [0u64; 16];
+        if cpu >= mask.len() * 64 {
+            pin_warn_once(cpu);
+            return false;
+        }
+        mask[cpu / 64] = 1u64 << (cpu % 64);
+        // SAFETY: pid 0 addresses the calling thread; the mask is a
+        // valid initialized cpu_set_t-sized buffer owned by this frame.
+        let rc = unsafe { sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr()) };
+        if rc != 0 {
+            pin_warn_once(cpu);
+            return false;
+        }
+        true
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        let _ = cpu;
+        false
+    }
+}
+
+/// One warning per process for refused pins: a fleet of shards all
+/// hitting the same restricted cpuset must not spam a line per thread.
+#[cfg(target_os = "linux")]
+fn pin_warn_once(cpu: usize) {
+    static WARNED: OnceLock<()> = OnceLock::new();
+    WARNED.get_or_init(|| {
+        eprintln!(
+            "intreeger: pinning to cpu {cpu} refused ({}); running unpinned",
+            std::io::Error::last_os_error()
+        );
+    });
 }
 
 #[cfg(test)]
@@ -453,5 +724,47 @@ mod tests {
         let s = sweep();
         assert!(!s.is_empty());
         assert!(s.iter().all(|&t| (1..=detected()).contains(&t)));
+    }
+
+    #[test]
+    fn cpu_list_parsing() {
+        assert_eq!(parse_cpu_list("0-3,8-11"), Some(vec![0, 1, 2, 3, 8, 9, 10, 11]));
+        assert_eq!(parse_cpu_list("5"), Some(vec![5]));
+        assert_eq!(parse_cpu_list(" 2,0 ,1\n"), Some(vec![0, 1, 2]));
+        assert_eq!(parse_cpu_list("0-1,1-2"), Some(vec![0, 1, 2]), "overlaps deduplicate");
+        assert_eq!(parse_cpu_list(""), None);
+        assert_eq!(parse_cpu_list("3-1"), None, "reversed range is malformed");
+        assert_eq!(parse_cpu_list("a-b"), None);
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn cpuinfo_stanza_parse() {
+        let text = "processor\t: 0\nphysical id\t: 0\ncore id\t: 0\n\n\
+                    processor\t: 1\nphysical id\t: 0\ncore id\t: 1\n\n\
+                    processor\t: 2\nphysical id\t: 0\ncore id\t: 0\n";
+        assert_eq!(parse_cpuinfo(text), Some(vec![(0, 0, 0), (1, 0, 1), (2, 0, 0)]));
+        assert_eq!(parse_cpuinfo("flags\t: fpu sse\n"), None, "no ids, no topology");
+    }
+
+    #[test]
+    fn pin_plan_shapes_and_graceful_degradation() {
+        assert!(pin_plan(0).is_none(), "zero slots never plan");
+        if let Some(plan) = pin_plan(4) {
+            assert_eq!(plan.cpus.len(), 4, "one target per requested slot");
+            assert!(matches!(plan.basis, "llc" | "physical"));
+            assert!(plan.cpus.iter().all(|&c| c < 1024), "targets fit the affinity mask");
+        }
+        if let Some(groups) = llc_groups() {
+            assert!(!groups.is_empty());
+            for g in &groups {
+                assert!(!g.is_empty());
+                assert!(g.windows(2).all(|w| w[0] < w[1]), "groups sorted, deduplicated");
+            }
+        }
+        // Pinning to cpu 0 either takes or degrades to a loud no-op —
+        // both fine, panicking is not; an absurd id must degrade.
+        let _ = pin_current_thread(0);
+        assert!(!pin_current_thread(usize::MAX));
     }
 }

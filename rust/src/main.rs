@@ -450,21 +450,21 @@ fn cmd_codegen(args: &Args) {
 }
 
 /// Load an INTB binary artifact into a ready integer engine plus its
-/// resident-bytes figure. All binary-format failures are typed
-/// [`BinError`](intreeger::runtime::BinError)s rendered once, here.
-fn load_bin_engine(path: &str) -> (intreeger::inference::IntEngine, u64) {
-    let bytes = std::fs::read(path)
+/// resident-bytes figure and load-path tag (`"mmap"` on unix,
+/// `"owned-copy"` otherwise or on a refused mapping). All binary-format
+/// failures are typed [`BinError`](intreeger::runtime::BinError)s
+/// rendered once, here.
+fn load_bin_engine(path: &str) -> (intreeger::inference::IntEngine, u64, &'static str) {
+    let file = intreeger::runtime::FileBin::open(Path::new(path))
         .unwrap_or_else(|e| die(format!("cannot read binary model '{path}': {e}")));
-    // fs::read gives no alignment guarantee; the owned copy does.
-    let owned = intreeger::runtime::OwnedBin::from_bytes(&bytes);
-    let view = owned
+    let view = file
         .view()
         .unwrap_or_else(|e| die(format!("invalid binary model '{path}': {e}")));
     let forest = view.to_forest().unwrap_or_else(|e| {
         die(format!("'{path}': {e} (serving needs an RF artifact: probability leaves feed the u32 engine)"))
     });
     let resident = view.resident_bytes() as u64;
-    (intreeger::inference::IntEngine::from_forest(forest), resident)
+    (intreeger::inference::IntEngine::from_forest(forest), resident, file.source())
 }
 
 fn cmd_predict(args: &Args) {
@@ -520,7 +520,7 @@ fn cmd_serve(args: &Args) {
     // Boot from an INTB binary artifact, a pipeline bundle (model +
     // holdout in one dir), or an explicit model file.
     if let Some(bin) = args.get("bin") {
-        let (engine, resident) = load_bin_engine(bin);
+        let (engine, resident, source) = load_bin_engine(bin);
         let server = InferenceServer::start_with_engine(engine, config);
         let demo = load_dataset(args);
         if demo.n_features != server.n_features() {
@@ -530,7 +530,9 @@ fn cmd_serve(args: &Args) {
                 server.n_features()
             ));
         }
-        eprintln!("(binary artifact: {resident} resident bytes, zero-copy sections; scalar route)");
+        eprintln!(
+            "(binary artifact: {resident} resident bytes, zero-copy sections via {source}; scalar route)"
+        );
         run_serve_demo(args, server, demo);
         return;
     }
@@ -824,6 +826,34 @@ fn cmd_inspect(args: &Args) {
         },
         inference::parallel::resolve()
     );
+    // Cache topology and the placement serving would apply under
+    // INTREEGER_PIN=1 — printed unconditionally so "no topology" hosts
+    // are visible too.
+    match inference::parallel::llc_groups() {
+        Some(groups) => {
+            let rendered: Vec<String> = groups
+                .iter()
+                .map(|g| {
+                    let ids: Vec<String> = g.iter().map(|c| c.to_string()).collect();
+                    format!("[{}]", ids.join(","))
+                })
+                .collect();
+            println!("topology:        {} LLC group(s): {}", groups.len(), rendered.join(" "));
+        }
+        None => println!("topology:        LLC groups unavailable (no sysfs cache index)"),
+    }
+    match inference::parallel::pin_plan(inference::parallel::preferred().0) {
+        Some(plan) => println!(
+            "                 pin plan ({} basis, {}=1 to apply): cpus {:?}",
+            plan.basis,
+            inference::parallel::PIN_ENV,
+            plan.cpus
+        ),
+        None => println!(
+            "                 pin plan unavailable ({}=1 would be a loud no-op)",
+            inference::parallel::PIN_ENV
+        ),
+    }
     if model.kind == intreeger::ir::ModelKind::RandomForest {
         // Run the serving coordinator's actual startup calibration on a
         // representative probe batch: the same timing that decides the

@@ -23,14 +23,17 @@
 //!   `POST /predict/{id}` (or `{id}@{version}`), `GET /models`, and a
 //!   `POST /admin/reload` hot-swap path.
 //!
-//! The request hot path — parse head, scan features, render response —
-//! performs **zero heap allocations per request in steady state**: the
-//! connection buffer, the feature arena, and both response buffers are
-//! reused across requests (verified by the debug-only allocation
-//! counter in `tests/http_corpus.rs`). The single deliberate exception
-//! is the coordinator admission boundary: the queue must own its row,
-//! so admission clones the arena into a `Vec<f32>` (one bounded copy),
-//! and `Response.fixed` is client-owned by the coordinator's contract.
+//! The request hot path — parse head, scan features, admit, batch,
+//! respond, render — performs **zero heap allocations per request in
+//! steady state**: the connection buffer, the feature arena, and both
+//! response buffers are reused across requests; admission copies the
+//! parsed row into a checked-out slab row of the coordinator's arena
+//! ([`FeatureSlab`](crate::coordinator::FeatureSlab)) instead of
+//! cloning a `Vec<f32>`; and the response's fixed-point buffer travels
+//! with the request and is recycled through the connection's
+//! [`ReplySlot`](crate::coordinator::ReplySlot) after rendering
+//! (verified end to end by the debug-only allocation counter in
+//! `tests/http_corpus.rs`).
 
 pub mod parser;
 pub mod scan;

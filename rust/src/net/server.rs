@@ -11,15 +11,19 @@
 //! coordinator's bounded request queue one layer down.
 //!
 //! Each worker owns one set of [`ConnBuffers`] — request buffer,
-//! feature arena, response head/body buffers — reused across every
-//! request and every connection it ever serves. Keep-alive and
-//! pipelining work over the same buffer: after each response the
-//! consumed bytes are shifted out with `copy_within` and the next
-//! request (possibly already buffered) parses in place. In steady
-//! state the parse → scan → render path performs **zero heap
-//! allocations per request**; the one deliberate exception is the
-//! coordinator admission boundary (the queue must own its row, so the
-//! arena is cloned into the submitted `Vec<f32>`).
+//! feature arena, reply slot, response head/body buffers — reused
+//! across every request and every connection it ever serves.
+//! Keep-alive and pipelining work over the same buffer: after each
+//! response the consumed bytes are shifted out with `copy_within` and
+//! the next request (possibly already buffered) parses in place.
+//! Admission is zero-copy into the coordinator: the parsed row is
+//! copied into a checked-out arena slab row
+//! ([`InferenceServer::checkout_row`]) and submitted through the
+//! connection's reusable [`ReplySlot`], whose response buffer is
+//! recycled after rendering. In steady state the full
+//! parse → scan → admit → batch → respond → render path performs
+//! **zero heap allocations per request** (debug-build
+//! allocation-counter test).
 //!
 //! Responses go out with a single vectored write (`write_vectored`
 //! over head + body slices) with a write-all fallback for short
@@ -40,8 +44,7 @@
 //! * `POST /predict/{spec}` — `spec` is `id` (follow the fleet routing
 //!   rule: A/B split if set, else current version) or `id@version`
 //!   (pinned). The spec parse is the one deliberate allocation on this
-//!   path beyond the admission copy (the id must outlive the request
-//!   buffer).
+//!   path (the id must outlive the request buffer).
 //! * `GET /models` — the fleet listing: per model the serving version,
 //!   feature arity, resident bytes, retained versions, and A/B split.
 //! * `POST /admin/reload` — rescan the `--models` directory via the
@@ -65,7 +68,7 @@ use super::parser::{self, HttpError};
 use super::scan;
 use crate::coordinator::{
     FleetLoader, InferenceServer, MetricsSnapshot, ModelInfo, ModelRegistry, RegistryError,
-    ReloadReport, Response, Route, RouteError, RouteSpec, ServeError,
+    ReloadReport, ReplySlot, Response, Route, RouteError, RouteSpec, ServeError,
 };
 use crate::quant::fixed_to_prob;
 
@@ -228,8 +231,8 @@ fn overloaded_close(mut stream: TcpStream) {
 }
 
 /// Per-worker reusable buffers — the whole zero-allocation story lives
-/// in these four vectors keeping their capacity across requests and
-/// connections.
+/// in these vectors (and the reply slot's recycled channel + output
+/// buffer) keeping their capacity across requests and connections.
 #[derive(Default)]
 struct ConnBuffers {
     /// Raw request bytes; `filled` of them are valid.
@@ -240,6 +243,10 @@ struct ConnBuffers {
     /// Rendered response head / body.
     head_out: Vec<u8>,
     body_out: Vec<u8>,
+    /// Reusable coordinator reply endpoint (channel + recycled
+    /// `Response.fixed` buffer); server-agnostic, so one slot serves
+    /// every fleet entry this worker ever talks to.
+    reply: ReplySlot,
 }
 
 fn conn_worker(rx: &Mutex<Receiver<TcpStream>>, target: &Arc<ServeTarget>, cfg: &HttpConfig) {
@@ -488,30 +495,50 @@ fn predict_on(
             render_error_body(&mut conn.body_out, e.kind(), &e);
             (400, "Bad Request")
         }
-        // The one deliberate copy: the coordinator queue must own its
-        // row, so the arena is cloned into the submitted Vec (see
-        // module docs).
-        Ok(()) => match server.submit(conn.features.clone()) {
-            Ok(rx) => match rx.recv() {
-                Ok(Ok(resp)) => {
-                    render_predict_body(&mut conn.body_out, &resp);
-                    (200, "OK")
-                }
-                Ok(Err(e)) => {
-                    render_error_body(&mut conn.body_out, e.kind(), &e);
-                    status_for(&e)
-                }
-                Err(_) => {
-                    let e = ServeError::WorkerLost;
-                    render_error_body(&mut conn.body_out, e.kind(), &e);
-                    status_for(&e)
-                }
-            },
-            Err(e) => {
+        Ok(()) => {
+            // Arity gate *before* slab checkout: rows in the arena are
+            // fixed-width, so a wrong-arity body is refused here with
+            // the same typed error the coordinator would raise.
+            if conn.features.len() != server.n_features() {
+                let e = ServeError::WrongFeatureCount {
+                    expected: server.n_features(),
+                    got: conn.features.len(),
+                };
+                server.metrics_handle().rejected.fetch_add(1, Ordering::Relaxed);
                 render_error_body(&mut conn.body_out, e.kind(), &e);
-                status_for(&e)
+                return status_for(&e);
             }
-        },
+            // Zero-copy admission: the parsed row moves into a
+            // checked-out slab row (no allocation) and is read in
+            // place by batch formation. An exhausted slab sheds,
+            // exactly like a full admission queue.
+            let Some(mut row) = server.checkout_row() else {
+                let e = ServeError::QueueFull;
+                render_error_body(&mut conn.body_out, e.kind(), &e);
+                return status_for(&e);
+            };
+            row.copy_from(&conn.features);
+            match server.submit_pooled(row, &mut conn.reply) {
+                Ok(()) => match conn.reply.recv() {
+                    Ok(resp) => {
+                        render_predict_body(&mut conn.body_out, &resp);
+                        let (code, reason) = (200, "OK");
+                        // Recycle the rendered output buffer into the
+                        // slot for the next request on this worker.
+                        conn.reply.recycle(resp.fixed);
+                        (code, reason)
+                    }
+                    Err(e) => {
+                        render_error_body(&mut conn.body_out, e.kind(), &e);
+                        status_for(&e)
+                    }
+                },
+                Err(e) => {
+                    render_error_body(&mut conn.body_out, e.kind(), &e);
+                    status_for(&e)
+                }
+            }
+        }
     }
 }
 

@@ -48,7 +48,16 @@
 //! 8-byte aligned**. [`load`] refuses unaligned bases
 //! ([`BinError::Unaligned`]); [`OwnedBin`] copies arbitrary bytes into a
 //! `u64`-backed buffer to guarantee the base alignment — the fallback
-//! for sources like `Vec<u8>` file reads that promise none.
+//! for sources like `Vec<u8>` file reads that promise none. On unix,
+//! [`MappedBin`] (behind the portable [`FileBin`] wrapper) maps the
+//! file with `mmap(2)` instead: the mapping base is page-aligned
+//! (≥ 4096 bytes), so the 8-byte gate holds by construction, *no* heap
+//! copy of the artifact is ever made, and fleet load cost is
+//! O(validation) in resident memory too — file pages fault in on
+//! demand. The existing structural re-validation is what makes this
+//! safe: every invariant the unchecked-load kernels rely on is
+//! re-established against the mapped bytes before a cast slice
+//! escapes, exactly as for heap-resident sources.
 //!
 //! Byte order is native-with-a-tag: files are written in the host's
 //! byte order and record [`ENDIAN_TAG`]; a file produced on the
@@ -1228,6 +1237,183 @@ impl OwnedBin {
     }
 }
 
+// ---------------------------------------------------------------------------
+// mmap(2)-backed zero-copy load path (unix)
+
+/// Minimal FFI surface over the `mmap`/`munmap` symbols libc already
+/// links for std — no new crate dependency. Only what a read-only
+/// private file mapping needs.
+#[cfg(unix)]
+mod mm {
+    /// Pages are readable.
+    pub const PROT_READ: i32 = 1;
+    /// Private (copy-on-write) mapping; we never write, so it simply
+    /// shares page-cache pages.
+    pub const MAP_PRIVATE: i32 = 2;
+
+    extern "C" {
+        /// `off_t` is declared `isize`: pointer-width on every LP64
+        /// unix target rustc supports, and the only offset ever passed
+        /// here is 0.
+        pub fn mmap(
+            addr: *mut core::ffi::c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: isize,
+        ) -> *mut core::ffi::c_void;
+        pub fn munmap(addr: *mut core::ffi::c_void, len: usize) -> i32;
+    }
+
+    /// `MAP_FAILED` is `(void *)-1`.
+    pub fn map_failed() -> *mut core::ffi::c_void {
+        usize::MAX as *mut core::ffi::c_void
+    }
+}
+
+/// A read-only `mmap(2)` view of an artifact file — the zero-copy load
+/// path: no heap copy of the artifact is made and resident memory is
+/// O(validation), because file pages fault in on demand from the page
+/// cache. The mapping base is page-aligned (≥ 4096), so [`load`]'s
+/// 8-byte base-alignment gate holds by construction and every
+/// 64-byte-aligned section casts cleanly.
+#[cfg(unix)]
+pub struct MappedBin {
+    ptr: std::ptr::NonNull<u8>,
+    len: usize,
+}
+
+// SAFETY: the mapping is PROT_READ + MAP_PRIVATE — immutable shared
+// bytes for the mapping's lifetime, the same sharing contract as a
+// `&'static [u8]`.
+#[cfg(unix)]
+unsafe impl Send for MappedBin {}
+#[cfg(unix)]
+unsafe impl Sync for MappedBin {}
+
+#[cfg(unix)]
+impl MappedBin {
+    /// Map `path` read-only. Fails with the underlying I/O error when
+    /// the file cannot be opened, sized, or mapped — callers that want
+    /// the portable fallback go through [`FileBin::open`].
+    pub fn open(path: &std::path::Path) -> std::io::Result<MappedBin> {
+        use std::os::unix::io::AsRawFd;
+        let file = std::fs::File::open(path)?;
+        let len = usize::try_from(file.metadata()?.len()).map_err(|_| {
+            std::io::Error::new(std::io::ErrorKind::InvalidInput, "file larger than address space")
+        })?;
+        if len == 0 {
+            // mmap(2) rejects zero-length mappings; an empty file is an
+            // empty (invalid) artifact, represented without a mapping.
+            return Ok(MappedBin { ptr: std::ptr::NonNull::dangling(), len: 0 });
+        }
+        // SAFETY: plain mmap call over a live fd; MAP_PRIVATE file
+        // mappings keep the underlying file referenced after the fd
+        // closes, so the mapping outlives `file`.
+        let p = unsafe {
+            mm::mmap(std::ptr::null_mut(), len, mm::PROT_READ, mm::MAP_PRIVATE, file.as_raw_fd(), 0)
+        };
+        if p.is_null() || p == mm::map_failed() {
+            return Err(std::io::Error::last_os_error());
+        }
+        let ptr = std::ptr::NonNull::new(p.cast::<u8>())
+            .ok_or_else(std::io::Error::last_os_error)?;
+        Ok(MappedBin { ptr, len })
+    }
+
+    /// The mapped artifact bytes (page-aligned base; empty for an
+    /// empty file).
+    pub fn bytes(&self) -> &[u8] {
+        if self.len == 0 {
+            return &[];
+        }
+        // SAFETY: ptr/len describe the live mapping, immutable
+        // (PROT_READ) for the lifetime of `self`.
+        unsafe { std::slice::from_raw_parts(self.ptr.as_ptr(), self.len) }
+    }
+
+    /// Parse and validate — see [`load`].
+    pub fn view(&self) -> Result<BinView<'_>, BinError> {
+        load(self.bytes())
+    }
+}
+
+#[cfg(unix)]
+impl Drop for MappedBin {
+    fn drop(&mut self) {
+        if self.len > 0 {
+            // SAFETY: exactly the mapping created in `open`, unmapped
+            // once. munmap can only fail on a bad range, which this
+            // is not; the result is ignored like std's own unmaps.
+            unsafe { mm::munmap(self.ptr.as_ptr().cast(), self.len) };
+        }
+    }
+}
+
+/// A loaded artifact file: `mmap(2)`-backed where the platform allows
+/// it, an [`OwnedBin`] heap copy otherwise. The fleet loader and the
+/// CLI load through this one type, so the preferred path is chosen in
+/// exactly one place.
+pub enum FileBin {
+    /// Zero-copy page-aligned file mapping.
+    #[cfg(unix)]
+    Mapped(MappedBin),
+    /// Aligned heap copy of the file bytes (portable / fallback path).
+    Owned(OwnedBin),
+}
+
+impl FileBin {
+    /// Open `path`, preferring the `mmap(2)` path on unix. A refused
+    /// mapping on an existing file (exotic filesystem, seccomp-filtered
+    /// syscall) falls back to a buffered read + aligned copy — loudly,
+    /// because the load still succeeds but without the resident-memory
+    /// win. A missing or unreadable file is an error either way.
+    pub fn open(path: &std::path::Path) -> std::io::Result<FileBin> {
+        #[cfg(unix)]
+        {
+            match MappedBin::open(path) {
+                Ok(m) => return Ok(FileBin::Mapped(m)),
+                Err(e) => {
+                    if !path.is_file() {
+                        return Err(e);
+                    }
+                    eprintln!(
+                        "intreeger: mmap of {} failed ({e}); falling back to an owned copy",
+                        path.display()
+                    );
+                }
+            }
+        }
+        let bytes = std::fs::read(path)?;
+        Ok(FileBin::Owned(OwnedBin::from_bytes(&bytes)))
+    }
+
+    /// The artifact bytes (8-byte-aligned base on both variants).
+    pub fn bytes(&self) -> &[u8] {
+        match self {
+            #[cfg(unix)]
+            FileBin::Mapped(m) => m.bytes(),
+            FileBin::Owned(o) => o.bytes(),
+        }
+    }
+
+    /// Parse and validate — see [`load`].
+    pub fn view(&self) -> Result<BinView<'_>, BinError> {
+        load(self.bytes())
+    }
+
+    /// Which load path backs this artifact (`"mmap"` / `"owned-copy"`)
+    /// — surfaced in load logs and the E14 bench rows.
+    pub fn source(&self) -> &'static str {
+        match self {
+            #[cfg(unix)]
+            FileBin::Mapped(_) => "mmap",
+            FileBin::Owned(_) => "owned-copy",
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1343,5 +1529,64 @@ mod tests {
         assert!(matches!(patch(24, u32::MAX), BinError::BadHeader(_)));
         assert!(matches!(patch(28, u32::MAX), BinError::BadSection { .. }));
         assert!(matches!(patch(60, 3), BinError::BadHeader(_)));
+    }
+
+    #[test]
+    fn file_bin_round_trip_prefers_mmap_and_matches_owned() {
+        let bytes = write_model(&rf_model());
+        let dir = std::env::temp_dir()
+            .join(format!("intreeger_binfmt_mmap_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rf.intb");
+        std::fs::write(&path, &bytes).unwrap();
+
+        let fb = FileBin::open(&path).expect("open artifact");
+        #[cfg(unix)]
+        assert_eq!(fb.source(), "mmap", "unix loads must take the zero-copy path");
+        assert_eq!(fb.bytes().as_ptr() as usize % 8, 0, "base alignment gate");
+        assert_eq!(fb.bytes(), &bytes[..], "mapped bytes are the file bytes");
+
+        let mapped_forest =
+            fb.view().expect("mapped view validates").to_forest().expect("forest");
+        let owned_forest = OwnedBin::from_bytes(&bytes)
+            .view()
+            .expect("owned view validates")
+            .to_forest()
+            .expect("forest");
+        assert_eq!(mapped_forest.nodes_ord, owned_forest.nodes_ord);
+        assert_eq!(mapped_forest.leaf_u32, owned_forest.leaf_u32);
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn mapped_bin_page_alignment_and_empty_file() {
+        let dir = std::env::temp_dir()
+            .join(format!("intreeger_binfmt_mmap_edge_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+
+        let empty = dir.join("empty.intb");
+        std::fs::write(&empty, b"").unwrap();
+        let m = MappedBin::open(&empty).expect("empty file maps as empty bytes");
+        assert!(m.bytes().is_empty());
+        assert_eq!(m.view().err(), Some(BinError::TooShort { need: HEADER_LEN, got: 0 }));
+
+        let real = dir.join("rf.intb");
+        std::fs::write(&real, write_model(&rf_model())).unwrap();
+        let m = MappedBin::open(&real).expect("map artifact");
+        assert_eq!(m.bytes().as_ptr() as usize % 4096, 0, "mmap base is page-aligned");
+        assert!(m.view().is_ok());
+    }
+
+    #[test]
+    fn file_bin_missing_file_is_an_error_and_owned_fallback_loads() {
+        let missing = std::env::temp_dir()
+            .join(format!("intreeger_binfmt_missing_{}", std::process::id()))
+            .join("nope.intb");
+        assert!(FileBin::open(&missing).is_err(), "missing files never fall back");
+
+        let bytes = write_model(&rf_model());
+        let fb = FileBin::Owned(OwnedBin::from_bytes(&bytes));
+        assert_eq!(fb.source(), "owned-copy");
+        assert!(fb.view().is_ok(), "the portable fallback path stays exercised");
     }
 }

@@ -25,7 +25,9 @@ pub mod manifest;
 pub mod pack;
 pub mod pjrt;
 
-pub use binfmt::{BinError, BinKind, BinView, OwnedBin};
+pub use binfmt::{BinError, BinKind, BinView, FileBin, OwnedBin};
+#[cfg(unix)]
+pub use binfmt::MappedBin;
 pub use manifest::{Manifest, PipelineManifest, PipelineModelEntry, Tier, PIPELINE_FORMAT};
 pub use pack::ForestPack;
 pub use pjrt::PjrtEngine;

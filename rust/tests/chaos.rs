@@ -20,8 +20,8 @@
 //! path; `env_plan_drives_injection` covers it hermetically here).
 
 use intreeger::coordinator::{
-    BatchPolicy, FaultPlan, InferenceServer, Metrics, ModelRegistry, RegistryError, ServeError,
-    ServerConfig, DEGRADE_AFTER, FAULTS_ENV,
+    BatchPolicy, FaultPlan, InferenceServer, Metrics, ModelRegistry, RegistryError, ReplySlot,
+    ServeError, ServerConfig, DEGRADE_AFTER, FAULTS_ENV,
 };
 use intreeger::data::{shuttle_like, Dataset};
 use intreeger::inference::IntEngine;
@@ -565,4 +565,182 @@ fn swap_away_from_a_crashing_version_keeps_the_identity() {
     let s2 = registry.resolve("m", None).expect("v2").server().metrics();
     assert_eq!(s2.requests, s2.responses + s2.expired + s2.lost, "v2 identity");
     assert_eq!(s2.responses, 8);
+}
+
+// ---------------------------------------------------------------------------
+// Slab lifecycle under chaos (ISSUE 10): the arena-owned request slab's
+// free-list must recover a row on *every* resolution path — served,
+// shed, expired, lost — or steady-state serving eventually starves. The
+// worker returns a served/expired/lost request's row just after sending
+// the reply, so "fully refilled" is asserted with a bounded retry, not
+// synchronously.
+
+/// Poll until every slab row is back on the free-list; a leak shows up
+/// as a stuck `available()` and fails loudly with the deficit.
+fn wait_slab_full(server: &InferenceServer) {
+    let total = server.slab().rows();
+    let deadline = Instant::now() + RESOLVE;
+    while server.slab().available() < total {
+        assert!(
+            Instant::now() < deadline,
+            "slab rows leaked: {} of {total} available",
+            server.slab().available()
+        );
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+/// Slab exhaustion sheds — immediately, without blocking and without
+/// admitting — and checked-out rows recover the server completely once
+/// returned.
+#[test]
+fn slab_exhaustion_sheds_never_blocks_and_recovers() {
+    let (ds, m) = model();
+    let oracle = IntEngine::compile(&m);
+    let server = InferenceServer::start(
+        &m,
+        None,
+        ServerConfig {
+            policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(200) },
+            n_workers: 1,
+            faults: no_faults(),
+            ..Default::default()
+        },
+    );
+    let total = server.slab().rows();
+    // Drain the free-list dry without submitting anything.
+    let held: Vec<_> = (0..total).map(|k| {
+        server.checkout_row().unwrap_or_else(|| panic!("row {k} of {total} must check out"))
+    }).collect();
+    // Exhausted: checkout returns None promptly (shed, not a wait)...
+    let t0 = Instant::now();
+    assert!(server.checkout_row().is_none(), "an exhausted slab must shed");
+    assert!(t0.elapsed() < Duration::from_secs(1), "exhaustion must not block");
+    let snap = server.metrics();
+    assert_eq!(snap.shed, 1, "exhaustion is accounted as shed");
+    assert_eq!(snap.requests, 0, "a shed checkout admits nothing");
+    // ...and returning the rows restores full service.
+    drop(held);
+    assert_eq!(server.slab().available(), total, "dropped handles return synchronously");
+    let mut slot = ReplySlot::new();
+    let mut row = server.checkout_row().expect("recovered slab serves");
+    row.copy_from(ds.row(0));
+    server.submit_pooled(row, &mut slot).expect("admitted");
+    let r = slot.recv().expect("served");
+    assert_eq!(r.fixed, oracle.predict_fixed(ds.row(0)));
+    slot.recycle(r.fixed);
+    wait_slab_full(&server);
+    let snap = server.metrics();
+    assert_eq!(snap.requests, snap.responses + snap.expired + snap.lost, "identity");
+}
+
+/// Expired and crash-stranded pooled requests both return their slab
+/// rows, and the accounting identity holds across all three outcomes
+/// (served / expired / lost) of the pooled path.
+#[test]
+fn expired_and_lost_pooled_requests_return_every_slab_row() {
+    let (ds, m) = model();
+    let oracle = IntEngine::compile(&m);
+    let server = InferenceServer::start(
+        &m,
+        None,
+        ServerConfig {
+            // Deadline-flushed batches; the first *executed* batch
+            // panics (expired-only flushes resolve before execution, so
+            // they don't advance the fault plan's batch counter).
+            policy: BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(20) },
+            n_workers: 1,
+            faults: Some(FaultPlan { panic_batches: vec![1], ..FaultPlan::none() }),
+            ..Default::default()
+        },
+    );
+    // Phase 1: a wave with an already-elapsed TTL — all expire at batch
+    // formation, each expiry releasing its slab row.
+    let mut slots: Vec<ReplySlot> = (0..4).map(|_| ReplySlot::new()).collect();
+    for (i, slot) in slots.iter_mut().enumerate() {
+        let mut row = server.checkout_row().expect("slab capacity");
+        row.copy_from(ds.row(i));
+        server
+            .submit_pooled_with_ttl(row, slot, Some(Duration::ZERO))
+            .expect("zero-TTL requests still admit");
+    }
+    for slot in &slots {
+        assert_eq!(slot.recv(), Err(ServeError::DeadlineExceeded), "zero TTL must expire");
+    }
+    wait_slab_full(&server);
+    // Phase 2: a wave stranded by the scripted worker panic — lost, and
+    // the panic-unwound batch still releases every row.
+    for (i, slot) in slots.iter_mut().enumerate() {
+        let mut row = server.checkout_row().expect("slab capacity after expiry");
+        row.copy_from(ds.row(i));
+        server.submit_pooled(row, slot).expect("admitted");
+    }
+    for slot in &slots {
+        assert_eq!(slot.recv(), Err(ServeError::WorkerLost), "crashed batch strands as lost");
+    }
+    wait_slab_full(&server);
+    // Phase 3: the restarted worker serves from the fully-recovered slab.
+    for (i, slot) in slots.iter_mut().enumerate() {
+        let mut row = server.checkout_row().expect("slab capacity after crash");
+        row.copy_from(ds.row(i));
+        server.submit_pooled(row, slot).expect("admitted");
+    }
+    for (i, slot) in slots.iter_mut().enumerate() {
+        let r = slot.recv().expect("post-restart serve");
+        assert_eq!(r.fixed, oracle.predict_fixed(ds.row(i)), "row {i} parity after restart");
+        let fixed = r.fixed;
+        slot.recycle(fixed);
+    }
+    wait_slab_full(&server);
+    let snap = server.metrics();
+    assert_eq!((snap.expired, snap.lost, snap.responses), (4, 4, 4));
+    assert_eq!(snap.requests, snap.responses + snap.expired + snap.lost, "identity");
+}
+
+/// A hot swap landing mid-way through a pooled flood: the drained v1
+/// returns every slab row, keeps the accounting identity, and v2 takes
+/// over bit-identically — the swap-drain protocol and the slab
+/// free-list compose.
+#[test]
+fn hot_swap_drain_returns_slab_rows_and_keeps_the_identity() {
+    let (ds, m1) = model();
+    let m2 = model_v2(&ds);
+    let o1 = IntEngine::compile(&m1);
+    let o2 = IntEngine::compile(&m2);
+
+    let registry = Arc::new(ModelRegistry::new(Arc::new(Metrics::new())));
+    registry
+        .publish("m", 1, 4096, InferenceServer::start(&m1, None, swap_config()))
+        .expect("publish v1");
+    let v1 = registry.resolve("m", None).expect("resolve v1");
+
+    // Pooled flood straight at v1's server handle; swap to v2 half-way.
+    let mut slot = ReplySlot::new();
+    let n_flood = 120usize;
+    for k in 0..n_flood {
+        if k == n_flood / 2 {
+            registry
+                .publish("m", 2, 4096, InferenceServer::start(&m2, None, swap_config()))
+                .expect("publish v2 mid-flood");
+        }
+        let i = k % 50;
+        let mut row = v1.server().checkout_row().expect("v1 slab capacity");
+        row.copy_from(ds.row(i));
+        v1.server().submit_pooled(row, &mut slot).expect("the held v1 handle still admits");
+        let r = slot.recv().expect("v1 serves its own admissions across the swap");
+        assert_eq!(r.fixed, o1.predict_fixed(ds.row(i)), "row {i} answered by v1's bits");
+        let fixed = r.fixed;
+        slot.recycle(fixed);
+    }
+    wait_slab_full(v1.server());
+    let s1 = v1.server().metrics();
+    assert_eq!(s1.requests, n_flood as u64);
+    assert_eq!(s1.requests, s1.responses + s1.expired + s1.lost, "v1 identity across swap");
+
+    // Unpinned registry traffic now serves from v2.
+    for i in 0..10 {
+        let r = registry.infer("m", None, ds.row(i).to_vec()).expect("v2 serves");
+        assert_eq!(r.fixed, o2.predict_fixed(ds.row(i)), "post-swap row {i} from v2");
+    }
+    drop(v1);
 }

@@ -263,6 +263,19 @@ fn inspect_reports_quickscorer_eligibility_and_simd() {
         "missing threads default in:\n{text}"
     );
     assert!(text.contains("calibration:     would pick"), "missing calibration preview:\n{text}");
+    // Cache topology + pin plan: printed on every host — either the
+    // parsed LLC groups and the plan INTREEGER_PIN=1 would apply, or an
+    // explicit "unavailable" line (the loud-no-op contract made
+    // visible).
+    assert!(text.contains("topology:"), "missing cache topology line in:\n{text}");
+    assert!(
+        text.contains("LLC group") || text.contains("LLC groups unavailable"),
+        "topology line must name LLC groups or say they are unavailable:\n{text}"
+    );
+    assert!(
+        text.contains("pin plan"),
+        "missing pin plan (or its unavailable fallback) in:\n{text}"
+    );
 
     // A forced backend flows through `inspect --backend` into the
     // resolved default and the calibration sweep.

@@ -14,10 +14,10 @@
 //!    invariant, observed through the whole socket → parse → scan →
 //!    coordinator → render stack).
 //! 3. **Allocation counting** — a global counting allocator verifies
-//!    the per-request parse → scan → render path performs zero heap
-//!    allocations once its reused buffers are warm (the coordinator
-//!    admission boundary's one Vec clone is exercised separately over
-//!    the socket and documented in `net`'s module docs).
+//!    both the per-request parse → scan → render path **and** the full
+//!    admission → batch → respond loop (slab-row checkout,
+//!    [`ReplySlot`] submission, worker flush, fixed-buffer recycle)
+//!    perform zero heap allocations once their reused buffers are warm.
 
 use intreeger::coordinator::{
     BatchPolicy, FaultPlan, InferenceServer, ServerConfig,
@@ -400,9 +400,9 @@ fn healthz_and_metrics_render_valid_json_with_slo_fields() {
 /// The per-request hot path — parse head, scan features, render the
 /// response — must not touch the allocator once its reused buffers are
 /// warm. This drives the exact production functions over the exact
-/// production buffer types; the coordinator boundary (queue ownership
-/// clone + response channel) is the documented exception and is
-/// covered functionally by the loopback tests above.
+/// production buffer types; the coordinator half of the loop (slab
+/// admission through worker flush) is covered by
+/// `full_serving_loop_is_zero_alloc_in_steady_state` below.
 #[test]
 #[cfg(debug_assertions)]
 fn request_hot_path_is_zero_alloc_in_steady_state() {
@@ -448,5 +448,68 @@ fn request_hot_path_is_zero_alloc_in_steady_state() {
         delta, 0,
         "parse→scan→render must be allocation-free in steady state, saw {delta} allocations \
          over 100 requests"
+    );
+}
+
+/// The **full** serving loop — slab-row checkout, pooled submission,
+/// batch formation, kernel execution, response delivery, fixed-buffer
+/// recycle — must be allocation-free in steady state: the admission
+/// clone is gone (rows live in the coordinator's `FeatureSlab`), the
+/// response channel and fixed-point buffer are recycled through a
+/// `ReplySlot`, the batcher swaps a spare backing `Vec`, and the
+/// metrics histograms are fixed arrays.
+///
+/// `ALLOCS` is process-global and other tests run concurrently, so one
+/// polluted window must not fail the build: the assertion is "at least
+/// one of several measurement windows is clean". A *systematic*
+/// per-request allocation would dirty every window and still fail.
+#[test]
+#[cfg(debug_assertions)]
+fn full_serving_loop_is_zero_alloc_in_steady_state() {
+    let (ds, m) = model();
+    // max_batch 1 on one shard: every submit flushes immediately, so a
+    // clean window proves the whole submit→flush→respond chain clean.
+    let server = InferenceServer::start(
+        &m,
+        None,
+        ServerConfig {
+            policy: BatchPolicy { max_batch: 1, max_wait: Duration::from_micros(100) },
+            n_workers: 1,
+            faults: Some(FaultPlan::none()),
+            ..Default::default()
+        },
+    );
+    let mut slot = intreeger::coordinator::ReplySlot::new();
+    let row = ds.row(0);
+
+    let mut one_request = |slot: &mut intreeger::coordinator::ReplySlot| {
+        let mut slab_row = server.checkout_row().expect("slab must have capacity");
+        slab_row.copy_from(row);
+        server.submit_pooled(slab_row, slot).expect("admission");
+        let resp = slot.recv().expect("serve ok");
+        slot.recycle(resp.fixed);
+    };
+
+    // Warm-up: slab free-list, batcher spare, scratch buffers, reply
+    // slot spare, and the metrics histograms all reach steady state.
+    for _ in 0..32 {
+        one_request(&mut slot);
+    }
+    let mut deltas = Vec::new();
+    for _attempt in 0..5 {
+        let before = ALLOCS.load(Ordering::SeqCst);
+        for _ in 0..100 {
+            one_request(&mut slot);
+        }
+        let delta = ALLOCS.load(Ordering::SeqCst) - before;
+        if delta == 0 {
+            return;
+        }
+        deltas.push(delta);
+    }
+    panic!(
+        "admission→batch→respond loop allocated in every measurement window \
+         (allocation deltas per 100-request window: {deltas:?}) — the steady-state \
+         zero-allocation guarantee is broken"
     );
 }
